@@ -1,0 +1,90 @@
+//! Memory-constrained deployment planning: given the RP2040's 264 KB SRAM,
+//! sweep PRIOT-S configurations and pick the best one that fits a given
+//! budget — the §III-B/§IV-B trade-off (accuracy vs. score memory) as a
+//! decision procedure.
+//!
+//! ```bash
+//! cargo run --release --example memory_constrained [-- --budget-kb 132]
+//! ```
+
+use anyhow::Result;
+
+use priot::cli::Args;
+use priot::config::{Config, ExperimentConfig, Method, Selection};
+use priot::coordinator::{run_training, RunOptions};
+use priot::data;
+use priot::methods::EngineBackend;
+use priot::pico::{self, MethodParams};
+use priot::spec::NetSpec;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    // Default budget: half the Pico's SRAM (the rest is for the application)
+    let budget_kb: usize = args.option("budget-kb").unwrap_or("132").parse()?;
+    let budget = budget_kb * 1024;
+    let epochs: usize = args.option("epochs").unwrap_or("8").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("384").parse()?;
+    let spec = NetSpec::tinycnn();
+
+    println!("SRAM budget: {budget_kb} KB ({budget} B); device: RP2040 (264 KB total)\n");
+    println!("| candidate | memory [B] | fits | best acc | Δ vs backbone |");
+    println!("|---|---|---|---|---|");
+
+    // Candidates in decreasing memory order: PRIOT, then sparser PRIOT-S.
+    let candidates: Vec<(String, Method, f64)> = vec![
+        ("PRIOT (dense scores)".into(), Method::Priot, 1.0),
+        ("PRIOT-S 30% scored".into(), Method::PriotS, 0.3),
+        ("PRIOT-S 20% scored".into(), Method::PriotS, 0.2),
+        ("PRIOT-S 10% scored".into(), Method::PriotS, 0.1),
+        ("PRIOT-S 5% scored".into(), Method::PriotS, 0.05),
+    ];
+
+    let mut chosen: Option<(String, f64, usize)> = None;
+    for (label, method, frac) in candidates {
+        let params = match method {
+            Method::Priot => MethodParams::new(Method::Priot),
+            _ => MethodParams::priot_s(frac, Selection::WeightBased),
+        };
+        let mem = pico::memory_footprint(&spec, params).total();
+        let fits = mem <= budget;
+        let (best, delta) = if fits || chosen.is_none() {
+            // evaluate accuracy (short run) for any fitting candidate and
+            // for the first (reference) one
+            let mut c = Config::default();
+            c.set("artifacts", args.option("artifacts").unwrap_or("artifacts"));
+            c.set("method", method.name());
+            c.set("selection", "weight");
+            let mut cfg = ExperimentConfig::from_config(&c)?;
+            cfg.epochs = epochs;
+            cfg.limit = limit;
+            cfg.frac_scored = frac;
+            let pair = data::load_pair(&cfg)?;
+            let mut backend = EngineBackend::from_config(&cfg)?;
+            let opts = RunOptions::from_config(&cfg);
+            let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+            (m.best_accuracy(), m.best_accuracy() - m.accuracy[0])
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            label,
+            mem,
+            if fits { "yes" } else { "NO" },
+            if best.is_nan() { "—".into() } else { format!("{:.1}%", best * 100.0) },
+            if delta.is_nan() { "—".into() } else { format!("{:+.1} p.p.", delta * 100.0) },
+        );
+        if fits && chosen.is_none() {
+            chosen = Some((label, best, mem));
+        }
+    }
+
+    match chosen {
+        Some((label, best, mem)) => println!(
+            "\n→ deploy **{label}** ({mem} B ≤ {budget} B), best accuracy {:.1}%",
+            best * 100.0
+        ),
+        None => println!("\n→ nothing fits — lower the model size or raise the budget"),
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! The full deployment story, end to end:
+//!
+//! 1. a backbone pre-trained + calibrated off-device (`make artifacts`);
+//! 2. the device observes a *drifted* distribution (rotation grows over
+//!    time — e.g., a camera bracket loosening);
+//! 3. PRIOT adapts on-device after each drift step, integer-only, with the
+//!    static scales fixed at deployment time;
+//! 4. the Pico cost model accounts for what the adaptation costs.
+//!
+//! This is the anomaly-adaptation scenario the paper's introduction
+//! motivates, runnable on the host engine (bit-identical to the device).
+//!
+//! ```bash
+//! cargo run --release --example on_device_adaptation
+//! ```
+
+use anyhow::Result;
+
+use priot::cli::Args;
+use priot::config::{Config, ExperimentConfig, Method};
+use priot::coordinator::{evaluate, run_training, RunOptions};
+use priot::data;
+use priot::methods::{EngineBackend, StepBackend};
+use priot::pico::{self, MethodParams};
+use priot::spec::NetSpec;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let artifacts = args.option("artifacts").unwrap_or("artifacts").to_string();
+    let epochs: usize = args.option("epochs").unwrap_or("6").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("384").parse()?;
+
+    println!("=== phase 0: deployment ===");
+    let spec = NetSpec::tinycnn();
+    let params = MethodParams::new(Method::Priot);
+    let mem = pico::memory_footprint(&spec, params);
+    let scales = priot::quant::Scales::load(
+        std::path::Path::new(&artifacts).join("tinycnn.scales.txt").as_path(),
+    )?;
+    let cost = pico::step_cost(&spec, &scales, params);
+    println!(
+        "backbone: {} ({} params), PRIOT training state {} B \
+         (fits 264 KB: {}), modeled step {:.1} ms on the Pico",
+        spec.name,
+        spec.num_params(),
+        mem.total(),
+        pico::fits_pico(&mem),
+        cost.total_ms()
+    );
+
+    // The same trained scores persist across drift steps: adaptation is
+    // cumulative, exactly as it would be on the device.
+    let mut c = Config::default();
+    c.set("artifacts", &artifacts);
+    c.set("method", "priot");
+    c.set("angle", "30");
+    let cfg = ExperimentConfig::from_config(&c)?;
+    let mut backend = EngineBackend::from_config(&cfg)?;
+
+    let mut opts = RunOptions::from_config(&cfg);
+    opts.epochs = epochs;
+    opts.limit = limit;
+
+    for (phase, angle) in [(1usize, 30u32), (2, 45)] {
+        println!("\n=== phase {phase}: drift to {angle}° ===");
+        let mut c2 = cfg.clone();
+        c2.angle = angle;
+        let pair = data::load_pair(&c2)?;
+        let before = evaluate(&mut backend, &pair.test, limit);
+        println!("accuracy after drift, before adaptation: {:.1}%", before * 100.0);
+        let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+        println!(
+            "adapted over {epochs} epochs: best {:.1}%  (+{:.1} p.p.), \
+             history {}",
+            m.best_accuracy() * 100.0,
+            (m.best_accuracy() - before) * 100.0,
+            priot::report::sparkline(&m.accuracy)
+        );
+        let steps = (epochs * limit) as f64;
+        println!(
+            "modeled on-device adaptation cost: {:.1} s of Pico compute",
+            steps * cost.total_ms() / 1e3
+        );
+        if let Some(scores) = backend.scores() {
+            let pruned: usize = scores
+                .iter()
+                .map(|s| s.iter().filter(|&&v| v < -64).count())
+                .sum();
+            println!(
+                "cumulative pruning state: {} / {} edges below θ",
+                pruned,
+                spec.num_params()
+            );
+        }
+    }
+
+    println!("\nDone: a single int8 backbone + an evolving pruning pattern \
+              tracked two distribution drifts without ever leaving integer \
+              arithmetic or re-calibrating a scale.");
+    Ok(())
+}

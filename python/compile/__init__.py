@@ -1,0 +1,5 @@
+"""PRIOT build-time Python package: Pallas kernels (L1), the integer JAX
+model (L2), float pre-training + static-scale calibration, and AOT export of
+HLO-text artifacts consumed by the Rust coordinator.  Never imported at
+runtime — ``make artifacts`` runs it once.
+"""

@@ -1,0 +1,165 @@
+"""AOT build driver: ``python -m compile.aot --out-dir ../artifacts``.
+
+Produces everything the self-contained Rust binary needs:
+
+* ``data/*.bin``                 — synthetic datasets (upright + rotated);
+* ``<model>.weights.bin``        — quantized int8 backbone weights;
+* ``<model>.scales.txt``         — calibrated static shift table;
+* ``<model>_{fwd_eval,priot_step,niti_step}.hlo.txt`` — lowered step graphs;
+* ``manifest.txt``               — artifact inventory for the Rust runtime;
+* ``pretrain_report.txt``        — float/pre-quantization accuracies.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+
+from . import dataset as ds
+from . import model as m
+from . import pretrain as pt
+from .intnet import Scales, tinycnn_spec, vgg11_spec
+from .serialize import save_weights
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_graph(fn, args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_datasets(out: str, log, quick: bool):
+    n_pre = 2048 if quick else 8192
+    n_dev = 256 if quick else 1024
+    paths = {}
+    jobs = [
+        ("digits_pretrain", ds.make_rotdigits, n_pre, 1000, 0.0),
+        ("digits_pretest", ds.make_rotdigits, 1024, 2000, 0.0),
+        ("digits_train_a30", ds.make_rotdigits, n_dev, 3000, 30.0),
+        ("digits_test_a30", ds.make_rotdigits, n_dev, 4000, 30.0),
+        ("digits_train_a45", ds.make_rotdigits, n_dev, 5000, 45.0),
+        ("digits_test_a45", ds.make_rotdigits, n_dev, 6000, 45.0),
+        ("patterns_pretrain", ds.make_rotpatterns, n_pre // 2, 7000, 0.0),
+        ("patterns_pretest", ds.make_rotpatterns, 1024, 8000, 0.0),
+        ("patterns_train_a30", ds.make_rotpatterns, n_dev, 9000, 30.0),
+        ("patterns_test_a30", ds.make_rotpatterns, n_dev, 10000, 30.0),
+    ]
+    os.makedirs(os.path.join(out, "data"), exist_ok=True)
+    for name, fn, n, seed, angle in jobs:
+        path = os.path.join(out, "data", f"{name}.bin")
+        paths[name] = path
+        if os.path.exists(path):
+            continue
+        imgs, labels = fn(n, seed, angle)
+        ds.save_dataset(path, imgs, labels)
+        log(f"[data] {name}: n={n} angle={angle}")
+    return paths
+
+
+def build_model(out: str, spec, pre_name: str, test_name: str, paths,
+                epochs: int, log, lr: float = 0.03):
+    wpath = os.path.join(out, f"{spec.name}.weights.bin")
+    spath = os.path.join(out, f"{spec.name}.scales.txt")
+    report = []
+    if os.path.exists(wpath) and os.path.exists(spath):
+        log(f"[pretrain {spec.name}] cached")
+        return wpath, spath, report
+    imgs, labels = ds.load_dataset(paths[pre_name])
+    timgs, tlabels = ds.load_dataset(paths[test_name])
+    # Moderate pretraining on purpose: a loss driven to ~1e-4 leaves the
+    # backbone hyper-confident, gradients on calibration data degenerate to
+    # zero and every scale calibrates wrong (EXPERIMENTS.md pilot log).
+    params = pt.pretrain_float(spec, imgs, labels, epochs=epochs, lr=lr,
+                               log=log)
+    acc = pt.eval_float(spec, params, timgs, tlabels)
+    report.append(f"{spec.name} float pretrain top-1: {acc:.4f}")
+    log(f"[pretrain {spec.name}] float test acc {acc:.4f}")
+    weights = pt.quantize_params(spec, params)
+    scales = pt.calibrate_scales(spec, weights, imgs, labels)
+    save_weights(wpath, weights)
+    with open(spath, "w") as f:
+        f.write(scales.to_text())
+    log(f"[calibrate {spec.name}] shifts: "
+        + "; ".join(f"L{i} f{s.fwd} b{s.bwd} g{s.grad} s{s.score}"
+                    for i, s in enumerate(scales.layers)))
+    return wpath, spath, report
+
+
+def build_hlo(out: str, spec, scales: Scales, log):
+    entries = []
+    graphs = {
+        "fwd_eval": m.make_fwd_eval(spec, scales),
+        "priot_step": m.make_priot_step(spec, scales),
+        "niti_step": m.make_niti_step(spec, scales),
+    }
+    for kind, fn in graphs.items():
+        path = os.path.join(out, f"{spec.name}_{kind}.hlo.txt")
+        args = m.example_args(spec, kind)
+        text = lower_graph(fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ",".join("x".join(str(d) for d in a.shape) or "1"
+                          for a in args)
+        entries.append(f"{spec.name}_{kind} {os.path.basename(path)} {shapes}")
+        log(f"[aot] {spec.name}_{kind}: {len(text)} chars, "
+            f"{len(args)} inputs")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets / few epochs (CI)")
+    ap.add_argument("--skip-vgg", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    log = lambda *a: print(*a, file=sys.stderr, flush=True)  # noqa: E731
+
+    paths = build_datasets(out, log, args.quick)
+    report = []
+
+    tiny = tinycnn_spec()
+    _, spath, rep = build_model(out, tiny, "digits_pretrain", "digits_pretest",
+                                paths, epochs=2 if args.quick else 3,
+                                lr=0.03, log=log)
+    report += rep
+    scales = Scales.from_text(open(spath).read())
+    manifest = build_hlo(out, tiny, scales, log)
+
+    if not args.skip_vgg:
+        # VGG11 has no batch-norm: it needs a gentle lr and more epochs to
+        # train at all in fp32.
+        vgg = vgg11_spec(0.25)
+        _, _, rep = build_model(out, vgg, "patterns_pretrain",
+                                "patterns_pretest", paths,
+                                epochs=3 if args.quick else 12,
+                                lr=0.005, log=log)
+        report += rep
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("# artifact file input_shapes\n")
+        f.write("\n".join(manifest) + "\n")
+    if report:
+        with open(os.path.join(out, "pretrain_report.txt"), "a") as f:
+            f.write("\n".join(report) + "\n")
+    log("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Synthetic datasets standing in for (rotated) MNIST and CIFAR-10.
+
+The paper's transfer-learning protocol is: pre-train on an upright
+distribution, then adapt on-device to the *same classes under rotation*
+(30deg / 45deg covariate shift).  What exercises PRIOT is this class-conditional
+structure + rotation shift, not the MNIST pixels themselves, so we generate
+procedural datasets with the same shape:
+
+* ``RotDigits``  — 28x28x1, 10 classes.  Each class is a fixed stroke
+  skeleton (polylines/ellipses in the unit square) rendered with random
+  affine jitter, stroke-thickness variation and pixel noise.
+* ``RotPatterns`` — 32x32x3, 10 classes.  Each class is a distinct
+  procedural texture/shape family (gradients, checkers, rings, stripes ...)
+  with random phase/frequency/color jitter.
+
+Rotation is applied at render time by rotating the geometry (digits) or the
+coordinate field (patterns), so rotated sets have no resampling artifacts.
+
+Pixels are exported as u8 0..255; the integer pipeline maps them to int8
+activations via ``p >> 1`` (0..127).  All generation is seeded and
+deterministic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Digit skeletons
+# ---------------------------------------------------------------------------
+
+
+def _ellipse(cx, cy, rx, ry, n=20, t0=0.0, t1=2 * np.pi):
+    t = np.linspace(t0, t1, n)
+    return np.stack([cx + rx * np.cos(t), cy + ry * np.sin(t)], axis=1)
+
+
+#: Per-class polylines, coordinates in [0,1]^2 (y down).
+DIGIT_STROKES = {
+    0: [_ellipse(0.5, 0.5, 0.28, 0.38)],
+    1: [np.array([[0.35, 0.3], [0.55, 0.12], [0.55, 0.88]]),
+        np.array([[0.35, 0.88], [0.75, 0.88]])],
+    2: [_ellipse(0.5, 0.32, 0.25, 0.2, n=12, t0=np.pi, t1=2.25 * np.pi),
+        np.array([[0.68, 0.45], [0.28, 0.85]]),
+        np.array([[0.28, 0.85], [0.75, 0.85]])],
+    3: [_ellipse(0.5, 0.3, 0.22, 0.18, n=12, t0=0.75 * np.pi, t1=2.25 * np.pi),
+        _ellipse(0.5, 0.68, 0.24, 0.2, n=12, t0=1.75 * np.pi, t1=3.25 * np.pi)],
+    4: [np.array([[0.62, 0.12], [0.25, 0.6], [0.78, 0.6]]),
+        np.array([[0.62, 0.12], [0.62, 0.88]])],
+    5: [np.array([[0.72, 0.15], [0.32, 0.15], [0.3, 0.45]]),
+        _ellipse(0.5, 0.62, 0.24, 0.22, n=14, t0=1.6 * np.pi, t1=3.1 * np.pi)],
+    6: [_ellipse(0.48, 0.65, 0.22, 0.22),
+        np.array([[0.62, 0.15], [0.38, 0.5]])],
+    7: [np.array([[0.25, 0.15], [0.75, 0.15], [0.42, 0.85]])],
+    8: [_ellipse(0.5, 0.3, 0.2, 0.17), _ellipse(0.5, 0.68, 0.24, 0.2)],
+    9: [_ellipse(0.52, 0.35, 0.22, 0.22),
+        np.array([[0.72, 0.4], [0.6, 0.85]])],
+}
+
+# ---------------------------------------------------------------------------
+# Rendering
+# ---------------------------------------------------------------------------
+
+
+def _rot_mat(angle_deg: float) -> np.ndarray:
+    a = np.deg2rad(angle_deg)
+    return np.array([[np.cos(a), -np.sin(a)], [np.sin(a), np.cos(a)]])
+
+
+def _render_digit(rng: np.random.Generator, cls: int, size: int,
+                  angle_deg: float) -> np.ndarray:
+    """Rasterize one jittered, rotated digit to a (size, size) u8 image."""
+    # Random affine jitter: scale, shear, translate + per-sample extra tilt.
+    scale = rng.uniform(0.82, 1.05)
+    shear = rng.uniform(-0.12, 0.12)
+    # Generous tilt jitter is part of the base distribution: real MNIST
+    # digits are naturally tilt-varied, which is what gives the paper's
+    # backbone its partial rotation tolerance (80.76% @ 30° pre-transfer).
+    tilt = rng.uniform(-14.0, 14.0)
+    shift = rng.uniform(-0.06, 0.06, size=2)
+    thick = rng.uniform(0.045, 0.075)
+    rot = _rot_mat(angle_deg + tilt)
+    aff = rot @ np.array([[scale, shear], [0.0, scale]])
+
+    ys, xs = np.mgrid[0:size, 0:size]
+    pix = np.stack([(xs + 0.5) / size, (ys + 0.5) / size], axis=-1)  # (H,W,2)
+    img = np.zeros((size, size), dtype=np.float64)
+    for stroke in DIGIT_STROKES[cls]:
+        pts = (stroke - 0.5 + rng.normal(0, 0.012, size=stroke.shape))
+        pts = pts @ aff.T + 0.5 + shift
+        a, b = pts[:-1], pts[1:]                     # segments (S,2)
+        ab = b - a
+        denom = np.maximum((ab * ab).sum(-1), 1e-9)  # (S,)
+        ap = pix[:, :, None, :] - a[None, None]      # (H,W,S,2)
+        t = np.clip((ap * ab[None, None]).sum(-1) / denom, 0.0, 1.0)
+        near = a[None, None] + t[..., None] * ab[None, None]
+        d = np.sqrt(((pix[:, :, None, :] - near) ** 2).sum(-1)).min(-1)
+        img = np.maximum(img, np.clip(1.35 - d / thick, 0.0, 1.0))
+    img = np.clip(img, 0.0, 1.0)
+    img += rng.normal(0, 0.045, img.shape)           # sensor noise
+    return (np.clip(img, 0.0, 1.0) * 255.0).astype(np.uint8)
+
+
+def _render_pattern(rng: np.random.Generator, cls: int, size: int,
+                    angle_deg: float) -> np.ndarray:
+    """One 3-channel procedural pattern image, (3, size, size) u8."""
+    rot = _rot_mat(angle_deg + rng.uniform(-5, 5))
+    ys, xs = np.mgrid[0:size, 0:size]
+    u = (xs - size / 2 + 0.5) / size
+    v = (ys - size / 2 + 0.5) / size
+    ur = rot[0, 0] * u + rot[0, 1] * v
+    vr = rot[1, 0] * u + rot[1, 1] * v
+    f = rng.uniform(2.5, 4.5)           # frequency jitter
+    ph = rng.uniform(0, 2 * np.pi)      # phase jitter
+    r2 = ur * ur + vr * vr
+    if cls == 0:      # horizontal stripes
+        base = np.sin(2 * np.pi * f * vr + ph)
+    elif cls == 1:    # vertical stripes
+        base = np.sin(2 * np.pi * f * ur + ph)
+    elif cls == 2:    # checkerboard
+        base = np.sign(np.sin(2 * np.pi * f * ur + ph)) * \
+            np.sign(np.sin(2 * np.pi * f * vr + ph))
+    elif cls == 3:    # concentric rings
+        base = np.sin(2 * np.pi * (1.8 * f) * np.sqrt(r2) + ph)
+    elif cls == 4:    # diagonal stripes
+        base = np.sin(2 * np.pi * f * (ur + vr) + ph)
+    elif cls == 5:    # radial fan
+        base = np.sin(6.0 * np.arctan2(vr, ur) + ph)
+    elif cls == 6:    # centered blob
+        base = 2.0 * np.exp(-r2 * rng.uniform(9, 14)) - 1.0
+    elif cls == 7:    # corner gradient
+        base = np.tanh(3.0 * (ur + vr))
+    elif cls == 8:    # square outline
+        m = np.maximum(np.abs(ur), np.abs(vr))
+        base = np.clip(1.0 - 14.0 * np.abs(m - 0.28), -1.0, 1.0)
+    else:             # cross
+        m = np.minimum(np.abs(ur), np.abs(vr))
+        base = np.clip(1.0 - 12.0 * m, -1.0, 1.0)
+    # Class-tinted colorization with per-sample jitter.
+    tint = np.array([(cls * 53 % 97) / 97.0, (cls * 31 % 89) / 89.0,
+                     (cls * 71 % 83) / 83.0])
+    tint = np.clip(tint + rng.uniform(-0.15, 0.15, 3), 0.05, 1.0)
+    img = (base[None] * 0.5 + 0.5) * tint[:, None, None]
+    img += rng.normal(0, 0.05, img.shape)
+    return (np.clip(img, 0.0, 1.0) * 255.0).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly
+# ---------------------------------------------------------------------------
+
+
+def make_rotdigits(n: int, seed: int, angle_deg: float = 0.0):
+    """(images u8 (n,1,28,28), labels u8 (n,)) — deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    labels = (np.arange(n) % 10).astype(np.uint8)
+    perm = rng.permutation(n)
+    labels = labels[perm]
+    imgs = np.zeros((n, 1, 28, 28), dtype=np.uint8)
+    for i in range(n):
+        imgs[i, 0] = _render_digit(rng, int(labels[i]), 28, angle_deg)
+    return imgs, labels
+
+
+def make_rotpatterns(n: int, seed: int, angle_deg: float = 0.0):
+    """(images u8 (n,3,32,32), labels u8 (n,)) — deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    labels = (np.arange(n) % 10).astype(np.uint8)
+    perm = rng.permutation(n)
+    labels = labels[perm]
+    imgs = np.zeros((n, 3, 32, 32), dtype=np.uint8)
+    for i in range(n):
+        imgs[i] = _render_pattern(rng, int(labels[i]), 32, angle_deg)
+    return imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Binary interchange with the Rust side  (see rust/src/serial/)
+# ---------------------------------------------------------------------------
+
+DATASET_MAGIC = 0x50524453  # "PRDS"
+
+
+def save_dataset(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    n, c, h, w = imgs.shape
+    header = np.array([DATASET_MAGIC, 1, n, c, h, w], dtype="<u4")
+    with open(path, "wb") as f:
+        f.write(header.tobytes())
+        f.write(imgs.tobytes())
+        f.write(labels.astype(np.uint8).tobytes())
+
+
+def load_dataset(path: str):
+    with open(path, "rb") as f:
+        header = np.frombuffer(f.read(24), dtype="<u4")
+        assert header[0] == DATASET_MAGIC and header[1] == 1, "bad dataset file"
+        n, c, h, w = (int(x) for x in header[2:6])
+        imgs = np.frombuffer(f.read(n * c * h * w), dtype=np.uint8)
+        imgs = imgs.reshape(n, c, h, w)
+        labels = np.frombuffer(f.read(n), dtype=np.uint8)
+    return imgs, labels
+
+
+def to_int8_activation(imgs_u8: np.ndarray) -> np.ndarray:
+    """u8 0..255 pixels -> int8 0..127 activations (the device-side mapping)."""
+    return (imgs_u8 >> 1).astype(np.int8)

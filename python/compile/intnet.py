@@ -1,0 +1,593 @@
+"""Pure-numpy integer-only network oracle.
+
+This module is the *semantic specification* of the whole system: a
+batch-1, integer-only forward/backward training step for the paper's models
+(tiny CNN, VGG11), under four training methods:
+
+* ``static-niti``  — NITI-style weight updates with *static* scale shifts
+  (the baseline that collapses, Fig. 2);
+* ``dynamic-niti`` — NITI with per-step dynamic shifts (the reference);
+* ``priot``        — frozen weights, edge-popup score training with a fixed
+  threshold (the paper's contribution);
+* ``priot-s``      — scores only on a pre-selected subset of edges.
+
+The JAX step graphs (``model.py``) and the Rust picoengine implement exactly
+these semantics and are tested bit-equal against this oracle.  Keep this file
+boring and explicit: it is the ground truth.
+
+Numeric contract: see ``quantlib.py``.  All activations/weights/scores are
+int8-range values carried in int32 arrays; MACs accumulate in int32.
+
+One deliberate, documented deviation from the paper's Eq. (4): the paper
+writes ``dS = W o (dy x^T)`` as a single int product.  For VGG-sized layers
+``dy x^T`` already reaches ~2^31, so multiplying by W overflows int32.  We
+requantize the weight-gradient accumulator to int8 first and then multiply:
+``dS = rshift(W o rshift(dy x^T, s_grad), s_score)``.  Sign and relative
+magnitude — all edge-popup needs — are preserved, and every implementation
+(numpy / JAX / Rust) does it identically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .quantlib import (INT8_MAX, clamp_int8, dynamic_shift_for,
+                       int_softmax_grad, requantize, rshift_round,
+                       stochastic_requant)
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    in_c: int
+    in_h: int
+    in_w: int
+    out_c: int
+    relu: bool = True
+    pool: bool = True  # 2x2 max pool after relu
+
+    @property
+    def k(self) -> int:
+        return self.in_c * 9
+
+    @property
+    def out_hw(self) -> int:
+        return self.in_h * self.in_w
+
+    @property
+    def weight_shape(self):
+        return (self.out_c, self.k)
+
+
+@dataclass(frozen=True)
+class FcSpec:
+    in_f: int
+    out_f: int
+    relu: bool = True
+
+    @property
+    def weight_shape(self):
+        return (self.out_f, self.in_f)
+
+
+@dataclass(frozen=True)
+class NetSpec:
+    name: str
+    input_chw: tuple
+    layers: tuple  # of ConvSpec | FcSpec
+
+    def weight_shapes(self):
+        return [l.weight_shape for l in self.layers]
+
+    def num_params(self) -> int:
+        return sum(int(np.prod(s)) for s in self.weight_shapes())
+
+
+def tinycnn_spec() -> NetSpec:
+    """The paper's tiny CNN: 2 conv (3x3, pad 1, pool) + 2 FC, 28x28x1 in."""
+    return NetSpec(
+        name="tinycnn",
+        input_chw=(1, 28, 28),
+        layers=(
+            ConvSpec(1, 28, 28, 8),
+            ConvSpec(8, 14, 14, 16),
+            FcSpec(16 * 7 * 7, 64),
+            FcSpec(64, 10, relu=False),
+        ),
+    )
+
+
+def vgg11_spec(width: float = 0.25) -> NetSpec:
+    """VGG11 (8 conv + 3 FC) for 32x32x3 inputs, width-scaled.
+
+    Channel plan 64,128,256,256,512,512,512,512 with pools after conv
+    1,2,4,6,8 (the standard VGG11 'M' positions), then FC 512w -> 512w -> 10.
+    """
+    def c(n):
+        return max(4, int(round(n * width)))
+
+    chans = [c(64), c(128), c(256), c(256), c(512), c(512), c(512), c(512)]
+    pools = {0, 1, 3, 5, 7}
+    layers = []
+    in_c, h = 3, 32
+    for i, out_c in enumerate(chans):
+        layers.append(ConvSpec(in_c, h, h, out_c, pool=(i in pools)))
+        if i in pools:
+            h //= 2
+        in_c = out_c
+    feat = chans[-1] * h * h  # h == 1 after 5 pools
+    layers.append(FcSpec(feat, c(512)))
+    layers.append(FcSpec(c(512), c(512)))
+    layers.append(FcSpec(c(512), 10, relu=False))
+    return NetSpec(name=f"vgg11w{width:g}", input_chw=(3, 32, 32),
+                   layers=tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2im  (3x3, pad 1, stride 1 — the only conv geometry used)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: np.ndarray, h: int, w: int) -> np.ndarray:
+    """(C,H,W) int32 -> (C*9, H*W) patch matrix, k ordered (c, ky, kx)."""
+    c = x.shape[0]
+    padded = np.zeros((c, h + 2, w + 2), dtype=np.int32)
+    padded[:, 1:h + 1, 1:w + 1] = x
+    cols = np.empty((c * 9, h * w), dtype=np.int32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = padded[:, ky:ky + h, kx:kx + w].reshape(c, h * w)
+            cols[ky * 3 + kx::9, :] = patch  # row c*9 + ky*3 + kx
+    return cols
+
+
+def col2im(cols: np.ndarray, c: int, h: int, w: int) -> np.ndarray:
+    """Adjoint of ``im2col``: scatter-add patches back to (C,H,W) int32."""
+    padded = np.zeros((c, h + 2, w + 2), dtype=np.int64)
+    for ky in range(3):
+        for kx in range(3):
+            padded[:, ky:ky + h, kx:kx + w] += \
+                cols[ky * 3 + kx::9, :].reshape(c, h, w).astype(np.int64)
+    out = padded[:, 1:h + 1, 1:w + 1]
+    return np.clip(out, -(2 ** 31) + 1, 2 ** 31 - 1).astype(np.int32)
+
+
+def maxpool2(x: np.ndarray):
+    """(C,H,W) -> ((C,H/2,W/2), argmax in 0..3 row-major (dy,dx), first max)."""
+    c, h, w = x.shape
+    t = x.reshape(c, h // 2, 2, w // 2, 2).transpose(0, 1, 3, 2, 4)
+    t = t.reshape(c, h // 2, w // 2, 4)
+    idx = np.argmax(t, axis=-1)  # numpy argmax takes the FIRST maximum
+    out = np.take_along_axis(t, idx[..., None], axis=-1)[..., 0]
+    return out, idx.astype(np.int32)
+
+
+def maxpool2_backward(dy: np.ndarray, idx: np.ndarray, h: int, w: int):
+    """Scatter dy (C,H/2,W/2) to (C,H,W) at the recorded argmax positions."""
+    c = dy.shape[0]
+    t = np.zeros((c, h // 2, w // 2, 4), dtype=np.int32)
+    np.put_along_axis(t, idx[..., None], dy[..., None], axis=-1)
+    t = t.reshape(c, h // 2, w // 2, 2, 2).transpose(0, 1, 3, 2, 4)
+    return t.reshape(c, h, w)
+
+
+# ---------------------------------------------------------------------------
+# Scale-factor table
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LayerScales:
+    """Static shifts for one parameterized layer (all python ints)."""
+    fwd: int = 7    # conv/fc output accumulator -> int8
+    bwd: int = 7    # delta-x accumulator -> int8
+    grad: int = 7   # delta-W accumulator -> int8 update step
+    score: int = 7  # W o g8 accumulator -> int8 score step
+
+
+@dataclass
+class Scales:
+    """Per-layer static shifts plus the two global learning-rate shifts.
+
+    ``lr_shift`` is applied on top of the grad shift when forming the NITI
+    weight-update step (update magnitude <= 127 >> lr_shift), and
+    ``score_lr_shift`` likewise for the PRIOT score step.  They play the
+    role of NITI's learning rate: without them every update saturates the
+    int8 step and training destroys the model in one epoch.
+    """
+    layers: list  # list[LayerScales]
+    lr_shift: int = 5
+    score_lr_shift: int = 5
+
+    @staticmethod
+    def default(n_layers: int) -> "Scales":
+        return Scales(layers=[LayerScales() for _ in range(n_layers)])
+
+    def to_text(self) -> str:
+        lines = [f"lr_shift {self.lr_shift}",
+                 f"score_lr_shift {self.score_lr_shift}",
+                 "# layer fwd bwd grad score"]
+        for i, s in enumerate(self.layers):
+            lines.append(f"{i} {s.fwd} {s.bwd} {s.grad} {s.score}")
+        return "\n".join(lines) + "\n"
+
+    @staticmethod
+    def from_text(text: str) -> "Scales":
+        layers = []
+        lr_shift, score_lr_shift = 5, 5
+        for line in text.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split()
+            if parts[0] == "lr_shift":
+                lr_shift = int(parts[1])
+            elif parts[0] == "score_lr_shift":
+                score_lr_shift = int(parts[1])
+            else:
+                _, fwd, bwd, grad, score = (int(v) for v in parts)
+                layers.append(LayerScales(fwd, bwd, grad, score))
+        return Scales(layers=layers, lr_shift=lr_shift,
+                      score_lr_shift=score_lr_shift)
+
+
+# ---------------------------------------------------------------------------
+# The integer network
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Tape:
+    """Everything the backward pass needs (== device training memory)."""
+    inputs: list = field(default_factory=list)      # per layer: x or cols
+    relu_outs: list = field(default_factory=list)   # post-relu activations
+    pool_idx: list = field(default_factory=list)    # argmax indices or None
+
+
+class IntNet:
+    """Batch-1 integer-only net: forward, backward, and method step fns."""
+
+    def __init__(self, spec: NetSpec, weights, scales: Scales):
+        self.spec = spec
+        self.weights = [w.astype(np.int32) for w in weights]
+        self.scales = scales
+
+    # -- forward -----------------------------------------------------------
+
+    def forward(self, x_chw: np.ndarray, scores=None, masks=None,
+                theta: int = 0, dynamic: bool = False, tape: Optional[Tape] = None):
+        """Returns (logits int32 (10,), overflow_count int, dyn_shifts list).
+
+        ``scores``/``masks``: per-layer arrays or None (None -> no pruning).
+        ``overflow_count`` counts final-layer accumulator elements whose
+        rescaled value exceeds the int8 range (the Fig. 2 probe).
+        ``dynamic=True`` ignores the static fwd shifts and recomputes them
+        NITI-style from each accumulator's max (recorded in dyn_shifts).
+        """
+        x = x_chw.astype(np.int32)
+        dyn_shifts = []
+        overflow = 0
+        n = len(self.spec.layers)
+        for li, layer in enumerate(self.spec.layers):
+            w = self.effective_weight(li, scores, masks, theta)
+            if isinstance(layer, ConvSpec):
+                cols = im2col(x, layer.in_h, layer.in_w)
+                acc = w @ cols                              # (F, HW) int32
+            else:
+                x = x.reshape(-1)
+                cols = x
+                acc = w @ x                                 # (out,) int32
+            if tape is not None:
+                tape.inputs.append(cols)
+            s = self.scales.layers[li].fwd
+            if dynamic:
+                s = dynamic_shift_for(int(np.max(np.abs(acc))) if acc.size else 0)
+                dyn_shifts.append(s)
+            y = rshift_round(acc, s)
+            if li == n - 1:
+                overflow = int(np.sum(np.abs(y) > INT8_MAX))
+            y = clamp_int8(y)
+            if isinstance(layer, ConvSpec):
+                y = y.reshape(layer.out_c, layer.in_h, layer.in_w)
+            if getattr(layer, "relu", False):
+                y = np.maximum(y, 0)
+            if tape is not None:
+                tape.relu_outs.append(y)
+            if isinstance(layer, ConvSpec) and layer.pool:
+                y, idx = maxpool2(y)
+                if tape is not None:
+                    tape.pool_idx.append(idx)
+            else:
+                if tape is not None:
+                    tape.pool_idx.append(None)
+            x = y
+        return x.reshape(-1), overflow, dyn_shifts
+
+    def effective_weight(self, li: int, scores, masks, theta: int):
+        """W o mask(S >= theta) o M   (masks: PRIOT-S score-existence M)."""
+        w = self.weights[li]
+        if scores is None:
+            return w
+        s = scores[li]
+        keep = (s >= np.int32(theta)).astype(np.int32)
+        if masks is not None:
+            m = masks[li].astype(np.int32)
+            keep = 1 - m * (1 - keep)  # unscored edges (m==0) never pruned
+        return w * keep
+
+    # -- backward ----------------------------------------------------------
+
+    def backward(self, tape: Tape, dlogits: np.ndarray, dynamic: bool = False):
+        """Returns per-layer int32 weight-gradient accumulators ``dW32``.
+
+        ``dlogits`` int32 (10,).  delta-x is requantized with the static bwd
+        shift (or a dynamic one); dW32 is returned raw so the caller applies
+        either the NITI weight update or the PRIOT score update.
+        """
+        spec = self.spec
+        dW32 = [None] * len(spec.layers)
+        dy = dlogits.astype(np.int32)
+        for li in range(len(spec.layers) - 1, -1, -1):
+            layer = spec.layers[li]
+            w = self.weights[li]  # paper mod #2: unmasked W in backward
+            cols = tape.inputs[li]
+            if isinstance(layer, ConvSpec):
+                if layer.pool:
+                    dy = maxpool2_backward(
+                        dy.reshape(layer.out_c, layer.in_h // 2, layer.in_w // 2),
+                        tape.pool_idx[li], layer.in_h, layer.in_w)
+                dy = dy.reshape(layer.out_c, layer.out_hw)
+                if layer.relu:
+                    relu_mask = (tape.relu_outs[li] > 0).astype(np.int32)
+                    dy = dy * relu_mask.reshape(layer.out_c, layer.out_hw)
+                dW32[li] = dy @ cols.T                     # (F, C*9)
+                if li > 0:
+                    dcols = w.T @ dy                       # (C*9, HW)
+                    dx32 = col2im(dcols, layer.in_c, layer.in_h, layer.in_w)
+                    dy = self._requant_bwd(dx32, li, dynamic)
+            else:
+                if layer.relu:
+                    dy = dy * (tape.relu_outs[li].reshape(-1) > 0)
+                dW32[li] = np.outer(dy, cols)              # (out, in)
+                if li > 0:
+                    dx32 = w.T @ dy
+                    dy = self._requant_bwd(dx32, li, dynamic)
+                    prev = spec.layers[li - 1]
+                    if isinstance(prev, ConvSpec):
+                        oh = prev.in_h // 2 if prev.pool else prev.in_h
+                        ow = prev.in_w // 2 if prev.pool else prev.in_w
+                        dy = dy.reshape(prev.out_c, oh, ow)
+        return dW32
+
+    def _requant_bwd(self, dx32, li, dynamic):
+        s = self.scales.layers[li].bwd
+        if dynamic:
+            s = dynamic_shift_for(int(np.max(np.abs(dx32))) if dx32.size else 0)
+        return requantize(dx32, s)
+
+    # -- method steps --------------------------------------------------------
+
+    def step_niti(self, x_chw, label: int, dynamic: bool = False,
+                  step: int = 0):
+        """One NITI training step (weight update).  Returns (logits, overflow).
+
+        The update requantization uses NITI-style *stochastic rounding*
+        driven by the counter-based hash (``step`` is the global step
+        counter): deterministic rounding rounds nearly all batch-1 updates
+        to zero and no learning happens at any lr_shift (pilot logs in
+        EXPERIMENTS.md).
+        """
+        tape = Tape()
+        logits, overflow, _ = self.forward(x_chw, dynamic=dynamic, tape=tape)
+        onehot = np.zeros(10, dtype=np.int32)
+        onehot[label] = 1
+        dlogits = int_softmax_grad(logits, onehot)
+        dW32 = self.backward(tape, dlogits, dynamic=dynamic)
+        for li, g in enumerate(dW32):
+            s = self.scales.layers[li].grad
+            if dynamic:
+                s = dynamic_shift_for(int(np.max(np.abs(g))) if g.size else 0)
+            upd = stochastic_requant(g, s + self.scales.lr_shift, step,
+                                     li << 24)
+            self.weights[li] = clamp_int8(self.weights[li] - upd)
+        return logits, overflow
+
+    def step_priot(self, x_chw, label: int, scores, masks, theta: int,
+                   step: int = 0, sr: bool = False):
+        """One PRIOT/PRIOT-S step (score update; weights frozen).
+
+        Mutates ``scores`` in place; returns (logits, overflow).  Score
+        updates use deterministic round-half-up by default: unlike NITI's
+        weight updates, the edge-popup score signal integrates fine without
+        stochastic rounding and is markedly more stable with it off (the
+        ablation bench quantifies this; ``sr=True`` enables the NITI-style
+        variant).
+        """
+        tape = Tape()
+        logits, overflow, _ = self.forward(
+            x_chw, scores=scores, masks=masks, theta=theta, tape=tape)
+        onehot = np.zeros(10, dtype=np.int32)
+        onehot[label] = 1
+        dlogits = int_softmax_grad(logits, onehot)
+        dW32 = self.backward(tape, dlogits)
+        for li, g in enumerate(dW32):
+            sc = self.scales.layers[li]
+            g8 = requantize(g, sc.grad)
+            ds = self.weights[li] * g8            # |.| <= 127*127 — safe
+            shift = sc.score + self.scales.score_lr_shift
+            if sr:
+                upd = stochastic_requant(ds, shift, step, li << 24)
+            else:
+                upd = requantize(ds, shift)
+            if masks is not None:
+                upd = upd * masks[li].astype(np.int32)
+            scores[li] = clamp_int8(scores[li] - upd)
+        return logits, overflow
+
+    # -- calibration ---------------------------------------------------------
+
+    def calibrate(self, images, labels, passes: int = 1,
+                  skip_zero: bool = False):
+        """Paper SIV-A: run dynamic fwd/bwd over calibration data, record each
+        layer's dynamic shift, set every static shift to the *mode*.
+
+        Weight updates are NOT applied (weights must stay the deployable
+        pre-trained values).  Returns the calibrated ``Scales``.
+
+        ``skip_zero=False`` is the paper-faithful protocol: all-zero
+        gradient tensors (confident samples) vote shift 0, so the modal
+        grad/bwd shifts come out small and on-device NITI updates saturate.
+        This is load-bearing for the reproduction — it is exactly why
+        static-scale NITI fails to learn (Table I) while PRIOT, whose score
+        step is magnitude-bounded by ``|W o g8| >> (score+lr)``, is robust
+        to the same mis-calibrated gradient scales.  ``skip_zero=True``
+        (ablation) calibrates from informative samples only, which lets
+        static NITI learn transiently before collapsing.
+        """
+        n_layers = len(self.spec.layers)
+        hists = {k: [dict() for _ in range(n_layers)]
+                 for k in ("fwd", "bwd", "grad", "score")}
+
+        def vote(kind, li, s, nonzero=True):
+            if skip_zero and not nonzero:
+                return
+            h = hists[kind][li]
+            h[s] = h.get(s, 0) + 1
+
+        for _ in range(passes):
+            for i in range(len(labels)):
+                tape = Tape()
+                logits, _, dyn = self.forward(images[i], dynamic=True, tape=tape)
+                for li, s in enumerate(dyn):
+                    vote("fwd", li, s)
+                onehot = np.zeros(10, dtype=np.int32)
+                onehot[int(labels[i])] = 1
+                dlogits = int_softmax_grad(logits, onehot)
+                # Re-run backward capturing dynamic bwd shifts.
+                dW32 = self.backward(tape, dlogits, dynamic=False)
+                for li, g in enumerate(dW32):
+                    m = int(np.max(np.abs(g))) if g.size else 0
+                    vote("grad", li, dynamic_shift_for(m), nonzero=m > 0)
+                    # Score step operates on W o g8 with g8 from the grad
+                    # shift actually chosen; use the modal-so-far estimate.
+                    g8 = requantize(g, dynamic_shift_for(m))
+                    ds = self.weights[li] * g8
+                    md = int(np.max(np.abs(ds))) if ds.size else 0
+                    vote("score", li, dynamic_shift_for(md), nonzero=md > 0)
+                # bwd shifts: recompute deltas dynamically for the histogram.
+                self._calibrate_bwd(tape, dlogits, vote)
+        scales = Scales.default(n_layers)
+        for li in range(n_layers):
+            for kind in ("fwd", "bwd", "grad", "score"):
+                h = hists[kind][li]
+                if h:
+                    mode = max(sorted(h.items()), key=lambda kv: kv[1])[0]
+                    setattr(scales.layers[li], kind, mode)
+        self.scales = scales
+        return scales
+
+    def _calibrate_bwd(self, tape, dlogits, vote):
+        spec = self.spec
+        dy = dlogits.astype(np.int32)
+        for li in range(len(spec.layers) - 1, 0, -1):
+            layer = spec.layers[li]
+            w = self.weights[li]
+            if isinstance(layer, ConvSpec):
+                if layer.pool:
+                    dy = maxpool2_backward(
+                        dy.reshape(layer.out_c, layer.in_h // 2, layer.in_w // 2),
+                        tape.pool_idx[li], layer.in_h, layer.in_w)
+                dy = dy.reshape(layer.out_c, layer.out_hw)
+                if layer.relu:
+                    mask = (tape.relu_outs[li] > 0).astype(np.int32)
+                    dy = dy * mask.reshape(layer.out_c, layer.out_hw)
+                dcols = w.T @ dy
+                dx32 = col2im(dcols, layer.in_c, layer.in_h, layer.in_w)
+            else:
+                if layer.relu:
+                    dy = dy * (tape.relu_outs[li].reshape(-1) > 0)
+                dx32 = w.T @ dy
+            m = int(np.max(np.abs(dx32))) if dx32.size else 0
+            s = dynamic_shift_for(m)
+            vote("bwd", li, s, nonzero=m > 0)
+            dy = requantize(dx32, s)
+            prev = spec.layers[li - 1]
+            if isinstance(prev, ConvSpec):
+                oh = prev.in_h // 2 if prev.pool else prev.in_h
+                ow = prev.in_w // 2 if prev.pool else prev.in_w
+                dy = dy.reshape(prev.out_c, oh, ow)
+
+
+# ---------------------------------------------------------------------------
+# Score init & PRIOT-S selection  (mirrored bit-for-bit in rust/src/prng)
+# ---------------------------------------------------------------------------
+
+
+class XorShift32:
+    """xorshift32 PRNG — the cross-language RNG (rust/src/prng/mod.rs)."""
+
+    def __init__(self, seed: int):
+        self.state = np.uint32(seed if seed != 0 else 0xDEADBEEF)
+
+    def next_u32(self) -> int:
+        x = int(self.state)
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        self.state = np.uint32(x)
+        return x
+
+
+def init_scores(shapes, seed: int):
+    """Approx-N(0,32) int8 score init: (b1+b2+b3-382) >> 2, round-half-up.
+
+    Three top-byte uniforms (sigma ~= 128) summed then shifted by 2 gives
+    sigma ~= 32 — the paper's N(0, 32) init — in pure integer arithmetic.
+    """
+    rng = XorShift32(seed)
+    out = []
+    for shape in shapes:
+        n = int(np.prod(shape))
+        vals = np.empty(n, dtype=np.int32)
+        for i in range(n):
+            t = ((rng.next_u32() >> 24) + (rng.next_u32() >> 24)
+                 + (rng.next_u32() >> 24) - 382)
+            vals[i] = (t + 2) >> 2
+        out.append(clamp_int8(vals.reshape(shape)))
+    return out
+
+
+def select_mask_random(shapes, frac_scored: float, seed: int):
+    """PRIOT-S random selection: M[i]=1 for ~frac_scored of edges."""
+    rng = XorShift32(seed)
+    thresh = int(frac_scored * 4294967296.0)
+    out = []
+    for shape in shapes:
+        n = int(np.prod(shape))
+        m = np.empty(n, dtype=np.int32)
+        for i in range(n):
+            m[i] = 1 if rng.next_u32() < thresh else 0
+        out.append(m.reshape(shape))
+    return out
+
+
+def select_mask_weight(weights, frac_scored: float):
+    """PRIOT-S weight-based selection: score the largest-|W| edges per layer.
+
+    Deterministic: stable ordering by (-|w|, flat index).
+    """
+    out = []
+    for w in weights:
+        flat = np.abs(w.reshape(-1)).astype(np.int64)
+        k = int(round(frac_scored * flat.size))
+        order = np.lexsort((np.arange(flat.size), -flat))
+        m = np.zeros(flat.size, dtype=np.int32)
+        m[order[:k]] = 1
+        out.append(m.reshape(w.shape))
+    return out

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels: the integer-GEMM hot path of PRIOT training.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO that the
+Rust PJRT CPU client can execute (real-TPU Pallas lowering emits Mosaic
+custom-calls the CPU plugin cannot run).  TPU tiling is analyzed in
+DESIGN.md SS7 / EXPERIMENTS.md SSPerf.
+"""
+
+from .int_matmul import int_matmul  # noqa: F401
+from .masked_matmul import masked_matmul  # noqa: F401
+from .score_grad import score_grad  # noqa: F401

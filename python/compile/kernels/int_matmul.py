@@ -1,0 +1,56 @@
+"""Pallas kernel: int8-range GEMM with int32 accumulation and an optional
+fused static-shift requantization epilogue.
+
+This is the single compute hot-spot of integer-only training: every conv
+(via im2col), every FC, and every backward matmul lowers onto it.
+
+The fused epilogue is the load-bearing part of the static-scale story: with
+a *static* shift the int32 accumulator never leaves the kernel (VMEM on a
+real TPU; registers/L1 on the Pico), whereas NITI's dynamic scaling must
+materialize the whole int32 tensor to find its max before it can requantize
+— exactly the memory overhead the paper argues against (SSII-B).
+
+TPU mapping (analytic — we execute interpret=True on CPU): tile A and B into
+128x128 int8 VMEM blocks, accumulate int8xint8->int32 on the MXU, apply
+shift-round-clamp on the VPU before the block leaves VMEM.  For the tiny-CNN
+shapes every operand fits in a single block, so the grid is 1 and VMEM holds
+A + B + C + acc; see EXPERIMENTS.md SSPerf for the footprint table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127
+
+
+def _kernel(a_ref, b_ref, o_ref, *, shift: int | None):
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(a, b, preferred_element_type=jnp.int32)
+    if shift is not None:
+        if shift > 0:
+            acc = (acc + jnp.int32(1 << (shift - 1))) >> jnp.int32(shift)
+        acc = jnp.clip(acc, -INT8_MAX, INT8_MAX)
+    o_ref[...] = acc
+
+
+def int_matmul(a: jax.Array, b: jax.Array, shift: int | None) -> jax.Array:
+    """``requant(a @ b, shift)`` with int32 accumulation.
+
+    ``a``: (M, K) int32 holding int8-range values; ``b``: (K, N) likewise.
+    ``shift``: static python int (fused requantize epilogue) or None for the
+    raw int32 accumulator.  Returns (M, N) int32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"GEMM shape mismatch: {a.shape} @ {b.shape}"
+    return pl.pallas_call(
+        functools.partial(_kernel, shift=shift),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)

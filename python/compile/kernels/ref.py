@@ -1,0 +1,40 @@
+"""Pure-numpy oracles for every Pallas kernel — the L1 correctness signal.
+
+pytest (``python/tests/test_kernels.py``) asserts the Pallas kernels equal
+these references bit-for-bit across hypothesis-driven shape/value sweeps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INT8_MAX = 127
+
+
+def rshift_round_np(x: np.ndarray, s: int) -> np.ndarray:
+    if s == 0:
+        return x
+    return (x + np.int32(1 << (s - 1))) >> np.int32(s)
+
+
+def requant_np(x: np.ndarray, s: int) -> np.ndarray:
+    return np.clip(rshift_round_np(x, s), -INT8_MAX, INT8_MAX)
+
+
+def int_matmul_ref(a: np.ndarray, b: np.ndarray, shift: int | None) -> np.ndarray:
+    acc = a.astype(np.int64) @ b.astype(np.int64)
+    acc = acc.astype(np.int32)  # contract: accumulators fit int32
+    if shift is None:
+        return acc
+    return requant_np(acc, shift)
+
+
+def masked_matmul_ref(w, s, m, theta: int, x, shift: int | None) -> np.ndarray:
+    above = (s >= np.int32(theta)).astype(np.int32)
+    keep = 1 - m * (1 - above)
+    return int_matmul_ref(w * keep, x, shift)
+
+
+def score_grad_ref(w, g8, m, shift: int) -> np.ndarray:
+    ds = (w * g8).astype(np.int32)
+    return requant_np(ds, shift) * m

@@ -1,0 +1,39 @@
+"""Pallas kernel: the PRIOT score-update step.
+
+Computes ``upd = requant(W o g8, shift) o M`` where ``g8`` is the already
+requantized weight-gradient tile (see intnet.py for why the product is taken
+after requantizing: ``W o (dy x^T)`` raw would overflow int32 on VGG-sized
+layers).  The caller applies ``S <- clamp(S - upd)``.
+
+Elementwise (VPU) work; fuses with the g8 tile while it is still in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127
+
+
+def _kernel(w_ref, g_ref, m_ref, o_ref, *, shift: int):
+    w = w_ref[...]
+    g = g_ref[...]
+    ds = w * g
+    if shift > 0:
+        ds = (ds + jnp.int32(1 << (shift - 1))) >> jnp.int32(shift)
+    ds = jnp.clip(ds, -INT8_MAX, INT8_MAX)
+    o_ref[...] = ds * m_ref[...]
+
+
+def score_grad(w: jax.Array, g8: jax.Array, m: jax.Array, shift: int) -> jax.Array:
+    """Score update tile: ``requant(w * g8, shift) * m``, all (F,K) i32."""
+    assert w.shape == g8.shape == m.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, shift=shift),
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.int32),
+        interpret=True,
+    )(w, g8, m)

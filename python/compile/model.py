@@ -1,0 +1,302 @@
+"""Layer-2: the integer-only training/eval graphs in JAX, composed from the
+Layer-1 Pallas kernels and lowered (aot.py) to the HLO artifacts the Rust
+coordinator executes.
+
+Bit-exactness contract: these graphs mirror the numpy oracle ``intnet.py``
+operation-for-operation (same im2col ordering, same argmax tie-break, same
+round-half-up shifts, same integer softmax).  ``tests/test_model.py`` and the
+Rust integration suite assert multi-step bit-equality.
+
+All tensors at the graph interface are int32 (the ``xla`` crate has no i8
+literal constructor); values stay in int8 range by construction.  Scale
+shifts and the PRIOT-S existence masks' *shapes* are static (baked at
+lowering); the threshold ``theta`` is a runtime (1,) i32 input so a single
+artifact serves PRIOT and PRIOT-S.
+
+Exported step graphs (batch 1, as on the device):
+
+* ``fwd_eval(img, theta, W..., S..., M...) -> logits``
+* ``priot_step(img, onehot, theta, W..., S..., M...) -> (S'..., logits, overflow)``
+* ``niti_step(img, onehot, W...) -> (W'..., logits, overflow)``
+
+Dynamic-scale NITI (the reference baseline) needs data-dependent shift
+computation and lives in the oracle/engine only — it is not an on-device
+deployment target in the paper either.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .intnet import ConvSpec, FcSpec, NetSpec, Scales
+from .quantlib import (INT8_MAX, SOFTMAX_GAP_SHIFT, SOFTMAX_ONE,
+                       SOFTMAX_ONE_BITS)
+from .kernels import int_matmul, masked_matmul, score_grad
+
+# ---------------------------------------------------------------------------
+# Elementwise integer helpers (jnp mirrors of quantlib)
+# ---------------------------------------------------------------------------
+
+
+def _rshift_round(x, s: int):
+    if s == 0:
+        return x
+    return (x + jnp.int32(1 << (s - 1))) >> jnp.int32(s)
+
+
+def _clamp8(x):
+    return jnp.clip(x, -INT8_MAX, INT8_MAX)
+
+
+def _stochastic_requant(x, s: int, step, base_idx: int):
+    """jnp mirror of ``quantlib.stochastic_requant`` with a *traced* step
+    scalar (the runtime step-counter input of the NITI graph)."""
+    if s == 0:
+        return _clamp8(x)
+    n = int(np.prod(x.shape))
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(x.shape) + jnp.uint32(base_idx)
+    h = (idx * jnp.uint32(0x85EBCA6B)) ^ (step.astype(jnp.uint32)
+                                          * jnp.uint32(0x9E3779B9))
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x045D9F3B)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> jnp.uint32(16))
+    r = (h & jnp.uint32((1 << s) - 1)).astype(jnp.int32)
+    return _clamp8((x + r) >> jnp.int32(s))
+
+
+def _int_softmax_grad(logits, onehot):
+    m = jnp.max(logits)
+    gap = (m - logits) >> jnp.int32(SOFTMAX_GAP_SHIFT)
+    gap = jnp.minimum(gap, jnp.int32(SOFTMAX_ONE_BITS))
+    e = jnp.int32(SOFTMAX_ONE) >> gap
+    total = jnp.sum(e)
+    p_hat = (e * jnp.int32(INT8_MAX)) // total
+    return p_hat - jnp.int32(INT8_MAX) * onehot
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2im / maxpool — jnp mirrors of intnet.py
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x, c: int, h: int, w: int):
+    """(C,H,W) i32 -> (C*9, H*W), row index c*9 + ky*3 + kx."""
+    padded = jnp.zeros((c, h + 2, w + 2), dtype=jnp.int32)
+    padded = padded.at[:, 1:h + 1, 1:w + 1].set(x)
+    slices = [padded[:, ky:ky + h, kx:kx + w].reshape(c, h * w)
+              for ky in range(3) for kx in range(3)]       # (9)(C,HW)
+    stacked = jnp.stack(slices, axis=1)                     # (C,9,HW)
+    return stacked.reshape(c * 9, h * w)
+
+
+def _col2im(cols, c: int, h: int, w: int):
+    """Adjoint of ``_im2col``: scatter-add back to (C,H,W) i32."""
+    padded = jnp.zeros((c, h + 2, w + 2), dtype=jnp.int32)
+    patches = cols.reshape(c, 9, h * w)
+    i = 0
+    for ky in range(3):
+        for kx in range(3):
+            padded = padded.at[:, ky:ky + h, kx:kx + w].add(
+                patches[:, i, :].reshape(c, h, w))
+            i += 1
+    return padded[:, 1:h + 1, 1:w + 1]
+
+
+def _maxpool2(x, c: int, h: int, w: int):
+    t = x.reshape(c, h // 2, 2, w // 2, 2).transpose(0, 1, 3, 2, 4)
+    t = t.reshape(c, h // 2, w // 2, 4)
+    idx = jnp.argmax(t, axis=-1)  # first max — same tie-break as numpy/Rust
+    out = jnp.take_along_axis(t, idx[..., None], axis=-1)[..., 0]
+    return out, idx.astype(jnp.int32)
+
+
+def _maxpool2_backward(dy, idx, c: int, h: int, w: int):
+    onehot = jax.nn.one_hot(idx, 4, dtype=jnp.int32)        # (C,h2,w2,4)
+    t = onehot * dy[..., None]
+    t = t.reshape(c, h // 2, w // 2, 2, 2).transpose(0, 1, 3, 2, 4)
+    return t.reshape(c, h, w)
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward over a NetSpec
+# ---------------------------------------------------------------------------
+
+
+def _forward(spec: NetSpec, scales: Scales, x, weights, scores, masks, theta):
+    """Returns (logits, overflow, tape).  tape = (inputs, relu_outs, pool_idx)."""
+    inputs, relu_outs, pool_idx = [], [], []
+    n = len(spec.layers)
+    overflow = jnp.int32(0)
+    for li, layer in enumerate(spec.layers):
+        s = scales.layers[li].fwd
+        if isinstance(layer, ConvSpec):
+            cols = _im2col(x, layer.in_c, layer.in_h, layer.in_w)
+        else:
+            cols = x.reshape(-1, 1)                         # (K,1)
+        inputs.append(cols)
+        last = li == n - 1
+        # Raw accumulator for the last layer so we can probe overflow
+        # (Fig. 2); fused requant epilogue everywhere else.
+        shift_arg = None if last else s
+        acc = masked_matmul(weights[li], scores[li], masks[li], theta,
+                            cols, shift_arg)
+        if last:
+            y = _rshift_round(acc, s)
+            overflow = jnp.sum((jnp.abs(y) > INT8_MAX).astype(jnp.int32))
+            y = _clamp8(y)
+        else:
+            y = acc
+        if isinstance(layer, ConvSpec):
+            y = y.reshape(layer.out_c, layer.in_h, layer.in_w)
+        else:
+            y = y.reshape(-1)
+        if layer.relu:
+            y = jnp.maximum(y, 0)
+        relu_outs.append(y)
+        if isinstance(layer, ConvSpec) and layer.pool:
+            y, idx = _maxpool2(y, layer.out_c, layer.in_h, layer.in_w)
+            pool_idx.append(idx)
+        else:
+            pool_idx.append(None)
+        x = y
+    return x.reshape(-1), overflow, (inputs, relu_outs, pool_idx)
+
+
+def _backward(spec: NetSpec, scales: Scales, weights, tape, dlogits,
+              grad_extra: int = 0, sr_step=None):
+    """Returns per-layer requantized int8-range gradients ``g8`` (F,K) i32.
+
+    ``grad_extra`` is added to each layer's grad shift — NITI passes
+    ``scales.lr_shift`` so the weight update is a *single* shift from the
+    raw int32 accumulator (double rounding would diverge from the oracle).
+    ``sr_step``: traced step-counter scalar → the final requantization uses
+    NITI-style stochastic rounding instead of round-half-up.
+    """
+    inputs, relu_outs, pool_idx = tape
+
+    def requant_grad(raw_fn, li, shift):
+        if sr_step is None:
+            return raw_fn(shift)
+        return _stochastic_requant(raw_fn(None), shift, sr_step, li << 24)
+
+    g8 = [None] * len(spec.layers)
+    dy = dlogits
+    for li in range(len(spec.layers) - 1, -1, -1):
+        layer = spec.layers[li]
+        w = weights[li]  # paper mod: unmasked W in the backward pass
+        sc = scales.layers[li]
+        if isinstance(layer, ConvSpec):
+            if layer.pool:
+                dy = _maxpool2_backward(
+                    dy.reshape(layer.out_c, layer.in_h // 2, layer.in_w // 2),
+                    pool_idx[li], layer.out_c, layer.in_h, layer.in_w)
+            dy = dy.reshape(layer.out_c, layer.out_hw)
+            if layer.relu:
+                mask = (relu_outs[li] > 0).astype(jnp.int32)
+                dy = dy * mask.reshape(layer.out_c, layer.out_hw)
+            dy_c = dy
+            g8[li] = requant_grad(
+                lambda sh, dy_c=dy_c, li=li: int_matmul(dy_c, inputs[li].T, sh),
+                li, sc.grad + grad_extra)
+            if li > 0:
+                dcols = int_matmul(w.T, dy, None)
+                dx32 = _col2im(dcols, layer.in_c, layer.in_h, layer.in_w)
+                dy = _clamp8(_rshift_round(dx32, sc.bwd))
+        else:
+            dy = dy.reshape(-1)
+            if layer.relu:
+                dy = dy * (relu_outs[li].reshape(-1) > 0)
+            dy_c = dy
+            g8[li] = requant_grad(
+                lambda sh, dy_c=dy_c, li=li: int_matmul(
+                    dy_c.reshape(-1, 1), inputs[li].T.reshape(1, -1), sh),
+                li, sc.grad + grad_extra)
+            if li > 0:
+                dx32 = int_matmul(w.T, dy.reshape(-1, 1), None).reshape(-1)
+                dy = _clamp8(_rshift_round(dx32, sc.bwd))
+                prev = spec.layers[li - 1]
+                if isinstance(prev, ConvSpec):
+                    oh = prev.in_h // 2 if prev.pool else prev.in_h
+                    ow = prev.in_w // 2 if prev.pool else prev.in_w
+                    dy = dy.reshape(prev.out_c, oh, ow)
+    return g8
+
+
+# ---------------------------------------------------------------------------
+# Exported step functions
+# ---------------------------------------------------------------------------
+
+
+def make_fwd_eval(spec: NetSpec, scales: Scales):
+    def fwd_eval(img, theta, *wsm):
+        n = len(spec.layers)
+        weights, scores, masks = wsm[:n], wsm[n:2 * n], wsm[2 * n:]
+        logits, _, _ = _forward(spec, scales, img, weights, scores, masks, theta)
+        return (logits,)
+    return fwd_eval
+
+
+def make_priot_step(spec: NetSpec, scales: Scales):
+    def priot_step(img, onehot, theta, *wsm):
+        n = len(spec.layers)
+        weights, scores, masks = wsm[:n], wsm[n:2 * n], wsm[2 * n:]
+        logits, overflow, tape = _forward(
+            spec, scales, img, weights, scores, masks, theta)
+        dlogits = _int_softmax_grad(logits, onehot)
+        g8 = _backward(spec, scales, weights, tape, dlogits)
+        new_scores = []
+        for li in range(n):
+            upd = score_grad(weights[li], g8[li], masks[li],
+                             scales.layers[li].score + scales.score_lr_shift)
+            new_scores.append(_clamp8(scores[li] - upd))
+        return tuple(new_scores) + (logits, overflow)
+    return priot_step
+
+
+def make_niti_step(spec: NetSpec, scales: Scales):
+    # NITI has no scores: mask everything "kept" via all-ones scores / theta
+    # never exceeded.  We pass constant score/mask tensors so the same
+    # masked_matmul kernel path is exercised (keep == 1 everywhere).
+    def niti_step(img, onehot, step, *weights):
+        n = len(spec.layers)
+        theta = jnp.full((1,), -128, dtype=jnp.int32)
+        scores = [jnp.zeros(spec.layers[li].weight_shape, dtype=jnp.int32)
+                  for li in range(n)]
+        masks = [jnp.ones(spec.layers[li].weight_shape, dtype=jnp.int32)
+                 for li in range(n)]
+        logits, overflow, tape = _forward(
+            spec, scales, img, weights, scores, masks, theta)
+        dlogits = _int_softmax_grad(logits, onehot)
+        # NITI-style stochastically-rounded update (see intnet.step_niti).
+        g8 = _backward(spec, scales, weights, tape, dlogits,
+                       grad_extra=scales.lr_shift, sr_step=step[0])
+        new_weights = [_clamp8(weights[li] - g8[li]) for li in range(n)]
+        return tuple(new_weights) + (logits, overflow)
+    return niti_step
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (for lowering and tests)
+# ---------------------------------------------------------------------------
+
+
+def example_args(spec: NetSpec, kind: str):
+    """ShapeDtypeStructs for lowering ``kind`` in {'fwd_eval','priot_step',
+    'niti_step'}."""
+    i32 = jnp.int32
+    img = jax.ShapeDtypeStruct(spec.input_chw, i32)
+    onehot = jax.ShapeDtypeStruct((10,), i32)
+    theta = jax.ShapeDtypeStruct((1,), i32)
+    per_layer = [jax.ShapeDtypeStruct(l.weight_shape, i32) for l in spec.layers]
+    if kind == "fwd_eval":
+        return [img, theta] + per_layer * 3
+    if kind == "priot_step":
+        return [img, onehot, theta] + per_layer * 3
+    if kind == "niti_step":
+        step = jax.ShapeDtypeStruct((1,), i32)
+        return [img, onehot, step] + per_layer
+    raise ValueError(kind)

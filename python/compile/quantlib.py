@@ -1,0 +1,150 @@
+"""Shared integer-quantization primitives — the L1/L2/engine numeric contract.
+
+Every integer operation in this repository (Pallas kernels, the JAX step
+graphs, the numpy oracle in ``intnet.py``, and the Rust picoengine) agrees on
+the semantics defined here:
+
+* int8 symmetric values clamped to [-127, 127] (-128 is never produced);
+* all multiply-accumulates widen to int32;
+* requantization is an arithmetic right shift with round-half-up:
+  ``rshift_round(x, s) = (x + (1 << (s-1))) >> s`` for ``s >= 1`` and the
+  identity for ``s == 0``.  Python/numpy, JAX and Rust all implement ``>>``
+  on negative int32 as an *arithmetic* shift, so the three implementations
+  are bit-identical;
+* no stochastic rounding anywhere: the whole training stack is
+  deterministic, which lets us assert bit-equality between the PJRT path
+  and the Rust engine.
+
+These helpers are written against ``numpy``-compatible module objects so the
+same code body serves numpy (oracle) and jax.numpy (graphs): pass ``np`` or
+``jnp`` as ``xp``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INT8_MAX = 127
+INT8_MIN = -127
+#: Fixed-point one for the base-2 softmax (14 fractional bits).
+SOFTMAX_ONE_BITS = 14
+SOFTMAX_ONE = 1 << SOFTMAX_ONE_BITS
+#: Right shift applied to the logit gap before the base-2 exponent:
+#: logits that differ by ``1 << SOFTMAX_GAP_SHIFT`` get probability ratio 2x.
+SOFTMAX_GAP_SHIFT = 3
+
+
+def rshift_round(x, s: int, xp=np):
+    """Arithmetic right shift by a *static* scale ``s`` with round-half-up.
+
+    ``s`` is a python int (static!), baked into the lowered graph.  ``x`` is
+    an int32 array.  For ``s == 0`` this is the identity.
+    """
+    if s == 0:
+        return x
+    bias = np.int32(1 << (s - 1))
+    return xp.right_shift(x + bias, np.int32(s))
+
+
+def clamp_int8(x, xp=np):
+    """Clamp an int32 array into the symmetric int8 range [-127, 127].
+
+    The result stays int32 on the jax side (the artifact interface dtype);
+    callers that need a packed int8 view cast explicitly.
+    """
+    return xp.clip(x, np.int32(INT8_MIN), np.int32(INT8_MAX))
+
+
+def requantize(x_int32, s: int, xp=np):
+    """int32 accumulator -> int8-range value: shift-round then clamp."""
+    return clamp_int8(rshift_round(x_int32, s, xp=xp), xp=xp)
+
+
+def saturating_sub_int8(a, b, xp=np):
+    """``clamp(a - b)`` — saturating int8 subtraction used by updates."""
+    return clamp_int8(a - b, xp=xp)
+
+
+def dynamic_shift_for(max_abs: int) -> int:
+    """NITI-style dynamic scale: smallest ``s`` with ``max_abs >> s <= 127``.
+
+    This is what the dynamic-scale baseline computes per tensor per step —
+    and exactly why it must materialize the whole int32 tensor (the Table II
+    memory argument).
+    """
+    s = 0
+    m = int(max_abs)
+    while (m >> s) > INT8_MAX:
+        s += 1
+    return s
+
+
+def int_softmax_grad(logits, onehot, xp=np):
+    """Integer cross-entropy backward via a base-2 fixed-point softmax.
+
+    ``logits`` int32 array in int8 range, shape (10,). ``onehot`` int32 0/1.
+
+    p_hat_i = (e_i * 127) // sum(e)            with
+    e_i     = SOFTMAX_ONE >> min(14, (max - logit_i) >> SOFTMAX_GAP_SHIFT)
+
+    Returns ``delta_logits = p_hat - 127 * onehot`` in [-127, 127] int32.
+    All operations are nonneg integer adds/shifts/divides, identical in
+    numpy, jax and Rust (``//`` == trunc div for nonneg operands).
+    """
+    m = xp.max(logits)
+    gap = xp.right_shift(m - logits, np.int32(SOFTMAX_GAP_SHIFT))
+    gap = xp.minimum(gap, np.int32(SOFTMAX_ONE_BITS))
+    e = xp.right_shift(np.int32(SOFTMAX_ONE), gap)
+    total = xp.sum(e)
+    p_hat = (e * np.int32(INT8_MAX)) // total
+    return p_hat - np.int32(INT8_MAX) * onehot
+
+
+def sr_hash_u32(step: int, idx, xp=np):
+    """Counter-based u32 hash (splitmix-style) for stochastic rounding.
+
+    Deterministic in (step, idx) and implemented identically in numpy
+    (uint32 wrap-around), jax.numpy and Rust (`wrapping_mul`), so the
+    "stochastic" rounding stream is bit-reproducible across all three
+    stacks.  ``idx`` is an int array of flat element indices (offset by a
+    per-layer base).
+    """
+    if isinstance(step, (int, np.integer)):
+        # exact python-int arithmetic avoids numpy scalar-overflow warnings
+        smix = np.uint32((int(step) * 0x9E3779B9) & 0xFFFFFFFF)
+    else:  # traced jax scalar
+        smix = step.astype(xp.uint32) * np.uint32(0x9E3779B9)
+    x = (xp.asarray(idx).astype(xp.uint32) * np.uint32(0x85EBCA6B)) ^ smix
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x045D9F3B)
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x2C1B3C6D)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def stochastic_requant(x_int32, s: int, step: int, base_idx: int, xp=np):
+    """int32 -> int8-range with *stochastic* rounding (NITI-style).
+
+    ``result = (x + r) >> s`` with ``r`` uniform in ``[0, 2^s)`` drawn from
+    the counter-based hash: ``E[result] = x / 2^s``, so sub-threshold
+    gradient signal survives in expectation — the property NITI's update
+    step relies on and deterministic round-half-up destroys.
+    """
+    if s == 0:
+        return clamp_int8(x_int32, xp=xp)
+    n = int(np.prod(x_int32.shape))
+    idx = xp.arange(n, dtype=xp.uint32).reshape(x_int32.shape) + \
+        np.uint32(base_idx)
+    r = (sr_hash_u32(step, idx, xp=xp) & np.uint32((1 << s) - 1)).astype(
+        xp.int32)
+    return clamp_int8(xp.right_shift(x_int32 + r, np.int32(s)), xp=xp)
+
+
+def quantize_weights_f32(w: np.ndarray) -> np.ndarray:
+    """Float -> int8 symmetric per-tensor quantization (host side, one-off)."""
+    m = float(np.max(np.abs(w)))
+    if m == 0.0:
+        return np.zeros(w.shape, dtype=np.int8)
+    q = np.round(w / m * INT8_MAX)
+    return np.clip(q, INT8_MIN, INT8_MAX).astype(np.int8)

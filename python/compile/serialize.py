@@ -1,0 +1,39 @@
+"""Binary interchange with the Rust side (mirrored by rust/src/serial/).
+
+Formats (all little-endian):
+
+* Weights file ("PRWT"): u32 magic, u32 version, u32 n_tensors, then per
+  tensor u32 ndim, u32 dims[ndim], i8 data (row-major).
+* Dataset file ("PRDS"): see dataset.py.
+* Scales file: text, ``layer fwd bwd grad score`` per line (intnet.Scales).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+WEIGHTS_MAGIC = 0x50525754  # "PRWT"
+
+
+def save_weights(path: str, tensors) -> None:
+    with open(path, "wb") as f:
+        f.write(np.array([WEIGHTS_MAGIC, 1, len(tensors)], dtype="<u4").tobytes())
+        for t in tensors:
+            t8 = np.asarray(t).astype(np.int8)
+            dims = np.array([t8.ndim] + list(t8.shape), dtype="<u4")
+            f.write(dims.tobytes())
+            f.write(t8.tobytes())
+
+
+def load_weights(path: str):
+    out = []
+    with open(path, "rb") as f:
+        magic, version, n = np.frombuffer(f.read(12), dtype="<u4")
+        assert magic == WEIGHTS_MAGIC and version == 1, "bad weights file"
+        for _ in range(int(n)):
+            ndim = int(np.frombuffer(f.read(4), dtype="<u4")[0])
+            dims = np.frombuffer(f.read(4 * ndim), dtype="<u4").astype(int)
+            size = int(np.prod(dims))
+            data = np.frombuffer(f.read(size), dtype=np.int8)
+            out.append(data.reshape(tuple(dims)).copy())
+    return out

@@ -1,0 +1,90 @@
+"""Pilot experiment (dev-only): validate learning dynamics end-to-end in
+Python before the Rust build.  Small sizes for speed."""
+
+import sys
+import time
+
+import numpy as np
+
+from compile import dataset as ds
+from compile import pretrain as pt
+from compile.intnet import (IntNet, Scales, init_scores, select_mask_random,
+                            select_mask_weight, tinycnn_spec)
+
+def log(*a):
+    print(*a, flush=True)
+
+t0 = time.time()
+spec = tinycnn_spec()
+N_PRE, N_DEV, EPOCHS = 4096, 512, int(sys.argv[1]) if len(sys.argv) > 1 else 8
+ANGLE = float(sys.argv[2]) if len(sys.argv) > 2 else 30.0
+
+imgs, labels = ds.make_rotdigits(N_PRE, 1000, 0.0)
+timgs, tlabels = ds.make_rotdigits(1024, 2000, 0.0)
+rimgs, rlabels = ds.make_rotdigits(N_DEV, 3000, ANGLE)
+rtimgs, rtlabels = ds.make_rotdigits(N_DEV, 4000, ANGLE)
+log(f"[{time.time()-t0:.0f}s] data done")
+
+params = pt.pretrain_float(spec, imgs, labels, epochs=6, log=log)
+log(f"[{time.time()-t0:.0f}s] float acc upright: "
+    f"{pt.eval_float(spec, params, timgs, tlabels):.4f}")
+
+weights = pt.quantize_params(spec, params)
+scales = pt.calibrate_scales(spec, weights, imgs, labels, n_calib=64)
+log(f"[{time.time()-t0:.0f}s] scales: " + scales.to_text().replace("\n", " | "))
+
+x_tr = ds.to_int8_activation(rimgs).astype(np.int32)
+x_te = ds.to_int8_activation(rtimgs).astype(np.int32)
+
+
+def evaluate(net, scores=None, masks=None, theta=0):
+    correct = 0
+    for i in range(len(rtlabels)):
+        logits, _, _ = net.forward(x_te[i], scores=scores, masks=masks,
+                                   theta=theta)
+        correct += int(np.argmax(logits) == rtlabels[i])
+    return correct / len(rtlabels)
+
+
+# Before transfer
+net = IntNet(spec, weights, scales)
+acc0 = evaluate(net)
+log(f"[{time.time()-t0:.0f}s] before-transfer int8 acc @ {ANGLE}deg: {acc0:.4f}")
+
+# Static NITI
+net = IntNet(spec, [w.copy() for w in weights], scales)
+for ep in range(EPOCHS):
+    ovf_total = 0
+    for i in range(len(rlabels)):
+        _, ovf = net.step_niti(x_tr[i], int(rlabels[i]))
+        ovf_total += ovf
+    log(f"  static-niti ep{ep}: acc {evaluate(net):.4f} ovf {ovf_total}")
+
+# Dynamic NITI
+net = IntNet(spec, [w.copy() for w in weights], scales)
+for ep in range(EPOCHS):
+    for i in range(len(rlabels)):
+        net.step_niti(x_tr[i], int(rlabels[i]), dynamic=True)
+    log(f"  dynamic-niti ep{ep}: acc {evaluate(net):.4f}")
+
+# PRIOT
+shapes = [l.weight_shape for l in spec.layers]
+net = IntNet(spec, weights, scales)
+scores = init_scores(shapes, 42)
+masks = [np.ones(s, dtype=np.int32) for s in shapes]
+for ep in range(EPOCHS):
+    for i in range(len(rlabels)):
+        net.step_priot(x_tr[i], int(rlabels[i]), scores, masks, -64)
+    pruned = [float(np.mean(s < -64)) for s in scores]
+    log(f"  priot ep{ep}: acc {evaluate(net, scores, masks, -64):.4f} "
+        f"pruned {['%.3f' % p for p in pruned]}")
+
+# PRIOT-S p=80% weight-based
+masks_w = select_mask_weight(weights, 0.2)
+scores = init_scores(shapes, 43)
+for ep in range(EPOCHS):
+    for i in range(len(rlabels)):
+        net.step_priot(x_tr[i], int(rlabels[i]), scores, masks_w, 0)
+    log(f"  priot-s(w,0.2) ep{ep}: acc {evaluate(net, scores, masks_w, 0):.4f}")
+
+log(f"[{time.time()-t0:.0f}s] pilot done")

@@ -1,0 +1,119 @@
+"""Pilot 3: re-tuned pretraining + calibration; verify learning dynamics."""
+
+import sys
+import time
+
+import numpy as np
+
+from compile import dataset as ds
+from compile import pretrain as pt
+from compile.intnet import (IntNet, Tape, init_scores, select_mask_weight,
+                            tinycnn_spec)
+from compile.quantlib import int_softmax_grad
+
+def log(*a):
+    print(*a, flush=True)
+
+t0 = time.time()
+spec = tinycnn_spec()
+N_DEV, EPOCHS, ANGLE = 512, 6, 30.0
+PRE_EPOCHS = int(sys.argv[1]) if len(sys.argv) > 1 else 3
+PRE_LR = float(sys.argv[2]) if len(sys.argv) > 2 else 0.03
+
+imgs, labels = ds.make_rotdigits(4096, 1000, 0.0)
+timgs, tlabels = ds.make_rotdigits(1024, 2000, 0.0)
+rimgs, rlabels = ds.make_rotdigits(N_DEV, 3000, ANGLE)
+rtimgs, rtlabels = ds.make_rotdigits(N_DEV, 4000, ANGLE)
+
+params = pt.pretrain_float(spec, imgs, labels, epochs=PRE_EPOCHS, lr=PRE_LR,
+                           log=log)
+log(f"float upright acc: {pt.eval_float(spec, params, timgs, tlabels):.4f}")
+weights = pt.quantize_params(spec, params)
+scales = pt.calibrate_scales(spec, weights, imgs, labels, n_calib=128)
+log(f"[{time.time()-t0:.0f}s] scales: "
+    + scales.to_text().replace("\n", " | "))
+
+x_tr = ds.to_int8_activation(rimgs).astype(np.int32)
+x_te = ds.to_int8_activation(rtimgs).astype(np.int32)
+x_up = ds.to_int8_activation(timgs[:512]).astype(np.int32)
+
+
+def evaluate(net, xs, ys, scores=None, masks=None, theta=0):
+    correct = 0
+    for i in range(len(ys)):
+        logits, _, _ = net.forward(xs[i], scores=scores, masks=masks,
+                                   theta=theta)
+        correct += int(np.argmax(logits) == ys[i])
+    return correct / len(ys)
+
+
+net = IntNet(spec, weights, scales)
+log(f"int8 upright acc: {evaluate(net, x_up, tlabels[:512]):.4f}")
+log(f"int8 before-transfer acc @30: {evaluate(net, x_te, rtlabels):.4f}")
+
+# Gradient magnitude stats on rotated samples
+stats = [[] for _ in spec.layers]
+for i in range(32):
+    tape = Tape()
+    logits, _, _ = net.forward(x_tr[i], tape=tape)
+    onehot = np.zeros(10, dtype=np.int32)
+    onehot[int(rlabels[i])] = 1
+    d = int_softmax_grad(logits, onehot)
+    dW = net.backward(tape, d)
+    for li, g in enumerate(dW):
+        stats[li].append(int(np.max(np.abs(g))))
+for li, s_ in enumerate(stats):
+    log(f"  layer{li} max|dW32| on rotated: med {int(np.median(s_))} "
+        f"max {max(s_)} zeros {sum(1 for v in s_ if v == 0)}/32")
+
+shapes = [l.weight_shape for l in spec.layers]
+
+for lr in (5, 7):
+    scales.lr_shift = lr
+    net = IntNet(spec, [w.copy() for w in weights], scales)
+    accs = []
+    for ep in range(EPOCHS):
+        for i in range(len(rlabels)):
+            net.step_niti(x_tr[i], int(rlabels[i]), dynamic=True)
+        accs.append(evaluate(net, x_te, rtlabels))
+    log(f"dynamic-niti lr={lr}: " + " ".join(f"{a:.3f}" for a in accs))
+
+for lr in (5, 7):
+    scales.lr_shift = lr
+    net = IntNet(spec, [w.copy() for w in weights], scales)
+    accs, ovfs = [], []
+    for ep in range(EPOCHS):
+        o = 0
+        for i in range(len(rlabels)):
+            _, ovf = net.step_niti(x_tr[i], int(rlabels[i]))
+            o += ovf
+        accs.append(evaluate(net, x_te, rtlabels))
+        ovfs.append(o)
+    log(f"static-niti lr={lr}: " + " ".join(f"{a:.3f}" for a in accs)
+        + f" ovf {ovfs}")
+
+for slr in (5, 7):
+    scales.score_lr_shift = slr
+    net = IntNet(spec, weights, scales)
+    scores = init_scores(shapes, 42)
+    masks = [np.ones(s, dtype=np.int32) for s in shapes]
+    accs = []
+    for ep in range(EPOCHS):
+        for i in range(len(rlabels)):
+            net.step_priot(x_tr[i], int(rlabels[i]), scores, masks, -64)
+        accs.append(evaluate(net, x_te, rtlabels, scores, masks, -64))
+    pruned = [float(np.mean(s < -64)) for s in scores]
+    log(f"priot slr={slr}: " + " ".join(f"{a:.3f}" for a in accs)
+        + f" pruned {['%.3f' % p for p in pruned]}")
+
+scales.score_lr_shift = 6
+masks_w = select_mask_weight(weights, 0.2)
+net = IntNet(spec, weights, scales)
+scores = init_scores(shapes, 43)
+accs = []
+for ep in range(EPOCHS):
+    for i in range(len(rlabels)):
+        net.step_priot(x_tr[i], int(rlabels[i]), scores, masks_w, 0)
+    accs.append(evaluate(net, x_te, rtlabels, scores, masks_w, 0))
+log("priot-s(w,0.2) slr=6: " + " ".join(f"{a:.3f}" for a in accs))
+log(f"[{time.time()-t0:.0f}s] pilot3 done")

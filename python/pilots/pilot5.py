@@ -1,0 +1,86 @@
+"""Pilot 5: controls — (a) float fine-tune on rotated data (is the task
+learnable by weight updates?); (b) integer-vs-float gradient sign agreement
+(is our integer backward directionally right?)."""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import dataset as ds
+from compile import pretrain as pt
+from compile.intnet import IntNet, Tape, tinycnn_spec
+from compile.quantlib import int_softmax_grad
+
+def log(*a):
+    print(*a, flush=True)
+
+t0 = time.time()
+spec = tinycnn_spec()
+imgs, labels = ds.make_rotdigits(4096, 1000, 0.0)
+rimgs, rlabels = ds.make_rotdigits(512, 3000, 30.0)
+rtimgs, rtlabels = ds.make_rotdigits(512, 4000, 30.0)
+
+params = pt.pretrain_float(spec, imgs, labels, epochs=3, lr=0.03,
+                           log=lambda *a: None)
+log(f"float before-transfer acc @30: "
+    f"{pt.eval_float(spec, params, rtimgs, rtlabels):.4f}")
+
+# (a) float fine-tune, batch 1, plain SGD
+import functools
+loss_grad = jax.jit(jax.grad(functools.partial(pt._loss, spec)))
+for lr in (0.01, 0.003):
+    p = [jnp.array(x) for x in params]
+    for ep in range(4):
+        for i in range(512):
+            g = loss_grad(p, jnp.asarray(rimgs[i:i+1], jnp.float32) / 255.0,
+                          jnp.asarray(rlabels[i:i+1], jnp.int32))
+            p = [w - lr * gw for w, gw in zip(p, g)]
+        log(f"float finetune lr={lr} ep{ep}: "
+            f"{pt.eval_float(spec, p, rtimgs, rtlabels):.4f}")
+
+# (b) gradient sign agreement, integer vs float, same quantized weights
+weights = pt.quantize_params(spec, params)
+scales = pt.calibrate_scales(spec, weights, imgs, labels, n_calib=128)
+net = IntNet(spec, weights, scales)
+x_tr = ds.to_int8_activation(rimgs).astype(np.int32)
+
+# float model matching the quantized weights (dequantized)
+wscales = []
+fparams = []
+for layer, p_, wq in zip(spec.layers, params, weights):
+    mx = float(np.max(np.abs(np.asarray(p_))))
+    wscales.append(mx / 127.0)
+    fq = wq.astype(np.float32) * (mx / 127.0)
+    if hasattr(layer, "in_c"):  # conv: (F, C*9) -> (F,C,3,3)
+        fq = fq.reshape(layer.out_c, layer.in_c, 3, 3)
+    fparams.append(jnp.asarray(fq))
+
+agree_all = []
+for i in range(24):
+    tape = Tape()
+    logits, _, _ = net.forward(x_tr[i], tape=tape)
+    onehot = np.zeros(10, dtype=np.int32)
+    onehot[int(rlabels[i])] = 1
+    d = int_softmax_grad(logits, onehot)
+    dW_int = net.backward(tape, d)
+    gf = loss_grad(fparams, jnp.asarray(rimgs[i:i+1], jnp.float32) / 255.0,
+                   jnp.asarray(rlabels[i:i+1], jnp.int32))
+    pcts = []
+    for li, (gi, gfl) in enumerate(zip(dW_int, gf)):
+        gfl = np.asarray(gfl).reshape(gi.shape)
+        mask = (np.abs(gi) > 0) & (np.abs(gfl) > 1e-7)
+        if mask.sum() == 0:
+            pcts.append(float("nan"))
+            continue
+        agree = np.mean(np.sign(gi[mask]) == np.sign(gfl[mask]))
+        pcts.append(float(agree))
+    agree_all.append(pcts)
+agree_all = np.array(agree_all)
+for li in range(len(spec.layers)):
+    col = agree_all[:, li]
+    col = col[~np.isnan(col)]
+    log(f"layer{li} int/float grad sign agreement: "
+        f"{np.mean(col):.3f} (n={len(col)})")
+log(f"[{time.time()-t0:.0f}s] pilot5 done")

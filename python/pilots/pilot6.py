@@ -1,0 +1,108 @@
+"""Pilot 6: stochastic-rounding updates — find the lr windows."""
+
+import time
+
+import numpy as np
+
+from compile import dataset as ds
+from compile import pretrain as pt
+from compile.intnet import (IntNet, init_scores, select_mask_random,
+                            select_mask_weight, tinycnn_spec)
+
+def log(*a):
+    print(*a, flush=True)
+
+t0 = time.time()
+spec = tinycnn_spec()
+N_DEV, EPOCHS = 512, 8
+
+imgs, labels = ds.make_rotdigits(4096, 1000, 0.0)
+rimgs, rlabels = ds.make_rotdigits(N_DEV, 3000, 30.0)
+rtimgs, rtlabels = ds.make_rotdigits(N_DEV, 4000, 30.0)
+
+params = pt.pretrain_float(spec, imgs, labels, epochs=3, lr=0.03,
+                           log=lambda *a: None)
+weights = pt.quantize_params(spec, params)
+scales = pt.calibrate_scales(spec, weights, imgs, labels, n_calib=128)
+log(f"[{time.time()-t0:.0f}s] scales: " + scales.to_text().replace("\n", " | "))
+
+x_tr = ds.to_int8_activation(rimgs).astype(np.int32)
+x_te = ds.to_int8_activation(rtimgs).astype(np.int32)
+
+
+def evaluate(net, scores=None, masks=None, theta=0):
+    correct = 0
+    for i in range(len(rtlabels)):
+        logits, _, _ = net.forward(x_te[i], scores=scores, masks=masks,
+                                   theta=theta)
+        correct += int(np.argmax(logits) == rtlabels[i])
+    return correct / len(rtlabels)
+
+
+net = IntNet(spec, weights, scales)
+log(f"before-transfer acc @30: {evaluate(net):.4f}")
+shapes = [l.weight_shape for l in spec.layers]
+
+for lr in (8, 9, 10, 11):
+    scales.lr_shift = lr
+    net = IntNet(spec, [w.copy() for w in weights], scales)
+    accs = []
+    gstep = 0
+    for ep in range(EPOCHS):
+        for i in range(len(rlabels)):
+            net.step_niti(x_tr[i], int(rlabels[i]), dynamic=True, step=gstep)
+            gstep += 1
+        accs.append(evaluate(net))
+    log(f"dyn-niti+sr lr={lr}: " + " ".join(f"{a:.3f}" for a in accs))
+
+for lr in (9, 10, 11):
+    scales.lr_shift = lr
+    net = IntNet(spec, [w.copy() for w in weights], scales)
+    accs, ovfs = [], []
+    gstep = 0
+    for ep in range(EPOCHS):
+        o = 0
+        for i in range(len(rlabels)):
+            _, ovf = net.step_niti(x_tr[i], int(rlabels[i]), step=gstep)
+            gstep += 1
+            o += ovf
+        accs.append(evaluate(net))
+        ovfs.append(o)
+    log(f"static-niti+sr lr={lr}: " + " ".join(f"{a:.3f}" for a in accs)
+        + f" ovf {ovfs}")
+
+for slr in (7, 8, 9):
+    scales.score_lr_shift = slr
+    net = IntNet(spec, weights, scales)
+    scores = init_scores(shapes, 42)
+    masks = [np.ones(s, dtype=np.int32) for s in shapes]
+    accs = []
+    gstep = 0
+    for ep in range(EPOCHS):
+        for i in range(len(rlabels)):
+            net.step_priot(x_tr[i], int(rlabels[i]), scores, masks, -64,
+                           step=gstep)
+            gstep += 1
+        accs.append(evaluate(net, scores, masks, -64))
+    pruned = [float(np.mean(s < -64)) for s in scores]
+    log(f"priot+sr slr={slr}: " + " ".join(f"{a:.3f}" for a in accs)
+        + f" pruned {['%.3f' % p for p in pruned]}")
+
+scales.score_lr_shift = 8
+for name, masks_, theta in (
+    ("priot-s(r,0.1)", select_mask_random(shapes, 0.1, 50), 0),
+    ("priot-s(w,0.1)", select_mask_weight(weights, 0.1), 0),
+    ("priot-s(w,0.2)", select_mask_weight(weights, 0.2), 0),
+):
+    net = IntNet(spec, weights, scales)
+    scores = init_scores(shapes, 43)
+    accs = []
+    gstep = 0
+    for ep in range(EPOCHS):
+        for i in range(len(rlabels)):
+            net.step_priot(x_tr[i], int(rlabels[i]), scores, masks_, theta,
+                           step=gstep)
+            gstep += 1
+        accs.append(evaluate(net, scores, masks_, theta))
+    log(f"{name} slr=8: " + " ".join(f"{a:.3f}" for a in accs))
+log(f"[{time.time()-t0:.0f}s] pilot6 done")

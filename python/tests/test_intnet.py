@@ -1,0 +1,118 @@
+"""Oracle-level behavior tests: geometry helpers, calibration, selection."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.intnet import (IntNet, Scales, col2im, im2col, init_scores,
+                            maxpool2, maxpool2_backward, select_mask_random,
+                            select_mask_weight, tinycnn_spec, vgg11_spec)
+
+DIM = st.integers(min_value=1, max_value=4)
+
+
+@given(DIM, DIM, DIM, st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_im2col_col2im_adjoint(c, h2, w2, seed):
+    h, w = h2 * 2, w2 * 2
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, size=(c, h, w)).astype(np.int32)
+    y = rng.integers(-127, 128, size=(c * 9, h * w)).astype(np.int32)
+    xi = im2col(x, h, w)
+    back = col2im(y, c, h, w)
+    lhs = int(np.sum(xi.astype(np.int64) * y))
+    rhs = int(np.sum(x.astype(np.int64) * back))
+    assert lhs == rhs
+
+
+def test_maxpool_first_max_tiebreak():
+    x = np.full((1, 2, 2), 9, dtype=np.int32)
+    out, idx = maxpool2(x)
+    assert out[0, 0, 0] == 9
+    assert idx[0, 0, 0] == 0  # top-left wins ties (matches jnp + Rust)
+
+
+@given(DIM, DIM, DIM, st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_maxpool_backward_routes_to_argmax(c, h2, w2, seed):
+    h, w = h2 * 2, w2 * 2
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, size=(c, h, w)).astype(np.int32)
+    out, idx = maxpool2(x)
+    dy = rng.integers(-127, 128, size=out.shape).astype(np.int32)
+    dx = maxpool2_backward(dy, idx, h, w)
+    # every nonzero of dx sits at a window max
+    assert int(np.abs(dx).sum()) == int(np.abs(dy).sum())
+
+
+def test_score_init_matches_rust_semantics():
+    s = init_scores([(100, 100)], seed=42)[0]
+    assert s.shape == (100, 100)
+    assert abs(float(s.mean())) < 2.0
+    assert 25.0 < float(s.std()) < 40.0  # ~N(0,32)
+    s2 = init_scores([(100, 100)], seed=42)[0]
+    np.testing.assert_array_equal(s, s2)
+
+
+def test_select_mask_weight_prefers_large_weights():
+    w = np.array([[5, -100, 3], [50, -2, 1]], dtype=np.int32)
+    m = select_mask_weight([w], 0.5)[0]
+    np.testing.assert_array_equal(m, [[0, 1, 0], [1, 0, 0]] if m.sum() == 2
+                                  else m)
+    # k = round(0.5*6) = 3 → |100|,|50|,|5|
+    assert m.sum() == 3
+    assert m[0, 1] == 1 and m[1, 0] == 1 and m[0, 0] == 1
+
+
+def test_select_mask_random_fraction():
+    m = select_mask_random([(200, 100)], 0.1, seed=7)[0]
+    frac = float(m.mean())
+    assert 0.07 < frac < 0.13
+
+
+def test_scales_text_roundtrip():
+    s = Scales.default(4)
+    s.lr_shift = 11
+    s.score_lr_shift = 7
+    s.layers[2].grad = 13
+    t = s.to_text()
+    s2 = Scales.from_text(t)
+    assert s2.lr_shift == 11 and s2.score_lr_shift == 7
+    assert s2.layers[2].grad == 13
+    assert len(s2.layers) == 4
+
+
+def test_vgg_spec_matches_rust():
+    v = vgg11_spec(0.25)
+    assert len(v.layers) == 11
+    assert v.layers[0].weight_shape == (16, 27)
+    assert v.layers[-1].weight_shape == (10, 128)
+    # chaining
+    cur = 3 * 32 * 32
+    for l in v.layers:
+        if hasattr(l, "in_c"):
+            assert l.in_c * l.in_h * l.in_w == cur
+            cur = l.out_c * (l.in_h // 2 if l.pool else l.in_h) * \
+                (l.in_w // 2 if l.pool else l.in_w)
+        else:
+            assert l.in_f == cur
+            cur = l.out_f
+    assert cur == 10
+
+
+def test_calibration_is_deterministic_and_sane():
+    spec = tinycnn_spec()
+    rng = np.random.default_rng(3)
+    weights = [rng.integers(-127, 128, size=l.weight_shape).astype(np.int32)
+               for l in spec.layers]
+    imgs = rng.integers(0, 128, size=(8, 1, 28, 28)).astype(np.int32)
+    labels = rng.integers(0, 10, size=8)
+    net = IntNet(spec, [w.copy() for w in weights], Scales.default(4))
+    s1 = net.calibrate(imgs, labels)
+    net2 = IntNet(spec, [w.copy() for w in weights], Scales.default(4))
+    s2 = net2.calibrate(imgs, labels)
+    assert s1.to_text() == s2.to_text()
+    for l in s1.layers:
+        assert 0 <= l.fwd < 24 and 0 <= l.grad < 24
+    # calibration must not mutate weights
+    for w0, w1 in zip(weights, net.weights):
+        np.testing.assert_array_equal(w0, w1)

@@ -1,0 +1,168 @@
+"""L1 correctness: every Pallas kernel bit-equals its numpy oracle,
+across hypothesis-driven shape/value/shift sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import int_matmul, masked_matmul, score_grad
+from compile.kernels.ref import (int_matmul_ref, masked_matmul_ref,
+                                 requant_np, rshift_round_np, score_grad_ref)
+
+INT8 = st.integers(min_value=-127, max_value=127)
+DIM = st.integers(min_value=1, max_value=24)
+SHIFT = st.integers(min_value=0, max_value=12)
+
+
+def _arr(rng, shape, lo=-127, hi=127):
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int64).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# rounding primitive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("x,s,expect", [
+    (5, 1, 3), (-5, 1, -2), (4, 2, 1), (-4, 2, -1),
+    (7, 3, 1), (-7, 3, -1), (8, 3, 1), (127, 0, 127), (-128, 4, -8),
+])
+def test_rshift_round_cases(x, s, expect):
+    assert int(rshift_round_np(np.int32(x), s)) == expect
+
+
+@given(st.integers(min_value=-(2**30), max_value=2**30), SHIFT)
+@settings(max_examples=200, deadline=None)
+def test_rshift_round_matches_float(x, s):
+    """round-half-up: result == floor(x / 2^s + 0.5)."""
+    got = int(rshift_round_np(np.int32(x), s))
+    want = int(np.floor(x / (2 ** s) + 0.5)) if s > 0 else x
+    assert got == want
+
+
+@given(st.integers(min_value=-(2**30), max_value=2**30), SHIFT)
+@settings(max_examples=100, deadline=None)
+def test_requant_idempotent_range(x, s):
+    v = int(requant_np(np.int32(x), s))
+    assert -127 <= v <= 127
+    # clamping again is a no-op
+    assert int(requant_np(np.int32(v), 0)) == v
+
+
+# ---------------------------------------------------------------------------
+# int_matmul
+# ---------------------------------------------------------------------------
+
+@given(DIM, DIM, DIM, SHIFT, st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_int_matmul_matches_ref(m, k, n, shift, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, (m, k))
+    b = _arr(rng, (k, n))
+    got = np.asarray(int_matmul(jnp.asarray(a), jnp.asarray(b), shift))
+    want = int_matmul_ref(a, b, shift)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(DIM, DIM, DIM, st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_int_matmul_raw_accumulator(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, (m, k))
+    b = _arr(rng, (k, n))
+    got = np.asarray(int_matmul(jnp.asarray(a), jnp.asarray(b), None))
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_int_matmul_shape_mismatch_raises():
+    a = jnp.zeros((2, 3), jnp.int32)
+    b = jnp.zeros((4, 2), jnp.int32)
+    with pytest.raises(AssertionError):
+        int_matmul(a, b, 1)
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul (edge-popup forward)
+# ---------------------------------------------------------------------------
+
+@given(DIM, DIM, DIM, SHIFT, st.integers(-128, 127), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_masked_matmul_matches_ref(f, k, n, shift, theta, seed):
+    rng = np.random.default_rng(seed)
+    w = _arr(rng, (f, k))
+    s = _arr(rng, (f, k))
+    mask = _arr(rng, (f, k), 0, 1)
+    x = _arr(rng, (k, n))
+    got = np.asarray(masked_matmul(
+        jnp.asarray(w), jnp.asarray(s), jnp.asarray(mask),
+        jnp.full((1,), theta, jnp.int32), jnp.asarray(x), shift))
+    want = masked_matmul_ref(w, s, mask, theta, x, shift)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_masked_matmul_theta_extremes():
+    """theta=-128 keeps every edge; theta=+127 prunes all scored edges."""
+    rng = np.random.default_rng(0)
+    w = _arr(rng, (6, 5))
+    s = _arr(rng, (6, 5), -126, 126)
+    ones = np.ones((6, 5), dtype=np.int32)
+    x = _arr(rng, (5, 3))
+    keep_all = np.asarray(masked_matmul(
+        jnp.asarray(w), jnp.asarray(s), jnp.asarray(ones),
+        jnp.full((1,), -128, jnp.int32), jnp.asarray(x), 4))
+    np.testing.assert_array_equal(keep_all, int_matmul_ref(w, x, 4))
+    prune_all = np.asarray(masked_matmul(
+        jnp.asarray(w), jnp.asarray(s), jnp.asarray(ones),
+        jnp.full((1,), 127, jnp.int32), jnp.asarray(x), 4))
+    np.testing.assert_array_equal(prune_all, np.zeros((6, 3), np.int32))
+
+
+def test_masked_matmul_unscored_edges_never_pruned():
+    """M == 0 edges survive any theta (PRIOT-S invariant)."""
+    rng = np.random.default_rng(1)
+    w = _arr(rng, (4, 4))
+    s = np.full((4, 4), -127, dtype=np.int32)  # all scores below any theta
+    zeros = np.zeros((4, 4), dtype=np.int32)
+    x = _arr(rng, (4, 2))
+    got = np.asarray(masked_matmul(
+        jnp.asarray(w), jnp.asarray(s), jnp.asarray(zeros),
+        jnp.full((1,), 127, jnp.int32), jnp.asarray(x), 3))
+    np.testing.assert_array_equal(got, int_matmul_ref(w, x, 3))
+
+
+@given(DIM, DIM, st.integers(-127, 126), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_mask_monotone_in_theta(f, k, theta, seed):
+    """Raising theta can only prune more: kept-edge set shrinks monotonically."""
+    rng = np.random.default_rng(seed)
+    s = _arr(rng, (f, k))
+    keep_lo = (s >= theta).astype(np.int32)
+    keep_hi = (s >= theta + 1).astype(np.int32)
+    assert np.all(keep_hi <= keep_lo)
+
+
+# ---------------------------------------------------------------------------
+# score_grad
+# ---------------------------------------------------------------------------
+
+@given(DIM, DIM, SHIFT, st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_score_grad_matches_ref(f, k, shift, seed):
+    rng = np.random.default_rng(seed)
+    w = _arr(rng, (f, k))
+    g8 = _arr(rng, (f, k))
+    mask = _arr(rng, (f, k), 0, 1)
+    got = np.asarray(score_grad(jnp.asarray(w), jnp.asarray(g8),
+                                jnp.asarray(mask), shift))
+    want = score_grad_ref(w, g8, mask, shift)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_score_grad_zero_mask_is_zero():
+    rng = np.random.default_rng(2)
+    w = _arr(rng, (5, 7))
+    g8 = _arr(rng, (5, 7))
+    zeros = np.zeros((5, 7), dtype=np.int32)
+    got = np.asarray(score_grad(jnp.asarray(w), jnp.asarray(g8), zeros, 3))
+    assert not got.any()

@@ -1,0 +1,143 @@
+"""L2 correctness: the JAX step graphs bit-equal the numpy oracle (intnet).
+
+This is the same parity contract the Rust engine is held to, so transitively
+all three implementations agree.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as m
+from compile.intnet import (IntNet, Scales, init_scores, select_mask_random,
+                            tinycnn_spec)
+from compile.quantlib import int_softmax_grad
+
+SPEC = tinycnn_spec()
+
+
+def _rand_weights(rng):
+    return [rng.integers(-127, 128, size=l.weight_shape).astype(np.int32)
+            for l in SPEC.layers]
+
+
+def _rand_scales(rng):
+    s = Scales.default(len(SPEC.layers))
+    for ls in s.layers:
+        ls.fwd = int(rng.integers(4, 9))
+        ls.bwd = int(rng.integers(4, 9))
+        ls.grad = int(rng.integers(8, 14))
+        ls.score = int(rng.integers(4, 9))
+    return s
+
+
+def _rand_img(rng):
+    return rng.integers(0, 128, size=SPEC.input_chw).astype(np.int32)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fwd_eval_parity(seed):
+    rng = np.random.default_rng(seed)
+    weights = _rand_weights(rng)
+    scales = _rand_scales(rng)
+    scores = init_scores([l.weight_shape for l in SPEC.layers], seed + 10)
+    masks = [np.ones(l.weight_shape, dtype=np.int32) for l in SPEC.layers]
+    img = _rand_img(rng)
+    theta = -64
+
+    net = IntNet(SPEC, weights, scales)
+    want, _, _ = net.forward(img, scores=scores, masks=masks, theta=theta)
+
+    fwd = m.make_fwd_eval(SPEC, scales)
+    got = fwd(jnp.asarray(img), jnp.full((1,), theta, jnp.int32),
+              *[jnp.asarray(w) for w in weights],
+              *[jnp.asarray(s) for s in scores],
+              *[jnp.asarray(mk) for mk in masks])[0]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("seed,theta,frac", [(0, -64, 1.0), (1, 0, 0.2),
+                                             (2, 0, 0.1), (3, -64, 1.0)])
+def test_priot_step_parity(seed, theta, frac):
+    """Multi-step PRIOT/PRIOT-S: scores evolve identically in both paths."""
+    rng = np.random.default_rng(seed)
+    weights = _rand_weights(rng)
+    scales = _rand_scales(rng)
+    shapes = [l.weight_shape for l in SPEC.layers]
+    scores = init_scores(shapes, seed + 20)
+    if frac >= 1.0:
+        masks = [np.ones(s, dtype=np.int32) for s in shapes]
+    else:
+        masks = select_mask_random(shapes, frac, seed + 30)
+
+    net = IntNet(SPEC, weights, scales)
+    oracle_scores = [s.copy() for s in scores]
+
+    step = m.make_priot_step(SPEC, scales)
+    jx_scores = [jnp.asarray(s) for s in scores]
+    for it in range(3):
+        img = _rand_img(rng)
+        label = int(rng.integers(0, 10))
+        want_logits, want_ovf = net.step_priot(
+            img, label, oracle_scores, masks, theta)
+        onehot = np.zeros(10, dtype=np.int32)
+        onehot[label] = 1
+        out = step(jnp.asarray(img), jnp.asarray(onehot),
+                   jnp.full((1,), theta, jnp.int32),
+                   *[jnp.asarray(w) for w in weights],
+                   *jx_scores, *[jnp.asarray(mk) for mk in masks])
+        n = len(SPEC.layers)
+        jx_scores = list(out[:n])
+        got_logits, got_ovf = out[n], out[n + 1]
+        np.testing.assert_array_equal(np.asarray(got_logits), want_logits,
+                                      err_msg=f"logits diverged at step {it}")
+        assert int(got_ovf) == want_ovf
+        for li in range(n):
+            np.testing.assert_array_equal(
+                np.asarray(jx_scores[li]), oracle_scores[li],
+                err_msg=f"scores diverged at step {it} layer {li}")
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_niti_step_parity(seed):
+    """Multi-step static-NITI: weights evolve identically in both paths."""
+    rng = np.random.default_rng(seed)
+    weights = _rand_weights(rng)
+    scales = _rand_scales(rng)
+
+    net = IntNet(SPEC, [w.copy() for w in weights], scales)
+    step = m.make_niti_step(SPEC, scales)
+    jx_weights = [jnp.asarray(w) for w in weights]
+    for it in range(3):
+        img = _rand_img(rng)
+        label = int(rng.integers(0, 10))
+        want_logits, want_ovf = net.step_niti(img, label, step=it)
+        onehot = np.zeros(10, dtype=np.int32)
+        onehot[label] = 1
+        out = step(jnp.asarray(img), jnp.asarray(onehot),
+                   jnp.full((1,), it, jnp.int32), *jx_weights)
+        n = len(SPEC.layers)
+        jx_weights = list(out[:n])
+        got_logits, got_ovf = out[n], out[n + 1]
+        np.testing.assert_array_equal(np.asarray(got_logits), want_logits,
+                                      err_msg=f"logits diverged at step {it}")
+        assert int(got_ovf) == want_ovf
+        for li in range(n):
+            np.testing.assert_array_equal(
+                np.asarray(jx_weights[li]), net.weights[li],
+                err_msg=f"weights diverged at step {it} layer {li}")
+
+
+def test_int_softmax_grad_properties():
+    """Gradient sums to ~0, is negative only at the true class direction."""
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        logits = rng.integers(-127, 128, size=10).astype(np.int32)
+        label = int(rng.integers(0, 10))
+        onehot = np.zeros(10, dtype=np.int32)
+        onehot[label] = 1
+        g = int_softmax_grad(logits, onehot)
+        assert g.dtype == np.int32 or g.dtype == np.int64
+        assert np.all(g[np.arange(10) != label] >= 0)
+        assert g[label] <= 0
+        assert np.all(np.abs(g) <= 127)

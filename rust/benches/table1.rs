@@ -1,0 +1,34 @@
+//! Bench: regenerate the paper's **Table I** (best top-1 accuracy per
+//! method).  `cargo bench --bench table1 [-- --full]`.
+//!
+//! Quick mode runs a CI-scale protocol (8 epochs × 384 images × 3 seeds,
+//! tiny CNN only); `--full` runs the paper protocol (30 × 1024 × 10 + the
+//! VGG11 column).  Absolute numbers differ from the paper (synthetic data,
+//! simulated device); the *shape* — who wins, by roughly what factor — is
+//! the reproduction target (see EXPERIMENTS.md).
+
+use std::path::Path;
+
+use priot::report::experiments::{table1, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    let artifacts = Path::new("artifacts");
+    eprintln!("[table1] scale: {scale:?}");
+    let t0 = std::time::Instant::now();
+    match table1(artifacts, scale) {
+        Ok(md) => {
+            println!("\n## Table I — best top-1 accuracy during training\n");
+            println!("{md}");
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table1.md", &md).ok();
+            eprintln!("[table1] done in {:.1}s (results/table1.md)",
+                      t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[table1] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

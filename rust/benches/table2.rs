@@ -1,0 +1,37 @@
+//! Bench: regenerate the paper's **Table II** (training time per image and
+//! memory footprint on the Raspberry Pi Pico).
+//!
+//! Per the substitution rule (DESIGN.md §2) the Pico columns come from the
+//! RP2040 cycle/SRAM model; the measured host wall-clock per image is
+//! reported alongside (same engine code path the device would run).
+//! `cargo bench --bench table2 [-- --iters N]`.
+
+use std::path::Path;
+
+use priot::report::experiments::table2;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let iters = args
+        .iter()
+        .position(|a| a == "--iters")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    match table2(Path::new("artifacts"), "tinycnn", iters) {
+        Ok(md) => {
+            println!("\n## Table II — per-image training cost (tiny CNN)\n");
+            println!("{md}");
+            println!(
+                "paper reference: static 62.02 ms / 80,136 B · PRIOT 64.58 ms (+4.1%) /\n\
+                 138,044 B (+72%) · PRIOT-S(90) 52.77 ms (−12.8%) / 97,672 B"
+            );
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table2.md", &md).ok();
+        }
+        Err(e) => {
+            eprintln!("[table2] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Experiment configuration system.
+//!
+//! Offline image ⇒ no serde/toml crates; this module implements a small
+//! key–value config format (a TOML subset: `key = value` lines, `#`
+//! comments, bare `[section]` headers flattened into `section.key`) plus
+//! typed accessors and the [`ExperimentConfig`] the coordinator consumes.
+//! CLI flags override file values (see `cli`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed config: flat `section.key -> value` string map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unclosed section", ln + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}: expected bool, got {v}"),
+        }
+    }
+}
+
+/// Training method selector (the four columns of Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    StaticNiti,
+    DynamicNiti,
+    Priot,
+    PriotS,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static-niti" => Method::StaticNiti,
+            "dynamic-niti" => Method::DynamicNiti,
+            "priot" => Method::Priot,
+            "priot-s" => Method::PriotS,
+            other => bail!(
+                "unknown method {other} (want static-niti|dynamic-niti|priot|priot-s)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::StaticNiti => "static-niti",
+            Method::DynamicNiti => "dynamic-niti",
+            Method::Priot => "priot",
+            Method::PriotS => "priot-s",
+        }
+    }
+}
+
+/// PRIOT-S scored-edge selection strategy (§III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    Random,
+    WeightBased,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "random" => Selection::Random,
+            "weight" | "weight-based" => Selection::WeightBased,
+            other => bail!("unknown selection {other} (want random|weight)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selection::Random => "random",
+            Selection::WeightBased => "weight-based",
+        }
+    }
+}
+
+/// Everything one on-device training run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub method: Method,
+    pub dataset: String, // dataset stem, e.g. "digits" / "patterns"
+    pub angle: u32,      // rotation of the on-device distribution
+    pub epochs: usize,
+    pub seed: u32,
+    /// PRIOT pruning threshold θ (paper: -64 for PRIOT, 0 for PRIOT-S).
+    pub theta: i32,
+    /// PRIOT-S: fraction of edges *with* scores (1 - p).
+    pub frac_scored: f64,
+    pub selection: Selection,
+    /// Execution backend: "engine" (pure Rust) or "pjrt" (AOT artifacts).
+    pub backend: String,
+    /// Cap on train/test samples (0 = all).
+    pub limit: usize,
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let method = Method::parse(cfg.get_or("method", "priot"))?;
+        let theta_default = match method {
+            Method::Priot => -64,
+            _ => 0,
+        };
+        Ok(Self {
+            artifacts_dir: PathBuf::from(cfg.get_or("artifacts", "artifacts")),
+            model: cfg.get_or("model", "tinycnn").to_string(),
+            method,
+            dataset: cfg.get_or("dataset", "digits").to_string(),
+            angle: cfg.get_usize("angle", 30)? as u32,
+            epochs: cfg.get_usize("epochs", 30)?,
+            seed: cfg.get_usize("seed", 1)? as u32,
+            theta: cfg.get_i32("theta", theta_default)?,
+            frac_scored: cfg.get_f64("frac_scored", 0.1)?,
+            selection: Selection::parse(cfg.get_or("selection", "weight"))?,
+            backend: cfg.get_or("backend", "engine").to_string(),
+            limit: cfg.get_usize("limit", 0)?,
+        })
+    }
+
+    pub fn train_dataset_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join("data")
+            .join(format!("{}_train_a{}.bin", self.dataset, self.angle))
+    }
+
+    pub fn test_dataset_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join("data")
+            .join(format!("{}_test_a{}.bin", self.dataset, self.angle))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.artifacts_dir.join(format!("{}.weights.bin", self.model))
+    }
+
+    pub fn scales_path(&self) -> PathBuf {
+        self.artifacts_dir.join(format!("{}.scales.txt", self.model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_toml_subset() {
+        let text = r#"
+            # experiment preset
+            method = "priot"
+            epochs = 30
+            [run]
+            seed = 7
+        "#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.get("method"), Some("priot"));
+        assert_eq!(cfg.get_usize("epochs", 0).unwrap(), 30);
+        assert_eq!(cfg.get_usize("run.seed", 0).unwrap(), 7);
+        assert_eq!(cfg.get_usize("missing", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("no_equals_here").is_err());
+        let cfg = Config::parse("x = notanumber").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn experiment_defaults_and_paths() {
+        let mut cfg = Config::default();
+        cfg.set("method", "priot-s");
+        cfg.set("angle", "45");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.method, Method::PriotS);
+        assert_eq!(e.theta, 0, "PRIOT-S default theta");
+        assert!(e
+            .train_dataset_path()
+            .to_string_lossy()
+            .ends_with("data/digits_train_a45.bin"));
+
+        let mut cfg2 = Config::default();
+        cfg2.set("method", "priot");
+        let e2 = ExperimentConfig::from_config(&cfg2).unwrap();
+        assert_eq!(e2.theta, -64, "PRIOT default theta");
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::StaticNiti, Method::DynamicNiti, Method::Priot, Method::PriotS] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+}

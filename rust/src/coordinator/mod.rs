@@ -1,0 +1,294 @@
+//! The on-device-learning coordinator: drives training epochs over a
+//! [`StepBackend`], evaluates at epoch boundaries, tracks the best model,
+//! records the Fig. 2/Fig. 3 probes, and fans seed sweeps out over threads
+//! (Table I's mean ± std over 10 runs).
+//!
+//! This is the L3 "request path": after `make artifacts` everything here is
+//! pure Rust — Python never runs again.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::engine::StepOut;
+use crate::methods::{EngineBackend, StepBackend};
+use crate::metrics::{MeanStd, RunMetrics};
+use crate::serial::Dataset;
+
+/// Options controlling a single run.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub epochs: usize,
+    /// Cap on train/test samples (0 = use all).
+    pub limit: usize,
+    /// Record per-layer pruned fractions + mask-flip counts per epoch
+    /// (costs a scores scan per epoch).
+    pub track_pruning: bool,
+    /// Print a line per epoch.
+    pub verbose: bool,
+}
+
+impl RunOptions {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Self {
+            epochs: cfg.epochs,
+            limit: cfg.limit,
+            track_pruning: true,
+            verbose: false,
+        }
+    }
+}
+
+fn capped(n: usize, limit: usize) -> usize {
+    if limit == 0 {
+        n
+    } else {
+        n.min(limit)
+    }
+}
+
+/// Evaluate top-1 accuracy of `backend` over (a cap of) `ds`.
+pub fn evaluate(backend: &mut dyn StepBackend, ds: &Dataset, limit: usize)
+                -> f64 {
+    let n = capped(ds.n, limit);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut img = vec![0i32; ds.image_len()];
+    let mut correct = 0usize;
+    for i in 0..n {
+        ds.image_i32(i, &mut img);
+        if backend.predict(&img) == ds.label(i) {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+fn pruned_fractions(backend: &dyn StepBackend) -> Vec<f64> {
+    match (backend.scores(), backend.masks(), backend.theta()) {
+        (Some(scores), Some(masks), Some(theta)) => scores
+            .iter()
+            .zip(masks.iter())
+            .map(|(s, m)| {
+                let pruned = s
+                    .iter()
+                    .zip(m.iter())
+                    .filter(|&(&sv, &mv)| mv != 0 && sv < theta)
+                    .count();
+                pruned as f64 / s.len().max(1) as f64
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn mask_snapshot(backend: &dyn StepBackend) -> Vec<bool> {
+    match (backend.scores(), backend.masks(), backend.theta()) {
+        (Some(scores), Some(masks), Some(theta)) => scores
+            .iter()
+            .zip(masks.iter())
+            .flat_map(|(s, m)| {
+                s.iter()
+                    .zip(m.iter())
+                    .map(move |(&sv, &mv)| mv != 0 && sv < theta)
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Run one on-device training session: epoch loop over the train set with
+/// an evaluation at every epoch boundary (epoch 0 = the pre-trained
+/// backbone — the paper's curves and "best during training" include it).
+pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
+                    test: &Dataset, opts: &RunOptions) -> RunMetrics {
+    let mut m = RunMetrics::default();
+    let n_train = capped(train.n, opts.limit);
+    let mut img = vec![0i32; train.image_len()];
+
+    m.accuracy.push(evaluate(backend, test, opts.limit));
+    let mut prev_mask = if opts.track_pruning {
+        mask_snapshot(backend)
+    } else {
+        Vec::new()
+    };
+    if opts.verbose {
+        eprintln!("[{}] epoch 0: test acc {:.4}", backend.name(), m.accuracy[0]);
+    }
+
+    for epoch in 0..opts.epochs {
+        let t0 = std::time::Instant::now();
+        let mut overflow = 0u64;
+        let mut train_correct = 0usize;
+        for i in 0..n_train {
+            train.image_i32(i, &mut img);
+            let label = train.label(i);
+            let StepOut { logits, overflow: ovf } = backend.train_step(&img, label);
+            overflow += ovf as u64;
+            if crate::engine::argmax(&logits) == label {
+                train_correct += 1;
+            }
+        }
+        m.epoch_secs.push(t0.elapsed().as_secs_f64());
+        m.overflow.push(overflow);
+        m.train_accuracy.push(train_correct as f64 / n_train.max(1) as f64);
+        m.accuracy.push(evaluate(backend, test, opts.limit));
+        if opts.track_pruning {
+            let fr = pruned_fractions(backend);
+            if !fr.is_empty() {
+                m.pruned_frac.push(fr);
+            }
+            let cur = mask_snapshot(backend);
+            if !cur.is_empty() && cur.len() == prev_mask.len() {
+                let flips = cur
+                    .iter()
+                    .zip(prev_mask.iter())
+                    .filter(|&(a, b)| a != b)
+                    .count() as u64;
+                m.mask_flips.push(flips);
+                prev_mask = cur;
+            } else if !cur.is_empty() {
+                prev_mask = cur;
+            }
+        }
+        if opts.verbose {
+            eprintln!(
+                "[{}] epoch {}: test acc {:.4} train acc {:.4} overflow {}",
+                backend.name(),
+                epoch + 1,
+                m.accuracy.last().unwrap(),
+                m.train_accuracy.last().unwrap(),
+                overflow
+            );
+        }
+    }
+    m
+}
+
+/// Aggregate of a seed sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub best: MeanStd,
+    pub runs: Vec<RunMetrics>,
+}
+
+/// Run `seeds.len()` independent runs (one per seed) across worker threads
+/// and aggregate the Table I statistic.  Each run builds its own backend
+/// from `cfg` (seed substituted), so runs are fully isolated.
+pub fn sweep_seeds(cfg: &ExperimentConfig, train: &Dataset, test: &Dataset,
+                   opts: &RunOptions, seeds: &[u32]) -> Result<SweepResult> {
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(seeds.len().max(1));
+    let results: Vec<RunMetrics> = std::thread::scope(|s| {
+        let chunks: Vec<Vec<u32>> = seeds
+            .chunks(seeds.len().div_ceil(n_threads))
+            .map(|c| c.to_vec())
+            .collect();
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                s.spawn(move || -> Result<Vec<RunMetrics>> {
+                    let mut out = Vec::new();
+                    for seed in chunk {
+                        let mut c = cfg.clone();
+                        c.seed = seed;
+                        let mut backend = EngineBackend::from_config(&c)?;
+                        out.push(run_training(&mut backend, train, test, opts));
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect::<Result<Vec<_>>>()
+            .map(|v| v.into_iter().flatten().collect())
+    })?;
+    let bests: Vec<f64> = results.iter().map(|r| r.best_accuracy()).collect();
+    Ok(SweepResult { best: MeanStd::of(&bests), runs: results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StepOut;
+
+    /// A fake backend: predicts (i mod 10) wrongly until "trained" for k
+    /// steps, then always matches a fixed oracle function.
+    struct FakeBackend {
+        steps: usize,
+        threshold: usize,
+    }
+
+    impl StepBackend for FakeBackend {
+        fn train_step(&mut self, _img: &[i32], label: usize) -> StepOut {
+            self.steps += 1;
+            let mut logits = vec![0i32; 10];
+            logits[label] = 10;
+            StepOut { logits, overflow: 1 }
+        }
+        fn predict(&mut self, img: &[i32]) -> usize {
+            if self.steps >= self.threshold {
+                (img[0] as usize) % 10 // the "true" labelling
+            } else {
+                9 - (img[0] as usize) % 10
+            }
+        }
+        fn scores(&self) -> Option<&[Vec<i32>]> {
+            None
+        }
+        fn masks(&self) -> Option<&[Vec<i32>]> {
+            None
+        }
+        fn theta(&self) -> Option<i32> {
+            None
+        }
+        fn name(&self) -> &str {
+            "fake"
+        }
+    }
+
+    fn fake_dataset(n: usize) -> Dataset {
+        // image[0] encodes the label (×2 so the >>1 mapping recovers it).
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let label = (i % 10) as u8;
+            let mut img = vec![0u8; 4];
+            img[0] = label * 2;
+            images.extend(img);
+            labels.push(label);
+        }
+        Dataset { n, c: 1, h: 2, w: 2, images, labels }
+    }
+
+    #[test]
+    fn run_training_records_epochs_and_improvement() {
+        let train = fake_dataset(20);
+        let test = fake_dataset(10);
+        let mut b = FakeBackend { steps: 0, threshold: 20 };
+        let opts = RunOptions { epochs: 2, limit: 0, track_pruning: true, verbose: false };
+        let m = run_training(&mut b, &train, &test, &opts);
+        assert_eq!(m.accuracy.len(), 3, "epoch0 + 2 epochs");
+        assert!(m.accuracy[0] < 0.2, "untrained fake is wrong");
+        assert_eq!(m.accuracy[2], 1.0, "after 20 steps the fake is perfect");
+        assert_eq!(m.overflow, vec![20, 20]);
+        assert_eq!(m.best_accuracy(), 1.0);
+        assert_eq!(m.train_accuracy.len(), 2);
+        assert_eq!(m.train_accuracy[0], 1.0, "train logits always 'correct'");
+    }
+
+    #[test]
+    fn limit_caps_samples() {
+        let train = fake_dataset(50);
+        let test = fake_dataset(50);
+        let mut b = FakeBackend { steps: 0, threshold: 5 };
+        let opts = RunOptions { epochs: 1, limit: 5, track_pruning: false, verbose: false };
+        let m = run_training(&mut b, &train, &test, &opts);
+        assert_eq!(b.steps, 5);
+        assert_eq!(m.accuracy.len(), 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! Dataset access layer: resolves experiment configs to the artifact
+//! datasets and provides the streaming view the coordinator consumes.
+//!
+//! Dataset *generation* is build-time Python (`python/compile/dataset.py`,
+//! the RotDigits / RotPatterns procedural generators standing in for
+//! rotated MNIST / CIFAR-10 — DESIGN.md §2); this module only loads the
+//! exported binary files.
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::serial::{load_dataset, Dataset};
+
+/// The train/test pair for one on-device adaptation session.
+pub struct DataPair {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+pub fn load_pair(cfg: &ExperimentConfig) -> Result<DataPair> {
+    let train = load_dataset(&cfg.train_dataset_path()).with_context(|| {
+        format!("loading train set (did you run `make artifacts`?)")
+    })?;
+    let test = load_dataset(&cfg.test_dataset_path())?;
+    Ok(DataPair { train, test })
+}
+
+/// Load a dataset by stem name, e.g. `digits_test_a30`.
+pub fn load_named(artifacts: &std::path::Path, stem: &str) -> Result<Dataset> {
+    load_dataset(&artifacts.join("data").join(format!("{stem}.bin")))
+}
+
+/// Sanity checks a dataset against a model spec.
+pub fn validate(ds: &Dataset, spec: &crate::spec::NetSpec) -> Result<()> {
+    let (c, h, w) = spec.input_chw;
+    if (ds.c, ds.h, ds.w) != (c, h, w) {
+        anyhow::bail!(
+            "dataset geometry ({},{},{}) does not match model {} ({c},{h},{w})",
+            ds.c, ds.h, ds.w, spec.name
+        );
+    }
+    let classes = spec.num_classes();
+    if let Some(&bad) = ds.labels.iter().find(|&&l| (l as usize) >= classes) {
+        anyhow::bail!("label {bad} out of range for {classes} classes");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::NetSpec;
+
+    #[test]
+    fn validate_rejects_geometry_mismatch() {
+        let ds = Dataset {
+            n: 1,
+            c: 3,
+            h: 32,
+            w: 32,
+            images: vec![0; 3 * 32 * 32],
+            labels: vec![0],
+        };
+        assert!(validate(&ds, &NetSpec::tinycnn()).is_err());
+        assert!(validate(&ds, &NetSpec::vgg11(0.25)).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_labels() {
+        let ds = Dataset {
+            n: 1,
+            c: 1,
+            h: 28,
+            w: 28,
+            images: vec![0; 28 * 28],
+            labels: vec![10],
+        };
+        assert!(validate(&ds, &NetSpec::tinycnn()).is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! # PRIOT — pruning-based integer-only transfer learning
+//!
+//! A three-layer reproduction of *PRIOT: Pruning-Based Integer-Only Transfer
+//! Learning for Embedded Systems* (IEEE ESL 2025):
+//!
+//! * **Layer 1/2** (build-time Python): Pallas integer-GEMM kernels composed
+//!   into JAX training-step graphs, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3** (this crate): the on-device-learning coordinator, the pure
+//!   Rust integer training engine ("picoengine" — the device
+//!   implementation), the Raspberry Pi Pico cost/memory simulator, and the
+//!   experiment harness that regenerates every table and figure in the
+//!   paper.
+//!
+//! Two interchangeable step backends implement [`methods::StepBackend`]:
+//! [`engine`] (pure Rust) and [`runtime`] (PJRT execution of the AOT
+//! artifacts).  Integration tests assert they agree **bit-for-bit** — the
+//! entire stack is deterministic integer arithmetic.
+//!
+//! Entry points: the `priot` binary (`rust/src/main.rs`), the examples in
+//! `examples/`, and the benches in `rust/benches/` (one per paper
+//! table/figure).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod methods;
+pub mod metrics;
+pub mod pico;
+pub mod prng;
+pub mod ptest;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serial;
+pub mod spec;
+pub mod tensor;
+
+/// Symmetric int8 magnitude bound: values live in `[-127, 127]`
+/// (`-128` is never produced by any requantization).
+pub const INT8_MAX: i32 = 127;

@@ -1,0 +1,310 @@
+//! `priot` — the on-device-learning CLI.
+//!
+//! ```text
+//! priot train   --method priot --angle 30 --epochs 30 [--backend pjrt]
+//! priot eval    --model tinycnn --dataset digits --angle 30
+//! priot compare [--epochs 8] [--limit 384]        all methods, one seed
+//! priot table1  [--full]                          Table I
+//! priot table2  [--iters 100]                     Table II
+//! priot fig2    [--epochs 12]                     Fig. 2 CSV
+//! priot fig3    [--full]                          Fig. 3 CSV
+//! priot ablation                                  design-choice sweeps
+//! priot pico-report [--model tinycnn]             memory/cycle breakdown
+//! priot selftest                                  engine ⇄ PJRT parity
+//! ```
+//!
+//! Common flags: `--artifacts DIR` (default `artifacts`), `--config FILE`,
+//! any `ExperimentConfig` key as `--key value`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use priot::cli::Args;
+use priot::config::{ExperimentConfig, Method, Selection};
+use priot::coordinator::{run_training, RunOptions};
+use priot::data;
+use priot::methods::EngineBackend;
+use priot::pico;
+use priot::quant::Scales;
+use priot::report::experiments::{self, Scale};
+use priot::report::sparkline;
+use priot::spec::NetSpec;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn scale_from(args: &Args) -> Result<Scale> {
+    let mut s = if args.has_flag("full") { Scale::full() } else { Scale::quick() };
+    if let Some(e) = args.option("epochs") {
+        s.epochs = e.parse()?;
+    }
+    if let Some(l) = args.option("limit") {
+        s.limit = l.parse()?;
+    }
+    if let Some(n) = args.option("seeds") {
+        s.seeds = n.parse()?;
+    }
+    if args.has_flag("with-vgg") {
+        s.include_vgg = true;
+    }
+    if args.has_flag("no-vgg") {
+        s.include_vgg = false;
+    }
+    Ok(s)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.option("artifacts").unwrap_or("artifacts"))
+}
+
+fn write_or_print(args: &Args, default_name: &str, content: &str) -> Result<()> {
+    match args.option("out") {
+        Some(path) => {
+            std::fs::write(path, content)?;
+            eprintln!("wrote {path}");
+        }
+        None => {
+            let dir = Path::new("results");
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(default_name);
+            std::fs::write(&path, content)?;
+            println!("{content}");
+            eprintln!("(also wrote {})", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "compare" => cmd_compare(&args),
+        "table1" => {
+            let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "table1.md", &md)
+        }
+        "table2" => {
+            let iters = args.option("iters").unwrap_or("100").parse()?;
+            let model = args.option("model").unwrap_or("tinycnn");
+            let md = experiments::table2(&artifacts_dir(&args), model, iters)?;
+            write_or_print(&args, "table2.md", &md)
+        }
+        "fig2" => {
+            let epochs = args.option("epochs").unwrap_or("12").parse()?;
+            let limit = args.option("limit").unwrap_or("512").parse()?;
+            let csv = experiments::fig2(&artifacts_dir(&args), epochs, limit)?;
+            write_or_print(&args, "fig2.csv", &csv)
+        }
+        "fig3" => {
+            let (csv, _) = experiments::fig3(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "fig3.csv", &csv)
+        }
+        "ablation" => {
+            let csv = experiments::ablation(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "ablation.csv", &csv)
+        }
+        "pico-report" => cmd_pico_report(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "selftest" => {
+            let report = experiments::selftest(&artifacts_dir(&args))?;
+            println!("{report}");
+            Ok(())
+        }
+        "" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (run `priot` for help)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let spec = NetSpec::by_name(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
+    data::validate(&pair.train, &spec)?;
+    let mut opts = RunOptions::from_config(&cfg);
+    opts.verbose = true;
+    let metrics = match cfg.backend.as_str() {
+        "engine" => {
+            let mut b = EngineBackend::from_config(&cfg)?;
+            if let Some(resume) = args.option("resume") {
+                b.load_state(Path::new(resume))?;
+                eprintln!("resumed training state from {resume}");
+            }
+            let m = run_training(&mut b, &pair.train, &pair.test, &opts);
+            if let Some(save) = args.option("checkpoint") {
+                b.save_state(Path::new(save))?;
+                eprintln!("saved training state to {save}");
+            }
+            m
+        }
+        "pjrt" => {
+            let rt = priot::runtime::Runtime::new(&cfg.artifacts_dir)?;
+            eprintln!("PJRT platform: {}", rt.platform());
+            let mut b = priot::runtime::PjrtBackend::from_config(&cfg, &rt)?;
+            run_training(&mut b, &pair.train, &pair.test, &opts)
+        }
+        other => bail!("unknown backend {other} (engine|pjrt)"),
+    };
+    println!("method:   {} ({} @ {}°)", cfg.method.name(), cfg.dataset, cfg.angle);
+    println!("backend:  {}", cfg.backend);
+    println!("history:  {}", sparkline(&metrics.accuracy));
+    println!(
+        "accuracy: before {:.2}%  best {:.2}%  final {:.2}%",
+        metrics.accuracy[0] * 100.0,
+        metrics.best_accuracy() * 100.0,
+        metrics.final_accuracy() * 100.0
+    );
+    if !metrics.pruned_frac.is_empty() {
+        let last = metrics.pruned_frac.last().unwrap();
+        let fr: Vec<String> = last.iter().map(|f| format!("{:.1}%", f * 100.0)).collect();
+        println!("pruned:   [{}]", fr.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let mut b = EngineBackend::from_config(&cfg)?;
+    let acc = priot::coordinator::evaluate(&mut b, &pair.test, cfg.limit);
+    println!(
+        "{} on {}_test_a{}: top-1 {:.2}% (n={})",
+        cfg.model,
+        cfg.dataset,
+        cfg.angle,
+        acc * 100.0,
+        if cfg.limit == 0 { pair.test.n } else { pair.test.n.min(cfg.limit) }
+    );
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let artifacts = artifacts_dir(args);
+    println!("| Method | Best top-1 | Final | History |");
+    println!("|---|---|---|---|");
+    for (label, method, frac, sel) in [
+        ("Static-Scale NITI", Method::StaticNiti, 0.0, Selection::Random),
+        ("Dynamic-Scale NITI", Method::DynamicNiti, 0.0, Selection::Random),
+        ("PRIOT", Method::Priot, 1.0, Selection::Random),
+        ("PRIOT-S (p=90%, weight)", Method::PriotS, 0.1, Selection::WeightBased),
+        ("PRIOT-S (p=80%, weight)", Method::PriotS, 0.2, Selection::WeightBased),
+    ] {
+        let mut c = priot::config::Config::default();
+        c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
+        c.set("method", method.name());
+        let mut cfg = ExperimentConfig::from_config(&c)?;
+        cfg.epochs = scale.epochs;
+        cfg.limit = scale.limit;
+        cfg.frac_scored = frac;
+        cfg.selection = sel;
+        let pair = data::load_pair(&cfg)?;
+        let mut b = EngineBackend::from_config(&cfg)?;
+        let opts = RunOptions::from_config(&cfg);
+        let m = run_training(&mut b, &pair.train, &pair.test, &opts);
+        println!(
+            "| {} | {:.2}% | {:.2}% | {} |",
+            label,
+            m.best_accuracy() * 100.0,
+            m.final_accuracy() * 100.0,
+            sparkline(&m.accuracy)
+        );
+    }
+    Ok(())
+}
+
+/// On-device recalibration: re-derive the static scale table from local
+/// data using the engine's dynamic-shift calibrator (paper §IV-A run on the
+/// device side — useful when the deployment distribution drifts so far that
+/// the shipped scales saturate).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let n: usize = args.option("samples").unwrap_or("64").parse()?;
+    let mut b = EngineBackend::from_config(&cfg)?;
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n.min(pair.train.n) {
+        let mut img = vec![0i32; pair.train.image_len()];
+        pair.train.image_i32(i, &mut img);
+        images.push(img);
+        labels.push(pair.train.label(i));
+    }
+    let scales = b.engine.calibrate(&images, &labels);
+    let text = scales.to_text();
+    match args.option("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_pico_report(args: &Args) -> Result<()> {
+    let model = args.option("model").unwrap_or("tinycnn");
+    let artifacts = artifacts_dir(args);
+    let spec = NetSpec::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let scales = Scales::load(&artifacts.join(format!("{model}.scales.txt")))
+        .unwrap_or_else(|_| Scales::default_for(spec.layers.len()));
+    println!("# RP2040 cost model: {model}");
+    println!("params: {}  fwd MACs: {}", spec.num_params(), spec.fwd_macs());
+    println!();
+    println!("| Method | Pico time [ms] | fwd | bwd | upd | mask | dyn | Memory [B] | Fits 264KB |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for (label, p) in [
+        ("static-niti", pico::MethodParams::new(Method::StaticNiti)),
+        ("dynamic-niti", pico::MethodParams::new(Method::DynamicNiti)),
+        ("priot", pico::MethodParams::new(Method::Priot)),
+        ("priot-s p=90%", pico::MethodParams::priot_s(0.1, Selection::Random)),
+        ("priot-s p=80%", pico::MethodParams::priot_s(0.2, Selection::Random)),
+    ] {
+        let c = pico::step_cost(&spec, &scales, p);
+        let m = pico::memory_footprint(&spec, p);
+        println!(
+            "| {} | {:.2} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {} | {} |",
+            label,
+            c.total_ms(),
+            c.fwd_cycles / pico::CLOCK_HZ * 1e3,
+            c.bwd_cycles / pico::CLOCK_HZ * 1e3,
+            c.update_cycles / pico::CLOCK_HZ * 1e3,
+            c.mask_cycles / pico::CLOCK_HZ * 1e3,
+            c.dynamic_cycles / pico::CLOCK_HZ * 1e3,
+            m.total(),
+            if pico::fits_pico(&m) { "yes" } else { "NO" }
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "priot — pruning-based integer-only transfer learning (PRIOT, IEEE ESL 2025)\n\n\
+         subcommands:\n\
+         \x20 train        run one on-device training session\n\
+         \x20 eval         evaluate the backbone on a dataset\n\
+         \x20 compare      all methods side-by-side (one seed)\n\
+         \x20 table1       regenerate Table I  (accuracy per method)\n\
+         \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
+         \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\
+         \x20 fig3         regenerate Fig. 3   (accuracy history)\n\
+         \x20 ablation     threshold / rounding-mode sweeps\n\
+         \x20 pico-report  RP2040 cycle + SRAM breakdown\n\
+         \x20 calibrate    re-derive static scales from local data\n\
+         \x20 selftest     engine ⇄ PJRT bit-parity check\n\n\
+         common flags: --artifacts DIR  --config FILE  --full  --epochs N\n\
+         \x20             --limit N  --seeds N  --method M  --angle A  --out FILE"
+    );
+}

@@ -1,0 +1,370 @@
+//! Training-method layer: the four methods of Table I as engine-agnostic
+//! state machines, plus the [`StepBackend`] trait that lets the coordinator
+//! drive either the pure-Rust engine or the AOT/PJRT runtime
+//! interchangeably (their bit-equality is asserted in `rust/tests/`).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExperimentConfig, Method, Selection};
+use crate::engine::{Engine, PruneState, StepOut};
+use crate::prng::{init_scores, select_mask_random, XorShift32};
+use crate::spec::NetSpec;
+
+/// One training backend: consumes (image, label) pairs, produces logits and
+/// the overflow probe; owns all mutable training state (weights or scores).
+pub trait StepBackend {
+    /// One on-device training step (batch 1).
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut;
+    /// Inference for evaluation.
+    fn predict(&mut self, img: &[i32]) -> usize;
+    /// Current scores, if the method has them (analysis/checkpointing).
+    fn scores(&self) -> Option<&[Vec<i32>]>;
+    /// PRIOT-S existence masks, if any.
+    fn masks(&self) -> Option<&[Vec<i32>]>;
+    /// Pruning threshold θ, if the method prunes.
+    fn theta(&self) -> Option<i32>;
+    /// Backend label for logs.
+    fn name(&self) -> &str;
+}
+
+/// Per-method mutable state (scores live here; NITI's weights live in the
+/// engine itself).
+pub enum MethodState {
+    Niti { dynamic: bool },
+    Priot {
+        scores: Vec<Vec<i32>>,
+        masks: Vec<Vec<i32>>,
+        theta: i32,
+        sr: bool,
+        /// PRIOT-S fast path: skip gradient work for unscored edges.
+        sparse: bool,
+    },
+}
+
+impl MethodState {
+    /// Initialize method state for `cfg` against the given spec/weights.
+    /// Scores are drawn from the shared xorshift stream seeded by
+    /// `cfg.seed`; PRIOT-S masks by `cfg.selection`.
+    pub fn build(cfg: &ExperimentConfig, spec: &NetSpec,
+                 weights: &[crate::tensor::Mat]) -> Result<Self> {
+        Ok(match cfg.method {
+            Method::StaticNiti => MethodState::Niti { dynamic: false },
+            Method::DynamicNiti => MethodState::Niti { dynamic: true },
+            Method::Priot => {
+                let mut rng = XorShift32::new(cfg.seed);
+                let scores = spec
+                    .layers
+                    .iter()
+                    .map(|l| widen(init_scores(&mut rng, l.num_params())))
+                    .collect();
+                let masks =
+                    spec.layers.iter().map(|l| vec![1i32; l.num_params()]).collect();
+                MethodState::Priot { scores, masks, theta: cfg.theta, sr: false,
+                                     sparse: false }
+            }
+            Method::PriotS => {
+                if !(0.0..=1.0).contains(&cfg.frac_scored) {
+                    bail!("frac_scored must be in [0,1], got {}", cfg.frac_scored);
+                }
+                let mut rng = XorShift32::new(cfg.seed);
+                let scores: Vec<Vec<i32>> = spec
+                    .layers
+                    .iter()
+                    .map(|l| widen(init_scores(&mut rng, l.num_params())))
+                    .collect();
+                let masks = match cfg.selection {
+                    Selection::Random => spec
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            select_mask_random(&mut rng, l.num_params(),
+                                               cfg.frac_scored)
+                                .into_iter()
+                                .map(i32::from)
+                                .collect()
+                        })
+                        .collect(),
+                    Selection::WeightBased => select_mask_weight(
+                        weights, cfg.frac_scored),
+                };
+                MethodState::Priot { scores, masks, theta: cfg.theta, sr: false,
+                                     sparse: true }
+            }
+        })
+    }
+}
+
+fn widen(v: Vec<i8>) -> Vec<i32> {
+    v.into_iter().map(|x| x as i32).collect()
+}
+
+/// PRIOT-S weight-based selection: score the largest-|W| edges per layer.
+/// Deterministic, stable ordering by (-|w|, flat index) — bit-compatible
+/// with `intnet.select_mask_weight`.
+pub fn select_mask_weight(weights: &[crate::tensor::Mat], frac_scored: f64)
+                          -> Vec<Vec<i32>> {
+    weights
+        .iter()
+        .map(|w| {
+            let n = w.data.len();
+            let k = (frac_scored * n as f64).round() as usize;
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&i| (-(w.data[i].abs() as i64), i));
+            let mut m = vec![0i32; n];
+            for &i in order.iter().take(k) {
+                m[i] = 1;
+            }
+            m
+        })
+        .collect()
+}
+
+/// The pure-Rust backend: engine + method state + step counter.
+pub struct EngineBackend {
+    pub engine: Engine,
+    pub state: MethodState,
+    pub step: u32,
+    label: String,
+}
+
+impl EngineBackend {
+    pub fn new(engine: Engine, state: MethodState) -> Self {
+        let label = match &state {
+            MethodState::Niti { dynamic: true } => "engine/dynamic-niti",
+            MethodState::Niti { dynamic: false } => "engine/static-niti",
+            MethodState::Priot { .. } => "engine/priot",
+        };
+        Self { engine, state, step: 0, label: label.to_string() }
+    }
+
+    /// Build from an experiment config (loads weights/scales from
+    /// artifacts).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let spec = NetSpec::by_name(&cfg.model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
+        let tensors = crate::serial::load_weights(&cfg.weights_path())?;
+        let scales = crate::quant::Scales::load(&cfg.scales_path())?;
+        let engine = Engine::from_tensors(spec.clone(), &tensors, scales)?;
+        let state = MethodState::build(cfg, &spec, &engine.weights)?;
+        Ok(Self::new(engine, state))
+    }
+}
+
+impl EngineBackend {
+    /// Checkpoint the trained state: PRIOT scores (plus masks so a resumed
+    /// PRIOT-S run prunes identically), or NITI's updated weights.
+    pub fn save_state(&self, path: &std::path::Path) -> Result<()> {
+        use crate::serial::{save_weights, TensorI8};
+        let narrow = |v: &Vec<i32>, shape: (usize, usize)| TensorI8 {
+            dims: vec![shape.0, shape.1],
+            data: v.iter().map(|&x| x as i8).collect(),
+        };
+        let shapes: Vec<(usize, usize)> =
+            self.engine.spec.layers.iter().map(|l| l.weight_shape()).collect();
+        let tensors: Vec<TensorI8> = match &self.state {
+            MethodState::Priot { scores, masks, .. } => scores
+                .iter()
+                .chain(masks.iter())
+                .zip(shapes.iter().chain(shapes.iter()))
+                .map(|(v, &s)| narrow(v, s))
+                .collect(),
+            MethodState::Niti { .. } => self
+                .engine
+                .weights
+                .iter()
+                .zip(shapes.iter())
+                .map(|(m, &s)| narrow(&m.data, s))
+                .collect(),
+        };
+        save_weights(path, &tensors)
+    }
+
+    /// Restore a checkpoint produced by [`Self::save_state`] (same method
+    /// and model).
+    pub fn load_state(&mut self, path: &std::path::Path) -> Result<()> {
+        let tensors = crate::serial::load_weights(path)?;
+        let n = self.engine.spec.layers.len();
+        match &mut self.state {
+            MethodState::Priot { scores, masks, .. } => {
+                if tensors.len() != 2 * n {
+                    bail!("checkpoint has {} tensors, want {} (scores+masks)",
+                          tensors.len(), 2 * n);
+                }
+                for (li, s) in scores.iter_mut().enumerate() {
+                    let t = tensors[li].to_i32();
+                    if t.len() != s.len() {
+                        bail!("checkpoint layer {li} size mismatch");
+                    }
+                    s.copy_from_slice(&t);
+                }
+                for (li, m) in masks.iter_mut().enumerate() {
+                    let t = tensors[n + li].to_i32();
+                    if t.len() != m.len() {
+                        bail!("checkpoint mask {li} size mismatch");
+                    }
+                    m.copy_from_slice(&t);
+                }
+            }
+            MethodState::Niti { .. } => {
+                if tensors.len() != n {
+                    bail!("checkpoint has {} tensors, want {n}", tensors.len());
+                }
+                for (li, w) in self.engine.weights.iter_mut().enumerate() {
+                    let t = tensors[li].to_i32();
+                    if t.len() != w.data.len() {
+                        bail!("checkpoint layer {li} size mismatch");
+                    }
+                    w.data.copy_from_slice(&t);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StepBackend for EngineBackend {
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        let out = match &mut self.state {
+            MethodState::Niti { dynamic } => {
+                self.engine.step_niti(img, label, *dynamic, self.step)
+            }
+            MethodState::Priot { scores, masks, theta, sr, sparse } => self
+                .engine
+                .step_priot(img, label, scores, masks, *theta, self.step, *sr,
+                            *sparse),
+        };
+        self.step += 1;
+        out
+    }
+
+    fn predict(&mut self, img: &[i32]) -> usize {
+        match &self.state {
+            MethodState::Niti { .. } => self.engine.predict(img, None),
+            MethodState::Priot { scores, masks, theta, .. } => {
+                let prune = PruneState { scores, masks, theta: *theta };
+                self.engine.predict(img, Some(&prune))
+            }
+        }
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        match &self.state {
+            MethodState::Priot { scores, .. } => Some(scores),
+            _ => None,
+        }
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        match &self.state {
+            MethodState::Priot { masks, .. } => Some(masks),
+            _ => None,
+        }
+    }
+
+    fn theta(&self) -> Option<i32> {
+        match &self.state {
+            MethodState::Priot { theta, .. } => Some(*theta),
+            _ => None,
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::prng::XorShift64;
+    use crate::quant::Scales;
+    use crate::tensor::Mat;
+
+    fn test_engine(seed: u64) -> (NetSpec, Engine) {
+        let spec = NetSpec::tinycnn();
+        let mut rng = XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+            })
+            .collect();
+        let e = Engine::new(spec.clone(), weights,
+                            Scales::default_for(spec.layers.len())).unwrap();
+        (spec, e)
+    }
+
+    fn cfg_for(method: &str, selection: &str) -> ExperimentConfig {
+        let mut c = Config::default();
+        c.set("method", method);
+        c.set("selection", selection);
+        c.set("frac_scored", "0.1");
+        ExperimentConfig::from_config(&c).unwrap()
+    }
+
+    #[test]
+    fn weight_based_selection_picks_largest() {
+        let w = Mat::from_vec(2, 3, vec![5, -100, 3, 50, -2, 1]);
+        let m = select_mask_weight(&[w], 0.5);
+        // 3 of 6 edges: |100|, |50|, |5| → indices 1, 3, 0
+        assert_eq!(m[0], vec![1, 1, 0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn weight_based_selection_tie_break_by_index() {
+        let w = Mat::from_vec(1, 4, vec![7, -7, 7, 7]);
+        let m = select_mask_weight(&[w], 0.5);
+        assert_eq!(m[0], vec![1, 1, 0, 0], "ties resolve to earliest index");
+    }
+
+    #[test]
+    fn method_state_priot_s_mask_fraction() {
+        let (spec, e) = test_engine(31);
+        let cfg = cfg_for("priot-s", "random");
+        let st = MethodState::build(&cfg, &spec, &e.weights).unwrap();
+        if let MethodState::Priot { masks, theta, .. } = st {
+            assert_eq!(theta, 0);
+            let total: usize = masks.iter().map(|m| m.len()).sum();
+            let ones: i64 = masks.iter().flat_map(|m| m.iter()).map(|&v| v as i64).sum();
+            let frac = ones as f64 / total as f64;
+            assert!((0.07..0.13).contains(&frac), "frac {frac}");
+        } else {
+            panic!("wrong state");
+        }
+    }
+
+    #[test]
+    fn seeds_give_different_scores_same_seed_same_scores() {
+        let (spec, e) = test_engine(32);
+        let mut c1 = cfg_for("priot", "random");
+        c1.seed = 7;
+        let mut c2 = c1.clone();
+        c2.seed = 8;
+        let s1 = MethodState::build(&c1, &spec, &e.weights).unwrap();
+        let s1b = MethodState::build(&c1, &spec, &e.weights).unwrap();
+        let s2 = MethodState::build(&c2, &spec, &e.weights).unwrap();
+        let get = |s: &MethodState| match s {
+            MethodState::Priot { scores, .. } => scores[0].clone(),
+            _ => panic!(),
+        };
+        assert_eq!(get(&s1), get(&s1b));
+        assert_ne!(get(&s1), get(&s2));
+    }
+
+    #[test]
+    fn backend_step_counter_advances() {
+        let (spec, e) = test_engine(33);
+        let cfg = cfg_for("priot", "random");
+        let st = MethodState::build(&cfg, &spec, &e.weights).unwrap();
+        let mut b = EngineBackend::new(e, st);
+        let img = vec![1i32; b.engine.spec.input_len()];
+        b.train_step(&img, 3);
+        b.train_step(&img, 4);
+        assert_eq!(b.step, 2);
+        assert!(b.scores().is_some());
+        assert_eq!(b.theta(), Some(-64));
+    }
+}

@@ -1,0 +1,145 @@
+//! Run metrics: accuracy/overflow/pruning traces, aggregation over seeds,
+//! and simple timing helpers.  `report` turns these into the paper's
+//! tables/figures.
+
+use std::time::Instant;
+
+/// Everything one training run records (epoch granularity, epoch 0 = the
+/// pre-training state — the paper's Fig. 3 curves start at the backbone
+/// accuracy, which is also how static-NITI's "best" lands at ~baseline).
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Top-1 test accuracy at each epoch boundary (index 0 = before
+    /// training).
+    pub accuracy: Vec<f64>,
+    /// Training-set top-1 per epoch (index aligned with accuracy[1..]).
+    pub train_accuracy: Vec<f64>,
+    /// Sum of final-layer overflow counts per epoch (Fig. 2 probe).
+    pub overflow: Vec<u64>,
+    /// Per-epoch fraction of pruned edges per layer (PRIOT only).
+    pub pruned_frac: Vec<Vec<f64>>,
+    /// # of edges whose pruned/unpruned state flipped between consecutive
+    /// epochs (the §IV-B oscillation analysis).
+    pub mask_flips: Vec<u64>,
+    /// Wall-clock seconds per training epoch.
+    pub epoch_secs: Vec<f64>,
+}
+
+impl RunMetrics {
+    /// Best top-1 test accuracy over the run (the Table I metric:
+    /// "best top-1 accuracy during training" — the device checkpoints the
+    /// best-training-accuracy model; we report the matching test score).
+    pub fn best_accuracy(&self) -> f64 {
+        self.accuracy.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        *self.accuracy.last().unwrap_or(&0.0)
+    }
+}
+
+/// Mean and (population) standard deviation over seed repetitions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Self { mean, std: var.sqrt(), n }
+    }
+
+    /// Format as the paper does: `88.94 (±1.02)` (percent points).
+    pub fn fmt_pct(&self) -> String {
+        if self.n <= 1 {
+            format!("{:.2}", self.mean * 100.0)
+        } else {
+            format!("{:.2} (±{:.2})", self.mean * 100.0, self.std * 100.0)
+        }
+    }
+}
+
+/// Simple stopwatch with mean/std over laps (Table II timing).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<f64>,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn lap(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.laps.push(t.elapsed().as_secs_f64());
+        }
+    }
+
+    pub fn stats_ms(&self) -> MeanStd {
+        let ms: Vec<f64> = self.laps.iter().map(|s| s * 1e3).collect();
+        MeanStd::of(&ms)
+    }
+
+    pub fn count(&self) -> usize {
+        self.laps.len()
+    }
+}
+
+/// CSV emit helper: one header + rows of f64 columns.
+pub fn to_csv(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut out = header.join(",");
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let m = MeanStd::of(&[1.0, 2.0, 3.0]);
+        assert!((m.mean - 2.0).abs() < 1e-12);
+        assert!((m.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(m.n, 3);
+    }
+
+    #[test]
+    fn fmt_pct_matches_paper_style() {
+        let m = MeanStd { mean: 0.8894, std: 0.0102, n: 10 };
+        assert_eq!(m.fmt_pct(), "88.94 (±1.02)");
+        let one = MeanStd { mean: 0.8086, std: 0.0, n: 1 };
+        assert_eq!(one.fmt_pct(), "80.86");
+    }
+
+    #[test]
+    fn best_accuracy_includes_epoch0() {
+        let m = RunMetrics {
+            accuracy: vec![0.80, 0.35, 0.10],
+            ..Default::default()
+        };
+        assert!((m.best_accuracy() - 0.80).abs() < 1e-12,
+                "collapsed run's best is the pre-training point");
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]);
+        assert_eq!(csv, "a,b\n1,2\n3,4.5\n");
+    }
+}

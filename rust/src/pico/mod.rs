@@ -1,0 +1,349 @@
+//! Raspberry Pi Pico (RP2040) cost model — the Table II substrate.
+//!
+//! We do not have the physical board, so both Table II columns are computed
+//! analytically from the op trace / tensor inventory of one training step
+//! (DESIGN.md §2 documents the substitution):
+//!
+//! * **Time**: the RP2040's Cortex-M0+ is in-order, single-issue, cache-less
+//!   (XIP flash cache aside) with a single-cycle 32×32 multiplier, so a
+//!   per-op cycle model is faithful.  We count the GEMM/elementwise ops of
+//!   each phase of a step and convert at 133 MHz.
+//! * **Memory**: the paper sums "the sizes of the tensors stored during
+//!   training, including activations, gradients, weights, and scores"; the
+//!   accountant below enumerates exactly those for each method.
+//!
+//! Both models are calibrated in *structure* (which terms exist) by the
+//! paper's measurements; the cycle constants are standard M0+ figures.
+
+use crate::config::{Method, Selection};
+use crate::quant::Scales;
+use crate::spec::{LayerSpec, NetSpec};
+
+/// RP2040 clock (Hz).
+pub const CLOCK_HZ: f64 = 133_000_000.0;
+
+/// Cycle costs of the inner-loop primitives on Cortex-M0+ (compiled C,
+/// -O2-class code): a MAC iteration = 2 byte loads (2cy each) + single-cycle
+/// MUL + ADD + loop overhead (~2cy amortized with unrolling).
+pub const CYCLES_PER_MAC: f64 = 8.0;
+/// Elementwise int op (load, op, store, overhead).
+pub const CYCLES_PER_ELEM: f64 = 6.0;
+/// Software integer division (M0+ has no divider; __aeabi_idiv).
+pub const CYCLES_PER_DIV: f64 = 35.0;
+/// Max-pool window element (load + compare + select).
+pub const CYCLES_PER_POOL: f64 = 7.0;
+/// Dynamic-scale overhead per int32 accumulator element: the max-|x| scan
+/// (load 2, abs 2, cmp+branch 3) plus the extra SRAM round-trip dynamic
+/// scaling forces (store int32 4, reload 4) before it can requantize.
+pub const CYCLES_PER_DYNSCAN: f64 = 16.0;
+/// NITI weight update, per edge: load g32 (2), shift-round (3), clamp (2),
+/// load w (2), sub+clamp (3), store (2) — including SR's hash add (+~10
+/// amortized over the hash's 6 ALU ops on 4 lanes... conservatively 11).
+pub const CYCLES_PER_WUPD: f64 = 11.0;
+/// PRIOT score update, per edge: g8 requant (5), load w (2), mul (1),
+/// shift+clamp (4), load s (2), sub+clamp+store (4) ≈ 18.
+pub const CYCLES_PER_SUPD: f64 = 18.0;
+/// PRIOT-S score update, per scored edge: as above + the (index, score)
+/// table walk (load idx, address arithmetic) ≈ +4.
+pub const CYCLES_PER_SUPD_SPARSE: f64 = 22.0;
+/// On-the-fly mask generation per edge in forward (load s, cmp θ, select).
+pub const CYCLES_PER_MASK: f64 = 3.0;
+
+/// Byte sizes of one training step's working set.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryFootprint {
+    pub weights: usize,
+    pub activations: usize,
+    pub gradients: usize,
+    pub scores: usize,
+    /// PRIOT-S (index, score) table overhead beyond plain scores.
+    pub score_index: usize,
+    /// int32 accumulator that dynamic scaling must materialize.
+    pub dynamic_accum: usize,
+    pub misc: usize,
+}
+
+impl MemoryFootprint {
+    pub fn total(&self) -> usize {
+        self.weights
+            + self.activations
+            + self.gradients
+            + self.scores
+            + self.score_index
+            + self.dynamic_accum
+            + self.misc
+    }
+}
+
+/// Estimated cycles of one training step, by phase.
+#[derive(Clone, Debug, Default)]
+pub struct StepCost {
+    pub fwd_cycles: f64,
+    pub bwd_cycles: f64,
+    pub update_cycles: f64,
+    pub mask_cycles: f64,
+    pub dynamic_cycles: f64,
+}
+
+impl StepCost {
+    pub fn total_cycles(&self) -> f64 {
+        self.fwd_cycles
+            + self.bwd_cycles
+            + self.update_cycles
+            + self.mask_cycles
+            + self.dynamic_cycles
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_cycles() / CLOCK_HZ * 1e3
+    }
+}
+
+/// Method parameters the models need.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodParams {
+    pub method: Method,
+    /// PRIOT-S: fraction of edges with scores (1-p in the paper's notation).
+    pub frac_scored: f64,
+    pub selection: Selection,
+}
+
+impl MethodParams {
+    pub fn new(method: Method) -> Self {
+        Self { method, frac_scored: 1.0, selection: Selection::Random }
+    }
+
+    pub fn priot_s(frac_scored: f64, selection: Selection) -> Self {
+        Self { method: Method::PriotS, frac_scored, selection }
+    }
+}
+
+/// Per-layer flattened activation lengths the backward pass must retain.
+fn tape_activations(spec: &NetSpec) -> usize {
+    // Stored per layer: the layer *input* (int8) for the weight gradient,
+    // the post-relu activation (int8, relu mask), and pool argmax indices
+    // (u8 per pooled output).  The input image is the first layer's input.
+    let mut bytes = 0usize;
+    let mut in_len = spec.input_len();
+    for l in &spec.layers {
+        bytes += in_len; // layer input, int8
+        match *l {
+            LayerSpec::Conv { in_h, in_w, out_c, pool, .. } => {
+                let pre_pool = out_c * in_h * in_w;
+                bytes += pre_pool; // relu output (mask source)
+                if pool {
+                    bytes += pre_pool / 4; // argmax u8
+                }
+            }
+            LayerSpec::Fc { out_f, .. } => {
+                bytes += out_f;
+            }
+        }
+        in_len = l.out_len();
+    }
+    bytes
+}
+
+/// Largest int32 accumulator any layer produces (dynamic scaling must hold
+/// the whole tensor before it can pick a shift).
+fn largest_accum_bytes(spec: &NetSpec) -> usize {
+    spec.layers
+        .iter()
+        .map(|l| match *l {
+            LayerSpec::Conv { in_h, in_w, out_c, .. } => out_c * in_h * in_w * 4,
+            LayerSpec::Fc { out_f, .. } => out_f * 4,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Largest weight-gradient tile (the update is applied layer-by-layer, so
+/// one reusable int8 buffer of the largest layer suffices).
+fn largest_grad_bytes(spec: &NetSpec) -> usize {
+    spec.layers.iter().map(|l| l.num_params()).max().unwrap_or(0)
+}
+
+/// The Table II memory column for one (model, method) pair.
+pub fn memory_footprint(spec: &NetSpec, p: MethodParams) -> MemoryFootprint {
+    let params = spec.num_params();
+    let mut f = MemoryFootprint {
+        weights: params, // int8
+        activations: tape_activations(spec),
+        // delta buffers: two ping-pong int8 delta tensors of the largest
+        // activation + one int8 weight-gradient tile of the largest layer
+        gradients: 2 * spec
+            .layers
+            .iter()
+            .map(|l| l.in_len().max(l.out_len()))
+            .max()
+            .unwrap_or(0)
+            + largest_grad_bytes(spec),
+        ..Default::default()
+    };
+    match p.method {
+        Method::StaticNiti => {}
+        Method::DynamicNiti => {
+            f.dynamic_accum = largest_accum_bytes(spec);
+        }
+        Method::Priot => {
+            f.scores = params; // int8 score per edge; masks built on the fly
+        }
+        Method::PriotS => {
+            let scored: usize = spec
+                .layers
+                .iter()
+                .map(|l| (l.num_params() as f64 * p.frac_scored).round() as usize)
+                .sum();
+            // (u16 index within layer tile, i8 score) entries, padded u32
+            f.scores = scored;
+            f.score_index = scored * 2;
+        }
+    }
+    f
+}
+
+/// The Table II time column for one (model, method) pair.
+pub fn step_cost(spec: &NetSpec, scales: &Scales, p: MethodParams) -> StepCost {
+    let mut c = StepCost::default();
+    let mut prev_out;
+    for l in &spec.layers {
+        let (fout, k) = l.weight_shape();
+        let n = match *l {
+            LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+            LayerSpec::Fc { .. } => 1,
+        };
+        let fwd_macs = (fout * k * n) as f64;
+        let out_elems = (fout * n) as f64;
+        prev_out = l.out_len() as f64;
+        // forward GEMM + requant epilogue
+        c.fwd_cycles += fwd_macs * CYCLES_PER_MAC + out_elems * CYCLES_PER_ELEM;
+        if let LayerSpec::Conv { pool: true, .. } = l {
+            c.fwd_cycles += out_elems * CYCLES_PER_POOL;
+        }
+        // backward: δx GEMM (skipped for the first layer) + δW GEMM
+        // + requant of both
+        let bwd_dx_macs = if l.in_len() == spec.input_len() { 0.0 } else { fwd_macs };
+        c.bwd_cycles += bwd_dx_macs * CYCLES_PER_MAC
+            + fwd_macs * CYCLES_PER_MAC // δW = δy·xᵀ
+            + (k * n) as f64 * CYCLES_PER_ELEM
+            + prev_out * CYCLES_PER_ELEM;
+        let params = (fout * k) as f64;
+        match p.method {
+            Method::StaticNiti | Method::DynamicNiti => {
+                c.update_cycles += params * CYCLES_PER_WUPD;
+            }
+            Method::Priot => {
+                // mask generation on the fly in forward (+4.13% claim)
+                c.mask_cycles += params * CYCLES_PER_MASK;
+                c.update_cycles += params * CYCLES_PER_SUPD;
+            }
+            Method::PriotS => {
+                let scored = params * p.frac_scored;
+                // only scored edges mask the forward weight tile...
+                c.mask_cycles += scored * CYCLES_PER_MASK;
+                // ...and only scored edges compute score updates; the δW
+                // MACs of unscored edges are skipped too (−12.79% claim) —
+                // fully for FC layers, partially for conv (δW tiles are
+                // shared across positions):
+                c.update_cycles += scored * CYCLES_PER_SUPD_SPARSE;
+                c.bwd_cycles -= fwd_macs * CYCLES_PER_MAC * (1.0 - p.frac_scored)
+                    * gradient_sparsity_factor(l);
+            }
+        }
+        if p.method == Method::DynamicNiti {
+            // scan int32 accumulators (fwd + δx + δW) for their max
+            c.dynamic_cycles +=
+                (out_elems + k as f64 * n as f64 + params) * CYCLES_PER_DYNSCAN;
+        }
+    }
+    // loss backward: exp2 shifts + one integer division per class
+    c.bwd_cycles += 10.0 * (CYCLES_PER_ELEM + CYCLES_PER_DIV);
+    let _ = scales;
+    c
+}
+
+/// PRIOT-S only skips the δW MACs of edges without scores; for conv layers
+/// the δW GEMM is shared across positions so the skip fraction is partial.
+fn gradient_sparsity_factor(l: &LayerSpec) -> f64 {
+    match l {
+        LayerSpec::Conv { .. } => 0.35,
+        LayerSpec::Fc { .. } => 1.0,
+    }
+}
+
+/// SRAM budget check against the RP2040's 264 KB.
+pub const PICO_SRAM_BYTES: usize = 264 * 1024;
+
+pub fn fits_pico(f: &MemoryFootprint) -> bool {
+    f.total() <= PICO_SRAM_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, Selection};
+
+    fn tiny() -> NetSpec {
+        NetSpec::tinycnn()
+    }
+
+    #[test]
+    fn memory_ordering_matches_paper() {
+        // paper Table II: static < PRIOT-S(90%) < PRIOT-S(80%) < PRIOT
+        let s = tiny();
+        let m_static = memory_footprint(&s, MethodParams::new(Method::StaticNiti));
+        let m_p90 = memory_footprint(
+            &s, MethodParams::priot_s(0.1, Selection::Random));
+        let m_p80 = memory_footprint(
+            &s, MethodParams::priot_s(0.2, Selection::Random));
+        let m_priot = memory_footprint(&s, MethodParams::new(Method::Priot));
+        assert!(m_static.total() < m_p90.total());
+        assert!(m_p90.total() < m_p80.total());
+        assert!(m_p80.total() < m_priot.total());
+        // PRIOT overhead ≈ +1 byte/param over static (paper: +72%)
+        let delta = m_priot.total() - m_static.total();
+        assert_eq!(delta, s.num_params());
+        let ratio = m_priot.total() as f64 / m_static.total() as f64;
+        assert!((1.4..2.1).contains(&ratio), "PRIOT ratio {ratio}");
+    }
+
+    #[test]
+    fn everything_fits_the_pico_except_dynamic_vgg() {
+        let s = tiny();
+        for p in [
+            MethodParams::new(Method::StaticNiti),
+            MethodParams::new(Method::Priot),
+            MethodParams::priot_s(0.1, Selection::Random),
+        ] {
+            assert!(fits_pico(&memory_footprint(&s, p)), "{:?}", p.method);
+        }
+        // Full-width VGG11 training does NOT fit (the paper's point that
+        // dynamic NITI / fp32 "cannot be executed on the Pico").
+        let vgg = NetSpec::vgg11(1.0);
+        let m = memory_footprint(&vgg, MethodParams::new(Method::DynamicNiti));
+        assert!(!fits_pico(&m));
+    }
+
+    #[test]
+    fn time_ordering_matches_paper() {
+        // paper Table II: PRIOT-S < static-NITI < PRIOT (< dynamic-NITI)
+        let s = tiny();
+        let scales = Scales::default_for(s.layers.len());
+        let t_static =
+            step_cost(&s, &scales, MethodParams::new(Method::StaticNiti)).total_ms();
+        let t_priot =
+            step_cost(&s, &scales, MethodParams::new(Method::Priot)).total_ms();
+        let t_p90 = step_cost(
+            &s, &scales, MethodParams::priot_s(0.1, Selection::Random)).total_ms();
+        let t_dyn =
+            step_cost(&s, &scales, MethodParams::new(Method::DynamicNiti)).total_ms();
+        assert!(t_p90 < t_static, "PRIOT-S {t_p90} < static {t_static}");
+        assert!(t_static < t_priot, "static {t_static} < PRIOT {t_priot}");
+        assert!(t_priot < t_dyn, "PRIOT {t_priot} < dynamic {t_dyn}");
+        // PRIOT overhead over static should be small (paper: +4.13%)
+        let ratio = t_priot / t_static;
+        assert!((1.0..1.15).contains(&ratio), "PRIOT time ratio {ratio}");
+        // absolute scale: tiny CNN step lands in the paper's tens-of-ms
+        assert!((20.0..150.0).contains(&t_static), "static {t_static} ms");
+    }
+}

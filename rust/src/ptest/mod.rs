@@ -1,0 +1,109 @@
+//! Mini property-testing framework (no `proptest` in the offline image).
+//!
+//! A property is a closure over a seeded [`XorShift64`]; the runner executes
+//! it for `iters` independent seeds and reports the first failing seed so a
+//! failure is reproducible with `check_seed`.  Shrinking is out of scope —
+//! generators here produce small cases by construction.
+
+use crate::prng::XorShift64;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok,
+    Failed { seed: u64, message: String },
+}
+
+/// Run `prop` for `iters` seeds derived from `base_seed`.  Panics (test
+/// failure) with the reproducing seed on the first counterexample.
+pub fn check<F>(name: &str, base_seed: u64, iters: u64, prop: F)
+where
+    F: Fn(&mut XorShift64) -> Result<(), String>,
+{
+    for i in 0..iters {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i);
+        let mut rng = XorShift64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at iter {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing seed (for debugging a reported failure).
+pub fn check_seed<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut XorShift64) -> Result<(), String>,
+{
+    let mut rng = XorShift64::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gen {
+    use crate::prng::XorShift64;
+    use crate::tensor::Mat;
+
+    /// int8-range vector of length `n`.
+    pub fn vec_i8(rng: &mut XorShift64, n: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.int_in(-127, 127)).collect()
+    }
+
+    /// int8-range matrix.
+    pub fn mat_i8(rng: &mut XorShift64, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, vec_i8(rng, rows * cols))
+    }
+
+    /// 0/1 mask vector with ~`frac` ones.
+    pub fn mask(rng: &mut XorShift64, n: usize, frac: f64) -> Vec<i32> {
+        let thresh = (frac * u32::MAX as f64) as u64;
+        (0..n)
+            .map(|_| i32::from(rng.next_u64() as u32 as u64 <= thresh))
+            .collect()
+    }
+
+    /// Small dimension in `[1, hi]`.
+    pub fn dim(rng: &mut XorShift64, hi: usize) -> usize {
+        1 + rng.below(hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, 50, |rng| {
+            let (a, b) = (rng.int_in(-1000, 1000), rng.int_in(-1000, 1000));
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 2, 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_produce_in_range() {
+        let mut rng = crate::prng::XorShift64::new(3);
+        let v = gen::vec_i8(&mut rng, 100);
+        assert!(v.iter().all(|&x| (-127..=127).contains(&x)));
+        let m = gen::mask(&mut rng, 1000, 0.3);
+        let ones: i32 = m.iter().sum();
+        assert!((150..450).contains(&ones), "ones {ones}");
+        for _ in 0..100 {
+            let d = gen::dim(&mut rng, 8);
+            assert!((1..=8).contains(&d));
+        }
+    }
+}

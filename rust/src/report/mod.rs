@@ -1,0 +1,157 @@
+//! Table/figure formatters: render run metrics in the same rows/series the
+//! paper reports (Table I, Table II, Fig. 2, Fig. 3).
+
+use crate::metrics::{MeanStd, RunMetrics};
+use crate::pico::{MemoryFootprint, StepCost};
+
+/// A Table I row: method name → per-column accuracy statistic.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub method: String,
+    pub cells: Vec<Option<MeanStd>>,
+}
+
+/// Render Table I as Markdown, matching the paper's layout:
+/// columns = (dataset, angle) pairs.
+pub fn table1_markdown(columns: &[String], rows: &[Table1Row]) -> String {
+    let mut out = String::new();
+    out.push_str("| Method | ");
+    out.push_str(&columns.join(" | "));
+    out.push_str(" |\n|---|");
+    for _ in columns {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&format!("| {} |", row.method));
+        for cell in &row.cells {
+            match cell {
+                Some(ms) => out.push_str(&format!(" {} |", ms.fmt_pct())),
+                None => out.push_str(" — |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A Table II row.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub method: String,
+    /// Measured wall-clock per image on this host (ms).
+    pub host_ms: MeanStd,
+    /// Modeled Cortex-M0+ time per image (ms).
+    pub pico: StepCost,
+    pub memory: MemoryFootprint,
+}
+
+pub fn table2_markdown(rows: &[Table2Row]) -> String {
+    let mut out = String::from(
+        "| Method | Host time [ms] | Pico-model time [ms] | \
+         Est. memory footprint [B] |\n|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {} |\n",
+            r.method,
+            r.host_ms.fmt_ms(),
+            r.pico.total_ms(),
+            r.memory.total()
+        ));
+    }
+    out
+}
+
+/// Fig. 3 series: accuracy-vs-epoch per method, CSV with one column per
+/// method.
+pub fn fig3_csv(methods: &[String], runs: &[&RunMetrics]) -> String {
+    let mut out = String::from("epoch");
+    for m in methods {
+        out.push(',');
+        out.push_str(m);
+    }
+    out.push('\n');
+    let max_len = runs.iter().map(|r| r.accuracy.len()).max().unwrap_or(0);
+    for e in 0..max_len {
+        out.push_str(&format!("{e}"));
+        for r in runs {
+            match r.accuracy.get(e) {
+                Some(a) => out.push_str(&format!(",{:.4}", a * 100.0)),
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 2 series: per-step overflow counts during the collapse window.
+pub fn fig2_csv(step_overflows: &[(u64, u32)]) -> String {
+    let mut out = String::from("step,overflowed_outputs\n");
+    for (step, ovf) in step_overflows {
+        out.push_str(&format!("{step},{ovf}\n"));
+    }
+    out
+}
+
+/// Render an accuracy history as a terminal sparkline (quick visual check
+/// of the Fig. 3 shapes without plotting).
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (lo, hi) = values
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    let span = (hi - lo).max(1e-9);
+    values
+        .iter()
+        .map(|&v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+impl MeanStd {
+    /// `62.02 (±0.06)`-style milliseconds cell.
+    pub fn fmt_ms(&self) -> String {
+        if self.n <= 1 {
+            format!("{:.2}", self.mean)
+        } else {
+            format!("{:.2} (±{:.2})", self.mean, self.std)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders() {
+        let rows = vec![Table1Row {
+            method: "PRIOT".into(),
+            cells: vec![
+                Some(MeanStd { mean: 0.8894, std: 0.0102, n: 10 }),
+                None,
+            ],
+        }];
+        let md = table1_markdown(&["Digits 30°".into(), "Digits 45°".into()], &rows);
+        assert!(md.contains("| PRIOT | 88.94 (±1.02) | — |"));
+    }
+
+    #[test]
+    fn fig3_csv_is_ragged_safe() {
+        let r1 = RunMetrics { accuracy: vec![0.5, 0.6], ..Default::default() };
+        let r2 = RunMetrics { accuracy: vec![0.5], ..Default::default() };
+        let csv = fig3_csv(&["a".into(), "b".into()], &[&r1, &r2]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "epoch,a,b");
+        assert_eq!(lines[2], "1,60.0000,");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+    }
+}
+
+pub mod experiments;

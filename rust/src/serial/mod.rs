@@ -1,0 +1,220 @@
+//! Binary interchange with the Python build path (mirrors
+//! `python/compile/serialize.py` / `dataset.py`), plus checkpointing of
+//! scores/weights produced on-device.
+//!
+//! All integers little-endian.
+//!
+//! * Weights ("PRWT" = 0x50525754): u32 magic, u32 version, u32 n_tensors,
+//!   then per tensor u32 ndim, u32 dims[ndim], i8 data row-major.
+//! * Dataset ("PRDS" = 0x50524453): u32 magic, u32 version, u32 n, c, h, w,
+//!   then n·c·h·w u8 pixels, then n u8 labels.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const WEIGHTS_MAGIC: u32 = 0x5052_5754;
+pub const DATASET_MAGIC: u32 = 0x5052_4453;
+
+/// An int8 tensor with explicit dims (as stored on disk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorI8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Widen to the i32 working representation.
+    pub fn to_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a "PRWT" weights file (list of int8 tensors).
+pub fn load_weights(path: &Path) -> Result<Vec<TensorI8>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights file {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let magic = read_u32(&mut r)?;
+    if magic != WEIGHTS_MAGIC {
+        bail!("{}: bad magic {magic:#x} (want PRWT)", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{}: unsupported weights version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    if n > 1024 {
+        bail!("{}: implausible tensor count {n}", path.display());
+    }
+    let mut out = Vec::with_capacity(n);
+    for ti in 0..n {
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("{}: tensor {ti} has {ndim} dims", path.display());
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let size: usize = dims.iter().product();
+        if size > 256 << 20 {
+            bail!("{}: tensor {ti} too large ({size})", path.display());
+        }
+        let mut raw = vec![0u8; size];
+        r.read_exact(&mut raw)?;
+        let data: Vec<i8> = raw.into_iter().map(|b| b as i8).collect();
+        out.push(TensorI8 { dims, data });
+    }
+    Ok(out)
+}
+
+/// Save a "PRWT" weights file (used for on-device checkpoints: the trained
+/// scores / updated weights).
+pub fn save_weights(path: &Path, tensors: &[TensorI8]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating weights file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    write_u32(&mut w, WEIGHTS_MAGIC)?;
+    write_u32(&mut w, 1)?;
+    write_u32(&mut w, tensors.len() as u32)?;
+    for t in tensors {
+        write_u32(&mut w, t.dims.len() as u32)?;
+        for &d in &t.dims {
+            write_u32(&mut w, d as u32)?;
+        }
+        let raw: Vec<u8> = t.data.iter().map(|&v| v as u8).collect();
+        w.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+/// An image-classification dataset as stored on disk (u8 pixels 0..255).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub images: Vec<u8>, // n*c*h*w
+    pub labels: Vec<u8>, // n
+}
+
+impl Dataset {
+    pub fn image_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Raw u8 pixels of sample `i`.
+    pub fn image(&self, i: usize) -> &[u8] {
+        let len = self.image_len();
+        &self.images[i * len..(i + 1) * len]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// Device-side activation mapping: u8 0..255 pixels → int8 0..127
+    /// (`p >> 1`), widened into the caller's i32 buffer.
+    pub fn image_i32(&self, i: usize, out: &mut [i32]) {
+        let img = self.image(i);
+        debug_assert_eq!(img.len(), out.len());
+        for (o, &p) in out.iter_mut().zip(img.iter()) {
+            *o = (p >> 1) as i32;
+        }
+    }
+}
+
+/// Load a "PRDS" dataset file.
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening dataset {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let magic = read_u32(&mut r)?;
+    if magic != DATASET_MAGIC {
+        bail!("{}: bad magic {magic:#x} (want PRDS)", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{}: unsupported dataset version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    let c = read_u32(&mut r)? as usize;
+    let h = read_u32(&mut r)? as usize;
+    let w = read_u32(&mut r)? as usize;
+    let total = n
+        .checked_mul(c * h * w)
+        .filter(|&t| t <= 1 << 31)
+        .with_context(|| format!("{}: implausible dims", path.display()))?;
+    let mut images = vec![0u8; total];
+    r.read_exact(&mut images)?;
+    let mut labels = vec![0u8; n];
+    r.read_exact(&mut labels)?;
+    Ok(Dataset { n, c, h, w, images, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let tensors = vec![
+            TensorI8 { dims: vec![2, 3], data: vec![1, -2, 3, -4, 5, -128] },
+            TensorI8 { dims: vec![4], data: vec![0, 127, -127, 7] },
+        ];
+        save_weights(&path, &tensors).unwrap();
+        let back = load_weights(&path).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 32]).unwrap();
+        assert!(load_weights(&path).is_err());
+        assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn image_i32_halves_pixels() {
+        let d = Dataset {
+            n: 1,
+            c: 1,
+            h: 2,
+            w: 2,
+            images: vec![0, 1, 254, 255],
+            labels: vec![3],
+        };
+        let mut buf = [0i32; 4];
+        d.image_i32(0, &mut buf);
+        assert_eq!(buf, [0, 0, 127, 127]);
+        assert_eq!(d.label(0), 3);
+    }
+}

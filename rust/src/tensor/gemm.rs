@@ -1,0 +1,209 @@
+//! The three integer GEMM variants the training loop needs.
+//!
+//! * `gemm_nn`:  C = A · B        (forward / conv via im2col)
+//! * `gemm_tn`:  C = Aᵀ · B       (delta-x backward: Wᵀ · δy)
+//! * `gemm_nt`:  C = A · Bᵀ       (weight gradient: δy · xᵀ)
+//!
+//! All accumulate in i32 over int8-range operands (the DESIGN.md §5
+//! contract keeps every accumulator in range).  These are the hot path of
+//! the whole device engine; the kernel bench (`cargo bench --bench kernel`)
+//! tracks them and EXPERIMENTS.md §Perf logs the optimization history.
+//!
+//! `gemm_nn` is written as an ikj loop (row of B streamed per A element)
+//! which vectorizes well and is cache-friendly for the small row counts the
+//! models here use; `gemm_tn`/`gemm_nt` choose loop orders that keep the
+//! inner loop contiguous in both operands.
+
+use super::Mat;
+
+/// `out = a · b` — (m,k)·(k,n) -> (m,n).
+pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "gemm_nn inner dim");
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    let (k, n) = (a.cols, b.cols);
+    if n == 1 {
+        // Matrix-vector (every FC layer at batch 1): contiguous dot
+        // products — the ikj form below would pay slice overhead per MAC.
+        // §Perf: fc1 GEMV 350 µs → ~25 µs (0.14 → ~2 Gmac/s).
+        for i in 0..a.rows {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let mut acc = 0i32;
+            for (&av, &bv) in arow.iter().zip(b.data.iter()) {
+                acc += av * bv;
+            }
+            out.data[i] = acc;
+        }
+        return;
+    }
+    out.data.iter_mut().for_each(|v| *v = 0);
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue; // pruned edges / ReLU zeros are common — skip
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = aᵀ · b` — (m,k)ᵀ·(m,n) -> (k,n).
+pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows, "gemm_tn inner dim");
+    assert_eq!(out.rows, a.cols);
+    assert_eq!(out.cols, b.cols);
+    let (k, n) = (a.cols, b.cols);
+    out.data.iter_mut().for_each(|v| *v = 0);
+    if n == 1 {
+        // aᵀ·v: accumulate b[i]-scaled rows of a — contiguous in both.
+        for i in 0..a.rows {
+            let bv = b.data[i];
+            if bv == 0 {
+                continue;
+            }
+            let arow = &a.data[i * k..(i + 1) * k];
+            for (o, &av) in out.data.iter_mut().zip(arow.iter()) {
+                *o += av * bv;
+            }
+        }
+        return;
+    }
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let orow = &mut out.data[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = a · bᵀ` — (m,k)·(n,k)ᵀ -> (m,n).
+pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "gemm_nt inner dim");
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.rows);
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..b.rows {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out.data[i * b.rows + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::XorShift64;
+
+    fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+    }
+
+    fn naive_nn(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0i64;
+                for p in 0..a.cols {
+                    acc += a.at(i, p) as i64 * b.at(p, j) as i64;
+                }
+                *out.at_mut(i, j) = acc as i32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let mut rng = XorShift64::new(21);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 4), (8, 72, 196), (10, 64, 1)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let mut out = Mat::zeros(m, n);
+            gemm_nn(&a, &b, &mut out);
+            assert_eq!(out, naive_nn(&a, &b), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_is_transpose_of_nn() {
+        let mut rng = XorShift64::new(22);
+        for &(m, k, n) in &[(4usize, 3usize, 5usize), (10, 64, 1), (16, 72, 7)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, m, n);
+            // naive: transpose a then nn
+            let mut at = Mat::zeros(k, m);
+            for i in 0..m {
+                for p in 0..k {
+                    *at.at_mut(p, i) = a.at(i, p);
+                }
+            }
+            let want = naive_nn(&at, &b);
+            let mut out = Mat::zeros(k, n);
+            gemm_tn(&a, &b, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_is_nn_with_transposed_b() {
+        let mut rng = XorShift64::new(23);
+        for &(m, k, n) in &[(5usize, 4usize, 3usize), (10, 1, 64), (16, 196, 72)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let mut bt = Mat::zeros(k, n);
+            for i in 0..n {
+                for p in 0..k {
+                    *bt.at_mut(p, i) = b.at(i, p);
+                }
+            }
+            let want = naive_nn(&a, &bt);
+            let mut out = Mat::zeros(m, n);
+            gemm_nt(&a, &b, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn gemm_bilinear_property() {
+        // (a1 + a2)·b == a1·b + a2·b elementwise — catches indexing bugs
+        // that preserve shapes but scramble contributions.
+        let mut rng = XorShift64::new(24);
+        let (m, k, n) = (4usize, 6usize, 5usize);
+        for _ in 0..20 {
+            let a1 = rand_mat(&mut rng, m, k);
+            let a2 = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let sum = Mat::from_vec(
+                m,
+                k,
+                a1.data.iter().zip(a2.data.iter()).map(|(&x, &y)| x + y).collect(),
+            );
+            let (mut o1, mut o2, mut os) =
+                (Mat::zeros(m, n), Mat::zeros(m, n), Mat::zeros(m, n));
+            gemm_nn(&a1, &b, &mut o1);
+            gemm_nn(&a2, &b, &mut o2);
+            gemm_nn(&sum, &b, &mut os);
+            for i in 0..m * n {
+                assert_eq!(os.data[i], o1.data[i] + o2.data[i]);
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! End-to-end integration over the real artifacts: the paper's headline
+//! behaviours must reproduce on the engine backend.
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use priot::config::{Config, ExperimentConfig, Method};
+use priot::coordinator::{evaluate, run_training, RunOptions};
+use priot::data;
+use priot::methods::EngineBackend;
+use priot::quant::Scales;
+use priot::spec::NetSpec;
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("tinycnn.weights.bin").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn cfg(method: &str, extra: &[(&str, &str)]) -> ExperimentConfig {
+    let mut c = Config::default();
+    c.set("artifacts", artifacts().to_str().unwrap());
+    c.set("method", method);
+    c.set("angle", "30");
+    for (k, v) in extra {
+        c.set(k, v);
+    }
+    ExperimentConfig::from_config(&c).unwrap()
+}
+
+fn quick_opts(epochs: usize, limit: usize) -> RunOptions {
+    RunOptions { epochs, limit, track_pruning: true, verbose: false }
+}
+
+#[test]
+fn artifacts_load_and_validate() {
+    let c = cfg("priot", &[]);
+    let pair = data::load_pair(&c).unwrap();
+    let spec = NetSpec::tinycnn();
+    data::validate(&pair.train, &spec).unwrap();
+    data::validate(&pair.test, &spec).unwrap();
+    let tensors = priot::serial::load_weights(&c.weights_path()).unwrap();
+    assert_eq!(tensors.len(), spec.layers.len());
+    for (t, l) in tensors.iter().zip(spec.layers.iter()) {
+        let (r, cdim) = l.weight_shape();
+        assert_eq!(t.dims, vec![r, cdim]);
+    }
+    let scales = Scales::load(&c.scales_path()).unwrap();
+    assert_eq!(scales.layers.len(), spec.layers.len());
+}
+
+#[test]
+fn backbone_beats_chance_before_transfer() {
+    let c = cfg("static-niti", &[]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let acc = evaluate(&mut b, &pair.test, 512);
+    assert!(acc > 0.35, "pre-trained backbone @30° should beat chance: {acc}");
+}
+
+#[test]
+fn priot_improves_over_backbone() {
+    // The paper's headline: PRIOT trains effectively with static scales.
+    let c = cfg("priot", &[("seed", "1")]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let m = run_training(&mut b, &pair.train, &pair.test, &quick_opts(5, 512));
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(
+        gain >= 0.04,
+        "PRIOT should gain ≥4 p.p. in 5 quick epochs: before {:.3} best {:.3}",
+        m.accuracy[0],
+        m.best_accuracy()
+    );
+    // weights frozen ⇒ no overflow growth
+    assert_eq!(m.overflow.iter().sum::<u64>(), 0,
+               "PRIOT must not overflow the static scales");
+}
+
+#[test]
+fn static_niti_collapses() {
+    // The paper's motivation (Fig. 2/3): static-scale NITI training
+    // collapses — the run ends far below where it started, accompanied by
+    // output-overflow bursts.  (In our setup a brief transient gain
+    // precedes the collapse; the paper's curve is flat-then-collapse.
+    // EXPERIMENTS.md §Deviations discusses this.)
+    let c = cfg("static-niti", &[]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let m = run_training(&mut b, &pair.train, &pair.test, &quick_opts(8, 512));
+    assert!(
+        m.final_accuracy() < m.best_accuracy() - 0.15,
+        "static-NITI should collapse from its peak: best {:.3} final {:.3}",
+        m.best_accuracy(),
+        m.final_accuracy()
+    );
+    assert!(
+        m.final_accuracy() < m.accuracy[0],
+        "static-NITI should end below the backbone: start {:.3} final {:.3}",
+        m.accuracy[0],
+        m.final_accuracy()
+    );
+    assert!(m.overflow.iter().sum::<u64>() > 0,
+            "collapse should come with overflow events");
+}
+
+#[test]
+fn dynamic_niti_improves() {
+    let c = cfg("dynamic-niti", &[]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let m = run_training(&mut b, &pair.train, &pair.test, &quick_opts(3, 512));
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(gain >= 0.04, "dynamic-NITI reference should learn: gain {gain:.3}");
+}
+
+#[test]
+fn priot_s_weight_based_learns_with_sparse_scores() {
+    let c = cfg("priot-s", &[("selection", "weight"), ("frac_scored", "0.2"),
+                             ("seed", "2")]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let m = run_training(&mut b, &pair.train, &pair.test, &quick_opts(5, 512));
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(gain >= 0.02, "PRIOT-S should still learn: gain {gain:.3}");
+}
+
+#[test]
+fn priot_prunes_gradually_and_stably() {
+    // §IV-B analysis: ~10% of edges pruned by the end, few oscillations.
+    let c = cfg("priot", &[("seed", "3")]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let m = run_training(&mut b, &pair.train, &pair.test, &quick_opts(5, 512));
+    let last = m.pruned_frac.last().unwrap();
+    let avg: f64 = last.iter().sum::<f64>() / last.len() as f64;
+    assert!(
+        (0.005..0.35).contains(&avg),
+        "pruned fraction should be moderate, got {avg:.3}"
+    );
+    // flips settle: late-epoch flips should not exceed early flips by 3×
+    if m.mask_flips.len() >= 3 {
+        let first = m.mask_flips[0].max(1);
+        let last_f = *m.mask_flips.last().unwrap();
+        assert!(
+            last_f < first * 3,
+            "mask oscillation should not grow: first {first} last {last_f}"
+        );
+    }
+}
+
+#[test]
+fn seed_sweep_aggregates() {
+    let mut c = cfg("priot", &[]);
+    c.epochs = 2;
+    c.limit = 128;
+    let pair = data::load_pair(&c).unwrap();
+    let opts = quick_opts(2, 128);
+    let sweep = priot::coordinator::sweep_seeds(
+        &c, &pair.train, &pair.test, &opts, &[1, 2, 3]).unwrap();
+    assert_eq!(sweep.runs.len(), 3);
+    assert_eq!(sweep.best.n, 3);
+    assert!(sweep.best.mean > 0.3);
+}
+
+#[test]
+fn vgg_engine_runs_a_step() {
+    // The CIFAR-10 stand-in at width 0.25: one training step each method.
+    let mut c = cfg("priot", &[("model", "vgg11w0.25"), ("dataset", "patterns")]);
+    c.epochs = 1;
+    let pair = data::load_pair(&c).unwrap();
+    let spec = NetSpec::vgg11(0.25);
+    data::validate(&pair.train, &spec).unwrap();
+    let mut b = EngineBackend::from_config(&c).unwrap();
+    let mut img = vec![0i32; pair.train.image_len()];
+    pair.train.image_i32(0, &mut img);
+    let out = priot::methods::StepBackend::train_step(&mut b, &img,
+                                                      pair.train.label(0));
+    assert_eq!(out.logits.len(), 10);
+}
+
+#[test]
+fn table2_orderings_hold_on_host_measurements() {
+    use priot::report::experiments;
+    let md = experiments::table2(&artifacts(), "tinycnn", 30).unwrap();
+    // parse host ms column ordering: PRIOT-S < static < PRIOT
+    let get = |needle: &str| -> f64 {
+        let line = md.lines().find(|l| l.contains(needle)).unwrap();
+        let cell = line.split('|').nth(2).unwrap().trim();
+        cell.split_whitespace().next().unwrap().parse().unwrap()
+    };
+    let t_static = get("Static-Scale NITI");
+    let t_priot = get("PRIOT |");
+    let t_p90 = get("p=90%");
+    // The paper's Table II ordering is asserted on the Pico cycle model
+    // (pico::tests); host timings on a superscalar x86 only sanity-bound:
+    // PRIOT-S must not be dramatically slower than the dense variants.
+    assert!(t_p90 < t_priot * 1.5, "host: PRIOT-S {t_p90} ≲ PRIOT {t_priot}");
+    assert!(t_priot < t_static * 3.0, "host: PRIOT {t_priot} ≲ 3×static {t_static}");
+}

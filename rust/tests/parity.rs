@@ -1,0 +1,128 @@
+//! Cross-implementation bit-parity: the pure-Rust engine and the AOT
+//! (JAX+Pallas → HLO → PJRT) path must produce *identical* integers —
+//! logits, overflow counts, and evolving training state — over multi-step
+//! runs of every method.  Combined with the pytest suite (oracle == JAX
+//! graphs), this pins all three implementations to one semantics.
+//!
+//! Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use priot::config::{Config, ExperimentConfig};
+use priot::data;
+use priot::methods::{EngineBackend, StepBackend};
+use priot::runtime::{PjrtBackend, Runtime};
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("tinycnn_priot_step.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn cfg(method: &str, extra: &[(&str, &str)]) -> ExperimentConfig {
+    let mut c = Config::default();
+    c.set("artifacts", artifacts().to_str().unwrap());
+    c.set("method", method);
+    c.set("angle", "30");
+    for (k, v) in extra {
+        c.set(k, v);
+    }
+    ExperimentConfig::from_config(&c).unwrap()
+}
+
+fn parity_run(cfg: &ExperimentConfig, rt: &Runtime, steps: usize,
+              eval_every: usize) {
+    let pair = data::load_pair(cfg).unwrap();
+    let mut eng = EngineBackend::from_config(cfg).unwrap();
+    let mut pj = PjrtBackend::from_config(cfg, rt).unwrap();
+    let mut img = vec![0i32; pair.train.image_len()];
+    for i in 0..steps {
+        pair.train.image_i32(i % pair.train.n, &mut img);
+        let label = pair.train.label(i % pair.train.n);
+        let a = eng.train_step(&img, label);
+        let b = pj.train_step(&img, label);
+        assert_eq!(a.logits, b.logits, "{}: logits diverged at step {i}",
+                   cfg.method.name());
+        assert_eq!(a.overflow, b.overflow,
+                   "{}: overflow diverged at step {i}", cfg.method.name());
+        if i % eval_every == 0 {
+            pair.test.image_i32(i % pair.test.n, &mut img);
+            assert_eq!(eng.predict(&img), pj.predict(&img),
+                       "{}: prediction diverged at step {i}",
+                       cfg.method.name());
+        }
+    }
+    // trained state must be identical too
+    match (eng.scores(), pj.scores()) {
+        (Some(a), Some(b)) => assert_eq!(a, b, "scores diverged"),
+        (None, None) => {}
+        _ => panic!("one backend has scores, the other does not"),
+    }
+}
+
+#[test]
+fn parity_priot_20_steps() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    parity_run(&cfg("priot", &[("seed", "3")]), &rt, 20, 5);
+}
+
+#[test]
+fn parity_priot_s_random_20_steps() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    parity_run(
+        &cfg("priot-s", &[("selection", "random"), ("frac_scored", "0.1"),
+                          ("seed", "4")]),
+        &rt, 20, 5,
+    );
+}
+
+#[test]
+fn parity_priot_s_weight_20_steps() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    parity_run(
+        &cfg("priot-s", &[("selection", "weight"), ("frac_scored", "0.2"),
+                          ("seed", "5")]),
+        &rt, 20, 5,
+    );
+}
+
+#[test]
+fn parity_static_niti_20_steps() {
+    // Exercises the stochastic-rounding path: the counter-based hash must
+    // agree between jnp uint32 arithmetic and Rust wrapping_mul.
+    let rt = Runtime::new(&artifacts()).unwrap();
+    parity_run(&cfg("static-niti", &[]), &rt, 20, 5);
+}
+
+#[test]
+fn parity_eval_over_test_set_sample() {
+    // Pure inference parity across 32 samples (fwd_eval artifact).
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let c = cfg("priot", &[("seed", "9")]);
+    let pair = data::load_pair(&c).unwrap();
+    let mut eng = EngineBackend::from_config(&c).unwrap();
+    let mut pj = PjrtBackend::from_config(&c, &rt).unwrap();
+    let mut img = vec![0i32; pair.test.image_len()];
+    for i in 0..32.min(pair.test.n) {
+        pair.test.image_i32(i, &mut img);
+        assert_eq!(eng.predict(&img), pj.predict(&img), "sample {i}");
+    }
+}
+
+#[test]
+fn artifacts_manifest_is_consistent() {
+    let dir = artifacts();
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    for line in manifest.lines().filter(|l| !l.starts_with('#')) {
+        let mut parts = line.split_whitespace();
+        let _name = parts.next().unwrap();
+        let file = parts.next().unwrap();
+        assert!(
+            Path::new(&dir).join(file).exists(),
+            "manifest entry {file} missing on disk"
+        );
+    }
+}

@@ -1,0 +1,315 @@
+//! Property-based tests (own `ptest` framework — no proptest offline):
+//! algebraic invariants of the quantization contract, the GEMM/im2col
+//! substrate, and the pruning semantics.
+
+use priot::prng::XorShift64;
+use priot::ptest::{check, gen};
+use priot::quant::{
+    clamp8, dynamic_shift_for, requant, rshift_round, sr_hash_u32,
+    stochastic_requant,
+};
+use priot::tensor::{col2im, gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+
+#[test]
+fn prop_rshift_round_halves_then_rounds() {
+    check("rshift-halving", 101, 500, |rng| {
+        let x = rng.int_in(-1_000_000, 1_000_000);
+        let s = rng.below(15) as u32 + 1;
+        let got = rshift_round(x, s);
+        let want = ((x as f64) / f64::from(1u32 << s) + 0.5).floor() as i32;
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("x={x} s={s}: got {got} want {want}"))
+        }
+    });
+}
+
+#[test]
+fn prop_rshift_composition_error_bounded() {
+    // shifting by a+b vs shifting twice differs by at most 1 ulp — the
+    // reason NITI-style single-shift updates matter for parity.
+    check("rshift-compose", 102, 500, |rng| {
+        let x = rng.int_in(-1_000_000, 1_000_000);
+        let a = rng.below(8) as u32 + 1;
+        let b = rng.below(8) as u32 + 1;
+        let once = rshift_round(x, a + b);
+        let twice = rshift_round(rshift_round(x, a), b);
+        if (once - twice).abs() <= 1 {
+            Ok(())
+        } else {
+            Err(format!("x={x} a={a} b={b}: {once} vs {twice}"))
+        }
+    });
+}
+
+#[test]
+fn prop_requant_monotone() {
+    check("requant-monotone", 103, 300, |rng| {
+        let x = rng.int_in(-100_000, 100_000);
+        let y = rng.int_in(-100_000, 100_000);
+        let s = rng.below(12) as u32;
+        let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+        if requant(lo, s) <= requant(hi, s) {
+            Ok(())
+        } else {
+            Err(format!("monotonicity violated at ({lo},{hi},{s})"))
+        }
+    });
+}
+
+#[test]
+fn prop_dynamic_shift_is_minimal_and_sufficient() {
+    check("dyn-shift", 104, 500, |rng| {
+        let m = rng.int_in(0, 1 << 30);
+        let s = dynamic_shift_for(m);
+        if m >> s > 127 {
+            return Err(format!("insufficient: {m} >> {s}"));
+        }
+        if s > 0 && m >> (s - 1) <= 127 {
+            return Err(format!("not minimal: {m} >> {}", s - 1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_requant_bounded_by_deterministic_neighbors() {
+    // SR result is always within 1 of the floor-shift result.
+    check("sr-bounded", 105, 500, |rng| {
+        let x = rng.int_in(-1_000_000, 1_000_000);
+        let s = rng.below(12) as u32 + 1;
+        let step = rng.below(1 << 20) as u32;
+        let idx = rng.below(1 << 20) as u32;
+        let sr = stochastic_requant(x, s, step, idx);
+        let floor = clamp8(x >> s);
+        let ceil = clamp8((x >> s) + 1);
+        if sr >= floor.min(ceil) - 1 && sr <= floor.max(ceil) + 1 {
+            Ok(())
+        } else {
+            Err(format!("x={x} s={s}: sr {sr} outside [{floor},{ceil}]"))
+        }
+    });
+}
+
+#[test]
+fn prop_sr_hash_avalanche() {
+    // flipping one input bit changes ~half the output bits on average
+    check("sr-hash-avalanche", 106, 200, |rng| {
+        let step = rng.below(1 << 30) as u32;
+        let idx = rng.below(1 << 30) as u32;
+        let bit = 1u32 << rng.below(32);
+        let d = (sr_hash_u32(step, idx) ^ sr_hash_u32(step, idx ^ bit)).count_ones();
+        if (6..=26).contains(&d) {
+            Ok(())
+        } else {
+            Err(format!("weak avalanche: {d} bits for bit {bit:#x}"))
+        }
+    });
+}
+
+#[test]
+fn prop_gemm_transpose_identities() {
+    // (AᵀB)ᵀ == BᵀA — exercises gemm_tn against itself via transposes.
+    check("gemm-transpose", 107, 60, |rng| {
+        let (m, k, n) = (gen::dim(rng, 6), gen::dim(rng, 6), gen::dim(rng, 6));
+        let a = gen::mat_i8(rng, m, k);
+        let b = gen::mat_i8(rng, m, n);
+        let mut ab = Mat::zeros(k, n);
+        gemm_tn(&a, &b, &mut ab); // AᵀB (k,n)
+        let mut ba = Mat::zeros(n, k);
+        gemm_tn(&b, &a, &mut ba); // BᵀA (n,k)
+        for i in 0..k {
+            for j in 0..n {
+                if ab.at(i, j) != ba.at(j, i) {
+                    return Err(format!("transpose identity failed at {i},{j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_nt_row_scaling() {
+    // scaling a row of A scales the corresponding row of A·Bᵀ.
+    check("gemm-row-scale", 108, 60, |rng| {
+        let (m, k, n) = (gen::dim(rng, 5), gen::dim(rng, 6), gen::dim(rng, 5));
+        let a = gen::mat_i8(rng, m, k);
+        let b = gen::mat_i8(rng, n, k);
+        let mut out = Mat::zeros(m, n);
+        gemm_nt(&a, &b, &mut out);
+        let mut a2 = a.clone();
+        let row = rng.below(m);
+        for v in &mut a2.data[row * k..(row + 1) * k] {
+            *v *= 2;
+        }
+        let mut out2 = Mat::zeros(m, n);
+        gemm_nt(&a2, &b, &mut out2);
+        for j in 0..n {
+            if out2.at(row, j) != 2 * out.at(row, j) {
+                return Err("row scaling broken".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_im2col_col2im_adjoint() {
+    // <im2col(x), y> == <x, col2im(y)> over random int8 tensors.
+    check("im2col-adjoint", 109, 40, |rng| {
+        let c = gen::dim(rng, 3);
+        let h = gen::dim(rng, 4) * 2;
+        let w = gen::dim(rng, 4) * 2;
+        let x = gen::vec_i8(rng, c * h * w);
+        let y = gen::mat_i8(rng, c * 9, h * w);
+        let mut xi = Mat::zeros(c * 9, h * w);
+        im2col(&x, c, h, w, &mut xi);
+        let mut back = vec![0i32; c * h * w];
+        col2im(&y, c, h, w, &mut back);
+        let lhs: i64 = xi.data.iter().zip(y.data.iter())
+            .map(|(&a, &b)| a as i64 * b as i64).sum();
+        let rhs: i64 = x.iter().zip(back.iter())
+            .map(|(&a, &b)| a as i64 * b as i64).sum();
+        if lhs == rhs {
+            Ok(())
+        } else {
+            Err(format!("adjoint mismatch {lhs} != {rhs} (c={c},h={h},w={w})"))
+        }
+    });
+}
+
+#[test]
+fn prop_conv_via_gemm_equals_direct_convolution() {
+    // W·im2col(x) must equal the directly-computed 3×3 convolution.
+    check("conv-equiv", 110, 25, |rng| {
+        let c = gen::dim(rng, 2);
+        let f = gen::dim(rng, 3);
+        let h = gen::dim(rng, 3) * 2;
+        let w = gen::dim(rng, 3) * 2;
+        let x = gen::vec_i8(rng, c * h * w);
+        let wts = gen::mat_i8(rng, f, c * 9);
+        let mut cols = Mat::zeros(c * 9, h * w);
+        im2col(&x, c, h, w, &mut cols);
+        let mut out = Mat::zeros(f, h * w);
+        gemm_nn(&wts, &cols, &mut out);
+        // direct conv
+        for fi in 0..f {
+            for y in 0..h as i32 {
+                for xo in 0..w as i32 {
+                    let mut acc = 0i64;
+                    for ci in 0..c {
+                        for ky in 0..3i32 {
+                            for kx in 0..3i32 {
+                                let (sy, sx) = (y + ky - 1, xo + kx - 1);
+                                if sy < 0 || sy >= h as i32 || sx < 0 || sx >= w as i32 {
+                                    continue;
+                                }
+                                let xv = x[ci * h * w
+                                    + sy as usize * w + sx as usize];
+                                let wv = wts.at(fi, ci * 9 + (ky * 3 + kx) as usize);
+                                acc += xv as i64 * wv as i64;
+                            }
+                        }
+                    }
+                    if out.at(fi, (y * w as i32 + xo) as usize) as i64 != acc {
+                        return Err(format!("conv mismatch f={fi} y={y} x={xo}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mask_monotone_in_theta() {
+    // kept-edge count is non-increasing in θ (the fixed-threshold pruning).
+    check("theta-monotone", 111, 200, |rng| {
+        let n = gen::dim(rng, 64);
+        let scores = gen::vec_i8(rng, n);
+        let t1 = rng.int_in(-127, 126);
+        let t2 = t1 + 1;
+        let kept1 = scores.iter().filter(|&&s| s >= t1).count();
+        let kept2 = scores.iter().filter(|&&s| s >= t2).count();
+        if kept2 <= kept1 {
+            Ok(())
+        } else {
+            Err("raising theta kept more edges".into())
+        }
+    });
+}
+
+#[test]
+fn prop_prng_streams_disjoint_for_distinct_seeds() {
+    check("prng-distinct", 112, 50, |rng| {
+        let s1 = rng.next_u64() as u32 | 1;
+        let s2 = s1.wrapping_add(1);
+        let mut a = priot::prng::XorShift32::new(s1);
+        let mut b = priot::prng::XorShift32::new(s2);
+        let eq = (0..16).filter(|_| a.next_u32() == b.next_u32()).count();
+        if eq < 4 {
+            Ok(())
+        } else {
+            Err(format!("streams too similar: {eq}/16 equal"))
+        }
+    });
+}
+
+#[test]
+fn prop_engine_forward_scales_with_input_zeroing() {
+    // zeroing the input forces logits through weights only via padding:
+    // all-zero input ⇒ all-zero logits (no bias terms anywhere).
+    use priot::engine::Engine;
+    use priot::quant::Scales;
+    use priot::spec::NetSpec;
+    check("zero-input-zero-logits", 113, 10, |rng| {
+        let spec = NetSpec::tinycnn();
+        let weights = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                gen::mat_i8(rng, r, c)
+            })
+            .collect();
+        let mut e =
+            Engine::new(spec.clone(), weights, Scales::default_for(4)).unwrap();
+        let img = vec![0i32; spec.input_len()];
+        e.forward(&img, None, false);
+        if e.logits().iter().all(|&v| v == 0) {
+            Ok(())
+        } else {
+            Err("nonzero logits from zero input".into())
+        }
+    });
+}
+
+#[test]
+fn prop_serial_roundtrip() {
+    use priot::serial::{load_weights, save_weights, TensorI8};
+    check("serial-roundtrip", 114, 20, |rng: &mut XorShift64| {
+        let dir = std::env::temp_dir().join("priot_prop_serial");
+        std::fs::create_dir_all(&dir).ok();
+        let path = dir.join(format!("t{}.bin", rng.below(1 << 30)));
+        let tensors: Vec<TensorI8> = (0..gen::dim(rng, 4))
+            .map(|_| {
+                let r = gen::dim(rng, 8);
+                let c = gen::dim(rng, 8);
+                TensorI8 {
+                    dims: vec![r, c],
+                    data: (0..r * c).map(|_| rng.int_in(-128, 127) as i8).collect(),
+                }
+            })
+            .collect();
+        save_weights(&path, &tensors).map_err(|e| e.to_string())?;
+        let back = load_weights(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if back == tensors {
+            Ok(())
+        } else {
+            Err("roundtrip mismatch".into())
+        }
+    });
+}
