@@ -1,20 +1,24 @@
 //! Memory-constrained deployment planning: given the RP2040's 264 KB SRAM,
 //! sweep PRIOT-S configurations and pick the best one that fits a given
 //! budget — the §III-B/§IV-B trade-off (accuracy vs. score memory) as a
-//! decision procedure.
+//! decision procedure.  Each candidate is one [`Session`] over a shared
+//! [`Backbone`].
 //!
 //! ```bash
 //! cargo run --release --example memory_constrained [-- --budget-kb 132]
 //! ```
 
+use std::path::Path;
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use priot::cli::Args;
 use priot::config::{Config, ExperimentConfig, Method, Selection};
-use priot::coordinator::{run_training, RunOptions};
 use priot::data;
-use priot::methods::EngineBackend;
+use priot::methods::{MethodPlugin, Priot, PriotS};
 use priot::pico::{self, MethodParams};
+use priot::session::{Backbone, Session};
 use priot::spec::NetSpec;
 
 fn main() -> Result<()> {
@@ -24,7 +28,14 @@ fn main() -> Result<()> {
     let budget = budget_kb * 1024;
     let epochs: usize = args.option("epochs").unwrap_or("8").parse()?;
     let limit: usize = args.option("limit").unwrap_or("384").parse()?;
+    let artifacts = args.option("artifacts").unwrap_or("artifacts").to_string();
     let spec = NetSpec::tinycnn();
+
+    let mut c = Config::default();
+    c.set("artifacts", &artifacts);
+    let cfg = ExperimentConfig::from_config(&c)?;
+    let pair = data::load_pair(&cfg)?;
+    let backbone = Backbone::load(Path::new(&artifacts), "tinycnn")?;
 
     println!("SRAM budget: {budget_kb} KB ({budget} B); device: RP2040 (264 KB total)\n");
     println!("| candidate | memory [B] | fits | best acc | Δ vs backbone |");
@@ -41,27 +52,26 @@ fn main() -> Result<()> {
 
     let mut chosen: Option<(String, f64, usize)> = None;
     for (label, method, frac) in candidates {
-        let params = match method {
-            Method::Priot => MethodParams::new(Method::Priot),
-            _ => MethodParams::priot_s(frac, Selection::WeightBased),
-        };
+        let (params, plugin): (MethodParams, Box<dyn MethodPlugin>) =
+            match method {
+                Method::Priot => (MethodParams::new(Method::Priot),
+                                  Box::new(Priot::new())),
+                _ => (MethodParams::priot_s(frac, Selection::WeightBased),
+                      Box::new(PriotS::new(frac, Selection::WeightBased))),
+            };
         let mem = pico::memory_footprint(&spec, params).total();
         let fits = mem <= budget;
         let (best, delta) = if fits || chosen.is_none() {
             // evaluate accuracy (short run) for any fitting candidate and
             // for the first (reference) one
-            let mut c = Config::default();
-            c.set("artifacts", args.option("artifacts").unwrap_or("artifacts"));
-            c.set("method", method.name());
-            c.set("selection", "weight");
-            let mut cfg = ExperimentConfig::from_config(&c)?;
-            cfg.epochs = epochs;
-            cfg.limit = limit;
-            cfg.frac_scored = frac;
-            let pair = data::load_pair(&cfg)?;
-            let mut backend = EngineBackend::from_config(&cfg)?;
-            let opts = RunOptions::from_config(&cfg);
-            let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+            let mut session = Session::builder()
+                .backbone(Arc::clone(&backbone))
+                .method_boxed(plugin)
+                .seed(1)
+                .epochs(epochs)
+                .limit(limit)
+                .build()?;
+            let m = session.train(&pair.train, &pair.test);
             (m.best_accuracy(), m.best_accuracy() - m.accuracy[0])
         } else {
             (f64::NAN, f64::NAN)

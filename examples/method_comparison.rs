@@ -1,51 +1,61 @@
 //! Side-by-side comparison of all four training methods on the same
-//! rotated-digits task — a one-seed miniature of the paper's Table I that
-//! also demonstrates the static-NITI collapse (Fig. 3) live.
+//! rotated-digits task — a one-seed miniature of the paper's Table I run
+//! as a [`Fleet`]: one device per method, all sharing a single backbone
+//! and running concurrently.  Also demonstrates the static-NITI collapse
+//! (Fig. 3) live.
 //!
 //! ```bash
 //! cargo run --release --example method_comparison [-- --epochs 12]
 //! ```
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use priot::cli::Args;
-use priot::config::{Config, ExperimentConfig, Method, Selection};
-use priot::coordinator::{run_training, RunOptions};
+use priot::config::{Config, ExperimentConfig, Selection};
 use priot::data;
-use priot::methods::EngineBackend;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
 use priot::report::sparkline;
+use priot::session::{Backbone, Fleet};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let epochs: usize = args.option("epochs").unwrap_or("12").parse()?;
     let limit: usize = args.option("limit").unwrap_or("512").parse()?;
+    let artifacts = args.option("artifacts").unwrap_or("artifacts").to_string();
+
+    let mut c = Config::default();
+    c.set("artifacts", &artifacts);
+    let cfg = ExperimentConfig::from_config(&c)?;
+    let pair = data::load_pair(&cfg)?;
+    let backbone = Backbone::load(Path::new(&artifacts), "tinycnn")?;
 
     println!("on-device transfer: digits rotated 30°, {epochs} epochs, {limit} images\n");
+
+    let roster: Vec<(&str, Box<dyn MethodPlugin>)> = vec![
+        ("static-NITI  ", Box::new(Niti::static_scale())),
+        ("dynamic-NITI ", Box::new(Niti::dynamic())),
+        ("PRIOT        ", Box::new(Priot::new())),
+        ("PRIOT-S 90%/w", Box::new(PriotS::new(0.1, Selection::WeightBased))),
+        ("PRIOT-S 80%/w", Box::new(PriotS::new(0.2, Selection::WeightBased))),
+    ];
+    let mut fleet = Fleet::builder(backbone)
+        .epochs(epochs)
+        .limit(limit)
+        .track_pruning(true);
+    for (label, plugin) in roster {
+        fleet = fleet.device(label, 1, plugin, &pair.train, &pair.test);
+    }
+    let report = fleet.run()?;
+
     println!("| method | before | best | final | overflow | history |");
     println!("|---|---|---|---|---|---|");
-
-    for (label, method, frac, sel) in [
-        ("static-NITI  ", Method::StaticNiti, 0.0, Selection::Random),
-        ("dynamic-NITI ", Method::DynamicNiti, 0.0, Selection::Random),
-        ("PRIOT        ", Method::Priot, 1.0, Selection::Random),
-        ("PRIOT-S 90%/w", Method::PriotS, 0.1, Selection::WeightBased),
-        ("PRIOT-S 80%/w", Method::PriotS, 0.2, Selection::WeightBased),
-    ] {
-        let mut c = Config::default();
-        c.set("artifacts", args.option("artifacts").unwrap_or("artifacts"));
-        c.set("method", method.name());
-        let mut cfg = ExperimentConfig::from_config(&c)?;
-        cfg.epochs = epochs;
-        cfg.limit = limit;
-        cfg.frac_scored = frac;
-        cfg.selection = sel;
-        let pair = data::load_pair(&cfg)?;
-        let mut backend = EngineBackend::from_config(&cfg)?;
-        let opts = RunOptions::from_config(&cfg);
-        let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+    for d in &report.devices {
+        let m = &d.metrics;
         println!(
             "| {} | {:.1}% | {:.1}% | {:.1}% | {} | {} |",
-            label,
+            d.name,
             m.accuracy[0] * 100.0,
             m.best_accuracy() * 100.0,
             m.final_accuracy() * 100.0,
@@ -54,7 +64,13 @@ fn main() -> Result<()> {
         );
     }
     println!(
-        "\nExpected shape (paper Table I / Fig. 3): static-NITI stays at the\n\
+        "\n({} sessions in {:.1}s on {} threads — one shared backbone)",
+        report.devices.len(),
+        report.wall_secs,
+        report.threads
+    );
+    println!(
+        "Expected shape (paper Table I / Fig. 3): static-NITI stays at the\n\
          backbone accuracy then collapses with overflow; PRIOT climbs and\n\
          stays stable; PRIOT-S lands between; dynamic-NITI is the reference."
     );

@@ -3,8 +3,8 @@
 //! 1. a backbone pre-trained + calibrated off-device (`make artifacts`);
 //! 2. the device observes a *drifted* distribution (rotation grows over
 //!    time — e.g., a camera bracket loosening);
-//! 3. PRIOT adapts on-device after each drift step, integer-only, with the
-//!    static scales fixed at deployment time;
+//! 3. one persistent [`Session`] adapts on-device after each drift step,
+//!    integer-only, with the static scales fixed at deployment time;
 //! 4. the Pico cost model accounts for what the adaptation costs.
 //!
 //! This is the anomaly-adaptation scenario the paper's introduction
@@ -18,10 +18,10 @@ use anyhow::Result;
 
 use priot::cli::Args;
 use priot::config::{Config, ExperimentConfig, Method};
-use priot::coordinator::{evaluate, run_training, RunOptions};
 use priot::data;
-use priot::methods::{EngineBackend, StepBackend};
+use priot::methods::Priot;
 use priot::pico::{self, MethodParams};
+use priot::session::Session;
 use priot::spec::NetSpec;
 
 fn main() -> Result<()> {
@@ -48,27 +48,30 @@ fn main() -> Result<()> {
         cost.total_ms()
     );
 
-    // The same trained scores persist across drift steps: adaptation is
-    // cumulative, exactly as it would be on the device.
+    // The same trained scores persist across drift steps: the session is
+    // built once and adaptation is cumulative, exactly as on the device.
+    let mut session = Session::builder()
+        .artifacts(&artifacts)
+        .model("tinycnn")
+        .method(Priot::new())
+        .seed(1)
+        .epochs(epochs)
+        .limit(limit)
+        .build()?;
+
     let mut c = Config::default();
     c.set("artifacts", &artifacts);
-    c.set("method", "priot");
     c.set("angle", "30");
     let cfg = ExperimentConfig::from_config(&c)?;
-    let mut backend = EngineBackend::from_config(&cfg)?;
-
-    let mut opts = RunOptions::from_config(&cfg);
-    opts.epochs = epochs;
-    opts.limit = limit;
 
     for (phase, angle) in [(1usize, 30u32), (2, 45)] {
         println!("\n=== phase {phase}: drift to {angle}° ===");
         let mut c2 = cfg.clone();
         c2.angle = angle;
         let pair = data::load_pair(&c2)?;
-        let before = evaluate(&mut backend, &pair.test, limit);
+        let before = session.evaluate(&pair.test);
         println!("accuracy after drift, before adaptation: {:.1}%", before * 100.0);
-        let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+        let m = session.train(&pair.train, &pair.test);
         println!(
             "adapted over {epochs} epochs: best {:.1}%  (+{:.1} p.p.), \
              history {}",
@@ -81,7 +84,7 @@ fn main() -> Result<()> {
             "modeled on-device adaptation cost: {:.1} s of Pico compute",
             steps * cost.total_ms() / 1e3
         );
-        if let Some(scores) = backend.scores() {
+        if let Some(scores) = session.scores() {
             let pruned: usize = scores
                 .iter()
                 .map(|s| s.iter().filter(|&&v| v < -64).count())

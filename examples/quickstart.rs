@@ -1,5 +1,6 @@
 //! Quickstart: load the deployed artifacts, adapt the backbone to a rotated
-//! distribution with PRIOT, and print the accuracy trajectory.
+//! distribution with PRIOT through the fluent [`Session`] builder, and
+//! print the accuracy trajectory.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -8,40 +9,40 @@
 use anyhow::Result;
 
 use priot::config::{Config, ExperimentConfig};
-use priot::coordinator::{run_training, RunOptions};
 use priot::data;
-use priot::methods::EngineBackend;
+use priot::methods::Priot;
 use priot::report::sparkline;
+use priot::session::Session;
 
 fn main() -> Result<()> {
-    // 1. Point at the artifacts produced by `make artifacts`.
+    // 1. Load the on-device datasets (u8 images + labels) exported by
+    //    `make artifacts`.
     let mut cfg = Config::default();
     cfg.set("artifacts", "artifacts");
-    cfg.set("model", "tinycnn");
-    cfg.set("method", "priot"); // the paper's method; θ defaults to -64
-    cfg.set("dataset", "digits");
     cfg.set("angle", "30"); // the on-device distribution: digits rotated 30°
-    cfg.set("epochs", "10");
-    cfg.set("seed", "1");
     let cfg = ExperimentConfig::from_config(&cfg)?;
-
-    // 2. Load the on-device datasets (u8 images + labels).
     let pair = data::load_pair(&cfg)?;
     println!(
         "train: {} images {}x{}x{}   test: {} images",
         pair.train.n, pair.train.c, pair.train.h, pair.train.w, pair.test.n
     );
 
-    // 3. Build the device backend: quantized backbone + PRIOT scores.
-    let mut backend = EngineBackend::from_config(&cfg)?;
+    // 2. Build the session: quantized backbone + the PRIOT method (the
+    //    paper's θ = −64), pure-Rust engine backend.
+    let mut session = Session::builder()
+        .artifacts("artifacts")
+        .model("tinycnn")
+        .method(Priot::new())
+        .seed(1)
+        .epochs(10)
+        .verbose(true)
+        .build()?;
 
-    // 4. Run on-device transfer learning (batch 1, integer-only, static
+    // 3. Run on-device transfer learning (batch 1, integer-only, static
     //    scales — exactly what would execute on the Pico).
-    let mut opts = RunOptions::from_config(&cfg);
-    opts.verbose = true;
-    let metrics = run_training(&mut backend, &pair.train, &pair.test, &opts);
+    let metrics = session.train(&pair.train, &pair.test);
 
-    // 5. Report.
+    // 4. Report.
     println!();
     println!("accuracy history : {}", sparkline(&metrics.accuracy));
     println!("before transfer  : {:.2}%", metrics.accuracy[0] * 100.0);

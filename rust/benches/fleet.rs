@@ -1,0 +1,81 @@
+//! Bench: fleet throughput — how many concurrent adaptation sessions the
+//! host sustains over one shared backbone, in sessions/sec and steps/sec.
+//! Sweeps the worker-thread count to show scaling; the backbone weights
+//! and scales are shared via `Arc` (no per-session copy).
+//! `cargo bench --bench fleet [-- --devices N --epochs N --limit N]`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Priot, PriotS};
+use priot::session::{Backbone, Fleet};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let devices = get("--devices", 16);
+    let epochs = get("--epochs", 2);
+    let limit = get("--limit", 256);
+
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("tinycnn.weights.bin").exists() {
+        eprintln!("[fleet] artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let backbone = Backbone::load(artifacts, "tinycnn").expect("backbone");
+    let mut c = priot::config::Config::default();
+    c.set("artifacts", "artifacts");
+    let cfg = priot::config::ExperimentConfig::from_config(&c).expect("cfg");
+    let pair = priot::data::load_pair(&cfg).expect("data");
+
+    println!(
+        "\n## fleet throughput — {devices} devices × {epochs} epochs × \
+         {limit} images (tinycnn, shared backbone)\n"
+    );
+    println!("| threads | wall [s] | sessions/s | steps/s |");
+    println!("|---|---|---|---|");
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut sweep: Vec<usize> = vec![1];
+    let mut t = 2;
+    while t < max_threads {
+        sweep.push(t);
+        t *= 2;
+    }
+    if *sweep.last().unwrap() != max_threads {
+        sweep.push(max_threads);
+    }
+    for threads in sweep {
+        let mut fleet = Fleet::builder(Arc::clone(&backbone))
+            .epochs(epochs)
+            .limit(limit)
+            .track_pruning(false) // hot path: skip the per-epoch scores scan
+            .threads(threads);
+        for i in 0..devices {
+            let plugin: Box<dyn MethodPlugin> = if i % 2 == 0 {
+                Box::new(Priot::new())
+            } else {
+                Box::new(PriotS::new(0.1, Selection::WeightBased))
+            };
+            fleet = fleet.device(format!("dev-{i:02}"), (i + 1) as u32, plugin,
+                                 &pair.train, &pair.test);
+        }
+        let report = fleet.run().expect("fleet run");
+        println!(
+            "| {} | {:.2} | {:.2} | {:.0} |",
+            report.threads,
+            report.wall_secs,
+            report.sessions_per_sec(),
+            report.steps_per_sec()
+        );
+    }
+    println!("\n(each session = one device adapting its own PRIOT/PRIOT-S state)");
+}

@@ -8,8 +8,8 @@ use std::time::Instant;
 
 use priot::config::{Config, ExperimentConfig};
 use priot::data;
-use priot::methods::{EngineBackend, StepBackend};
 use priot::prng::XorShift64;
+use priot::session::Session;
 use priot::tensor::{gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
 
 fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
@@ -87,28 +87,28 @@ fn main() {
             c.set("frac_scored", "0.1");
             let cfg = ExperimentConfig::from_config(&c).unwrap();
             let pair = data::load_pair(&cfg).unwrap();
-            let mut backend = EngineBackend::from_config(&cfg).unwrap();
+            let mut session = Session::from_experiment(&cfg).unwrap();
             let mut img = vec![0i32; pair.train.image_len()];
             pair.train.image_i32(0, &mut img);
             let macs = 3.0 * 333_056.0; // fwd + δx + δW
             time_it(label, macs, 300, || {
-                black_box(backend.train_step(black_box(&img), 3));
+                black_box(session.train_step(black_box(&img), 3));
             });
         }
         // PJRT comparison (one method is representative)
+        #[cfg(feature = "pjrt")]
         if artifacts.join("tinycnn_priot_step.hlo.txt").exists() {
-            let rt = priot::runtime::Runtime::new(artifacts).unwrap();
             let mut c = Config::default();
             c.set("artifacts", "artifacts");
             c.set("method", "priot");
+            c.set("backend", "pjrt");
             let cfg = ExperimentConfig::from_config(&c).unwrap();
             let pair = data::load_pair(&cfg).unwrap();
-            let mut backend =
-                priot::runtime::PjrtBackend::from_config(&cfg, &rt).unwrap();
+            let mut session = Session::from_experiment(&cfg).unwrap();
             let mut img = vec![0i32; pair.train.image_len()];
             pair.train.image_i32(0, &mut img);
             time_it("pjrt step priot (AOT/XLA path)", 3.0 * 333_056.0, 50, || {
-                black_box(backend.train_step(black_box(&img), 3));
+                black_box(session.train_step(black_box(&img), 3));
             });
         }
     } else {

@@ -17,12 +17,35 @@ pub struct Config {
     values: BTreeMap<String, String>,
 }
 
+/// Strip a `#` comment, ignoring `#` characters inside double-quoted
+/// strings (a naive `split('#')` would truncate `note = "a # b"`).
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, ch) in raw.char_indices() {
+        match ch {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
+/// Remove one matching pair of surrounding double quotes, if present.
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
 impl Config {
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
         for (ln, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -41,7 +64,7 @@ impl Config {
             } else {
                 format!("{}.{}", section, k.trim())
             };
-            let val = v.trim().trim_matches('"').to_string();
+            let val = unquote(v.trim()).to_string();
             values.insert(key, val);
         }
         Ok(Self { values })
@@ -171,6 +194,9 @@ pub struct ExperimentConfig {
     pub backend: String,
     /// Cap on train/test samples (0 = all).
     pub limit: usize,
+    /// Record per-layer pruned fractions + mask flips each epoch (a full
+    /// scores scan per epoch on the hot path; on by default).
+    pub track_pruning: bool,
 }
 
 impl ExperimentConfig {
@@ -193,6 +219,7 @@ impl ExperimentConfig {
             selection: Selection::parse(cfg.get_or("selection", "weight"))?,
             backend: cfg.get_or("backend", "engine").to_string(),
             limit: cfg.get_usize("limit", 0)?,
+            track_pruning: cfg.get_bool("track_pruning", true)?,
         })
     }
 
@@ -243,6 +270,42 @@ mod tests {
         assert!(Config::parse("no_equals_here").is_err());
         let cfg = Config::parse("x = notanumber").unwrap();
         assert!(cfg.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn quoted_values_keep_hashes() {
+        // regression: split('#') used to truncate quoted values
+        let cfg = Config::parse(
+            "note = \"rotated # 30 degrees\"\ntag = \"a#b\" # trailing comment",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("note"), Some("rotated # 30 degrees"));
+        assert_eq!(cfg.get("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn unquoting_removes_one_matching_pair_only() {
+        let cfg = Config::parse("a = \"\"\nb = \"x\"\nc = \"\"y\"\"").unwrap();
+        assert_eq!(cfg.get("a"), Some(""));
+        assert_eq!(cfg.get("b"), Some("x"));
+        assert_eq!(cfg.get("c"), Some("\"y\""), "inner quotes survive");
+    }
+
+    #[test]
+    fn unclosed_section_reports_line() {
+        let err = Config::parse("ok = 1\n[run\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(err.to_string().contains("unclosed section"), "{err}");
+    }
+
+    #[test]
+    fn track_pruning_configurable() {
+        let mut cfg = Config::default();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(e.track_pruning, "default on");
+        cfg.set("track_pruning", "false");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(!e.track_pruning);
     }
 
     #[test]

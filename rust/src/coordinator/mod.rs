@@ -10,9 +10,10 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::engine::StepOut;
-use crate::methods::{EngineBackend, StepBackend};
+use crate::methods::{plugin_for, StepBackend};
 use crate::metrics::{MeanStd, RunMetrics};
 use crate::serial::Dataset;
+use crate::session::{Backbone, Fleet};
 
 /// Options controlling a single run.
 #[derive(Clone, Debug)]
@@ -21,7 +22,8 @@ pub struct RunOptions {
     /// Cap on train/test samples (0 = use all).
     pub limit: usize,
     /// Record per-layer pruned fractions + mask-flip counts per epoch
-    /// (costs a scores scan per epoch).
+    /// (costs a scores scan per epoch — configurable via the
+    /// `track_pruning` config key).
     pub track_pruning: bool,
     /// Print a line per epoch.
     pub verbose: bool,
@@ -32,17 +34,54 @@ impl RunOptions {
         Self {
             epochs: cfg.epochs,
             limit: cfg.limit,
-            track_pruning: true,
+            track_pruning: cfg.track_pruning,
             verbose: false,
         }
     }
 }
 
-fn capped(n: usize, limit: usize) -> usize {
+/// Cap `n` samples at `limit` (0 = no cap).
+pub fn capped(n: usize, limit: usize) -> usize {
     if limit == 0 {
         n
     } else {
         n.min(limit)
+    }
+}
+
+/// Summary of one pass over (a cap of) the training set.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochReport {
+    pub steps: usize,
+    pub train_accuracy: f64,
+    pub overflow: u64,
+    pub secs: f64,
+}
+
+/// One training epoch over (a cap of) `train` — the single implementation
+/// of the inner step loop, shared by [`run_training`] and
+/// [`crate::session::Session::train_epoch`].
+pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
+                       limit: usize) -> EpochReport {
+    let n = capped(train.n, limit);
+    let mut img = vec![0i32; train.image_len()];
+    let mut overflow = 0u64;
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        train.image_i32(i, &mut img);
+        let label = train.label(i);
+        let StepOut { logits, overflow: ovf } = backend.train_step(&img, label);
+        overflow += ovf as u64;
+        if crate::engine::argmax(&logits) == label {
+            correct += 1;
+        }
+    }
+    EpochReport {
+        steps: n,
+        train_accuracy: correct as f64 / n.max(1) as f64,
+        overflow,
+        secs: t0.elapsed().as_secs_f64(),
     }
 }
 
@@ -103,8 +142,6 @@ fn mask_snapshot(backend: &dyn StepBackend) -> Vec<bool> {
 pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
                     test: &Dataset, opts: &RunOptions) -> RunMetrics {
     let mut m = RunMetrics::default();
-    let n_train = capped(train.n, opts.limit);
-    let mut img = vec![0i32; train.image_len()];
 
     m.accuracy.push(evaluate(backend, test, opts.limit));
     let mut prev_mask = if opts.track_pruning {
@@ -117,21 +154,11 @@ pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
     }
 
     for epoch in 0..opts.epochs {
-        let t0 = std::time::Instant::now();
-        let mut overflow = 0u64;
-        let mut train_correct = 0usize;
-        for i in 0..n_train {
-            train.image_i32(i, &mut img);
-            let label = train.label(i);
-            let StepOut { logits, overflow: ovf } = backend.train_step(&img, label);
-            overflow += ovf as u64;
-            if crate::engine::argmax(&logits) == label {
-                train_correct += 1;
-            }
-        }
-        m.epoch_secs.push(t0.elapsed().as_secs_f64());
-        m.overflow.push(overflow);
-        m.train_accuracy.push(train_correct as f64 / n_train.max(1) as f64);
+        let ep = train_one_epoch(backend, train, opts.limit);
+        let overflow = ep.overflow;
+        m.epoch_secs.push(ep.secs);
+        m.overflow.push(ep.overflow);
+        m.train_accuracy.push(ep.train_accuracy);
         m.accuracy.push(evaluate(backend, test, opts.limit));
         if opts.track_pruning {
             let fr = pruned_fractions(backend);
@@ -172,43 +199,24 @@ pub struct SweepResult {
     pub runs: Vec<RunMetrics>,
 }
 
-/// Run `seeds.len()` independent runs (one per seed) across worker threads
-/// and aggregate the Table I statistic.  Each run builds its own backend
-/// from `cfg` (seed substituted), so runs are fully isolated.
+/// Run `seeds.len()` independent runs (one per seed) as a [`Fleet`] and
+/// aggregate the Table I statistic.  The backbone is loaded **once** and
+/// shared read-only across all seed sessions (pre-fleet, every seed
+/// re-read the weight file and held its own copy); each session owns only
+/// its method state, so runs stay fully isolated.
 pub fn sweep_seeds(cfg: &ExperimentConfig, train: &Dataset, test: &Dataset,
                    opts: &RunOptions, seeds: &[u32]) -> Result<SweepResult> {
-    let n_threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(seeds.len().max(1));
-    let results: Vec<RunMetrics> = std::thread::scope(|s| {
-        let chunks: Vec<Vec<u32>> = seeds
-            .chunks(seeds.len().div_ceil(n_threads))
-            .map(|c| c.to_vec())
-            .collect();
-        let handles: Vec<_> = chunks
-            .into_iter()
-            .map(|chunk| {
-                s.spawn(move || -> Result<Vec<RunMetrics>> {
-                    let mut out = Vec::new();
-                    for seed in chunk {
-                        let mut c = cfg.clone();
-                        c.seed = seed;
-                        let mut backend = EngineBackend::from_config(&c)?;
-                        out.push(run_training(&mut backend, train, test, opts));
-                    }
-                    Ok(out)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("sweep worker panicked"))
-            .collect::<Result<Vec<_>>>()
-            .map(|v| v.into_iter().flatten().collect())
-    })?;
-    let bests: Vec<f64> = results.iter().map(|r| r.best_accuracy()).collect();
-    Ok(SweepResult { best: MeanStd::of(&bests), runs: results })
+    let backbone = Backbone::load(&cfg.artifacts_dir, &cfg.model)?;
+    let mut fleet = Fleet::builder(backbone).options(opts.clone());
+    for &seed in seeds {
+        fleet = fleet.device(format!("seed-{seed}"), seed, plugin_for(cfg)?,
+                             train, test);
+    }
+    let report = fleet.run()?;
+    let bests = report.best_accuracies();
+    let runs: Vec<RunMetrics> =
+        report.devices.into_iter().map(|d| d.metrics).collect();
+    Ok(SweepResult { best: MeanStd::of(&bests), runs })
 }
 
 #[cfg(test)]

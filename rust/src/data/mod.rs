@@ -18,9 +18,8 @@ pub struct DataPair {
 }
 
 pub fn load_pair(cfg: &ExperimentConfig) -> Result<DataPair> {
-    let train = load_dataset(&cfg.train_dataset_path()).with_context(|| {
-        format!("loading train set (did you run `make artifacts`?)")
-    })?;
+    let train = load_dataset(&cfg.train_dataset_path())
+        .context("loading train set (did you run `make artifacts`?)")?;
     let test = load_dataset(&cfg.test_dataset_path())?;
     Ok(DataPair { train, test })
 }

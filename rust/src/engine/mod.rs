@@ -11,6 +11,8 @@
 //! The hot path is allocation-free: all tape and gradient buffers live in
 //! the [`Workspace`], sized once from the [`NetSpec`].
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::quant::{
@@ -106,30 +108,48 @@ pub struct PruneState<'a> {
 }
 
 /// The integer network engine.
+///
+/// Backbone weights and the static scale table are held behind `Arc` so a
+/// [`crate::session::Fleet`] of concurrent sessions shares one copy of the
+/// read-only backbone.  NITI (which *does* update weights) transparently
+/// copies-on-write via [`Arc::make_mut`] — a lone session mutates in place,
+/// a fleet session forks its own diverging copy on the first update.
 pub struct Engine {
     pub spec: NetSpec,
-    pub scales: Scales,
-    pub weights: Vec<Mat>,
+    pub scales: Arc<Scales>,
+    pub weights: Arc<Vec<Mat>>,
     ws: Workspace,
+}
+
+fn check_shapes(spec: &NetSpec, weights: &[Mat], scales: &Scales) -> Result<()> {
+    if weights.len() != spec.layers.len() {
+        bail!("expected {} weight tensors, got {}", spec.layers.len(),
+              weights.len());
+    }
+    if scales.layers.len() != spec.layers.len() {
+        bail!("expected {} scale rows, got {}", spec.layers.len(),
+              scales.layers.len());
+    }
+    for (li, (l, w)) in spec.layers.iter().zip(weights.iter()).enumerate() {
+        let (r, c) = l.weight_shape();
+        if w.rows != r || w.cols != c {
+            bail!("layer {li}: weight shape ({},{}) != spec ({r},{c})",
+                  w.rows, w.cols);
+        }
+    }
+    Ok(())
 }
 
 impl Engine {
     pub fn new(spec: NetSpec, weights: Vec<Mat>, scales: Scales) -> Result<Self> {
-        if weights.len() != spec.layers.len() {
-            bail!("expected {} weight tensors, got {}", spec.layers.len(),
-                  weights.len());
-        }
-        if scales.layers.len() != spec.layers.len() {
-            bail!("expected {} scale rows, got {}", spec.layers.len(),
-                  scales.layers.len());
-        }
-        for (li, (l, w)) in spec.layers.iter().zip(weights.iter()).enumerate() {
-            let (r, c) = l.weight_shape();
-            if w.rows != r || w.cols != c {
-                bail!("layer {li}: weight shape ({},{}) != spec ({r},{c})",
-                      w.rows, w.cols);
-            }
-        }
+        Self::shared(spec, Arc::new(weights), Arc::new(scales))
+    }
+
+    /// Build against an already-shared backbone (the fleet path): no weight
+    /// or scale data is copied, only the per-session workspace is allocated.
+    pub fn shared(spec: NetSpec, weights: Arc<Vec<Mat>>, scales: Arc<Scales>)
+                  -> Result<Self> {
+        check_shapes(&spec, &weights, &scales)?;
         let ws = Workspace::new(&spec);
         Ok(Self { spec, scales, weights, ws })
     }
@@ -395,6 +415,9 @@ impl Engine {
         let logits = self.logits().to_vec();
         int_softmax_grad(&logits, label, &mut self.ws.dlogits);
         self.backward(dynamic);
+        // Copy-on-write: clones the backbone only if another session still
+        // shares it (see the `Engine` docs).
+        let weights = Arc::make_mut(&mut self.weights);
         for li in 0..self.spec.layers.len() {
             let g = &self.ws.layers[li].grad;
             let mut s = self.scales.layers[li].grad;
@@ -403,7 +426,7 @@ impl Engine {
             }
             let s = s + self.scales.lr_shift;
             let base = (li as u32) << 24;
-            let w = &mut self.weights[li];
+            let w = &mut weights[li];
             for (i, (wv, &gv)) in
                 w.data.iter_mut().zip(g.data.iter()).enumerate()
             {
@@ -516,7 +539,7 @@ impl Engine {
                 }
             }
         }
-        let mut out = self.scales.clone();
+        let mut out = (*self.scales).clone();
         for li in 0..nl {
             if h_fwd[li].total() > 0 {
                 out.layers[li].fwd = h_fwd[li].mode();

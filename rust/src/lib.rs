@@ -5,20 +5,56 @@
 //!
 //! * **Layer 1/2** (build-time Python): Pallas integer-GEMM kernels composed
 //!   into JAX training-step graphs, AOT-lowered to HLO text in `artifacts/`.
-//! * **Layer 3** (this crate): the on-device-learning coordinator, the pure
-//!   Rust integer training engine ("picoengine" — the device
-//!   implementation), the Raspberry Pi Pico cost/memory simulator, and the
-//!   experiment harness that regenerates every table and figure in the
-//!   paper.
+//! * **Layer 3** (this crate): the on-device-learning stack — the pure Rust
+//!   integer training engine ("picoengine"), the Raspberry Pi Pico
+//!   cost/memory simulator, and the experiment harness that regenerates
+//!   every table and figure in the paper.
 //!
-//! Two interchangeable step backends implement [`methods::StepBackend`]:
-//! [`engine`] (pure Rust) and [`runtime`] (PJRT execution of the AOT
-//! artifacts).  Integration tests assert they agree **bit-for-bit** — the
-//! entire stack is deterministic integer arithmetic.
+//! ## The Session/Fleet API
+//!
+//! All training runs are constructed through [`session`]:
+//!
+//! ```no_run
+//! use priot::session::Session;
+//! use priot::methods::PriotS;
+//! use priot::config::Selection;
+//!
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .model("tinycnn")
+//!     .method(PriotS::new(0.1, Selection::WeightBased))
+//!     .seed(7)
+//!     .epochs(10)
+//!     .build()?;
+//! // session.train(&train, &test) / .predict(..) / .save(..) / .restore(..)
+//! # anyhow::Ok(())
+//! ```
+//!
+//! * [`session::Backbone`] — the deployed read-only model, loaded once and
+//!   shared across sessions via `Arc` (no per-session weight copies).
+//! * [`session::Session`] — one adapting device: a training method bound
+//!   to an execution backend.
+//! * [`session::Fleet`] — many concurrent sessions over one backbone: the
+//!   Table I seed sweep, the `priot fleet` multi-device simulation, and
+//!   the `fleet` throughput bench all build on it.
+//!
+//! ## Methods are plugins
+//!
+//! Training methods implement [`methods::MethodPlugin`]
+//! (init/step/predict/checkpoint hooks).  Built-ins: [`methods::Niti`],
+//! [`methods::Priot`], [`methods::PriotS`].  Adding a method touches
+//! neither the engine nor the coordinator.
+//!
+//! ## Backends
+//!
+//! Two interchangeable executors drive a plugin: the pure-Rust [`engine`]
+//! and (behind the `pjrt` cargo feature) PJRT execution of the AOT
+//! artifacts ([`runtime`]).  Integration tests assert they agree
+//! **bit-for-bit** — the entire stack is deterministic integer arithmetic.
 //!
 //! Entry points: the `priot` binary (`rust/src/main.rs`), the examples in
 //! `examples/`, and the benches in `rust/benches/` (one per paper
-//! table/figure).
+//! table/figure, plus `fleet` for session throughput).
 
 pub mod cli;
 pub mod config;
@@ -32,8 +68,10 @@ pub mod prng;
 pub mod ptest;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serial;
+pub mod session;
 pub mod spec;
 pub mod tensor;
 

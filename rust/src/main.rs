@@ -4,6 +4,7 @@
 //! priot train   --method priot --angle 30 --epochs 30 [--backend pjrt]
 //! priot eval    --model tinycnn --dataset digits --angle 30
 //! priot compare [--epochs 8] [--limit 384]        all methods, one seed
+//! priot fleet   [--devices 8] [--threads 0]       multi-device simulation
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
 //! priot fig2    [--epochs 12]                     Fig. 2 CSV
@@ -14,21 +15,23 @@
 //! ```
 //!
 //! Common flags: `--artifacts DIR` (default `artifacts`), `--config FILE`,
-//! any `ExperimentConfig` key as `--key value`.
+//! any `ExperimentConfig` key as `--key value`.  Every run is constructed
+//! through the [`priot::session`] builder API.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use priot::cli::Args;
-use priot::config::{ExperimentConfig, Method, Selection};
-use priot::coordinator::{run_training, RunOptions};
+use priot::config::{Config, ExperimentConfig, Method, Selection};
 use priot::data;
-use priot::methods::EngineBackend;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
 use priot::pico;
 use priot::quant::Scales;
 use priot::report::experiments::{self, Scale};
 use priot::report::sparkline;
+use priot::session::{Backbone, Fleet, Session};
 use priot::spec::NetSpec;
 
 fn main() {
@@ -86,6 +89,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "compare" => cmd_compare(&args),
+        "fleet" => cmd_fleet(&args),
         "table1" => {
             let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
             write_or_print(&args, "table1.md", &md)
@@ -131,32 +135,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let spec = NetSpec::by_name(&cfg.model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
     data::validate(&pair.train, &spec)?;
-    let mut opts = RunOptions::from_config(&cfg);
-    opts.verbose = true;
-    let metrics = match cfg.backend.as_str() {
-        "engine" => {
-            let mut b = EngineBackend::from_config(&cfg)?;
-            if let Some(resume) = args.option("resume") {
-                b.load_state(Path::new(resume))?;
-                eprintln!("resumed training state from {resume}");
-            }
-            let m = run_training(&mut b, &pair.train, &pair.test, &opts);
-            if let Some(save) = args.option("checkpoint") {
-                b.save_state(Path::new(save))?;
-                eprintln!("saved training state to {save}");
-            }
-            m
-        }
-        "pjrt" => {
-            let rt = priot::runtime::Runtime::new(&cfg.artifacts_dir)?;
-            eprintln!("PJRT platform: {}", rt.platform());
-            let mut b = priot::runtime::PjrtBackend::from_config(&cfg, &rt)?;
-            run_training(&mut b, &pair.train, &pair.test, &opts)
-        }
-        other => bail!("unknown backend {other} (engine|pjrt)"),
-    };
+    let mut session = Session::from_experiment(&cfg)?;
+    session.options_mut().verbose = true;
+    if let Some(resume) = args.option("resume") {
+        session.restore(Path::new(resume))?;
+        eprintln!("resumed training state from {resume}");
+    }
+    let metrics = session.train(&pair.train, &pair.test);
+    if let Some(save) = args.option("checkpoint") {
+        session.save(Path::new(save))?;
+        eprintln!("saved training state to {save}");
+    }
     println!("method:   {} ({} @ {}°)", cfg.method.name(), cfg.dataset, cfg.angle);
-    println!("backend:  {}", cfg.backend);
+    println!("backend:  {}", session.name());
     println!("history:  {}", sparkline(&metrics.accuracy));
     println!(
         "accuracy: before {:.2}%  best {:.2}%  final {:.2}%",
@@ -175,8 +166,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
     let pair = data::load_pair(&cfg)?;
-    let mut b = EngineBackend::from_config(&cfg)?;
-    let acc = priot::coordinator::evaluate(&mut b, &pair.test, cfg.limit);
+    let mut session = Session::from_experiment(&cfg)?;
+    let acc = session.evaluate(&pair.test);
     println!(
         "{} on {}_test_a{}: top-1 {:.2}% (n={})",
         cfg.model,
@@ -188,38 +179,106 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The method roster used by `compare` and `fleet`.
+fn method_roster() -> Vec<(&'static str, Box<dyn MethodPlugin>)> {
+    vec![
+        ("Static-Scale NITI",
+         Box::new(Niti::static_scale()) as Box<dyn MethodPlugin>),
+        ("Dynamic-Scale NITI", Box::new(Niti::dynamic())),
+        ("PRIOT", Box::new(Priot::new())),
+        ("PRIOT-S (p=90%, weight)",
+         Box::new(PriotS::new(0.1, Selection::WeightBased))),
+        ("PRIOT-S (p=80%, weight)",
+         Box::new(PriotS::new(0.2, Selection::WeightBased))),
+    ]
+}
+
 fn cmd_compare(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;
     let artifacts = artifacts_dir(args);
+    let mut c = Config::default();
+    c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
+    let cfg = ExperimentConfig::from_config(&c)?;
+    let pair = data::load_pair(&cfg)?;
+    // One fleet, one shared backbone, one device per method.
+    let backbone = Backbone::load(&artifacts, &cfg.model)?;
+    let mut fleet = Fleet::builder(backbone)
+        .epochs(scale.epochs)
+        .limit(scale.limit)
+        .track_pruning(true);
+    for (label, plugin) in method_roster() {
+        fleet = fleet.device(label, cfg.seed, plugin, &pair.train, &pair.test);
+    }
+    let report = fleet.run()?;
     println!("| Method | Best top-1 | Final | History |");
     println!("|---|---|---|---|");
-    for (label, method, frac, sel) in [
-        ("Static-Scale NITI", Method::StaticNiti, 0.0, Selection::Random),
-        ("Dynamic-Scale NITI", Method::DynamicNiti, 0.0, Selection::Random),
-        ("PRIOT", Method::Priot, 1.0, Selection::Random),
-        ("PRIOT-S (p=90%, weight)", Method::PriotS, 0.1, Selection::WeightBased),
-        ("PRIOT-S (p=80%, weight)", Method::PriotS, 0.2, Selection::WeightBased),
-    ] {
-        let mut c = priot::config::Config::default();
-        c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
-        c.set("method", method.name());
-        let mut cfg = ExperimentConfig::from_config(&c)?;
-        cfg.epochs = scale.epochs;
-        cfg.limit = scale.limit;
-        cfg.frac_scored = frac;
-        cfg.selection = sel;
-        let pair = data::load_pair(&cfg)?;
-        let mut b = EngineBackend::from_config(&cfg)?;
-        let opts = RunOptions::from_config(&cfg);
-        let m = run_training(&mut b, &pair.train, &pair.test, &opts);
+    for d in &report.devices {
         println!(
             "| {} | {:.2}% | {:.2}% | {} |",
-            label,
-            m.best_accuracy() * 100.0,
-            m.final_accuracy() * 100.0,
-            sparkline(&m.accuracy)
+            d.name,
+            d.metrics.best_accuracy() * 100.0,
+            d.metrics.final_accuracy() * 100.0,
+            sparkline(&d.metrics.accuracy)
         );
     }
+    eprintln!(
+        "({} sessions in {:.1}s on {} threads — {:.2} sessions/s)",
+        report.devices.len(),
+        report.wall_secs,
+        report.threads,
+        report.sessions_per_sec()
+    );
+    Ok(())
+}
+
+/// Multi-device simulation: N devices adapting concurrently to their own
+/// local distributions (alternating 30°/45° drift), sharing one backbone.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args);
+    let devices: usize = args.option("devices").unwrap_or("8").parse()?;
+    let epochs: usize = args.option("epochs").unwrap_or("4").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("384").parse()?;
+    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+
+    let mut c = Config::default();
+    c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
+    let base = ExperimentConfig::from_config(&c)?;
+    let mut cfg30 = base.clone();
+    cfg30.angle = 30;
+    let mut cfg45 = base.clone();
+    cfg45.angle = 45;
+    let pair30 = data::load_pair(&cfg30)?;
+    let pair45 = data::load_pair(&cfg45)?;
+
+    let backbone = Backbone::load(&artifacts, &base.model)?;
+    println!(
+        "fleet: {} devices × {} epochs × {} images, model {} (backbone \
+         shared via Arc)",
+        devices, epochs, limit, base.model
+    );
+    let mut fleet = Fleet::builder(Arc::clone(&backbone))
+        .epochs(epochs)
+        .limit(limit)
+        .threads(threads);
+    for i in 0..devices {
+        // Each device gets its own method mix, seed, and local drift.
+        let plugin: Box<dyn MethodPlugin> = match i % 3 {
+            0 => Box::new(Priot::new()),
+            1 => Box::new(PriotS::new(0.1, Selection::WeightBased)),
+            _ => Box::new(PriotS::new(0.2, Selection::Random)),
+        };
+        let pair = if i % 2 == 0 { &pair30 } else { &pair45 };
+        let angle = if i % 2 == 0 { 30 } else { 45 };
+        fleet = fleet.device(
+            format!("dev-{i:02} ({angle}°)"),
+            (i + 1) as u32,
+            plugin,
+            &pair.train,
+            &pair.test,
+        );
+    }
+    let report = fleet.run()?;
+    println!("{}", report.summary());
     Ok(())
 }
 
@@ -231,7 +290,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
     let pair = data::load_pair(&cfg)?;
     let n: usize = args.option("samples").unwrap_or("64").parse()?;
-    let mut b = EngineBackend::from_config(&cfg)?;
+    let mut session = Session::from_experiment(&cfg)?;
     let mut images = Vec::new();
     let mut labels = Vec::new();
     for i in 0..n.min(pair.train.n) {
@@ -240,7 +299,10 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         images.push(img);
         labels.push(pair.train.label(i));
     }
-    let scales = b.engine.calibrate(&images, &labels);
+    let engine = session
+        .engine_mut()
+        .ok_or_else(|| anyhow::anyhow!("calibrate needs the engine backend"))?;
+    let scales = engine.calibrate(&images, &labels);
     let text = scales.to_text();
     match args.option("out") {
         Some(path) => {
@@ -295,7 +357,8 @@ fn print_help() {
          subcommands:\n\
          \x20 train        run one on-device training session\n\
          \x20 eval         evaluate the backbone on a dataset\n\
-         \x20 compare      all methods side-by-side (one seed)\n\
+         \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
+         \x20 fleet        simulate N devices adapting concurrently\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
          \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\

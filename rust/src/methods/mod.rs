@@ -1,13 +1,23 @@
-//! Training-method layer: the four methods of Table I as engine-agnostic
-//! state machines, plus the [`StepBackend`] trait that lets the coordinator
-//! drive either the pure-Rust engine or the AOT/PJRT runtime
-//! interchangeably (their bit-equality is asserted in `rust/tests/`).
+//! Training-method layer: the paper's methods as *pluggable* objects.
+//!
+//! A [`MethodPlugin`] owns everything that is method-specific — mutable
+//! state (scores/masks), the step and predict rules, checkpoint tensors,
+//! and (optionally) a PJRT execution plan.  The executors in
+//! [`crate::session`] and [`crate::runtime`] are method-agnostic: adding a
+//! new training method (e.g. a TinyTrain-style sparse-layer selector) means
+//! implementing this trait, not editing the engine or the coordinator.
+//!
+//! Built-in plugins: [`Niti`] (static/dynamic scales), [`Priot`] (dense
+//! scores), [`PriotS`] (sparse scores).  Their numerics are bit-identical
+//! to the pre-plugin implementation — the engine⇄PJRT parity suite in
+//! `rust/tests/` still asserts bit-for-bit equality.
 
 use anyhow::{bail, Result};
 
 use crate::config::{ExperimentConfig, Method, Selection};
 use crate::engine::{Engine, PruneState, StepOut};
 use crate::prng::{init_scores, select_mask_random, XorShift32};
+use crate::serial::TensorI8;
 use crate::spec::NetSpec;
 
 /// One training backend: consumes (image, label) pairs, produces logits and
@@ -25,72 +35,455 @@ pub trait StepBackend {
     fn theta(&self) -> Option<i32>;
     /// Backend label for logs.
     fn name(&self) -> &str;
+    /// Persist the trained state (scores or updated weights).
+    fn save_state(&self, path: &std::path::Path) -> Result<()> {
+        bail!("{}: checkpointing not supported", path.display())
+    }
+    /// Restore state produced by [`Self::save_state`].
+    fn load_state(&mut self, path: &std::path::Path) -> Result<()> {
+        bail!("{}: checkpointing not supported", path.display())
+    }
 }
 
-/// Per-method mutable state (scores live here; NITI's weights live in the
-/// engine itself).
-pub enum MethodState {
-    Niti { dynamic: bool },
-    Priot {
-        scores: Vec<Vec<i32>>,
-        masks: Vec<Vec<i32>>,
-        theta: i32,
-        sr: bool,
-        /// PRIOT-S fast path: skip gradient work for unscored edges.
-        sparse: bool,
-    },
+/// How the PJRT executor drives a method's AOT step artifact.
+///
+/// The set of *artifact layouts* is closed (they are lowered at build time
+/// by `python/compile/aot.py`); the set of *methods* is not — an
+/// engine-only method simply returns `None` from
+/// [`MethodPlugin::pjrt_plan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtPlan {
+    /// `<model>_niti_step`: inputs `(img, onehot, step, weights…)`,
+    /// outputs `(weights…, logits, overflow)`.
+    NitiStep,
+    /// `<model>_priot_step`: inputs `(img, onehot, θ, weights…, scores…,
+    /// masks…)`, outputs `(scores…, logits, overflow)`.
+    ScoreStep,
 }
 
-impl MethodState {
-    /// Initialize method state for `cfg` against the given spec/weights.
-    /// Scores are drawn from the shared xorshift stream seeded by
-    /// `cfg.seed`; PRIOT-S masks by `cfg.selection`.
-    pub fn build(cfg: &ExperimentConfig, spec: &NetSpec,
-                 weights: &[crate::tensor::Mat]) -> Result<Self> {
-        Ok(match cfg.method {
-            Method::StaticNiti => MethodState::Niti { dynamic: false },
-            Method::DynamicNiti => MethodState::Niti { dynamic: true },
-            Method::Priot => {
-                let mut rng = XorShift32::new(cfg.seed);
-                let scores = spec
-                    .layers
-                    .iter()
-                    .map(|l| widen(init_scores(&mut rng, l.num_params())))
-                    .collect();
-                let masks =
-                    spec.layers.iter().map(|l| vec![1i32; l.num_params()]).collect();
-                MethodState::Priot { scores, masks, theta: cfg.theta, sr: false,
-                                     sparse: false }
-            }
-            Method::PriotS => {
-                if !(0.0..=1.0).contains(&cfg.frac_scored) {
-                    bail!("frac_scored must be in [0,1], got {}", cfg.frac_scored);
-                }
-                let mut rng = XorShift32::new(cfg.seed);
-                let scores: Vec<Vec<i32>> = spec
-                    .layers
-                    .iter()
-                    .map(|l| widen(init_scores(&mut rng, l.num_params())))
-                    .collect();
-                let masks = match cfg.selection {
-                    Selection::Random => spec
-                        .layers
-                        .iter()
-                        .map(|l| {
-                            select_mask_random(&mut rng, l.num_params(),
-                                               cfg.frac_scored)
-                                .into_iter()
-                                .map(i32::from)
-                                .collect()
-                        })
-                        .collect(),
-                    Selection::WeightBased => select_mask_weight(
-                        weights, cfg.frac_scored),
-                };
-                MethodState::Priot { scores, masks, theta: cfg.theta, sr: false,
-                                     sparse: true }
-            }
+/// A training method: init/step/predict/checkpoint hooks over the engine.
+///
+/// Implementations must be `Send` so a [`crate::session::Fleet`] can run
+/// sessions across worker threads.
+pub trait MethodPlugin: Send {
+    /// Method label for logs and artifact names.
+    fn name(&self) -> &'static str;
+
+    /// Initialize mutable state against the backbone.  `seed` drives the
+    /// shared xorshift stream (score init, random mask selection).
+    fn init(&mut self, spec: &NetSpec, weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()>;
+
+    /// One training step on the pure-Rust engine.
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut;
+
+    /// Inference on the pure-Rust engine.
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize;
+
+    /// Current scores, if the method has them.
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        None
+    }
+
+    /// Mutable scores (the PJRT executor writes step outputs back here).
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        None
+    }
+
+    /// Existence masks, if any.
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        None
+    }
+
+    /// Pruning threshold θ, if the method prunes.
+    fn theta(&self) -> Option<i32> {
+        None
+    }
+
+    /// Plugin-owned checkpoint tensors (e.g. scores+masks), or `None` when
+    /// the trained state lives in the executor's weights (NITI) — the
+    /// executor then checkpoints those instead.
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        None
+    }
+
+    /// Restore plugin-owned state from checkpoint tensors.  `Ok(false)`
+    /// means this plugin has no state of its own and the executor should
+    /// restore its weights from the tensors instead.
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        let _ = tensors;
+        Ok(false)
+    }
+
+    /// PJRT execution plan; `None` = engine-only method.
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        None
+    }
+}
+
+/// Weight-state checkpoint tensors (the fallback when a plugin has no
+/// state of its own, e.g. NITI): the executor's trained weights, narrowed
+/// with saturation.  Shared by the engine and PJRT executors so the
+/// on-disk format cannot drift between them.
+pub fn weight_checkpoint_tensors<'a, I>(spec: &NetSpec, weights: I)
+                                        -> Vec<TensorI8>
+where
+    I: Iterator<Item = &'a [i32]>,
+{
+    spec.layers
+        .iter()
+        .zip(weights)
+        .map(|(l, w)| {
+            let (r, c) = l.weight_shape();
+            TensorI8::from_i32_saturating(vec![r, c], w)
         })
+        .collect()
+}
+
+/// Restore a weight-state checkpoint into the executor's weights (the
+/// counterpart of [`weight_checkpoint_tensors`]); validates tensor count
+/// and per-layer sizes.
+pub fn restore_weight_tensors<'a, I>(spec: &NetSpec, tensors: &[TensorI8],
+                                     weights: I) -> Result<()>
+where
+    I: Iterator<Item = &'a mut Vec<i32>>,
+{
+    let n = spec.layers.len();
+    if tensors.len() != n {
+        bail!("checkpoint has {} tensors, want {n}", tensors.len());
+    }
+    for (li, (w, t)) in weights.zip(tensors.iter()).enumerate() {
+        let t32 = t.to_i32();
+        if t32.len() != w.len() {
+            bail!("checkpoint layer {li} size mismatch");
+        }
+        w.copy_from_slice(&t32);
+    }
+    Ok(())
+}
+
+/// Build the plugin named by an [`ExperimentConfig`] (the config/CLI
+/// bridge; programmatic callers construct plugins directly).
+pub fn plugin_for(cfg: &ExperimentConfig) -> Result<Box<dyn MethodPlugin>> {
+    Ok(match cfg.method {
+        Method::StaticNiti => Box::new(Niti::static_scale()),
+        Method::DynamicNiti => Box::new(Niti::dynamic()),
+        Method::Priot => Box::new(Priot::new().with_theta(cfg.theta)),
+        Method::PriotS => Box::new(
+            PriotS::new(cfg.frac_scored, cfg.selection).with_theta(cfg.theta),
+        ),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// NITI
+// ---------------------------------------------------------------------------
+
+/// NITI baseline: direct integer weight updates (stochastically rounded),
+/// with either the deployed static scale table or per-step dynamic shifts.
+pub struct Niti {
+    dynamic: bool,
+}
+
+impl Niti {
+    /// Static-scale NITI (the paper's collapsing baseline).
+    pub fn static_scale() -> Self {
+        Self { dynamic: false }
+    }
+
+    /// Dynamic-scale NITI (the reference; no AOT artifact — its shifts are
+    /// data-dependent).
+    pub fn dynamic() -> Self {
+        Self { dynamic: true }
+    }
+}
+
+impl MethodPlugin for Niti {
+    fn name(&self) -> &'static str {
+        if self.dynamic {
+            "dynamic-niti"
+        } else {
+            "static-niti"
+        }
+    }
+
+    fn init(&mut self, _spec: &NetSpec, _weights: &[crate::tensor::Mat],
+            _seed: u32) -> Result<()> {
+        Ok(()) // NITI's mutable state is the executor's weights
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_niti(img, label, self.dynamic, step)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        engine.predict(img, None)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        // dynamic-niti has no AOT artifact (data-dependent scales)
+        (!self.dynamic).then_some(PjrtPlan::NitiStep)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared score state (PRIOT / PRIOT-S)
+// ---------------------------------------------------------------------------
+
+/// Scores + existence masks + θ, plus the per-layer shapes needed to
+/// checkpoint them.  Shared by the dense and sparse score methods.
+#[derive(Default)]
+struct ScoreState {
+    scores: Vec<Vec<i32>>,
+    masks: Vec<Vec<i32>>,
+    shapes: Vec<(usize, usize)>,
+}
+
+impl ScoreState {
+    fn checkpoint(&self) -> Vec<TensorI8> {
+        self.scores
+            .iter()
+            .chain(self.masks.iter())
+            .zip(self.shapes.iter().chain(self.shapes.iter()))
+            .map(|(v, &(r, c))| TensorI8::from_i32_saturating(vec![r, c], v))
+            .collect()
+    }
+
+    /// Restore scores+masks saved by [`Self::checkpoint`].
+    fn restore(&mut self, tensors: &[TensorI8]) -> Result<()> {
+        let n = self.scores.len();
+        if tensors.len() != 2 * n {
+            bail!("checkpoint has {} tensors, want {} (scores+masks)",
+                  tensors.len(), 2 * n);
+        }
+        for (li, s) in self.scores.iter_mut().enumerate() {
+            let t = tensors[li].to_i32();
+            if t.len() != s.len() {
+                bail!("checkpoint layer {li} size mismatch");
+            }
+            s.copy_from_slice(&t);
+        }
+        for (li, m) in self.masks.iter_mut().enumerate() {
+            let t = tensors[n + li].to_i32();
+            if t.len() != m.len() {
+                bail!("checkpoint mask {li} size mismatch");
+            }
+            m.copy_from_slice(&t);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PRIOT
+// ---------------------------------------------------------------------------
+
+/// PRIOT: weights frozen, a dense int8 score per edge, edges whose score
+/// falls below θ are pruned from the forward pass (paper §III-A).
+pub struct Priot {
+    theta: i32,
+    sr: bool,
+    st: ScoreState,
+}
+
+impl Priot {
+    /// PRIOT with the paper's default θ = −64.
+    pub fn new() -> Self {
+        Self { theta: -64, sr: false, st: ScoreState::default() }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = theta;
+        self
+    }
+
+    /// NITI-style stochastic rounding on the score step (ablation knob;
+    /// deterministic rounding is the paper's default).
+    pub fn stochastic_rounding(mut self, sr: bool) -> Self {
+        self.sr = sr;
+        self
+    }
+}
+
+impl Default for Priot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MethodPlugin for Priot {
+    fn name(&self) -> &'static str {
+        "priot"
+    }
+
+    fn init(&mut self, spec: &NetSpec, _weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()> {
+        let mut rng = XorShift32::new(seed);
+        self.st.scores = spec
+            .layers
+            .iter()
+            .map(|l| widen(init_scores(&mut rng, l.num_params())))
+            .collect();
+        self.st.masks =
+            spec.layers.iter().map(|l| vec![1i32; l.num_params()]).collect();
+        self.st.shapes = spec.layers.iter().map(|l| l.weight_shape()).collect();
+        Ok(())
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_priot(img, label, &mut self.st.scores, &self.st.masks,
+                          self.theta, step, self.sr, false)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict(img, Some(&prune))
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.scores)
+    }
+
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.scores)
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.masks)
+    }
+
+    fn theta(&self) -> Option<i32> {
+        Some(self.theta)
+    }
+
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        Some(self.st.checkpoint())
+    }
+
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        self.st.restore(tensors)?;
+        Ok(true)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        Some(PjrtPlan::ScoreStep)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PRIOT-S
+// ---------------------------------------------------------------------------
+
+/// PRIOT-S: only a fraction of edges carry scores (paper §III-B), chosen
+/// randomly or by weight magnitude; the backward pass computes gradients
+/// for scored edges only (the Table II speed win).
+pub struct PriotS {
+    theta: i32,
+    frac_scored: f64,
+    selection: Selection,
+    st: ScoreState,
+}
+
+impl PriotS {
+    /// `frac_scored` is the fraction of edges *with* scores (1 − p); θ
+    /// defaults to the paper's PRIOT-S value of 0.
+    pub fn new(frac_scored: f64, selection: Selection) -> Self {
+        Self { theta: 0, frac_scored, selection, st: ScoreState::default() }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = theta;
+        self
+    }
+}
+
+impl MethodPlugin for PriotS {
+    fn name(&self) -> &'static str {
+        "priot-s"
+    }
+
+    fn init(&mut self, spec: &NetSpec, weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.frac_scored) {
+            bail!("frac_scored must be in [0,1], got {}", self.frac_scored);
+        }
+        // Stream order (scores for all layers, then masks) is part of the
+        // bit-exactness contract with the Python oracle — do not reorder.
+        let mut rng = XorShift32::new(seed);
+        self.st.scores = spec
+            .layers
+            .iter()
+            .map(|l| widen(init_scores(&mut rng, l.num_params())))
+            .collect();
+        self.st.masks = match self.selection {
+            Selection::Random => spec
+                .layers
+                .iter()
+                .map(|l| {
+                    select_mask_random(&mut rng, l.num_params(),
+                                       self.frac_scored)
+                        .into_iter()
+                        .map(i32::from)
+                        .collect()
+                })
+                .collect(),
+            Selection::WeightBased => {
+                select_mask_weight(weights, self.frac_scored)
+            }
+        };
+        self.st.shapes = spec.layers.iter().map(|l| l.weight_shape()).collect();
+        Ok(())
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_priot(img, label, &mut self.st.scores, &self.st.masks,
+                          self.theta, step, false, true)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict(img, Some(&prune))
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.scores)
+    }
+
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.scores)
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.masks)
+    }
+
+    fn theta(&self) -> Option<i32> {
+        Some(self.theta)
+    }
+
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        Some(self.st.checkpoint())
+    }
+
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        self.st.restore(tensors)?;
+        Ok(true)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        Some(PjrtPlan::ScoreStep)
     }
 }
 
@@ -117,160 +510,6 @@ pub fn select_mask_weight(weights: &[crate::tensor::Mat], frac_scored: f64)
             m
         })
         .collect()
-}
-
-/// The pure-Rust backend: engine + method state + step counter.
-pub struct EngineBackend {
-    pub engine: Engine,
-    pub state: MethodState,
-    pub step: u32,
-    label: String,
-}
-
-impl EngineBackend {
-    pub fn new(engine: Engine, state: MethodState) -> Self {
-        let label = match &state {
-            MethodState::Niti { dynamic: true } => "engine/dynamic-niti",
-            MethodState::Niti { dynamic: false } => "engine/static-niti",
-            MethodState::Priot { .. } => "engine/priot",
-        };
-        Self { engine, state, step: 0, label: label.to_string() }
-    }
-
-    /// Build from an experiment config (loads weights/scales from
-    /// artifacts).
-    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
-        let spec = NetSpec::by_name(&cfg.model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
-        let tensors = crate::serial::load_weights(&cfg.weights_path())?;
-        let scales = crate::quant::Scales::load(&cfg.scales_path())?;
-        let engine = Engine::from_tensors(spec.clone(), &tensors, scales)?;
-        let state = MethodState::build(cfg, &spec, &engine.weights)?;
-        Ok(Self::new(engine, state))
-    }
-}
-
-impl EngineBackend {
-    /// Checkpoint the trained state: PRIOT scores (plus masks so a resumed
-    /// PRIOT-S run prunes identically), or NITI's updated weights.
-    pub fn save_state(&self, path: &std::path::Path) -> Result<()> {
-        use crate::serial::{save_weights, TensorI8};
-        let narrow = |v: &Vec<i32>, shape: (usize, usize)| TensorI8 {
-            dims: vec![shape.0, shape.1],
-            data: v.iter().map(|&x| x as i8).collect(),
-        };
-        let shapes: Vec<(usize, usize)> =
-            self.engine.spec.layers.iter().map(|l| l.weight_shape()).collect();
-        let tensors: Vec<TensorI8> = match &self.state {
-            MethodState::Priot { scores, masks, .. } => scores
-                .iter()
-                .chain(masks.iter())
-                .zip(shapes.iter().chain(shapes.iter()))
-                .map(|(v, &s)| narrow(v, s))
-                .collect(),
-            MethodState::Niti { .. } => self
-                .engine
-                .weights
-                .iter()
-                .zip(shapes.iter())
-                .map(|(m, &s)| narrow(&m.data, s))
-                .collect(),
-        };
-        save_weights(path, &tensors)
-    }
-
-    /// Restore a checkpoint produced by [`Self::save_state`] (same method
-    /// and model).
-    pub fn load_state(&mut self, path: &std::path::Path) -> Result<()> {
-        let tensors = crate::serial::load_weights(path)?;
-        let n = self.engine.spec.layers.len();
-        match &mut self.state {
-            MethodState::Priot { scores, masks, .. } => {
-                if tensors.len() != 2 * n {
-                    bail!("checkpoint has {} tensors, want {} (scores+masks)",
-                          tensors.len(), 2 * n);
-                }
-                for (li, s) in scores.iter_mut().enumerate() {
-                    let t = tensors[li].to_i32();
-                    if t.len() != s.len() {
-                        bail!("checkpoint layer {li} size mismatch");
-                    }
-                    s.copy_from_slice(&t);
-                }
-                for (li, m) in masks.iter_mut().enumerate() {
-                    let t = tensors[n + li].to_i32();
-                    if t.len() != m.len() {
-                        bail!("checkpoint mask {li} size mismatch");
-                    }
-                    m.copy_from_slice(&t);
-                }
-            }
-            MethodState::Niti { .. } => {
-                if tensors.len() != n {
-                    bail!("checkpoint has {} tensors, want {n}", tensors.len());
-                }
-                for (li, w) in self.engine.weights.iter_mut().enumerate() {
-                    let t = tensors[li].to_i32();
-                    if t.len() != w.data.len() {
-                        bail!("checkpoint layer {li} size mismatch");
-                    }
-                    w.data.copy_from_slice(&t);
-                }
-            }
-        }
-        Ok(())
-    }
-}
-
-impl StepBackend for EngineBackend {
-    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
-        let out = match &mut self.state {
-            MethodState::Niti { dynamic } => {
-                self.engine.step_niti(img, label, *dynamic, self.step)
-            }
-            MethodState::Priot { scores, masks, theta, sr, sparse } => self
-                .engine
-                .step_priot(img, label, scores, masks, *theta, self.step, *sr,
-                            *sparse),
-        };
-        self.step += 1;
-        out
-    }
-
-    fn predict(&mut self, img: &[i32]) -> usize {
-        match &self.state {
-            MethodState::Niti { .. } => self.engine.predict(img, None),
-            MethodState::Priot { scores, masks, theta, .. } => {
-                let prune = PruneState { scores, masks, theta: *theta };
-                self.engine.predict(img, Some(&prune))
-            }
-        }
-    }
-
-    fn scores(&self) -> Option<&[Vec<i32>]> {
-        match &self.state {
-            MethodState::Priot { scores, .. } => Some(scores),
-            _ => None,
-        }
-    }
-
-    fn masks(&self) -> Option<&[Vec<i32>]> {
-        match &self.state {
-            MethodState::Priot { masks, .. } => Some(masks),
-            _ => None,
-        }
-    }
-
-    fn theta(&self) -> Option<i32> {
-        match &self.state {
-            MethodState::Priot { theta, .. } => Some(*theta),
-            _ => None,
-        }
-    }
-
-    fn name(&self) -> &str {
-        &self.label
-    }
 }
 
 #[cfg(test)]
@@ -321,50 +560,83 @@ mod tests {
     }
 
     #[test]
-    fn method_state_priot_s_mask_fraction() {
+    fn priot_s_plugin_mask_fraction_and_theta() {
         let (spec, e) = test_engine(31);
         let cfg = cfg_for("priot-s", "random");
-        let st = MethodState::build(&cfg, &spec, &e.weights).unwrap();
-        if let MethodState::Priot { masks, theta, .. } = st {
-            assert_eq!(theta, 0);
-            let total: usize = masks.iter().map(|m| m.len()).sum();
-            let ones: i64 = masks.iter().flat_map(|m| m.iter()).map(|&v| v as i64).sum();
-            let frac = ones as f64 / total as f64;
-            assert!((0.07..0.13).contains(&frac), "frac {frac}");
-        } else {
-            panic!("wrong state");
-        }
+        let mut p = plugin_for(&cfg).unwrap();
+        p.init(&spec, &e.weights, cfg.seed).unwrap();
+        assert_eq!(p.theta(), Some(0));
+        let masks = p.masks().unwrap();
+        let total: usize = masks.iter().map(|m| m.len()).sum();
+        let ones: i64 = masks.iter().flat_map(|m| m.iter()).map(|&v| v as i64).sum();
+        let frac = ones as f64 / total as f64;
+        assert!((0.07..0.13).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn priot_s_rejects_bad_frac() {
+        let (spec, e) = test_engine(31);
+        let mut p = PriotS::new(1.5, Selection::Random);
+        assert!(p.init(&spec, &e.weights, 1).is_err());
     }
 
     #[test]
     fn seeds_give_different_scores_same_seed_same_scores() {
         let (spec, e) = test_engine(32);
-        let mut c1 = cfg_for("priot", "random");
-        c1.seed = 7;
-        let mut c2 = c1.clone();
-        c2.seed = 8;
-        let s1 = MethodState::build(&c1, &spec, &e.weights).unwrap();
-        let s1b = MethodState::build(&c1, &spec, &e.weights).unwrap();
-        let s2 = MethodState::build(&c2, &spec, &e.weights).unwrap();
-        let get = |s: &MethodState| match s {
-            MethodState::Priot { scores, .. } => scores[0].clone(),
-            _ => panic!(),
+        let scores_for = |seed: u32| -> Vec<i32> {
+            let mut p = Priot::new();
+            p.init(&spec, &e.weights, seed).unwrap();
+            p.scores().unwrap()[0].clone()
         };
-        assert_eq!(get(&s1), get(&s1b));
-        assert_ne!(get(&s1), get(&s2));
+        assert_eq!(scores_for(7), scores_for(7));
+        assert_ne!(scores_for(7), scores_for(8));
     }
 
     #[test]
-    fn backend_step_counter_advances() {
-        let (spec, e) = test_engine(33);
-        let cfg = cfg_for("priot", "random");
-        let st = MethodState::build(&cfg, &spec, &e.weights).unwrap();
-        let mut b = EngineBackend::new(e, st);
-        let img = vec![1i32; b.engine.spec.input_len()];
-        b.train_step(&img, 3);
-        b.train_step(&img, 4);
-        assert_eq!(b.step, 2);
-        assert!(b.scores().is_some());
-        assert_eq!(b.theta(), Some(-64));
+    fn plugin_step_advances_scores() {
+        let (spec, mut e) = test_engine(33);
+        let mut p = Priot::new();
+        p.init(&spec, &e.weights, 1).unwrap();
+        let img = vec![1i32; spec.input_len()];
+        p.train_step(&mut e, &img, 3, 0);
+        p.train_step(&mut e, &img, 4, 1);
+        assert!(p.scores().is_some());
+        assert_eq!(p.theta(), Some(-64));
+    }
+
+    #[test]
+    fn checkpoint_saturates_out_of_range_scores() {
+        // Regression for the silent i32→i8 wrap: a score of 300 must
+        // checkpoint as 127, not 44.
+        let (spec, e) = test_engine(34);
+        let mut p = Priot::new();
+        p.init(&spec, &e.weights, 1).unwrap();
+        p.scores_mut().unwrap()[0][0] = 300;
+        p.scores_mut().unwrap()[0][1] = -300;
+        let tensors = p.checkpoint_state().unwrap();
+        assert_eq!(tensors[0].data[0], 127, "positive overflow saturates");
+        assert_eq!(tensors[0].data[1], -128, "negative overflow saturates");
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip_at_plugin_level() {
+        let (spec, e) = test_engine(35);
+        let mut a = PriotS::new(0.2, Selection::WeightBased);
+        a.init(&spec, &e.weights, 5).unwrap();
+        let tensors = a.checkpoint_state().unwrap();
+        let mut b = PriotS::new(0.2, Selection::WeightBased);
+        b.init(&spec, &e.weights, 99).unwrap(); // different stream
+        assert!(b.restore_state(&tensors).unwrap());
+        assert_eq!(a.scores(), b.scores());
+        assert_eq!(a.masks(), b.masks(), "masks restore bit-identically");
+    }
+
+    #[test]
+    fn niti_has_no_plugin_state() {
+        let mut n = Niti::static_scale();
+        assert!(n.checkpoint_state().is_none());
+        assert!(!n.restore_state(&[]).unwrap());
+        assert_eq!(Niti::dynamic().pjrt_plan(), None);
+        assert_eq!(n.pjrt_plan(), Some(PjrtPlan::NitiStep));
     }
 }

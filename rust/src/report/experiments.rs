@@ -9,13 +9,13 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::config::{Config, ExperimentConfig, Method, Selection};
-use crate::coordinator::{run_training, sweep_seeds, RunOptions};
+use crate::coordinator::{sweep_seeds, RunOptions};
 use crate::data;
-use crate::methods::{EngineBackend, StepBackend};
 use crate::metrics::{MeanStd, RunMetrics, Stopwatch};
 use crate::pico;
 use crate::quant::Scales;
 use crate::report::{fig2_csv, fig3_csv, table2_markdown, Table2Row};
+use crate::session::{Session, SessionBuilder};
 
 /// Table I row carrying (best, final) statistics per column.
 pub struct Table1RowBF {
@@ -114,12 +114,12 @@ pub fn table1_cell(artifacts: &Path, col: &Table1Column, row: &str,
         "before" | "dynamic-niti" => {
             if row == "before" {
                 // evaluate the backbone without training
-                let cfg = base_cfg(artifacts, &col.model, &col.dataset,
-                                   col.angle, Method::StaticNiti);
+                let mut cfg = base_cfg(artifacts, &col.model, &col.dataset,
+                                       col.angle, Method::StaticNiti);
+                cfg.limit = scale.limit;
                 let pair = data::load_pair(&cfg)?;
-                let mut b = EngineBackend::from_config(&cfg)?;
-                let acc = crate::coordinator::evaluate(
-                    &mut b, &pair.test, scale.limit);
+                let mut session = Session::from_experiment(&cfg)?;
+                let acc = session.evaluate(&pair.test);
                 let ms = MeanStd { mean: acc, std: 0.0, n: 1 };
                 return Ok((ms, ms));
             }
@@ -236,19 +236,19 @@ pub fn table2(artifacts: &Path, model: &str, iters: usize) -> Result<String> {
     ];
     for (label, params, cfg) in variants {
         let pair = data::load_pair(&cfg)?;
-        let mut backend = EngineBackend::from_config(&cfg)?;
+        let mut session = Session::from_experiment(&cfg)?;
         let mut img = vec![0i32; pair.train.image_len()];
         let mut sw = Stopwatch::default();
         // warmup
         for i in 0..8.min(pair.train.n) {
             pair.train.image_i32(i, &mut img);
-            backend.train_step(&img, pair.train.label(i));
+            session.train_step(&img, pair.train.label(i));
         }
         for i in 0..iters.min(pair.train.n) {
             pair.train.image_i32(i, &mut img);
             let label_i = pair.train.label(i);
             sw.start();
-            backend.train_step(&img, label_i);
+            session.train_step(&img, label_i);
             sw.lap();
         }
         rows.push(Table2Row {
@@ -268,7 +268,7 @@ pub fn fig2(artifacts: &Path, epochs: usize, limit: usize) -> Result<String> {
     cfg.epochs = epochs;
     cfg.limit = limit;
     let pair = data::load_pair(&cfg)?;
-    let mut backend = EngineBackend::from_config(&cfg)?;
+    let mut session = Session::from_experiment(&cfg)?;
     let n = if limit == 0 { pair.train.n } else { pair.train.n.min(limit) };
     let mut img = vec![0i32; pair.train.image_len()];
     let mut series = Vec::new();
@@ -276,7 +276,7 @@ pub fn fig2(artifacts: &Path, epochs: usize, limit: usize) -> Result<String> {
     for _ in 0..epochs {
         for i in 0..n {
             pair.train.image_i32(i, &mut img);
-            let out = backend.train_step(&img, pair.train.label(i));
+            let out = session.train_step(&img, pair.train.label(i));
             series.push((step, out.overflow));
             step += 1;
         }
@@ -305,9 +305,8 @@ pub fn fig3(artifacts: &Path, scale: Scale) -> Result<(String, Vec<RunMetrics>)>
             cfg.theta = 0;
         }
         let pair = data::load_pair(&cfg)?;
-        let mut backend = EngineBackend::from_config(&cfg)?;
-        let opts = RunOptions::from_config(&cfg);
-        let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+        let mut session = Session::from_experiment(&cfg)?;
+        let m = session.train(&pair.train, &pair.test);
         eprintln!("[fig3] {name}: best {:.4} {}", m.best_accuracy(),
                   crate::report::sparkline(&m.accuracy));
         names.push(name);
@@ -333,16 +332,12 @@ pub fn ablation(artifacts: &Path, scale: Scale) -> Result<String> {
         cfg.limit = scale.limit;
         cfg.theta = theta;
         let pair = data::load_pair(&cfg)?;
-        let mut backend = EngineBackend::from_config(&cfg)?;
-        if sr {
-            if let crate::methods::MethodState::Priot { sr, .. } =
-                &mut backend.state
-            {
-                *sr = true;
-            }
-        }
-        let opts = RunOptions::from_config(&cfg);
-        let m = run_training(&mut backend, &pair.train, &pair.test, &opts);
+        let mut session = SessionBuilder::from_experiment(&cfg)?
+            .method(crate::methods::Priot::new()
+                        .with_theta(theta)
+                        .stochastic_rounding(sr))
+            .build()?;
+        let m = session.train(&pair.train, &pair.test);
         let pruned = m
             .pruned_frac
             .last()
@@ -362,16 +357,22 @@ pub fn ablation(artifacts: &Path, scale: Scale) -> Result<String> {
 }
 
 /// Quick self-test: engine vs PJRT bit parity on a few steps (also exposed
-/// as an integration test).
+/// as an integration test).  Requires the `pjrt` cargo feature.
+#[cfg(feature = "pjrt")]
 pub fn selftest(artifacts: &Path) -> Result<String> {
-    let rt = crate::runtime::Runtime::new(artifacts)?;
-    let mut report = format!("PJRT platform: {}\n", rt.platform());
+    use crate::session::Backend;
+    let mut report = String::new();
     for method in [Method::StaticNiti, Method::Priot, Method::PriotS] {
         let mut cfg = base_cfg(artifacts, "tinycnn", "digits", 30, method);
         cfg.frac_scored = 0.1;
         let pair = data::load_pair(&cfg)?;
-        let mut eng = EngineBackend::from_config(&cfg)?;
-        let mut pj = crate::runtime::PjrtBackend::from_config(&cfg, &rt)?;
+        let mut eng = Session::from_experiment(&cfg)?;
+        let mut pj = SessionBuilder::from_experiment(&cfg)?
+            .backend(Backend::Pjrt)
+            .build()?;
+        if report.is_empty() {
+            report.push_str(&format!("PJRT backend: {}\n", pj.name()));
+        }
         let mut img = vec![0i32; pair.train.image_len()];
         for i in 0..6.min(pair.train.n) {
             pair.train.image_i32(i, &mut img);
@@ -394,4 +395,11 @@ pub fn selftest(artifacts: &Path) -> Result<String> {
                                  method.name()));
     }
     Ok(report)
+}
+
+/// Without the `pjrt` feature there is no second implementation to compare
+/// against.
+#[cfg(not(feature = "pjrt"))]
+pub fn selftest(_artifacts: &Path) -> Result<String> {
+    bail!("selftest needs the PJRT backend — rebuild with `--features pjrt`")
 }

@@ -3,19 +3,27 @@
 //! [`StepBackend`] — the jax/Pallas execution path of the three-layer
 //! architecture.  Adapted from `/opt/xla-example/load_hlo`.
 //!
+//! Compiled only with the `pjrt` cargo feature (the default build targets
+//! the pure-Rust engine; the in-tree `xla-stub` crate satisfies the
+//! dependency when the real XLA bindings are absent).
+//!
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids.  All interface tensors are i32 (the crate has no i8
 //! literal constructor); graphs convert to int8 semantics internally.
+//!
+//! The backend is method-agnostic: the [`MethodPlugin`] supplies a
+//! [`PjrtPlan`] naming its artifact layout and absorbs the step outputs
+//! through its `scores_mut` hook — `rust/tests/parity.rs` asserts
+//! bit-for-bit agreement with the engine executor.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::ExperimentConfig;
 use crate::engine::StepOut;
-use crate::methods::{MethodState, StepBackend};
-use crate::quant::Scales;
+use crate::methods::{MethodPlugin, PjrtPlan, StepBackend};
+use crate::session::Backbone;
 use crate::spec::NetSpec;
 
 /// A compiled HLO artifact.
@@ -90,11 +98,12 @@ pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
         .map_err(|e| anyhow!("{e}"))
 }
 
-/// The AOT-artifact training backend (drop-in replacement for
-/// `EngineBackend`; `rust/tests/parity.rs` asserts they agree bit-for-bit).
+/// The AOT-artifact training backend (drop-in replacement for the engine
+/// executor; `rust/tests/parity.rs` asserts they agree bit-for-bit).
 pub struct PjrtBackend {
     spec: NetSpec,
-    state: MethodState,
+    plugin: Box<dyn MethodPlugin>,
+    plan: PjrtPlan,
     weights: Vec<Vec<i32>>,
     step: u32,
     eval_exe: Executable,
@@ -103,38 +112,28 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
-    pub fn from_config(cfg: &ExperimentConfig, rt: &Runtime) -> Result<Self> {
-        let spec = NetSpec::by_name(&cfg.model)
-            .ok_or_else(|| anyhow!("unknown model {}", cfg.model))?;
-        let tensors = crate::serial::load_weights(&cfg.weights_path())?;
-        let _scales = Scales::load(&cfg.scales_path())?; // baked into HLO
-        let weights: Vec<Vec<i32>> = tensors.iter().map(|t| t.to_i32()).collect();
-        // Method state reuses the engine-side builders (same PRNG streams).
-        let mats: Vec<crate::tensor::Mat> = spec
-            .layers
-            .iter()
-            .zip(weights.iter())
-            .map(|(l, w)| {
-                let (r, c) = l.weight_shape();
-                crate::tensor::Mat::from_vec(r, c, w.clone())
-            })
-            .collect();
-        let state = MethodState::build(cfg, &spec, &mats)?;
-        let eval_exe = rt.load(&format!("{}_fwd_eval", cfg.model))?;
-        let step_exe = match state {
-            MethodState::Niti { dynamic: true } => bail!(
-                "dynamic-niti has no AOT artifact (data-dependent scales); \
-                 use the engine backend"
-            ),
-            MethodState::Niti { dynamic: false } => {
-                rt.load(&format!("{}_niti_step", cfg.model))?
-            }
-            MethodState::Priot { .. } => {
-                rt.load(&format!("{}_priot_step", cfg.model))?
-            }
+    /// Build from a shared backbone and an *initialized* plugin (the
+    /// session builder runs `plugin.init` first, so score/mask streams are
+    /// bit-identical to the engine executor's).
+    pub fn new(rt: &Runtime, backbone: &Backbone,
+               plugin: Box<dyn MethodPlugin>) -> Result<Self> {
+        let plan = plugin.pjrt_plan().ok_or_else(|| {
+            anyhow!("method '{}' has no AOT artifact; use Backend::Engine",
+                    plugin.name())
+        })?;
+        let spec = backbone.spec.clone();
+        // PJRT owns its weights: NITI updates them per step, and the XLA
+        // graphs take them as inputs either way.
+        let weights: Vec<Vec<i32>> =
+            backbone.weights.iter().map(|m| m.data.clone()).collect();
+        let model = &backbone.model;
+        let eval_exe = rt.load(&format!("{model}_fwd_eval"))?;
+        let step_exe = match plan {
+            PjrtPlan::NitiStep => rt.load(&format!("{model}_niti_step"))?,
+            PjrtPlan::ScoreStep => rt.load(&format!("{model}_priot_step"))?,
         };
-        let label = format!("pjrt/{}", cfg.method.name());
-        Ok(Self { spec, state, weights, step: 0, eval_exe, step_exe, label })
+        let label = format!("pjrt/{}", plugin.name());
+        Ok(Self { spec, plugin, plan, weights, step: 0, eval_exe, step_exe, label })
     }
 
     fn img_literal(&self, img: &[i32]) -> Result<xla::Literal> {
@@ -155,8 +154,11 @@ impl PjrtBackend {
     }
 
     fn score_mask_literals(&self) -> Result<Vec<xla::Literal>> {
-        let MethodState::Priot { scores, masks, .. } = &self.state else {
-            // NITI fwd_eval still takes score/mask inputs: all-keep dummies.
+        let (Some(scores), Some(masks)) =
+            (self.plugin.scores(), self.plugin.masks())
+        else {
+            // Score-free methods: fwd_eval still takes score/mask inputs —
+            // all-keep dummies.
             let mut lits = Vec::new();
             for l in &self.spec.layers {
                 let (r, c) = l.weight_shape();
@@ -181,12 +183,8 @@ impl PjrtBackend {
     }
 
     fn theta_literal(&self) -> Result<xla::Literal> {
-        let theta = match &self.state {
-            MethodState::Priot { theta, .. } => *theta,
-            // NITI: no pruning — every score (0) ≥ -128.
-            MethodState::Niti { .. } => -128,
-        };
-        literal_i32(&[theta], &[1])
+        // Score-free methods: no pruning — every dummy score (0) ≥ -128.
+        literal_i32(&[self.plugin.theta().unwrap_or(-128)], &[1])
     }
 
     pub fn try_train_step(&mut self, img: &[i32], label: usize)
@@ -194,8 +192,8 @@ impl PjrtBackend {
         let n = self.spec.layers.len();
         let mut onehot = vec![0i32; self.spec.num_classes()];
         onehot[label] = 1;
-        let outs = match &self.state {
-            MethodState::Priot { .. } => {
+        let outs = match self.plan {
+            PjrtPlan::ScoreStep => {
                 let mut inputs = vec![
                     self.img_literal(img)?,
                     literal_i32(&onehot, &[onehot.len()])?,
@@ -204,16 +202,18 @@ impl PjrtBackend {
                 inputs.extend(self.weight_literals()?);
                 inputs.extend(self.score_mask_literals()?);
                 let outs = self.step_exe.run(&inputs)?;
-                // outputs: scores... , logits, overflow
-                let MethodState::Priot { scores, .. } = &mut self.state else {
-                    unreachable!()
-                };
+                // outputs: scores…, logits, overflow
+                let scores = self
+                    .plugin
+                    .scores_mut()
+                    .ok_or_else(|| anyhow!("{}: ScoreStep plan without scores",
+                                           self.label))?;
                 for (li, s) in scores.iter_mut().enumerate() {
                     s.copy_from_slice(&outs[li]);
                 }
                 outs
             }
-            MethodState::Niti { .. } => {
+            PjrtPlan::NitiStep => {
                 let mut inputs = vec![
                     self.img_literal(img)?,
                     literal_i32(&onehot, &[onehot.len()])?,
@@ -253,27 +253,38 @@ impl StepBackend for PjrtBackend {
     }
 
     fn scores(&self) -> Option<&[Vec<i32>]> {
-        match &self.state {
-            MethodState::Priot { scores, .. } => Some(scores),
-            _ => None,
-        }
+        self.plugin.scores()
     }
 
     fn masks(&self) -> Option<&[Vec<i32>]> {
-        match &self.state {
-            MethodState::Priot { masks, .. } => Some(masks),
-            _ => None,
-        }
+        self.plugin.masks()
     }
 
     fn theta(&self) -> Option<i32> {
-        match &self.state {
-            MethodState::Priot { theta, .. } => Some(*theta),
-            _ => None,
-        }
+        self.plugin.theta()
     }
 
     fn name(&self) -> &str {
         &self.label
+    }
+
+    fn save_state(&self, path: &Path) -> Result<()> {
+        let tensors = match self.plugin.checkpoint_state() {
+            Some(t) => t,
+            None => crate::methods::weight_checkpoint_tensors(
+                &self.spec,
+                self.weights.iter().map(|w| w.as_slice()),
+            ),
+        };
+        crate::serial::save_weights(path, &tensors)
+    }
+
+    fn load_state(&mut self, path: &Path) -> Result<()> {
+        let tensors = crate::serial::load_weights(path)?;
+        if self.plugin.restore_state(&tensors)? {
+            return Ok(());
+        }
+        crate::methods::restore_weight_tensors(&self.spec, &tensors,
+                                               self.weights.iter_mut())
     }
 }

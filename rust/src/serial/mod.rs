@@ -25,6 +25,22 @@ pub struct TensorI8 {
 }
 
 impl TensorI8 {
+    /// Narrow i32 working values to the on-disk int8 representation,
+    /// **saturating** at the int8 range.  Checkpoint values are produced by
+    /// `clamp8` and already live in `[-127, 127]`, but a plain `as i8` cast
+    /// would silently wrap anything that slipped outside (e.g. state
+    /// injected by a foreign checkpoint) — saturate instead.
+    pub fn from_i32_saturating(dims: Vec<usize>, data: &[i32]) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self {
+            dims,
+            data: data
+                .iter()
+                .map(|&x| x.clamp(i8::MIN as i32, i8::MAX as i32) as i8)
+                .collect(),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.data.len()
     }
@@ -200,6 +216,14 @@ mod tests {
         std::fs::write(&path, [0u8; 32]).unwrap();
         assert!(load_weights(&path).is_err());
         assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn from_i32_saturating_clamps_out_of_range() {
+        let t = TensorI8::from_i32_saturating(
+            vec![2, 3], &[0, 127, -127, 300, -300, 128]);
+        assert_eq!(t.data, vec![0, 127, -127, 127, -128, 127],
+                   "out-of-range i32 values must saturate, not wrap");
     }
 
     #[test]

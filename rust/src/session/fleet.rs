@@ -1,0 +1,254 @@
+//! Fleet: many concurrent [`Session`]s over one shared [`Backbone`].
+//!
+//! The paper's pitch is per-device adaptation at fleet scale; this module
+//! is the host-side simulation of that deployment.  Every device session
+//! shares the read-only backbone weights/scales through `Arc` (no
+//! per-session copy — asserted by `rust/tests/session.rs`), owns its
+//! method state, and runs on a work-stealing pool of worker threads.
+//!
+//! The Table I seed sweep ([`crate::coordinator::sweep_seeds`]) and the
+//! `priot fleet` multi-device simulation are both built on this type; the
+//! `fleet` bench measures its sessions/sec and steps/sec.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::RunOptions;
+use crate::methods::MethodPlugin;
+use crate::metrics::RunMetrics;
+use crate::serial::Dataset;
+
+use super::{Backbone, Session};
+
+/// One planned device: a name, a seed, a method plugin, and the local
+/// train/test data it adapts on.
+struct Device<'a> {
+    name: String,
+    seed: u32,
+    plugin: Box<dyn MethodPlugin>,
+    train: &'a Dataset,
+    test: &'a Dataset,
+}
+
+/// Builder for a [`Fleet`]; add devices with [`FleetBuilder::device`].
+pub struct FleetBuilder<'a> {
+    backbone: Arc<Backbone>,
+    opts: RunOptions,
+    threads: usize,
+    devices: Vec<Device<'a>>,
+}
+
+/// A set of concurrent adaptation sessions sharing one backbone.
+pub struct Fleet<'a> {
+    backbone: Arc<Backbone>,
+    opts: RunOptions,
+    threads: usize,
+    devices: Vec<Device<'a>>,
+}
+
+/// Result of one device's run.
+pub struct DeviceReport {
+    pub name: String,
+    pub seed: u32,
+    pub metrics: RunMetrics,
+    /// Training steps executed (epochs × capped train samples).
+    pub steps: u64,
+}
+
+/// Aggregate result of a fleet run.
+pub struct FleetReport {
+    pub devices: Vec<DeviceReport>,
+    pub wall_secs: f64,
+    pub threads: usize,
+}
+
+impl FleetReport {
+    pub fn total_steps(&self) -> u64 {
+        self.devices.iter().map(|d| d.steps).sum()
+    }
+
+    /// Completed sessions per wall-clock second.
+    pub fn sessions_per_sec(&self) -> f64 {
+        self.devices.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Aggregate training steps per wall-clock second.
+    pub fn steps_per_sec(&self) -> f64 {
+        self.total_steps() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn best_accuracies(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.metrics.best_accuracy()).collect()
+    }
+
+    /// Markdown summary: one row per device plus the throughput line.
+    pub fn summary(&self) -> String {
+        let mut out = String::from("| device | seed | best | final | steps |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for d in &self.devices {
+            out.push_str(&format!(
+                "| {} | {} | {:.2}% | {:.2}% | {} |\n",
+                d.name,
+                d.seed,
+                d.metrics.best_accuracy() * 100.0,
+                d.metrics.final_accuracy() * 100.0,
+                d.steps
+            ));
+        }
+        out.push_str(&format!(
+            "\n{} sessions on {} threads in {:.2}s — {:.2} sessions/s, \
+             {:.0} steps/s\n",
+            self.devices.len(),
+            self.threads,
+            self.wall_secs,
+            self.sessions_per_sec(),
+            self.steps_per_sec()
+        ));
+        out
+    }
+}
+
+impl<'a> Fleet<'a> {
+    /// Defaults match [`super::SessionBuilder`]: 1 epoch, no sample cap,
+    /// pruning tracking on, auto thread count.
+    pub fn builder(backbone: Arc<Backbone>) -> FleetBuilder<'a> {
+        FleetBuilder {
+            backbone,
+            opts: RunOptions {
+                epochs: 1,
+                limit: 0,
+                track_pruning: true,
+                verbose: false,
+            },
+            threads: 0,
+            devices: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Run every device to completion across the worker pool.  Device
+    /// reports come back in the order the devices were added.
+    pub fn run(self) -> Result<FleetReport> {
+        let n_devices = self.devices.len();
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(n_devices.max(1))
+        } else {
+            self.threads.min(n_devices.max(1))
+        };
+        let t0 = Instant::now();
+        // LIFO work queue (reversed so devices start in insertion order).
+        let queue: Mutex<Vec<(usize, Device)>> =
+            Mutex::new(self.devices.into_iter().enumerate().rev().collect());
+        let results: Mutex<Vec<(usize, Result<DeviceReport>)>> =
+            Mutex::new(Vec::with_capacity(n_devices));
+        let backbone = &self.backbone;
+        let opts = &self.opts;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let job = queue.lock().expect("fleet queue poisoned").pop();
+                    let Some((idx, dev)) = job else { break };
+                    let res = run_device(backbone, opts, dev);
+                    results.lock().expect("fleet results poisoned").push((idx, res));
+                });
+            }
+        });
+        let mut collected = results.into_inner().expect("fleet results poisoned");
+        collected.sort_by_key(|(idx, _)| *idx);
+        let mut devices = Vec::with_capacity(n_devices);
+        for (_, res) in collected {
+            devices.push(res?);
+        }
+        Ok(FleetReport { devices, wall_secs: t0.elapsed().as_secs_f64(), threads })
+    }
+}
+
+fn run_device(backbone: &Arc<Backbone>, opts: &RunOptions, dev: Device)
+              -> Result<DeviceReport> {
+    let mut session = Session::builder()
+        .backbone(Arc::clone(backbone))
+        .method_boxed(dev.plugin)
+        .seed(dev.seed)
+        .epochs(opts.epochs)
+        .limit(opts.limit)
+        .track_pruning(opts.track_pruning)
+        .verbose(opts.verbose)
+        .build()?;
+    let n_train = crate::coordinator::capped(dev.train.n, opts.limit);
+    let metrics = session.train(dev.train, dev.test);
+    Ok(DeviceReport {
+        name: dev.name,
+        seed: dev.seed,
+        metrics,
+        steps: (opts.epochs * n_train) as u64,
+    })
+}
+
+impl<'a> FleetBuilder<'a> {
+    /// Run options applied to every device.
+    pub fn options(mut self, opts: RunOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.opts.epochs = epochs;
+        self
+    }
+
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.opts.limit = limit;
+        self
+    }
+
+    pub fn track_pruning(mut self, on: bool) -> Self {
+        self.opts.track_pruning = on;
+        self
+    }
+
+    /// Worker thread count (0 = available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Add one device to the fleet.
+    pub fn device(mut self, name: impl Into<String>, seed: u32,
+                  plugin: Box<dyn MethodPlugin>, train: &'a Dataset,
+                  test: &'a Dataset) -> Self {
+        self.devices.push(Device {
+            name: name.into(),
+            seed,
+            plugin,
+            train,
+            test,
+        });
+        self
+    }
+
+    pub fn build(self) -> Fleet<'a> {
+        Fleet {
+            backbone: self.backbone,
+            opts: self.opts,
+            threads: self.threads,
+            devices: self.devices,
+        }
+    }
+
+    /// Build and run in one call.
+    pub fn run(self) -> Result<FleetReport> {
+        self.build().run()
+    }
+}

@@ -1,0 +1,482 @@
+//! The public Session/Fleet API: the one construction path for on-device
+//! training runs.
+//!
+//! * [`Backbone`] — the deployed read-only model (spec + int8 weights +
+//!   static scales), loaded once and shared across sessions via `Arc`.
+//! * [`SessionBuilder`] / [`Session`] — a fluent builder yielding one
+//!   adapting device: a [`crate::methods::MethodPlugin`] bound to an
+//!   execution backend ([`Backend::Engine`] or [`Backend::Pjrt`]), with
+//!   `train_epoch` / `predict` / `evaluate` / `save` / `restore`.
+//! * [`Fleet`] — many concurrent sessions over one shared backbone
+//!   (see [`fleet`]).
+//!
+//! ```no_run
+//! use priot::session::Session;
+//! use priot::methods::PriotS;
+//! use priot::config::Selection;
+//!
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .model("tinycnn")
+//!     .method(PriotS::new(0.1, Selection::WeightBased))
+//!     .seed(7)
+//!     .epochs(10)
+//!     .build()?;
+//! # anyhow::Ok(())
+//! ```
+
+pub mod fleet;
+
+pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{capped, run_training, train_one_epoch, RunOptions};
+
+pub use crate::coordinator::EpochReport;
+use crate::engine::{Engine, StepOut};
+use crate::methods::{plugin_for, MethodPlugin, Priot, StepBackend};
+use crate::metrics::RunMetrics;
+use crate::quant::Scales;
+use crate::serial::{load_weights, save_weights, Dataset};
+use crate::spec::NetSpec;
+use crate::tensor::Mat;
+
+/// Execution backend for a session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// The pure-Rust integer engine (the device implementation).
+    #[default]
+    Engine,
+    /// PJRT execution of the AOT HLO artifacts (requires the `pjrt`
+    /// feature and `make artifacts`).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "engine" => Backend::Engine,
+            "pjrt" => Backend::Pjrt,
+            other => bail!("unknown backend {other} (want engine|pjrt)"),
+        })
+    }
+}
+
+/// The deployed read-only model: spec + int8 weights + static scale table.
+///
+/// Weights and scales live behind `Arc` so every [`Session`] built from
+/// one `Backbone` shares a single copy — a [`Fleet`] of N devices holds
+/// the backbone once, not N times.
+pub struct Backbone {
+    pub model: String,
+    pub spec: NetSpec,
+    pub weights: Arc<Vec<Mat>>,
+    pub scales: Arc<Scales>,
+}
+
+impl Backbone {
+    /// Load `<model>.weights.bin` + `<model>.scales.txt` from an artifacts
+    /// directory (produced by `make artifacts`).
+    pub fn load(artifacts: &Path, model: &str) -> Result<Arc<Self>> {
+        let spec = NetSpec::by_name(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let tensors =
+            load_weights(&artifacts.join(format!("{model}.weights.bin")))?;
+        let weights: Vec<Mat> = tensors
+            .iter()
+            .zip(spec.layers.iter())
+            .map(|(t, l)| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, t.to_i32())
+            })
+            .collect();
+        let scales =
+            Scales::load(&artifacts.join(format!("{model}.scales.txt")))?;
+        Ok(Self::from_parts(model, spec, weights, scales))
+    }
+
+    /// Assemble a backbone from in-memory parts (tests, synthetic
+    /// deployments).
+    pub fn from_parts(model: &str, spec: NetSpec, weights: Vec<Mat>,
+                      scales: Scales) -> Arc<Self> {
+        Arc::new(Self {
+            model: model.to_string(),
+            spec,
+            weights: Arc::new(weights),
+            scales: Arc::new(scales),
+        })
+    }
+}
+
+/// The engine-side executor: engine + plugin + step counter.  Implements
+/// [`StepBackend`] so the coordinator can drive it interchangeably with
+/// the PJRT executor.
+pub struct EngineExecutor {
+    pub engine: Engine,
+    plugin: Box<dyn MethodPlugin>,
+    step: u32,
+    label: String,
+}
+
+impl EngineExecutor {
+    pub fn new(engine: Engine, plugin: Box<dyn MethodPlugin>) -> Self {
+        let label = format!("engine/{}", plugin.name());
+        Self { engine, plugin, step: 0, label }
+    }
+
+    pub fn plugin(&self) -> &dyn MethodPlugin {
+        self.plugin.as_ref()
+    }
+
+    /// Training steps executed so far (the counter NITI's stochastic
+    /// rounding consumes).
+    pub fn steps(&self) -> u32 {
+        self.step
+    }
+}
+
+impl StepBackend for EngineExecutor {
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        let out = self.plugin.train_step(&mut self.engine, img, label, self.step);
+        self.step += 1;
+        out
+    }
+
+    fn predict(&mut self, img: &[i32]) -> usize {
+        self.plugin.predict(&mut self.engine, img)
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.scores()
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.masks()
+    }
+
+    fn theta(&self) -> Option<i32> {
+        self.plugin.theta()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn save_state(&self, path: &Path) -> Result<()> {
+        let tensors = match self.plugin.checkpoint_state() {
+            Some(t) => t,
+            // Methods without plugin state (NITI) checkpoint the trained
+            // engine weights instead.
+            None => crate::methods::weight_checkpoint_tensors(
+                &self.engine.spec,
+                self.engine.weights.iter().map(|m| m.data.as_slice()),
+            ),
+        };
+        save_weights(path, &tensors)
+    }
+
+    fn load_state(&mut self, path: &Path) -> Result<()> {
+        let tensors = load_weights(path)?;
+        if self.plugin.restore_state(&tensors)? {
+            return Ok(());
+        }
+        // Weight-state method: restore engine weights (copy-on-write, so a
+        // fleet sibling's shared view is never touched).
+        let weights = Arc::make_mut(&mut self.engine.weights);
+        crate::methods::restore_weight_tensors(
+            &self.engine.spec,
+            &tensors,
+            weights.iter_mut().map(|m| &mut m.data),
+        )
+    }
+}
+
+enum Exec {
+    Engine(EngineExecutor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::PjrtBackend),
+}
+
+/// One adapting device: an execution backend bound to a method plugin,
+/// plus the run options the epoch loop consumes.
+pub struct Session {
+    exec: Exec,
+    opts: RunOptions,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Build directly from an [`ExperimentConfig`] (the config/CLI bridge).
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
+        SessionBuilder::from_experiment(cfg)?.build()
+    }
+
+    fn driver(&mut self) -> &mut dyn StepBackend {
+        match &mut self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p,
+        }
+    }
+
+    fn driver_ref(&self) -> &dyn StepBackend {
+        match &self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p,
+        }
+    }
+
+    /// Backend/method label, e.g. `engine/priot-s`.
+    pub fn name(&self) -> &str {
+        self.driver_ref().name()
+    }
+
+    pub fn options(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    pub fn options_mut(&mut self) -> &mut RunOptions {
+        &mut self.opts
+    }
+
+    /// Direct engine access (calibration, analysis); `None` on the PJRT
+    /// backend.
+    pub fn engine_mut(&mut self) -> Option<&mut Engine> {
+        match &mut self.exec {
+            Exec::Engine(e) => Some(&mut e.engine),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => None,
+        }
+    }
+
+    /// One training step (batch 1).  Most callers want [`Self::train`] or
+    /// [`Self::train_epoch`]; this is the micro-benchmark/parity hook.
+    pub fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        self.driver().train_step(img, label)
+    }
+
+    /// One pass over (a cap of) the training set; returns step statistics.
+    /// Shares [`train_one_epoch`] with the coordinator's full run loop.
+    pub fn train_epoch(&mut self, train: &Dataset) -> EpochReport {
+        let limit = self.opts.limit;
+        train_one_epoch(self.driver(), train, limit)
+    }
+
+    /// The full epoch loop with per-epoch evaluation (the paper's run
+    /// protocol) — drives [`run_training`] over this session's backend.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset) -> RunMetrics {
+        let opts = self.opts.clone();
+        run_training(self.driver(), train, test, &opts)
+    }
+
+    /// Inference for one image.
+    pub fn predict(&mut self, img: &[i32]) -> usize {
+        self.driver().predict(img)
+    }
+
+    /// Predictions over (a cap of) a dataset.
+    pub fn predict_batch(&mut self, ds: &Dataset, limit: usize) -> Vec<usize> {
+        let n = capped(ds.n, limit);
+        let mut img = vec![0i32; ds.image_len()];
+        let driver = self.driver();
+        (0..n)
+            .map(|i| {
+                ds.image_i32(i, &mut img);
+                driver.predict(&img)
+            })
+            .collect()
+    }
+
+    /// Top-1 accuracy over (a cap of) a dataset, respecting the session's
+    /// `limit` option.
+    pub fn evaluate(&mut self, ds: &Dataset) -> f64 {
+        let limit = self.opts.limit;
+        crate::coordinator::evaluate(self.driver(), ds, limit)
+    }
+
+    /// Checkpoint the trained state (scores+masks, or NITI weights).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.driver_ref().save_state(path)
+    }
+
+    /// Restore a checkpoint produced by [`Self::save`] (same method and
+    /// model).
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        self.driver().load_state(path)
+    }
+
+    pub fn scores(&self) -> Option<&[Vec<i32>]> {
+        self.driver_ref().scores()
+    }
+
+    pub fn masks(&self) -> Option<&[Vec<i32>]> {
+        self.driver_ref().masks()
+    }
+
+    pub fn theta(&self) -> Option<i32> {
+        self.driver_ref().theta()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt(artifacts: &Path, backbone: &Backbone,
+              plugin: Box<dyn MethodPlugin>) -> Result<Exec> {
+    let rt = crate::runtime::Runtime::new(artifacts)?;
+    Ok(Exec::Pjrt(crate::runtime::PjrtBackend::new(&rt, backbone, plugin)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(_artifacts: &Path, _backbone: &Backbone,
+              _plugin: Box<dyn MethodPlugin>) -> Result<Exec> {
+    bail!("backend 'pjrt' requires building with `--features pjrt` \
+           (AOT artifacts + XLA runtime)")
+}
+
+/// Fluent builder for [`Session`] — see the module docs for an example.
+pub struct SessionBuilder {
+    artifacts: PathBuf,
+    model: String,
+    backend: Backend,
+    method: Option<Box<dyn MethodPlugin>>,
+    backbone: Option<Arc<Backbone>>,
+    seed: u32,
+    epochs: usize,
+    limit: usize,
+    track_pruning: bool,
+    verbose: bool,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            model: "tinycnn".to_string(),
+            backend: Backend::Engine,
+            method: None,
+            backbone: None,
+            seed: 1,
+            epochs: 30,
+            limit: 0,
+            track_pruning: true,
+            verbose: false,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Artifacts directory (default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Model name (default `tinycnn`).  Ignored when a [`Self::backbone`]
+    /// is supplied.
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.to_string();
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Training method (default: [`Priot`] with the paper's θ).
+    pub fn method(self, plugin: impl MethodPlugin + 'static) -> Self {
+        self.method_boxed(Box::new(plugin))
+    }
+
+    pub fn method_boxed(mut self, plugin: Box<dyn MethodPlugin>) -> Self {
+        self.method = Some(plugin);
+        self
+    }
+
+    /// Share an already-loaded backbone instead of reading artifacts from
+    /// disk (the [`Fleet`] path; also enables artifact-free tests).
+    pub fn backbone(mut self, backbone: Arc<Backbone>) -> Self {
+        self.model = backbone.model.clone();
+        self.backbone = Some(backbone);
+        self
+    }
+
+    /// Seed for the method's score/mask streams (default 1).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Cap on train/test samples per epoch (0 = all).
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Record per-layer pruned fractions + mask flips each epoch (costs a
+    /// full scores scan; default on).
+    pub fn track_pruning(mut self, on: bool) -> Self {
+        self.track_pruning = on;
+        self
+    }
+
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    /// Pre-populate the builder from an [`ExperimentConfig`].
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
+        Ok(Session::builder()
+            .artifacts(cfg.artifacts_dir.clone())
+            .model(&cfg.model)
+            .backend(Backend::parse(&cfg.backend)?)
+            .method_boxed(plugin_for(cfg)?)
+            .seed(cfg.seed)
+            .epochs(cfg.epochs)
+            .limit(cfg.limit)
+            .track_pruning(cfg.track_pruning))
+    }
+
+    pub fn build(self) -> Result<Session> {
+        let backbone = match self.backbone {
+            Some(b) => b,
+            None => Backbone::load(&self.artifacts, &self.model)?,
+        };
+        let mut plugin = self
+            .method
+            .unwrap_or_else(|| Box::new(Priot::new()) as Box<dyn MethodPlugin>);
+        plugin.init(&backbone.spec, &backbone.weights, self.seed)?;
+        let opts = RunOptions {
+            epochs: self.epochs,
+            limit: self.limit,
+            track_pruning: self.track_pruning,
+            verbose: self.verbose,
+        };
+        let exec = match self.backend {
+            Backend::Engine => {
+                let engine = Engine::shared(
+                    backbone.spec.clone(),
+                    Arc::clone(&backbone.weights),
+                    Arc::clone(&backbone.scales),
+                )?;
+                Exec::Engine(EngineExecutor::new(engine, plugin))
+            }
+            Backend::Pjrt => build_pjrt(&self.artifacts, &backbone, plugin)?,
+        };
+        Ok(Session { exec, opts })
+    }
+}

@@ -1,65 +1,71 @@
-//! Checkpoint/resume: the deployment story of saving trained pruning state
-//! and restoring it after a power cycle (a core embedded requirement).
-//! Requires `make artifacts`.
+//! Checkpoint/resume over the real artifacts: the deployment story of
+//! saving trained pruning state and restoring it after a power cycle (a
+//! core embedded requirement), through `Session::save` / `Session::restore`.
+//!
+//! The artifact-free round-trip suite (all three methods, synthetic
+//! backbone) lives in `rust/tests/session.rs`; these tests add the
+//! real-artifact paths and skip when `make artifacts` has not run.
 
 use std::path::PathBuf;
 
 use priot::config::{Config, ExperimentConfig};
 use priot::data;
-use priot::methods::{EngineBackend, StepBackend};
+use priot::session::Session;
 
-fn artifacts() -> PathBuf {
+fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(p.join("tinycnn.weights.bin").exists(), "run `make artifacts`");
-    p
+    if !p.join("tinycnn.weights.bin").exists() {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        return None;
+    }
+    Some(p)
 }
 
-fn cfg(method: &str) -> ExperimentConfig {
+fn cfg(dir: &std::path::Path, method: &str) -> ExperimentConfig {
     let mut c = Config::default();
-    c.set("artifacts", artifacts().to_str().unwrap());
+    c.set("artifacts", dir.to_str().unwrap());
     c.set("method", method);
     c.set("seed", "11");
     c.set("frac_scored", "0.1");
     ExperimentConfig::from_config(&c).unwrap()
 }
 
-fn train_steps(b: &mut EngineBackend, ds: &priot::serial::Dataset, n: usize) {
+fn train_steps(s: &mut Session, ds: &priot::serial::Dataset, n: usize) {
     let mut img = vec![0i32; ds.image_len()];
     for i in 0..n {
         ds.image_i32(i % ds.n, &mut img);
-        b.train_step(&img, ds.label(i % ds.n));
+        s.train_step(&img, ds.label(i % ds.n));
     }
 }
 
 #[test]
 fn priot_checkpoint_roundtrip_resumes_identically() {
-    let c = cfg("priot");
+    let Some(dir) = artifacts() else { return };
+    let c = cfg(&dir, "priot");
     let pair = data::load_pair(&c).unwrap();
-    let dir = std::env::temp_dir().join("priot_ckpt_test");
-    std::fs::create_dir_all(&dir).unwrap();
-    let ckpt = dir.join("scores.bin");
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("scores.bin");
 
     // run A: 10 steps, checkpoint, 10 more steps
-    let mut a = EngineBackend::from_config(&c).unwrap();
+    let mut a = Session::from_experiment(&c).unwrap();
     train_steps(&mut a, &pair.train, 10);
-    a.save_state(&ckpt).unwrap();
+    a.save(&ckpt).unwrap();
     train_steps(&mut a, &pair.train, 10);
 
-    // run B: fresh backend (different seed state!), restore, same 10 steps
+    // run B: fresh session with a different seed (scores differ until the
+    // checkpoint overwrites them), restore, same 10 steps
     let mut c2 = c.clone();
-    c2.seed = 99; // init scores differ until the checkpoint overwrites them
-    let mut b = EngineBackend::from_config(&c2).unwrap();
-    b.load_state(&ckpt).unwrap();
-    // replay the same post-checkpoint data; step counters differ (10 vs 0)
-    // but PRIOT's deterministic score path does not consume them.
+    c2.seed = 99;
+    let mut b = Session::from_experiment(&c2).unwrap();
+    b.restore(&ckpt).unwrap();
     train_steps(&mut b, &pair.train, 10);
-    // skip the first 10 samples for A's continuation alignment
     let (sa, sb) = (a.scores().unwrap(), b.scores().unwrap());
     // B replayed samples 0..10 again, A continued 10..20 — so equality is
     // only expected for the checkpoint itself; assert restore exactness:
-    let mut b2 = EngineBackend::from_config(&c2).unwrap();
-    b2.load_state(&ckpt).unwrap();
-    let mut a2 = EngineBackend::from_config(&c).unwrap();
+    let mut b2 = Session::from_experiment(&c2).unwrap();
+    b2.restore(&ckpt).unwrap();
+    let mut a2 = Session::from_experiment(&c).unwrap();
     train_steps(&mut a2, &pair.train, 10);
     assert_eq!(b2.scores().unwrap(), a2.scores().unwrap(),
                "restored state must equal the state that was saved");
@@ -70,29 +76,38 @@ fn priot_checkpoint_roundtrip_resumes_identically() {
 
 #[test]
 fn niti_checkpoint_saves_weights() {
-    let c = cfg("static-niti");
+    let Some(dir) = artifacts() else { return };
+    let c = cfg(&dir, "static-niti");
     let pair = data::load_pair(&c).unwrap();
-    let dir = std::env::temp_dir().join("priot_ckpt_test");
-    std::fs::create_dir_all(&dir).unwrap();
-    let ckpt = dir.join("weights.bin");
-    let mut a = EngineBackend::from_config(&c).unwrap();
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("weights.bin");
+    let mut a = Session::from_experiment(&c).unwrap();
     train_steps(&mut a, &pair.train, 5);
-    a.save_state(&ckpt).unwrap();
-    let mut b = EngineBackend::from_config(&c).unwrap();
-    b.load_state(&ckpt).unwrap();
-    assert_eq!(a.engine.weights, b.engine.weights);
+    a.save(&ckpt).unwrap();
+    let mut b = Session::from_experiment(&c).unwrap();
+    b.restore(&ckpt).unwrap();
+    // restored weights must reproduce A's predictions exactly
+    let mut img = vec![0i32; pair.test.image_len()];
+    for i in 0..32.min(pair.test.n) {
+        pair.test.image_i32(i, &mut img);
+        assert_eq!(a.predict(&img), b.predict(&img), "sample {i}");
+    }
+    assert_eq!(a.engine_mut().unwrap().weights,
+               b.engine_mut().unwrap().weights);
 }
 
 #[test]
 fn checkpoint_shape_mismatch_rejected() {
-    let c = cfg("priot");
-    let mut a = EngineBackend::from_config(&c).unwrap();
-    let dir = std::env::temp_dir().join("priot_ckpt_test");
-    std::fs::create_dir_all(&dir).unwrap();
-    let bad = dir.join("bad.bin");
+    let Some(dir) = artifacts() else { return };
+    let c = cfg(&dir, "priot");
+    let mut a = Session::from_experiment(&c).unwrap();
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let bad = tmp.join("bad.bin");
     // save a NITI-shaped checkpoint (4 tensors) and try to load as PRIOT (8)
-    let c2 = cfg("static-niti");
-    let b = EngineBackend::from_config(&c2).unwrap();
-    b.save_state(&bad).unwrap();
-    assert!(a.load_state(&bad).is_err());
+    let c2 = cfg(&dir, "static-niti");
+    let b = Session::from_experiment(&c2).unwrap();
+    b.save(&bad).unwrap();
+    assert!(a.restore(&bad).is_err());
 }

