@@ -1,0 +1,89 @@
+//! Fleet server: drive the long-lived `priot::serve` front-end from code —
+//! register devices, stream train/predict/evaluate requests, drift a
+//! device's local distribution mid-stream, and read the responses back.
+//!
+//! Self-contained: runs on a synthetic backbone + synthetic datasets, so
+//! no `make artifacts` is needed.
+//!
+//! ```bash
+//! cargo run --release --example fleet_server
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Priot, PriotS};
+use priot::ptest::gen::{self, synthetic_backbone};
+use priot::serial::Dataset;
+use priot::session::{FleetServer, Request, Response};
+
+/// A synthetic "local distribution": random images, cyclic labels.  Each
+/// seed stands in for one device's (possibly drifted) data.
+fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
+    Arc::new(gen::synthetic_dataset(seed, n))
+}
+
+fn main() -> Result<()> {
+    // One shared read-only backbone for the whole fleet (Arc — no copies).
+    let backbone = synthetic_backbone(1);
+    let server = FleetServer::builder(backbone).threads(0).build();
+
+    // Register three devices with different methods and local data.
+    let roster: Vec<(&str, Box<dyn MethodPlugin>)> = vec![
+        ("dev-00", Box::new(Priot::new())),
+        ("dev-01", Box::new(PriotS::new(0.1, Selection::WeightBased))),
+        ("dev-02", Box::new(PriotS::new(0.2, Selection::Random))),
+    ];
+    for (i, (name, plugin)) in roster.into_iter().enumerate() {
+        server.submit(Request::Register {
+            device: name.into(),
+            seed: (i + 1) as u32,
+            plugin,
+            train: synthetic_dataset(10 + i as u64, 96),
+            test: synthetic_dataset(20 + i as u64, 48),
+        })?;
+        // Each device adapts a few epochs; the pool interleaves devices at
+        // epoch granularity, so no device monopolizes a worker.
+        server.submit(Request::Train { device: name.into(), epochs: 3 })?;
+        server.submit(Request::Evaluate { device: name.into() })?;
+    }
+
+    // Mid-stream drift: dev-00's distribution changes; its next requests
+    // run against the new data, strictly after its queued work.
+    server.submit(Request::Drift {
+        device: "dev-00".into(),
+        train: synthetic_dataset(30, 96),
+        test: synthetic_dataset(31, 48),
+    })?;
+    server.submit(Request::Train { device: "dev-00".into(), epochs: 1 })?;
+    server.submit(Request::Evaluate { device: "dev-00".into() })?;
+
+    // A raw-image inference request, as an edge client would send it.
+    let probe = synthetic_dataset(31, 1);
+    server.submit(Request::Predict {
+        device: "dev-00".into(),
+        image: probe.image(0).to_vec(),
+    })?;
+
+    // Graceful shutdown: drain every queued op, collect all responses.
+    let report = server.join()?;
+    for r in &report.responses {
+        match r {
+            Response::TrainDone { device, epochs, steps, .. } => {
+                println!("{device}: trained {epochs} epochs ({steps} steps)");
+            }
+            Response::Evaluation { device, accuracy, n } => {
+                println!("{device}: {:.1}% top-1 over {n} samples",
+                         accuracy * 100.0);
+            }
+            Response::Prediction { device, class } => {
+                println!("{device}: raw image classified as {class}");
+            }
+            other => println!("{other:?}"),
+        }
+    }
+    println!("\n{}", report.summary());
+    Ok(())
+}

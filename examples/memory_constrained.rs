@@ -71,7 +71,7 @@ fn main() -> Result<()> {
                 .epochs(epochs)
                 .limit(limit)
                 .build()?;
-            let m = session.train(&pair.train, &pair.test);
+            let m = session.train(&pair.train, &pair.test)?;
             (m.best_accuracy(), m.best_accuracy() - m.accuracy[0])
         } else {
             (f64::NAN, f64::NAN)

@@ -69,9 +69,9 @@ fn main() -> Result<()> {
         let mut c2 = cfg.clone();
         c2.angle = angle;
         let pair = data::load_pair(&c2)?;
-        let before = session.evaluate(&pair.test);
+        let before = session.evaluate(&pair.test)?;
         println!("accuracy after drift, before adaptation: {:.1}%", before * 100.0);
-        let m = session.train(&pair.train, &pair.test);
+        let m = session.train(&pair.train, &pair.test)?;
         println!(
             "adapted over {epochs} epochs: best {:.1}%  (+{:.1} p.p.), \
              history {}",
@@ -79,7 +79,7 @@ fn main() -> Result<()> {
             (m.best_accuracy() - before) * 100.0,
             priot::report::sparkline(&m.accuracy)
         );
-        let steps = (epochs * limit) as f64;
+        let steps = m.total_steps() as f64; // executed, not planned
         println!(
             "modeled on-device adaptation cost: {:.1} s of Pico compute",
             steps * cost.total_ms() / 1e3

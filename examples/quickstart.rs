@@ -40,7 +40,7 @@ fn main() -> Result<()> {
 
     // 3. Run on-device transfer learning (batch 1, integer-only, static
     //    scales — exactly what would execute on the Pico).
-    let metrics = session.train(&pair.train, &pair.test);
+    let metrics = session.train(&pair.train, &pair.test)?;
 
     // 4. Report.
     println!();

@@ -1,0 +1,123 @@
+//! Bench: the serve subsystem — (1) batched vs single-sample evaluation
+//! speedup on the tiny CNN (the `gemm_nn` n>1 path at inference), and
+//! (2) end-to-end requests/sec through a long-lived [`FleetServer`].
+//!
+//! Runs on any checkout: uses the real artifacts when present, otherwise a
+//! synthetic backbone + datasets with identical shapes.
+//!
+//! `cargo bench --bench serve [-- --devices N --eval-n N --reps N]`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::ptest::gen::{self, synthetic_backbone};
+use priot::serial::Dataset;
+use priot::session::{Backbone, FleetServer, Request, Session};
+
+fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
+    Arc::new(gen::synthetic_dataset(seed, n))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let devices = get("--devices", 8);
+    let eval_n = get("--eval-n", 512);
+    let reps = get("--reps", 5);
+
+    let artifacts = Path::new("artifacts");
+    let (backbone, test) = if artifacts.join("tinycnn.weights.bin").exists() {
+        let backbone = Backbone::load(artifacts, "tinycnn").expect("backbone");
+        let test = Arc::new(
+            priot::data::load_named(artifacts, "digits_test_a30").expect("data"),
+        );
+        eprintln!("[serve] using real artifacts");
+        (backbone, test)
+    } else {
+        eprintln!("[serve] artifacts missing — synthetic backbone + data");
+        (synthetic_backbone(1), synthetic_dataset(2, eval_n))
+    };
+    let train = synthetic_dataset(3, 256);
+
+    // -- Part 1: batched vs single-sample evaluation ----------------------
+    println!("\n## batched evaluation — tinycnn, {} test samples, {} reps\n",
+             eval_n.min(test.n), reps);
+    println!("| method | batch | eval [ms] | speedup | accuracy |");
+    println!("|---|---|---|---|---|");
+    let methods: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
+        ("static-niti", || Box::new(Niti::static_scale())),
+        ("priot", || Box::new(Priot::new())),
+        ("priot-s", || Box::new(PriotS::new(0.1, Selection::WeightBased))),
+    ];
+    for (name, make) in &methods {
+        let mut session = Session::builder()
+            .backbone(Arc::clone(&backbone))
+            .method_boxed(make())
+            .seed(1)
+            .limit(eval_n)
+            .build()
+            .expect("session");
+        let mut base_ms = 0.0f64;
+        for &batch in &[1usize, 4, 8, 16, 32] {
+            let mut acc = 0.0;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                acc = session.evaluate_batch(&test, batch).expect("evaluate");
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            if batch == 1 {
+                base_ms = ms;
+            }
+            println!("| {} | {} | {:.2} | {:.2}x | {:.2}% |",
+                     name, batch, ms, base_ms / ms.max(1e-9), acc * 100.0);
+        }
+    }
+    println!("\n(identical accuracy per row set = bit-identical batched eval)");
+
+    // -- Part 2: serve throughput -----------------------------------------
+    println!("\n## serve throughput — {} devices, mixed request stream\n",
+             devices);
+    let server = FleetServer::builder(Arc::clone(&backbone))
+        .limit(128)
+        .eval_batch(16)
+        .build();
+    for i in 0..devices {
+        let plugin: Box<dyn MethodPlugin> = if i % 2 == 0 {
+            Box::new(Priot::new())
+        } else {
+            Box::new(PriotS::new(0.1, Selection::WeightBased))
+        };
+        let device = format!("dev-{i:02}");
+        server
+            .submit(Request::Register {
+                device: device.clone(),
+                seed: (i + 1) as u32,
+                plugin,
+                train: Arc::clone(&train),
+                test: Arc::clone(&test),
+            })
+            .expect("register");
+        server
+            .submit(Request::Train { device: device.clone(), epochs: 2 })
+            .expect("train");
+        server
+            .submit(Request::Predict {
+                device: device.clone(),
+                image: test.image(i % test.n).to_vec(),
+            })
+            .expect("predict");
+        server.submit(Request::Evaluate { device }).expect("evaluate");
+    }
+    let report = server.join().expect("serve join");
+    println!("{}", report.summary());
+    assert_eq!(report.errors(), 0, "bench stream must be error-free");
+}

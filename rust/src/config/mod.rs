@@ -197,6 +197,9 @@ pub struct ExperimentConfig {
     /// Record per-layer pruned fractions + mask flips each epoch (a full
     /// scores scan per epoch on the hot path; on by default).
     pub track_pruning: bool,
+    /// Samples per forward in dataset evaluation (0/1 = per-sample;
+    /// batched evaluation is bit-identical, just faster).
+    pub eval_batch: usize,
 }
 
 impl ExperimentConfig {
@@ -220,6 +223,7 @@ impl ExperimentConfig {
             backend: cfg.get_or("backend", "engine").to_string(),
             limit: cfg.get_usize("limit", 0)?,
             track_pruning: cfg.get_bool("track_pruning", true)?,
+            eval_batch: cfg.get_usize("eval_batch", 1)?,
         })
     }
 

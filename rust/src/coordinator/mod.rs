@@ -14,6 +14,7 @@ use crate::methods::{plugin_for, StepBackend};
 use crate::metrics::{MeanStd, RunMetrics};
 use crate::serial::Dataset;
 use crate::session::{Backbone, Fleet};
+use crate::tensor::Mat;
 
 /// Options controlling a single run.
 #[derive(Clone, Debug)]
@@ -27,6 +28,11 @@ pub struct RunOptions {
     pub track_pruning: bool,
     /// Print a line per epoch.
     pub verbose: bool,
+    /// Samples per forward in epoch-boundary evaluation (0/1 = one sample
+    /// at a time).  Batched evaluation is bit-identical to per-sample —
+    /// the batch dimension is extra GEMM columns, never different
+    /// arithmetic.
+    pub eval_batch: usize,
 }
 
 impl RunOptions {
@@ -36,6 +42,7 @@ impl RunOptions {
             limit: cfg.limit,
             track_pruning: cfg.track_pruning,
             verbose: false,
+            eval_batch: cfg.eval_batch,
         }
     }
 }
@@ -85,21 +92,65 @@ pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
     }
 }
 
-/// Evaluate top-1 accuracy of `backend` over (a cap of) `ds`.
+/// Evaluate top-1 accuracy of `backend` over (a cap of) `ds`, one sample
+/// at a time — the `batch = 1` case of [`evaluate_batched`] (kept as the
+/// named per-sample entry point).
 pub fn evaluate(backend: &mut dyn StepBackend, ds: &Dataset, limit: usize)
                 -> f64 {
+    evaluate_batched(backend, ds, limit, 1)
+}
+
+/// Predictions over (a cap of) `ds` in batched forwards of up to `batch`
+/// samples.  Bit-identical to a per-sample [`StepBackend::predict`] loop
+/// (asserted by `rust/tests/serve.rs` for every method plugin); the final
+/// chunk covers the `n % batch` remainder.
+pub fn predict_batched(backend: &mut dyn StepBackend, ds: &Dataset,
+                       limit: usize, batch: usize) -> Vec<usize> {
+    let n = capped(ds.n, limit);
+    let len = ds.image_len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if batch <= 1 {
+        let mut img = vec![0i32; len];
+        return (0..n)
+            .map(|i| {
+                ds.image_i32(i, &mut img);
+                backend.predict(&img)
+            })
+            .collect();
+    }
+    let bsz = batch.min(n);
+    let mut imgs = Mat::zeros(bsz, len);
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        let bcur = bsz.min(n - i);
+        if bcur != imgs.rows {
+            imgs = Mat::zeros(bcur, len); // remainder chunk
+        }
+        for bi in 0..bcur {
+            ds.image_i32(i + bi, &mut imgs.data[bi * len..(bi + 1) * len]);
+        }
+        out.extend(backend.predict_batch(&imgs));
+        i += bcur;
+    }
+    out
+}
+
+/// Top-1 accuracy via [`predict_batched`] — the fleet/serve evaluation
+/// path (`batch <= 1` degenerates to the per-sample loop of [`evaluate`]).
+pub fn evaluate_batched(backend: &mut dyn StepBackend, ds: &Dataset,
+                        limit: usize, batch: usize) -> f64 {
     let n = capped(ds.n, limit);
     if n == 0 {
         return 0.0;
     }
-    let mut img = vec![0i32; ds.image_len()];
-    let mut correct = 0usize;
-    for i in 0..n {
-        ds.image_i32(i, &mut img);
-        if backend.predict(&img) == ds.label(i) {
-            correct += 1;
-        }
-    }
+    let correct = predict_batched(backend, ds, limit, batch)
+        .into_iter()
+        .enumerate()
+        .filter(|&(i, p)| p == ds.label(i))
+        .count();
     correct as f64 / n as f64
 }
 
@@ -136,60 +187,104 @@ fn mask_snapshot(backend: &dyn StepBackend) -> Vec<bool> {
     }
 }
 
-/// Run one on-device training session: epoch loop over the train set with
-/// an evaluation at every epoch boundary (epoch 0 = the pre-trained
-/// backbone — the paper's curves and "best during training" include it).
-pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
-                    test: &Dataset, opts: &RunOptions) -> RunMetrics {
-    let mut m = RunMetrics::default();
+/// The epoch-granular training driver: everything [`run_training`] carries
+/// between epochs, factored out so schedulers ([`crate::session::Fleet`],
+/// `priot::serve`) can interleave the epochs of many sessions across a
+/// worker pool without duplicating the run protocol.  One `TrainProgress`
+/// belongs to one device; the metrics it accumulates are bit-identical to
+/// an uninterrupted [`run_training`] over the same backend.
+pub struct TrainProgress {
+    metrics: RunMetrics,
+    prev_mask: Vec<bool>,
+}
 
-    m.accuracy.push(evaluate(backend, test, opts.limit));
-    let mut prev_mask = if opts.track_pruning {
-        mask_snapshot(backend)
-    } else {
-        Vec::new()
-    };
-    if opts.verbose {
-        eprintln!("[{}] epoch 0: test acc {:.4}", backend.name(), m.accuracy[0]);
+impl TrainProgress {
+    /// Epoch-0 evaluation (the pre-training point of the paper's curves)
+    /// plus the initial mask snapshot.
+    pub fn start(backend: &mut dyn StepBackend, test: &Dataset,
+                 opts: &RunOptions) -> Self {
+        let mut metrics = RunMetrics::default();
+        metrics
+            .accuracy
+            .push(evaluate_batched(backend, test, opts.limit, opts.eval_batch));
+        let prev_mask = if opts.track_pruning {
+            mask_snapshot(backend)
+        } else {
+            Vec::new()
+        };
+        if opts.verbose {
+            eprintln!("[{}] epoch 0: test acc {:.4}", backend.name(),
+                      metrics.accuracy[0]);
+        }
+        Self { metrics, prev_mask }
     }
 
-    for epoch in 0..opts.epochs {
+    /// One training epoch + the epoch-boundary evaluation and pruning
+    /// tracking.
+    pub fn step_epoch(&mut self, backend: &mut dyn StepBackend,
+                      train: &Dataset, test: &Dataset, opts: &RunOptions) {
         let ep = train_one_epoch(backend, train, opts.limit);
-        let overflow = ep.overflow;
+        let m = &mut self.metrics;
         m.epoch_secs.push(ep.secs);
         m.overflow.push(ep.overflow);
+        m.steps.push(ep.steps as u64);
         m.train_accuracy.push(ep.train_accuracy);
-        m.accuracy.push(evaluate(backend, test, opts.limit));
+        m.accuracy
+            .push(evaluate_batched(backend, test, opts.limit, opts.eval_batch));
         if opts.track_pruning {
             let fr = pruned_fractions(backend);
             if !fr.is_empty() {
                 m.pruned_frac.push(fr);
             }
             let cur = mask_snapshot(backend);
-            if !cur.is_empty() && cur.len() == prev_mask.len() {
+            if !cur.is_empty() && cur.len() == self.prev_mask.len() {
                 let flips = cur
                     .iter()
-                    .zip(prev_mask.iter())
+                    .zip(self.prev_mask.iter())
                     .filter(|&(a, b)| a != b)
                     .count() as u64;
                 m.mask_flips.push(flips);
-                prev_mask = cur;
+                self.prev_mask = cur;
             } else if !cur.is_empty() {
-                prev_mask = cur;
+                self.prev_mask = cur;
             }
         }
         if opts.verbose {
             eprintln!(
                 "[{}] epoch {}: test acc {:.4} train acc {:.4} overflow {}",
                 backend.name(),
-                epoch + 1,
+                self.epochs_done(),
                 m.accuracy.last().unwrap(),
                 m.train_accuracy.last().unwrap(),
-                overflow
+                ep.overflow
             );
         }
     }
-    m
+
+    /// Epochs trained so far (excludes the epoch-0 evaluation).
+    pub fn epochs_done(&self) -> usize {
+        self.metrics.train_accuracy.len()
+    }
+
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    pub fn finish(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+/// Run one on-device training session: epoch loop over the train set with
+/// an evaluation at every epoch boundary (epoch 0 = the pre-trained
+/// backbone — the paper's curves and "best during training" include it).
+pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
+                    test: &Dataset, opts: &RunOptions) -> RunMetrics {
+    let mut progress = TrainProgress::start(backend, test, opts);
+    for _ in 0..opts.epochs {
+        progress.step_epoch(backend, train, test, opts);
+    }
+    progress.finish()
 }
 
 /// Aggregate of a seed sweep.
@@ -278,7 +373,10 @@ mod tests {
         let train = fake_dataset(20);
         let test = fake_dataset(10);
         let mut b = FakeBackend { steps: 0, threshold: 20 };
-        let opts = RunOptions { epochs: 2, limit: 0, track_pruning: true, verbose: false };
+        let opts = RunOptions {
+            epochs: 2, limit: 0, track_pruning: true, verbose: false,
+            eval_batch: 1,
+        };
         let m = run_training(&mut b, &train, &test, &opts);
         assert_eq!(m.accuracy.len(), 3, "epoch0 + 2 epochs");
         assert!(m.accuracy[0] < 0.2, "untrained fake is wrong");
@@ -287,6 +385,8 @@ mod tests {
         assert_eq!(m.best_accuracy(), 1.0);
         assert_eq!(m.train_accuracy.len(), 2);
         assert_eq!(m.train_accuracy[0], 1.0, "train logits always 'correct'");
+        assert_eq!(m.steps, vec![20, 20], "executed steps recorded per epoch");
+        assert_eq!(m.total_steps(), 40);
     }
 
     #[test]
@@ -294,9 +394,59 @@ mod tests {
         let train = fake_dataset(50);
         let test = fake_dataset(50);
         let mut b = FakeBackend { steps: 0, threshold: 5 };
-        let opts = RunOptions { epochs: 1, limit: 5, track_pruning: false, verbose: false };
+        let opts = RunOptions {
+            epochs: 1, limit: 5, track_pruning: false, verbose: false,
+            eval_batch: 1,
+        };
         let m = run_training(&mut b, &train, &test, &opts);
         assert_eq!(b.steps, 5);
         assert_eq!(m.accuracy.len(), 2);
+        assert_eq!(m.total_steps(), 5);
+    }
+
+    #[test]
+    fn batched_evaluation_matches_per_sample() {
+        // The default StepBackend::predict_batch is the per-sample loop, so
+        // chunking itself (including the remainder chunk) must not change
+        // predictions or accuracy.
+        let test = fake_dataset(23);
+        for batch in [1usize, 2, 7, 23, 64] {
+            let mut a = FakeBackend { steps: 0, threshold: 0 };
+            let mut b = FakeBackend { steps: 0, threshold: 0 };
+            let per_sample = predict_batched(&mut a, &test, 0, 1);
+            let batched = predict_batched(&mut b, &test, 0, batch);
+            assert_eq!(per_sample, batched, "batch={batch}");
+            assert_eq!(
+                evaluate(&mut a, &test, 0),
+                evaluate_batched(&mut b, &test, 0, batch),
+                "batch={batch}"
+            );
+        }
+        let mut e = FakeBackend { steps: 0, threshold: 0 };
+        assert_eq!(evaluate_batched(&mut e, &fake_dataset(0), 0, 8), 0.0,
+                   "empty dataset evaluates to 0.0, no panic");
+    }
+
+    #[test]
+    fn train_progress_is_bit_identical_to_run_training() {
+        // Interleavable epoch stepping must reproduce the one-shot loop.
+        let train = fake_dataset(20);
+        let test = fake_dataset(10);
+        let opts = RunOptions {
+            epochs: 3, limit: 0, track_pruning: true, verbose: false,
+            eval_batch: 4,
+        };
+        let mut a = FakeBackend { steps: 0, threshold: 20 };
+        let whole = run_training(&mut a, &train, &test, &opts);
+        let mut b = FakeBackend { steps: 0, threshold: 20 };
+        let mut progress = TrainProgress::start(&mut b, &test, &opts);
+        for _ in 0..opts.epochs {
+            progress.step_epoch(&mut b, &train, &test, &opts);
+        }
+        assert_eq!(progress.epochs_done(), 3);
+        let stepped = progress.finish();
+        assert_eq!(whole.accuracy, stepped.accuracy);
+        assert_eq!(whole.overflow, stepped.overflow);
+        assert_eq!(whole.steps, stepped.steps);
     }
 }

@@ -29,14 +29,42 @@ pub fn load_named(artifacts: &std::path::Path, stem: &str) -> Result<Dataset> {
     load_dataset(&artifacts.join("data").join(format!("{stem}.bin")))
 }
 
-/// Sanity checks a dataset against a model spec.
-pub fn validate(ds: &Dataset, spec: &crate::spec::NetSpec) -> Result<()> {
+/// Image-side checks against a model spec: geometry plus pixel-payload
+/// consistency.  Sufficient for prediction-only paths, which never read
+/// labels (an inference set may carry sentinel labels).
+pub fn validate_images(ds: &Dataset, spec: &crate::spec::NetSpec)
+                       -> Result<()> {
     let (c, h, w) = spec.input_chw;
     if (ds.c, ds.h, ds.w) != (c, h, w) {
         anyhow::bail!(
             "dataset geometry ({},{},{}) does not match model {} ({c},{h},{w})",
             ds.c, ds.h, ds.w, spec.name
         );
+    }
+    // Internal consistency: the payload must actually hold what the
+    // header dims promise (loaders enforce this on disk, but in-memory
+    // datasets can be assembled by hand).
+    let want_pixels = [ds.n, ds.c, ds.h, ds.w]
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d));
+    if want_pixels != Some(ds.images.len()) {
+        anyhow::bail!(
+            "dataset holds {} pixel bytes but n·c·h·w = {}·{}·{}·{}",
+            ds.images.len(), ds.n, ds.c, ds.h, ds.w
+        );
+    }
+    Ok(())
+}
+
+/// Full sanity checks a dataset against a model spec:
+/// [`validate_images`] plus label count and range.  The Session/Fleet/
+/// serve training and evaluation entry points call this so a bad dataset
+/// is a clean `Err`, never a slice panic deep inside the engine.
+pub fn validate(ds: &Dataset, spec: &crate::spec::NetSpec) -> Result<()> {
+    validate_images(ds, spec)?;
+    if ds.labels.len() != ds.n {
+        anyhow::bail!("dataset holds {} labels for n = {} samples",
+                      ds.labels.len(), ds.n);
     }
     let classes = spec.num_classes();
     if let Some(&bad) = ds.labels.iter().find(|&&l| (l as usize) >= classes) {
@@ -75,5 +103,49 @@ mod tests {
             labels: vec![10],
         };
         assert!(validate(&ds, &NetSpec::tinycnn()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_payloads() {
+        // Right geometry, wrong payload lengths: must be a clean Err, not
+        // a later slice panic in Dataset::image / Dataset::label.
+        let short_images = Dataset {
+            n: 4,
+            c: 1,
+            h: 28,
+            w: 28,
+            images: vec![0; 28 * 28], // holds 1 sample, claims 4
+            labels: vec![0; 4],
+        };
+        let err = validate(&short_images, &NetSpec::tinycnn()).unwrap_err();
+        assert!(err.to_string().contains("pixel bytes"), "{err}");
+
+        let short_labels = Dataset {
+            n: 2,
+            c: 1,
+            h: 28,
+            w: 28,
+            images: vec![0; 2 * 28 * 28],
+            labels: vec![0], // holds 1 label, claims 2
+        };
+        let err = validate(&short_labels, &NetSpec::tinycnn()).unwrap_err();
+        assert!(err.to_string().contains("labels"), "{err}");
+    }
+
+    #[test]
+    fn validate_images_ignores_labels() {
+        // Inference-only datasets may carry sentinel labels; the
+        // prediction path must accept them while full validation rejects.
+        let ds = Dataset {
+            n: 1,
+            c: 1,
+            h: 28,
+            w: 28,
+            images: vec![0; 28 * 28],
+            labels: vec![255],
+        };
+        let spec = NetSpec::tinycnn();
+        assert!(validate_images(&ds, &spec).is_ok());
+        assert!(validate(&ds, &spec).is_err());
     }
 }

@@ -107,6 +107,68 @@ pub struct PruneState<'a> {
     pub theta: i32,
 }
 
+/// Buffers for the batched inference path, allocated on first use and
+/// rebuilt when the batch size changes.  Batch-B forward is the batch-1
+/// forward with B samples laid side by side along the GEMM column axis:
+/// per-column arithmetic is untouched, so results are bit-identical to B
+/// calls of [`Engine::forward`] while the weight matrix streams through
+/// the cache once per layer instead of once per sample (and the FC layers
+/// hit the `gemm_nn` n>1 kernel instead of the GEMV path).
+struct BatchBufs {
+    b: usize,
+    /// Per-layer scratch for one sample's im2col patches (K, N).
+    scratch: Vec<Mat>,
+    /// Per-layer batched GEMM input (K, B·N): sample `bi` occupies columns
+    /// `[bi·N, (bi+1)·N)`.
+    cols: Vec<Mat>,
+    /// Per-layer batched int32 accumulator (F, B·N).
+    acc: Vec<Mat>,
+    /// Per-layer post-requant/relu activations (F·B·N).
+    relu: Vec<Vec<i32>>,
+    /// One sample's pre-pool activation gathered channel-major (max F·N).
+    gather: Vec<i32>,
+    /// Pool argmax scratch (inference records no tape).
+    pool_idx: Vec<u8>,
+    /// Ping-pong sample-major activation buffers (B · max layer len).
+    x_a: Vec<i32>,
+    x_b: Vec<i32>,
+}
+
+impl BatchBufs {
+    fn new(spec: &NetSpec, b: usize) -> Self {
+        let mut scratch = Vec::with_capacity(spec.layers.len());
+        let mut cols = Vec::with_capacity(spec.layers.len());
+        let mut acc = Vec::with_capacity(spec.layers.len());
+        let mut relu = Vec::with_capacity(spec.layers.len());
+        let mut max_pre = 0usize;
+        let mut max_len = spec.input_len();
+        for l in &spec.layers {
+            let (f, k) = l.weight_shape();
+            let n = match *l {
+                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+                LayerSpec::Fc { .. } => 1,
+            };
+            scratch.push(Mat::zeros(k, n));
+            cols.push(Mat::zeros(k, n * b));
+            acc.push(Mat::zeros(f, n * b));
+            relu.push(vec![0; f * n * b]);
+            max_pre = max_pre.max(f * n);
+            max_len = max_len.max(l.out_len());
+        }
+        BatchBufs {
+            b,
+            scratch,
+            cols,
+            acc,
+            relu,
+            gather: vec![0; max_pre],
+            pool_idx: vec![0; max_pre / 4],
+            x_a: vec![0; b * max_len],
+            x_b: vec![0; b * max_len],
+        }
+    }
+}
+
 /// The integer network engine.
 ///
 /// Backbone weights and the static scale table are held behind `Arc` so a
@@ -119,6 +181,8 @@ pub struct Engine {
     pub scales: Arc<Scales>,
     pub weights: Arc<Vec<Mat>>,
     ws: Workspace,
+    /// Batched-inference buffers (lazy; see [`BatchBufs`]).
+    batch: Option<BatchBufs>,
 }
 
 fn check_shapes(spec: &NetSpec, weights: &[Mat], scales: &Scales) -> Result<()> {
@@ -151,7 +215,7 @@ impl Engine {
                   -> Result<Self> {
         check_shapes(&spec, &weights, &scales)?;
         let ws = Workspace::new(&spec);
-        Ok(Self { spec, scales, weights, ws })
+        Ok(Self { spec, scales, weights, ws, batch: None })
     }
 
     /// Build from the on-disk int8 tensors (artifacts).
@@ -254,6 +318,141 @@ impl Engine {
     pub fn predict(&mut self, img: &[i32], prune: Option<&PruneState>) -> usize {
         self.forward(img, prune, false);
         argmax(self.logits())
+    }
+
+    /// Batched inference forward: `imgs` holds one sample per **row**
+    /// (B, input_len); logits land one sample per row in `logits`
+    /// (B, classes).  Bit-identical per sample to [`Self::forward`] with
+    /// static scales — the batch dimension only adds GEMM columns (see
+    /// [`BatchBufs`]).  Returns the Fig. 2 overflow count summed over the
+    /// batch.  Records no tape: inference only.
+    pub fn forward_batch(&mut self, imgs: &Mat, prune: Option<&PruneState>,
+                         logits: &mut Mat) -> u32 {
+        let b = imgs.rows;
+        assert_eq!(imgs.cols, self.spec.input_len(),
+                   "forward_batch: sample length != model input");
+        assert_eq!(logits.rows, b, "forward_batch: logits rows != batch");
+        assert_eq!(logits.cols, self.spec.num_classes(),
+                   "forward_batch: logits cols != classes");
+        if b == 0 {
+            return 0;
+        }
+        if self.batch.as_ref().map(|bw| bw.b) != Some(b) {
+            self.batch = Some(BatchBufs::new(&self.spec, b));
+        }
+        let mut bw = self.batch.take().expect("batch bufs just ensured");
+        let n_layers = self.spec.layers.len();
+        let mut overflow = 0u32;
+        bw.x_a[..imgs.data.len()].copy_from_slice(&imgs.data);
+        let mut in_len = self.spec.input_len();
+        for li in 0..n_layers {
+            if prune.is_some() {
+                self.effective_weight(li, prune);
+            }
+            let layer = self.spec.layers[li];
+            let last = li == n_layers - 1;
+            let (f, k) = layer.weight_shape();
+            let n = match layer {
+                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+                LayerSpec::Fc { .. } => 1,
+            };
+            let bn = n * b;
+            // Assemble the batched GEMM input: per-sample im2col patches
+            // (conv) or the input vector (fc), side by side column-wise.
+            let cols = &mut bw.cols[li];
+            match layer {
+                LayerSpec::Conv { in_c, in_h, in_w, .. } => {
+                    let scratch = &mut bw.scratch[li];
+                    for bi in 0..b {
+                        let x = &bw.x_a[bi * in_len..(bi + 1) * in_len];
+                        im2col(x, in_c, in_h, in_w, scratch);
+                        for ki in 0..k {
+                            cols.data[ki * bn + bi * n..ki * bn + (bi + 1) * n]
+                                .copy_from_slice(
+                                    &scratch.data[ki * n..(ki + 1) * n],
+                                );
+                        }
+                    }
+                }
+                LayerSpec::Fc { .. } => {
+                    for bi in 0..b {
+                        let x = &bw.x_a[bi * in_len..(bi + 1) * in_len];
+                        for (ki, &v) in x.iter().enumerate() {
+                            cols.data[ki * b + bi] = v;
+                        }
+                    }
+                }
+            }
+            let w_fwd: &Mat = if prune.is_some() {
+                &self.ws.layers[li].weff
+            } else {
+                &self.weights[li]
+            };
+            let acc = &mut bw.acc[li];
+            gemm_nn(w_fwd, cols, acc);
+            let s = self.scales.layers[li].fwd;
+            let relu_flag = match layer {
+                LayerSpec::Conv { relu, .. } => relu,
+                LayerSpec::Fc { relu, .. } => relu,
+            };
+            let relu_buf = &mut bw.relu[li];
+            for (o, &a) in relu_buf[..f * bn].iter_mut().zip(acc.data.iter()) {
+                let y = rshift_round(a, s);
+                if last && y.abs() > INT8_MAX {
+                    overflow += 1;
+                }
+                let y = clamp8(y);
+                *o = if relu_flag { y.max(0) } else { y };
+            }
+            // Scatter back to the sample-major layout (pooling per sample).
+            let out_len = layer.out_len();
+            match layer {
+                LayerSpec::Conv { in_h, in_w, out_c, pool, .. } => {
+                    for bi in 0..b {
+                        let g = &mut bw.gather[..f * n];
+                        for fi in 0..f {
+                            g[fi * n..(fi + 1) * n].copy_from_slice(
+                                &relu_buf[fi * bn + bi * n..fi * bn + (bi + 1) * n],
+                            );
+                        }
+                        let dst = &mut bw.x_b[bi * out_len..(bi + 1) * out_len];
+                        if pool {
+                            let idx = &mut bw.pool_idx[..out_len];
+                            maxpool2(g, out_c, in_h, in_w, dst, idx);
+                        } else {
+                            dst.copy_from_slice(g);
+                        }
+                    }
+                }
+                LayerSpec::Fc { out_f, .. } => {
+                    for bi in 0..b {
+                        let dst = &mut bw.x_b[bi * out_len..(bi + 1) * out_len];
+                        for (fi, d) in dst.iter_mut().enumerate().take(out_f) {
+                            *d = relu_buf[fi * b + bi];
+                        }
+                    }
+                }
+            }
+            std::mem::swap(&mut bw.x_a, &mut bw.x_b);
+            in_len = out_len;
+        }
+        logits
+            .data
+            .copy_from_slice(&bw.x_a[..b * self.spec.num_classes()]);
+        self.batch = Some(bw);
+        overflow
+    }
+
+    /// Batched inference: one prediction per row of `imgs` — bit-identical
+    /// to a per-row [`Self::predict`] loop.
+    pub fn predict_batch(&mut self, imgs: &Mat, prune: Option<&PruneState>)
+                         -> Vec<usize> {
+        let classes = self.spec.num_classes();
+        let mut logits = Mat::zeros(imgs.rows, classes);
+        self.forward_batch(imgs, prune, &mut logits);
+        (0..imgs.rows)
+            .map(|bi| argmax(&logits.data[bi * classes..(bi + 1) * classes]))
+            .collect()
     }
 
     /// Backward pass from `dlogits` (already in `ws.dlogits`); fills each

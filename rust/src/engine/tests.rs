@@ -329,3 +329,74 @@ fn argmax_first_max() {
     assert_eq!(argmax(&[-5]), 0);
     assert_eq!(argmax(&[0, 0, 0]), 0);
 }
+
+#[test]
+fn forward_batch_bit_identical_to_single_sample() {
+    // The batch dimension is extra GEMM columns only: logits, predictions,
+    // and the overflow probe must match B single-sample forwards exactly,
+    // with and without pruning.
+    let mut e = tiny_engine(50);
+    let spec = e.spec.clone();
+    let scores = rand_scores(&spec, 51);
+    let masks = ones_masks(&spec);
+    let mut rng = XorShift64::new(52);
+    for b in [1usize, 3, 8] {
+        let imgs = Mat::from_vec(
+            b,
+            spec.input_len(),
+            (0..b * spec.input_len()).map(|_| rng.int_in(0, 127)).collect(),
+        );
+        for with_prune in [false, true] {
+            let prune = PruneState { scores: &scores, masks: &masks, theta: -8 };
+            let prune = with_prune.then_some(&prune);
+            // Reference: one forward per sample.
+            let mut want_logits = Vec::new();
+            let mut want_overflow = 0u32;
+            for bi in 0..b {
+                let img = &imgs.data[bi * spec.input_len()..(bi + 1) * spec.input_len()];
+                let (ovf, _) = e.forward(img, prune, false);
+                want_overflow += ovf;
+                want_logits.extend_from_slice(e.logits());
+            }
+            let mut logits = Mat::zeros(b, spec.num_classes());
+            let overflow = e.forward_batch(&imgs, prune, &mut logits);
+            assert_eq!(logits.data, want_logits,
+                       "b={b} prune={with_prune}: logits diverged");
+            assert_eq!(overflow, want_overflow,
+                       "b={b} prune={with_prune}: overflow probe diverged");
+            let preds = e.predict_batch(&imgs, prune);
+            let want_preds: Vec<usize> = (0..b)
+                .map(|bi| argmax(&want_logits[bi * spec.num_classes()
+                                             ..(bi + 1) * spec.num_classes()]))
+                .collect();
+            assert_eq!(preds, want_preds);
+        }
+    }
+}
+
+#[test]
+fn forward_batch_survives_batch_size_changes() {
+    // The lazy batch workspace rebuilds when B changes (the remainder
+    // chunk of an evaluation sweep); shrinking and growing must both work.
+    let mut e = tiny_engine(53);
+    let spec = e.spec.clone();
+    let mut rng = XorShift64::new(54);
+    let mut one = |b: usize| {
+        let imgs = Mat::from_vec(
+            b,
+            spec.input_len(),
+            (0..b * spec.input_len()).map(|_| rng.int_in(0, 127)).collect(),
+        );
+        let preds = e.predict_batch(&imgs, None);
+        let want: Vec<usize> = (0..b)
+            .map(|bi| {
+                e.predict(&imgs.data[bi * spec.input_len()
+                                     ..(bi + 1) * spec.input_len()], None)
+            })
+            .collect();
+        assert_eq!(preds, want, "b={b}");
+    };
+    for b in [4usize, 7, 2, 7, 1] {
+        one(b);
+    }
+}

@@ -33,10 +33,20 @@
 //! * [`session::Backbone`] — the deployed read-only model, loaded once and
 //!   shared across sessions via `Arc` (no per-session weight copies).
 //! * [`session::Session`] — one adapting device: a training method bound
-//!   to an execution backend.
-//! * [`session::Fleet`] — many concurrent sessions over one backbone: the
+//!   to an execution backend.  Dataset-facing entry points validate
+//!   geometry up front and return clean errors; evaluation can run
+//!   batched ([`session::Session::evaluate_batch`]) — bit-identical to
+//!   per-sample, faster.
+//! * [`session::Fleet`] — many concurrent sessions over one backbone,
+//!   scheduled at **epoch granularity** across the worker pool: the
 //!   Table I seed sweep, the `priot fleet` multi-device simulation, and
 //!   the `fleet` throughput bench all build on it.
+//! * [`serve`] (= [`session::serve`]) — the long-lived, request-driven
+//!   fleet service: a stream of `(device, op)` [`serve::Request`]s over an
+//!   mpsc channel into a registry of per-device sessions.  Driven by the
+//!   `priot serve` CLI subcommand from a scripted request trace, and
+//!   benchmarked by the `serve` bench (requests/sec + batched-eval
+//!   speedup).
 //!
 //! ## Methods are plugins
 //!
@@ -74,6 +84,8 @@ pub mod serial;
 pub mod session;
 pub mod spec;
 pub mod tensor;
+
+pub use session::serve;
 
 /// Symmetric int8 magnitude bound: values live in `[-127, 127]`
 /// (`-128` is never produced by any requantization).

@@ -5,6 +5,7 @@
 //! priot eval    --model tinycnn --dataset digits --angle 30
 //! priot compare [--epochs 8] [--limit 384]        all methods, one seed
 //! priot fleet   [--devices 8] [--threads 0]       multi-device simulation
+//! priot serve   [--trace FILE] [--threads 0]      long-lived fleet service
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
 //! priot fig2    [--epochs 12]                     Fig. 2 CSV
@@ -18,6 +19,7 @@
 //! any `ExperimentConfig` key as `--key value`.  Every run is constructed
 //! through the [`priot::session`] builder API.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -31,6 +33,7 @@ use priot::pico;
 use priot::quant::Scales;
 use priot::report::experiments::{self, Scale};
 use priot::report::sparkline;
+use priot::serial::Dataset;
 use priot::session::{Backbone, Fleet, Session};
 use priot::spec::NetSpec;
 
@@ -90,6 +93,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "compare" => cmd_compare(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
         "table1" => {
             let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
             write_or_print(&args, "table1.md", &md)
@@ -141,7 +145,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         session.restore(Path::new(resume))?;
         eprintln!("resumed training state from {resume}");
     }
-    let metrics = session.train(&pair.train, &pair.test);
+    let metrics = session.train(&pair.train, &pair.test)?;
     if let Some(save) = args.option("checkpoint") {
         session.save(Path::new(save))?;
         eprintln!("saved training state to {save}");
@@ -167,7 +171,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
     let pair = data::load_pair(&cfg)?;
     let mut session = Session::from_experiment(&cfg)?;
-    let acc = session.evaluate(&pair.test);
+    let acc = session.evaluate(&pair.test)?;
     println!(
         "{} on {}_test_a{}: top-1 {:.2}% (n={})",
         cfg.model,
@@ -282,6 +286,102 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The long-lived fleet service driven from a scripted request trace: a
+/// stream of `(device, op)` lines becomes `Request` messages into a
+/// [`FleetServer`], which schedules them at epoch granularity across its
+/// worker pool.  Without `--trace FILE` the built-in demo trace runs.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use priot::session::serve::{self, Request, TraceCmd};
+
+    let artifacts = artifacts_dir(args);
+    let model = args.option("model").unwrap_or("tinycnn");
+    let dataset = args.option("dataset").unwrap_or("digits");
+    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("256").parse()?;
+    let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
+    let text = match args.option("trace") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            eprintln!("(no --trace FILE given — running the built-in demo \
+                       trace)");
+            serve::DEMO_TRACE.to_string()
+        }
+    };
+    let cmds = serve::parse_trace(&text)?;
+
+    let backbone = Backbone::load(&artifacts, model)?;
+    // Angle-keyed dataset cache: traces reference data symbolically.
+    let mut pairs: HashMap<u32, (Arc<Dataset>, Arc<Dataset>)> = HashMap::new();
+    let mut pair_for = |angle: u32| -> Result<(Arc<Dataset>, Arc<Dataset>)> {
+        if let Some(p) = pairs.get(&angle) {
+            return Ok(p.clone());
+        }
+        let train = Arc::new(data::load_named(
+            &artifacts, &format!("{dataset}_train_a{angle}"))?);
+        let test = Arc::new(data::load_named(
+            &artifacts, &format!("{dataset}_test_a{angle}"))?);
+        pairs.insert(angle, (Arc::clone(&train), Arc::clone(&test)));
+        Ok((train, test))
+    };
+
+    let server = priot::session::FleetServer::builder(backbone)
+        .threads(threads)
+        .limit(limit)
+        .eval_batch(eval_batch)
+        .build();
+    // Track each device's current test set so `predict sample=N` can be
+    // resolved to raw image bytes client-side, like a real caller would.
+    let mut device_test: HashMap<String, Arc<Dataset>> = HashMap::new();
+    for cmd in cmds {
+        match cmd {
+            TraceCmd::Register { device, seed, method, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                server.submit(Request::Register {
+                    device,
+                    seed,
+                    plugin: method.plugin(),
+                    train,
+                    test,
+                })?;
+            }
+            TraceCmd::Train { device, epochs } => {
+                server.submit(Request::Train { device, epochs })?;
+            }
+            TraceCmd::Predict { device, sample } => {
+                let test = device_test
+                    .get(&device)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "trace predicts on unregistered device {device}"))?;
+                if test.n == 0 {
+                    bail!("trace predicts on device {device}, whose test \
+                           set is empty");
+                }
+                let image = test.image(sample % test.n).to_vec();
+                server.submit(Request::Predict { device, image })?;
+            }
+            TraceCmd::Evaluate { device } => {
+                server.submit(Request::Evaluate { device })?;
+            }
+            TraceCmd::Drift { device, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                server.submit(Request::Drift { device, train, test })?;
+            }
+        }
+    }
+    let report = server.join()?;
+    for r in &report.responses {
+        println!("{r:?}");
+    }
+    println!("\n{}", report.summary());
+    if report.errors() > 0 {
+        anyhow::bail!("{} of {} requests errored", report.errors(),
+                      report.requests);
+    }
+    Ok(())
+}
+
 /// On-device recalibration: re-derive the static scale table from local
 /// data using the engine's dynamic-shift calibrator (paper §IV-A run on the
 /// device side — useful when the deployment distribution drifts so far that
@@ -359,6 +459,7 @@ fn print_help() {
          \x20 eval         evaluate the backbone on a dataset\n\
          \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
          \x20 fleet        simulate N devices adapting concurrently\n\
+         \x20 serve        long-lived fleet service driven by a request trace\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
          \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\

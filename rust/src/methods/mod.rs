@@ -27,6 +27,17 @@ pub trait StepBackend {
     fn train_step(&mut self, img: &[i32], label: usize) -> StepOut;
     /// Inference for evaluation.
     fn predict(&mut self, img: &[i32]) -> usize;
+    /// Batched inference (one sample per row of `imgs`).  The default is
+    /// the per-sample loop so every backend stays correct; the engine
+    /// executor overrides it with the batched forward (bit-identical —
+    /// asserted by `rust/tests/serve.rs`).
+    fn predict_batch(&mut self, imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let mut out = Vec::with_capacity(imgs.rows);
+        for bi in 0..imgs.rows {
+            out.push(self.predict(&imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]));
+        }
+        out
+    }
     /// Current scores, if the method has them (analysis/checkpointing).
     fn scores(&self) -> Option<&[Vec<i32>]>;
     /// PRIOT-S existence masks, if any.
@@ -80,6 +91,21 @@ pub trait MethodPlugin: Send {
 
     /// Inference on the pure-Rust engine.
     fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize;
+
+    /// Batched inference on the pure-Rust engine (one sample per row of
+    /// `imgs`).  Default: the per-sample loop; the built-in plugins
+    /// override with [`Engine::predict_batch`], which is bit-identical.
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let mut out = Vec::with_capacity(imgs.rows);
+        for bi in 0..imgs.rows {
+            out.push(
+                self.predict(engine,
+                             &imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]),
+            );
+        }
+        out
+    }
 
     /// Current scores, if the method has them.
     fn scores(&self) -> Option<&[Vec<i32>]> {
@@ -222,6 +248,11 @@ impl MethodPlugin for Niti {
         engine.predict(img, None)
     }
 
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        engine.predict_batch(imgs, None)
+    }
+
     fn pjrt_plan(&self) -> Option<PjrtPlan> {
         // dynamic-niti has no AOT artifact (data-dependent scales)
         (!self.dynamic).then_some(PjrtPlan::NitiStep)
@@ -347,6 +378,16 @@ impl MethodPlugin for Priot {
         engine.predict(img, Some(&prune))
     }
 
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict_batch(imgs, Some(&prune))
+    }
+
     fn scores(&self) -> Option<&[Vec<i32>]> {
         Some(&self.st.scores)
     }
@@ -455,6 +496,16 @@ impl MethodPlugin for PriotS {
             theta: self.theta,
         };
         engine.predict(img, Some(&prune))
+    }
+
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict_batch(imgs, Some(&prune))
     }
 
     fn scores(&self) -> Option<&[Vec<i32>]> {

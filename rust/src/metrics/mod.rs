@@ -23,6 +23,10 @@ pub struct RunMetrics {
     pub mask_flips: Vec<u64>,
     /// Wall-clock seconds per training epoch.
     pub epoch_secs: Vec<f64>,
+    /// Training steps actually executed per epoch (may be less than the
+    /// planned `epochs × capped(n)` for empty datasets or early-exit runs —
+    /// throughput reporting must divide by this, not the plan).
+    pub steps: Vec<u64>,
 }
 
 impl RunMetrics {
@@ -35,6 +39,11 @@ impl RunMetrics {
 
     pub fn final_accuracy(&self) -> f64 {
         *self.accuracy.last().unwrap_or(&0.0)
+    }
+
+    /// Executed training steps summed over all epochs.
+    pub fn total_steps(&self) -> u64 {
+        self.steps.iter().sum()
     }
 }
 

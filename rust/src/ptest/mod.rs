@@ -69,6 +69,43 @@ pub mod gen {
     pub fn dim(rng: &mut XorShift64, hi: usize) -> usize {
         1 + rng.below(hi)
     }
+
+    use std::sync::Arc;
+
+    use crate::quant::Scales;
+    use crate::serial::Dataset;
+    use crate::session::Backbone;
+    use crate::spec::NetSpec;
+
+    /// A seeded in-memory tinycnn backbone (random int8 weights, default
+    /// scales) — the artifact-free fixture shared by the session/serve
+    /// test suites, the `serve` bench, and the `fleet_server` example.
+    pub fn synthetic_backbone(seed: u64) -> Arc<Backbone> {
+        let spec = NetSpec::tinycnn();
+        let mut rng = XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                mat_i8(&mut rng, r, c)
+            })
+            .collect();
+        let scales = Scales::default_for(spec.layers.len());
+        Backbone::from_parts("tinycnn", spec, weights, scales)
+    }
+
+    /// A seeded random dataset matching the tinycnn input geometry
+    /// (labels cycle 0..10).
+    pub fn synthetic_dataset(seed: u64, n: usize) -> Dataset {
+        let spec = NetSpec::tinycnn();
+        let (c, h, w) = spec.input_chw;
+        let mut rng = XorShift64::new(seed);
+        let images: Vec<u8> =
+            (0..n * c * h * w).map(|_| rng.int_in(0, 255) as u8).collect();
+        let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+        Dataset { n, c, h, w, images, labels }
+    }
 }
 
 #[cfg(test)]

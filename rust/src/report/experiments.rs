@@ -119,7 +119,7 @@ pub fn table1_cell(artifacts: &Path, col: &Table1Column, row: &str,
                 cfg.limit = scale.limit;
                 let pair = data::load_pair(&cfg)?;
                 let mut session = Session::from_experiment(&cfg)?;
-                let acc = session.evaluate(&pair.test);
+                let acc = session.evaluate(&pair.test)?;
                 let ms = MeanStd { mean: acc, std: 0.0, n: 1 };
                 return Ok((ms, ms));
             }
@@ -306,7 +306,7 @@ pub fn fig3(artifacts: &Path, scale: Scale) -> Result<(String, Vec<RunMetrics>)>
         }
         let pair = data::load_pair(&cfg)?;
         let mut session = Session::from_experiment(&cfg)?;
-        let m = session.train(&pair.train, &pair.test);
+        let m = session.train(&pair.train, &pair.test)?;
         eprintln!("[fig3] {name}: best {:.4} {}", m.best_accuracy(),
                   crate::report::sparkline(&m.accuracy));
         names.push(name);
@@ -337,7 +337,7 @@ pub fn ablation(artifacts: &Path, scale: Scale) -> Result<String> {
                         .with_theta(theta)
                         .stochastic_rounding(sr))
             .build()?;
-        let m = session.train(&pair.train, &pair.test);
+        let m = session.train(&pair.train, &pair.test)?;
         let pruned = m
             .pruned_frac
             .last()

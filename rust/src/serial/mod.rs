@@ -61,6 +61,22 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(buf))
 }
 
+/// Overflow-checked product of header dims — a corrupt header must yield a
+/// clean error, never a wrapped size that allocates garbage.
+fn checked_size(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+/// Error unless `r` is exactly at end-of-file (the formats are
+/// fixed-layout: trailing bytes mean a corrupt or mismatched file).
+fn expect_eof(r: &mut impl Read, path: &Path, what: &str) -> Result<()> {
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("{}: trailing bytes after {what}", path.display());
+    }
+    Ok(())
+}
+
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
@@ -93,15 +109,21 @@ pub fn load_weights(path: &Path) -> Result<Vec<TensorI8>> {
         for _ in 0..ndim {
             dims.push(read_u32(&mut r)? as usize);
         }
-        let size: usize = dims.iter().product();
-        if size > 256 << 20 {
-            bail!("{}: tensor {ti} too large ({size})", path.display());
-        }
+        let size = checked_size(&dims)
+            .filter(|&s| s <= 256 << 20)
+            .with_context(|| {
+                format!("{}: tensor {ti} has implausible dims {dims:?}",
+                        path.display())
+            })?;
         let mut raw = vec![0u8; size];
-        r.read_exact(&mut raw)?;
+        r.read_exact(&mut raw).with_context(|| {
+            format!("{}: tensor {ti} truncated (want {size} bytes)",
+                    path.display())
+        })?;
         let data: Vec<i8> = raw.into_iter().map(|b| b as i8).collect();
         out.push(TensorI8 { dims, data });
     }
+    expect_eof(&mut r, path, &format!("{n} tensors"))?;
     Ok(out)
 }
 
@@ -154,11 +176,17 @@ impl Dataset {
     /// Device-side activation mapping: u8 0..255 pixels → int8 0..127
     /// (`p >> 1`), widened into the caller's i32 buffer.
     pub fn image_i32(&self, i: usize, out: &mut [i32]) {
-        let img = self.image(i);
-        debug_assert_eq!(img.len(), out.len());
-        for (o, &p) in out.iter_mut().zip(img.iter()) {
-            *o = (p >> 1) as i32;
-        }
+        u8_to_i32_pixels(self.image(i), out);
+    }
+}
+
+/// The device-side pixel mapping (u8 0..255 → int8 0..127 via `p >> 1`),
+/// shared by [`Dataset::image_i32`] and the serve front-end's raw-image
+/// `Predict` requests so the two paths cannot drift.
+pub fn u8_to_i32_pixels(src: &[u8], out: &mut [i32]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &p) in out.iter_mut().zip(src.iter()) {
+        *o = (p >> 1) as i32;
     }
 }
 
@@ -179,14 +207,25 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
     let c = read_u32(&mut r)? as usize;
     let h = read_u32(&mut r)? as usize;
     let w = read_u32(&mut r)? as usize;
-    let total = n
-        .checked_mul(c * h * w)
+    // NB `c * h * w` must be checked too — the header is untrusted, and an
+    // unchecked product can wrap before the old `n.checked_mul(...)` ever
+    // saw it.
+    let total = checked_size(&[n, c, h, w])
         .filter(|&t| t <= 1 << 31)
-        .with_context(|| format!("{}: implausible dims", path.display()))?;
+        .with_context(|| {
+            format!("{}: implausible dims n={n} c={c} h={h} w={w}",
+                    path.display())
+        })?;
     let mut images = vec![0u8; total];
-    r.read_exact(&mut images)?;
+    r.read_exact(&mut images).with_context(|| {
+        format!("{}: image payload truncated (want {total} bytes)",
+                path.display())
+    })?;
     let mut labels = vec![0u8; n];
-    r.read_exact(&mut labels)?;
+    r.read_exact(&mut labels).with_context(|| {
+        format!("{}: label payload truncated (want {n} bytes)", path.display())
+    })?;
+    expect_eof(&mut r, path, "the label payload")?;
     Ok(Dataset { n, c, h, w, images, labels })
 }
 
@@ -224,6 +263,103 @@ mod tests {
             vec![2, 3], &[0, 127, -127, 300, -300, 128]);
         assert_eq!(t.data, vec![0, 127, -127, 127, -128, 127],
                    "out-of-range i32 values must saturate, not wrap");
+    }
+
+    /// Write raw bytes to a temp fixture and return its path.
+    fn fixture(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    fn le(words: &[u32]) -> Vec<u8> {
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    /// A well-formed 2-sample 1×2×2 dataset header + payload.
+    fn dataset_bytes() -> Vec<u8> {
+        let mut b = le(&[DATASET_MAGIC, 1, 2, 1, 2, 2]);
+        b.extend([10u8, 20, 30, 40, 50, 60, 70, 80]); // 2 × 4 pixels
+        b.extend([1u8, 2]); // labels
+        b
+    }
+
+    #[test]
+    fn dataset_roundtrip_and_exact_length() {
+        let path = fixture("ds_ok.bin", &dataset_bytes());
+        let ds = load_dataset(&path).unwrap();
+        assert_eq!((ds.n, ds.c, ds.h, ds.w), (2, 1, 2, 2));
+        assert_eq!(ds.labels, vec![1, 2]);
+    }
+
+    #[test]
+    fn dataset_truncated_payload_is_clean_error() {
+        let mut bytes = dataset_bytes();
+        bytes.truncate(bytes.len() - 5); // cut into the image payload
+        let path = fixture("ds_trunc.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+
+        let mut bytes = dataset_bytes();
+        bytes.truncate(bytes.len() - 1); // labels short by one
+        let path = fixture("ds_trunc_labels.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("label"), "{err:#}");
+    }
+
+    #[test]
+    fn dataset_trailing_bytes_rejected() {
+        let mut bytes = dataset_bytes();
+        bytes.push(0xAA);
+        let path = fixture("ds_trailing.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn dataset_overflowing_dims_are_clean_error() {
+        // n·c·h·w wraps usize if multiplied unchecked — must be a clean
+        // error, not a garbage tensor or an abort.
+        let bytes = le(&[DATASET_MAGIC, 1, u32::MAX, u32::MAX, u32::MAX,
+                         u32::MAX]);
+        let path = fixture("ds_overflow.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err:#}");
+        // ...and merely-huge (non-wrapping) dims hit the same guard.
+        let bytes = le(&[DATASET_MAGIC, 1, 1 << 20, 16, 64, 64]);
+        let path = fixture("ds_huge.bin", &bytes);
+        assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn weights_truncated_tensor_is_clean_error() {
+        // magic, v1, 1 tensor, ndim=2, dims 2×3, then only 4 of 6 bytes.
+        let mut bytes = le(&[WEIGHTS_MAGIC, 1, 1, 2, 2, 3]);
+        bytes.extend([1u8, 2, 3, 4]);
+        let path = fixture("w_trunc.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+        assert!(err.to_string().contains("tensor 0"), "{err:#}");
+    }
+
+    #[test]
+    fn weights_overflowing_dims_are_clean_error() {
+        let bytes = le(&[WEIGHTS_MAGIC, 1, 1, 4, u32::MAX, u32::MAX, u32::MAX,
+                         u32::MAX]);
+        let path = fixture("w_overflow.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err:#}");
+    }
+
+    #[test]
+    fn weights_trailing_bytes_rejected() {
+        let mut bytes = le(&[WEIGHTS_MAGIC, 1, 1, 1, 2]);
+        bytes.extend([7u8, 9, 0xFF]); // one byte too many
+        let path = fixture("w_trailing.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err:#}");
     }
 
     #[test]

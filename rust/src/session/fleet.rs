@@ -4,18 +4,28 @@
 //! is the host-side simulation of that deployment.  Every device session
 //! shares the read-only backbone weights/scales through `Arc` (no
 //! per-session copy — asserted by `rust/tests/session.rs`), owns its
-//! method state, and runs on a work-stealing pool of worker threads.
+//! method state, and runs on a pool of worker threads.
+//!
+//! Scheduling is **epoch-granular**: the work queue holds one epoch of one
+//! device at a time, and a device re-queues at the back after each epoch,
+//! so a device with many epochs never monopolizes a worker while the rest
+//! of the fleet waits.  Per-device results are bit-identical to running
+//! each session alone — device state never crosses the queue boundary.
+//! Epoch-boundary evaluation goes through the batched forward path
+//! (`eval_batch`, default 8 samples per forward).
 //!
 //! The Table I seed sweep ([`crate::coordinator::sweep_seeds`]) and the
 //! `priot fleet` multi-device simulation are both built on this type; the
-//! `fleet` bench measures its sessions/sec and steps/sec.
+//! `fleet` bench measures its sessions/sec and steps/sec.  For the
+//! request-driven (long-lived) front-end see [`super::serve`].
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::RunOptions;
+use crate::coordinator::{RunOptions, TrainProgress};
 use crate::methods::MethodPlugin;
 use crate::metrics::RunMetrics;
 use crate::serial::Dataset;
@@ -53,7 +63,10 @@ pub struct DeviceReport {
     pub name: String,
     pub seed: u32,
     pub metrics: RunMetrics,
-    /// Training steps executed (epochs × capped train samples).
+    /// Training steps actually **executed** (threaded back from the epoch
+    /// loop via [`RunMetrics::total_steps`]) — not the planned
+    /// `epochs × capped(n)`, which overstates throughput for empty
+    /// datasets or early-exit runs.
     pub steps: u64,
 }
 
@@ -74,7 +87,7 @@ impl FleetReport {
         self.devices.len() as f64 / self.wall_secs.max(1e-9)
     }
 
-    /// Aggregate training steps per wall-clock second.
+    /// Aggregate executed training steps per wall-clock second.
     pub fn steps_per_sec(&self) -> f64 {
         self.total_steps() as f64 / self.wall_secs.max(1e-9)
     }
@@ -110,9 +123,30 @@ impl FleetReport {
     }
 }
 
+/// A device checked out of the queue mid-run: its session, data, progress,
+/// and the epochs still owed.
+struct Job<'a> {
+    idx: usize,
+    name: String,
+    seed: u32,
+    session: Session,
+    train: &'a Dataset,
+    test: &'a Dataset,
+    progress: TrainProgress,
+    remaining: usize,
+}
+
+/// One unit of queued work: start a device (build + epoch-0 evaluation) or
+/// run the next epoch of an already-started one.
+enum Task<'a> {
+    Start(usize, Device<'a>),
+    Epoch(Job<'a>),
+}
+
 impl<'a> Fleet<'a> {
-    /// Defaults match [`super::SessionBuilder`]: 1 epoch, no sample cap,
-    /// pruning tracking on, auto thread count.
+    /// Defaults match [`super::SessionBuilder`] except evaluation, which is
+    /// batched (8 samples per forward — bit-identical, faster): 1 epoch,
+    /// no sample cap, pruning tracking on, auto thread count.
     pub fn builder(backbone: Arc<Backbone>) -> FleetBuilder<'a> {
         FleetBuilder {
             backbone,
@@ -121,6 +155,7 @@ impl<'a> Fleet<'a> {
                 limit: 0,
                 track_pruning: true,
                 verbose: false,
+                eval_batch: 8,
             },
             threads: 0,
             devices: Vec::new(),
@@ -135,8 +170,9 @@ impl<'a> Fleet<'a> {
         self.devices.is_empty()
     }
 
-    /// Run every device to completion across the worker pool.  Device
-    /// reports come back in the order the devices were added.
+    /// Run every device to completion across the worker pool, one epoch at
+    /// a time (round-robin over ready devices).  Device reports come back
+    /// in the order the devices were added.
     pub fn run(self) -> Result<FleetReport> {
         let n_devices = self.devices.len();
         let threads = if self.threads == 0 {
@@ -148,9 +184,13 @@ impl<'a> Fleet<'a> {
             self.threads.min(n_devices.max(1))
         };
         let t0 = Instant::now();
-        // LIFO work queue (reversed so devices start in insertion order).
-        let queue: Mutex<Vec<(usize, Device)>> =
-            Mutex::new(self.devices.into_iter().enumerate().rev().collect());
+        let queue: Mutex<VecDeque<Task>> = Mutex::new(
+            self.devices
+                .into_iter()
+                .enumerate()
+                .map(|(idx, dev)| Task::Start(idx, dev))
+                .collect(),
+        );
         let results: Mutex<Vec<(usize, Result<DeviceReport>)>> =
             Mutex::new(Vec::with_capacity(n_devices));
         let backbone = &self.backbone;
@@ -158,10 +198,46 @@ impl<'a> Fleet<'a> {
         std::thread::scope(|s| {
             for _ in 0..threads {
                 s.spawn(|| loop {
-                    let job = queue.lock().expect("fleet queue poisoned").pop();
-                    let Some((idx, dev)) = job else { break };
-                    let res = run_device(backbone, opts, dev);
-                    results.lock().expect("fleet results poisoned").push((idx, res));
+                    let task =
+                        queue.lock().expect("fleet queue poisoned").pop_front();
+                    let Some(task) = task else { break };
+                    let next = match task {
+                        Task::Start(idx, dev) => {
+                            match start_device(backbone, opts, idx, dev) {
+                                Ok(job) => job,
+                                Err(e) => {
+                                    results
+                                        .lock()
+                                        .expect("fleet results poisoned")
+                                        .push((idx, Err(e)));
+                                    continue;
+                                }
+                            }
+                        }
+                        Task::Epoch(mut job) => {
+                            job.progress.step_epoch(job.session.driver(),
+                                                    job.train, job.test, opts);
+                            job.remaining -= 1;
+                            job
+                        }
+                    };
+                    if next.remaining == 0 {
+                        let report = DeviceReport {
+                            name: next.name,
+                            seed: next.seed,
+                            steps: next.progress.metrics().total_steps(),
+                            metrics: next.progress.finish(),
+                        };
+                        results
+                            .lock()
+                            .expect("fleet results poisoned")
+                            .push((next.idx, Ok(report)));
+                    } else {
+                        queue
+                            .lock()
+                            .expect("fleet queue poisoned")
+                            .push_back(Task::Epoch(next));
+                    }
                 });
             }
         });
@@ -175,24 +251,34 @@ impl<'a> Fleet<'a> {
     }
 }
 
-fn run_device(backbone: &Arc<Backbone>, opts: &RunOptions, dev: Device)
-              -> Result<DeviceReport> {
+/// Build a device's session (validating its data against the backbone) and
+/// run the epoch-0 evaluation.
+fn start_device<'a>(backbone: &Arc<Backbone>, opts: &RunOptions, idx: usize,
+                    dev: Device<'a>) -> Result<Job<'a>> {
+    crate::data::validate(dev.train, &backbone.spec)
+        .with_context(|| format!("fleet device {}: train set", dev.name))?;
+    crate::data::validate(dev.test, &backbone.spec)
+        .with_context(|| format!("fleet device {}: test set", dev.name))?;
     let mut session = Session::builder()
         .backbone(Arc::clone(backbone))
         .method_boxed(dev.plugin)
         .seed(dev.seed)
         .epochs(opts.epochs)
         .limit(opts.limit)
+        .eval_batch(opts.eval_batch)
         .track_pruning(opts.track_pruning)
         .verbose(opts.verbose)
         .build()?;
-    let n_train = crate::coordinator::capped(dev.train.n, opts.limit);
-    let metrics = session.train(dev.train, dev.test);
-    Ok(DeviceReport {
+    let progress = TrainProgress::start(session.driver(), dev.test, opts);
+    Ok(Job {
+        idx,
         name: dev.name,
         seed: dev.seed,
-        metrics,
-        steps: (opts.epochs * n_train) as u64,
+        session,
+        train: dev.train,
+        test: dev.test,
+        progress,
+        remaining: opts.epochs,
     })
 }
 
@@ -215,6 +301,13 @@ impl<'a> FleetBuilder<'a> {
 
     pub fn track_pruning(mut self, on: bool) -> Self {
         self.opts.track_pruning = on;
+        self
+    }
+
+    /// Samples per forward in epoch-boundary evaluation (bit-identical to
+    /// per-sample; default 8).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.opts.eval_batch = batch;
         self
     }
 

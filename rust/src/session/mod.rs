@@ -8,7 +8,10 @@
 //!   execution backend ([`Backend::Engine`] or [`Backend::Pjrt`]), with
 //!   `train_epoch` / `predict` / `evaluate` / `save` / `restore`.
 //! * [`Fleet`] — many concurrent sessions over one shared backbone
-//!   (see [`fleet`]).
+//!   (see [`fleet`]); work is scheduled at epoch granularity across the
+//!   worker pool.
+//! * [`FleetServer`] — the long-lived, request-driven front-end: a stream
+//!   of [`Request`] messages over an mpsc channel (see [`serve`]).
 //!
 //! ```no_run
 //! use priot::session::Session;
@@ -26,8 +29,10 @@
 //! ```
 
 pub mod fleet;
+pub mod serve;
 
 pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
+pub use serve::{FleetServer, Request, Response, ServeBuilder, ServeReport};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -35,7 +40,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{capped, run_training, train_one_epoch, RunOptions};
+use crate::coordinator::{
+    evaluate_batched, predict_batched, run_training, train_one_epoch,
+    RunOptions,
+};
 
 pub use crate::coordinator::EpochReport;
 use crate::engine::{Engine, StepOut};
@@ -151,6 +159,10 @@ impl StepBackend for EngineExecutor {
         self.plugin.predict(&mut self.engine, img)
     }
 
+    fn predict_batch(&mut self, imgs: &Mat) -> Vec<usize> {
+        self.plugin.predict_batch(&mut self.engine, imgs)
+    }
+
     fn scores(&self) -> Option<&[Vec<i32>]> {
         self.plugin.scores()
     }
@@ -207,6 +219,10 @@ enum Exec {
 pub struct Session {
     exec: Exec,
     opts: RunOptions,
+    /// The backbone's architecture, kept so the data-facing entry points
+    /// can reject geometry-mismatched datasets with a clean error instead
+    /// of panicking deep inside the engine.
+    spec: NetSpec,
 }
 
 impl Session {
@@ -264,18 +280,32 @@ impl Session {
         self.driver().train_step(img, label)
     }
 
+    /// Reject datasets whose geometry or labels don't fit the backbone —
+    /// the Session/Fleet/serve contract is a clean `Err`, never a panic
+    /// deep inside the engine.
+    fn check_data(&self, ds: &Dataset) -> Result<()> {
+        crate::data::validate(ds, &self.spec)
+    }
+
     /// One pass over (a cap of) the training set; returns step statistics.
     /// Shares [`train_one_epoch`] with the coordinator's full run loop.
-    pub fn train_epoch(&mut self, train: &Dataset) -> EpochReport {
+    pub fn train_epoch(&mut self, train: &Dataset) -> Result<EpochReport> {
+        self.check_data(train)?;
         let limit = self.opts.limit;
-        train_one_epoch(self.driver(), train, limit)
+        Ok(train_one_epoch(self.driver(), train, limit))
     }
 
     /// The full epoch loop with per-epoch evaluation (the paper's run
     /// protocol) — drives [`run_training`] over this session's backend.
-    pub fn train(&mut self, train: &Dataset, test: &Dataset) -> RunMetrics {
+    /// The returned metrics include the *executed* step count per epoch
+    /// ([`RunMetrics::total_steps`]), which fleet/serve throughput
+    /// reporting divides by.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset)
+                 -> Result<RunMetrics> {
+        self.check_data(train)?;
+        self.check_data(test)?;
         let opts = self.opts.clone();
-        run_training(self.driver(), train, test, &opts)
+        Ok(run_training(self.driver(), train, test, &opts))
     }
 
     /// Inference for one image.
@@ -283,24 +313,34 @@ impl Session {
         self.driver().predict(img)
     }
 
-    /// Predictions over (a cap of) a dataset.
-    pub fn predict_batch(&mut self, ds: &Dataset, limit: usize) -> Vec<usize> {
-        let n = capped(ds.n, limit);
-        let mut img = vec![0i32; ds.image_len()];
-        let driver = self.driver();
-        (0..n)
-            .map(|i| {
-                ds.image_i32(i, &mut img);
-                driver.predict(&img)
-            })
-            .collect()
+    /// Predictions over (a cap of) a dataset, in batched forwards of the
+    /// session's `eval_batch` option (bit-identical to per-sample
+    /// prediction).  Labels are not read, so an inference-only dataset
+    /// with sentinel labels is accepted (only image geometry/payload is
+    /// validated).
+    pub fn predict_batch(&mut self, ds: &Dataset, limit: usize)
+                         -> Result<Vec<usize>> {
+        crate::data::validate_images(ds, &self.spec)?;
+        let batch = self.opts.eval_batch;
+        Ok(predict_batched(self.driver(), ds, limit, batch))
     }
 
     /// Top-1 accuracy over (a cap of) a dataset, respecting the session's
-    /// `limit` option.
-    pub fn evaluate(&mut self, ds: &Dataset) -> f64 {
+    /// `limit` and `eval_batch` options.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let batch = self.opts.eval_batch;
+        self.evaluate_batch(ds, batch)
+    }
+
+    /// Top-1 accuracy with an explicit evaluation batch size: samples are
+    /// run through the engine `batch` at a time (extra GEMM columns — see
+    /// [`crate::engine::Engine::forward_batch`]), bit-identical to
+    /// per-sample evaluation for every method plugin.
+    pub fn evaluate_batch(&mut self, ds: &Dataset, batch: usize)
+                          -> Result<f64> {
+        self.check_data(ds)?;
         let limit = self.opts.limit;
-        crate::coordinator::evaluate(self.driver(), ds, limit)
+        Ok(evaluate_batched(self.driver(), ds, limit, batch))
     }
 
     /// Checkpoint the trained state (scores+masks, or NITI weights).
@@ -353,6 +393,7 @@ pub struct SessionBuilder {
     limit: usize,
     track_pruning: bool,
     verbose: bool,
+    eval_batch: usize,
 }
 
 impl Default for SessionBuilder {
@@ -368,6 +409,7 @@ impl Default for SessionBuilder {
             limit: 0,
             track_pruning: true,
             verbose: false,
+            eval_batch: 1,
         }
     }
 }
@@ -438,6 +480,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Samples per forward in dataset evaluation (default 1 = per-sample;
+    /// batched evaluation is bit-identical, just faster — the fleet and
+    /// serve front-ends default to a batched width).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.eval_batch = batch;
+        self
+    }
+
     /// Pre-populate the builder from an [`ExperimentConfig`].
     pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
         Ok(Session::builder()
@@ -448,6 +498,7 @@ impl SessionBuilder {
             .seed(cfg.seed)
             .epochs(cfg.epochs)
             .limit(cfg.limit)
+            .eval_batch(cfg.eval_batch)
             .track_pruning(cfg.track_pruning))
     }
 
@@ -465,7 +516,9 @@ impl SessionBuilder {
             limit: self.limit,
             track_pruning: self.track_pruning,
             verbose: self.verbose,
+            eval_batch: self.eval_batch,
         };
+        let spec = backbone.spec.clone();
         let exec = match self.backend {
             Backend::Engine => {
                 let engine = Engine::shared(
@@ -477,6 +530,6 @@ impl SessionBuilder {
             }
             Backend::Pjrt => build_pjrt(&self.artifacts, &backbone, plugin)?,
         };
-        Ok(Session { exec, opts })
+        Ok(Session { exec, opts, spec })
     }
 }

@@ -1,0 +1,923 @@
+//! `priot::serve` — a long-lived fleet service.
+//!
+//! [`Fleet`](super::Fleet) runs a *closed* roster of devices to
+//! completion; this module is the open-ended counterpart the ROADMAP's
+//! north star asks for: a service that owns one shared
+//! `Arc<`[`Backbone`]`>` plus a registry of per-device [`Session`]s and
+//! consumes a **stream** of [`Request`] messages over an mpsc channel —
+//! register a device, train it some epochs, classify an image, evaluate,
+//! or swap its local data when the distribution drifts.
+//!
+//! Scheduling is epoch-granular, like the fleet queue: every queued unit
+//! of work is *one* operation of *one* device (one training epoch, one
+//! prediction, one evaluation), and a device with pending work re-queues
+//! at the back after each unit, so a device mid-adaptation never
+//! monopolizes a worker while other devices' requests wait.  Operations
+//! of one device always run in submission order on its own session state,
+//! so per-device results are bit-identical to a standalone session; work
+//! of *different* devices interleaves freely across the pool.
+//!
+//! Evaluation goes through the batched forward path
+//! ([`Session::evaluate_batch`]) — bit-identical to per-sample, faster.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use priot::methods::Priot;
+//! use priot::session::{Backbone, FleetServer, Request};
+//!
+//! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
+//! # let (train, test): (Arc<priot::serial::Dataset>, Arc<priot::serial::Dataset>) = todo!();
+//! let server = FleetServer::builder(backbone).threads(4).build();
+//! server.submit(Request::Register {
+//!     device: "dev-00".into(), seed: 1,
+//!     plugin: Box::new(Priot::new()), train, test,
+//! })?;
+//! server.submit(Request::Train { device: "dev-00".into(), epochs: 2 })?;
+//! server.submit(Request::Evaluate { device: "dev-00".into() })?;
+//! let report = server.join()?;   // drain + shut down
+//! println!("{}", report.summary());
+//! # anyhow::Ok(())
+//! ```
+//!
+//! The `priot serve` CLI subcommand drives a server from a scripted
+//! request trace ([`parse_trace`]; [`DEMO_TRACE`] is a worked sample).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Method, Selection};
+use crate::coordinator::capped;
+use crate::methods::{MethodPlugin, Niti, Priot, PriotS};
+use crate::serial::{u8_to_i32_pixels, Dataset};
+
+use super::{Backbone, Session};
+
+// ---------------------------------------------------------------------------
+// Protocol
+// ---------------------------------------------------------------------------
+
+/// One message into the fleet service.  Datasets travel as `Arc` so a
+/// request never copies image payloads.
+pub enum Request {
+    /// Add a device: builds a session over the shared backbone after
+    /// validating the device's data against the backbone spec.
+    Register {
+        device: String,
+        seed: u32,
+        plugin: Box<dyn MethodPlugin>,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+    /// Adapt for `epochs` epochs on the device's local train set.
+    Train { device: String, epochs: usize },
+    /// Classify one raw u8 image (the on-device `p >> 1` pixel mapping is
+    /// applied server-side).
+    Predict { device: String, image: Vec<u8> },
+    /// Top-1 accuracy over the device's local test set (batched forward).
+    Evaluate { device: String },
+    /// The device's local distribution drifted: swap its datasets.  Takes
+    /// effect after the device's previously queued work, preserving
+    /// submission order.
+    Drift {
+        device: String,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+}
+
+impl Request {
+    /// The device a request addresses.
+    pub fn device(&self) -> &str {
+        match self {
+            Request::Register { device, .. }
+            | Request::Train { device, .. }
+            | Request::Predict { device, .. }
+            | Request::Evaluate { device }
+            | Request::Drift { device, .. } => device,
+        }
+    }
+}
+
+/// One message out of the fleet service.  A device's *op* responses
+/// (train/predict/evaluate/drift) arrive in its submission order;
+/// dispatch-time validation errors are emitted immediately and may
+/// overtake responses of the device's still-queued earlier ops.  Responses
+/// of different devices interleave freely.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Registered { device: String },
+    /// One completed [`Request::Train`]: epochs and **executed** steps.
+    TrainDone {
+        device: String,
+        epochs: usize,
+        steps: u64,
+        train_accuracy: f64,
+    },
+    Prediction { device: String, class: usize },
+    Evaluation { device: String, accuracy: f64, n: usize },
+    Drifted { device: String },
+    Error { device: String, message: String },
+}
+
+impl Response {
+    pub fn device(&self) -> &str {
+        match self {
+            Response::Registered { device }
+            | Response::TrainDone { device, .. }
+            | Response::Prediction { device, .. }
+            | Response::Evaluation { device, .. }
+            | Response::Drifted { device }
+            | Response::Error { device, .. } => device,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error { .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler internals
+// ---------------------------------------------------------------------------
+
+/// One epoch-granular unit of device work.
+enum Op {
+    /// One training epoch; `last` closes out the originating
+    /// [`Request::Train`] and emits its [`Response::TrainDone`].
+    TrainEpoch { last: bool },
+    /// A zero-epoch [`Request::Train`]: emits its `TrainDone` from the
+    /// queue (not the dispatcher) so per-device response order holds.
+    TrainNoop,
+    Predict { image: Vec<u8> },
+    Evaluate,
+    Drift { train: Arc<Dataset>, test: Arc<Dataset> },
+}
+
+struct DeviceState {
+    /// `None` while a worker has the session checked out.
+    session: Option<Session>,
+    train: Arc<Dataset>,
+    test: Arc<Dataset>,
+    /// Pending ops, FIFO.  A device appears in the ready queue iff
+    /// `queued` — never twice, so its ops can never run concurrently.
+    ops: VecDeque<Op>,
+    queued: bool,
+    /// Accumulators for the in-flight [`Request::Train`].
+    req_epochs: usize,
+    req_steps: u64,
+}
+
+struct Shared {
+    backbone: Arc<Backbone>,
+    limit: usize,
+    eval_batch: usize,
+    devices: Mutex<HashMap<String, DeviceState>>,
+    /// Devices with pending ops, round-robin.  Lock order: `devices`
+    /// before `ready`; `outstanding` is only taken with `devices` held
+    /// (dispatcher) or with nothing held (worker epilogue).
+    ready: Mutex<VecDeque<String>>,
+    ready_cv: Condvar,
+    done: AtomicBool,
+    /// Ops enqueued but not yet completed (drives graceful shutdown).
+    outstanding: Mutex<usize>,
+    idle_cv: Condvar,
+    requests: AtomicU64,
+}
+
+impl Shared {
+    /// Tell the worker pool to exit.  The store must synchronize through
+    /// the `ready` mutex: a worker that saw `done == false` keeps the
+    /// mutex until it is parked inside `ready_cv.wait`, so passing
+    /// through the lock before notifying guarantees the wakeup is not
+    /// lost between its check and its wait.
+    fn signal_done(&self) {
+        self.done.store(true, Ordering::SeqCst);
+        drop(self.ready.lock().expect("serve ready queue"));
+        self.ready_cv.notify_all();
+    }
+}
+
+fn dispatch(shared: &Shared, rx: Receiver<Request>, events: &Sender<Response>) {
+    for req in rx {
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        let device = req.device().to_string();
+        if let Err(e) = handle_request(shared, req, events) {
+            let _ = events.send(Response::Error {
+                device,
+                message: format!("{e:#}"),
+            });
+        }
+    }
+}
+
+fn handle_request(shared: &Shared, req: Request, events: &Sender<Response>)
+                  -> Result<()> {
+    match req {
+        Request::Register { device, seed, plugin, train, test } => {
+            crate::data::validate(&train, &shared.backbone.spec)
+                .with_context(|| format!("registering {device}: train set"))?;
+            crate::data::validate(&test, &shared.backbone.spec)
+                .with_context(|| format!("registering {device}: test set"))?;
+            let session = Session::builder()
+                .backbone(Arc::clone(&shared.backbone))
+                .method_boxed(plugin)
+                .seed(seed)
+                .limit(shared.limit)
+                .eval_batch(shared.eval_batch)
+                .track_pruning(false)
+                .build()
+                .with_context(|| format!("registering {device}"))?;
+            let mut devices = shared.devices.lock().expect("serve registry");
+            if devices.contains_key(&device) {
+                bail!("device {device} already registered");
+            }
+            devices.insert(device.clone(), DeviceState {
+                session: Some(session),
+                train,
+                test,
+                ops: VecDeque::new(),
+                queued: false,
+                req_epochs: 0,
+                req_steps: 0,
+            });
+            drop(devices);
+            let _ = events.send(Response::Registered { device });
+            Ok(())
+        }
+        Request::Train { device, epochs } => {
+            if epochs == 0 {
+                return enqueue(shared, &device, [Op::TrainNoop]);
+            }
+            let ops =
+                (0..epochs).map(|i| Op::TrainEpoch { last: i + 1 == epochs });
+            enqueue(shared, &device, ops)
+        }
+        Request::Predict { device, image } => {
+            enqueue(shared, &device, [Op::Predict { image }])
+        }
+        Request::Evaluate { device } => enqueue(shared, &device, [Op::Evaluate]),
+        Request::Drift { device, train, test } => {
+            crate::data::validate(&train, &shared.backbone.spec)
+                .with_context(|| format!("drifting {device}: train set"))?;
+            crate::data::validate(&test, &shared.backbone.spec)
+                .with_context(|| format!("drifting {device}: test set"))?;
+            enqueue(shared, &device, [Op::Drift { train, test }])
+        }
+    }
+}
+
+fn enqueue(shared: &Shared, device: &str, ops: impl IntoIterator<Item = Op>)
+           -> Result<()> {
+    let mut devices = shared.devices.lock().expect("serve registry");
+    let st = devices
+        .get_mut(device)
+        .ok_or_else(|| anyhow!("unknown device {device} (register first)"))?;
+    let mut added = 0usize;
+    for op in ops {
+        st.ops.push_back(op);
+        added += 1;
+    }
+    if added == 0 {
+        return Ok(());
+    }
+    *shared.outstanding.lock().expect("serve outstanding") += added;
+    if !st.queued {
+        st.queued = true;
+        shared
+            .ready
+            .lock()
+            .expect("serve ready queue")
+            .push_back(device.to_string());
+        shared.ready_cv.notify_one();
+    }
+    Ok(())
+}
+
+/// What one executed op produced (turned into a [`Response`] while the
+/// device's accumulators are updated under the registry lock).
+enum OpOut {
+    Epoch { last: bool, steps: u64, train_accuracy: f64 },
+    /// A zero-epoch train request reached its queue slot.
+    TrainNoop,
+    Prediction(usize),
+    Evaluation { accuracy: f64, n: usize },
+    Drifted { train: Arc<Dataset>, test: Arc<Dataset> },
+}
+
+fn run_op(session: &mut Session, op: Op, train: &Dataset, test: &Dataset,
+          eval_batch: usize, limit: usize) -> Result<OpOut> {
+    match op {
+        Op::TrainEpoch { last } => {
+            let ep = session.train_epoch(train)?;
+            Ok(OpOut::Epoch {
+                last,
+                steps: ep.steps as u64,
+                train_accuracy: ep.train_accuracy,
+            })
+        }
+        Op::TrainNoop => Ok(OpOut::TrainNoop),
+        Op::Predict { image } => {
+            let want = session.spec.input_len();
+            if image.len() != want {
+                bail!("predict: image has {} pixels, model {} wants {want}",
+                      image.len(), session.spec.name);
+            }
+            let mut img = vec![0i32; want];
+            u8_to_i32_pixels(&image, &mut img);
+            Ok(OpOut::Prediction(session.predict(&img)))
+        }
+        Op::Evaluate => {
+            let accuracy = session.evaluate_batch(test, eval_batch)?;
+            Ok(OpOut::Evaluation { accuracy, n: capped(test.n, limit) })
+        }
+        Op::Drift { train: tr, test: te } => Ok(OpOut::Drifted {
+            train: tr,
+            test: te,
+        }),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+fn worker(shared: &Shared, events: &Sender<Response>) {
+    loop {
+        // Wait for a ready device (or shutdown).
+        let device = {
+            let mut q = shared.ready.lock().expect("serve ready queue");
+            loop {
+                if let Some(d) = q.pop_front() {
+                    break d;
+                }
+                if shared.done.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.ready_cv.wait(q).expect("serve ready queue");
+            }
+        };
+        // Check out the session plus the next op; a device is in the ready
+        // queue at most once, so nobody else holds this session.
+        let (mut session, op, train, test) = {
+            let mut devices = shared.devices.lock().expect("serve registry");
+            let st = devices.get_mut(&device).expect("ready device registered");
+            let op = st.ops.pop_front().expect("ready device has ops");
+            (
+                st.session.take().expect("ready device owns its session"),
+                op,
+                Arc::clone(&st.train),
+                Arc::clone(&st.test),
+            )
+        };
+        let epoch_last = match &op {
+            Op::TrainEpoch { last } => Some(*last),
+            _ => None,
+        };
+        // A panicking op (method plugins are an open extension point) must
+        // not kill the worker: the `outstanding` count would never drain
+        // and `join()` would hang.  Convert the panic into an error
+        // response; engine/score buffers are plain integers, so the
+        // checked-back-in session is memory-safe (its method state may be
+        // mid-step — the caller sees the Error and can re-register).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || run_op(&mut session, op, &train, &test, shared.eval_batch,
+                      shared.limit),
+        ))
+        .unwrap_or_else(|payload| {
+            Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
+        });
+        // Check the session back in, update accumulators, build the
+        // response, and re-queue the device if it still has work.
+        let mut drained = 0usize;
+        let response = {
+            let mut devices = shared.devices.lock().expect("serve registry");
+            let st = devices.get_mut(&device).expect("device still registered");
+            st.session = Some(session);
+            let response = match result {
+                Ok(OpOut::Epoch { last, steps, train_accuracy }) => {
+                    st.req_epochs += 1;
+                    st.req_steps += steps;
+                    if last {
+                        let r = Response::TrainDone {
+                            device: device.clone(),
+                            epochs: st.req_epochs,
+                            steps: st.req_steps,
+                            train_accuracy,
+                        };
+                        st.req_epochs = 0;
+                        st.req_steps = 0;
+                        Some(r)
+                    } else {
+                        None
+                    }
+                }
+                Ok(OpOut::TrainNoop) => Some(Response::TrainDone {
+                    device: device.clone(),
+                    epochs: 0,
+                    steps: 0,
+                    train_accuracy: 0.0,
+                }),
+                Ok(OpOut::Prediction(class)) => Some(Response::Prediction {
+                    device: device.clone(),
+                    class,
+                }),
+                Ok(OpOut::Evaluation { accuracy, n }) => {
+                    Some(Response::Evaluation {
+                        device: device.clone(),
+                        accuracy,
+                        n,
+                    })
+                }
+                Ok(OpOut::Drifted { train, test }) => {
+                    st.train = train;
+                    st.test = test;
+                    Some(Response::Drifted { device: device.clone() })
+                }
+                Err(e) => {
+                    if let Some(last) = epoch_last {
+                        // Abandon the in-flight Train accounting, and for
+                        // a non-final epoch drop the request's remaining
+                        // TrainEpoch ops (they are contiguous — enqueue
+                        // is atomic per request) so the failed request
+                        // neither trains on for nothing nor emits a
+                        // spurious TrainDone after its Error.
+                        st.req_epochs = 0;
+                        st.req_steps = 0;
+                        if !last {
+                            while let Some(Op::TrainEpoch { last }) =
+                                st.ops.front()
+                            {
+                                let was_last = *last;
+                                st.ops.pop_front();
+                                drained += 1;
+                                if was_last {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Some(Response::Error {
+                        device: device.clone(),
+                        message: format!("{e:#}"),
+                    })
+                }
+            };
+            if st.ops.is_empty() {
+                st.queued = false;
+            } else {
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device.clone());
+                shared.ready_cv.notify_one();
+            }
+            response
+        };
+        if let Some(r) = response {
+            let _ = events.send(r);
+        }
+        let mut out = shared.outstanding.lock().expect("serve outstanding");
+        *out -= 1 + drained; // the executed op plus any aborted-Train ops
+        if *out == 0 {
+            shared.idle_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server handle
+// ---------------------------------------------------------------------------
+
+/// Builder for [`FleetServer`].
+pub struct ServeBuilder {
+    backbone: Arc<Backbone>,
+    threads: usize,
+    limit: usize,
+    eval_batch: usize,
+}
+
+impl ServeBuilder {
+    /// Worker thread count (0 = available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Per-epoch / per-evaluation sample cap handed to every session
+    /// (0 = all).
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Samples per forward in evaluation (bit-identical to per-sample;
+    /// default 8).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.eval_batch = batch;
+        self
+    }
+
+    /// Spawn the dispatcher + worker pool and return the live handle.
+    pub fn build(self) -> FleetServer {
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        let shared = Arc::new(Shared {
+            backbone: self.backbone,
+            limit: self.limit,
+            eval_batch: self.eval_batch,
+            devices: Mutex::new(HashMap::new()),
+            ready: Mutex::new(VecDeque::new()),
+            ready_cv: Condvar::new(),
+            done: AtomicBool::new(false),
+            outstanding: Mutex::new(0),
+            idle_cv: Condvar::new(),
+            requests: AtomicU64::new(0),
+        });
+        let (tx, rx) = channel::<Request>();
+        let (etx, erx) = channel::<Response>();
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let etx = etx.clone();
+            std::thread::spawn(move || dispatch(&shared, rx, &etx))
+        };
+        let workers = (0..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let etx = etx.clone();
+                std::thread::spawn(move || worker(&shared, &etx))
+            })
+            .collect();
+        drop(etx);
+        FleetServer {
+            shared,
+            tx: Some(tx),
+            events: erx,
+            seen: Mutex::new(Vec::new()),
+            dispatcher: Some(dispatcher),
+            workers,
+            t0: Instant::now(),
+            threads,
+        }
+    }
+}
+
+/// The long-lived fleet service: one shared backbone, a registry of
+/// per-device sessions, a dispatcher thread feeding an epoch-granular
+/// work queue, and a worker pool draining it.  See the module docs.
+pub struct FleetServer {
+    shared: Arc<Shared>,
+    tx: Option<Sender<Request>>,
+    events: Receiver<Response>,
+    /// Responses already handed out via [`Self::poll`], kept so the final
+    /// [`ServeReport`] still covers the whole run.
+    seen: Mutex<Vec<Response>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    t0: Instant,
+    threads: usize,
+}
+
+impl FleetServer {
+    pub fn builder(backbone: Arc<Backbone>) -> ServeBuilder {
+        ServeBuilder { backbone, threads: 0, limit: 0, eval_batch: 8 }
+    }
+
+    /// A clonable request handle (the raw mpsc front door) for callers
+    /// that stream requests from another thread.
+    ///
+    /// **Lifetime contract:** the dispatcher only shuts down once *every*
+    /// `Sender` clone is dropped.  [`Self::join`] closes the server's own
+    /// handle, then waits — so drop all clones (end the producer threads)
+    /// before calling `join`, or it will block until they finish.
+    pub fn sender(&self) -> Sender<Request> {
+        self.tx.as_ref().expect("server joined").clone()
+    }
+
+    /// Submit one request.  Responses arrive asynchronously — poll with
+    /// [`Self::poll`] or collect everything via [`Self::join`].
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("server joined")
+            .send(req)
+            .map_err(|_| anyhow!("fleet server is shut down"))
+    }
+
+    /// Responses that have arrived so far (non-blocking).  Polled
+    /// responses are also retained for the final [`ServeReport`], so
+    /// `join()` still returns the complete run.
+    pub fn poll(&self) -> Vec<Response> {
+        let fresh: Vec<Response> = self.events.try_iter().collect();
+        self.seen
+            .lock()
+            .expect("serve responses")
+            .extend(fresh.iter().cloned());
+        fresh
+    }
+
+    /// Graceful shutdown: close the request channel, finish every queued
+    /// op, stop the pool, and return everything the run produced.
+    ///
+    /// Blocks until the request stream ends — if clones from
+    /// [`Self::sender`] are still alive on other threads, `join` waits
+    /// for them to drop (see the `sender` docs).
+    pub fn join(mut self) -> Result<ServeReport> {
+        self.tx.take(); // dispatcher's recv loop ends once drained
+        if let Some(d) = self.dispatcher.take() {
+            d.join().map_err(|_| anyhow!("serve dispatcher panicked"))?;
+        }
+        {
+            let mut out = self.shared.outstanding.lock().expect("outstanding");
+            while *out > 0 {
+                out = self.shared.idle_cv.wait(out).expect("outstanding");
+            }
+        }
+        self.shared.signal_done();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow!("serve worker panicked"))?;
+        }
+        let mut responses =
+            std::mem::take(&mut *self.seen.lock().expect("serve responses"));
+        responses.extend(self.events.try_iter());
+        Ok(ServeReport {
+            responses,
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            wall_secs: self.t0.elapsed().as_secs_f64(),
+            threads: self.threads,
+        })
+    }
+}
+
+impl Drop for FleetServer {
+    /// Abort path (no [`Self::join`]): stop accepting requests, let the
+    /// pool drain what is already queued, and reap the threads.
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        self.shared.signal_done();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Everything one server run produced.
+pub struct ServeReport {
+    /// Responses in completion order (per device: submission order).
+    pub responses: Vec<Response>,
+    pub requests: u64,
+    pub wall_secs: f64,
+    pub threads: usize,
+}
+
+impl ServeReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.responses.iter().filter(|r| r.is_error()).count()
+    }
+
+    /// This device's responses, in its submission order.
+    pub fn for_device<'a>(&'a self, device: &str) -> Vec<&'a Response> {
+        self.responses.iter().filter(|r| r.device() == device).collect()
+    }
+
+    /// One-paragraph run summary.
+    pub fn summary(&self) -> String {
+        let mut kinds: HashMap<&'static str, usize> = HashMap::new();
+        for r in &self.responses {
+            let k = match r {
+                Response::Registered { .. } => "registered",
+                Response::TrainDone { .. } => "train-done",
+                Response::Prediction { .. } => "predictions",
+                Response::Evaluation { .. } => "evaluations",
+                Response::Drifted { .. } => "drifts",
+                Response::Error { .. } => "errors",
+            };
+            *kinds.entry(k).or_insert(0) += 1;
+        }
+        let mut parts: Vec<String> =
+            kinds.iter().map(|(k, v)| format!("{v} {k}")).collect();
+        parts.sort();
+        format!(
+            "{} requests in {:.2}s on {} threads — {:.1} requests/s ({})",
+            self.requests,
+            self.wall_secs,
+            self.threads,
+            self.requests_per_sec(),
+            parts.join(", ")
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scripted request traces (the `priot serve` CLI front-end)
+// ---------------------------------------------------------------------------
+
+/// The method half of a trace `register` line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMethod {
+    pub method: Method,
+    pub frac_scored: f64,
+    pub selection: Selection,
+    pub theta: Option<i32>,
+}
+
+impl TraceMethod {
+    pub fn plugin(&self) -> Box<dyn MethodPlugin> {
+        match self.method {
+            Method::StaticNiti => Box::new(Niti::static_scale()),
+            Method::DynamicNiti => Box::new(Niti::dynamic()),
+            Method::Priot => {
+                let mut p = Priot::new();
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+            Method::PriotS => {
+                let mut p = PriotS::new(self.frac_scored, self.selection);
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+        }
+    }
+}
+
+/// One line of a scripted request trace.  Datasets stay symbolic (an
+/// `angle` into the artifact data) — the CLI resolves them to files.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceCmd {
+    Register { device: String, seed: u32, method: TraceMethod, angle: u32 },
+    Train { device: String, epochs: usize },
+    /// Classify sample `sample` of the device's current test set.
+    Predict { device: String, sample: usize },
+    Evaluate { device: String },
+    Drift { device: String, angle: u32 },
+}
+
+/// A worked sample trace (also what `priot serve` runs when no `--trace`
+/// file is given): two devices with different methods and local drifts.
+pub const DEMO_TRACE: &str = "\
+# priot serve demo trace: <verb> <device> [key=value]...
+register dev-a seed=1 method=priot angle=30
+register dev-b seed=2 method=priot-s frac=0.1 selection=weight angle=45
+train dev-a epochs=2
+train dev-b epochs=2
+predict dev-a sample=0
+predict dev-b sample=3
+evaluate dev-a
+evaluate dev-b
+drift dev-a angle=45
+train dev-a epochs=1
+evaluate dev-a
+";
+
+/// Parse a request trace: one command per line, `# comments` and blank
+/// lines ignored.  Grammar per line: `<verb> <device> [key=value]...` with
+/// verbs `register | train | predict | evaluate | drift`.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceCmd>> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(parse_trace_line(line)
+            .with_context(|| format!("trace line {}: {line}", ln + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_trace_line(line: &str) -> Result<TraceCmd> {
+    let mut it = line.split_whitespace();
+    let verb = it.next().expect("non-empty line");
+    let device = it
+        .next()
+        .ok_or_else(|| anyhow!("missing device name"))?
+        .to_string();
+    let mut kv: HashMap<&str, &str> = HashMap::new();
+    for pair in it {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got {pair}"))?;
+        kv.insert(k, v);
+    }
+    let get_usize = |kv: &HashMap<&str, &str>, k: &str, d: usize| -> Result<usize> {
+        match kv.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().with_context(|| format!("{k}={v}")),
+        }
+    };
+    Ok(match verb {
+        "register" => {
+            let method = Method::parse(kv.get("method").copied().unwrap_or("priot"))?;
+            let selection =
+                Selection::parse(kv.get("selection").copied().unwrap_or("weight"))?;
+            let frac_scored = match kv.get("frac") {
+                None => 0.1,
+                Some(v) => v.parse().with_context(|| format!("frac={v}"))?,
+            };
+            let theta = match kv.get("theta") {
+                None => None,
+                Some(v) => {
+                    Some(v.parse().with_context(|| format!("theta={v}"))?)
+                }
+            };
+            TraceCmd::Register {
+                device,
+                seed: get_usize(&kv, "seed", 1)? as u32,
+                method: TraceMethod { method, frac_scored, selection, theta },
+                angle: get_usize(&kv, "angle", 30)? as u32,
+            }
+        }
+        "train" => TraceCmd::Train {
+            device,
+            epochs: get_usize(&kv, "epochs", 1)?,
+        },
+        "predict" => TraceCmd::Predict {
+            device,
+            sample: get_usize(&kv, "sample", 0)?,
+        },
+        "evaluate" => TraceCmd::Evaluate { device },
+        "drift" => TraceCmd::Drift {
+            device,
+            angle: get_usize(&kv, "angle", 45)? as u32,
+        },
+        other => bail!("unknown trace verb {other} \
+                        (want register|train|predict|evaluate|drift)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_trace_demo_roundtrip() {
+        let cmds = parse_trace(DEMO_TRACE).unwrap();
+        assert_eq!(cmds.len(), 11);
+        assert_eq!(cmds[0], TraceCmd::Register {
+            device: "dev-a".into(),
+            seed: 1,
+            method: TraceMethod {
+                method: Method::Priot,
+                frac_scored: 0.1,
+                selection: Selection::WeightBased,
+                theta: None,
+            },
+            angle: 30,
+        });
+        assert_eq!(cmds[2], TraceCmd::Train { device: "dev-a".into(), epochs: 2 });
+        assert_eq!(cmds[8], TraceCmd::Drift { device: "dev-a".into(), angle: 45 });
+    }
+
+    #[test]
+    fn parse_trace_rejects_garbage() {
+        assert!(parse_trace("launch dev-a").is_err(), "unknown verb");
+        assert!(parse_trace("train").is_err(), "missing device");
+        assert!(parse_trace("train dev-a epochs").is_err(), "bare key");
+        assert!(parse_trace("train dev-a epochs=three").is_err(), "bad value");
+        assert!(parse_trace("register d method=sgd").is_err(), "bad method");
+        let err = parse_trace("ok-line dev\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn trace_method_builds_plugins() {
+        let m = TraceMethod {
+            method: Method::PriotS,
+            frac_scored: 0.2,
+            selection: Selection::Random,
+            theta: Some(-5),
+        };
+        assert_eq!(m.plugin().name(), "priot-s");
+        let m = TraceMethod {
+            method: Method::StaticNiti,
+            frac_scored: 0.1,
+            selection: Selection::WeightBased,
+            theta: None,
+        };
+        assert_eq!(m.plugin().name(), "static-niti");
+    }
+}

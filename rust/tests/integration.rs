@@ -66,7 +66,7 @@ fn backbone_beats_chance_before_transfer() {
     let c = cfg(&dir, "static-niti", &[]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 0, 512);
-    let acc = s.evaluate(&pair.test);
+    let acc = s.evaluate(&pair.test).unwrap();
     assert!(acc > 0.35, "pre-trained backbone @30° should beat chance: {acc}");
 }
 
@@ -77,7 +77,7 @@ fn priot_improves_over_backbone() {
     let c = cfg(&dir, "priot", &[("seed", "1")]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 5, 512);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     let gain = m.best_accuracy() - m.accuracy[0];
     assert!(
         gain >= 0.04,
@@ -101,7 +101,7 @@ fn static_niti_collapses() {
     let c = cfg(&dir, "static-niti", &[]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 8, 512);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     assert!(
         m.final_accuracy() < m.best_accuracy() - 0.15,
         "static-NITI should collapse from its peak: best {:.3} final {:.3}",
@@ -124,7 +124,7 @@ fn dynamic_niti_improves() {
     let c = cfg(&dir, "dynamic-niti", &[]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 3, 512);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     let gain = m.best_accuracy() - m.accuracy[0];
     assert!(gain >= 0.04, "dynamic-NITI reference should learn: gain {gain:.3}");
 }
@@ -136,7 +136,7 @@ fn priot_s_weight_based_learns_with_sparse_scores() {
                                    ("frac_scored", "0.2"), ("seed", "2")]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 5, 512);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     let gain = m.best_accuracy() - m.accuracy[0];
     assert!(gain >= 0.02, "PRIOT-S should still learn: gain {gain:.3}");
 }
@@ -148,7 +148,7 @@ fn priot_prunes_gradually_and_stably() {
     let c = cfg(&dir, "priot", &[("seed", "3")]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 5, 512);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     let last = m.pruned_frac.last().unwrap();
     let avg: f64 = last.iter().sum::<f64>() / last.len() as f64;
     assert!(
@@ -172,7 +172,7 @@ fn track_pruning_off_skips_pruning_metrics() {
     let c = cfg(&dir, "priot", &[("track_pruning", "false")]);
     let pair = data::load_pair(&c).unwrap();
     let mut s = session(&c, 2, 128);
-    let m = s.train(&pair.train, &pair.test);
+    let m = s.train(&pair.train, &pair.test).unwrap();
     assert!(m.pruned_frac.is_empty(), "tracking disabled via config");
     assert!(m.mask_flips.is_empty());
 }

@@ -1,0 +1,345 @@
+//! Serve-subsystem tests over a synthetic in-memory backbone — no
+//! artifacts required, so these run on any checkout:
+//!
+//! * register/train/predict/evaluate round-trip through the request
+//!   channel, with results bit-identical to a standalone session;
+//! * drift mid-stream swaps a device's data in submission order;
+//! * error paths (unknown device, duplicate register, geometry mismatch)
+//!   come back as `Response::Error`, never a panic;
+//! * batched evaluation is bit-identical to per-sample evaluation for all
+//!   three method plugins (the `evaluate_batch` acceptance criterion).
+
+use std::sync::Arc;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::ptest::gen::{self, synthetic_backbone};
+use priot::serial::Dataset;
+use priot::session::{Backbone, FleetServer, Request, Response, Session};
+
+fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
+    Arc::new(gen::synthetic_dataset(seed, n))
+}
+
+fn solo_session(bb: &Arc<Backbone>, plugin: Box<dyn MethodPlugin>, seed: u32)
+                -> Session {
+    Session::builder()
+        .backbone(Arc::clone(bb))
+        .method_boxed(plugin)
+        .seed(seed)
+        .eval_batch(8) // the serve default
+        .track_pruning(false)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn serve_roundtrip_matches_standalone_session() {
+    let bb = synthetic_backbone(1);
+    let train = synthetic_dataset(2, 48);
+    let test = synthetic_dataset(3, 32);
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    server
+        .submit(Request::Register {
+            device: "dev-a".into(),
+            seed: 7,
+            plugin: Box::new(Priot::new()),
+            train: Arc::clone(&train),
+            test: Arc::clone(&test),
+        })
+        .unwrap();
+    server
+        .submit(Request::Train { device: "dev-a".into(), epochs: 2 })
+        .unwrap();
+    let probe = test.image(0).to_vec();
+    server
+        .submit(Request::Predict { device: "dev-a".into(), image: probe })
+        .unwrap();
+    server.submit(Request::Evaluate { device: "dev-a".into() }).unwrap();
+    let report = server.join().unwrap();
+
+    assert_eq!(report.requests, 4);
+    assert_eq!(report.errors(), 0, "{:?}", report.responses);
+    let dev = report.for_device("dev-a");
+    assert_eq!(dev.len(), 4, "one response per request");
+    assert_eq!(*dev[0], Response::Registered { device: "dev-a".into() });
+
+    // Reference: an identical standalone session (same seed, same stream).
+    let mut solo = solo_session(&bb, Box::new(Priot::new()), 7);
+    let mut steps = 0u64;
+    for _ in 0..2 {
+        steps += solo.train_epoch(&train).unwrap().steps as u64;
+    }
+    match dev[1] {
+        Response::TrainDone { epochs, steps: s, .. } => {
+            assert_eq!(*epochs, 2);
+            assert_eq!(*s, steps, "executed steps, 2 epochs × 48 samples");
+            assert_eq!(*s, 2 * 48);
+        }
+        other => panic!("expected TrainDone, got {other:?}"),
+    }
+    let mut img = vec![0i32; test.image_len()];
+    test.image_i32(0, &mut img);
+    let want_class = solo.predict(&img);
+    assert_eq!(*dev[2],
+               Response::Prediction { device: "dev-a".into(), class: want_class },
+               "raw-image predict matches the dataset pixel mapping");
+    let want_acc = solo.evaluate_batch(&test, 8).unwrap();
+    match dev[3] {
+        Response::Evaluation { accuracy, n, .. } => {
+            assert_eq!(*accuracy, want_acc, "served evaluation bit-identical");
+            assert_eq!(*n, test.n);
+        }
+        other => panic!("expected Evaluation, got {other:?}"),
+    }
+    assert!(report.requests_per_sec() > 0.0);
+    assert!(report.summary().contains("4 requests"));
+}
+
+#[test]
+fn serve_drift_mid_stream_changes_device_data() {
+    let bb = synthetic_backbone(4);
+    let train_a = synthetic_dataset(5, 24);
+    let test_a = synthetic_dataset(6, 16);
+    let train_b = synthetic_dataset(7, 40);
+    let test_b = synthetic_dataset(8, 20);
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(3).build();
+    server
+        .submit(Request::Register {
+            device: "dev-d".into(),
+            seed: 11,
+            plugin: Box::new(PriotS::new(0.2, Selection::WeightBased)),
+            train: Arc::clone(&train_a),
+            test: Arc::clone(&test_a),
+        })
+        .unwrap();
+    server.submit(Request::Train { device: "dev-d".into(), epochs: 1 }).unwrap();
+    server
+        .submit(Request::Drift {
+            device: "dev-d".into(),
+            train: Arc::clone(&train_b),
+            test: Arc::clone(&test_b),
+        })
+        .unwrap();
+    server.submit(Request::Train { device: "dev-d".into(), epochs: 1 }).unwrap();
+    server.submit(Request::Evaluate { device: "dev-d".into() }).unwrap();
+    let report = server.join().unwrap();
+    assert_eq!(report.errors(), 0, "{:?}", report.responses);
+
+    // Reference continuation: epoch on A, then epoch on B, evaluate on B.
+    let mut solo =
+        solo_session(&bb, Box::new(PriotS::new(0.2, Selection::WeightBased)), 11);
+    let steps_a = solo.train_epoch(&train_a).unwrap().steps as u64;
+    let steps_b = solo.train_epoch(&train_b).unwrap().steps as u64;
+    let want_acc = solo.evaluate_batch(&test_b, 8).unwrap();
+
+    let dev = report.for_device("dev-d");
+    assert_eq!(dev.len(), 5);
+    match (dev[1], dev[3]) {
+        (Response::TrainDone { steps: s1, .. },
+         Response::TrainDone { steps: s2, .. }) => {
+            assert_eq!((*s1, *s2), (steps_a, steps_b),
+                       "post-drift epoch runs on the drifted train set");
+        }
+        other => panic!("expected two TrainDones, got {other:?}"),
+    }
+    assert_eq!(*dev[2], Response::Drifted { device: "dev-d".into() });
+    match dev[4] {
+        Response::Evaluation { accuracy, n, .. } => {
+            assert_eq!(*accuracy, want_acc, "evaluates the drifted test set");
+            assert_eq!(*n, test_b.n);
+        }
+        other => panic!("expected Evaluation, got {other:?}"),
+    }
+}
+
+#[test]
+fn serve_error_paths_are_responses_not_panics() {
+    let bb = synthetic_backbone(9);
+    let train = synthetic_dataset(10, 8);
+    let test = synthetic_dataset(11, 8);
+    let wrong_geometry = Arc::new(Dataset {
+        n: 2,
+        c: 3,
+        h: 32,
+        w: 32,
+        images: vec![0; 2 * 3 * 32 * 32],
+        labels: vec![0, 1],
+    });
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    // 1: op for a device that was never registered
+    server.submit(Request::Train { device: "ghost".into(), epochs: 1 }).unwrap();
+    // 2: register with geometry-mismatched data → validated at Register
+    server
+        .submit(Request::Register {
+            device: "dev-g".into(),
+            seed: 1,
+            plugin: Box::new(Priot::new()),
+            train: Arc::clone(&wrong_geometry),
+            test: Arc::clone(&test),
+        })
+        .unwrap();
+    // 3 + 4: a good register, then a duplicate of it
+    for _ in 0..2 {
+        server
+            .submit(Request::Register {
+                device: "dev-e".into(),
+                seed: 1,
+                plugin: Box::new(Niti::static_scale()),
+                train: Arc::clone(&train),
+                test: Arc::clone(&test),
+            })
+            .unwrap();
+    }
+    // 5: predict with a wrong-sized raw image
+    server
+        .submit(Request::Predict { device: "dev-e".into(), image: vec![1, 2, 3] })
+        .unwrap();
+    // 6: drift to mismatched data is rejected up front
+    server
+        .submit(Request::Drift {
+            device: "dev-e".into(),
+            train: Arc::clone(&wrong_geometry),
+            test: Arc::clone(&test),
+        })
+        .unwrap();
+    let report = server.join().unwrap();
+
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.errors(), 5, "{:?}", report.responses);
+    let ghost = report.for_device("ghost");
+    assert!(matches!(ghost[0], Response::Error { message, .. }
+                     if message.contains("register first")),
+            "{ghost:?}");
+    let dev_g = report.for_device("dev-g");
+    assert!(matches!(dev_g[0], Response::Error { message, .. }
+                     if message.contains("geometry")),
+            "{dev_g:?}");
+    let dev_e = report.for_device("dev-e");
+    assert_eq!(dev_e.len(), 4, "registered + duplicate + predict + drift");
+    assert!(!dev_e[0].is_error(), "first register succeeds");
+    // Dispatcher-side validation errors (duplicate register, bad drift)
+    // may overtake worker-side op errors (bad predict) in arrival order,
+    // so assert on the set of messages, not their order.
+    let messages: Vec<&str> = dev_e[1..]
+        .iter()
+        .map(|r| match r {
+            Response::Error { message, .. } => message.as_str(),
+            other => panic!("expected Error, got {other:?}"),
+        })
+        .collect();
+    for want in ["already registered", "pixels", "geometry"] {
+        assert!(messages.iter().any(|m| m.contains(want)),
+                "no error mentioning {want:?} in {messages:?}");
+    }
+}
+
+#[test]
+fn serve_interleaves_many_devices_deterministically_per_device() {
+    // Several devices with different methods, all mid-adaptation at once:
+    // per-device responses must be bit-identical to standalone sessions
+    // regardless of how the pool interleaves their epochs.
+    let bb = synthetic_backbone(12);
+    let train = synthetic_dataset(13, 32);
+    let test = synthetic_dataset(14, 24);
+    let mk: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
+        ("dev-niti", || Box::new(Niti::static_scale())),
+        ("dev-priot", || Box::new(Priot::new())),
+        ("dev-priot-s", || Box::new(PriotS::new(0.1, Selection::Random))),
+    ];
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(3).build();
+    for (i, (name, make)) in mk.iter().enumerate() {
+        server
+            .submit(Request::Register {
+                device: (*name).into(),
+                seed: (i + 1) as u32,
+                plugin: make(),
+                train: Arc::clone(&train),
+                test: Arc::clone(&test),
+            })
+            .unwrap();
+    }
+    for (name, _) in &mk {
+        server
+            .submit(Request::Train { device: (*name).into(), epochs: 3 })
+            .unwrap();
+        server.submit(Request::Evaluate { device: (*name).into() }).unwrap();
+    }
+    let report = server.join().unwrap();
+    assert_eq!(report.errors(), 0, "{:?}", report.responses);
+
+    for (i, (name, make)) in mk.iter().enumerate() {
+        let mut solo = solo_session(&bb, make(), (i + 1) as u32);
+        for _ in 0..3 {
+            solo.train_epoch(&train).unwrap();
+        }
+        let want = solo.evaluate_batch(&test, 8).unwrap();
+        let dev = report.for_device(name);
+        match dev.last().unwrap() {
+            Response::Evaluation { accuracy, .. } => {
+                assert_eq!(*accuracy, want, "{name}: diverged under interleaving");
+            }
+            other => panic!("{name}: expected Evaluation, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn batched_evaluation_bit_identical_for_all_method_plugins() {
+    // The acceptance criterion: `Session::evaluate_batch` (and the batched
+    // engine forward underneath) must be bit-identical to per-sample
+    // evaluation for NITI, PRIOT, and PRIOT-S — including odd batch sizes
+    // with a remainder chunk and batches larger than the dataset.
+    let bb = synthetic_backbone(15);
+    let train = synthetic_dataset(16, 40);
+    let test = synthetic_dataset(17, 37); // prime-ish: exercises remainders
+    let mk: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
+        ("static-niti", || Box::new(Niti::static_scale())),
+        ("dynamic-niti", || Box::new(Niti::dynamic())),
+        ("priot", || Box::new(Priot::new())),
+        ("priot-s", || Box::new(PriotS::new(0.15, Selection::WeightBased))),
+    ];
+    for (name, make) in &mk {
+        let mut s = Session::builder()
+            .backbone(Arc::clone(&bb))
+            .method_boxed(make())
+            .seed(5)
+            .build()
+            .unwrap();
+        // Move the method state off its init point first.
+        let mut img = vec![0i32; train.image_len()];
+        for i in 0..12 {
+            train.image_i32(i, &mut img);
+            s.train_step(&img, train.label(i));
+        }
+        // Element-wise: batched predictions == per-sample predictions.
+        let per_sample: Vec<usize> = (0..test.n)
+            .map(|i| {
+                test.image_i32(i, &mut img);
+                s.predict(&img)
+            })
+            .collect();
+        let reference = s.evaluate_batch(&test, 1).unwrap();
+        for batch in [2usize, 7, 16, 37, 64] {
+            let acc = s.evaluate_batch(&test, batch).unwrap();
+            assert_eq!(acc, reference, "{name}: accuracy diverged at batch={batch}");
+        }
+        let mut s_batched = Session::builder()
+            .backbone(Arc::clone(&bb))
+            .method_boxed(make())
+            .seed(5)
+            .eval_batch(7)
+            .build()
+            .unwrap();
+        for i in 0..12 {
+            train.image_i32(i, &mut img);
+            s_batched.train_step(&img, train.label(i));
+        }
+        let batched = s_batched.predict_batch(&test, 0).unwrap();
+        assert_eq!(batched, per_sample,
+                   "{name}: batched predictions diverged element-wise");
+    }
+}

@@ -12,37 +12,10 @@ use std::sync::Arc;
 
 use priot::config::Selection;
 use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
-use priot::prng::XorShift64;
-use priot::quant::Scales;
+use priot::ptest::gen::{synthetic_backbone, synthetic_dataset};
 use priot::serial::Dataset;
-use priot::session::{Backbone, Fleet, Session};
-use priot::spec::NetSpec;
+use priot::session::{Fleet, Session};
 use priot::tensor::Mat;
-
-fn synthetic_backbone(seed: u64) -> Arc<Backbone> {
-    let spec = NetSpec::tinycnn();
-    let mut rng = XorShift64::new(seed);
-    let weights: Vec<Mat> = spec
-        .layers
-        .iter()
-        .map(|l| {
-            let (r, c) = l.weight_shape();
-            Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
-        })
-        .collect();
-    let scales = Scales::default_for(spec.layers.len());
-    Backbone::from_parts("tinycnn", spec, weights, scales)
-}
-
-fn synthetic_dataset(seed: u64, n: usize) -> Dataset {
-    let spec = NetSpec::tinycnn();
-    let (c, h, w) = spec.input_chw;
-    let mut rng = XorShift64::new(seed);
-    let images: Vec<u8> =
-        (0..n * c * h * w).map(|_| rng.int_in(0, 255) as u8).collect();
-    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
-    Dataset { n, c, h, w, images, labels }
-}
 
 fn train_steps(s: &mut Session, ds: &Dataset, n: usize) {
     let mut img = vec![0i32; ds.image_len()];
@@ -267,9 +240,10 @@ fn fleet_matches_standalone_sessions_and_preserves_order() {
             .epochs(2)
             .build()
             .unwrap();
-        let m = solo.train(&train, &test);
+        let m = solo.train(&train, &test).unwrap();
         assert_eq!(m.accuracy, d.metrics.accuracy, "{}", d.name);
         assert_eq!(m.overflow, d.metrics.overflow, "{}", d.name);
+        assert_eq!(m.total_steps(), d.steps, "{}: executed steps", d.name);
     }
 }
 
@@ -322,10 +296,85 @@ fn session_train_epoch_and_predict_batch() {
         .limit(24)
         .build()
         .unwrap();
-    let report = s.train_epoch(&train);
+    let report = s.train_epoch(&train).unwrap();
     assert_eq!(report.steps, 24, "limit caps the epoch");
     assert!(report.secs >= 0.0);
-    let preds = s.predict_batch(&train, 10);
+    let preds = s.predict_batch(&train, 10).unwrap();
     assert_eq!(preds.len(), 10);
     assert!(preds.iter().all(|&p| p < 10));
+}
+
+#[test]
+fn geometry_mismatch_is_clean_error_not_panic() {
+    // A dataset that doesn't fit the backbone used to panic deep inside
+    // the engine; the Session/Fleet contract is a clean `Err`.
+    let bb = synthetic_backbone(20);
+    let good = synthetic_dataset(21, 8);
+    let bad = Dataset {
+        n: 2,
+        c: 3,
+        h: 32,
+        w: 32,
+        images: vec![0; 2 * 3 * 32 * 32],
+        labels: vec![0, 1],
+    };
+    let mut s = Session::builder()
+        .backbone(Arc::clone(&bb))
+        .method(Priot::new())
+        .epochs(1)
+        .build()
+        .unwrap();
+    assert!(s.train(&bad, &good).is_err(), "train: bad train set");
+    assert!(s.train(&good, &bad).is_err(), "train: bad test set");
+    assert!(s.train_epoch(&bad).is_err());
+    assert!(s.evaluate(&bad).is_err());
+    assert!(s.evaluate_batch(&bad, 8).is_err());
+    assert!(s.predict_batch(&bad, 0).is_err());
+
+    // Bad labels are rejected too (they would index out of the logit
+    // range).
+    let bad_labels = Dataset {
+        n: 2,
+        c: 1,
+        h: 28,
+        w: 28,
+        images: vec![0; 2 * 28 * 28],
+        labels: vec![10, 0],
+    };
+    assert!(s.evaluate(&bad_labels).is_err());
+
+    // The fleet path surfaces the same error instead of panicking a
+    // worker thread.
+    let fleet = Fleet::builder(bb)
+        .epochs(1)
+        .device("dev-bad", 1, Box::new(Priot::new()), &bad, &good);
+    assert!(fleet.run().is_err(), "fleet run reports the bad device");
+}
+
+#[test]
+fn fleet_reports_executed_steps_not_planned() {
+    // An empty train set executes zero steps; the report must say so
+    // rather than claiming `epochs × capped(n)` planned work.
+    let bb = synthetic_backbone(22);
+    let empty = Dataset {
+        n: 0,
+        c: 1,
+        h: 28,
+        w: 28,
+        images: Vec::new(),
+        labels: Vec::new(),
+    };
+    let test = synthetic_dataset(23, 16);
+    let train = synthetic_dataset(24, 12);
+    let report = Fleet::builder(bb)
+        .epochs(3)
+        .limit(100) // beyond n: executed = n per epoch, not the cap
+        .threads(2)
+        .device("dev-empty", 1, Box::new(Priot::new()), &empty, &test)
+        .device("dev-small", 2, Box::new(Priot::new()), &train, &test)
+        .run()
+        .unwrap();
+    assert_eq!(report.devices[0].steps, 0, "empty dataset trains 0 steps");
+    assert_eq!(report.devices[1].steps, 3 * 12, "capped at n, not limit");
+    assert_eq!(report.total_steps(), 36);
 }
