@@ -1,9 +1,15 @@
-//! Fleet server: drive the long-lived `priot::serve` front-end from code —
-//! register devices, stream train/predict/evaluate requests, drift a
-//! device's local distribution mid-stream, and read the responses back.
+//! Fleet server: drive the long-lived `priot::serve` front-end through
+//! its wire protocol — connect a `FleetClient`, register devices, stream
+//! train/predict/evaluate requests, drift a device's local distribution
+//! mid-stream, and read the responses back.  Shows both client styles:
+//! synchronous calls (strict per-device order) and pipelined `submit`,
+//! where the server's priority scheduling answers a prediction *between*
+//! training epochs instead of after them.
 //!
 //! Self-contained: runs on a synthetic backbone + synthetic datasets, so
-//! no `make artifacts` is needed.
+//! no `make artifacts` is needed.  The same `FleetClient` API talks TCP:
+//! swap `server.local_client()` for
+//! `FleetClient::connect(server.listen("127.0.0.1:0")?)?`.
 //!
 //! ```bash
 //! cargo run --release --example fleet_server
@@ -14,10 +20,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use priot::config::Selection;
-use priot::methods::{MethodPlugin, Priot, PriotS};
+use priot::proto::{MethodSpec, Request, Response};
 use priot::ptest::gen::{self, synthetic_backbone};
 use priot::serial::Dataset;
-use priot::session::{FleetServer, Request, Response};
+use priot::session::FleetServer;
 
 /// A synthetic "local distribution": random images, cyclic labels.  Each
 /// seed stands in for one device's (possibly drifted) data.
@@ -29,45 +35,58 @@ fn main() -> Result<()> {
     // One shared read-only backbone for the whole fleet (Arc — no copies).
     let backbone = synthetic_backbone(1);
     let server = FleetServer::builder(backbone).threads(0).build();
+    let mut client = server.local_client();
 
-    // Register three devices with different methods and local data.
-    let roster: Vec<(&str, Box<dyn MethodPlugin>)> = vec![
-        ("dev-00", Box::new(Priot::new())),
-        ("dev-01", Box::new(PriotS::new(0.1, Selection::WeightBased))),
-        ("dev-02", Box::new(PriotS::new(0.2, Selection::Random))),
+    // Register three devices with different methods and local data, then
+    // adapt each a few epochs (synchronous calls: each returns when its
+    // response arrives, so per-device order is exactly submission order).
+    let roster: Vec<(&str, MethodSpec)> = vec![
+        ("dev-00", MethodSpec::priot()),
+        ("dev-01", MethodSpec::priot_s(0.1, Selection::WeightBased)),
+        ("dev-02", MethodSpec::priot_s(0.2, Selection::Random)),
     ];
-    for (i, (name, plugin)) in roster.into_iter().enumerate() {
-        server.submit(Request::Register {
-            device: name.into(),
-            seed: (i + 1) as u32,
-            plugin,
-            train: synthetic_dataset(10 + i as u64, 96),
-            test: synthetic_dataset(20 + i as u64, 48),
-        })?;
-        // Each device adapts a few epochs; the pool interleaves devices at
-        // epoch granularity, so no device monopolizes a worker.
-        server.submit(Request::Train { device: name.into(), epochs: 3 })?;
-        server.submit(Request::Evaluate { device: name.into() })?;
+    for (i, (name, method)) in roster.into_iter().enumerate() {
+        client.register(
+            name,
+            (i + 1) as u32,
+            method,
+            synthetic_dataset(10 + i as u64, 96),
+            synthetic_dataset(20 + i as u64, 48),
+        )?;
+        client.train(name, 3)?;
+        client.evaluate(name)?;
     }
 
     // Mid-stream drift: dev-00's distribution changes; its next requests
     // run against the new data, strictly after its queued work.
-    server.submit(Request::Drift {
-        device: "dev-00".into(),
-        train: synthetic_dataset(30, 96),
-        test: synthetic_dataset(31, 48),
-    })?;
-    server.submit(Request::Train { device: "dev-00".into(), epochs: 1 })?;
-    server.submit(Request::Evaluate { device: "dev-00".into() })?;
+    client.drift(
+        "dev-00",
+        synthetic_dataset(30, 96),
+        synthetic_dataset(31, 48),
+    )?;
 
-    // A raw-image inference request, as an edge client would send it.
+    // Pipelined requests show the priority lanes: submit a long Train,
+    // then a raw-image Predict for the same device.  Predict outranks
+    // train, so the class comes back between epochs — watch the response
+    // order below.
     let probe = synthetic_dataset(31, 1);
-    server.submit(Request::Predict {
+    let train_id = client.submit(Request::Train {
+        device: "dev-00".into(),
+        epochs: 4,
+    })?;
+    let predict_id = client.submit(Request::Predict {
         device: "dev-00".into(),
         image: probe.image(0).to_vec(),
     })?;
+    let (first, _) = client.next_response()?.expect("server is live");
+    assert_eq!(first, predict_id,
+               "interactive predict answered before the train finishes");
+    client.wait(train_id)?;
+    client.evaluate("dev-00")?;
 
-    // Graceful shutdown: drain every queued op, collect all responses.
+    // Graceful shutdown: close the connection, then drain every queued
+    // op and collect the server-side report.
+    drop(client);
     let report = server.join()?;
     for r in &report.responses {
         match r {

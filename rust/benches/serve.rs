@@ -1,6 +1,9 @@
 //! Bench: the serve subsystem — (1) batched vs single-sample evaluation
 //! speedup on the tiny CNN (the `gemm_nn` n>1 path at inference), and
-//! (2) end-to-end requests/sec through a long-lived [`FleetServer`].
+//! (2) end-to-end requests/sec through a long-lived `FleetServer`, over
+//! both transports: the in-process `ChannelTransport` and a TCP loopback
+//! connection (same codec, same dispatch path — the delta is pure
+//! transport cost, including dataset payloads on the wire).
 //!
 //! Runs on any checkout: uses the real artifacts when present, otherwise a
 //! synthetic backbone + datasets with identical shapes.
@@ -13,12 +16,61 @@ use std::time::Instant;
 
 use priot::config::Selection;
 use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::proto::{FleetClient, MethodSpec, Request};
 use priot::ptest::gen::{self, synthetic_backbone};
 use priot::serial::Dataset;
-use priot::session::{Backbone, FleetServer, Request, Session};
+use priot::session::{Backbone, FleetServer, Session};
 
 fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
     Arc::new(gen::synthetic_dataset(seed, n))
+}
+
+/// Pipelined request stream: register every device, then 2 train epochs,
+/// a raw-image predict, and an evaluate each — then read all 4·devices
+/// responses back, so the measured wall time covers full round-trips and
+/// the connection closes cleanly with nothing in flight.
+fn stream_requests(client: &mut FleetClient, devices: usize,
+                   train: &Arc<Dataset>, test: &Arc<Dataset>) {
+    for i in 0..devices {
+        let method = if i % 2 == 0 {
+            MethodSpec::priot()
+        } else {
+            MethodSpec::priot_s(0.1, Selection::WeightBased)
+        };
+        let device = format!("dev-{i:02}");
+        client
+            .submit(Request::Register {
+                device: device.clone(),
+                seed: (i + 1) as u32,
+                method,
+                train: Arc::clone(train),
+                test: Arc::clone(test),
+            })
+            .expect("register");
+        client
+            .submit(Request::Train { device: device.clone(), epochs: 2 })
+            .expect("train");
+        client
+            .submit(Request::Predict {
+                device: device.clone(),
+                image: test.image(i % test.n).to_vec(),
+            })
+            .expect("predict");
+        client.submit(Request::Evaluate { device }).expect("evaluate");
+    }
+    for _ in 0..4 * devices {
+        client
+            .next_response()
+            .expect("read response")
+            .expect("server closed early");
+    }
+}
+
+fn build_server(backbone: &Arc<Backbone>) -> FleetServer {
+    FleetServer::builder(Arc::clone(backbone))
+        .limit(128)
+        .eval_batch(16)
+        .build()
 }
 
 fn main() {
@@ -83,41 +135,30 @@ fn main() {
     }
     println!("\n(identical accuracy per row set = bit-identical batched eval)");
 
-    // -- Part 2: serve throughput -----------------------------------------
+    // -- Part 2: serve throughput, in-process transport -------------------
     println!("\n## serve throughput — {} devices, mixed request stream\n",
              devices);
-    let server = FleetServer::builder(Arc::clone(&backbone))
-        .limit(128)
-        .eval_batch(16)
-        .build();
-    for i in 0..devices {
-        let plugin: Box<dyn MethodPlugin> = if i % 2 == 0 {
-            Box::new(Priot::new())
-        } else {
-            Box::new(PriotS::new(0.1, Selection::WeightBased))
-        };
-        let device = format!("dev-{i:02}");
-        server
-            .submit(Request::Register {
-                device: device.clone(),
-                seed: (i + 1) as u32,
-                plugin,
-                train: Arc::clone(&train),
-                test: Arc::clone(&test),
-            })
-            .expect("register");
-        server
-            .submit(Request::Train { device: device.clone(), epochs: 2 })
-            .expect("train");
-        server
-            .submit(Request::Predict {
-                device: device.clone(),
-                image: test.image(i % test.n).to_vec(),
-            })
-            .expect("predict");
-        server.submit(Request::Evaluate { device }).expect("evaluate");
-    }
-    let report = server.join().expect("serve join");
-    println!("{}", report.summary());
-    assert_eq!(report.errors(), 0, "bench stream must be error-free");
+    let server = build_server(&backbone);
+    let mut client = server.local_client();
+    stream_requests(&mut client, devices, &train, &test);
+    drop(client);
+    let chan_report = server.join().expect("serve join");
+    println!("channel: {}", chan_report.summary());
+    assert_eq!(chan_report.errors(), 0, "bench stream must be error-free");
+
+    // -- Part 3: same stream over a TCP loopback connection ---------------
+    let mut server = build_server(&backbone);
+    let addr = server.listen("127.0.0.1:0").expect("bind loopback");
+    let mut client = FleetClient::connect(addr).expect("connect loopback");
+    stream_requests(&mut client, devices, &train, &test);
+    drop(client);
+    let tcp_report = server.join().expect("serve join (tcp)");
+    println!("tcp:     {}", tcp_report.summary());
+    assert_eq!(tcp_report.errors(), 0, "tcp stream must be error-free");
+    println!(
+        "\n(transport cost: {:.1} req/s in-process vs {:.1} req/s over \
+         loopback TCP)",
+        chan_report.requests_per_sec(),
+        tcp_report.requests_per_sec()
+    );
 }

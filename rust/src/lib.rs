@@ -41,12 +41,44 @@
 //!   scheduled at **epoch granularity** across the worker pool: the
 //!   Table I seed sweep, the `priot fleet` multi-device simulation, and
 //!   the `fleet` throughput bench all build on it.
-//! * [`serve`] (= [`session::serve`]) — the long-lived, request-driven
-//!   fleet service: a stream of `(device, op)` [`serve::Request`]s over an
-//!   mpsc channel into a registry of per-device sessions.  Driven by the
-//!   `priot serve` CLI subcommand from a scripted request trace, and
-//!   benchmarked by the `serve` bench (requests/sec + batched-eval
-//!   speedup).
+//! * [`serve`] (= [`session::serve`]) — the long-lived fleet service: a
+//!   registry of per-device sessions behind the [`proto`] wire boundary.
+//!   Requests are scheduled per device by [`proto::Priority`]
+//!   (predict > evaluate > train, preemptible at epoch boundaries) under
+//!   a bounded per-device inflight window.  Driven by the `priot serve`
+//!   CLI (in-process trace replay or `--listen` TCP) and `priot client`
+//!   (trace replay against a remote server); benchmarked by the `serve`
+//!   bench (requests/sec over both transports + batched-eval speedup).
+//!
+//! ## The wire protocol
+//!
+//! [`proto`] is the versioned host↔fleet protocol: plain-data
+//! [`proto::Request`]/[`proto::Response`] messages, a length-delimited
+//! binary codec with `serial`-style checked-length decoding, a
+//! [`proto::Transport`] trait ([`proto::ChannelTransport`] in-process,
+//! [`proto::TcpTransport`] over sockets — same bytes, bit-identical
+//! responses), and the typed [`proto::FleetClient`]
+//! (`register`/`train`/`predict`/`evaluate`/`drift`, sync + pipelined) —
+//! the only public way to talk to a
+//! [`session::FleetServer`]:
+//!
+//! ```no_run
+//! use priot::proto::{FleetClient, MethodSpec};
+//! use priot::session::{Backbone, FleetServer};
+//!
+//! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
+//! let mut server = FleetServer::builder(backbone).build();
+//! let addr = server.listen("127.0.0.1:0")?;
+//! let mut client = FleetClient::connect(addr)?;
+//! # let (train, test): (std::sync::Arc<priot::serial::Dataset>,
+//! #                     std::sync::Arc<priot::serial::Dataset>) = todo!();
+//! client.register("dev-00", 1, MethodSpec::priot(), train, test)?;
+//! client.train("dev-00", 2)?;
+//! client.evaluate("dev-00")?;
+//! drop(client);
+//! println!("{}", server.join()?.summary());
+//! # anyhow::Ok(())
+//! ```
 //!
 //! ## Methods are plugins
 //!
@@ -75,6 +107,7 @@ pub mod methods;
 pub mod metrics;
 pub mod pico;
 pub mod prng;
+pub mod proto;
 pub mod ptest;
 pub mod quant;
 pub mod report;

@@ -5,7 +5,8 @@
 //! priot eval    --model tinycnn --dataset digits --angle 30
 //! priot compare [--epochs 8] [--limit 384]        all methods, one seed
 //! priot fleet   [--devices 8] [--threads 0]       multi-device simulation
-//! priot serve   [--trace FILE] [--threads 0]      long-lived fleet service
+//! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
+//! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
 //! priot fig2    [--epochs 12]                     Fig. 2 CSV
@@ -94,6 +95,7 @@ fn run() -> Result<()> {
         "compare" => cmd_compare(&args),
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "table1" => {
             let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
             write_or_print(&args, "table1.md", &md)
@@ -286,33 +288,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The long-lived fleet service driven from a scripted request trace: a
-/// stream of `(device, op)` lines becomes `Request` messages into a
-/// [`FleetServer`], which schedules them at epoch granularity across its
-/// worker pool.  Without `--trace FILE` the built-in demo trace runs.
-fn cmd_serve(args: &Args) -> Result<()> {
-    use priot::session::serve::{self, Request, TraceCmd};
-
-    let artifacts = artifacts_dir(args);
-    let model = args.option("model").unwrap_or("tinycnn");
-    let dataset = args.option("dataset").unwrap_or("digits");
-    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
-    let limit: usize = args.option("limit").unwrap_or("256").parse()?;
-    let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
-    let text = match args.option("trace") {
-        Some(path) => std::fs::read_to_string(path)?,
-        None => {
-            eprintln!("(no --trace FILE given — running the built-in demo \
-                       trace)");
-            serve::DEMO_TRACE.to_string()
-        }
-    };
-    let cmds = serve::parse_trace(&text)?;
-
-    let backbone = Backbone::load(&artifacts, model)?;
-    // Angle-keyed dataset cache: traces reference data symbolically.
+/// Angle-keyed dataset loader for trace replay: traces reference data
+/// symbolically (`angle=60`), the CLI resolves each angle to its
+/// artifact files once and caches the `Arc`s.
+fn trace_pair_loader<'a>(
+    artifacts: PathBuf,
+    dataset: &'a str,
+) -> impl FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)> + 'a {
     let mut pairs: HashMap<u32, (Arc<Dataset>, Arc<Dataset>)> = HashMap::new();
-    let mut pair_for = |angle: u32| -> Result<(Arc<Dataset>, Arc<Dataset>)> {
+    move |angle: u32| {
         if let Some(p) = pairs.get(&angle) {
             return Ok(p.clone());
         }
@@ -322,62 +306,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &artifacts, &format!("{dataset}_test_a{angle}"))?);
         pairs.insert(angle, (Arc::clone(&train), Arc::clone(&test)));
         Ok((train, test))
-    };
+    }
+}
 
-    let server = priot::session::FleetServer::builder(backbone)
+fn trace_text(args: &Args) -> Result<String> {
+    Ok(match args.option("trace") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            eprintln!("(no --trace FILE given — running the built-in demo \
+                       trace)");
+            priot::serve::DEMO_TRACE.to_string()
+        }
+    })
+}
+
+/// The long-lived fleet service.  Two modes:
+///
+/// * `priot serve --listen ADDR` — accept `FleetClient` connections over
+///   TCP and serve until interrupted (`priot client` replays traces
+///   against it).
+/// * `priot serve [--trace FILE]` — replay a scripted request trace over
+///   an in-process client (the built-in demo trace by default).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use priot::session::serve;
+
+    let artifacts = artifacts_dir(args);
+    let model = args.option("model").unwrap_or("tinycnn");
+    let dataset = args.option("dataset").unwrap_or("digits");
+    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("256").parse()?;
+    let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
+    let window: usize = args.option("window").unwrap_or("64").parse()?;
+
+    let backbone = Backbone::load(&artifacts, model)?;
+    let mut server = priot::session::FleetServer::builder(backbone)
         .threads(threads)
         .limit(limit)
         .eval_batch(eval_batch)
+        .window(window)
+        // A listener runs until interrupted and never join()s, so don't
+        // accumulate a server-side copy of every response.
+        .record(args.option("listen").is_none())
         .build();
-    // Track each device's current test set so `predict sample=N` can be
-    // resolved to raw image bytes client-side, like a real caller would.
-    let mut device_test: HashMap<String, Arc<Dataset>> = HashMap::new();
-    for cmd in cmds {
-        match cmd {
-            TraceCmd::Register { device, seed, method, angle } => {
-                let (train, test) = pair_for(angle)?;
-                device_test.insert(device.clone(), Arc::clone(&test));
-                server.submit(Request::Register {
-                    device,
-                    seed,
-                    plugin: method.plugin(),
-                    train,
-                    test,
-                })?;
-            }
-            TraceCmd::Train { device, epochs } => {
-                server.submit(Request::Train { device, epochs })?;
-            }
-            TraceCmd::Predict { device, sample } => {
-                let test = device_test
-                    .get(&device)
-                    .ok_or_else(|| anyhow::anyhow!(
-                        "trace predicts on unregistered device {device}"))?;
-                if test.n == 0 {
-                    bail!("trace predicts on device {device}, whose test \
-                           set is empty");
-                }
-                let image = test.image(sample % test.n).to_vec();
-                server.submit(Request::Predict { device, image })?;
-            }
-            TraceCmd::Evaluate { device } => {
-                server.submit(Request::Evaluate { device })?;
-            }
-            TraceCmd::Drift { device, angle } => {
-                let (train, test) = pair_for(angle)?;
-                device_test.insert(device.clone(), Arc::clone(&test));
-                server.submit(Request::Drift { device, train, test })?;
-            }
+
+    if let Some(addr) = args.option("listen") {
+        if args.option("trace").is_some() {
+            bail!("--listen and --trace are mutually exclusive: a \
+                   listener serves remote clients (replay the trace with \
+                   `priot client --addr ... --trace ...` instead)");
+        }
+        let bound = server.listen(addr)?;
+        eprintln!(
+            "serving {model} fleet on {bound} — replay a trace with \
+             `priot client --addr {bound}` (ctrl-c to stop)"
+        );
+        loop {
+            std::thread::park();
         }
     }
+
+    let cmds = serve::parse_trace(&trace_text(args)?)?;
+    let mut pair_for = trace_pair_loader(artifacts, dataset);
+    let mut client = server.local_client();
+    let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
+    drop(client); // close the connection so join() can drain
     let report = server.join()?;
-    for r in &report.responses {
+    for r in &responses {
         println!("{r:?}");
     }
     println!("\n{}", report.summary());
     if report.errors() > 0 {
         anyhow::bail!("{} of {} requests errored", report.errors(),
                       report.requests);
+    }
+    Ok(())
+}
+
+/// Replay a scripted request trace against a *remote* fleet server over
+/// TCP: `priot client --addr HOST:PORT [--trace FILE]`.  Datasets are
+/// resolved client-side from the local artifacts directory and travel
+/// over the wire with the `Register`/`Drift` requests.
+fn cmd_client(args: &Args) -> Result<()> {
+    use priot::proto::FleetClient;
+    use priot::session::serve;
+
+    let addr = args.option("addr").ok_or_else(|| {
+        anyhow::anyhow!("client needs --addr HOST:PORT (see `priot serve \
+                         --listen`)")
+    })?;
+    let artifacts = artifacts_dir(args);
+    let dataset = args.option("dataset").unwrap_or("digits");
+    let cmds = serve::parse_trace(&trace_text(args)?)?;
+    let mut pair_for = trace_pair_loader(artifacts, dataset);
+    let mut client = FleetClient::connect(addr)?;
+    let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
+    let errors = responses.iter().filter(|r| r.is_error()).count();
+    for r in &responses {
+        println!("{r:?}");
+    }
+    println!("\n{} responses from {addr}, {errors} errors",
+             responses.len());
+    if errors > 0 {
+        anyhow::bail!("{errors} of {} requests errored", responses.len());
     }
     Ok(())
 }
@@ -459,7 +489,8 @@ fn print_help() {
          \x20 eval         evaluate the backbone on a dataset\n\
          \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
          \x20 fleet        simulate N devices adapting concurrently\n\
-         \x20 serve        long-lived fleet service driven by a request trace\n\
+         \x20 serve        long-lived fleet service (--trace replay or --listen ADDR)\n\
+         \x20 client       replay a request trace against a remote server over TCP\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
          \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\

@@ -1,0 +1,171 @@
+//! The typed fleet client — the public front door to a
+//! [`FleetServer`](crate::session::FleetServer).
+
+use std::collections::VecDeque;
+use std::net::ToSocketAddrs;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serial::Dataset;
+
+use super::codec::{decode_response, encode_request};
+use super::transport::{TcpTransport, Transport};
+use super::{MethodSpec, Priority, Request, Response};
+
+/// A connection to a fleet server over any [`Transport`].
+///
+/// Two usage styles, freely mixable on one connection:
+///
+/// * **Synchronous** — [`register`](Self::register) /
+///   [`train`](Self::train) / [`predict`](Self::predict) /
+///   [`evaluate`](Self::evaluate) / [`drift`](Self::drift) each send one
+///   request and block until *its* response arrives.  Because at most one
+///   request is then in flight, responses arrive in strict submission
+///   order — the mode trace replays use for deterministic,
+///   standalone-bit-identical results.
+/// * **Pipelined** — [`submit`](Self::submit) /
+///   [`submit_with`](Self::submit_with) return a request id immediately;
+///   collect responses with [`wait`](Self::wait) (one id, blocking),
+///   [`next_response`](Self::next_response) (stream order, blocking), or
+///   [`poll`](Self::poll) (non-blocking).  Pipelined requests are where
+///   the server's priority scheduling shows: a `Predict` submitted behind
+///   a long `Train` on the same device is answered between training
+///   epochs, not after them.
+///
+/// Dropping the client closes the connection; a server waiting in
+/// `join()` sees the stream end and shuts down gracefully.
+pub struct FleetClient {
+    transport: Box<dyn Transport>,
+    next_id: u64,
+    /// Responses received while waiting for a different request id.
+    inbox: VecDeque<(u64, Response)>,
+}
+
+impl FleetClient {
+    /// Wrap an already-connected transport.
+    pub fn over(transport: impl Transport + 'static) -> Self {
+        Self {
+            transport: Box::new(transport),
+            next_id: 1,
+            inbox: VecDeque::new(),
+        }
+    }
+
+    /// Connect to a listening server over TCP
+    /// (see [`FleetServer::listen`](crate::session::FleetServer::listen)).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(Self::over(TcpTransport::connect(addr)?))
+    }
+
+    /// Send one request at its default priority; returns its request id.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        let priority = req.priority();
+        self.submit_with(req, priority)
+    }
+
+    /// Send one request at an explicit [`Priority`]; returns its id.
+    pub fn submit_with(&mut self, req: Request, priority: Priority)
+                       -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = encode_request(id, priority, &req);
+        self.transport
+            .send(frame)
+            .with_context(|| format!("sending request {id}"))?;
+        Ok(id)
+    }
+
+    /// Block until the response for request `id` arrives.  Responses for
+    /// other in-flight requests are buffered for [`Self::poll`] /
+    /// [`Self::next_response`].
+    pub fn wait(&mut self, id: u64) -> Result<Response> {
+        if let Some(i) = self.inbox.iter().position(|(rid, _)| *rid == id) {
+            return Ok(self.inbox.remove(i).expect("indexed entry").1);
+        }
+        loop {
+            let frame = match self.transport.recv()? {
+                Some(f) => f,
+                None => bail!(
+                    "connection closed while waiting for request {id}"
+                ),
+            };
+            let (rid, resp) = decode_response(&frame)?;
+            if rid == id {
+                return Ok(resp);
+            }
+            self.inbox.push_back((rid, resp));
+        }
+    }
+
+    /// Block for the next response in stream order (buffered first).
+    /// `Ok(None)` = the connection closed with nothing pending.
+    pub fn next_response(&mut self) -> Result<Option<(u64, Response)>> {
+        if let Some(entry) = self.inbox.pop_front() {
+            return Ok(Some(entry));
+        }
+        match self.transport.recv()? {
+            Some(frame) => Ok(Some(decode_response(&frame)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Every response available right now, without blocking: buffered
+    /// ones first, then whatever complete frames the transport has.
+    ///
+    /// Drains the transport *into the buffer* before handing anything
+    /// out, so a transport or decode error mid-poll loses nothing:
+    /// already-received responses stay buffered for the next call (or
+    /// for [`Self::wait`]).
+    pub fn poll(&mut self) -> Result<Vec<(u64, Response)>> {
+        while let Some(frame) = self.transport.try_recv()? {
+            let decoded = decode_response(&frame)?;
+            self.inbox.push_back(decoded);
+        }
+        Ok(self.inbox.drain(..).collect())
+    }
+
+    // -- synchronous calls --------------------------------------------------
+
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let id = self.submit(req)?;
+        self.wait(id)
+    }
+
+    /// Register a device (synchronous).  Server-side failures come back
+    /// as a [`Response::Error`] value, not an `Err` — transport and
+    /// protocol failures are the `Err` path.
+    pub fn register(&mut self, device: &str, seed: u32, method: MethodSpec,
+                    train: Arc<Dataset>, test: Arc<Dataset>)
+                    -> Result<Response> {
+        self.call(Request::Register {
+            device: device.to_string(),
+            seed,
+            method,
+            train,
+            test,
+        })
+    }
+
+    /// Train `epochs` epochs on the device's local data (synchronous).
+    pub fn train(&mut self, device: &str, epochs: usize) -> Result<Response> {
+        self.call(Request::Train { device: device.to_string(), epochs })
+    }
+
+    /// Classify one raw u8 image (synchronous).
+    pub fn predict(&mut self, device: &str, image: Vec<u8>)
+                   -> Result<Response> {
+        self.call(Request::Predict { device: device.to_string(), image })
+    }
+
+    /// Evaluate top-1 accuracy over the device's test set (synchronous).
+    pub fn evaluate(&mut self, device: &str) -> Result<Response> {
+        self.call(Request::Evaluate { device: device.to_string() })
+    }
+
+    /// Swap the device's local datasets (synchronous).
+    pub fn drift(&mut self, device: &str, train: Arc<Dataset>,
+                 test: Arc<Dataset>) -> Result<Response> {
+        self.call(Request::Drift { device: device.to_string(), train, test })
+    }
+}

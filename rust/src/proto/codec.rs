@@ -1,0 +1,418 @@
+//! The binary codec for [`Request`]/[`Response`] frames.
+//!
+//! A *frame* is one encoded message; transports delimit frames (mpsc
+//! messages are frames, TCP prefixes each frame with a u32 length).  All
+//! integers little-endian; floats travel as their exact IEEE-754 bits.
+//!
+//! Frame layout:
+//!
+//! ```text
+//! u8  protocol version (= PROTO_VERSION)
+//! u8  frame type       (0 = request, 1 = response)
+//! u64 request id       (assigned by the client; echoed in the response)
+//! -- request:  u8 priority, u8 variant tag, fields
+//! -- response: u8 variant tag, fields
+//! ```
+//!
+//! Strings are `u32 len + utf8 bytes`; byte blobs are `u32 len + raw`;
+//! datasets are `u32 n,c,h,w` followed by the implied `n·c·h·w` image
+//! bytes and `n` label bytes — decoded with the same overflow-checked
+//! size / exact-payload discipline as [`crate::serial`], so truncated,
+//! trailing-byte, and bad-version frames come back as contextful errors.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Method, Selection};
+use crate::serial::Dataset;
+
+use super::{MethodSpec, Priority, Request, Response};
+
+/// Protocol revision spoken by this build.  Bump on any layout change;
+/// decoders reject other versions with a clean error.
+pub const PROTO_VERSION: u8 = 1;
+
+/// The protocol-wide frame budget, enforced by **every** transport on
+/// send and receive (so a too-large request fails identically in-process
+/// and over a socket), and doubling as the sanity bound on length
+/// prefixes read off an untrusted socket — a corrupt prefix must not
+/// allocate garbage.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+const FRAME_REQUEST: u8 = 0;
+const FRAME_RESPONSE: u8 = 1;
+
+const REQ_REGISTER: u8 = 0;
+const REQ_TRAIN: u8 = 1;
+const REQ_PREDICT: u8 = 2;
+const REQ_EVALUATE: u8 = 3;
+const REQ_DRIFT: u8 = 4;
+
+const RESP_REGISTERED: u8 = 0;
+const RESP_TRAIN_DONE: u8 = 1;
+const RESP_PREDICTION: u8 = 2;
+const RESP_EVALUATION: u8 = 3;
+const RESP_DRIFTED: u8 = 4;
+const RESP_ERROR: u8 = 5;
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+fn put_dataset(buf: &mut Vec<u8>, ds: &Dataset) {
+    put_u32(buf, ds.n as u32);
+    put_u32(buf, ds.c as u32);
+    put_u32(buf, ds.h as u32);
+    put_u32(buf, ds.w as u32);
+    buf.extend_from_slice(&ds.images);
+    buf.extend_from_slice(&ds.labels);
+}
+
+fn put_method(buf: &mut Vec<u8>, m: &MethodSpec) {
+    buf.push(match m.method {
+        Method::StaticNiti => 0,
+        Method::DynamicNiti => 1,
+        Method::Priot => 2,
+        Method::PriotS => 3,
+    });
+    put_f64(buf, m.frac_scored);
+    buf.push(match m.selection {
+        Selection::Random => 0,
+        Selection::WeightBased => 1,
+    });
+    match m.theta {
+        None => buf.push(0),
+        Some(t) => {
+            buf.push(1);
+            put_u32(buf, t as u32);
+        }
+    }
+}
+
+/// Encode one request frame (version, type, id, priority, body).
+pub fn encode_request(id: u64, priority: Priority, req: &Request) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(PROTO_VERSION);
+    buf.push(FRAME_REQUEST);
+    put_u64(&mut buf, id);
+    buf.push(priority.to_u8());
+    match req {
+        Request::Register { device, seed, method, train, test } => {
+            buf.push(REQ_REGISTER);
+            put_str(&mut buf, device);
+            put_u32(&mut buf, *seed);
+            put_method(&mut buf, method);
+            put_dataset(&mut buf, train);
+            put_dataset(&mut buf, test);
+        }
+        Request::Train { device, epochs } => {
+            buf.push(REQ_TRAIN);
+            put_str(&mut buf, device);
+            put_u64(&mut buf, *epochs as u64);
+        }
+        Request::Predict { device, image } => {
+            buf.push(REQ_PREDICT);
+            put_str(&mut buf, device);
+            put_bytes(&mut buf, image);
+        }
+        Request::Evaluate { device } => {
+            buf.push(REQ_EVALUATE);
+            put_str(&mut buf, device);
+        }
+        Request::Drift { device, train, test } => {
+            buf.push(REQ_DRIFT);
+            put_str(&mut buf, device);
+            put_dataset(&mut buf, train);
+            put_dataset(&mut buf, test);
+        }
+    }
+    buf
+}
+
+/// Encode one response frame (version, type, id, body).
+pub fn encode_response(id: u64, resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(PROTO_VERSION);
+    buf.push(FRAME_RESPONSE);
+    put_u64(&mut buf, id);
+    match resp {
+        Response::Registered { device } => {
+            buf.push(RESP_REGISTERED);
+            put_str(&mut buf, device);
+        }
+        Response::TrainDone { device, epochs, steps, train_accuracy } => {
+            buf.push(RESP_TRAIN_DONE);
+            put_str(&mut buf, device);
+            put_u64(&mut buf, *epochs as u64);
+            put_u64(&mut buf, *steps);
+            put_f64(&mut buf, *train_accuracy);
+        }
+        Response::Prediction { device, class } => {
+            buf.push(RESP_PREDICTION);
+            put_str(&mut buf, device);
+            put_u64(&mut buf, *class as u64);
+        }
+        Response::Evaluation { device, accuracy, n } => {
+            buf.push(RESP_EVALUATION);
+            put_str(&mut buf, device);
+            put_f64(&mut buf, *accuracy);
+            put_u64(&mut buf, *n as u64);
+        }
+        Response::Drifted { device } => {
+            buf.push(RESP_DRIFTED);
+            put_str(&mut buf, device);
+        }
+        Response::Error { device, message } => {
+            buf.push(RESP_ERROR);
+            put_str(&mut buf, device);
+            put_str(&mut buf, message);
+        }
+    }
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// Checked cursor over one frame: every read names what it is reading, so
+/// a truncated frame yields "frame truncated reading X", never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "frame truncated reading {what} (need {n} bytes at offset {}, \
+                 frame is {} bytes)",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .with_context(|| format!("{what} is not valid UTF-8"))
+    }
+
+    fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let len = self.u32(what)? as usize;
+        Ok(self.take(len, what)?.to_vec())
+    }
+
+    fn dataset(&mut self, what: &str) -> Result<Arc<Dataset>> {
+        let n = self.u32(what)? as usize;
+        let c = self.u32(what)? as usize;
+        let h = self.u32(what)? as usize;
+        let w = self.u32(what)? as usize;
+        // Same discipline as `serial::load_dataset`: the dims are
+        // untrusted, so the product is overflow-checked and bounded
+        // before it sizes any read.
+        let total = [n, c, h, w]
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&t| t <= 1 << 31)
+            .with_context(|| {
+                format!("{what}: implausible dims n={n} c={c} h={h} w={w}")
+            })?;
+        let images = self.take(total, what)?.to_vec();
+        let labels = self.take(n, what)?.to_vec();
+        Ok(Arc::new(Dataset { n, c, h, w, images, labels }))
+    }
+
+    fn method(&mut self) -> Result<MethodSpec> {
+        let method = match self.u8("method tag")? {
+            0 => Method::StaticNiti,
+            1 => Method::DynamicNiti,
+            2 => Method::Priot,
+            3 => Method::PriotS,
+            other => bail!("unknown method tag {other}"),
+        };
+        let frac_scored = self.f64("method frac_scored")?;
+        let selection = match self.u8("method selection")? {
+            0 => Selection::Random,
+            1 => Selection::WeightBased,
+            other => bail!("unknown selection tag {other}"),
+        };
+        let theta = match self.u8("method theta flag")? {
+            0 => None,
+            1 => Some(self.u32("method theta")? as i32),
+            other => bail!("bad theta flag {other} (want 0|1)"),
+        };
+        Ok(MethodSpec { method, frac_scored, selection, theta })
+    }
+
+    /// Error unless the whole frame was consumed (frames are fixed-layout:
+    /// trailing bytes mean a corrupt or mismatched encoder).
+    fn finish(self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+
+    /// Version + frame-type + id header shared by both frame kinds.
+    fn header(&mut self, want_type: u8, what: &str) -> Result<u64> {
+        let version = self.u8("protocol version")?;
+        if version != PROTO_VERSION {
+            bail!(
+                "unsupported protocol version {version} \
+                 (this build speaks version {PROTO_VERSION})"
+            );
+        }
+        let ty = self.u8("frame type")?;
+        if ty != want_type {
+            bail!("expected a {what} frame, got frame type {ty}");
+        }
+        self.u64("request id")
+    }
+}
+
+/// Best-effort request id of a frame that failed to decode: both frame
+/// kinds carry the id at bytes 2..10, so a server can still answer a
+/// malformed request *by id* (and a synchronous client waiting on that
+/// id gets its error instead of hanging) as long as the fixed header is
+/// intact.  Returns 0 — an id no client ever assigns — when the frame is
+/// too short to carry one.
+pub fn frame_request_id(frame: &[u8]) -> u64 {
+    match frame.get(2..10) {
+        Some(b) => u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]),
+        None => 0,
+    }
+}
+
+/// Decode one request frame into `(id, priority, request)`.
+pub fn decode_request(frame: &[u8]) -> Result<(u64, Priority, Request)> {
+    let mut r = Reader::new(frame);
+    let id = r.header(FRAME_REQUEST, "request")?;
+    let priority = {
+        let v = r.u8("priority")?;
+        Priority::from_u8(v)
+            .with_context(|| format!("unknown priority {v} (want 0|1|2)"))?
+    };
+    let tag = r.u8("request tag")?;
+    let req = match tag {
+        REQ_REGISTER => {
+            let device = r.str("register device")?;
+            let seed = r.u32("register seed")?;
+            let method = r.method()?;
+            let train = r.dataset("register train set")?;
+            let test = r.dataset("register test set")?;
+            Request::Register { device, seed, method, train, test }
+        }
+        REQ_TRAIN => Request::Train {
+            device: r.str("train device")?,
+            epochs: r.u64("train epochs")? as usize,
+        },
+        REQ_PREDICT => Request::Predict {
+            device: r.str("predict device")?,
+            image: r.bytes("predict image")?,
+        },
+        REQ_EVALUATE => Request::Evaluate { device: r.str("evaluate device")? },
+        REQ_DRIFT => {
+            let device = r.str("drift device")?;
+            let train = r.dataset("drift train set")?;
+            let test = r.dataset("drift test set")?;
+            Request::Drift { device, train, test }
+        }
+        other => bail!("unknown request tag {other}"),
+    };
+    r.finish("the request body")?;
+    Ok((id, priority, req))
+}
+
+/// Decode one response frame into `(id, response)`.
+pub fn decode_response(frame: &[u8]) -> Result<(u64, Response)> {
+    let mut r = Reader::new(frame);
+    let id = r.header(FRAME_RESPONSE, "response")?;
+    let tag = r.u8("response tag")?;
+    let resp = match tag {
+        RESP_REGISTERED => {
+            Response::Registered { device: r.str("registered device")? }
+        }
+        RESP_TRAIN_DONE => Response::TrainDone {
+            device: r.str("train-done device")?,
+            epochs: r.u64("train-done epochs")? as usize,
+            steps: r.u64("train-done steps")?,
+            train_accuracy: r.f64("train-done accuracy")?,
+        },
+        RESP_PREDICTION => Response::Prediction {
+            device: r.str("prediction device")?,
+            class: r.u64("prediction class")? as usize,
+        },
+        RESP_EVALUATION => Response::Evaluation {
+            device: r.str("evaluation device")?,
+            accuracy: r.f64("evaluation accuracy")?,
+            n: r.u64("evaluation n")? as usize,
+        },
+        RESP_DRIFTED => Response::Drifted { device: r.str("drifted device")? },
+        RESP_ERROR => Response::Error {
+            device: r.str("error device")?,
+            message: r.str("error message")?,
+        },
+        other => bail!("unknown response tag {other}"),
+    };
+    r.finish("the response body")?;
+    Ok((id, resp))
+}

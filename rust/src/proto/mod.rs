@@ -1,0 +1,245 @@
+//! `priot::proto` — the versioned wire protocol between fleet clients and
+//! a [`FleetServer`](crate::session::FleetServer).
+//!
+//! PR 2's serve front-end took requests over a bare in-process mpsc
+//! channel; real fleets of Pico-class devices talk over sockets and
+//! serial links, so the protocol now has a first-class boundary:
+//!
+//! * [`Request`] / [`Response`] — plain-data message types.  A `Register`
+//!   carries a [`MethodSpec`] (the serializable description of a training
+//!   method) and its datasets by value; everything else is scalars.
+//! * [`codec`] — the length-delimited binary codec: every frame starts
+//!   with a protocol version byte and decodes with the same
+//!   checked-length / exact-payload discipline as [`crate::serial`]
+//!   (truncated, trailing-byte, and bad-version frames are contextful
+//!   errors, never panics or garbage).
+//! * [`Transport`] — one framed, bidirectional connection.  Two
+//!   implementations: [`ChannelTransport`] (in-process, over mpsc — the
+//!   successor of the old raw-channel front door) and [`TcpTransport`]
+//!   (length-prefixed frames over a socket).  Both carry the *same*
+//!   encoded bytes, so responses are bit-identical across transports.
+//! * [`FleetClient`] — the typed client: `register` / `train` /
+//!   `predict` / `evaluate` / `drift` synchronous calls, plus
+//!   `submit`/`wait`/`poll` for pipelined use.  This is the only public
+//!   way to talk to a `FleetServer`.
+//!
+//! Every request carries a [`Priority`].  The server schedules a
+//! device's pending work highest-priority-first (predict > evaluate >
+//! train), so an interactive prediction is answered between training
+//! epochs instead of waiting behind them; see
+//! [`crate::session::serve`] for the scheduling rules.
+
+pub mod codec;
+pub mod transport;
+
+mod client;
+
+pub use client::FleetClient;
+pub use transport::{ChannelTransport, TcpTransport, Transport};
+
+use std::sync::Arc;
+
+use crate::config::{Method, Selection};
+use crate::methods::{MethodPlugin, Niti, Priot, PriotS};
+use crate::serial::Dataset;
+
+/// Scheduling class of a request.  Lower lane = served first: a device's
+/// pending work drains interactive → batch → background, FIFO within a
+/// lane.  Every request kind has a natural default
+/// ([`Request::priority`]); clients may override it (e.g. a trace replay
+/// pins everything to [`Priority::Background`] to preserve strict
+/// submission order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive: single-image predictions.
+    Interactive = 0,
+    /// Bounded batch work: dataset evaluations.
+    Batch = 1,
+    /// Long-running work: training, drift (data swaps ride with the
+    /// training stream so train → drift → train order is preserved).
+    Background = 2,
+}
+
+impl Priority {
+    /// Number of scheduling lanes.
+    pub const COUNT: usize = 3;
+
+    /// Lane index (0 = served first).
+    pub fn lane(self) -> usize {
+        self as usize
+    }
+
+    pub(crate) fn to_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Priority::Interactive),
+            1 => Some(Priority::Batch),
+            2 => Some(Priority::Background),
+            _ => None,
+        }
+    }
+}
+
+/// The serializable description of a training method — what a `Register`
+/// carries instead of a live plugin object.  The server materializes it
+/// via [`MethodSpec::plugin`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodSpec {
+    pub method: Method,
+    /// PRIOT-S scored fraction (ignored by other methods).
+    pub frac_scored: f64,
+    /// PRIOT-S edge-selection strategy (ignored by other methods).
+    pub selection: Selection,
+    /// Pruning threshold override (PRIOT / PRIOT-S).
+    pub theta: Option<i32>,
+}
+
+impl MethodSpec {
+    pub fn new(method: Method) -> Self {
+        Self {
+            method,
+            frac_scored: 0.1,
+            selection: Selection::WeightBased,
+            theta: None,
+        }
+    }
+
+    pub fn niti_static() -> Self {
+        Self::new(Method::StaticNiti)
+    }
+
+    pub fn niti_dynamic() -> Self {
+        Self::new(Method::DynamicNiti)
+    }
+
+    pub fn priot() -> Self {
+        Self::new(Method::Priot)
+    }
+
+    pub fn priot_s(frac_scored: f64, selection: Selection) -> Self {
+        Self { frac_scored, selection, ..Self::new(Method::PriotS) }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = Some(theta);
+        self
+    }
+
+    /// Materialize the described method as a live plugin.
+    pub fn plugin(&self) -> Box<dyn MethodPlugin> {
+        match self.method {
+            Method::StaticNiti => Box::new(Niti::static_scale()),
+            Method::DynamicNiti => Box::new(Niti::dynamic()),
+            Method::Priot => {
+                let mut p = Priot::new();
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+            Method::PriotS => {
+                let mut p = PriotS::new(self.frac_scored, self.selection);
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+        }
+    }
+}
+
+/// One message into the fleet service.  Datasets travel as `Arc` so
+/// *building* and cloning requests is cheap on the client side; on the
+/// wire they are serialized by value — every transport, including the
+/// in-process channel, carries the same encoded bytes by design (that
+/// uniformity is what makes responses bit-identical across transports).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Add a device: the server builds a session over its shared backbone
+    /// after validating the device's data against the backbone spec.
+    Register {
+        device: String,
+        seed: u32,
+        method: MethodSpec,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+    /// Adapt for `epochs` epochs on the device's local train set.
+    Train { device: String, epochs: usize },
+    /// Classify one raw u8 image (the on-device `p >> 1` pixel mapping is
+    /// applied server-side).
+    Predict { device: String, image: Vec<u8> },
+    /// Top-1 accuracy over the device's local test set (batched forward).
+    Evaluate { device: String },
+    /// The device's local distribution drifted: swap its datasets.  Rides
+    /// the background lane, so it takes effect after the device's
+    /// previously queued training, preserving submission order.
+    Drift {
+        device: String,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+}
+
+impl Request {
+    /// The device a request addresses.
+    pub fn device(&self) -> &str {
+        match self {
+            Request::Register { device, .. }
+            | Request::Train { device, .. }
+            | Request::Predict { device, .. }
+            | Request::Evaluate { device }
+            | Request::Drift { device, .. } => device,
+        }
+    }
+
+    /// The default scheduling class: predict > evaluate > train/drift.
+    pub fn priority(&self) -> Priority {
+        match self {
+            Request::Predict { .. } => Priority::Interactive,
+            Request::Evaluate { .. } => Priority::Batch,
+            Request::Register { .. }
+            | Request::Train { .. }
+            | Request::Drift { .. } => Priority::Background,
+        }
+    }
+}
+
+/// One message out of the fleet service.  Accuracies are carried as exact
+/// f64 bits, so a response decoded off a socket compares bit-identical to
+/// one produced in-process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Registered { device: String },
+    /// One completed [`Request::Train`]: epochs and **executed** steps.
+    TrainDone {
+        device: String,
+        epochs: usize,
+        steps: u64,
+        train_accuracy: f64,
+    },
+    Prediction { device: String, class: usize },
+    Evaluation { device: String, accuracy: f64, n: usize },
+    Drifted { device: String },
+    Error { device: String, message: String },
+}
+
+impl Response {
+    pub fn device(&self) -> &str {
+        match self {
+            Response::Registered { device }
+            | Response::TrainDone { device, .. }
+            | Response::Prediction { device, .. }
+            | Response::Evaluation { device, .. }
+            | Response::Drifted { device }
+            | Response::Error { device, .. } => device,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error { .. })
+    }
+}

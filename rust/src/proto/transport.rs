@@ -1,0 +1,240 @@
+//! Framed transports: how encoded [`codec`](super::codec) frames move
+//! between a [`FleetClient`](super::FleetClient) and a
+//! [`FleetServer`](crate::session::FleetServer).
+//!
+//! A [`Transport`] is one bidirectional connection carrying whole frames.
+//! The two implementations carry the *same* encoded bytes, so responses
+//! are bit-identical whichever one a client connects through:
+//!
+//! * [`ChannelTransport`] — in-process, frames over a pair of mpsc
+//!   channels (the successor of the old raw `mpsc::Sender<Request>`
+//!   front door; [`FleetServer::local_client`] hands one out).
+//! * [`TcpTransport`] — frames over a socket, each prefixed with a
+//!   little-endian u32 length.  The length prefix is sanity-bounded
+//!   before it sizes any allocation, mirroring `serial`'s checked-length
+//!   discipline.
+//!
+//! [`FleetServer::local_client`]: crate::session::FleetServer::local_client
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::codec::MAX_FRAME_LEN;
+
+/// One framed, bidirectional connection.  `&mut self` everywhere — a
+/// transport belongs to one thread (the server pumps its side of a
+/// connection on dedicated reader/writer threads).
+pub trait Transport: Send {
+    /// Send one encoded frame to the peer.  Takes the frame by value:
+    /// encoders produce owned buffers, and the in-process transport
+    /// forwards them without a copy.
+    fn send(&mut self, frame: Vec<u8>) -> Result<()>;
+
+    /// Blocking receive of the next frame.  `Ok(None)` = the peer closed
+    /// the connection cleanly (no partial frame pending).
+    fn recv(&mut self) -> Result<Option<Vec<u8>>>;
+
+    /// Non-blocking receive: `Ok(None)` = no complete frame available
+    /// right now (or the peer is gone — a later [`Transport::recv`]
+    /// reports that definitively).
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process transport
+// ---------------------------------------------------------------------------
+
+/// In-process transport: frames over a crossed pair of mpsc channels.
+/// mpsc messages are already delimited, so a frame is simply one message.
+pub struct ChannelTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl ChannelTransport {
+    /// A connected pair of endpoints: whatever one sends, the other
+    /// receives.
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (atx, arx) = channel();
+        let (btx, brx) = channel();
+        (
+            ChannelTransport { tx: atx, rx: brx },
+            ChannelTransport { tx: btx, rx: arx },
+        )
+    }
+
+    /// Assemble an endpoint from raw halves (the server side of a
+    /// connection pumps the two halves on different threads).
+    pub fn from_parts(tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>>) -> Self {
+        Self { tx, rx }
+    }
+
+    /// Split back into raw halves.
+    pub fn into_parts(self) -> (Sender<Vec<u8>>, Receiver<Vec<u8>>) {
+        (self.tx, self.rx)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        // The frame budget is a *protocol* limit, not a TCP artifact:
+        // every transport enforces it, so a request behaves identically
+        // in-process and over a socket.
+        if frame.len() > MAX_FRAME_LEN {
+            bail!("frame of {} bytes exceeds MAX_FRAME_LEN", frame.len());
+        }
+        self.tx
+            .send(frame)
+            .map_err(|_| anyhow!("channel transport: peer closed"))
+    }
+
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        Ok(self.rx.recv().ok())
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.rx.try_recv() {
+            Ok(frame) => Ok(Some(frame)),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                Ok(None)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------------
+
+/// TCP transport: each frame on the wire is `u32 length (LE)` + payload.
+/// Keeps an internal receive buffer so non-blocking polls can accumulate
+/// partial frames across calls.
+pub struct TcpTransport {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    /// Tracked blocking mode, so the per-frame hot path skips the
+    /// `fcntl` when the socket is already in the right mode.
+    nonblocking: bool,
+}
+
+impl TcpTransport {
+    /// Connect to a listening [`FleetServer`](crate::session::FleetServer).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .context("connecting to the fleet server")?;
+        Ok(Self::from_stream(stream))
+    }
+
+    /// Wrap an accepted / connected stream.
+    pub fn from_stream(stream: TcpStream) -> Self {
+        // Frames are request/response sized; latency beats batching.
+        let _ = stream.set_nodelay(true);
+        // Normalize to blocking so the tracked mode starts out true.
+        let _ = stream.set_nonblocking(false);
+        Self { stream, rbuf: Vec::new(), nonblocking: false }
+    }
+
+    /// Switch the socket's blocking mode, skipping the syscall when it
+    /// is already set.
+    fn set_mode(&mut self, nonblocking: bool) -> Result<()> {
+        if self.nonblocking != nonblocking {
+            self.stream
+                .set_nonblocking(nonblocking)
+                .context("switching socket blocking mode")?;
+            self.nonblocking = nonblocking;
+        }
+        Ok(())
+    }
+
+    /// Pop one complete frame off the receive buffer, if present.
+    fn extract(rbuf: &mut Vec<u8>) -> Result<Option<Vec<u8>>> {
+        if rbuf.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([rbuf[0], rbuf[1], rbuf[2], rbuf[3]]) as usize;
+        if len > MAX_FRAME_LEN {
+            bail!(
+                "peer announced a {len}-byte frame (max {MAX_FRAME_LEN}) — \
+                 corrupt length prefix?"
+            );
+        }
+        if rbuf.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = rbuf[4..4 + len].to_vec();
+        rbuf.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        if frame.len() > MAX_FRAME_LEN {
+            bail!("frame of {} bytes exceeds MAX_FRAME_LEN", frame.len());
+        }
+        self.stream
+            .write_all(&(frame.len() as u32).to_le_bytes())
+            .and_then(|()| self.stream.write_all(&frame))
+            .context("writing frame to peer")
+    }
+
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        self.set_mode(false)?;
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(frame) = Self::extract(&mut self.rbuf)? {
+                return Ok(Some(frame));
+            }
+            let n = match self.stream.read(&mut chunk) {
+                Ok(n) => n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("reading frame from peer"),
+            };
+            if n == 0 {
+                if self.rbuf.is_empty() {
+                    return Ok(None); // clean close at a frame boundary
+                }
+                bail!(
+                    "connection closed mid-frame ({} buffered bytes)",
+                    self.rbuf.len()
+                );
+            }
+            self.rbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(frame) = Self::extract(&mut self.rbuf)? {
+            return Ok(Some(frame));
+        }
+        self.set_mode(true)?;
+        let mut chunk = [0u8; 16 * 1024];
+        let result = loop {
+            match self.stream.read(&mut chunk) {
+                // 0 = peer closed; report "nothing now" and let the next
+                // blocking recv() surface the close (or the mid-frame
+                // truncation) definitively.
+                Ok(0) => break Ok(None),
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    match Self::extract(&mut self.rbuf) {
+                        Ok(Some(frame)) => break Ok(Some(frame)),
+                        Ok(None) => continue,
+                        Err(e) => break Err(e),
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break Ok(None),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e).context("reading frame from peer"),
+            }
+        };
+        // Restore blocking mode before surfacing any result, so a later
+        // recv() behaves.
+        self.set_mode(false)?;
+        result
+    }
+}

@@ -148,7 +148,7 @@ pub fn save_weights(path: &Path, tensors: &[TensorI8]) -> Result<()> {
 }
 
 /// An image-classification dataset as stored on disk (u8 pixels 0..255).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Dataset {
     pub n: usize,
     pub c: usize,

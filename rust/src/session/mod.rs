@@ -10,8 +10,10 @@
 //! * [`Fleet`] — many concurrent sessions over one shared backbone
 //!   (see [`fleet`]); work is scheduled at epoch granularity across the
 //!   worker pool.
-//! * [`FleetServer`] — the long-lived, request-driven front-end: a stream
-//!   of [`Request`] messages over an mpsc channel (see [`serve`]).
+//! * [`FleetServer`] — the long-lived, request-driven front-end: clients
+//!   connect through the [`crate::proto`] wire boundary (in-process
+//!   [`FleetServer::local_client`] or TCP via [`FleetServer::listen`])
+//!   and speak typed [`Request`]/[`Response`] frames (see [`serve`]).
 //!
 //! ```no_run
 //! use priot::session::Session;
@@ -32,7 +34,9 @@ pub mod fleet;
 pub mod serve;
 
 pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
-pub use serve::{FleetServer, Request, Response, ServeBuilder, ServeReport};
+pub use serve::{FleetServer, ServeBuilder, ServeReport};
+
+pub use crate::proto::{FleetClient, Request, Response};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;

@@ -1,162 +1,193 @@
-//! `priot::serve` — a long-lived fleet service.
+//! `priot::serve` — a long-lived fleet service behind the
+//! [`crate::proto`] wire boundary.
 //!
 //! [`Fleet`](super::Fleet) runs a *closed* roster of devices to
-//! completion; this module is the open-ended counterpart the ROADMAP's
-//! north star asks for: a service that owns one shared
-//! `Arc<`[`Backbone`]`>` plus a registry of per-device [`Session`]s and
-//! consumes a **stream** of [`Request`] messages over an mpsc channel —
-//! register a device, train it some epochs, classify an image, evaluate,
-//! or swap its local data when the distribution drifts.
+//! completion; this module is the open-ended counterpart: a service that
+//! owns one shared `Arc<`[`Backbone`]`>` plus a registry of per-device
+//! [`Session`]s and consumes a **stream** of [`Request`] frames from any
+//! number of connected [`FleetClient`]s — register a device, train it
+//! some epochs, classify an image, evaluate, or swap its local data when
+//! the distribution drifts.
 //!
-//! Scheduling is epoch-granular, like the fleet queue: every queued unit
-//! of work is *one* operation of *one* device (one training epoch, one
-//! prediction, one evaluation), and a device with pending work re-queues
-//! at the back after each unit, so a device mid-adaptation never
-//! monopolizes a worker while other devices' requests wait.  Operations
-//! of one device always run in submission order on its own session state,
-//! so per-device results are bit-identical to a standalone session; work
-//! of *different* devices interleaves freely across the pool.
+//! Clients connect through a [`Transport`]: in-process over
+//! [`FleetServer::local_client`] (mpsc frames) or over TCP via
+//! [`FleetServer::listen`] + [`FleetClient::connect`].  Both paths run
+//! the same codec and dispatch machinery, so responses are bit-identical
+//! whichever transport carries them.
+//!
+//! ## Scheduling
+//!
+//! Work is *priority-laned* and *epoch-granular*:
+//!
+//! * Every queued unit is one operation of one device (one training
+//!   epoch, one prediction, one evaluation).  A device with pending work
+//!   re-queues at the back after each unit, so a device mid-adaptation
+//!   never monopolizes a worker while other devices wait.
+//! * Within a device, pending requests drain by [`Priority`]
+//!   (predict > evaluate > train, FIFO within a class): an interactive
+//!   prediction submitted behind a long `Train` is answered between
+//!   training epochs instead of after all of them.  A multi-epoch
+//!   `Train` materializes one epoch at a time, so it can be preempted at
+//!   every epoch boundary.  `Drift` rides the training lane, preserving
+//!   train → drift → train submission order.
+//! * The dispatcher enforces a bounded per-device **inflight window**
+//!   ([`ServeBuilder::window`]): a device with too many unanswered
+//!   requests gets an immediate `Error` response instead of an unbounded
+//!   backlog.
+//!
+//! Operations of one device never run concurrently, so per-device
+//! results are bit-identical to a standalone session executing the same
+//! operations in the same order.  A synchronous client (one request in
+//! flight) therefore sees exactly standalone behavior; pipelined clients
+//! opt into priority reordering (pin everything to
+//! [`Priority::Background`] to keep strict submission order).
 //!
 //! Evaluation goes through the batched forward path
 //! ([`Session::evaluate_batch`]) — bit-identical to per-sample, faster.
 //!
 //! ```no_run
-//! use std::sync::Arc;
-//! use priot::methods::Priot;
-//! use priot::session::{Backbone, FleetServer, Request};
+//! use priot::proto::{FleetClient, MethodSpec};
+//! use priot::session::{Backbone, FleetServer};
 //!
 //! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
-//! # let (train, test): (Arc<priot::serial::Dataset>, Arc<priot::serial::Dataset>) = todo!();
-//! let server = FleetServer::builder(backbone).threads(4).build();
-//! server.submit(Request::Register {
-//!     device: "dev-00".into(), seed: 1,
-//!     plugin: Box::new(Priot::new()), train, test,
-//! })?;
-//! server.submit(Request::Train { device: "dev-00".into(), epochs: 2 })?;
-//! server.submit(Request::Evaluate { device: "dev-00".into() })?;
-//! let report = server.join()?;   // drain + shut down
+//! # let (train, test): (std::sync::Arc<priot::serial::Dataset>,
+//! #                     std::sync::Arc<priot::serial::Dataset>) = todo!();
+//! let mut server = FleetServer::builder(backbone).threads(4).build();
+//! let addr = server.listen("127.0.0.1:0")?;   // or server.local_client()
+//! let mut client = FleetClient::connect(addr)?;
+//! client.register("dev-00", 1, MethodSpec::priot(), train, test)?;
+//! client.train("dev-00", 2)?;
+//! client.evaluate("dev-00")?;
+//! drop(client);                    // close the connection...
+//! let report = server.join()?;     // ...then drain + shut down
 //! println!("{}", report.summary());
 //! # anyhow::Ok(())
 //! ```
 //!
 //! The `priot serve` CLI subcommand drives a server from a scripted
-//! request trace ([`parse_trace`]; [`DEMO_TRACE`] is a worked sample).
+//! request trace ([`parse_trace`]; [`DEMO_TRACE`] is a worked sample) or
+//! listens on TCP (`--listen`); `priot client` replays a trace against a
+//! remote server.
 
 use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{Method, Selection};
+use crate::config::Method;
 use crate::coordinator::capped;
-use crate::methods::{MethodPlugin, Niti, Priot, PriotS};
+use crate::proto::codec;
+use crate::proto::{
+    ChannelTransport, FleetClient, MethodSpec, Priority, Request, Response,
+    TcpTransport, Transport,
+};
 use crate::serial::{u8_to_i32_pixels, Dataset};
 
 use super::{Backbone, Session};
 
 // ---------------------------------------------------------------------------
-// Protocol
+// Ingress
 // ---------------------------------------------------------------------------
 
-/// One message into the fleet service.  Datasets travel as `Arc` so a
-/// request never copies image payloads.
-pub enum Request {
-    /// Add a device: builds a session over the shared backbone after
-    /// validating the device's data against the backbone spec.
-    Register {
-        device: String,
-        seed: u32,
-        plugin: Box<dyn MethodPlugin>,
-        train: Arc<Dataset>,
-        test: Arc<Dataset>,
-    },
-    /// Adapt for `epochs` epochs on the device's local train set.
-    Train { device: String, epochs: usize },
-    /// Classify one raw u8 image (the on-device `p >> 1` pixel mapping is
-    /// applied server-side).
-    Predict { device: String, image: Vec<u8> },
-    /// Top-1 accuracy over the device's local test set (batched forward).
-    Evaluate { device: String },
-    /// The device's local distribution drifted: swap its datasets.  Takes
-    /// effect after the device's previously queued work, preserving
-    /// submission order.
-    Drift {
-        device: String,
-        train: Arc<Dataset>,
-        test: Arc<Dataset>,
-    },
+/// Reply route of one connection: the worker that completes a request
+/// sends `(request id, response)` here; the connection's writer pump
+/// encodes and ships it.
+#[derive(Clone)]
+struct Reply(Sender<(u64, Response)>);
+
+/// One accepted request: decoded frame + its reply route.
+struct Inbound {
+    id: u64,
+    priority: Priority,
+    req: Request,
+    reply: Reply,
 }
 
-impl Request {
-    /// The device a request addresses.
-    pub fn device(&self) -> &str {
-        match self {
-            Request::Register { device, .. }
-            | Request::Train { device, .. }
-            | Request::Predict { device, .. }
-            | Request::Evaluate { device }
-            | Request::Drift { device, .. } => device,
+/// Decode loop shared by every connection flavor: frames in, [`Inbound`]s
+/// out.  A malformed frame is answered — and reported — like any other
+/// failed request: an `Error` response carrying the frame's own request
+/// id (salvaged from the fixed header, so a synchronous client waiting
+/// on that id sees the error instead of hanging), counted and recorded
+/// via [`respond`].  The connection keeps serving — framing is
+/// length-delimited, so one bad payload does not desync the stream.
+fn read_loop(shared: &Shared,
+             mut recv: impl FnMut() -> Result<Option<Vec<u8>>>,
+             ingress: &Sender<Inbound>, reply: &Reply) {
+    loop {
+        let frame = match recv() {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break, // peer closed / connection error
+        };
+        match codec::decode_request(&frame) {
+            Ok((id, priority, req)) => {
+                let inb = Inbound { id, priority, req, reply: reply.clone() };
+                if ingress.send(inb).is_err() {
+                    break; // server shutting down
+                }
+            }
+            Err(e) => {
+                note_request(shared);
+                respond(shared, reply, codec::frame_request_id(&frame),
+                        Response::Error {
+                            device: String::new(),
+                            message: format!("bad request frame: {e:#}"),
+                        });
+            }
         }
     }
 }
 
-/// One message out of the fleet service.  A device's *op* responses
-/// (train/predict/evaluate/drift) arrive in its submission order;
-/// dispatch-time validation errors are emitted immediately and may
-/// overtake responses of the device's still-queued earlier ops.  Responses
-/// of different devices interleave freely.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Response {
-    Registered { device: String },
-    /// One completed [`Request::Train`]: epochs and **executed** steps.
-    TrainDone {
-        device: String,
-        epochs: usize,
-        steps: u64,
-        train_accuracy: f64,
-    },
-    Prediction { device: String, class: usize },
-    Evaluation { device: String, accuracy: f64, n: usize },
-    Drifted { device: String },
-    Error { device: String, message: String },
-}
-
-impl Response {
-    pub fn device(&self) -> &str {
-        match self {
-            Response::Registered { device }
-            | Response::TrainDone { device, .. }
-            | Response::Prediction { device, .. }
-            | Response::Evaluation { device, .. }
-            | Response::Drifted { device }
-            | Response::Error { device, .. } => device,
+/// Wire up one connection, whatever carries its frames: a writer pump
+/// encoding responses into `send_frame` and a reader pump feeding
+/// decoded requests to the dispatcher.
+fn spawn_connection(
+    shared: &Arc<Shared>,
+    ingress: Sender<Inbound>,
+    mut send_frame: impl FnMut(Vec<u8>) -> bool + Send + 'static,
+    recv_frame: impl FnMut() -> Result<Option<Vec<u8>>> + Send + 'static,
+) {
+    let (otx, orx) = channel::<(u64, Response)>();
+    let writer = std::thread::spawn(move || {
+        for (id, resp) in orx {
+            if !send_frame(codec::encode_response(id, &resp)) {
+                break;
+            }
         }
-    }
-
-    pub fn is_error(&self) -> bool {
-        matches!(self, Response::Error { .. })
-    }
+    });
+    let reply = Reply(otx);
+    let reader = {
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            read_loop(&shared, recv_frame, &ingress, &reply);
+        })
+    };
+    track_conn(shared, reader, writer);
 }
 
 // ---------------------------------------------------------------------------
 // Scheduler internals
 // ---------------------------------------------------------------------------
 
-/// One epoch-granular unit of device work.
-enum Op {
-    /// One training epoch; `last` closes out the originating
-    /// [`Request::Train`] and emits its [`Response::TrainDone`].
-    TrainEpoch { last: bool },
-    /// A zero-epoch [`Request::Train`]: emits its `TrainDone` from the
-    /// queue (not the dispatcher) so per-device response order holds.
-    TrainNoop,
+/// The pending work of one accepted request.  A multi-epoch `Train` is a
+/// single item that yields one epoch per turn at the device — the unit
+/// the priority lanes preempt at.
+enum Work {
+    Train { remaining: usize, done: usize, steps: u64 },
     Predict { image: Vec<u8> },
     Evaluate,
     Drift { train: Arc<Dataset>, test: Arc<Dataset> },
+}
+
+/// One queued request: its id, reply route, and pending work.
+struct Item {
+    id: u64,
+    reply: Reply,
+    work: Work,
 }
 
 struct DeviceState {
@@ -164,30 +195,65 @@ struct DeviceState {
     session: Option<Session>,
     train: Arc<Dataset>,
     test: Arc<Dataset>,
-    /// Pending ops, FIFO.  A device appears in the ready queue iff
-    /// `queued` — never twice, so its ops can never run concurrently.
-    ops: VecDeque<Op>,
+    /// Pending items by [`Priority`] lane; FIFO within a lane.  A device
+    /// appears in the ready queue iff `queued` — never twice, so its ops
+    /// can never run concurrently.
+    lanes: [VecDeque<Item>; Priority::COUNT],
     queued: bool,
-    /// Accumulators for the in-flight [`Request::Train`].
-    req_epochs: usize,
-    req_steps: u64,
+    /// Accepted, unanswered requests (the inflight-window count).
+    pending: usize,
+}
+
+impl DeviceState {
+    fn has_work(&self) -> bool {
+        self.lanes.iter().any(|l| !l.is_empty())
+    }
+}
+
+/// Serving clock: requests/sec covers first request → last response, not
+/// idle time before traffic arrives.
+#[derive(Default)]
+struct Clock {
+    first_request: Option<Instant>,
+    last_response: Option<Instant>,
 }
 
 struct Shared {
     backbone: Arc<Backbone>,
     limit: usize,
     eval_batch: usize,
+    window: usize,
     devices: Mutex<HashMap<String, DeviceState>>,
-    /// Devices with pending ops, round-robin.  Lock order: `devices`
-    /// before `ready`; `outstanding` is only taken with `devices` held
-    /// (dispatcher) or with nothing held (worker epilogue).
+    /// Devices with pending work, round-robin.  Lock order: `devices`
+    /// before `ready`/`outstanding`/`record`/`clock`; none of those four
+    /// is ever held while taking another of them or `devices`.
     ready: Mutex<VecDeque<String>>,
     ready_cv: Condvar,
     done: AtomicBool,
-    /// Ops enqueued but not yet completed (drives graceful shutdown).
+    /// Accepted op-requests not yet answered (drives graceful shutdown).
     outstanding: Mutex<usize>,
     idle_cv: Condvar,
     requests: AtomicU64,
+    /// Every response the run produced, completion order (the
+    /// [`ServeReport`] source — per-connection streams are routed
+    /// separately via [`Reply`]).
+    record: Mutex<Vec<Response>>,
+    /// Recording off = a long-lived server (`priot serve --listen`) that
+    /// never `join()`s does not grow `record` without bound.
+    record_enabled: bool,
+    clock: Mutex<Clock>,
+    accepting: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Track a connection's pump threads, reaping the handles of pumps that
+/// already finished (long-lived servers see many connections come and
+/// go; their handles must not accumulate until `join()`).
+fn track_conn(shared: &Shared, reader: JoinHandle<()>, writer: JoinHandle<()>) {
+    let mut conns = shared.conns.lock().expect("serve connections");
+    conns.retain(|h| !h.is_finished());
+    conns.push(reader);
+    conns.push(writer);
 }
 
 impl Shared {
@@ -203,12 +269,44 @@ impl Shared {
     }
 }
 
-fn dispatch(shared: &Shared, rx: Receiver<Request>, events: &Sender<Response>) {
-    for req in rx {
-        shared.requests.fetch_add(1, Ordering::Relaxed);
-        let device = req.device().to_string();
-        if let Err(e) = handle_request(shared, req, events) {
-            let _ = events.send(Response::Error {
+/// Record a response (when recording is on) and route it to its
+/// connection.
+fn respond(shared: &Shared, reply: &Reply, id: u64, resp: Response) {
+    shared.clock.lock().expect("serve clock").last_response =
+        Some(Instant::now());
+    if shared.record_enabled {
+        shared.record.lock().expect("serve record").push(resp.clone());
+    }
+    let _ = reply.0.send((id, resp));
+}
+
+/// Count one received request and start the serving clock on the first.
+fn note_request(shared: &Shared) {
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    let mut clock = shared.clock.lock().expect("serve clock");
+    if clock.first_request.is_none() {
+        clock.first_request = Some(Instant::now());
+    }
+}
+
+fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
+    for inb in rx {
+        note_request(shared);
+        let device = inb.req.device().to_string();
+        let (id, reply) = (inb.id, inb.reply.clone());
+        // After an abort (`Drop` without `join`: worker pool stopped,
+        // dispatcher detached) the server must still *answer* — with an
+        // error — or a synchronous client that submits after the drop
+        // would wait forever on a request nothing will ever run.
+        if shared.done.load(Ordering::SeqCst) {
+            respond(shared, &reply, id, Response::Error {
+                device,
+                message: "fleet server is shut down".into(),
+            });
+            continue;
+        }
+        if let Err(e) = handle_request(shared, inb) {
+            respond(shared, &reply, id, Response::Error {
                 device,
                 message: format!("{e:#}"),
             });
@@ -216,77 +314,86 @@ fn dispatch(shared: &Shared, rx: Receiver<Request>, events: &Sender<Response>) {
     }
 }
 
-fn handle_request(shared: &Shared, req: Request, events: &Sender<Response>)
-                  -> Result<()> {
+fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
+    let Inbound { id, priority, req, reply } = inb;
     match req {
-        Request::Register { device, seed, plugin, train, test } => {
+        // Register runs inline on the dispatcher (not through the
+        // lanes): a device's lanes cannot exist before its session does,
+        // and building the session here keeps the "registered ⇔ has
+        // lanes" invariant trivially single-threaded.  The cost is that
+        // a register stalls dispatch for the duration of one session
+        // construction (sub-millisecond for the paper's models); moving
+        // construction onto the worker pool is a ROADMAP item.
+        Request::Register { device, seed, method, train, test } => {
             crate::data::validate(&train, &shared.backbone.spec)
                 .with_context(|| format!("registering {device}: train set"))?;
             crate::data::validate(&test, &shared.backbone.spec)
                 .with_context(|| format!("registering {device}: test set"))?;
             let session = Session::builder()
                 .backbone(Arc::clone(&shared.backbone))
-                .method_boxed(plugin)
+                .method_boxed(method.plugin())
                 .seed(seed)
                 .limit(shared.limit)
                 .eval_batch(shared.eval_batch)
                 .track_pruning(false)
                 .build()
                 .with_context(|| format!("registering {device}"))?;
-            let mut devices = shared.devices.lock().expect("serve registry");
-            if devices.contains_key(&device) {
-                bail!("device {device} already registered");
+            {
+                let mut devices =
+                    shared.devices.lock().expect("serve registry");
+                if devices.contains_key(&device) {
+                    bail!("device {device} already registered");
+                }
+                devices.insert(device.clone(), DeviceState {
+                    session: Some(session),
+                    train,
+                    test,
+                    lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                    queued: false,
+                    pending: 0,
+                });
             }
-            devices.insert(device.clone(), DeviceState {
-                session: Some(session),
-                train,
-                test,
-                ops: VecDeque::new(),
-                queued: false,
-                req_epochs: 0,
-                req_steps: 0,
-            });
-            drop(devices);
-            let _ = events.send(Response::Registered { device });
+            respond(shared, &reply, id, Response::Registered { device });
             Ok(())
         }
-        Request::Train { device, epochs } => {
-            if epochs == 0 {
-                return enqueue(shared, &device, [Op::TrainNoop]);
-            }
-            let ops =
-                (0..epochs).map(|i| Op::TrainEpoch { last: i + 1 == epochs });
-            enqueue(shared, &device, ops)
-        }
-        Request::Predict { device, image } => {
-            enqueue(shared, &device, [Op::Predict { image }])
-        }
-        Request::Evaluate { device } => enqueue(shared, &device, [Op::Evaluate]),
+        Request::Train { device, epochs } => enqueue(shared, &device, priority,
+            Item {
+                id,
+                reply,
+                work: Work::Train { remaining: epochs, done: 0, steps: 0 },
+            }),
+        Request::Predict { device, image } => enqueue(shared, &device, priority,
+            Item { id, reply, work: Work::Predict { image } }),
+        Request::Evaluate { device } => enqueue(shared, &device, priority,
+            Item { id, reply, work: Work::Evaluate }),
         Request::Drift { device, train, test } => {
             crate::data::validate(&train, &shared.backbone.spec)
                 .with_context(|| format!("drifting {device}: train set"))?;
             crate::data::validate(&test, &shared.backbone.spec)
                 .with_context(|| format!("drifting {device}: test set"))?;
-            enqueue(shared, &device, [Op::Drift { train, test }])
+            enqueue(shared, &device, priority,
+                    Item { id, reply, work: Work::Drift { train, test } })
         }
     }
 }
 
-fn enqueue(shared: &Shared, device: &str, ops: impl IntoIterator<Item = Op>)
+fn enqueue(shared: &Shared, device: &str, priority: Priority, item: Item)
            -> Result<()> {
     let mut devices = shared.devices.lock().expect("serve registry");
     let st = devices
         .get_mut(device)
         .ok_or_else(|| anyhow!("unknown device {device} (register first)"))?;
-    let mut added = 0usize;
-    for op in ops {
-        st.ops.push_back(op);
-        added += 1;
+    if st.pending >= shared.window {
+        bail!(
+            "device {device}: inflight window full ({} of {} requests \
+             pending — drain responses before submitting more)",
+            st.pending,
+            shared.window
+        );
     }
-    if added == 0 {
-        return Ok(());
-    }
-    *shared.outstanding.lock().expect("serve outstanding") += added;
+    st.pending += 1;
+    st.lanes[priority.lane()].push_back(item);
+    *shared.outstanding.lock().expect("serve outstanding") += 1;
     if !st.queued {
         st.queued = true;
         shared
@@ -299,46 +406,61 @@ fn enqueue(shared: &Shared, device: &str, ops: impl IntoIterator<Item = Op>)
     Ok(())
 }
 
-/// What one executed op produced (turned into a [`Response`] while the
-/// device's accumulators are updated under the registry lock).
-enum OpOut {
-    Epoch { last: bool, steps: u64, train_accuracy: f64 },
-    /// A zero-epoch train request reached its queue slot.
-    TrainNoop,
+/// What one executed unit produced.
+enum UnitOut {
+    /// A training epoch ran; the request has more epochs to go.
+    Continue,
+    TrainDone { epochs: usize, steps: u64, train_accuracy: f64 },
     Prediction(usize),
     Evaluation { accuracy: f64, n: usize },
     Drifted { train: Arc<Dataset>, test: Arc<Dataset> },
 }
 
-fn run_op(session: &mut Session, op: Op, train: &Dataset, test: &Dataset,
-          eval_batch: usize, limit: usize) -> Result<OpOut> {
-    match op {
-        Op::TrainEpoch { last } => {
+fn run_unit(session: &mut Session, work: &mut Work, train: &Dataset,
+            test: &Dataset, eval_batch: usize, limit: usize)
+            -> Result<UnitOut> {
+    match work {
+        Work::Train { remaining, done, steps } => {
+            if *remaining == 0 {
+                // A zero-epoch request reached its queue slot: close it
+                // out in order, with nothing executed.
+                return Ok(UnitOut::TrainDone {
+                    epochs: 0,
+                    steps: 0,
+                    train_accuracy: 0.0,
+                });
+            }
             let ep = session.train_epoch(train)?;
-            Ok(OpOut::Epoch {
-                last,
-                steps: ep.steps as u64,
-                train_accuracy: ep.train_accuracy,
-            })
+            *remaining -= 1;
+            *done += 1;
+            *steps += ep.steps as u64;
+            if *remaining == 0 {
+                Ok(UnitOut::TrainDone {
+                    epochs: *done,
+                    steps: *steps,
+                    train_accuracy: ep.train_accuracy,
+                })
+            } else {
+                Ok(UnitOut::Continue)
+            }
         }
-        Op::TrainNoop => Ok(OpOut::TrainNoop),
-        Op::Predict { image } => {
+        Work::Predict { image } => {
             let want = session.spec.input_len();
             if image.len() != want {
                 bail!("predict: image has {} pixels, model {} wants {want}",
                       image.len(), session.spec.name);
             }
             let mut img = vec![0i32; want];
-            u8_to_i32_pixels(&image, &mut img);
-            Ok(OpOut::Prediction(session.predict(&img)))
+            u8_to_i32_pixels(image, &mut img);
+            Ok(UnitOut::Prediction(session.predict(&img)))
         }
-        Op::Evaluate => {
+        Work::Evaluate => {
             let accuracy = session.evaluate_batch(test, eval_batch)?;
-            Ok(OpOut::Evaluation { accuracy, n: capped(test.n, limit) })
+            Ok(UnitOut::Evaluation { accuracy, n: capped(test.n, limit) })
         }
-        Op::Drift { train: tr, test: te } => Ok(OpOut::Drifted {
-            train: tr,
-            test: te,
+        Work::Drift { train: tr, test: te } => Ok(UnitOut::Drifted {
+            train: Arc::clone(tr),
+            test: Arc::clone(te),
         }),
     }
 }
@@ -351,7 +473,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         .unwrap_or("non-string panic payload")
 }
 
-fn worker(shared: &Shared, events: &Sender<Response>) {
+fn worker(shared: &Shared) {
     loop {
         // Wait for a ready device (or shutdown).
         let device = {
@@ -366,131 +488,112 @@ fn worker(shared: &Shared, events: &Sender<Response>) {
                 q = shared.ready_cv.wait(q).expect("serve ready queue");
             }
         };
-        // Check out the session plus the next op; a device is in the ready
-        // queue at most once, so nobody else holds this session.
-        let (mut session, op, train, test) = {
+        // Check out the session plus the highest-priority pending item; a
+        // device is in the ready queue at most once, so nobody else holds
+        // this session.
+        let (mut session, item, lane, train, test) = {
             let mut devices = shared.devices.lock().expect("serve registry");
             let st = devices.get_mut(&device).expect("ready device registered");
-            let op = st.ops.pop_front().expect("ready device has ops");
+            let lane = (0..Priority::COUNT)
+                .find(|&l| !st.lanes[l].is_empty())
+                .expect("ready device has work");
+            let item = st.lanes[lane].pop_front().expect("non-empty lane");
             (
                 st.session.take().expect("ready device owns its session"),
-                op,
+                item,
+                lane,
                 Arc::clone(&st.train),
                 Arc::clone(&st.test),
             )
         };
-        let epoch_last = match &op {
-            Op::TrainEpoch { last } => Some(*last),
-            _ => None,
-        };
+        let Item { id, reply, mut work } = item;
         // A panicking op (method plugins are an open extension point) must
         // not kill the worker: the `outstanding` count would never drain
         // and `join()` would hang.  Convert the panic into an error
         // response; engine/score buffers are plain integers, so the
         // checked-back-in session is memory-safe (its method state may be
         // mid-step — the caller sees the Error and can re-register).
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || run_op(&mut session, op, &train, &test, shared.eval_batch,
-                      shared.limit),
+        let unit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || run_unit(&mut session, &mut work, &train, &test,
+                        shared.eval_batch, shared.limit),
         ))
         .unwrap_or_else(|payload| {
             Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
         });
-        // Check the session back in, update accumulators, build the
-        // response, and re-queue the device if it still has work.
-        let mut drained = 0usize;
-        let response = {
+        // Check the session back in and emit the response (if the request
+        // completed) *before* re-queuing the device, so a device's
+        // responses leave in execution order.
+        let mut responded = false;
+        {
             let mut devices = shared.devices.lock().expect("serve registry");
             let st = devices.get_mut(&device).expect("device still registered");
             st.session = Some(session);
-            let response = match result {
-                Ok(OpOut::Epoch { last, steps, train_accuracy }) => {
-                    st.req_epochs += 1;
-                    st.req_steps += steps;
-                    if last {
-                        let r = Response::TrainDone {
-                            device: device.clone(),
-                            epochs: st.req_epochs,
-                            steps: st.req_steps,
-                            train_accuracy,
-                        };
-                        st.req_epochs = 0;
-                        st.req_steps = 0;
-                        Some(r)
-                    } else {
-                        None
-                    }
+            let response = match unit {
+                Ok(UnitOut::Continue) => {
+                    // Back to the front of its lane: the request resumes
+                    // at the device's next turn, after any
+                    // higher-priority work cuts in.
+                    st.lanes[lane].push_front(Item {
+                        id,
+                        reply: reply.clone(),
+                        work,
+                    });
+                    None
                 }
-                Ok(OpOut::TrainNoop) => Some(Response::TrainDone {
-                    device: device.clone(),
-                    epochs: 0,
-                    steps: 0,
-                    train_accuracy: 0.0,
-                }),
-                Ok(OpOut::Prediction(class)) => Some(Response::Prediction {
+                Ok(UnitOut::TrainDone { epochs, steps, train_accuracy }) => {
+                    Some(Response::TrainDone {
+                        device: device.clone(),
+                        epochs,
+                        steps,
+                        train_accuracy,
+                    })
+                }
+                Ok(UnitOut::Prediction(class)) => Some(Response::Prediction {
                     device: device.clone(),
                     class,
                 }),
-                Ok(OpOut::Evaluation { accuracy, n }) => {
+                Ok(UnitOut::Evaluation { accuracy, n }) => {
                     Some(Response::Evaluation {
                         device: device.clone(),
                         accuracy,
                         n,
                     })
                 }
-                Ok(OpOut::Drifted { train, test }) => {
+                Ok(UnitOut::Drifted { train, test }) => {
                     st.train = train;
                     st.test = test;
                     Some(Response::Drifted { device: device.clone() })
                 }
-                Err(e) => {
-                    if let Some(last) = epoch_last {
-                        // Abandon the in-flight Train accounting, and for
-                        // a non-final epoch drop the request's remaining
-                        // TrainEpoch ops (they are contiguous — enqueue
-                        // is atomic per request) so the failed request
-                        // neither trains on for nothing nor emits a
-                        // spurious TrainDone after its Error.
-                        st.req_epochs = 0;
-                        st.req_steps = 0;
-                        if !last {
-                            while let Some(Op::TrainEpoch { last }) =
-                                st.ops.front()
-                            {
-                                let was_last = *last;
-                                st.ops.pop_front();
-                                drained += 1;
-                                if was_last {
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                    Some(Response::Error {
-                        device: device.clone(),
-                        message: format!("{e:#}"),
-                    })
-                }
+                // A failed Train drops its remaining epochs with it: one
+                // Error closes out the whole request — it neither trains
+                // on for nothing nor emits a TrainDone after its Error.
+                Err(e) => Some(Response::Error {
+                    device: device.clone(),
+                    message: format!("{e:#}"),
+                }),
             };
-            if st.ops.is_empty() {
-                st.queued = false;
-            } else {
+            if let Some(resp) = response {
+                st.pending -= 1;
+                respond(shared, &reply, id, resp);
+                responded = true;
+            }
+            if st.has_work() {
                 shared
                     .ready
                     .lock()
                     .expect("serve ready queue")
                     .push_back(device.clone());
                 shared.ready_cv.notify_one();
+            } else {
+                st.queued = false;
             }
-            response
-        };
-        if let Some(r) = response {
-            let _ = events.send(r);
         }
-        let mut out = shared.outstanding.lock().expect("serve outstanding");
-        *out -= 1 + drained; // the executed op plus any aborted-Train ops
-        if *out == 0 {
-            shared.idle_cv.notify_all();
+        if responded {
+            let mut out = shared.outstanding.lock().expect("serve outstanding");
+            *out -= 1;
+            if *out == 0 {
+                shared.idle_cv.notify_all();
+            }
         }
     }
 }
@@ -505,6 +608,8 @@ pub struct ServeBuilder {
     threads: usize,
     limit: usize,
     eval_batch: usize,
+    window: usize,
+    record: bool,
 }
 
 impl ServeBuilder {
@@ -528,6 +633,24 @@ impl ServeBuilder {
         self
     }
 
+    /// Per-device inflight window: the maximum accepted-but-unanswered
+    /// requests one device may have queued.  Submissions beyond it are
+    /// answered with an immediate `Error` instead of growing the backlog
+    /// (0 = unbounded; default 64).
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Keep every response for the final [`ServeReport`] (default on).
+    /// Turn it off for a long-lived listener that never `join()`s —
+    /// responses still reach their clients, but the server no longer
+    /// accumulates a copy of each one for the whole process lifetime.
+    pub fn record(mut self, on: bool) -> Self {
+        self.record = on;
+        self
+    }
+
     /// Spawn the dispatcher + worker pool and return the live handle.
     pub fn build(self) -> FleetServer {
         let threads = if self.threads == 0 {
@@ -539,6 +662,7 @@ impl ServeBuilder {
             backbone: self.backbone,
             limit: self.limit,
             eval_batch: self.eval_batch,
+            window: if self.window == 0 { usize::MAX } else { self.window },
             devices: Mutex::new(HashMap::new()),
             ready: Mutex::new(VecDeque::new()),
             ready_cv: Condvar::new(),
@@ -546,142 +670,221 @@ impl ServeBuilder {
             outstanding: Mutex::new(0),
             idle_cv: Condvar::new(),
             requests: AtomicU64::new(0),
+            record: Mutex::new(Vec::new()),
+            record_enabled: self.record,
+            clock: Mutex::new(Clock::default()),
+            accepting: AtomicBool::new(true),
+            conns: Mutex::new(Vec::new()),
         });
-        let (tx, rx) = channel::<Request>();
-        let (etx, erx) = channel::<Response>();
+        let (itx, irx) = channel::<Inbound>();
         let dispatcher = {
             let shared = Arc::clone(&shared);
-            let etx = etx.clone();
-            std::thread::spawn(move || dispatch(&shared, rx, &etx))
+            std::thread::spawn(move || dispatch(&shared, irx))
         };
         let workers = (0..threads)
             .map(|_| {
                 let shared = Arc::clone(&shared);
-                let etx = etx.clone();
-                std::thread::spawn(move || worker(&shared, &etx))
+                std::thread::spawn(move || worker(&shared))
             })
             .collect();
-        drop(etx);
         FleetServer {
             shared,
-            tx: Some(tx),
-            events: erx,
-            seen: Mutex::new(Vec::new()),
+            ingress: Some(itx),
             dispatcher: Some(dispatcher),
             workers,
-            t0: Instant::now(),
+            acceptor: None,
             threads,
         }
     }
 }
 
 /// The long-lived fleet service: one shared backbone, a registry of
-/// per-device sessions, a dispatcher thread feeding an epoch-granular
-/// work queue, and a worker pool draining it.  See the module docs.
+/// per-device sessions, a dispatcher thread feeding priority-laned
+/// per-device queues, and a worker pool draining them.  Clients talk to
+/// it exclusively through [`FleetClient`] — see the module docs.
 pub struct FleetServer {
     shared: Arc<Shared>,
-    tx: Option<Sender<Request>>,
-    events: Receiver<Response>,
-    /// Responses already handed out via [`Self::poll`], kept so the final
-    /// [`ServeReport`] still covers the whole run.
-    seen: Mutex<Vec<Response>>,
+    ingress: Option<Sender<Inbound>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    t0: Instant,
+    acceptor: Option<JoinHandle<()>>,
     threads: usize,
 }
 
 impl FleetServer {
     pub fn builder(backbone: Arc<Backbone>) -> ServeBuilder {
-        ServeBuilder { backbone, threads: 0, limit: 0, eval_batch: 8 }
+        ServeBuilder {
+            backbone,
+            threads: 0,
+            limit: 0,
+            eval_batch: 8,
+            window: 64,
+            record: true,
+        }
     }
 
-    /// A clonable request handle (the raw mpsc front door) for callers
-    /// that stream requests from another thread.
+    /// Connect an in-process client over a [`ChannelTransport`] — the
+    /// successor of the old raw `mpsc::Sender<Request>` front door, now
+    /// running the same codec and dispatch path as TCP connections.
     ///
-    /// **Lifetime contract:** the dispatcher only shuts down once *every*
-    /// `Sender` clone is dropped.  [`Self::join`] closes the server's own
-    /// handle, then waits — so drop all clones (end the producer threads)
-    /// before calling `join`, or it will block until they finish.
-    pub fn sender(&self) -> Sender<Request> {
-        self.tx.as_ref().expect("server joined").clone()
+    /// **Lifetime contract:** the dispatcher only shuts down once every
+    /// connection has closed.  [`Self::join`] waits for that — so drop
+    /// all clients (ending their connections) before calling `join`, or
+    /// it will block until they are gone.
+    pub fn local_client(&self) -> FleetClient {
+        let (client_end, server_end) = ChannelTransport::pair();
+        let (stx, srx) = server_end.into_parts();
+        let ingress = self.ingress.as_ref().expect("server joined").clone();
+        spawn_connection(
+            &self.shared,
+            ingress,
+            move |frame| stx.send(frame).is_ok(),
+            move || Ok(srx.recv().ok()),
+        );
+        FleetClient::over(client_end)
     }
 
-    /// Submit one request.  Responses arrive asynchronously — poll with
-    /// [`Self::poll`] or collect everything via [`Self::join`].
-    pub fn submit(&self, req: Request) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("server joined")
-            .send(req)
-            .map_err(|_| anyhow!("fleet server is shut down"))
+    /// Accept TCP clients on `addr` (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral loopback port).  Returns the bound address; connect
+    /// with [`FleetClient::connect`].
+    pub fn listen(&mut self, addr: &str) -> Result<SocketAddr> {
+        if self.acceptor.is_some() {
+            bail!("server is already listening");
+        }
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fleet listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        // Non-blocking accept so the acceptor can observe shutdown.
+        listener
+            .set_nonblocking(true)
+            .context("configuring the fleet listener")?;
+        let shared = Arc::clone(&self.shared);
+        let ingress = self.ingress.as_ref().expect("server joined").clone();
+        self.acceptor = Some(std::thread::spawn(move || {
+            while shared.accepting.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // Accepted sockets must not inherit the
+                        // listener's non-blocking mode.
+                        let _ = stream.set_nonblocking(false);
+                        let wstream = match stream.try_clone() {
+                            Ok(s) => s,
+                            // Connection unusable before it started.
+                            Err(_) => continue,
+                        };
+                        let mut wt = TcpTransport::from_stream(wstream);
+                        let mut rt = TcpTransport::from_stream(stream);
+                        spawn_connection(
+                            &shared,
+                            ingress.clone(),
+                            move |frame| wt.send(frame).is_ok(),
+                            move || rt.recv(),
+                        );
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+        Ok(local)
     }
 
-    /// Responses that have arrived so far (non-blocking).  Polled
-    /// responses are also retained for the final [`ServeReport`], so
-    /// `join()` still returns the complete run.
-    pub fn poll(&self) -> Vec<Response> {
-        let fresh: Vec<Response> = self.events.try_iter().collect();
-        self.seen
-            .lock()
-            .expect("serve responses")
-            .extend(fresh.iter().cloned());
-        fresh
-    }
-
-    /// Graceful shutdown: close the request channel, finish every queued
-    /// op, stop the pool, and return everything the run produced.
+    /// Graceful shutdown: stop accepting connections, finish every
+    /// accepted request, stop the pool, and return everything the run
+    /// produced.
     ///
-    /// Blocks until the request stream ends — if clones from
-    /// [`Self::sender`] are still alive on other threads, `join` waits
-    /// for them to drop (see the `sender` docs).
+    /// Blocks until every connection has closed — drop your
+    /// [`FleetClient`]s first (see [`Self::local_client`]).
     pub fn join(mut self) -> Result<ServeReport> {
-        self.tx.take(); // dispatcher's recv loop ends once drained
+        self.ingress.take(); // our own ingress handle
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            a.join().map_err(|_| anyhow!("serve acceptor panicked"))?;
+        }
+        // The dispatcher exits once every connection reader has dropped
+        // its ingress handle (i.e. every client disconnected).
         if let Some(d) = self.dispatcher.take() {
             d.join().map_err(|_| anyhow!("serve dispatcher panicked"))?;
         }
         {
-            let mut out = self.shared.outstanding.lock().expect("outstanding");
+            let mut out =
+                self.shared.outstanding.lock().expect("serve outstanding");
             while *out > 0 {
-                out = self.shared.idle_cv.wait(out).expect("outstanding");
+                out = self.shared.idle_cv.wait(out).expect("serve outstanding");
             }
         }
         self.shared.signal_done();
         for w in self.workers.drain(..) {
             w.join().map_err(|_| anyhow!("serve worker panicked"))?;
         }
-        let mut responses =
-            std::mem::take(&mut *self.seen.lock().expect("serve responses"));
-        responses.extend(self.events.try_iter());
+        // Connection pumps exit once their peer is gone and their queued
+        // responses are flushed (all Reply handles were dropped above).
+        let conns: Vec<JoinHandle<()>> = {
+            let mut c = self.shared.conns.lock().expect("serve connections");
+            c.drain(..).collect()
+        };
+        for c in conns {
+            c.join().map_err(|_| anyhow!("serve connection pump panicked"))?;
+        }
+        let responses =
+            std::mem::take(&mut *self.shared.record.lock().expect("record"));
+        let clock = self.shared.clock.lock().expect("serve clock");
+        let wall_secs = match (clock.first_request, clock.last_response) {
+            (Some(t0), Some(t1)) => {
+                t1.saturating_duration_since(t0).as_secs_f64()
+            }
+            _ => 0.0,
+        };
+        drop(clock);
         Ok(ServeReport {
             responses,
             requests: self.shared.requests.load(Ordering::Relaxed),
-            wall_secs: self.t0.elapsed().as_secs_f64(),
+            wall_secs,
             threads: self.threads,
         })
     }
 }
 
 impl Drop for FleetServer {
-    /// Abort path (no [`Self::join`]): stop accepting requests, let the
-    /// pool drain what is already queued, and reap the threads.
+    /// Abort path (no [`Self::join`]): stop accepting, let the pool
+    /// drain what is already queued, and reap what can be reaped without
+    /// blocking on live clients.  The dispatcher and per-connection
+    /// pumps exit on their own once every client disconnects, so they
+    /// are *detached*, not joined — dropping a server with a client
+    /// still attached must not hang the dropping thread.  Requests
+    /// submitted after the drop are answered with an `Error` by the
+    /// detached dispatcher; a request racing the drop itself may go
+    /// unanswered (an aborting server makes no delivery promises).
+    /// No-op after `join()` (which consumed the handles already).
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
+        self.ingress.take();
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
         }
+        // Detach the dispatcher: it exits once every connection reader
+        // has dropped its ingress handle (i.e. every client is gone).
+        self.dispatcher.take();
         self.shared.signal_done();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Connection pumps are likewise detached; their handles are
+        // freed with `Shared` when the last thread holding it exits.
     }
 }
 
 /// Everything one server run produced.
 pub struct ServeReport {
-    /// Responses in completion order (per device: submission order).
+    /// Responses in completion order (per device: execution order).
     pub responses: Vec<Response>,
     pub requests: u64,
+    /// First request received → last response emitted.  Idle time before
+    /// traffic arrives does not count against requests/sec.
     pub wall_secs: f64,
     pub threads: usize,
 }
@@ -695,7 +898,7 @@ impl ServeReport {
         self.responses.iter().filter(|r| r.is_error()).count()
     }
 
-    /// This device's responses, in its submission order.
+    /// This device's responses, in its execution order.
     pub fn for_device<'a>(&'a self, device: &str) -> Vec<&'a Response> {
         self.responses.iter().filter(|r| r.device() == device).collect()
     }
@@ -729,46 +932,14 @@ impl ServeReport {
 }
 
 // ---------------------------------------------------------------------------
-// Scripted request traces (the `priot serve` CLI front-end)
+// Scripted request traces (the `priot serve` / `priot client` front-ends)
 // ---------------------------------------------------------------------------
-
-/// The method half of a trace `register` line.
-#[derive(Clone, Debug, PartialEq)]
-pub struct TraceMethod {
-    pub method: Method,
-    pub frac_scored: f64,
-    pub selection: Selection,
-    pub theta: Option<i32>,
-}
-
-impl TraceMethod {
-    pub fn plugin(&self) -> Box<dyn MethodPlugin> {
-        match self.method {
-            Method::StaticNiti => Box::new(Niti::static_scale()),
-            Method::DynamicNiti => Box::new(Niti::dynamic()),
-            Method::Priot => {
-                let mut p = Priot::new();
-                if let Some(t) = self.theta {
-                    p = p.with_theta(t);
-                }
-                Box::new(p)
-            }
-            Method::PriotS => {
-                let mut p = PriotS::new(self.frac_scored, self.selection);
-                if let Some(t) = self.theta {
-                    p = p.with_theta(t);
-                }
-                Box::new(p)
-            }
-        }
-    }
-}
 
 /// One line of a scripted request trace.  Datasets stay symbolic (an
 /// `angle` into the artifact data) — the CLI resolves them to files.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceCmd {
-    Register { device: String, seed: u32, method: TraceMethod, angle: u32 },
+    Register { device: String, seed: u32, method: MethodSpec, angle: u32 },
     Train { device: String, epochs: usize },
     /// Classify sample `sample` of the device's current test set.
     Predict { device: String, sample: usize },
@@ -788,14 +959,15 @@ predict dev-a sample=0
 predict dev-b sample=3
 evaluate dev-a
 evaluate dev-b
-drift dev-a angle=45
+drift dev-a 45           # drift takes its angle positionally too
 train dev-a epochs=1
 evaluate dev-a
 ";
 
 /// Parse a request trace: one command per line, `# comments` and blank
-/// lines ignored.  Grammar per line: `<verb> <device> [key=value]...` with
-/// verbs `register | train | predict | evaluate | drift`.
+/// lines ignored.  Grammar per line: `<verb> <device> [key=value]...`
+/// with verbs `register | train | predict | evaluate | drift`; `drift`
+/// also accepts its angle positionally (`drift dev0 60`).
 pub fn parse_trace(text: &str) -> Result<Vec<TraceCmd>> {
     let mut out = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -817,11 +989,17 @@ fn parse_trace_line(line: &str) -> Result<TraceCmd> {
         .ok_or_else(|| anyhow!("missing device name"))?
         .to_string();
     let mut kv: HashMap<&str, &str> = HashMap::new();
-    for pair in it {
-        let (k, v) = pair
-            .split_once('=')
-            .ok_or_else(|| anyhow!("expected key=value, got {pair}"))?;
-        kv.insert(k, v);
+    let mut positional: Vec<&str> = Vec::new();
+    for tok in it {
+        match tok.split_once('=') {
+            Some((k, v)) => {
+                kv.insert(k, v);
+            }
+            None => positional.push(tok),
+        }
+    }
+    if verb != "drift" && !positional.is_empty() {
+        bail!("unexpected value {} (expected key=value)", positional[0]);
     }
     let get_usize = |kv: &HashMap<&str, &str>, k: &str, d: usize| -> Result<usize> {
         match kv.get(k) {
@@ -832,8 +1010,8 @@ fn parse_trace_line(line: &str) -> Result<TraceCmd> {
     Ok(match verb {
         "register" => {
             let method = Method::parse(kv.get("method").copied().unwrap_or("priot"))?;
-            let selection =
-                Selection::parse(kv.get("selection").copied().unwrap_or("weight"))?;
+            let selection = crate::config::Selection::parse(
+                kv.get("selection").copied().unwrap_or("weight"))?;
             let frac_scored = match kv.get("frac") {
                 None => 0.1,
                 Some(v) => v.parse().with_context(|| format!("frac={v}"))?,
@@ -847,7 +1025,7 @@ fn parse_trace_line(line: &str) -> Result<TraceCmd> {
             TraceCmd::Register {
                 device,
                 seed: get_usize(&kv, "seed", 1)? as u32,
-                method: TraceMethod { method, frac_scored, selection, theta },
+                method: MethodSpec { method, frac_scored, selection, theta },
                 angle: get_usize(&kv, "angle", 30)? as u32,
             }
         }
@@ -860,18 +1038,77 @@ fn parse_trace_line(line: &str) -> Result<TraceCmd> {
             sample: get_usize(&kv, "sample", 0)?,
         },
         "evaluate" => TraceCmd::Evaluate { device },
-        "drift" => TraceCmd::Drift {
-            device,
-            angle: get_usize(&kv, "angle", 45)? as u32,
-        },
+        "drift" => {
+            // Arbitrary drift angles, positionally or as angle=N — no
+            // hardcoded 30°/45° pair.
+            let angle = match (positional.as_slice(), kv.get("angle")) {
+                ([], None) => 45,
+                ([], Some(v)) => {
+                    v.parse().with_context(|| format!("angle={v}"))?
+                }
+                ([one], None) => one
+                    .parse()
+                    .with_context(|| format!("drift angle {one}"))?,
+                ([_], Some(_)) => {
+                    bail!("drift angle given both positionally and as angle=")
+                }
+                (more, _) => bail!("too many values: {}", more.join(" ")),
+            };
+            TraceCmd::Drift { device, angle }
+        }
         other => bail!("unknown trace verb {other} \
                         (want register|train|predict|evaluate|drift)"),
     })
 }
 
+/// Replay a parsed trace over a connected client, one synchronous
+/// request at a time (so per-device order is submission order and the
+/// result stream is deterministic — bit-identical across transports and
+/// to a standalone [`Session`] executing the same operations).
+/// `pair_for` resolves a symbolic drift angle to its datasets.
+pub fn replay_trace(
+    client: &mut FleetClient,
+    cmds: &[TraceCmd],
+    pair_for: &mut dyn FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)>,
+) -> Result<Vec<Response>> {
+    let mut device_test: HashMap<String, Arc<Dataset>> = HashMap::new();
+    let mut out = Vec::with_capacity(cmds.len());
+    for cmd in cmds {
+        let resp = match cmd.clone() {
+            TraceCmd::Register { device, seed, method, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                client.register(&device, seed, method, train, test)?
+            }
+            TraceCmd::Train { device, epochs } => {
+                client.train(&device, epochs)?
+            }
+            TraceCmd::Predict { device, sample } => {
+                let test = device_test.get(&device).ok_or_else(|| anyhow!(
+                    "trace predicts on unregistered device {device}"))?;
+                if test.n == 0 {
+                    bail!("trace predicts on device {device}, whose test \
+                           set is empty");
+                }
+                let image = test.image(sample % test.n).to_vec();
+                client.predict(&device, image)?
+            }
+            TraceCmd::Evaluate { device } => client.evaluate(&device)?,
+            TraceCmd::Drift { device, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                client.drift(&device, train, test)?
+            }
+        };
+        out.push(resp);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Selection;
 
     #[test]
     fn parse_trace_demo_roundtrip() {
@@ -880,7 +1117,7 @@ mod tests {
         assert_eq!(cmds[0], TraceCmd::Register {
             device: "dev-a".into(),
             seed: 1,
-            method: TraceMethod {
+            method: MethodSpec {
                 method: Method::Priot,
                 frac_scored: 0.1,
                 selection: Selection::WeightBased,
@@ -904,20 +1141,33 @@ mod tests {
     }
 
     #[test]
-    fn trace_method_builds_plugins() {
-        let m = TraceMethod {
+    fn parse_trace_drift_takes_arbitrary_angles() {
+        // Positional, keyed, and defaulted forms; no hardcoded 30/45 pair.
+        let cmds =
+            parse_trace("drift d0 60\ndrift d1 angle=135\ndrift d2").unwrap();
+        assert_eq!(cmds[0], TraceCmd::Drift { device: "d0".into(), angle: 60 });
+        assert_eq!(cmds[1], TraceCmd::Drift { device: "d1".into(), angle: 135 });
+        assert_eq!(cmds[2], TraceCmd::Drift { device: "d2".into(), angle: 45 });
+
+        assert!(parse_trace("drift d0 60 angle=45").is_err(),
+                "positional + keyed angle is ambiguous");
+        assert!(parse_trace("drift d0 60 70").is_err(), "two positionals");
+        assert!(parse_trace("drift d0 sixty").is_err(), "non-numeric angle");
+        // Positional values stay drift-only.
+        assert!(parse_trace("train d0 3").is_err(),
+                "train takes epochs=N, not a positional");
+    }
+
+    #[test]
+    fn method_spec_builds_plugins() {
+        let m = MethodSpec {
             method: Method::PriotS,
             frac_scored: 0.2,
             selection: Selection::Random,
             theta: Some(-5),
         };
         assert_eq!(m.plugin().name(), "priot-s");
-        let m = TraceMethod {
-            method: Method::StaticNiti,
-            frac_scored: 0.1,
-            selection: Selection::WeightBased,
-            theta: None,
-        };
+        let m = MethodSpec::niti_static();
         assert_eq!(m.plugin().name(), "static-niti");
     }
 }

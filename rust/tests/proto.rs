@@ -1,0 +1,404 @@
+//! Wire-protocol tests (no artifacts needed):
+//!
+//! * property-style codec round-trips: every `Request`/`Response`
+//!   variant encode→decode bit-identical (random payloads, all method
+//!   specs, exact f64 bits);
+//! * malformed frames — truncated at *every* byte offset, trailing
+//!   bytes, bad version, wrong frame type, unknown tags — are contextful
+//!   errors, never panics;
+//! * fixture-byte regressions pinning the v1 wire layout (mirrors the
+//!   `serial` fixture style);
+//! * transport behavior: mpsc pair and TCP loopback carry frames intact
+//!   (framing across back-to-back and large frames, clean close).
+
+use std::sync::Arc;
+
+use priot::config::{Method, Selection};
+use priot::prng::XorShift64;
+use priot::proto::codec::{
+    decode_request, decode_response, encode_request, encode_response,
+    PROTO_VERSION,
+};
+use priot::proto::{
+    ChannelTransport, MethodSpec, Priority, Request, Response, TcpTransport,
+    Transport,
+};
+use priot::ptest;
+use priot::serial::Dataset;
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+fn rand_device(rng: &mut XorShift64) -> String {
+    format!("dev-{:03}", rng.below(1000))
+}
+
+fn rand_dataset(rng: &mut XorShift64) -> Arc<Dataset> {
+    let n = 1 + rng.below(4);
+    let c = 1 + rng.below(3);
+    let h = 1 + rng.below(4);
+    let w = 1 + rng.below(4);
+    let images = (0..n * c * h * w).map(|_| rng.int_in(0, 255) as u8).collect();
+    let labels = (0..n).map(|_| rng.int_in(0, 9) as u8).collect();
+    Arc::new(Dataset { n, c, h, w, images, labels })
+}
+
+fn rand_method(rng: &mut XorShift64) -> MethodSpec {
+    let method = match rng.below(4) {
+        0 => Method::StaticNiti,
+        1 => Method::DynamicNiti,
+        2 => Method::Priot,
+        _ => Method::PriotS,
+    };
+    let selection = if rng.below(2) == 0 {
+        Selection::Random
+    } else {
+        Selection::WeightBased
+    };
+    let theta = if rng.below(2) == 0 {
+        None
+    } else {
+        Some(rng.int_in(-20, 20))
+    };
+    MethodSpec {
+        method,
+        frac_scored: rng.below(1001) as f64 / 1000.0,
+        selection,
+        theta,
+    }
+}
+
+fn rand_priority(rng: &mut XorShift64) -> Priority {
+    match rng.below(3) {
+        0 => Priority::Interactive,
+        1 => Priority::Batch,
+        _ => Priority::Background,
+    }
+}
+
+fn rand_request(rng: &mut XorShift64) -> Request {
+    let device = rand_device(rng);
+    match rng.below(5) {
+        0 => Request::Register {
+            device,
+            seed: rng.next_u64() as u32,
+            method: rand_method(rng),
+            train: rand_dataset(rng),
+            test: rand_dataset(rng),
+        },
+        1 => Request::Train { device, epochs: rng.below(100) },
+        2 => Request::Predict {
+            device,
+            image: (0..rng.below(64)).map(|_| rng.int_in(0, 255) as u8).collect(),
+        },
+        3 => Request::Evaluate { device },
+        _ => Request::Drift {
+            device,
+            train: rand_dataset(rng),
+            test: rand_dataset(rng),
+        },
+    }
+}
+
+fn rand_response(rng: &mut XorShift64) -> Response {
+    let device = rand_device(rng);
+    match rng.below(6) {
+        0 => Response::Registered { device },
+        1 => Response::TrainDone {
+            device,
+            epochs: rng.below(50),
+            steps: rng.next_u64() >> 16,
+            train_accuracy: rng.below(1001) as f64 / 1000.0,
+        },
+        2 => Response::Prediction { device, class: rng.below(10) },
+        3 => Response::Evaluation {
+            device,
+            accuracy: rng.below(1001) as f64 / 1000.0,
+            n: rng.below(10_000),
+        },
+        4 => Response::Drifted { device },
+        _ => Response::Error {
+            device,
+            message: format!("synthetic error #{}", rng.below(100)),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_roundtrip_bit_identical() {
+    ptest::check("proto-request-roundtrip", 31, 150, |rng| {
+        let id = rng.next_u64();
+        let priority = rand_priority(rng);
+        let req = rand_request(rng);
+        let frame = encode_request(id, priority, &req);
+        let (did, dprio, dreq) =
+            decode_request(&frame).map_err(|e| format!("decode: {e:#}"))?;
+        if (did, dprio) != (id, priority) {
+            return Err(format!("envelope diverged: ({did}, {dprio:?})"));
+        }
+        if dreq != req {
+            return Err(format!("request diverged:\n{dreq:?}\nvs\n{req:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn response_roundtrip_bit_identical() {
+    ptest::check("proto-response-roundtrip", 32, 200, |rng| {
+        let id = rng.next_u64();
+        let resp = rand_response(rng);
+        let frame = encode_response(id, &resp);
+        let (did, dresp) =
+            decode_response(&frame).map_err(|e| format!("decode: {e:#}"))?;
+        if did != id || dresp != resp {
+            return Err(format!("response diverged:\n{dresp:?}\nvs\n{resp:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn accuracy_travels_as_exact_bits() {
+    // Accuracies must survive the wire bit-for-bit, including awkward
+    // values a text encoding would mangle (subnormals, ulp-precise sums).
+    for bits in [
+        (0.1f64 + 0.2f64).to_bits(),
+        1.0f64.to_bits(),
+        f64::MIN_POSITIVE.to_bits() >> 1, // subnormal
+        0u64,
+        (-0.0f64).to_bits(),
+    ] {
+        let resp = Response::Evaluation {
+            device: "d".into(),
+            accuracy: f64::from_bits(bits),
+            n: 1,
+        };
+        let (_, back) = decode_response(&encode_response(1, &resp)).unwrap();
+        match back {
+            Response::Evaluation { accuracy, .. } => {
+                assert_eq!(accuracy.to_bits(), bits, "f64 bits mangled");
+            }
+            other => panic!("expected Evaluation, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Malformed frames
+// ---------------------------------------------------------------------------
+
+/// A small but fully-populated Register frame (every field kind: strings,
+/// scalars, method spec, two datasets).
+fn register_frame() -> Vec<u8> {
+    let mut rng = XorShift64::new(99);
+    let req = Request::Register {
+        device: "dev-x".into(),
+        seed: 7,
+        method: MethodSpec::priot_s(0.25, Selection::WeightBased).with_theta(-3),
+        train: rand_dataset(&mut rng),
+        test: rand_dataset(&mut rng),
+    };
+    encode_request(42, Priority::Background, &req)
+}
+
+#[test]
+fn truncated_frames_error_at_every_offset() {
+    let frame = register_frame();
+    assert!(decode_request(&frame).is_ok());
+    for cut in 0..frame.len() {
+        let err = match decode_request(&frame[..cut]) {
+            Ok(decoded) => {
+                panic!("truncation at {cut} decoded successfully: {decoded:?}")
+            }
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("version"),
+            "offset {cut}: uncontextful error {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let mut frame = register_frame();
+    frame.push(0xAB);
+    let err = decode_request(&frame).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+
+    let mut frame =
+        encode_response(5, &Response::Drifted { device: "d".into() });
+    frame.extend([1, 2, 3]);
+    let err = decode_response(&frame).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+}
+
+#[test]
+fn bad_version_is_a_contextful_error() {
+    let mut frame = register_frame();
+    assert_eq!(frame[0], PROTO_VERSION);
+    frame[0] = 9;
+    let err = decode_request(&frame).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version 9"), "{msg}");
+    assert!(msg.contains(&format!("version {PROTO_VERSION}")),
+            "should name the supported version: {msg}");
+}
+
+#[test]
+fn wrong_frame_type_is_rejected() {
+    let resp_frame =
+        encode_response(1, &Response::Registered { device: "d".into() });
+    let err = decode_request(&resp_frame).unwrap_err();
+    assert!(format!("{err:#}").contains("expected a request"), "{err:#}");
+
+    let req_frame = encode_request(1, Priority::Batch,
+                                   &Request::Evaluate { device: "d".into() });
+    let err = decode_response(&req_frame).unwrap_err();
+    assert!(format!("{err:#}").contains("expected a response"), "{err:#}");
+}
+
+#[test]
+fn unknown_tags_and_priorities_are_rejected() {
+    // Request frame header: version(1) + type(1) + id(8) = offset 10 is
+    // the priority byte, offset 11 the variant tag.
+    let frame = encode_request(1, Priority::Interactive,
+                               &Request::Evaluate { device: "d".into() });
+    let mut bad = frame.clone();
+    bad[10] = 7;
+    let err = decode_request(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown priority 7"), "{err:#}");
+    let mut bad = frame;
+    bad[11] = 99;
+    let err = decode_request(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown request tag 99"), "{err:#}");
+
+    // Response frame: offset 10 is the variant tag.
+    let mut bad =
+        encode_response(1, &Response::Registered { device: "d".into() });
+    bad[10] = 88;
+    let err = decode_response(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown response tag 88"), "{err:#}");
+}
+
+#[test]
+fn v1_wire_layout_is_pinned() {
+    // Fixture bytes in the `serial` regression style: if these change,
+    // the protocol version must be bumped, not silently drifted.
+    let mut want = vec![PROTO_VERSION, 0u8]; // version, request frame
+    want.extend(7u64.to_le_bytes()); // id
+    want.push(2); // priority: background
+    want.push(1); // tag: Train
+    want.extend(5u32.to_le_bytes()); // device name length
+    want.extend(b"dev-a");
+    want.extend(3u64.to_le_bytes()); // epochs
+    let req = Request::Train { device: "dev-a".into(), epochs: 3 };
+    assert_eq!(encode_request(7, Priority::Background, &req), want,
+               "v1 Train frame layout drifted");
+    let (id, prio, back) = decode_request(&want).unwrap();
+    assert_eq!((id, prio), (7, Priority::Background));
+    assert_eq!(back, req);
+
+    let mut want = vec![PROTO_VERSION, 1u8]; // version, response frame
+    want.extend(9u64.to_le_bytes()); // id
+    want.push(3); // tag: Evaluation
+    want.extend(5u32.to_le_bytes());
+    want.extend(b"dev-b");
+    want.extend(0.5f64.to_bits().to_le_bytes()); // accuracy bits
+    want.extend(24u64.to_le_bytes()); // n
+    let resp = Response::Evaluation {
+        device: "dev-b".into(),
+        accuracy: 0.5,
+        n: 24,
+    };
+    assert_eq!(encode_response(9, &resp), want,
+               "v1 Evaluation frame layout drifted");
+    assert_eq!(decode_response(&want).unwrap(), (9, resp));
+}
+
+#[test]
+fn implausible_dataset_dims_are_rejected() {
+    // A register frame whose dataset header would overflow n·c·h·w must
+    // be a clean error (same discipline as serial::load_dataset).
+    let mut frame = Vec::new();
+    frame.push(PROTO_VERSION);
+    frame.push(0); // request
+    frame.extend(1u64.to_le_bytes()); // id
+    frame.push(2); // priority
+    frame.push(4); // tag: Drift
+    frame.extend(1u32.to_le_bytes());
+    frame.extend(b"d");
+    for _ in 0..4 {
+        frame.extend(u32::MAX.to_le_bytes()); // n=c=h=w=u32::MAX
+    }
+    let err = decode_request(&frame).unwrap_err();
+    assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// Transports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_default_priorities() {
+    let d = || "d".to_string();
+    assert_eq!(Request::Predict { device: d(), image: vec![] }.priority(),
+               Priority::Interactive);
+    assert_eq!(Request::Evaluate { device: d() }.priority(), Priority::Batch);
+    assert_eq!(Request::Train { device: d(), epochs: 1 }.priority(),
+               Priority::Background);
+    assert!(Priority::Interactive.lane() < Priority::Batch.lane());
+    assert!(Priority::Batch.lane() < Priority::Background.lane());
+}
+
+#[test]
+fn channel_transport_roundtrip() {
+    let (mut a, mut b) = ChannelTransport::pair();
+    assert!(a.try_recv().unwrap().is_none(), "nothing sent yet");
+    a.send(b"hello".to_vec()).unwrap();
+    a.send(b"world".to_vec()).unwrap();
+    assert_eq!(b.recv().unwrap().unwrap(), b"hello");
+    assert_eq!(b.try_recv().unwrap().unwrap(), b"world");
+    assert!(b.try_recv().unwrap().is_none(), "drained");
+    b.send(b"back".to_vec()).unwrap();
+    assert_eq!(a.recv().unwrap().unwrap(), b"back");
+    drop(a);
+    assert!(b.recv().unwrap().is_none(), "closed peer is a clean None");
+}
+
+#[test]
+fn tcp_transport_loopback_roundtrip() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let echo = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::from_stream(stream);
+        while let Some(frame) = t.recv().unwrap() {
+            t.send(frame).unwrap();
+        }
+    });
+    let mut t = TcpTransport::connect(addr).unwrap();
+    assert!(t.try_recv().unwrap().is_none(), "nothing echoed yet");
+    t.send(b"ping".to_vec()).unwrap();
+    assert_eq!(t.recv().unwrap().unwrap(), b"ping");
+    // Back-to-back frames and a large frame exercise partial reads and
+    // the length-prefix framing.
+    let big: Vec<u8> = (0..100_000usize).map(|i| (i % 251) as u8).collect();
+    t.send(b"a".to_vec()).unwrap();
+    t.send(big.clone()).unwrap();
+    assert_eq!(t.recv().unwrap().unwrap(), b"a");
+    assert_eq!(t.recv().unwrap().unwrap(), big);
+    // Encoded frames survive the socket bit-identically.
+    let frame = register_frame();
+    t.send(frame.clone()).unwrap();
+    assert_eq!(t.recv().unwrap().unwrap(), frame);
+    drop(t);
+    echo.join().unwrap();
+}

@@ -1,21 +1,37 @@
 //! Serve-subsystem tests over a synthetic in-memory backbone — no
-//! artifacts required, so these run on any checkout:
+//! artifacts required, so these run on any checkout.  All traffic goes
+//! through the `priot::proto` wire boundary (`FleetClient` over
+//! `ChannelTransport` or TCP):
 //!
-//! * register/train/predict/evaluate round-trip through the request
-//!   channel, with results bit-identical to a standalone session;
-//! * drift mid-stream swaps a device's data in submission order;
+//! * register/train/predict/evaluate round-trip through a client, with
+//!   results bit-identical to a standalone session;
+//! * a scripted trace replayed over TCP loopback produces bit-identical
+//!   responses to the same trace over the in-process transport, for all
+//!   three methods (the wire-transport acceptance criterion);
+//! * priority scheduling: a Predict enqueued behind a long Train is
+//!   answered before the training completes its remaining epochs;
+//! * the per-device inflight window rejects backlog floods with a clean
+//!   error response;
+//! * requests/sec excludes server idle time before the first request;
 //! * error paths (unknown device, duplicate register, geometry mismatch)
 //!   come back as `Response::Error`, never a panic;
-//! * batched evaluation is bit-identical to per-sample evaluation for all
-//!   three method plugins (the `evaluate_batch` acceptance criterion).
+//! * batched evaluation is bit-identical to per-sample evaluation for
+//!   all method plugins.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use priot::config::Selection;
 use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::proto::codec::{decode_response, encode_request};
+use priot::proto::{
+    FleetClient, MethodSpec, Priority, Request, Response, TcpTransport,
+    Transport,
+};
 use priot::ptest::gen::{self, synthetic_backbone};
 use priot::serial::Dataset;
-use priot::session::{Backbone, FleetServer, Request, Response, Session};
+use priot::session::{Backbone, FleetServer, Session};
+use priot::session::serve::{parse_trace, replay_trace};
 
 fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
     Arc::new(gen::synthetic_dataset(seed, n))
@@ -40,30 +56,24 @@ fn serve_roundtrip_matches_standalone_session() {
     let test = synthetic_dataset(3, 32);
 
     let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
-    server
-        .submit(Request::Register {
-            device: "dev-a".into(),
-            seed: 7,
-            plugin: Box::new(Priot::new()),
-            train: Arc::clone(&train),
-            test: Arc::clone(&test),
-        })
+    let mut client = server.local_client();
+    let r0 = client
+        .register("dev-a", 7, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
         .unwrap();
-    server
-        .submit(Request::Train { device: "dev-a".into(), epochs: 2 })
-        .unwrap();
+    assert_eq!(r0, Response::Registered { device: "dev-a".into() });
+    let r1 = client.train("dev-a", 2).unwrap();
     let probe = test.image(0).to_vec();
-    server
-        .submit(Request::Predict { device: "dev-a".into(), image: probe })
-        .unwrap();
-    server.submit(Request::Evaluate { device: "dev-a".into() }).unwrap();
+    let r2 = client.predict("dev-a", probe).unwrap();
+    let r3 = client.evaluate("dev-a").unwrap();
+    // A zero-epoch train still gets its (empty) TrainDone, in order.
+    let r4 = client.train("dev-a", 0).unwrap();
+    drop(client);
     let report = server.join().unwrap();
 
-    assert_eq!(report.requests, 4);
+    assert_eq!(report.requests, 5);
     assert_eq!(report.errors(), 0, "{:?}", report.responses);
-    let dev = report.for_device("dev-a");
-    assert_eq!(dev.len(), 4, "one response per request");
-    assert_eq!(*dev[0], Response::Registered { device: "dev-a".into() });
+    assert_eq!(report.for_device("dev-a").len(), 5, "one response per request");
 
     // Reference: an identical standalone session (same seed, same stream).
     let mut solo = solo_session(&bb, Box::new(Priot::new()), 7);
@@ -71,30 +81,34 @@ fn serve_roundtrip_matches_standalone_session() {
     for _ in 0..2 {
         steps += solo.train_epoch(&train).unwrap().steps as u64;
     }
-    match dev[1] {
+    match r1 {
         Response::TrainDone { epochs, steps: s, .. } => {
-            assert_eq!(*epochs, 2);
-            assert_eq!(*s, steps, "executed steps, 2 epochs × 48 samples");
-            assert_eq!(*s, 2 * 48);
+            assert_eq!(epochs, 2);
+            assert_eq!(s, steps, "executed steps, 2 epochs × 48 samples");
+            assert_eq!(s, 2 * 48);
         }
         other => panic!("expected TrainDone, got {other:?}"),
     }
     let mut img = vec![0i32; test.image_len()];
     test.image_i32(0, &mut img);
     let want_class = solo.predict(&img);
-    assert_eq!(*dev[2],
+    assert_eq!(r2,
                Response::Prediction { device: "dev-a".into(), class: want_class },
                "raw-image predict matches the dataset pixel mapping");
     let want_acc = solo.evaluate_batch(&test, 8).unwrap();
-    match dev[3] {
+    match r3 {
         Response::Evaluation { accuracy, n, .. } => {
-            assert_eq!(*accuracy, want_acc, "served evaluation bit-identical");
-            assert_eq!(*n, test.n);
+            assert_eq!(accuracy, want_acc, "served evaluation bit-identical");
+            assert_eq!(n, test.n);
         }
         other => panic!("expected Evaluation, got {other:?}"),
     }
+    match r4 {
+        Response::TrainDone { epochs: 0, steps: 0, .. } => {}
+        other => panic!("expected empty TrainDone, got {other:?}"),
+    }
     assert!(report.requests_per_sec() > 0.0);
-    assert!(report.summary().contains("4 requests"));
+    assert!(report.summary().contains("5 requests"));
 }
 
 #[test]
@@ -106,50 +120,41 @@ fn serve_drift_mid_stream_changes_device_data() {
     let test_b = synthetic_dataset(8, 20);
 
     let server = FleetServer::builder(Arc::clone(&bb)).threads(3).build();
-    server
-        .submit(Request::Register {
-            device: "dev-d".into(),
-            seed: 11,
-            plugin: Box::new(PriotS::new(0.2, Selection::WeightBased)),
-            train: Arc::clone(&train_a),
-            test: Arc::clone(&test_a),
-        })
+    let mut client = server.local_client();
+    let spec = MethodSpec::priot_s(0.2, Selection::WeightBased);
+    client
+        .register("dev-d", 11, spec, Arc::clone(&train_a), Arc::clone(&test_a))
         .unwrap();
-    server.submit(Request::Train { device: "dev-d".into(), epochs: 1 }).unwrap();
-    server
-        .submit(Request::Drift {
-            device: "dev-d".into(),
-            train: Arc::clone(&train_b),
-            test: Arc::clone(&test_b),
-        })
+    let t1 = client.train("dev-d", 1).unwrap();
+    let d = client
+        .drift("dev-d", Arc::clone(&train_b), Arc::clone(&test_b))
         .unwrap();
-    server.submit(Request::Train { device: "dev-d".into(), epochs: 1 }).unwrap();
-    server.submit(Request::Evaluate { device: "dev-d".into() }).unwrap();
+    let t2 = client.train("dev-d", 1).unwrap();
+    let e = client.evaluate("dev-d").unwrap();
+    drop(client);
     let report = server.join().unwrap();
     assert_eq!(report.errors(), 0, "{:?}", report.responses);
 
     // Reference continuation: epoch on A, then epoch on B, evaluate on B.
-    let mut solo =
-        solo_session(&bb, Box::new(PriotS::new(0.2, Selection::WeightBased)), 11);
+    let mut solo = solo_session(
+        &bb, Box::new(PriotS::new(0.2, Selection::WeightBased)), 11);
     let steps_a = solo.train_epoch(&train_a).unwrap().steps as u64;
     let steps_b = solo.train_epoch(&train_b).unwrap().steps as u64;
     let want_acc = solo.evaluate_batch(&test_b, 8).unwrap();
 
-    let dev = report.for_device("dev-d");
-    assert_eq!(dev.len(), 5);
-    match (dev[1], dev[3]) {
+    match (t1, t2) {
         (Response::TrainDone { steps: s1, .. },
          Response::TrainDone { steps: s2, .. }) => {
-            assert_eq!((*s1, *s2), (steps_a, steps_b),
+            assert_eq!((s1, s2), (steps_a, steps_b),
                        "post-drift epoch runs on the drifted train set");
         }
         other => panic!("expected two TrainDones, got {other:?}"),
     }
-    assert_eq!(*dev[2], Response::Drifted { device: "dev-d".into() });
-    match dev[4] {
+    assert_eq!(d, Response::Drifted { device: "dev-d".into() });
+    match e {
         Response::Evaluation { accuracy, n, .. } => {
-            assert_eq!(*accuracy, want_acc, "evaluates the drifted test set");
-            assert_eq!(*n, test_b.n);
+            assert_eq!(accuracy, want_acc, "evaluates the drifted test set");
+            assert_eq!(n, test_b.n);
         }
         other => panic!("expected Evaluation, got {other:?}"),
     }
@@ -170,108 +175,87 @@ fn serve_error_paths_are_responses_not_panics() {
     });
 
     let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    let mut client = server.local_client();
     // 1: op for a device that was never registered
-    server.submit(Request::Train { device: "ghost".into(), epochs: 1 }).unwrap();
-    // 2: register with geometry-mismatched data → validated at Register
-    server
-        .submit(Request::Register {
-            device: "dev-g".into(),
-            seed: 1,
-            plugin: Box::new(Priot::new()),
-            train: Arc::clone(&wrong_geometry),
-            test: Arc::clone(&test),
-        })
+    let r = client.train("ghost", 1).unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("register first")), "{r:?}");
+    // 2: register with geometry-mismatched data → validated at dispatch
+    let r = client
+        .register("dev-g", 1, MethodSpec::priot(),
+                  Arc::clone(&wrong_geometry), Arc::clone(&test))
         .unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("geometry")), "{r:?}");
     // 3 + 4: a good register, then a duplicate of it
-    for _ in 0..2 {
-        server
-            .submit(Request::Register {
-                device: "dev-e".into(),
-                seed: 1,
-                plugin: Box::new(Niti::static_scale()),
-                train: Arc::clone(&train),
-                test: Arc::clone(&test),
-            })
-            .unwrap();
-    }
+    let r = client
+        .register("dev-e", 1, MethodSpec::niti_static(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(!r.is_error(), "first register succeeds: {r:?}");
+    let r = client
+        .register("dev-e", 1, MethodSpec::niti_static(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("already registered")), "{r:?}");
     // 5: predict with a wrong-sized raw image
-    server
-        .submit(Request::Predict { device: "dev-e".into(), image: vec![1, 2, 3] })
-        .unwrap();
+    let r = client.predict("dev-e", vec![1, 2, 3]).unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("pixels")), "{r:?}");
     // 6: drift to mismatched data is rejected up front
-    server
-        .submit(Request::Drift {
-            device: "dev-e".into(),
-            train: Arc::clone(&wrong_geometry),
-            test: Arc::clone(&test),
-        })
+    let r = client
+        .drift("dev-e", Arc::clone(&wrong_geometry), Arc::clone(&test))
         .unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("geometry")), "{r:?}");
+    drop(client);
     let report = server.join().unwrap();
-
     assert_eq!(report.requests, 6);
     assert_eq!(report.errors(), 5, "{:?}", report.responses);
-    let ghost = report.for_device("ghost");
-    assert!(matches!(ghost[0], Response::Error { message, .. }
-                     if message.contains("register first")),
-            "{ghost:?}");
-    let dev_g = report.for_device("dev-g");
-    assert!(matches!(dev_g[0], Response::Error { message, .. }
-                     if message.contains("geometry")),
-            "{dev_g:?}");
-    let dev_e = report.for_device("dev-e");
-    assert_eq!(dev_e.len(), 4, "registered + duplicate + predict + drift");
-    assert!(!dev_e[0].is_error(), "first register succeeds");
-    // Dispatcher-side validation errors (duplicate register, bad drift)
-    // may overtake worker-side op errors (bad predict) in arrival order,
-    // so assert on the set of messages, not their order.
-    let messages: Vec<&str> = dev_e[1..]
-        .iter()
-        .map(|r| match r {
-            Response::Error { message, .. } => message.as_str(),
-            other => panic!("expected Error, got {other:?}"),
-        })
-        .collect();
-    for want in ["already registered", "pixels", "geometry"] {
-        assert!(messages.iter().any(|m| m.contains(want)),
-                "no error mentioning {want:?} in {messages:?}");
-    }
 }
 
 #[test]
 fn serve_interleaves_many_devices_deterministically_per_device() {
-    // Several devices with different methods, all mid-adaptation at once:
-    // per-device responses must be bit-identical to standalone sessions
-    // regardless of how the pool interleaves their epochs.
+    // Several devices with different methods, all mid-adaptation at once
+    // (pipelined submits, many workers): per-device responses must be
+    // bit-identical to standalone sessions regardless of how the pool
+    // interleaves their epochs.  Evaluations are pinned to the
+    // background lane so they stay behind training, preserving
+    // submission order per device.
     let bb = synthetic_backbone(12);
     let train = synthetic_dataset(13, 32);
     let test = synthetic_dataset(14, 24);
-    let mk: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
-        ("dev-niti", || Box::new(Niti::static_scale())),
-        ("dev-priot", || Box::new(Priot::new())),
-        ("dev-priot-s", || Box::new(PriotS::new(0.1, Selection::Random))),
+    let mk: Vec<(&str, MethodSpec, fn() -> Box<dyn MethodPlugin>)> = vec![
+        ("dev-niti", MethodSpec::niti_static(),
+         || Box::new(Niti::static_scale())),
+        ("dev-priot", MethodSpec::priot(), || Box::new(Priot::new())),
+        ("dev-priot-s", MethodSpec::priot_s(0.1, Selection::Random),
+         || Box::new(PriotS::new(0.1, Selection::Random))),
     ];
     let server = FleetServer::builder(Arc::clone(&bb)).threads(3).build();
-    for (i, (name, make)) in mk.iter().enumerate() {
-        server
-            .submit(Request::Register {
-                device: (*name).into(),
-                seed: (i + 1) as u32,
-                plugin: make(),
-                train: Arc::clone(&train),
-                test: Arc::clone(&test),
-            })
+    let mut client = server.local_client();
+    for (i, (name, spec, _)) in mk.iter().enumerate() {
+        let r = client
+            .register(name, (i + 1) as u32, spec.clone(), Arc::clone(&train),
+                      Arc::clone(&test))
             .unwrap();
+        assert!(!r.is_error(), "{r:?}");
     }
-    for (name, _) in &mk {
-        server
+    for (name, _, _) in &mk {
+        client
             .submit(Request::Train { device: (*name).into(), epochs: 3 })
             .unwrap();
-        server.submit(Request::Evaluate { device: (*name).into() }).unwrap();
+        client
+            .submit_with(Request::Evaluate { device: (*name).into() },
+                         Priority::Background)
+            .unwrap();
     }
+    drop(client);
     let report = server.join().unwrap();
     assert_eq!(report.errors(), 0, "{:?}", report.responses);
 
-    for (i, (name, make)) in mk.iter().enumerate() {
+    for (i, (name, _, make)) in mk.iter().enumerate() {
         let mut solo = solo_session(&bb, make(), (i + 1) as u32);
         for _ in 0..3 {
             solo.train_epoch(&train).unwrap();
@@ -288,14 +272,264 @@ fn serve_interleaves_many_devices_deterministically_per_device() {
 }
 
 #[test]
-fn batched_evaluation_bit_identical_for_all_method_plugins() {
-    // The acceptance criterion: `Session::evaluate_batch` (and the batched
-    // engine forward underneath) must be bit-identical to per-sample
-    // evaluation for NITI, PRIOT, and PRIOT-S — including odd batch sizes
-    // with a remainder chunk and batches larger than the dataset.
+fn predict_overtakes_queued_training_epochs() {
+    // The priority-scheduling acceptance criterion: a Predict submitted
+    // behind a long Train on the same device is answered before the
+    // training completes its remaining epochs.
     let bb = synthetic_backbone(15);
-    let train = synthetic_dataset(16, 40);
-    let test = synthetic_dataset(17, 37); // prime-ish: exercises remainders
+    let train = synthetic_dataset(16, 32);
+    let test = synthetic_dataset(17, 8);
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-p", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(!r.is_error(), "{r:?}");
+    let train_id = client
+        .submit(Request::Train { device: "dev-p".into(), epochs: 30 })
+        .unwrap();
+    let predict_id = client
+        .submit(Request::Predict {
+            device: "dev-p".into(),
+            image: test.image(0).to_vec(),
+        })
+        .unwrap();
+    // Stream order is completion order: the interactive predict must come
+    // back first, long before the 30-epoch train finishes.
+    let (first_id, first) = client.next_response().unwrap().unwrap();
+    assert_eq!(first_id, predict_id,
+               "predict answered before the train: got {first:?}");
+    assert!(matches!(first, Response::Prediction { .. }), "{first:?}");
+    let done = client.wait(train_id).unwrap();
+    match done {
+        Response::TrainDone { epochs, .. } => assert_eq!(epochs, 30),
+        other => panic!("expected TrainDone, got {other:?}"),
+    }
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn inflight_window_bounds_per_device_backlog() {
+    let bb = synthetic_backbone(18);
+    let train = synthetic_dataset(19, 48);
+    let test = synthetic_dataset(20, 8);
+
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(1)
+        .window(2)
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-w", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(!r.is_error(), "{r:?}");
+    // Two slow trains fill the window; the third bounces immediately.
+    let t1 = client
+        .submit(Request::Train { device: "dev-w".into(), epochs: 4 })
+        .unwrap();
+    let t2 = client
+        .submit(Request::Train { device: "dev-w".into(), epochs: 4 })
+        .unwrap();
+    let t3 = client
+        .submit(Request::Train { device: "dev-w".into(), epochs: 4 })
+        .unwrap();
+    let bounced = client.wait(t3).unwrap();
+    assert!(matches!(&bounced, Response::Error { message, .. }
+                     if message.contains("inflight window")),
+            "{bounced:?}");
+    // The admitted requests still complete normally.
+    for id in [t1, t2] {
+        match client.wait(id).unwrap() {
+            Response::TrainDone { epochs, .. } => assert_eq!(epochs, 4),
+            other => panic!("expected TrainDone, got {other:?}"),
+        }
+    }
+    drop(client);
+    let report = server.join().unwrap();
+    assert_eq!(report.errors(), 1, "{:?}", report.responses);
+}
+
+#[test]
+fn report_clock_starts_at_first_request() {
+    // Regression: requests/sec used to include server idle time before
+    // the first request arrived.  The clock now runs first request →
+    // last response.
+    let bb = synthetic_backbone(21);
+    let train = synthetic_dataset(22, 8);
+    let test = synthetic_dataset(23, 8);
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    std::thread::sleep(Duration::from_millis(400)); // pre-traffic idle
+    let mut client = server.local_client();
+    client
+        .register("dev-c", 1, MethodSpec::niti_static(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    let r = client.evaluate("dev-c").unwrap();
+    assert!(!r.is_error(), "{r:?}");
+    std::thread::sleep(Duration::from_millis(200)); // post-traffic idle
+    drop(client);
+    let report = server.join().unwrap();
+    assert!(report.wall_secs < 0.35,
+            "wall clock must exclude idle time before the first request \
+             (and after the last response), got {}s", report.wall_secs);
+    assert!(report.requests_per_sec() > 0.0);
+}
+
+/// A scripted trace covering all three methods plus an arbitrary
+/// positional drift angle (the trace-syntax satellite).
+const TRANSPORT_TRACE: &str = "\
+register dev-n seed=1 method=static-niti angle=7
+register dev-p seed=2 method=priot angle=7
+register dev-s seed=3 method=priot-s frac=0.2 selection=weight angle=7
+train dev-n epochs=2
+train dev-p epochs=2
+train dev-s epochs=2
+predict dev-n sample=1
+predict dev-p sample=1
+predict dev-s sample=1
+evaluate dev-n
+evaluate dev-p
+evaluate dev-s
+drift dev-s 11
+train dev-s epochs=1
+evaluate dev-s
+";
+
+/// Symbolic angle → deterministic synthetic datasets, identical across
+/// every server in the test.
+fn trace_pair(angle: u32) -> anyhow::Result<(Arc<Dataset>, Arc<Dataset>)> {
+    Ok((
+        synthetic_dataset(1000 + angle as u64, 40),
+        synthetic_dataset(2000 + angle as u64, 24),
+    ))
+}
+
+#[test]
+fn tcp_and_channel_trace_replay_bit_identical() {
+    // The wire-transport acceptance criterion: one scripted trace, three
+    // methods, replayed through a FleetClient over TCP loopback and over
+    // the in-process channel transport — bit-identical response streams,
+    // and bit-identical to standalone sessions.
+    let cmds = parse_trace(TRANSPORT_TRACE).unwrap();
+
+    let bb = synthetic_backbone(24);
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    let mut client = server.local_client();
+    let channel_responses =
+        replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+    drop(client);
+    server.join().unwrap();
+
+    let mut server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    let addr = server.listen("127.0.0.1:0").unwrap();
+    let mut client = FleetClient::connect(addr).unwrap();
+    let tcp_responses =
+        replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+    drop(client);
+    server.join().unwrap();
+
+    assert_eq!(channel_responses, tcp_responses,
+               "transports must carry bit-identical response streams");
+    assert_eq!(channel_responses.len(), cmds.len());
+    assert!(channel_responses.iter().all(|r| !r.is_error()),
+            "{channel_responses:?}");
+
+    // Standalone reference for the drifting PRIOT-S device: the serve
+    // path must match a plain Session executing the same op sequence.
+    let (train7, test7) = trace_pair(7).unwrap();
+    let (train11, test11) = trace_pair(11).unwrap();
+    let mut solo = solo_session(
+        &bb, Box::new(PriotS::new(0.2, Selection::WeightBased)), 3);
+    for _ in 0..2 {
+        solo.train_epoch(&train7).unwrap();
+    }
+    let mut img = vec![0i32; test7.image_len()];
+    test7.image_i32(1, &mut img);
+    let want_class = solo.predict(&img);
+    let want_acc7 = solo.evaluate_batch(&test7, 8).unwrap();
+    solo.train_epoch(&train11).unwrap();
+    let want_acc11 = solo.evaluate_batch(&test11, 8).unwrap();
+
+    let dev_s: Vec<&Response> = channel_responses
+        .iter()
+        .filter(|r| r.device() == "dev-s")
+        .collect();
+    assert_eq!(dev_s.len(), 7); // register, train, predict, eval, drift, train, eval
+    assert_eq!(*dev_s[2],
+               Response::Prediction { device: "dev-s".into(), class: want_class });
+    match (dev_s[3], dev_s[6]) {
+        (Response::Evaluation { accuracy: a7, .. },
+         Response::Evaluation { accuracy: a11, .. }) => {
+            assert_eq!(*a7, want_acc7, "pre-drift eval diverged from solo");
+            assert_eq!(*a11, want_acc11, "post-drift eval diverged from solo");
+        }
+        other => panic!("expected two Evaluations, got {other:?}"),
+    }
+}
+
+#[test]
+fn requests_after_server_drop_get_error_responses() {
+    // The abort path (Drop without join) must not strand clients: a
+    // request submitted after the drop is answered with an Error by the
+    // detached dispatcher instead of waiting on a worker pool that no
+    // longer exists.
+    let bb = synthetic_backbone(28);
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    let mut client = server.local_client();
+    drop(server);
+    let r = client.train("dev-x", 1).unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("shut down")),
+            "{r:?}");
+}
+
+#[test]
+fn malformed_frames_are_answered_by_id_and_do_not_desync() {
+    // A frame the server cannot decode must still be answered with the
+    // frame's own request id (salvaged from the fixed header) so a
+    // synchronous client waiting on it errors instead of hanging — and
+    // the connection must keep serving well-formed traffic afterwards.
+    let bb = synthetic_backbone(30);
+    let mut server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    let addr = server.listen("127.0.0.1:0").unwrap();
+    let mut t = TcpTransport::connect(addr).unwrap();
+    let mut frame = encode_request(5, Priority::Batch,
+                                   &Request::Evaluate { device: "d".into() });
+    frame[11] = 99; // corrupt the variant tag; header (and id 5) intact
+    t.send(frame).unwrap();
+    let (id, resp) = decode_response(&t.recv().unwrap().unwrap()).unwrap();
+    assert_eq!(id, 5, "server echoes the salvaged request id");
+    assert!(matches!(&resp, Response::Error { message, .. }
+                     if message.contains("bad request frame")),
+            "{resp:?}");
+    // Same connection, well-formed request: still served.
+    let mut client = FleetClient::over(t);
+    let r = client.train("ghost", 1).unwrap();
+    assert!(matches!(&r, Response::Error { message, .. }
+                     if message.contains("register first")),
+            "{r:?}");
+    drop(client);
+    // The malformed frame counts as one (failed) request in the report,
+    // like any other error.
+    let report = server.join().unwrap();
+    assert_eq!(report.requests, 2, "{:?}", report.responses);
+    assert_eq!(report.errors(), 2, "{:?}", report.responses);
+}
+
+#[test]
+fn batched_evaluation_bit_identical_for_all_method_plugins() {
+    // `Session::evaluate_batch` (and the batched engine forward
+    // underneath) must be bit-identical to per-sample evaluation for
+    // NITI, PRIOT, and PRIOT-S — including odd batch sizes with a
+    // remainder chunk and batches larger than the dataset.
+    let bb = synthetic_backbone(25);
+    let train = synthetic_dataset(26, 40);
+    let test = synthetic_dataset(27, 37); // prime-ish: exercises remainders
     let mk: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
         ("static-niti", || Box::new(Niti::static_scale())),
         ("dynamic-niti", || Box::new(Niti::dynamic())),
