@@ -46,17 +46,29 @@ def build_datasets(out: str, log, quick: bool):
     n_pre = 2048 if quick else 8192
     n_dev = 256 if quick else 1024
     paths = {}
+    # Device (train/test @ angle) sets use the canonical device_seed
+    # convention shared with rust/src/datagen, so the artifact files are
+    # byte-identical to what the Rust side generates in-process for the
+    # same (task, n, seed, angle) tuple.  Pretrain/pretest sets exist only
+    # as artifacts and keep their own fixed seeds.
+    dev = ds.device_seed
     jobs = [
         ("digits_pretrain", ds.make_rotdigits, n_pre, 1000, 0.0),
         ("digits_pretest", ds.make_rotdigits, 1024, 2000, 0.0),
-        ("digits_train_a30", ds.make_rotdigits, n_dev, 3000, 30.0),
-        ("digits_test_a30", ds.make_rotdigits, n_dev, 4000, 30.0),
-        ("digits_train_a45", ds.make_rotdigits, n_dev, 5000, 45.0),
-        ("digits_test_a45", ds.make_rotdigits, n_dev, 6000, 45.0),
+        ("digits_train_a30", ds.make_rotdigits, n_dev,
+         dev("digits", "train", 30), 30.0),
+        ("digits_test_a30", ds.make_rotdigits, n_dev,
+         dev("digits", "test", 30), 30.0),
+        ("digits_train_a45", ds.make_rotdigits, n_dev,
+         dev("digits", "train", 45), 45.0),
+        ("digits_test_a45", ds.make_rotdigits, n_dev,
+         dev("digits", "test", 45), 45.0),
         ("patterns_pretrain", ds.make_rotpatterns, n_pre // 2, 7000, 0.0),
         ("patterns_pretest", ds.make_rotpatterns, 1024, 8000, 0.0),
-        ("patterns_train_a30", ds.make_rotpatterns, n_dev, 9000, 30.0),
-        ("patterns_test_a30", ds.make_rotpatterns, n_dev, 10000, 30.0),
+        ("patterns_train_a30", ds.make_rotpatterns, n_dev,
+         dev("patterns", "train", 30), 30.0),
+        ("patterns_test_a30", ds.make_rotpatterns, n_dev,
+         dev("patterns", "test", 30), 30.0),
     ]
     os.makedirs(os.path.join(out, "data"), exist_ok=True)
     for name, fn, n, seed, angle in jobs:

@@ -2,9 +2,9 @@
 
 The paper's transfer-learning protocol is: pre-train on an upright
 distribution, then adapt on-device to the *same classes under rotation*
-(30deg / 45deg covariate shift).  What exercises PRIOT is this class-conditional
-structure + rotation shift, not the MNIST pixels themselves, so we generate
-procedural datasets with the same shape:
+(30deg / 45deg covariate shift).  What exercises PRIOT is this
+class-conditional structure + rotation shift, not the MNIST pixels
+themselves, so we generate procedural datasets with the same shape:
 
 * ``RotDigits``  — 28x28x1, 10 classes.  Each class is a fixed stroke
   skeleton (polylines/ellipses in the unit square) rendered with random
@@ -19,6 +19,34 @@ coordinate field (patterns), so rotated sets have no resampling artifacts.
 Pixels are exported as u8 0..255; the integer pipeline maps them to int8
 activations via ``p >> 1`` (0..127).  All generation is seeded and
 deterministic.
+
+Cross-language contract
+-----------------------
+
+``rust/src/datagen/`` implements this generator **bit-for-bit** so the Rust
+side can synthesize any (task, n, seed, angle) tuple without pre-built
+artifacts.  Like ``intnet.XorShift32`` (the score-init RNG mirrored in
+``rust/src/prng``), everything here is written against portable primitives
+that produce identical f64 bits in numpy and in Rust:
+
+* ``PortableRng`` — a SplitMix64 counter generator.  Draw ``k`` (0-based)
+  mixes state ``seed + (k+1)*GAMMA``; uniforms are ``(z >> 11) * 2^-53``.
+  Being counter-based it vectorizes in numpy while the Rust port draws
+  scalars in the same order.
+* ``p_sin``/``p_cos``/``p_exp``/``p_tanh`` — fixed-coefficient polynomial
+  kernels using only IEEE-754 ops (+, -, *, /, sqrt, floor), which are
+  exactly rounded and therefore platform- and language-independent.  libm
+  ``sin``/``cos``/``exp`` are *not* (numpy's SIMD kernels and glibc may
+  disagree in the last ulp), so they are never called here.
+* Gaussian-ish noise is Irwin–Hall (four uniforms summed, variance
+  normalized); shuffles are Fisher–Yates over ``raw % bound``.
+* The digit stroke table is a frozen literal (it used to be computed with
+  ``np.linspace``/trig at import time) shared verbatim with the Rust port.
+
+Any edit to the math here must be mirrored in ``rust/src/datagen`` and the
+golden fixtures regenerated (``python -m compile.goldens``); the Rust test
+suite pins the parity via checked-in sample hashes
+(``rust/tests/fixtures/datagen``).
 """
 
 from __future__ import annotations
@@ -26,48 +54,405 @@ from __future__ import annotations
 import numpy as np
 
 # ---------------------------------------------------------------------------
+# Portable math kernels (bit-identical to rust/src/datagen/portable.rs)
+# ---------------------------------------------------------------------------
+
+TWO_PI = 6.283185307179586
+INV_TWO_PI = 0.15915494309189535
+RAD_PER_DEG = 0.017453292519943295
+LN2 = 0.6931471805599453
+LOG2E = 1.4426950408889634
+#: sqrt(3): normalizes the Irwin–Hall(4) sum to unit variance.
+NOISE_NORM = 1.7320508075688772
+#: 2^-53 — top-53-bit uniform scaling.
+U53 = 1.0 / 9007199254740992.0
+
+_SIN_COEFFS = (
+    -8.22063524662433e-18,    # 1/19!
+    2.8114572543455206e-15,   # 1/17!
+    -7.647163731819816e-13,   # 1/15!
+    1.6059043836821613e-10,   # 1/13!
+    -2.505210838544172e-08,   # 1/11!
+    2.7557319223985893e-06,   # 1/9!
+    -0.0001984126984126984,   # 1/7!
+    0.008333333333333333,     # 1/5!
+    -0.16666666666666666,     # 1/3!
+)
+
+_COS_COEFFS = (
+    4.110317623312165e-19,    # 1/20!
+    -1.5619206968586225e-16,  # 1/18!
+    4.779477332387385e-14,    # 1/16!
+    -1.1470745597729725e-11,  # 1/14!
+    2.08767569878681e-09,     # 1/12!
+    -2.755731922398589e-07,   # 1/10!
+    2.48015873015873e-05,     # 1/8!
+    -0.001388888888888889,    # 1/6!
+    0.041666666666666664,     # 1/4!
+    -0.5,                     # 1/2!
+)
+
+_EXP_COEFFS = (
+    2.08767569878681e-09,     # 1/12!
+    2.505210838544172e-08,    # 1/11!
+    2.755731922398589e-07,    # 1/10!
+    2.7557319223985893e-06,   # 1/9!
+    2.48015873015873e-05,     # 1/8!
+    0.0001984126984126984,    # 1/7!
+    0.001388888888888889,     # 1/6!
+    0.008333333333333333,     # 1/5!
+    0.041666666666666664,     # 1/4!
+    0.16666666666666666,      # 1/3!
+    0.5,                      # 1/2!
+    1.0,                      # 1/1!
+    1.0,                      # 1/0!
+)
+
+
+def p_sin(x):
+    """Portable sine: range-reduce to [-pi, pi], odd Taylor through y^19."""
+    k = np.floor(x * INV_TWO_PI + 0.5)
+    y = x - k * TWO_PI
+    y2 = y * y
+    p = _SIN_COEFFS[0]
+    for c in _SIN_COEFFS[1:]:
+        p = p * y2 + c
+    return y + y * y2 * p
+
+
+def p_cos(x):
+    """Portable cosine: range-reduce to [-pi, pi], even Taylor through y^20."""
+    k = np.floor(x * INV_TWO_PI + 0.5)
+    y = x - k * TWO_PI
+    y2 = y * y
+    p = _COS_COEFFS[0]
+    for c in _COS_COEFFS[1:]:
+        p = p * y2 + c
+    return 1.0 + y2 * p
+
+
+def p_exp(x):
+    """Portable exp: 2^k * poly(r) with r = x - k*ln2, Taylor through r^12."""
+    k = np.floor(x * LOG2E + 0.5)
+    r = x - k * LN2
+    p = _EXP_COEFFS[0]
+    for c in _EXP_COEFFS[1:]:
+        p = p * r + c
+    return np.ldexp(p, np.int64(k) if np.isscalar(k) else k.astype(np.int64))
+
+
+def p_tanh(x):
+    """Portable tanh via ``p_exp``: (e^{2x} - 1) / (e^{2x} + 1)."""
+    t = p_exp(x + x)
+    return (t - 1.0) / (t + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Portable PRNG (SplitMix64 as a counter generator)
+# ---------------------------------------------------------------------------
+
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+class PortableRng:
+    """SplitMix64 drawn as a counter: draw ``k`` (0-based, across the whole
+    stream) mixes ``seed + (k+1)*GAMMA``, so numpy can vectorize a block of
+    draws while the scalar Rust port consumes the identical sequence."""
+
+    def __init__(self, seed: int):
+        self.seed = np.uint64(seed)
+        self.count = 0
+
+    def raw(self, n: int) -> np.ndarray:
+        """The next ``n`` raw u64 draws."""
+        idx = np.arange(self.count + 1, self.count + n + 1, dtype=np.uint64)
+        self.count += n
+        z = self.seed + idx * _GAMMA
+        z = z ^ (z >> np.uint64(30))
+        z = z * _MIX1
+        z = z ^ (z >> np.uint64(27))
+        z = z * _MIX2
+        return z ^ (z >> np.uint64(31))
+
+    def f64(self, n: int) -> np.ndarray:
+        """``n`` uniforms in [0, 1) — top 53 bits scaled by 2^-53."""
+        return (self.raw(n) >> np.uint64(11)).astype(np.float64) * U53
+
+    def uniform(self, lo: float, hi: float):
+        """One uniform in [lo, hi)."""
+        return lo + (hi - lo) * self.f64(1)[0]
+
+    def noise(self, scale: float, n: int) -> np.ndarray:
+        """``n`` Irwin–Hall(4) noise values: ~N(0, scale^2), 4 draws each."""
+        u = self.f64(4 * n)
+        s = u[0::4] + u[1::4] + u[2::4] + u[3::4]
+        return (s - 2.0) * NOISE_NORM * scale
+
+    def below(self, bound: int) -> int:
+        """One draw in [0, bound) (modulo; the tiny bias is irrelevant and
+        identical across languages, which is what matters)."""
+        return int(self.raw(1)[0] % np.uint64(bound))
+
+    def permutation(self, n: int) -> np.ndarray:
+        """Fisher–Yates permutation of 0..n (n-1 draws)."""
+        arr = np.arange(n, dtype=np.int64)
+        for i in range(n - 1, 0, -1):
+            j = self.below(i + 1)
+            arr[i], arr[j] = arr[j], arr[i]
+        return arr
+
+
+# ---------------------------------------------------------------------------
 # Digit skeletons
 # ---------------------------------------------------------------------------
 
-
-def _ellipse(cx, cy, rx, ry, n=20, t0=0.0, t1=2 * np.pi):
-    t = np.linspace(t0, t1, n)
-    return np.stack([cx + rx * np.cos(t), cy + ry * np.sin(t)], axis=1)
-
-
-#: Per-class polylines, coordinates in [0,1]^2 (y down).
+# Per-class stroke polylines, coordinates in [0,1]^2 (y down).  Frozen
+# literals (previously computed with np.linspace/cos/sin at import time) so
+# the Python and Rust generators share one exact table.
 DIGIT_STROKES = {
-    0: [_ellipse(0.5, 0.5, 0.28, 0.38)],
-    1: [np.array([[0.35, 0.3], [0.55, 0.12], [0.55, 0.88]]),
-        np.array([[0.35, 0.88], [0.75, 0.88]])],
-    2: [_ellipse(0.5, 0.32, 0.25, 0.2, n=12, t0=np.pi, t1=2.25 * np.pi),
-        np.array([[0.68, 0.45], [0.28, 0.85]]),
-        np.array([[0.28, 0.85], [0.75, 0.85]])],
-    3: [_ellipse(0.5, 0.3, 0.22, 0.18, n=12, t0=0.75 * np.pi, t1=2.25 * np.pi),
-        _ellipse(0.5, 0.68, 0.24, 0.2, n=12, t0=1.75 * np.pi, t1=3.25 * np.pi)],
-    4: [np.array([[0.62, 0.12], [0.25, 0.6], [0.78, 0.6]]),
-        np.array([[0.62, 0.12], [0.62, 0.88]])],
-    5: [np.array([[0.72, 0.15], [0.32, 0.15], [0.3, 0.45]]),
-        _ellipse(0.5, 0.62, 0.24, 0.22, n=14, t0=1.6 * np.pi, t1=3.1 * np.pi)],
-    6: [_ellipse(0.48, 0.65, 0.22, 0.22),
-        np.array([[0.62, 0.15], [0.38, 0.5]])],
-    7: [np.array([[0.25, 0.15], [0.75, 0.15], [0.42, 0.85]])],
-    8: [_ellipse(0.5, 0.3, 0.2, 0.17), _ellipse(0.5, 0.68, 0.24, 0.2)],
-    9: [_ellipse(0.52, 0.35, 0.22, 0.22),
-        np.array([[0.72, 0.4], [0.6, 0.85]])],
+    0: [
+        [
+            (0.78, 0.5),
+            (0.7648288276761777, 0.6233857982977797),
+            (0.7209593426309903, 0.7334008308220737),
+            (0.6531454842742795, 0.8181232617397609),
+            (0.5687359363994238, 0.8683721010569456),
+            (0.476877783267747, 0.8787021073425345),
+            (0.3875252810971686, 0.8479938641289219),
+            (0.3103611599447925, 0.7795750860557901),
+            (0.25374734966218304, 0.680860009354088),
+            (0.2238188350472377, 0.5625459443066789),
+            (0.2238188350472377, 0.4374540556933212),
+            (0.25374734966218304, 0.31913999064591203),
+            (0.3103611599447924, 0.2204249139442101),
+            (0.38752528109716844, 0.15200613587107825),
+            (0.4768777832677468, 0.12129789265746543),
+            (0.5687359363994237, 0.13162789894305443),
+            (0.6531454842742794, 0.1818767382602391),
+            (0.7209593426309902, 0.26659916917792614),
+            (0.7648288276761777, 0.37661420170222015),
+            (0.78, 0.4999999999999999),
+        ],
+    ],
+    1: [
+        [
+            (0.35, 0.3),
+            (0.55, 0.12),
+            (0.55, 0.88),
+        ],
+        [
+            (0.35, 0.88),
+            (0.75, 0.88),
+        ],
+    ],
+    2: [
+        [
+            (0.25, 0.32),
+            (0.26576256875005955, 0.2501071640801803),
+            (0.3110626064114354, 0.189027853210943),
+            (0.3801877533199857, 0.14446420208654892),
+            (0.4644212904316787, 0.12203571162381346),
+            (0.5531413223882442, 0.12457062680576808),
+            (0.6351602043638993, 0.1517492934337637),
+            (0.7001353102310901, 0.20014446669773056),
+            (0.7398732434036244, 0.26365348863171406),
+            (0.7493630286525634, 0.3342678366398465),
+            (0.7274079988386295, 0.4030830026003774),
+            (0.676776695296637, 0.4614213562373095),
+        ],
+        [
+            (0.68, 0.45),
+            (0.28, 0.85),
+        ],
+        [
+            (0.28, 0.85),
+            (0.75, 0.85),
+        ],
+    ],
+    3: [
+        [
+            (0.34443650813895954, 0.42727922061357854),
+            (0.29387106050005246, 0.3629035523278378),
+            (0.2805605347857442, 0.2871589470241382),
+            (0.3069106222952037, 0.21373518239038974),
+            (0.3681589133675036, 0.15590257663361515),
+            (0.453235636298345, 0.12411356412519131),
+            (0.5467643637016547, 0.12411356412519126),
+            (0.6318410866324963, 0.1559025766336151),
+            (0.6930893777047962, 0.2137351823903897),
+            (0.7194394652142557, 0.2871589470241381),
+            (0.7061289394999477, 0.36290355232783755),
+            (0.6555634918610405, 0.4272792206135785),
+        ],
+        [
+            (0.6697056274847714, 0.5385786437626905),
+            (0.7248679339999428, 0.6101071640801803),
+            (0.7393885075064608, 0.6942678366398466),
+            (0.7106429574961414, 0.7758497973440114),
+            (0.6438266399627233, 0.8401082481848721),
+            (0.5510156694927143, 0.875429373194232),
+            (0.4489843305072858, 0.875429373194232),
+            (0.3561733600372768, 0.8401082481848722),
+            (0.28935704250385863, 0.7758497973440114),
+            (0.2606114924935391, 0.6942678366398464),
+            (0.27513206600005735, 0.6101071640801801),
+            (0.3302943725152287, 0.5385786437626905),
+        ],
+    ],
+    4: [
+        [
+            (0.62, 0.12),
+            (0.25, 0.6),
+            (0.78, 0.6),
+        ],
+        [
+            (0.62, 0.12),
+            (0.62, 0.88),
+        ],
+    ],
+    5: [
+        [
+            (0.72, 0.15),
+            (0.32, 0.15),
+            (0.3, 0.45),
+        ],
+        [
+            (0.5741640786499873, 0.4107675664150662),
+            (0.6502844474091952, 0.44847164210609103),
+            (0.7068727200512118, 0.5084688321610101),
+            (0.7365742594235962, 0.5829614509036516),
+            (0.7355288302734593, 0.6622678778178159),
+            (0.703872304429165, 0.7360808537033493),
+            (0.6457190018764908, 0.7948070895370258),
+            (0.5686269628156855, 0.8308140824040166),
+            (0.48261564796117706, 0.8394220929321281),
+            (0.3988637341345928, 0.8195123593871199),
+            (0.3282562494214108, 0.773672500354766),
+            (0.2799698731240203, 0.7078602083844532),
+            (0.26028026556024164, 0.6306289434956117),
+            (0.27174643608916316, 0.5520162612375117),
+        ],
+    ],
+    6: [
+        [
+            (0.7, 0.65),
+            (0.6880797931741396, 0.7214338832250304),
+            (0.6536109120672066, 0.7851267967917269),
+            (0.6003285947869339, 0.8341766252177563),
+            (0.5340068071709758, 0.8632680585066527),
+            (0.46183254399608686, 0.8692485884614674),
+            (0.39162700657634675, 0.8514701318641127),
+            (0.33099805424233697, 0.811859260348089),
+            (0.2865157747345724, 0.7547084264681563),
+            (0.26300051325140106, 0.6862108098617615),
+            (0.26300051325140106, 0.6137891901382386),
+            (0.28651577473457235, 0.5452915735318439),
+            (0.33099805424233686, 0.4881407396519112),
+            (0.39162700657634664, 0.4485298681358874),
+            (0.46183254399608675, 0.4307514115385327),
+            (0.5340068071709757, 0.4367319414933473),
+            (0.6003285947869338, 0.46582337478224367),
+            (0.6536109120672066, 0.514873203208273),
+            (0.6880797931741396, 0.5785661167749696),
+            (0.7, 0.65),
+        ],
+        [
+            (0.62, 0.15),
+            (0.38, 0.5),
+        ],
+    ],
+    7: [
+        [
+            (0.25, 0.15),
+            (0.75, 0.15),
+            (0.42, 0.85),
+        ],
+    ],
+    8: [
+        [
+            (0.7, 0.3),
+            (0.689163448340127, 0.3551989097647962),
+            (0.6578281018792788, 0.40441616115724355),
+            (0.6093896316244855, 0.44231830130462985),
+            (0.5490970974281598, 0.46479804520968615),
+            (0.48348413090553355, 0.4694193638111339),
+            (0.41966091506940617, 0.4556814655313598),
+            (0.36454368567485185, 0.4250730648144324),
+            (0.3241052497587022, 0.38091105681630255),
+            (0.3027277393194555, 0.3279810803477248),
+            (0.3027277393194555, 0.27201891965227526),
+            (0.32410524975870214, 0.21908894318369748),
+            (0.36454368567485174, 0.17492693518556768),
+            (0.419660915069406, 0.14431853446864024),
+            (0.48348413090553344, 0.1305806361888661),
+            (0.5490970974281597, 0.1352019547903138),
+            (0.6093896316244853, 0.15768169869537008),
+            (0.6578281018792786, 0.19558383884275643),
+            (0.689163448340127, 0.24480109023520374),
+            (0.7, 0.29999999999999993),
+        ],
+        [
+            (0.74, 0.68),
+            (0.7269961380081523, 0.7449398938409367),
+            (0.6893937222551345, 0.8028425425379336),
+            (0.6312675579493825, 0.8474332956525058),
+            (0.5589165169137918, 0.8738800531878661),
+            (0.48018095708664027, 0.879316898601334),
+            (0.40359309808328736, 0.8631546653310116),
+            (0.3374524228098222, 0.8271447821346264),
+            (0.28892629971044265, 0.7751894786074148),
+            (0.26327328718334664, 0.7129189180561468),
+            (0.26327328718334664, 0.6470810819438533),
+            (0.2889262997104426, 0.5848105213925854),
+            (0.3374524228098221, 0.5328552178653738),
+            (0.40359309808328725, 0.4968453346689886),
+            (0.48018095708664016, 0.4806831013986661),
+            (0.5589165169137917, 0.48611994681213394),
+            (0.6312675579493824, 0.5125667043474943),
+            (0.6893937222551344, 0.5571574574620665),
+            (0.7269961380081523, 0.6150601061590633),
+            (0.74, 0.68),
+        ],
+    ],
+    9: [
+        [
+            (0.74, 0.35),
+            (0.7280797931741396, 0.42143388322503034),
+            (0.6936109120672066, 0.4851267967917269),
+            (0.6403285947869339, 0.5341766252177562),
+            (0.5740068071709759, 0.5632680585066526),
+            (0.5018325439960869, 0.5692485884614673),
+            (0.4316270065763468, 0.5514701318641126),
+            (0.370998054242337, 0.5118592603480889),
+            (0.32651577473457244, 0.4547084264681562),
+            (0.3030005132514011, 0.3862108098617615),
+            (0.3030005132514011, 0.3137891901382385),
+            (0.3265157747345724, 0.2452915735318438),
+            (0.3709980542423369, 0.1881407396519111),
+            (0.4316270065763467, 0.14852986813588737),
+            (0.5018325439960868, 0.13075141153853262),
+            (0.5740068071709757, 0.13673194149334728),
+            (0.6403285947869338, 0.16582337478224365),
+            (0.6936109120672066, 0.214873203208273),
+            (0.7280797931741396, 0.27856611677496956),
+            (0.74, 0.3499999999999999),
+        ],
+        [
+            (0.72, 0.4),
+            (0.6, 0.85),
+        ],
+    ],
 }
+
 
 # ---------------------------------------------------------------------------
 # Rendering
 # ---------------------------------------------------------------------------
 
 
-def _rot_mat(angle_deg: float) -> np.ndarray:
-    a = np.deg2rad(angle_deg)
-    return np.array([[np.cos(a), -np.sin(a)], [np.sin(a), np.cos(a)]])
-
-
-def _render_digit(rng: np.random.Generator, cls: int, size: int,
+def _render_digit(rng: PortableRng, cls: int, size: int,
                   angle_deg: float) -> np.ndarray:
     """Rasterize one jittered, rotated digit to a (size, size) u8 image."""
     # Random affine jitter: scale, shear, translate + per-sample extra tilt.
@@ -75,61 +460,109 @@ def _render_digit(rng: np.random.Generator, cls: int, size: int,
     shear = rng.uniform(-0.12, 0.12)
     # Generous tilt jitter is part of the base distribution: real MNIST
     # digits are naturally tilt-varied, which is what gives the paper's
-    # backbone its partial rotation tolerance (80.76% @ 30° pre-transfer).
+    # backbone its partial rotation tolerance (80.76% @ 30deg pre-transfer).
     tilt = rng.uniform(-14.0, 14.0)
-    shift = rng.uniform(-0.06, 0.06, size=2)
+    shift_x = rng.uniform(-0.06, 0.06)
+    shift_y = rng.uniform(-0.06, 0.06)
     thick = rng.uniform(0.045, 0.075)
-    rot = _rot_mat(angle_deg + tilt)
-    aff = rot @ np.array([[scale, shear], [0.0, scale]])
+    a = (angle_deg + tilt) * RAD_PER_DEG
+    co = p_cos(a)
+    si = p_sin(a)
+    # rot(a) @ [[scale, shear], [0, scale]], written out.
+    a00 = co * scale
+    a01 = co * shear - si * scale
+    a10 = si * scale
+    a11 = si * shear + co * scale
 
+    fsize = float(size)
     ys, xs = np.mgrid[0:size, 0:size]
-    pix = np.stack([(xs + 0.5) / size, (ys + 0.5) / size], axis=-1)  # (H,W,2)
+    px = (xs + 0.5) / fsize
+    py = (ys + 0.5) / fsize
     img = np.zeros((size, size), dtype=np.float64)
     for stroke in DIGIT_STROKES[cls]:
-        pts = (stroke - 0.5 + rng.normal(0, 0.012, size=stroke.shape))
-        pts = pts @ aff.T + 0.5 + shift
-        a, b = pts[:-1], pts[1:]                     # segments (S,2)
-        ab = b - a
-        denom = np.maximum((ab * ab).sum(-1), 1e-9)  # (S,)
-        ap = pix[:, :, None, :] - a[None, None]      # (H,W,S,2)
-        t = np.clip((ap * ab[None, None]).sum(-1) / denom, 0.0, 1.0)
-        near = a[None, None] + t[..., None] * ab[None, None]
-        d = np.sqrt(((pix[:, :, None, :] - near) ** 2).sum(-1)).min(-1)
-        img = np.maximum(img, np.clip(1.35 - d / thick, 0.0, 1.0))
-    img = np.clip(img, 0.0, 1.0)
-    img += rng.normal(0, 0.045, img.shape)           # sensor noise
+        npts = len(stroke)
+        jit = rng.noise(0.012, npts * 2)
+        tx = np.empty(npts, dtype=np.float64)
+        ty = np.empty(npts, dtype=np.float64)
+        for i in range(npts):
+            sx, sy = stroke[i]
+            ux = sx - 0.5 + jit[2 * i]
+            uy = sy - 0.5 + jit[2 * i + 1]
+            tx[i] = ux * a00 + uy * a01 + 0.5 + shift_x
+            ty[i] = ux * a10 + uy * a11 + 0.5 + shift_y
+        # Distance field to the polyline: min over segments of the clamped
+        # point-segment distance.
+        d2min = None
+        for s in range(npts - 1):
+            ax, ay = tx[s], ty[s]
+            bx, by = tx[s + 1], ty[s + 1]
+            abx = bx - ax
+            aby = by - ay
+            denom = abx * abx + aby * aby
+            if denom < 1e-9:
+                denom = 1e-9
+            t = (  # clamped projection onto the segment
+                np.clip(((px - ax) * abx + (py - ay) * aby) / denom, 0.0, 1.0)
+            )
+            dx = px - (ax + t * abx)
+            dy = py - (ay + t * aby)
+            d2 = dx * dx + dy * dy
+            d2min = d2 if d2min is None else np.minimum(d2min, d2)
+        v = np.clip(1.35 - np.sqrt(d2min) / thick, 0.0, 1.0)
+        img = np.maximum(img, v)
+    img = img + rng.noise(0.045, size * size).reshape(size, size)  # sensor
     return (np.clip(img, 0.0, 1.0) * 255.0).astype(np.uint8)
 
 
-def _render_pattern(rng: np.random.Generator, cls: int, size: int,
+def _render_pattern(rng: PortableRng, cls: int, size: int,
                     angle_deg: float) -> np.ndarray:
     """One 3-channel procedural pattern image, (3, size, size) u8."""
-    rot = _rot_mat(angle_deg + rng.uniform(-5, 5))
+    a = (angle_deg + rng.uniform(-5.0, 5.0)) * RAD_PER_DEG
+    co = p_cos(a)
+    si = p_sin(a)
+    f = rng.uniform(2.5, 4.5)       # frequency jitter
+    ph = rng.uniform(0.0, TWO_PI)   # phase jitter
+    fsize = float(size)
+    half = fsize / 2.0
     ys, xs = np.mgrid[0:size, 0:size]
-    u = (xs - size / 2 + 0.5) / size
-    v = (ys - size / 2 + 0.5) / size
-    ur = rot[0, 0] * u + rot[0, 1] * v
-    vr = rot[1, 0] * u + rot[1, 1] * v
-    f = rng.uniform(2.5, 4.5)           # frequency jitter
-    ph = rng.uniform(0, 2 * np.pi)      # phase jitter
+    u = (xs - half + 0.5) / fsize
+    v = (ys - half + 0.5) / fsize
+    ur = co * u - si * v
+    vr = si * u + co * v
     r2 = ur * ur + vr * vr
     if cls == 0:      # horizontal stripes
-        base = np.sin(2 * np.pi * f * vr + ph)
+        w = TWO_PI * f
+        base = p_sin(w * vr + ph)
     elif cls == 1:    # vertical stripes
-        base = np.sin(2 * np.pi * f * ur + ph)
+        w = TWO_PI * f
+        base = p_sin(w * ur + ph)
     elif cls == 2:    # checkerboard
-        base = np.sign(np.sin(2 * np.pi * f * ur + ph)) * \
-            np.sign(np.sin(2 * np.pi * f * vr + ph))
+        w = TWO_PI * f
+        base = np.sign(p_sin(w * ur + ph)) * np.sign(p_sin(w * vr + ph))
     elif cls == 3:    # concentric rings
-        base = np.sin(2 * np.pi * (1.8 * f) * np.sqrt(r2) + ph)
+        w = TWO_PI * (1.8 * f)
+        base = p_sin(w * np.sqrt(r2) + ph)
     elif cls == 4:    # diagonal stripes
-        base = np.sin(2 * np.pi * f * (ur + vr) + ph)
-    elif cls == 5:    # radial fan
-        base = np.sin(6.0 * np.arctan2(vr, ur) + ph)
+        w = TWO_PI * f
+        base = p_sin(w * (ur + vr) + ph)
+    elif cls == 5:    # radial fan: sin(6*theta + ph) via angle addition
+        r = np.sqrt(r2)
+        rsafe = np.where(r2 > 0.0, r, 1.0)
+        c1 = ur / rsafe
+        s1 = vr / rsafe
+        c6 = c1
+        s6 = s1
+        for _ in range(5):
+            cn = c6 * c1 - s6 * s1
+            sn = s6 * c1 + c6 * s1
+            c6 = cn
+            s6 = sn
+        base = np.where(r2 > 0.0, s6 * p_cos(ph) + c6 * p_sin(ph), 0.0)
     elif cls == 6:    # centered blob
-        base = 2.0 * np.exp(-r2 * rng.uniform(9, 14)) - 1.0
+        k = rng.uniform(9.0, 14.0)
+        base = 2.0 * p_exp(-r2 * k) - 1.0
     elif cls == 7:    # corner gradient
-        base = np.tanh(3.0 * (ur + vr))
+        base = p_tanh(3.0 * (ur + vr))
     elif cls == 8:    # square outline
         m = np.maximum(np.abs(ur), np.abs(vr))
         base = np.clip(1.0 - 14.0 * np.abs(m - 0.28), -1.0, 1.0)
@@ -137,11 +570,23 @@ def _render_pattern(rng: np.random.Generator, cls: int, size: int,
         m = np.minimum(np.abs(ur), np.abs(vr))
         base = np.clip(1.0 - 12.0 * m, -1.0, 1.0)
     # Class-tinted colorization with per-sample jitter.
-    tint = np.array([(cls * 53 % 97) / 97.0, (cls * 31 % 89) / 89.0,
-                     (cls * 71 % 83) / 83.0])
-    tint = np.clip(tint + rng.uniform(-0.15, 0.15, 3), 0.05, 1.0)
-    img = (base[None] * 0.5 + 0.5) * tint[:, None, None]
-    img += rng.normal(0, 0.05, img.shape)
+    tint_base = (
+        (cls * 53 % 97) / 97.0,
+        (cls * 31 % 89) / 89.0,
+        (cls * 71 % 83) / 83.0,
+    )
+    tint = [0.0, 0.0, 0.0]
+    for ch in range(3):
+        tc = tint_base[ch] + rng.uniform(-0.15, 0.15)
+        if tc < 0.05:
+            tc = 0.05
+        if tc > 1.0:
+            tc = 1.0
+        tint[ch] = tc
+    noise = rng.noise(0.05, 3 * size * size).reshape(3, size, size)
+    img = np.empty((3, size, size), dtype=np.float64)
+    for ch in range(3):
+        img[ch] = (base * 0.5 + 0.5) * tint[ch] + noise[ch]
     return (np.clip(img, 0.0, 1.0) * 255.0).astype(np.uint8)
 
 
@@ -152,10 +597,9 @@ def _render_pattern(rng: np.random.Generator, cls: int, size: int,
 
 def make_rotdigits(n: int, seed: int, angle_deg: float = 0.0):
     """(images u8 (n,1,28,28), labels u8 (n,)) — deterministic in ``seed``."""
-    rng = np.random.default_rng(seed)
-    labels = (np.arange(n) % 10).astype(np.uint8)
+    rng = PortableRng(seed)
     perm = rng.permutation(n)
-    labels = labels[perm]
+    labels = (perm % 10).astype(np.uint8)
     imgs = np.zeros((n, 1, 28, 28), dtype=np.uint8)
     for i in range(n):
         imgs[i, 0] = _render_digit(rng, int(labels[i]), 28, angle_deg)
@@ -164,14 +608,23 @@ def make_rotdigits(n: int, seed: int, angle_deg: float = 0.0):
 
 def make_rotpatterns(n: int, seed: int, angle_deg: float = 0.0):
     """(images u8 (n,3,32,32), labels u8 (n,)) — deterministic in ``seed``."""
-    rng = np.random.default_rng(seed)
-    labels = (np.arange(n) % 10).astype(np.uint8)
+    rng = PortableRng(seed)
     perm = rng.permutation(n)
-    labels = labels[perm]
+    labels = (perm % 10).astype(np.uint8)
     imgs = np.zeros((n, 3, 32, 32), dtype=np.uint8)
     for i in range(n):
         imgs[i] = _render_pattern(rng, int(labels[i]), 32, angle_deg)
     return imgs, labels
+
+
+def device_seed(task: str, split: str, angle) -> int:
+    """Canonical seed for an on-device (train/test, angle) set — shared with
+    ``rust/src/datagen`` so generated data and artifact files coincide for
+    every angle (pretrain/pretest sets keep their own fixed seeds in
+    ``aot.py``)."""
+    task_id = {"digits": 0, "patterns": 1}[task]
+    split_id = {"train": 0, "test": 1}[split]
+    return 3000 + task_id * 6000 + split_id * 1000 + int(angle)
 
 
 # ---------------------------------------------------------------------------

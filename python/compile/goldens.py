@@ -1,0 +1,65 @@
+"""Golden fixtures for the cross-language dataset-generator contract.
+
+``python -m compile.goldens [--out DIR]`` regenerates the small sample
+datasets + FNV-1a hash manifest that ``rust/tests/datagen.rs`` compares
+byte-for-byte against ``rust/src/datagen``.  Run it (and commit the
+result) whenever the generator math in ``compile.dataset`` changes.
+
+Default output: ``rust/tests/fixtures/datagen`` relative to the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from . import dataset as ds
+
+#: (name, task, split, n, angle).  Small on purpose — a handful of samples
+#: pins every code path (both tasks, base + arbitrary angles, train/test
+#: seed convention, all 10 classes for patterns via n >= 10).
+GOLDEN_TUPLES = [
+    ("digits_train_a0_n8", "digits", "train", 8, 0),
+    ("digits_test_a0_n8", "digits", "test", 8, 0),
+    ("digits_train_a30_n8", "digits", "train", 8, 30),
+    ("digits_train_a60_n8", "digits", "train", 8, 60),
+    ("digits_test_a60_n8", "digits", "test", 8, 60),
+    ("patterns_train_a45_n12", "patterns", "train", 12, 45),
+    ("patterns_test_a0_n12", "patterns", "test", 12, 0),
+]
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_out = os.path.normpath(
+        os.path.join(here, "..", "..", "rust", "tests", "fixtures", "datagen"))
+    ap.add_argument("--out", default=default_out)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = ["# name task split n angle seed fnv1a64(images+labels)"]
+    for name, task, split, n, angle in GOLDEN_TUPLES:
+        seed = ds.device_seed(task, split, angle)
+        make = ds.make_rotdigits if task == "digits" else ds.make_rotpatterns
+        imgs, labels = make(n, seed, float(angle))
+        path = os.path.join(args.out, f"{name}.bin")
+        ds.save_dataset(path, imgs, labels)
+        h = fnv1a64(imgs.tobytes() + labels.tobytes())
+        manifest.append(f"{name} {task} {split} {n} {angle} {seed} {h:016x}")
+        print(f"[golden] {name}: seed={seed} hash={h:016x}")
+    with open(os.path.join(args.out, "hashes.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[golden] wrote {len(GOLDEN_TUPLES)} fixtures to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

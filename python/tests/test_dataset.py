@@ -1,0 +1,335 @@
+"""The portable-generator contract: scalar reference == vectorized numpy.
+
+``compile.dataset`` is vectorized with numpy; ``rust/src/datagen`` is a
+scalar transliteration of the same algorithm.  This suite re-implements the
+generator as *scalar Python structured exactly like the Rust port* (same
+loops, same expression shapes, same draw order) and asserts bit-equality
+with the vectorized module.  Since every operation involved is an IEEE-754
+exactly-rounded primitive, scalar == vectorized here implies the Rust port
+produces the same bytes — the golden fixtures in
+``rust/tests/fixtures/datagen`` then pin that on the Rust side forever.
+
+Also pins the SplitMix64 reference vectors and the device-seed convention
+shared with ``rust/src/datagen``.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+MASK = (1 << 64) - 1
+
+
+class ScalarRng:
+    """Scalar mirror of rust/src/datagen PortableRng."""
+
+    def __init__(self, seed):
+        self.seed = seed & MASK
+        self.count = 0
+
+    def raw(self):
+        self.count += 1
+        z = (self.seed + self.count * GAMMA) & MASK
+        z ^= z >> 30
+        z = (z * MIX1) & MASK
+        z ^= z >> 27
+        z = (z * MIX2) & MASK
+        return z ^ (z >> 31)
+
+    def f64(self):
+        return (self.raw() >> 11) * ds.U53
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def noise(self, scale):
+        u0 = self.f64()
+        u1 = self.f64()
+        u2 = self.f64()
+        u3 = self.f64()
+        return (u0 + u1 + u2 + u3 - 2.0) * ds.NOISE_NORM * scale
+
+    def below(self, bound):
+        return self.raw() % bound
+
+    def permutation(self, n):
+        arr = list(range(n))
+        for i in range(n - 1, 0, -1):
+            j = self.below(i + 1)
+            arr[i], arr[j] = arr[j], arr[i]
+        return arr
+
+
+def p_sin(x):
+    k = math.floor(x * ds.INV_TWO_PI + 0.5)
+    y = x - k * ds.TWO_PI
+    y2 = y * y
+    p = ds._SIN_COEFFS[0]
+    for c in ds._SIN_COEFFS[1:]:
+        p = p * y2 + c
+    return y + y * y2 * p
+
+
+def p_cos(x):
+    k = math.floor(x * ds.INV_TWO_PI + 0.5)
+    y = x - k * ds.TWO_PI
+    y2 = y * y
+    p = ds._COS_COEFFS[0]
+    for c in ds._COS_COEFFS[1:]:
+        p = p * y2 + c
+    return 1.0 + y2 * p
+
+
+def exp2i(k):
+    # mirror of datagen::portable::exp2i (f64::from_bits((1023+k) << 52))
+    return math.ldexp(1.0, k)
+
+
+def p_exp(x):
+    k = math.floor(x * ds.LOG2E + 0.5)
+    r = x - k * ds.LN2
+    p = ds._EXP_COEFFS[0]
+    for c in ds._EXP_COEFFS[1:]:
+        p = p * r + c
+    return p * exp2i(int(k))
+
+
+def p_tanh(x):
+    t = p_exp(x + x)
+    return (t - 1.0) / (t + 1.0)
+
+
+def clip(x, lo, hi):
+    return min(max(x, lo), hi)
+
+
+def sign(x):
+    if x > 0.0:
+        return 1.0
+    if x < 0.0:
+        return -1.0
+    return 0.0
+
+
+def render_digit_scalar(rng, cls, size, angle_deg):
+    scale = rng.uniform(0.82, 1.05)
+    shear = rng.uniform(-0.12, 0.12)
+    tilt = rng.uniform(-14.0, 14.0)
+    shift_x = rng.uniform(-0.06, 0.06)
+    shift_y = rng.uniform(-0.06, 0.06)
+    thick = rng.uniform(0.045, 0.075)
+    a = (angle_deg + tilt) * ds.RAD_PER_DEG
+    co = p_cos(a)
+    si = p_sin(a)
+    a00 = co * scale
+    a01 = co * shear - si * scale
+    a10 = si * scale
+    a11 = si * shear + co * scale
+
+    fsize = float(size)
+    img = [0.0] * (size * size)
+    for stroke in ds.DIGIT_STROKES[cls]:
+        npts = len(stroke)
+        jit = [rng.noise(0.012) for _ in range(npts * 2)]
+        tx = [0.0] * npts
+        ty = [0.0] * npts
+        for i in range(npts):
+            sx, sy = stroke[i]
+            ux = sx - 0.5 + jit[2 * i]
+            uy = sy - 0.5 + jit[2 * i + 1]
+            tx[i] = ux * a00 + uy * a01 + 0.5 + shift_x
+            ty[i] = ux * a10 + uy * a11 + 0.5 + shift_y
+        for yy in range(size):
+            for xx in range(size):
+                px = (xx + 0.5) / fsize
+                py = (yy + 0.5) / fsize
+                d2min = math.inf
+                for s in range(npts - 1):
+                    ax = tx[s]
+                    ay = ty[s]
+                    abx = tx[s + 1] - ax
+                    aby = ty[s + 1] - ay
+                    denom = abx * abx + aby * aby
+                    if denom < 1e-9:
+                        denom = 1e-9
+                    t = clip(((px - ax) * abx + (py - ay) * aby) / denom,
+                             0.0, 1.0)
+                    dx = px - (ax + t * abx)
+                    dy = py - (ay + t * aby)
+                    d2 = dx * dx + dy * dy
+                    if d2 < d2min:
+                        d2min = d2
+                v = clip(1.35 - math.sqrt(d2min) / thick, 0.0, 1.0)
+                if v > img[yy * size + xx]:
+                    img[yy * size + xx] = v
+    out = bytearray(size * size)
+    for i in range(size * size):
+        v = img[i] + rng.noise(0.045)
+        out[i] = int(clip(v, 0.0, 1.0) * 255.0)
+    return np.frombuffer(bytes(out), dtype=np.uint8).reshape(size, size)
+
+
+def render_pattern_scalar(rng, cls, size, angle_deg):
+    a = (angle_deg + rng.uniform(-5.0, 5.0)) * ds.RAD_PER_DEG
+    co = p_cos(a)
+    si = p_sin(a)
+    f = rng.uniform(2.5, 4.5)
+    ph = rng.uniform(0.0, ds.TWO_PI)
+    fsize = float(size)
+    half = fsize / 2.0
+    blob_k = rng.uniform(9.0, 14.0) if cls == 6 else 0.0
+
+    base = [0.0] * (size * size)
+    for yy in range(size):
+        for xx in range(size):
+            u = (xx - half + 0.5) / fsize
+            v = (yy - half + 0.5) / fsize
+            ur = co * u - si * v
+            vr = si * u + co * v
+            r2 = ur * ur + vr * vr
+            if cls == 0:
+                w = ds.TWO_PI * f
+                b = p_sin(w * vr + ph)
+            elif cls == 1:
+                w = ds.TWO_PI * f
+                b = p_sin(w * ur + ph)
+            elif cls == 2:
+                w = ds.TWO_PI * f
+                b = sign(p_sin(w * ur + ph)) * sign(p_sin(w * vr + ph))
+            elif cls == 3:
+                w = ds.TWO_PI * (1.8 * f)
+                b = p_sin(w * math.sqrt(r2) + ph)
+            elif cls == 4:
+                w = ds.TWO_PI * f
+                b = p_sin(w * (ur + vr) + ph)
+            elif cls == 5:
+                if r2 > 0.0:
+                    r = math.sqrt(r2)
+                    c1 = ur / r
+                    s1 = vr / r
+                    c6 = c1
+                    s6 = s1
+                    for _ in range(5):
+                        cn = c6 * c1 - s6 * s1
+                        sn = s6 * c1 + c6 * s1
+                        c6 = cn
+                        s6 = sn
+                    b = s6 * p_cos(ph) + c6 * p_sin(ph)
+                else:
+                    b = 0.0
+            elif cls == 6:
+                b = 2.0 * p_exp(-r2 * blob_k) - 1.0
+            elif cls == 7:
+                b = p_tanh(3.0 * (ur + vr))
+            elif cls == 8:
+                m = max(abs(ur), abs(vr))
+                b = clip(1.0 - 14.0 * abs(m - 0.28), -1.0, 1.0)
+            else:
+                m = min(abs(ur), abs(vr))
+                b = clip(1.0 - 12.0 * m, -1.0, 1.0)
+            base[yy * size + xx] = b
+    tint_base = (
+        (cls * 53 % 97) / 97.0,
+        (cls * 31 % 89) / 89.0,
+        (cls * 71 % 83) / 83.0,
+    )
+    tint = [0.0, 0.0, 0.0]
+    for ch in range(3):
+        tc = tint_base[ch] + rng.uniform(-0.15, 0.15)
+        if tc < 0.05:
+            tc = 0.05
+        if tc > 1.0:
+            tc = 1.0
+        tint[ch] = tc
+    out = bytearray(3 * size * size)
+    for ch in range(3):
+        for i in range(size * size):
+            v = (base[i] * 0.5 + 0.5) * tint[ch] + rng.noise(0.05)
+            out[ch * size * size + i] = int(clip(v, 0.0, 1.0) * 255.0)
+    return np.frombuffer(bytes(out), dtype=np.uint8).reshape(3, size, size)
+
+
+def generate_scalar(task, n, seed, angle_deg):
+    rng = ScalarRng(seed)
+    perm = rng.permutation(n)
+    labels = np.array([p % 10 for p in perm], dtype=np.uint8)
+    if task == "digits":
+        imgs = np.zeros((n, 1, 28, 28), dtype=np.uint8)
+        for i in range(n):
+            imgs[i, 0] = render_digit_scalar(rng, int(labels[i]), 28,
+                                             angle_deg)
+    else:
+        imgs = np.zeros((n, 3, 32, 32), dtype=np.uint8)
+        for i in range(n):
+            imgs[i] = render_pattern_scalar(rng, int(labels[i]), 32,
+                                            angle_deg)
+    return imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Tests
+# ---------------------------------------------------------------------------
+
+
+def test_splitmix_reference_vectors():
+    # Steele et al. SplitMix64, seed 0 — also pinned in rust/src/datagen.
+    r = ds.PortableRng(0)
+    got = [int(x) for x in r.raw(3)]
+    assert got == [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4,
+                   0x06C45D188009454F]
+    s = ScalarRng(0)
+    assert [s.raw() for _ in range(3)] == got
+
+
+def test_scalar_rng_matches_vectorized():
+    rv = ds.PortableRng(1234)
+    rs = ScalarRng(1234)
+    np.testing.assert_array_equal(
+        rv.f64(64), np.array([rs.f64() for _ in range(64)]))
+    np.testing.assert_array_equal(
+        rv.noise(0.045, 16), np.array([rs.noise(0.045) for _ in range(16)]))
+    assert list(rv.permutation(50)) == rs.permutation(50)
+    assert rv.count == rs.count
+
+
+@pytest.mark.parametrize("angle", [0.0, 30.0, 60.0, 135.0])
+def test_digits_scalar_matches_vectorized(angle):
+    seed = ds.device_seed("digits", "train", angle)
+    vi, vl = ds.make_rotdigits(10, seed, angle)
+    si, sl = generate_scalar("digits", 10, seed, angle)
+    np.testing.assert_array_equal(vl, sl)
+    np.testing.assert_array_equal(vi, si)
+
+
+@pytest.mark.parametrize("angle", [0.0, 45.0, 60.0])
+def test_patterns_scalar_matches_vectorized(angle):
+    # 12 samples cover all 10 classes (incl. the extra-draw blob class).
+    seed = ds.device_seed("patterns", "test", angle)
+    vi, vl = ds.make_rotpatterns(12, seed, angle)
+    si, sl = generate_scalar("patterns", 12, seed, angle)
+    np.testing.assert_array_equal(vl, sl)
+    np.testing.assert_array_equal(vi, si)
+
+
+def test_device_seed_convention():
+    assert ds.device_seed("digits", "train", 30) == 3030
+    assert ds.device_seed("digits", "test", 30) == 4030
+    assert ds.device_seed("patterns", "train", 30) == 9030
+    assert ds.device_seed("patterns", "test", 60) == 10060
+
+
+def test_generation_deterministic_and_parametrized():
+    a, la = ds.make_rotdigits(6, 5, 45.0)
+    b, lb = ds.make_rotdigits(6, 5, 45.0)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    c, _ = ds.make_rotdigits(6, 6, 45.0)
+    assert not np.array_equal(a, c)
+    d, _ = ds.make_rotdigits(6, 5, 46.0)
+    assert not np.array_equal(a, d)

@@ -2,12 +2,19 @@
 //! host sustains over one shared backbone, in sessions/sec and steps/sec.
 //! Sweeps the worker-thread count to show scaling; the backbone weights
 //! and scales are shared via `Arc` (no per-session copy).
-//! `cargo bench --bench fleet [-- --devices N --epochs N --limit N]`.
+//! `cargo bench --bench fleet [-- --devices N --epochs N --limit N
+//! [--generated]]`.
+//!
+//! Artifact-free: without `make artifacts` (or with `--generated`) the
+//! backbone falls back to the synthetic deployable and the datasets come
+//! from `priot::datagen` — same geometry and sample counts, so perf runs
+//! need no Python toolchain.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use priot::config::Selection;
+use priot::data::DataSource;
 use priot::methods::{MethodPlugin, Priot, PriotS};
 use priot::session::{Backbone, Fleet};
 
@@ -23,21 +30,30 @@ fn main() {
     let devices = get("--devices", 16);
     let epochs = get("--epochs", 2);
     let limit = get("--limit", 256);
+    let force_generated = args.iter().any(|a| a == "--generated");
 
     let artifacts = Path::new("artifacts");
-    if !artifacts.join("tinycnn.weights.bin").exists() {
-        eprintln!("[fleet] artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let backbone = Backbone::load(artifacts, "tinycnn").expect("backbone");
-    let mut c = priot::config::Config::default();
-    c.set("artifacts", "artifacts");
-    let cfg = priot::config::ExperimentConfig::from_config(&c).expect("cfg");
-    let pair = priot::data::load_pair(&cfg).expect("data");
+    let backbone = if force_generated {
+        Backbone::synthetic("tinycnn", 1).expect("backbone")
+    } else {
+        Backbone::load_or_synthetic(artifacts, "tinycnn", 1)
+            .expect("backbone")
+    };
+    // Keep the variant binary (and the header truthful): artifact data
+    // only when the full pair exists on disk, generated otherwise — no
+    // silent per-split mixing.
+    let have_pair = artifacts.join("data/digits_train_a30.bin").exists()
+        && artifacts.join("data/digits_test_a30.bin").exists();
+    let (source, data_kind) = if !force_generated && have_pair {
+        (DataSource::Artifact(artifacts.to_path_buf()), "artifact")
+    } else {
+        (DataSource::generated(), "generated")
+    };
+    let pair = source.pair("digits", 30).expect("data");
 
     println!(
         "\n## fleet throughput — {devices} devices × {epochs} epochs × \
-         {limit} images (tinycnn, shared backbone)\n"
+         {limit} images (tinycnn, shared backbone, {data_kind} data)\n"
     );
     println!("| threads | wall [s] | sessions/s | steps/s |");
     println!("|---|---|---|---|");

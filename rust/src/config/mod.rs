@@ -200,6 +200,15 @@ pub struct ExperimentConfig {
     /// Samples per forward in dataset evaluation (0/1 = per-sample;
     /// batched evaluation is bit-identical, just faster).
     pub eval_batch: usize,
+    /// Dataset source: `auto` (artifact file if present, generated
+    /// otherwise — the default), `artifact`, or `generated`.  See
+    /// [`crate::data::DataSource`].
+    pub source: String,
+    /// Sample counts for generated datasets (default: the full
+    /// `make artifacts` size, so generated data and artifact files are
+    /// byte-identical per angle).
+    pub gen_train: usize,
+    pub gen_test: usize,
 }
 
 impl ExperimentConfig {
@@ -224,6 +233,17 @@ impl ExperimentConfig {
             limit: cfg.get_usize("limit", 0)?,
             track_pruning: cfg.get_bool("track_pruning", true)?,
             eval_batch: cfg.get_usize("eval_batch", 1)?,
+            source: {
+                let s = cfg.get_or("source", "auto").to_string();
+                match s.as_str() {
+                    "auto" | "artifact" | "generated" => s,
+                    other => bail!(
+                        "config source={other} (want auto|artifact|generated)"
+                    ),
+                }
+            },
+            gen_train: cfg.get_usize("gen_train", crate::data::DEFAULT_GEN_N)?,
+            gen_test: cfg.get_usize("gen_test", crate::data::DEFAULT_GEN_N)?,
         })
     }
 
@@ -329,6 +349,22 @@ mod tests {
         cfg2.set("method", "priot");
         let e2 = ExperimentConfig::from_config(&cfg2).unwrap();
         assert_eq!(e2.theta, -64, "PRIOT default theta");
+    }
+
+    #[test]
+    fn source_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.source, "auto", "artifact-with-generated-fallback default");
+        assert_eq!(e.gen_train, crate::data::DEFAULT_GEN_N);
+        assert_eq!(e.gen_test, crate::data::DEFAULT_GEN_N);
+        cfg.set("source", "generated");
+        cfg.set("gen_train", "64");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.source, "generated");
+        assert_eq!(e.gen_train, 64);
+        cfg.set("source", "magnetic-tape");
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
     }
 
     #[test]

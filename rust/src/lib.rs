@@ -80,6 +80,18 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Data is generated in-process
+//!
+//! [`datagen`] is the native port of the Python procedural generators
+//! (RotDigits / RotPatterns): any `(task, n, seed, angle)` tuple is
+//! synthesized **byte-identically** to `python/compile/dataset.py`
+//! (pinned by checked-in golden hashes — `rust/tests/datagen.rs`).
+//! [`data::DataSource`] resolves experiment configs and symbolic trace
+//! angles through it: artifact files when present, generation otherwise.
+//! That makes the whole Rust path hermetic — the full test suite, serve
+//! drift traces at arbitrary angles (`drift dev0 60`), and the benches
+//! all run from a bare checkout with no `make artifacts`.
+//!
 //! ## Methods are plugins
 //!
 //! Training methods implement [`methods::MethodPlugin`]
@@ -102,6 +114,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod datagen;
 pub mod engine;
 pub mod methods;
 pub mod metrics;

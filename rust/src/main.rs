@@ -4,7 +4,7 @@
 //! priot train   --method priot --angle 30 --epochs 30 [--backend pjrt]
 //! priot eval    --model tinycnn --dataset digits --angle 30
 //! priot compare [--epochs 8] [--limit 384]        all methods, one seed
-//! priot fleet   [--devices 8] [--threads 0]       multi-device simulation
+//! priot fleet   [--devices 8] [--angles 0,30,60]  multi-device simulation
 //! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
 //! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
 //! priot table1  [--full]                          Table I
@@ -238,34 +238,39 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 /// Multi-device simulation: N devices adapting concurrently to their own
-/// local distributions (alternating 30°/45° drift), sharing one backbone.
+/// local distributions (`--angles 30,45,60,...` — any rotation; data is
+/// resolved per angle through the config's [`data::DataSource`], so a
+/// bare checkout generates it in-process), sharing one backbone.
 fn cmd_fleet(args: &Args) -> Result<()> {
-    let artifacts = artifacts_dir(args);
     let devices: usize = args.option("devices").unwrap_or("8").parse()?;
     let epochs: usize = args.option("epochs").unwrap_or("4").parse()?;
     let limit: usize = args.option("limit").unwrap_or("384").parse()?;
     let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+    let angles: Vec<u32> = args
+        .option("angles")
+        .unwrap_or("30,45")
+        .split(',')
+        .map(|a| a.trim().parse().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    if angles.is_empty() {
+        bail!("--angles needs at least one angle");
+    }
 
-    let mut c = Config::default();
-    c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
-    let base = ExperimentConfig::from_config(&c)?;
-    let mut cfg30 = base.clone();
-    cfg30.angle = 30;
-    let mut cfg45 = base.clone();
-    cfg45.angle = 45;
-    let pair30 = data::load_pair(&cfg30)?;
-    let pair45 = data::load_pair(&cfg45)?;
-
-    let backbone = Backbone::load(&artifacts, &base.model)?;
+    // One config resolves all paths: backbone and data share a root.
+    let base = ExperimentConfig::from_config(&args.to_config()?)?;
+    let backbone =
+        Backbone::load_or_synthetic(&base.artifacts_dir, &base.model, 1)?;
     println!(
         "fleet: {} devices × {} epochs × {} images, model {} (backbone \
-         shared via Arc)",
-        devices, epochs, limit, base.model
+         shared via Arc; drift angles {:?})",
+        devices, epochs, limit, base.model, angles
     );
     let mut fleet = Fleet::builder(Arc::clone(&backbone))
         .epochs(epochs)
         .limit(limit)
-        .threads(threads);
+        .threads(threads)
+        .source(data::source_for(&base))
+        .dataset(&base.dataset);
     for i in 0..devices {
         // Each device gets its own method mix, seed, and local drift.
         let plugin: Box<dyn MethodPlugin> = match i % 3 {
@@ -273,15 +278,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             1 => Box::new(PriotS::new(0.1, Selection::WeightBased)),
             _ => Box::new(PriotS::new(0.2, Selection::Random)),
         };
-        let pair = if i % 2 == 0 { &pair30 } else { &pair45 };
-        let angle = if i % 2 == 0 { 30 } else { 45 };
-        fleet = fleet.device(
+        let angle = angles[i % angles.len()];
+        fleet = fleet.device_at(
             format!("dev-{i:02} ({angle}°)"),
             (i + 1) as u32,
             plugin,
-            &pair.train,
-            &pair.test,
-        );
+            angle,
+        )?;
     }
     let report = fleet.run()?;
     println!("{}", report.summary());
@@ -289,23 +292,23 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 }
 
 /// Angle-keyed dataset loader for trace replay: traces reference data
-/// symbolically (`angle=60`), the CLI resolves each angle to its
-/// artifact files once and caches the `Arc`s.
-fn trace_pair_loader<'a>(
-    artifacts: PathBuf,
-    dataset: &'a str,
-) -> impl FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)> + 'a {
+/// symbolically (`angle=60`), the CLI resolves each angle through a
+/// [`data::DataSource`] once and caches the `Arc`s.  With the default
+/// `auto` source an angle with no artifact on disk is generated
+/// in-process — `drift dev0 60` works from a bare checkout.
+fn trace_pair_loader(
+    source: data::DataSource,
+    dataset: String,
+) -> impl FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)> {
     let mut pairs: HashMap<u32, (Arc<Dataset>, Arc<Dataset>)> = HashMap::new();
     move |angle: u32| {
         if let Some(p) = pairs.get(&angle) {
             return Ok(p.clone());
         }
-        let train = Arc::new(data::load_named(
-            &artifacts, &format!("{dataset}_train_a{angle}"))?);
-        let test = Arc::new(data::load_named(
-            &artifacts, &format!("{dataset}_test_a{angle}"))?);
-        pairs.insert(angle, (Arc::clone(&train), Arc::clone(&test)));
-        Ok((train, test))
+        let pair = source.pair(&dataset, angle)?;
+        let entry = (Arc::new(pair.train), Arc::new(pair.test));
+        pairs.insert(angle, entry.clone());
+        Ok(entry)
     }
 }
 
@@ -330,15 +333,16 @@ fn trace_text(args: &Args) -> Result<String> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use priot::session::serve;
 
-    let artifacts = artifacts_dir(args);
-    let model = args.option("model").unwrap_or("tinycnn");
-    let dataset = args.option("dataset").unwrap_or("digits");
     let threads: usize = args.option("threads").unwrap_or("0").parse()?;
     let limit: usize = args.option("limit").unwrap_or("256").parse()?;
     let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
     let window: usize = args.option("window").unwrap_or("64").parse()?;
+    // One config resolves everything path-shaped (`--artifacts`, a
+    // `--config` file, `--model`, `--dataset`, `--source`...), so the
+    // backbone and the datasets can never come from different roots.
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
 
-    let backbone = Backbone::load(&artifacts, model)?;
+    let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
     let mut server = priot::session::FleetServer::builder(backbone)
         .threads(threads)
         .limit(limit)
@@ -357,8 +361,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let bound = server.listen(addr)?;
         eprintln!(
-            "serving {model} fleet on {bound} — replay a trace with \
-             `priot client --addr {bound}` (ctrl-c to stop)"
+            "serving {} fleet on {bound} — replay a trace with \
+             `priot client --addr {bound}` (ctrl-c to stop)",
+            cfg.model
         );
         loop {
             std::thread::park();
@@ -366,7 +371,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let cmds = serve::parse_trace(&trace_text(args)?)?;
-    let mut pair_for = trace_pair_loader(artifacts, dataset);
+    let mut pair_for =
+        trace_pair_loader(data::source_for(&cfg), cfg.dataset.clone());
     let mut client = server.local_client();
     let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
     drop(client); // close the connection so join() can drain
@@ -384,8 +390,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Replay a scripted request trace against a *remote* fleet server over
 /// TCP: `priot client --addr HOST:PORT [--trace FILE]`.  Datasets are
-/// resolved client-side from the local artifacts directory and travel
-/// over the wire with the `Register`/`Drift` requests.
+/// resolved client-side through the config's [`data::DataSource`]
+/// (artifact files or in-process generation — any drift angle works
+/// without `make artifacts`) and travel over the wire with the
+/// `Register`/`Drift` requests.
 fn cmd_client(args: &Args) -> Result<()> {
     use priot::proto::FleetClient;
     use priot::session::serve;
@@ -394,10 +402,10 @@ fn cmd_client(args: &Args) -> Result<()> {
         anyhow::anyhow!("client needs --addr HOST:PORT (see `priot serve \
                          --listen`)")
     })?;
-    let artifacts = artifacts_dir(args);
-    let dataset = args.option("dataset").unwrap_or("digits");
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
     let cmds = serve::parse_trace(&trace_text(args)?)?;
-    let mut pair_for = trace_pair_loader(artifacts, dataset);
+    let mut pair_for =
+        trace_pair_loader(data::source_for(&cfg), cfg.dataset.clone());
     let mut client = FleetClient::connect(addr)?;
     let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
     let errors = responses.iter().filter(|r| r.is_error()).count();
@@ -488,7 +496,7 @@ fn print_help() {
          \x20 train        run one on-device training session\n\
          \x20 eval         evaluate the backbone on a dataset\n\
          \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
-         \x20 fleet        simulate N devices adapting concurrently\n\
+         \x20 fleet        simulate N devices adapting concurrently (--angles 0,30,60)\n\
          \x20 serve        long-lived fleet service (--trace replay or --listen ADDR)\n\
          \x20 client       replay a request trace against a remote server over TCP\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
@@ -500,6 +508,9 @@ fn print_help() {
          \x20 calibrate    re-derive static scales from local data\n\
          \x20 selftest     engine ⇄ PJRT bit-parity check\n\n\
          common flags: --artifacts DIR  --config FILE  --full  --epochs N\n\
-         \x20             --limit N  --seeds N  --method M  --angle A  --out FILE"
+         \x20             --limit N  --seeds N  --method M  --angle A  --out FILE\n\
+         \x20             --source auto|artifact|generated  (data resolution;\n\
+         \x20              'auto' falls back to in-process generation, so every\n\
+         \x20              angle works without `make artifacts`)"
     );
 }

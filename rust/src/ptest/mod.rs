@@ -7,6 +7,14 @@
 
 use crate::prng::XorShift64;
 
+/// True when the suite runs under the hermetic CI gate (`PRIOT_CI=1`).
+/// A test that would self-skip (e.g. optional real-artifact or PJRT
+/// coverage) must `panic!` instead of silently returning when this is
+/// set — CI asserts the hermetic suite never loses coverage quietly.
+pub fn ci_strict() -> bool {
+    std::env::var("PRIOT_CI").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Outcome of a property check.
 #[derive(Debug)]
 pub enum PropResult {
@@ -72,39 +80,23 @@ pub mod gen {
 
     use std::sync::Arc;
 
-    use crate::quant::Scales;
     use crate::serial::Dataset;
     use crate::session::Backbone;
-    use crate::spec::NetSpec;
 
     /// A seeded in-memory tinycnn backbone (random int8 weights, default
     /// scales) — the artifact-free fixture shared by the session/serve
     /// test suites, the `serve` bench, and the `fleet_server` example.
+    /// Thin wrapper over [`Backbone::synthetic`] (same weight stream).
     pub fn synthetic_backbone(seed: u64) -> Arc<Backbone> {
-        let spec = NetSpec::tinycnn();
-        let mut rng = XorShift64::new(seed);
-        let weights: Vec<Mat> = spec
-            .layers
-            .iter()
-            .map(|l| {
-                let (r, c) = l.weight_shape();
-                mat_i8(&mut rng, r, c)
-            })
-            .collect();
-        let scales = Scales::default_for(spec.layers.len());
-        Backbone::from_parts("tinycnn", spec, weights, scales)
+        Backbone::synthetic("tinycnn", seed).expect("tinycnn spec exists")
     }
 
-    /// A seeded random dataset matching the tinycnn input geometry
-    /// (labels cycle 0..10).
+    /// A seeded dataset matching the tinycnn input geometry: upright
+    /// procedural digits from [`crate::datagen`] — tests, benches and
+    /// drift traces all share the one generator (labels cycle 0..10,
+    /// shuffled).
     pub fn synthetic_dataset(seed: u64, n: usize) -> Dataset {
-        let spec = NetSpec::tinycnn();
-        let (c, h, w) = spec.input_chw;
-        let mut rng = XorShift64::new(seed);
-        let images: Vec<u8> =
-            (0..n * c * h * w).map(|_| rng.int_in(0, 255) as u8).collect();
-        let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
-        Dataset { n, c, h, w, images, labels }
+        crate::datagen::generate(crate::datagen::Task::Digits, n, seed, 0.0)
     }
 }
 

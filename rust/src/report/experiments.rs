@@ -234,7 +234,11 @@ pub fn table2(artifacts: &Path, model: &str, iters: usize) -> Result<String> {
             },
         ),
     ];
-    for (label, params, cfg) in variants {
+    for (label, params, mut cfg) in variants {
+        // Micro-benchmark: a handful of samples suffices — keep the
+        // generated-data fallback cheap when no artifacts exist.
+        cfg.gen_train = cfg.gen_train.min(128);
+        cfg.gen_test = cfg.gen_test.min(128);
         let pair = data::load_pair(&cfg)?;
         let mut session = Session::from_experiment(&cfg)?;
         let mut img = vec![0i32; pair.train.image_len()];

@@ -19,18 +19,37 @@
 //! `fleet` bench measures its sessions/sec and steps/sec.  For the
 //! request-driven (long-lived) front-end see [`super::serve`].
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{RunOptions, TrainProgress};
+use crate::data::DataSource;
 use crate::methods::MethodPlugin;
 use crate::metrics::RunMetrics;
 use crate::serial::Dataset;
 
 use super::{Backbone, Session};
+
+/// A device's local dataset: borrowed from the caller
+/// ([`FleetBuilder::device`], zero-copy) or shared/owned
+/// ([`FleetBuilder::device_shared`] / [`FleetBuilder::device_at`], where
+/// the builder resolves data itself).
+enum DeviceData<'a> {
+    Borrowed(&'a Dataset),
+    Shared(Arc<Dataset>),
+}
+
+impl DeviceData<'_> {
+    fn get(&self) -> &Dataset {
+        match self {
+            DeviceData::Borrowed(d) => d,
+            DeviceData::Shared(a) => a,
+        }
+    }
+}
 
 /// One planned device: a name, a seed, a method plugin, and the local
 /// train/test data it adapts on.
@@ -38,16 +57,25 @@ struct Device<'a> {
     name: String,
     seed: u32,
     plugin: Box<dyn MethodPlugin>,
-    train: &'a Dataset,
-    test: &'a Dataset,
+    train: DeviceData<'a>,
+    test: DeviceData<'a>,
 }
 
-/// Builder for a [`Fleet`]; add devices with [`FleetBuilder::device`].
+/// Builder for a [`Fleet`]; add devices with [`FleetBuilder::device`]
+/// (caller-provided data), [`FleetBuilder::device_shared`]
+/// (`Arc`-shared data) or [`FleetBuilder::device_at`] (data resolved per
+/// angle through the builder's [`DataSource`]).
 pub struct FleetBuilder<'a> {
     backbone: Arc<Backbone>,
     opts: RunOptions,
     threads: usize,
     devices: Vec<Device<'a>>,
+    source: DataSource,
+    dataset: String,
+    /// [`Self::device_at`] resolution cache, keyed by (dataset, angle)
+    /// and cleared when the source changes — devices sharing a
+    /// distribution share one dataset copy.
+    pairs: HashMap<(String, u32), (Arc<Dataset>, Arc<Dataset>)>,
 }
 
 /// A set of concurrent adaptation sessions sharing one backbone.
@@ -130,8 +158,8 @@ struct Job<'a> {
     name: String,
     seed: u32,
     session: Session,
-    train: &'a Dataset,
-    test: &'a Dataset,
+    train: DeviceData<'a>,
+    test: DeviceData<'a>,
     progress: TrainProgress,
     remaining: usize,
 }
@@ -159,6 +187,9 @@ impl<'a> Fleet<'a> {
             },
             threads: 0,
             devices: Vec::new(),
+            source: DataSource::generated(),
+            dataset: "digits".to_string(),
+            pairs: HashMap::new(),
         }
     }
 
@@ -216,7 +247,8 @@ impl<'a> Fleet<'a> {
                         }
                         Task::Epoch(mut job) => {
                             job.progress.step_epoch(job.session.driver(),
-                                                    job.train, job.test, opts);
+                                                    job.train.get(),
+                                                    job.test.get(), opts);
                             job.remaining -= 1;
                             job
                         }
@@ -255,9 +287,9 @@ impl<'a> Fleet<'a> {
 /// run the epoch-0 evaluation.
 fn start_device<'a>(backbone: &Arc<Backbone>, opts: &RunOptions, idx: usize,
                     dev: Device<'a>) -> Result<Job<'a>> {
-    crate::data::validate(dev.train, &backbone.spec)
+    crate::data::validate(dev.train.get(), &backbone.spec)
         .with_context(|| format!("fleet device {}: train set", dev.name))?;
-    crate::data::validate(dev.test, &backbone.spec)
+    crate::data::validate(dev.test.get(), &backbone.spec)
         .with_context(|| format!("fleet device {}: test set", dev.name))?;
     let mut session = Session::builder()
         .backbone(Arc::clone(backbone))
@@ -269,7 +301,7 @@ fn start_device<'a>(backbone: &Arc<Backbone>, opts: &RunOptions, idx: usize,
         .track_pruning(opts.track_pruning)
         .verbose(opts.verbose)
         .build()?;
-    let progress = TrainProgress::start(session.driver(), dev.test, opts);
+    let progress = TrainProgress::start(session.driver(), dev.test.get(), opts);
     Ok(Job {
         idx,
         name: dev.name,
@@ -317,7 +349,25 @@ impl<'a> FleetBuilder<'a> {
         self
     }
 
-    /// Add one device to the fleet.
+    /// Dataset source consulted by [`Self::device_at`] (default: purely
+    /// generated data — artifact-free; pass [`DataSource::auto`] to
+    /// prefer artifact files).  Changing the source drops pairs already
+    /// resolved through the old one.
+    pub fn source(mut self, source: DataSource) -> Self {
+        if source != self.source {
+            self.pairs.clear();
+        }
+        self.source = source;
+        self
+    }
+
+    /// Dataset family resolved by [`Self::device_at`] (default `digits`).
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Add one device to the fleet (caller-provided data, zero-copy).
     pub fn device(mut self, name: impl Into<String>, seed: u32,
                   plugin: Box<dyn MethodPlugin>, train: &'a Dataset,
                   test: &'a Dataset) -> Self {
@@ -325,10 +375,46 @@ impl<'a> FleetBuilder<'a> {
             name: name.into(),
             seed,
             plugin,
-            train,
-            test,
+            train: DeviceData::Borrowed(train),
+            test: DeviceData::Borrowed(test),
         });
         self
+    }
+
+    /// Add one device over `Arc`-shared datasets (the wire/serve shape).
+    pub fn device_shared(mut self, name: impl Into<String>, seed: u32,
+                         plugin: Box<dyn MethodPlugin>, train: Arc<Dataset>,
+                         test: Arc<Dataset>) -> Self {
+        self.devices.push(Device {
+            name: name.into(),
+            seed,
+            plugin,
+            train: DeviceData::Shared(train),
+            test: DeviceData::Shared(test),
+        });
+        self
+    }
+
+    /// Add one device adapting to its local distribution at `angle`,
+    /// resolving the train/test pair through the builder's
+    /// [`DataSource`] (see [`Self::source`] / [`Self::dataset`]).  Pairs
+    /// are cached per angle, so devices sharing a distribution share one
+    /// dataset copy.
+    pub fn device_at(mut self, name: impl Into<String>, seed: u32,
+                     plugin: Box<dyn MethodPlugin>, angle: u32)
+                     -> Result<Self> {
+        let key = (self.dataset.clone(), angle);
+        if !self.pairs.contains_key(&key) {
+            let pair = self
+                .source
+                .pair(&self.dataset, angle)
+                .with_context(|| format!(
+                    "resolving {} data at {angle}°", self.dataset))?;
+            self.pairs.insert(
+                key.clone(), (Arc::new(pair.train), Arc::new(pair.test)));
+        }
+        let (train, test) = self.pairs[&key].clone();
+        Ok(self.device_shared(name, seed, plugin, train, test))
     }
 
     pub fn build(self) -> Fleet<'a> {

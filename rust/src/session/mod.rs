@@ -112,6 +112,48 @@ impl Backbone {
         Ok(Self::from_parts(model, spec, weights, scales))
     }
 
+    /// Deterministic random-weight backbone (default scales) for any
+    /// model spec — the artifact-free stand-in shared by the test
+    /// suites, the `serve`/`fleet` benches and the CLI fallback
+    /// ([`Self::load_or_synthetic`]).  Untrained: useful wherever the
+    /// *machinery* (scheduling, wire protocol, throughput) is under test
+    /// rather than accuracy.
+    pub fn synthetic(model: &str, seed: u64) -> Result<Arc<Self>> {
+        let spec = NetSpec::by_name(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let mut rng = crate::prng::XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                let data: Vec<i32> =
+                    (0..r * c).map(|_| rng.int_in(-127, 127)).collect();
+                Mat::from_vec(r, c, data)
+            })
+            .collect();
+        let scales = Scales::default_for(spec.layers.len());
+        Ok(Self::from_parts(model, spec, weights, scales))
+    }
+
+    /// [`Self::load`] when the artifacts exist, otherwise a
+    /// [`Self::synthetic`] fallback (with a note on stderr) — what lets
+    /// `priot serve` / `priot fleet` and the benches run from a bare
+    /// checkout.
+    pub fn load_or_synthetic(artifacts: &Path, model: &str, seed: u64)
+                             -> Result<Arc<Self>> {
+        if artifacts.join(format!("{model}.weights.bin")).exists() {
+            return Self::load(artifacts, model);
+        }
+        eprintln!(
+            "[backbone] no {model} artifacts under {} — using a synthetic \
+             random-weight backbone (deterministic, seed {seed}); run \
+             `make artifacts` for the pre-trained one",
+            artifacts.display()
+        );
+        Self::synthetic(model, seed)
+    }
+
     /// Assemble a backbone from in-memory parts (tests, synthetic
     /// deployments).
     pub fn from_parts(model: &str, spec: NetSpec, weights: Vec<Mat>,

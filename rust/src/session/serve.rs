@@ -948,7 +948,10 @@ pub enum TraceCmd {
 }
 
 /// A worked sample trace (also what `priot serve` runs when no `--trace`
-/// file is given): two devices with different methods and local drifts.
+/// file is given): two devices with different methods and local drifts —
+/// including an arbitrary-angle drift (60°), which the CLI resolves by
+/// generating the dataset in-process when no artifact exists
+/// ([`crate::data::DataSource`]).
 pub const DEMO_TRACE: &str = "\
 # priot serve demo trace: <verb> <device> [key=value]...
 register dev-a seed=1 method=priot angle=30
@@ -962,6 +965,9 @@ evaluate dev-b
 drift dev-a 45           # drift takes its angle positionally too
 train dev-a epochs=1
 evaluate dev-a
+drift dev-b 60           # any angle: no 60-degree artifact is ever built
+train dev-b epochs=1
+evaluate dev-b
 ";
 
 /// Parse a request trace: one command per line, `# comments` and blank
@@ -1113,7 +1119,7 @@ mod tests {
     #[test]
     fn parse_trace_demo_roundtrip() {
         let cmds = parse_trace(DEMO_TRACE).unwrap();
-        assert_eq!(cmds.len(), 11);
+        assert_eq!(cmds.len(), 14);
         assert_eq!(cmds[0], TraceCmd::Register {
             device: "dev-a".into(),
             seed: 1,

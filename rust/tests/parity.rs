@@ -17,6 +17,11 @@ use priot::session::{Backend, Session, SessionBuilder};
 fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !p.join("tinycnn_priot_step.hlo.txt").exists() {
+        assert!(
+            !priot::ptest::ci_strict(),
+            "PRIOT_CI=1: PJRT parity would skip (HLO artifacts missing — \
+             run `make artifacts`)"
+        );
         eprintln!("skipping: artifacts missing — run `make artifacts` first");
         return None;
     }
@@ -26,6 +31,11 @@ fn artifacts() -> Option<PathBuf> {
 fn cfg(dir: &Path, method: &str, extra: &[(&str, &str)]) -> ExperimentConfig {
     let mut c = Config::default();
     c.set("artifacts", dir.to_str().unwrap());
+    // Data is generated in-process (small sets: parity runs are a few
+    // dozen steps); only the backbone + HLO graphs come from artifacts.
+    c.set("source", "generated");
+    c.set("gen_train", "64");
+    c.set("gen_test", "64");
     c.set("method", method);
     c.set("angle", "30");
     for (k, v) in extra {
