@@ -3,12 +3,17 @@
 //! (2) end-to-end requests/sec through a long-lived `FleetServer`, over
 //! both transports: the in-process `ChannelTransport` and a TCP loopback
 //! connection (same codec, same dispatch path — the delta is pure
-//! transport cost, including dataset payloads on the wire).
+//! transport cost, including dataset payloads on the wire), and
+//! (3) eviction pressure: the same device round-robin with
+//! `resident_cap` ≪ device count over a `DiskStore`, reporting
+//! rehydrations/sec and the throughput delta vs all-resident — the LRU
+//! cost tracked from day one.
 //!
 //! Runs on any checkout: uses the real artifacts when present, otherwise a
 //! synthetic backbone + datasets with identical shapes.
 //!
-//! `cargo bench --bench serve [-- --devices N --eval-n N --reps N]`.
+//! `cargo bench --bench serve [-- --devices N --eval-n N --reps N
+//! --rounds N]`.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -45,6 +50,7 @@ fn stream_requests(client: &mut FleetClient, devices: usize,
                 method,
                 train: Arc::clone(train),
                 test: Arc::clone(test),
+                angle: None,
             })
             .expect("register");
         client
@@ -71,6 +77,22 @@ fn build_server(backbone: &Arc<Backbone>) -> FleetServer {
         .limit(128)
         .eval_batch(16)
         .build()
+}
+
+/// Synchronous device round-robin: every touch of a device under a tight
+/// `resident_cap` forces an eviction of the LRU device and a rehydration
+/// of this one, so the measured wall time is dominated by LRU churn.
+/// One train epoch + one evaluate per device per round.
+fn eviction_rounds(client: &mut FleetClient, devices: usize, rounds: usize) {
+    for _ in 0..rounds {
+        for i in 0..devices {
+            let device = format!("dev-{i:02}");
+            let r = client.train(&device, 1).expect("train");
+            assert!(!r.is_error(), "{r:?}");
+            let r = client.evaluate(&device).expect("evaluate");
+            assert!(!r.is_error(), "{r:?}");
+        }
+    }
 }
 
 fn main() {
@@ -160,5 +182,69 @@ fn main() {
          loopback TCP)",
         chan_report.requests_per_sec(),
         tcp_report.requests_per_sec()
+    );
+
+    // -- Part 4: eviction pressure (resident_cap ≪ device count) ----------
+    let rounds = get("--rounds", 3);
+    let cap = 2usize;
+    println!(
+        "\n## eviction pressure — {} devices, resident_cap {}, {} rounds \
+         of train(1)+evaluate per device\n",
+        devices, cap, rounds
+    );
+    let register_all = |client: &mut FleetClient| {
+        for i in 0..devices {
+            let method = if i % 2 == 0 {
+                MethodSpec::priot()
+            } else {
+                MethodSpec::priot_s(0.1, Selection::WeightBased)
+            };
+            let r = client
+                .register(&format!("dev-{i:02}"), (i + 1) as u32, method,
+                          Arc::clone(&train), Arc::clone(&test))
+                .expect("register");
+            assert!(!r.is_error(), "{r:?}");
+        }
+    };
+    // Baseline: every device stays resident.
+    let server = build_server(&backbone);
+    let mut client = server.local_client();
+    register_all(&mut client);
+    eviction_rounds(&mut client, devices, rounds);
+    drop(client);
+    let all_resident = server.join().expect("serve join (all-resident)");
+    println!("all-resident: {}", all_resident.summary());
+
+    // Same traffic with a 2-session LRU over an on-disk store: every
+    // device touch beyond the cap is an evict + rehydrate round-trip
+    // through the snapshot codec and the filesystem.
+    let state_dir = std::env::temp_dir().join("priot_serve_bench_state");
+    let _ = std::fs::remove_dir_all(&state_dir);
+    let server = FleetServer::builder(Arc::clone(&backbone))
+        .limit(128)
+        .eval_batch(16)
+        .state_dir(&state_dir)
+        .expect("state dir")
+        .resident_cap(cap)
+        .build();
+    let mut client = server.local_client();
+    register_all(&mut client);
+    eviction_rounds(&mut client, devices, rounds);
+    drop(client);
+    let evicted = server.join().expect("serve join (evicted)");
+    let _ = std::fs::remove_dir_all(&state_dir);
+    println!("cap={cap}:        {}", evicted.summary());
+    if devices > cap {
+        assert!(evicted.rehydrations > 0,
+                "cap {cap} over {devices} devices must churn the LRU");
+    }
+    println!(
+        "\n(LRU cost: {:.1} req/s all-resident vs {:.1} req/s at cap {} — \
+         {:.1} rehydrations/s, {:.2}x throughput)",
+        all_resident.requests_per_sec(),
+        evicted.requests_per_sec(),
+        cap,
+        evicted.rehydrations_per_sec(),
+        evicted.requests_per_sec() / all_resident.requests_per_sec().max(1e-9)
     );
 }

@@ -48,7 +48,24 @@
 //!   a bounded per-device inflight window.  Driven by the `priot serve`
 //!   CLI (in-process trace replay or `--listen` TCP) and `priot client`
 //!   (trace replay against a remote server); benchmarked by the `serve`
-//!   bench (requests/sec over both transports + batched-eval speedup).
+//!   bench (requests/sec over both transports + batched-eval speedup +
+//!   LRU churn under eviction pressure).
+//!
+//! ## Durable per-device state
+//!
+//! [`store`] is the persistence layer under the serving stack: PRIOT's
+//! integer state (scores, masks, static scales) snapshots **bit-exactly**
+//! ([`session::Session::snapshot`] / [`session::Session::rehydrate`] —
+//! a rehydrated session's trajectories are byte-identical), so a
+//! [`store::StateStore`] ([`store::MemStore`] in memory,
+//! [`store::DiskStore`] dir-per-device with atomic write-rename) makes
+//! fleets durable: `ServeBuilder::state_dir(..)` writes every device's
+//! snapshot through on each completed state-mutating request, a
+//! restarted `priot serve --state-dir ...` resumes every device where
+//! it left off (re-sent registers resume instead of erroring), and
+//! `resident_cap(N)` turns the registry into an LRU of live sessions
+//! over the store — idle devices evict, any request rehydrates them
+//! losslessly.
 //!
 //! ## The wire protocol
 //!
@@ -129,6 +146,7 @@ pub mod runtime;
 pub mod serial;
 pub mod session;
 pub mod spec;
+pub mod store;
 pub mod tensor;
 
 pub use session::serve;

@@ -6,6 +6,7 @@
 //! priot compare [--epochs 8] [--limit 384]        all methods, one seed
 //! priot fleet   [--devices 8] [--angles 0,30,60]  multi-device simulation
 //! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
+//!               [--state-dir DIR] [--resident-cap N]   durable + LRU-bounded
 //! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
@@ -330,6 +331,12 @@ fn trace_text(args: &Args) -> Result<String> {
 ///   against it).
 /// * `priot serve [--trace FILE]` — replay a scripted request trace over
 ///   an in-process client (the built-in demo trace by default).
+///
+/// Durability: `--state-dir DIR` persists every device's state (a
+/// restarted server resumes each device where it left off; re-sent
+/// registers resume instead of erroring), and `--resident-cap N` bounds
+/// live sessions — idle devices beyond N are evicted to the store and
+/// rehydrated bit-identically on their next request.
 fn cmd_serve(args: &Args) -> Result<()> {
     use priot::session::serve;
 
@@ -337,21 +344,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let limit: usize = args.option("limit").unwrap_or("256").parse()?;
     let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
     let window: usize = args.option("window").unwrap_or("64").parse()?;
+    let resident_cap: usize =
+        args.option("resident-cap").unwrap_or("0").parse()?;
     // One config resolves everything path-shaped (`--artifacts`, a
     // `--config` file, `--model`, `--dataset`, `--source`...), so the
     // backbone and the datasets can never come from different roots.
     let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
 
     let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
-    let mut server = priot::session::FleetServer::builder(backbone)
+    let mut builder = priot::session::FleetServer::builder(backbone)
         .threads(threads)
         .limit(limit)
         .eval_batch(eval_batch)
         .window(window)
+        .resident_cap(resident_cap)
         // A listener runs until interrupted and never join()s, so don't
         // accumulate a server-side copy of every response.
-        .record(args.option("listen").is_none())
-        .build();
+        .record(args.option("listen").is_none());
+    if let Some(dir) = args.option("state-dir") {
+        builder = builder.state_dir(dir)?;
+        eprintln!("(durable fleet: device state under {dir})");
+    }
+    let mut server = builder.build();
 
     if let Some(addr) = args.option("listen") {
         if args.option("trace").is_some() {
@@ -497,7 +511,9 @@ fn print_help() {
          \x20 eval         evaluate the backbone on a dataset\n\
          \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
          \x20 fleet        simulate N devices adapting concurrently (--angles 0,30,60)\n\
-         \x20 serve        long-lived fleet service (--trace replay or --listen ADDR)\n\
+         \x20 serve        long-lived fleet service (--trace replay or --listen ADDR;\n\
+         \x20              --state-dir DIR = durable restart-resume, --resident-cap N\n\
+         \x20              = LRU-bound live sessions over the store)\n\
          \x20 client       replay a request trace against a remote server over TCP\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\

@@ -122,8 +122,24 @@ pub trait MethodPlugin: Send {
         None
     }
 
+    /// Mutable existence masks (exact-state rehydration writes restored
+    /// masks back here — see [`crate::session::Session::rehydrate`]).
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        None
+    }
+
     /// Pruning threshold θ, if the method prunes.
     fn theta(&self) -> Option<i32> {
+        None
+    }
+
+    /// The serializable [`crate::proto::MethodSpec`] describing this
+    /// plugin, when its configuration is expressible as one — what a
+    /// durable snapshot stores so the plugin can be rebuilt bit-identically
+    /// on rehydration.  `None` means the configuration has no wire
+    /// description (e.g. ablation-only knobs); sessions over such a
+    /// plugin refuse to snapshot rather than silently dropping state.
+    fn method_spec(&self) -> Option<crate::proto::MethodSpec> {
         None
     }
 
@@ -256,6 +272,14 @@ impl MethodPlugin for Niti {
     fn pjrt_plan(&self) -> Option<PjrtPlan> {
         // dynamic-niti has no AOT artifact (data-dependent scales)
         (!self.dynamic).then_some(PjrtPlan::NitiStep)
+    }
+
+    fn method_spec(&self) -> Option<crate::proto::MethodSpec> {
+        Some(if self.dynamic {
+            crate::proto::MethodSpec::niti_dynamic()
+        } else {
+            crate::proto::MethodSpec::niti_static()
+        })
     }
 }
 
@@ -400,6 +424,10 @@ impl MethodPlugin for Priot {
         Some(&self.st.masks)
     }
 
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.masks)
+    }
+
     fn theta(&self) -> Option<i32> {
         Some(self.theta)
     }
@@ -415,6 +443,14 @@ impl MethodPlugin for Priot {
 
     fn pjrt_plan(&self) -> Option<PjrtPlan> {
         Some(PjrtPlan::ScoreStep)
+    }
+
+    fn method_spec(&self) -> Option<crate::proto::MethodSpec> {
+        // The stochastic-rounding ablation knob has no wire description;
+        // a session over it cannot be snapshotted.
+        (!self.sr).then(|| {
+            crate::proto::MethodSpec::priot().with_theta(self.theta)
+        })
     }
 }
 
@@ -520,6 +556,10 @@ impl MethodPlugin for PriotS {
         Some(&self.st.masks)
     }
 
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.masks)
+    }
+
     fn theta(&self) -> Option<i32> {
         Some(self.theta)
     }
@@ -535,6 +575,13 @@ impl MethodPlugin for PriotS {
 
     fn pjrt_plan(&self) -> Option<PjrtPlan> {
         Some(PjrtPlan::ScoreStep)
+    }
+
+    fn method_spec(&self) -> Option<crate::proto::MethodSpec> {
+        Some(
+            crate::proto::MethodSpec::priot_s(self.frac_scored, self.selection)
+                .with_theta(self.theta),
+        )
     }
 }
 

@@ -135,15 +135,29 @@ impl FleetClient {
     /// Register a device (synchronous).  Server-side failures come back
     /// as a [`Response::Error`] value, not an `Err` — transport and
     /// protocol failures are the `Err` path.
+    ///
+    /// Registering a device the server already knows (same seed and
+    /// method) is a *resume*: the device keeps its adapted state and the
+    /// response comes back with `resumed: true` — so re-sending the
+    /// register after a reconnect or a server restart is safe.
     pub fn register(&mut self, device: &str, seed: u32, method: MethodSpec,
                     train: Arc<Dataset>, test: Arc<Dataset>)
                     -> Result<Response> {
+        self.register_at(device, seed, method, train, test, None)
+    }
+
+    /// [`Self::register`] with explicit data provenance (e.g. the trace's
+    /// drift angle), recorded in the device's durable snapshot.
+    pub fn register_at(&mut self, device: &str, seed: u32, method: MethodSpec,
+                       train: Arc<Dataset>, test: Arc<Dataset>,
+                       angle: Option<u32>) -> Result<Response> {
         self.call(Request::Register {
             device: device.to_string(),
             seed,
             method,
             train,
             test,
+            angle,
         })
     }
 
@@ -166,6 +180,19 @@ impl FleetClient {
     /// Swap the device's local datasets (synchronous).
     pub fn drift(&mut self, device: &str, train: Arc<Dataset>,
                  test: Arc<Dataset>) -> Result<Response> {
-        self.call(Request::Drift { device: device.to_string(), train, test })
+        self.drift_at(device, train, test, None)
+    }
+
+    /// [`Self::drift`] with explicit data provenance (see
+    /// [`Self::register_at`]).
+    pub fn drift_at(&mut self, device: &str, train: Arc<Dataset>,
+                    test: Arc<Dataset>, angle: Option<u32>)
+                    -> Result<Response> {
+        self.call(Request::Drift {
+            device: device.to_string(),
+            train,
+            test,
+            angle,
+        })
     }
 }

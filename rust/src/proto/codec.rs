@@ -27,11 +27,15 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Method, Selection};
 use crate::serial::Dataset;
 
-use super::{MethodSpec, Priority, Request, Response};
+use super::{ErrorKind, MethodSpec, Priority, Request, Response};
 
 /// Protocol revision spoken by this build.  Bump on any layout change;
 /// decoders reject other versions with a clean error.
-pub const PROTO_VERSION: u8 = 1;
+///
+/// v2 (the durable-state revision): `Registered` carries a `resumed`
+/// flag, `Error` carries an [`ErrorKind`] byte, and `Register`/`Drift`
+/// carry an optional drift-angle provenance field.
+pub const PROTO_VERSION: u8 = 2;
 
 /// The protocol-wide frame budget, enforced by **every** transport on
 /// send and receive (so a too-large request fails identically in-process
@@ -60,19 +64,19 @@ const RESP_ERROR: u8 = 5;
 // Writing
 // ---------------------------------------------------------------------------
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
     put_u64(buf, v.to_bits());
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u32(buf, s.len() as u32);
     buf.extend_from_slice(s.as_bytes());
 }
@@ -82,7 +86,18 @@ fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
     buf.extend_from_slice(b);
 }
 
-fn put_dataset(buf: &mut Vec<u8>, ds: &Dataset) {
+/// Optional u32: a presence byte, then the value when present.
+pub(crate) fn put_opt_u32(buf: &mut Vec<u8>, v: Option<u32>) {
+    match v {
+        None => buf.push(0),
+        Some(x) => {
+            buf.push(1);
+            put_u32(buf, x);
+        }
+    }
+}
+
+pub(crate) fn put_dataset(buf: &mut Vec<u8>, ds: &Dataset) {
     put_u32(buf, ds.n as u32);
     put_u32(buf, ds.c as u32);
     put_u32(buf, ds.h as u32);
@@ -91,7 +106,7 @@ fn put_dataset(buf: &mut Vec<u8>, ds: &Dataset) {
     buf.extend_from_slice(&ds.labels);
 }
 
-fn put_method(buf: &mut Vec<u8>, m: &MethodSpec) {
+pub(crate) fn put_method(buf: &mut Vec<u8>, m: &MethodSpec) {
     buf.push(match m.method {
         Method::StaticNiti => 0,
         Method::DynamicNiti => 1,
@@ -120,13 +135,14 @@ pub fn encode_request(id: u64, priority: Priority, req: &Request) -> Vec<u8> {
     put_u64(&mut buf, id);
     buf.push(priority.to_u8());
     match req {
-        Request::Register { device, seed, method, train, test } => {
+        Request::Register { device, seed, method, train, test, angle } => {
             buf.push(REQ_REGISTER);
             put_str(&mut buf, device);
             put_u32(&mut buf, *seed);
             put_method(&mut buf, method);
             put_dataset(&mut buf, train);
             put_dataset(&mut buf, test);
+            put_opt_u32(&mut buf, *angle);
         }
         Request::Train { device, epochs } => {
             buf.push(REQ_TRAIN);
@@ -142,11 +158,12 @@ pub fn encode_request(id: u64, priority: Priority, req: &Request) -> Vec<u8> {
             buf.push(REQ_EVALUATE);
             put_str(&mut buf, device);
         }
-        Request::Drift { device, train, test } => {
+        Request::Drift { device, train, test, angle } => {
             buf.push(REQ_DRIFT);
             put_str(&mut buf, device);
             put_dataset(&mut buf, train);
             put_dataset(&mut buf, test);
+            put_opt_u32(&mut buf, *angle);
         }
     }
     buf
@@ -159,9 +176,10 @@ pub fn encode_response(id: u64, resp: &Response) -> Vec<u8> {
     buf.push(FRAME_RESPONSE);
     put_u64(&mut buf, id);
     match resp {
-        Response::Registered { device } => {
+        Response::Registered { device, resumed } => {
             buf.push(RESP_REGISTERED);
             put_str(&mut buf, device);
+            buf.push(u8::from(*resumed));
         }
         Response::TrainDone { device, epochs, steps, train_accuracy } => {
             buf.push(RESP_TRAIN_DONE);
@@ -185,9 +203,10 @@ pub fn encode_response(id: u64, resp: &Response) -> Vec<u8> {
             buf.push(RESP_DRIFTED);
             put_str(&mut buf, device);
         }
-        Response::Error { device, message } => {
+        Response::Error { device, kind, message } => {
             buf.push(RESP_ERROR);
             put_str(&mut buf, device);
+            buf.push(kind.to_u8());
             put_str(&mut buf, message);
         }
     }
@@ -200,17 +219,19 @@ pub fn encode_response(id: u64, resp: &Response) -> Vec<u8> {
 
 /// Checked cursor over one frame: every read names what it is reading, so
 /// a truncated frame yields "frame truncated reading X", never a panic.
-struct Reader<'a> {
+/// Crate-visible so the [`crate::store`] snapshot codec decodes with the
+/// same discipline.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
         if self.buf.len() - self.pos < n {
             bail!(
                 "frame truncated reading {what} (need {n} bytes at offset {}, \
@@ -224,16 +245,16 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    fn u8(&mut self, what: &str) -> Result<u8> {
+    pub(crate) fn u8(&mut self, what: &str) -> Result<u8> {
         Ok(self.take(1, what)?[0])
     }
 
-    fn u32(&mut self, what: &str) -> Result<u32> {
+    pub(crate) fn u32(&mut self, what: &str) -> Result<u32> {
         let b = self.take(4, what)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self, what: &str) -> Result<u64> {
+    pub(crate) fn u64(&mut self, what: &str) -> Result<u64> {
         let b = self.take(8, what)?;
         Ok(u64::from_le_bytes([
             b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
@@ -244,7 +265,16 @@ impl<'a> Reader<'a> {
         Ok(f64::from_bits(self.u64(what)?))
     }
 
-    fn str(&mut self, what: &str) -> Result<String> {
+    /// Optional u32 written by [`put_opt_u32`].
+    pub(crate) fn opt_u32(&mut self, what: &str) -> Result<Option<u32>> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u32(what)?)),
+            other => bail!("bad {what} presence flag {other} (want 0|1)"),
+        }
+    }
+
+    pub(crate) fn str(&mut self, what: &str) -> Result<String> {
         let len = self.u32(what)? as usize;
         let bytes = self.take(len, what)?;
         String::from_utf8(bytes.to_vec())
@@ -256,7 +286,7 @@ impl<'a> Reader<'a> {
         Ok(self.take(len, what)?.to_vec())
     }
 
-    fn dataset(&mut self, what: &str) -> Result<Arc<Dataset>> {
+    pub(crate) fn dataset(&mut self, what: &str) -> Result<Arc<Dataset>> {
         let n = self.u32(what)? as usize;
         let c = self.u32(what)? as usize;
         let h = self.u32(what)? as usize;
@@ -276,7 +306,7 @@ impl<'a> Reader<'a> {
         Ok(Arc::new(Dataset { n, c, h, w, images, labels }))
     }
 
-    fn method(&mut self) -> Result<MethodSpec> {
+    pub(crate) fn method(&mut self) -> Result<MethodSpec> {
         let method = match self.u8("method tag")? {
             0 => Method::StaticNiti,
             1 => Method::DynamicNiti,
@@ -300,7 +330,7 @@ impl<'a> Reader<'a> {
 
     /// Error unless the whole frame was consumed (frames are fixed-layout:
     /// trailing bytes mean a corrupt or mismatched encoder).
-    fn finish(self, what: &str) -> Result<()> {
+    pub(crate) fn finish(self, what: &str) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!(
                 "{} trailing bytes after {what}",
@@ -359,7 +389,8 @@ pub fn decode_request(frame: &[u8]) -> Result<(u64, Priority, Request)> {
             let method = r.method()?;
             let train = r.dataset("register train set")?;
             let test = r.dataset("register test set")?;
-            Request::Register { device, seed, method, train, test }
+            let angle = r.opt_u32("register angle")?;
+            Request::Register { device, seed, method, train, test, angle }
         }
         REQ_TRAIN => Request::Train {
             device: r.str("train device")?,
@@ -374,7 +405,8 @@ pub fn decode_request(frame: &[u8]) -> Result<(u64, Priority, Request)> {
             let device = r.str("drift device")?;
             let train = r.dataset("drift train set")?;
             let test = r.dataset("drift test set")?;
-            Request::Drift { device, train, test }
+            let angle = r.opt_u32("drift angle")?;
+            Request::Drift { device, train, test, angle }
         }
         other => bail!("unknown request tag {other}"),
     };
@@ -388,9 +420,14 @@ pub fn decode_response(frame: &[u8]) -> Result<(u64, Response)> {
     let id = r.header(FRAME_RESPONSE, "response")?;
     let tag = r.u8("response tag")?;
     let resp = match tag {
-        RESP_REGISTERED => {
-            Response::Registered { device: r.str("registered device")? }
-        }
+        RESP_REGISTERED => Response::Registered {
+            device: r.str("registered device")?,
+            resumed: match r.u8("registered resumed flag")? {
+                0 => false,
+                1 => true,
+                other => bail!("bad resumed flag {other} (want 0|1)"),
+            },
+        },
         RESP_TRAIN_DONE => Response::TrainDone {
             device: r.str("train-done device")?,
             epochs: r.u64("train-done epochs")? as usize,
@@ -409,6 +446,11 @@ pub fn decode_response(frame: &[u8]) -> Result<(u64, Response)> {
         RESP_DRIFTED => Response::Drifted { device: r.str("drifted device")? },
         RESP_ERROR => Response::Error {
             device: r.str("error device")?,
+            kind: {
+                let v = r.u8("error kind")?;
+                ErrorKind::from_u8(v)
+                    .with_context(|| format!("unknown error kind {v}"))?
+            },
             message: r.str("error message")?,
         },
         other => bail!("unknown response tag {other}"),

@@ -28,6 +28,14 @@
 //! train), so an interactive prediction is answered between training
 //! epochs instead of waiting behind them; see
 //! [`crate::session::serve`] for the scheduling rules.
+//!
+//! Protocol v2 (the durable-state revision) makes reconnecting clients
+//! first-class: a `Register` for a device the server already knows is a
+//! **resume** (acknowledged with `Registered { resumed: true }`),
+//! errors carry an [`ErrorKind`] so store faults are distinguishable
+//! from bad requests, and `Register`/`Drift` can carry drift-angle
+//! provenance that ends up in the device's durable snapshot
+//! ([`crate::store`]).
 
 pub mod codec;
 pub mod transport;
@@ -83,6 +91,40 @@ impl Priority {
     }
 }
 
+/// Failure class of a [`Response::Error`], so clients can distinguish a
+/// bad request from an infrastructure fault without parsing messages.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request itself failed: unknown device, invalid data, a method
+    /// error mid-op, a malformed frame, a full inflight window.
+    #[default]
+    Request,
+    /// The durable state layer failed: a snapshot was missing, corrupt,
+    /// or could not be read/written (see [`crate::store`]).
+    Store,
+    /// The server is shut down; nothing will execute this request.
+    Shutdown,
+}
+
+impl ErrorKind {
+    pub(crate) fn to_u8(self) -> u8 {
+        match self {
+            ErrorKind::Request => 0,
+            ErrorKind::Store => 1,
+            ErrorKind::Shutdown => 2,
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(ErrorKind::Request),
+            1 => Some(ErrorKind::Store),
+            2 => Some(ErrorKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
 /// The serializable description of a training method — what a `Register`
 /// carries instead of a live plugin object.  The server materializes it
 /// via [`MethodSpec::plugin`].
@@ -128,6 +170,18 @@ impl MethodSpec {
         self
     }
 
+    /// The canonical form of this description: materialize the plugin
+    /// and read its own description back.  Normalizes defaulted and
+    /// ignored fields — an unset θ becomes the method's actual default,
+    /// and PRIOT-S-only knobs collapse to their defaults for methods
+    /// that ignore them — so equality on canonical specs is the right
+    /// "same method?" test.  The server canonicalizes at ingress, and
+    /// snapshots store canonical specs by construction, so resume and
+    /// rehydrate identity checks compare like with like.
+    pub fn canonical(&self) -> MethodSpec {
+        self.plugin().method_spec().unwrap_or_else(|| self.clone())
+    }
+
     /// Materialize the described method as a live plugin.
     pub fn plugin(&self) -> Box<dyn MethodPlugin> {
         match self.method {
@@ -160,12 +214,25 @@ impl MethodSpec {
 pub enum Request {
     /// Add a device: the server builds a session over its shared backbone
     /// after validating the device's data against the backbone spec.
+    ///
+    /// A `Register` for a device the server already knows — resident,
+    /// evicted to its state store, or recovered from a previous process —
+    /// is a **resume handshake**: the server keeps the device's state,
+    /// ignores the supplied datasets, and acknowledges with
+    /// [`Response::Registered`]`{ resumed: true }` (identity — seed and
+    /// method — must match, otherwise the register errors).  That makes
+    /// reconnecting clients first-class: replaying a trace's register
+    /// line after a connection drop or a server restart is safe.
     Register {
         device: String,
         seed: u32,
         method: MethodSpec,
         train: Arc<Dataset>,
         test: Arc<Dataset>,
+        /// Data provenance, when the client knows it (e.g. the trace's
+        /// symbolic rotation angle).  Recorded in the device's durable
+        /// snapshot; never interpreted by the server.
+        angle: Option<u32>,
     },
     /// Adapt for `epochs` epochs on the device's local train set.
     Train { device: String, epochs: usize },
@@ -181,6 +248,9 @@ pub enum Request {
         device: String,
         train: Arc<Dataset>,
         test: Arc<Dataset>,
+        /// Provenance of the drifted data, when known (see
+        /// [`Request::Register::angle`]).
+        angle: Option<u32>,
     },
 }
 
@@ -213,7 +283,11 @@ impl Request {
 /// one produced in-process.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Registered { device: String },
+    /// One completed [`Request::Register`].  `resumed` is the resume
+    /// acknowledgment: `true` means the device already existed (live in
+    /// the registry or rehydratable from the state store) and kept its
+    /// adapted state — the supplied datasets were ignored.
+    Registered { device: String, resumed: bool },
     /// One completed [`Request::Train`]: epochs and **executed** steps.
     TrainDone {
         device: String,
@@ -224,13 +298,13 @@ pub enum Response {
     Prediction { device: String, class: usize },
     Evaluation { device: String, accuracy: f64, n: usize },
     Drifted { device: String },
-    Error { device: String, message: String },
+    Error { device: String, kind: ErrorKind, message: String },
 }
 
 impl Response {
     pub fn device(&self) -> &str {
         match self {
-            Response::Registered { device }
+            Response::Registered { device, .. }
             | Response::TrainDone { device, .. }
             | Response::Prediction { device, .. }
             | Response::Evaluation { device, .. }

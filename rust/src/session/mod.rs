@@ -56,6 +56,7 @@ use crate::metrics::RunMetrics;
 use crate::quant::Scales;
 use crate::serial::{load_weights, save_weights, Dataset};
 use crate::spec::NetSpec;
+use crate::store::{PluginState, SessionSnapshot};
 use crate::tensor::Mat;
 
 /// Execution backend for a session.
@@ -269,6 +270,10 @@ pub struct Session {
     /// can reject geometry-mismatched datasets with a clean error instead
     /// of panicking deep inside the engine.
     spec: NetSpec,
+    /// The seed this session was built with, retained so
+    /// [`Session::snapshot`] can record it (rehydration replays plugin
+    /// `init` with it before restoring exact state).
+    seed: u32,
 }
 
 impl Session {
@@ -411,6 +416,172 @@ impl Session {
     pub fn theta(&self) -> Option<i32> {
         self.driver_ref().theta()
     }
+
+    /// Training steps executed so far (the counter NITI's stochastic
+    /// rounding consumes; 0 on the PJRT backend, which tracks its own).
+    pub fn steps(&self) -> u32 {
+        match &self.exec {
+            Exec::Engine(e) => e.step,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => 0,
+        }
+    }
+
+    /// Capture the session's exact mutable state as a
+    /// [`SessionSnapshot`] — the lossless counterpart of [`Self::save`]
+    /// (which narrows to portable int8 checkpoints).  A session
+    /// rehydrated from the snapshot produces **byte-identical**
+    /// predict/evaluate/train trajectories to this one: the snapshot
+    /// carries the serializable method description, the seed, the
+    /// executed-step counter, and the exact i32 plugin state (scores +
+    /// masks, or trained weights for weight-state methods).
+    ///
+    /// Errors when the method cannot be described as a
+    /// [`crate::proto::MethodSpec`] (e.g. ablation-only knobs) or the
+    /// session runs on the PJRT backend.
+    pub fn snapshot(&self) -> Result<SessionSnapshot> {
+        let e = match &self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => {
+                bail!("snapshot requires the engine backend")
+            }
+        };
+        let method = e.plugin.method_spec().ok_or_else(|| {
+            anyhow!(
+                "method {} has no serializable MethodSpec — snapshot \
+                 unsupported",
+                e.plugin.name()
+            )
+        })?;
+        let state = match (e.plugin.scores(), e.plugin.masks()) {
+            (Some(scores), Some(masks)) => PluginState::Scores {
+                scores: scores.to_vec(),
+                masks: masks.to_vec(),
+            },
+            // Weight-state method (NITI): the trained state lives in the
+            // executor's weights.
+            _ => PluginState::Weights(
+                e.engine.weights.iter().map(|w| w.data.clone()).collect(),
+            ),
+        };
+        Ok(SessionSnapshot {
+            model: self.spec.name.clone(),
+            seed: self.seed,
+            method,
+            step: e.step,
+            eval_batch: self.opts.eval_batch,
+            limit: self.opts.limit,
+            state,
+        })
+    }
+
+    /// Rebuild a session from a [`SessionSnapshot`] over a shared
+    /// backbone — the exact inverse of [`Self::snapshot`].  The plugin is
+    /// rebuilt from the snapshot's method spec, initialized with the
+    /// recorded seed, then every mutable value (scores, masks, weights,
+    /// step counter) is overwritten with the snapshot's exact i32 state,
+    /// so the rehydrated session's trajectories are byte-identical to the
+    /// original's.
+    ///
+    /// Presentation-only options (`epochs`, `verbose`, `track_pruning`)
+    /// are not part of a snapshot; adjust them via
+    /// [`Self::options_mut`] after rehydrating if needed.
+    pub fn rehydrate(backbone: &Arc<Backbone>, snap: &SessionSnapshot)
+                     -> Result<Session> {
+        if snap.model != backbone.model {
+            bail!(
+                "snapshot is for model {}, backbone is {}",
+                snap.model, backbone.model
+            );
+        }
+        let mut session = Session::builder()
+            .backbone(Arc::clone(backbone))
+            .method_boxed(snap.method.plugin())
+            .seed(snap.seed)
+            .eval_batch(snap.eval_batch)
+            .limit(snap.limit)
+            .track_pruning(false)
+            .build()?;
+        let e = match &mut session.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => unreachable!("rehydrate builds engine sessions"),
+        };
+        e.step = snap.step;
+        match &snap.state {
+            PluginState::Scores { scores, masks } => {
+                let dst = e.plugin.scores_mut().ok_or_else(|| {
+                    anyhow!(
+                        "snapshot carries score state but method {} keeps \
+                         none",
+                        snap.method.method.name()
+                    )
+                })?;
+                copy_layers("scores", dst, scores)?;
+                let dst = e.plugin.masks_mut().ok_or_else(|| {
+                    anyhow!(
+                        "snapshot carries masks but method {} keeps none",
+                        snap.method.method.name()
+                    )
+                })?;
+                copy_layers("masks", dst, masks)?;
+            }
+            PluginState::Weights(saved) => {
+                if e.plugin.scores().is_some() {
+                    bail!(
+                        "snapshot carries weight state but method {} keeps \
+                         scores",
+                        snap.method.method.name()
+                    );
+                }
+                // Copy-on-write: a fleet sibling's shared view is never
+                // touched.
+                let weights = Arc::make_mut(&mut e.engine.weights);
+                if saved.len() != weights.len() {
+                    bail!(
+                        "snapshot has {} weight tensors, backbone has {}",
+                        saved.len(), weights.len()
+                    );
+                }
+                for (li, (w, s)) in
+                    weights.iter_mut().zip(saved.iter()).enumerate()
+                {
+                    if s.len() != w.data.len() {
+                        bail!(
+                            "snapshot weights layer {li}: {} values, \
+                             want {}",
+                            s.len(), w.data.len()
+                        );
+                    }
+                    w.data.copy_from_slice(s);
+                }
+            }
+        }
+        Ok(session)
+    }
+}
+
+/// Overwrite per-layer state with snapshot layers, validating counts and
+/// lengths so a mismatched snapshot is a contextful error, not a panic.
+fn copy_layers(what: &str, dst: &mut [Vec<i32>], src: &[Vec<i32>])
+               -> Result<()> {
+    if dst.len() != src.len() {
+        bail!(
+            "snapshot {what}: {} layers, session has {}",
+            src.len(), dst.len()
+        );
+    }
+    for (li, (d, s)) in dst.iter_mut().zip(src.iter()).enumerate() {
+        if d.len() != s.len() {
+            bail!(
+                "snapshot {what} layer {li}: {} values, want {}",
+                s.len(), d.len()
+            );
+        }
+        d.copy_from_slice(s);
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -576,6 +747,6 @@ impl SessionBuilder {
             }
             Backend::Pjrt => build_pjrt(&self.artifacts, &backbone, plugin)?,
         };
-        Ok(Session { exec, opts, spec })
+        Ok(Session { exec, opts, spec, seed: self.seed })
     }
 }

@@ -34,6 +34,13 @@
 //!   ([`ServeBuilder::window`]): a device with too many unanswered
 //!   requests gets an immediate `Error` response instead of an unbounded
 //!   backlog.
+//! * **Heavy work never runs on the dispatcher thread.**  `Register` —
+//!   dataset validation, session construction, store lookups — executes
+//!   on the worker pool like everything else (the dispatcher only
+//!   creates the registry entry and queues the register unit at the
+//!   head of the device's lanes, so it is guaranteed to run before any
+//!   op pipelined behind it).  One slow register therefore cannot stall
+//!   dispatch for other connections.
 //!
 //! Operations of one device never run concurrently, so per-device
 //! results are bit-identical to a standalone session executing the same
@@ -45,6 +52,33 @@
 //! Evaluation goes through the batched forward path
 //! ([`Session::evaluate_batch`]) — bit-identical to per-sample, faster.
 //!
+//! ## Durable state and the LRU of resident sessions
+//!
+//! With a [`StateStore`] attached ([`ServeBuilder::store`] /
+//! [`ServeBuilder::state_dir`]), every device's state is **durable**:
+//!
+//! * Each completed state-mutating request (`Train`, `Drift`, the
+//!   initial `Register`) writes the device's [`DeviceSnapshot`] —
+//!   exact-i32 scores/masks/weights, step counter, datasets, epoch
+//!   progress, drift-angle provenance — *before* its response is
+//!   emitted, so any state a client has been told about survives a
+//!   crash.
+//! * [`ServeBuilder::resident_cap`]`(N)` bounds **live** sessions: the
+//!   registry becomes an LRU over the store.  When more than `N`
+//!   devices are resident, the least-recently-used *idle* device (no
+//!   pending requests — eviction happens at op-queue idle points, never
+//!   mid-request) is flushed and dropped from memory.  Any later
+//!   request to an evicted device lazily rehydrates it on the worker
+//!   pool — bit-identically, so an evicted-and-rehydrated device's
+//!   responses are byte-equal to an always-resident one's.
+//! * A `Register` for a device the server already knows — live,
+//!   evicted, or recovered from a previous process (`priot serve
+//!   --state-dir` rescans the store at startup) — is a **resume**:
+//!   state is kept, the supplied datasets are ignored, and the response
+//!   says `resumed: true`, making reconnecting clients first-class.
+//! * [`FleetServer::join`] flushes all dirty state; a restarted server
+//!   over the same store resumes every device where it left off.
+//!
 //! ```no_run
 //! use priot::proto::{FleetClient, MethodSpec};
 //! use priot::session::{Backbone, FleetServer};
@@ -52,22 +86,26 @@
 //! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
 //! # let (train, test): (std::sync::Arc<priot::serial::Dataset>,
 //! #                     std::sync::Arc<priot::serial::Dataset>) = todo!();
-//! let mut server = FleetServer::builder(backbone).threads(4).build();
+//! let mut server = FleetServer::builder(backbone)
+//!     .threads(4)
+//!     .state_dir("fleet-state")?   // durable; restart-resumable
+//!     .resident_cap(64)            // LRU-bound live sessions
+//!     .build();
 //! let addr = server.listen("127.0.0.1:0")?;   // or server.local_client()
 //! let mut client = FleetClient::connect(addr)?;
 //! client.register("dev-00", 1, MethodSpec::priot(), train, test)?;
 //! client.train("dev-00", 2)?;
 //! client.evaluate("dev-00")?;
 //! drop(client);                    // close the connection...
-//! let report = server.join()?;     // ...then drain + shut down
+//! let report = server.join()?;     // ...then drain + flush + shut down
 //! println!("{}", report.summary());
 //! # anyhow::Ok(())
 //! ```
 //!
 //! The `priot serve` CLI subcommand drives a server from a scripted
 //! request trace ([`parse_trace`]; [`DEMO_TRACE`] is a worked sample) or
-//! listens on TCP (`--listen`); `priot client` replays a trace against a
-//! remote server.
+//! listens on TCP (`--listen`, with `--state-dir`/`--resident-cap` for
+//! durability); `priot client` replays a trace against a remote server.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener};
@@ -83,10 +121,11 @@ use crate::config::Method;
 use crate::coordinator::capped;
 use crate::proto::codec;
 use crate::proto::{
-    ChannelTransport, FleetClient, MethodSpec, Priority, Request, Response,
-    TcpTransport, Transport,
+    ChannelTransport, ErrorKind, FleetClient, MethodSpec, Priority, Request,
+    Response, TcpTransport, Transport,
 };
 use crate::serial::{u8_to_i32_pixels, Dataset};
+use crate::store::{DeviceSnapshot, DiskStore, MemStore, StateStore};
 
 use super::{Backbone, Session};
 
@@ -135,6 +174,7 @@ fn read_loop(shared: &Shared,
                 respond(shared, reply, codec::frame_request_id(&frame),
                         Response::Error {
                             device: String::new(),
+                            kind: ErrorKind::Request,
                             message: format!("bad request frame: {e:#}"),
                         });
             }
@@ -177,10 +217,19 @@ fn spawn_connection(
 /// single item that yields one epoch per turn at the device — the unit
 /// the priority lanes preempt at.
 enum Work {
+    /// Build (or resume) the device's session — always the device's
+    /// first unit, executed on the worker pool (never the dispatcher).
+    Register {
+        seed: u32,
+        method: MethodSpec,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+        angle: Option<u32>,
+    },
     Train { remaining: usize, done: usize, steps: u64 },
     Predict { image: Vec<u8> },
     Evaluate,
-    Drift { train: Arc<Dataset>, test: Arc<Dataset> },
+    Drift { train: Arc<Dataset>, test: Arc<Dataset>, angle: Option<u32> },
 }
 
 /// One queued request: its id, reply route, and pending work.
@@ -190,11 +239,28 @@ struct Item {
     work: Work,
 }
 
-struct DeviceState {
+/// A device's in-memory presence: its live session (taken by the worker
+/// executing its current op) and its current datasets.  `None` on the
+/// [`DeviceState`] = the device is evicted (state lives in the store).
+struct Resident {
     /// `None` while a worker has the session checked out.
     session: Option<Session>,
     train: Arc<Dataset>,
     test: Arc<Dataset>,
+}
+
+struct DeviceState {
+    /// Live state, or `None` for an evicted / not-yet-rehydrated device.
+    resident: Option<Resident>,
+    /// Registration identity — a later `Register` must match to resume.
+    seed: u32,
+    method: MethodSpec,
+    /// False until the register unit completes (the entry is provisional
+    /// and its lanes start with the register item, which runs first).
+    registered: bool,
+    /// True while an evictor is flushing this device to the store; a
+    /// worker that pops the device meanwhile steps aside and retries.
+    evicting: bool,
     /// Pending items by [`Priority`] lane; FIFO within a lane.  A device
     /// appears in the ready queue iff `queued` — never twice, so its ops
     /// can never run concurrently.
@@ -202,12 +268,57 @@ struct DeviceState {
     queued: bool,
     /// Accepted, unanswered requests (the inflight-window count).
     pending: usize,
+    /// Completed training epochs over the device's lifetime.
+    epochs_done: u64,
+    /// Data provenance of the current datasets, when the client said.
+    angle: Option<u32>,
+    /// In-memory state is newer than the store (a failed write-through
+    /// leaves this set; eviction and `join()` retry the flush).
+    dirty: bool,
+    /// LRU clock value of the device's last checkout.
+    last_used: u64,
 }
 
 impl DeviceState {
+    fn new(seed: u32, method: MethodSpec) -> Self {
+        Self {
+            resident: None,
+            seed,
+            method,
+            registered: false,
+            evicting: false,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            queued: false,
+            pending: 0,
+            epochs_done: 0,
+            angle: None,
+            dirty: false,
+            last_used: 0,
+        }
+    }
+
+    /// A registered-but-evicted entry recovered from the store at
+    /// startup: requests rehydrate it lazily; a `Register` resumes it.
+    fn from_snapshot(snap: &DeviceSnapshot) -> Self {
+        let mut st = Self::new(snap.session.seed, snap.session.method.clone());
+        st.registered = true;
+        st.epochs_done = snap.epochs_done;
+        st.angle = snap.angle;
+        st
+    }
+
     fn has_work(&self) -> bool {
         self.lanes.iter().any(|l| !l.is_empty())
     }
+}
+
+/// The device registry plus its LRU bookkeeping, under one lock.
+struct Registry {
+    map: HashMap<String, DeviceState>,
+    /// Devices with `resident.is_some()` (the LRU size).
+    resident: usize,
+    /// Monotonic LRU clock.
+    tick: u64,
 }
 
 /// Serving clock: requests/sec covers first request → last response, not
@@ -223,10 +334,16 @@ struct Shared {
     limit: usize,
     eval_batch: usize,
     window: usize,
-    devices: Mutex<HashMap<String, DeviceState>>,
-    /// Devices with pending work, round-robin.  Lock order: `devices`
-    /// before `ready`/`outstanding`/`record`/`clock`; none of those four
-    /// is ever held while taking another of them or `devices`.
+    /// Durable snapshot store; `None` = memory-only serving (no
+    /// eviction, no resume).
+    store: Option<Arc<dyn StateStore>>,
+    /// Maximum resident sessions (`usize::MAX` = unbounded).
+    resident_cap: usize,
+    /// Devices + LRU state.  Lock order: `registry` before
+    /// `ready`/`outstanding`/`record`/`clock`; none of those four is
+    /// ever held while taking another of them or `registry`.
+    registry: Mutex<Registry>,
+    /// Devices with pending work, round-robin.
     ready: Mutex<VecDeque<String>>,
     ready_cv: Condvar,
     done: AtomicBool,
@@ -234,6 +351,11 @@ struct Shared {
     outstanding: Mutex<usize>,
     idle_cv: Condvar,
     requests: AtomicU64,
+    /// Sessions rebuilt from the store (lazy rehydrations + resumed
+    /// registers).
+    rehydrations: AtomicU64,
+    /// Idle devices flushed out of memory under `resident_cap` pressure.
+    evictions: AtomicU64,
     /// Every response the run produced, completion order (the
     /// [`ServeReport`] source — per-connection streams are routed
     /// separately via [`Reply`]).
@@ -289,6 +411,15 @@ fn note_request(shared: &Shared) {
     }
 }
 
+/// Close out one answered op-request (graceful shutdown accounting).
+fn note_done(shared: &Shared, n: usize) {
+    let mut out = shared.outstanding.lock().expect("serve outstanding");
+    *out -= n;
+    if *out == 0 {
+        shared.idle_cv.notify_all();
+    }
+}
+
 fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
     for inb in rx {
         note_request(shared);
@@ -301,6 +432,7 @@ fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
         if shared.done.load(Ordering::SeqCst) {
             respond(shared, &reply, id, Response::Error {
                 device,
+                kind: ErrorKind::Shutdown,
                 message: "fleet server is shut down".into(),
             });
             continue;
@@ -308,6 +440,7 @@ fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
         if let Err(e) = handle_request(shared, inb) {
             respond(shared, &reply, id, Response::Error {
                 device,
+                kind: ErrorKind::Request,
                 message: format!("{e:#}"),
             });
         }
@@ -317,43 +450,82 @@ fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
 fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
     let Inbound { id, priority, req, reply } = inb;
     match req {
-        // Register runs inline on the dispatcher (not through the
-        // lanes): a device's lanes cannot exist before its session does,
-        // and building the session here keeps the "registered ⇔ has
-        // lanes" invariant trivially single-threaded.  The cost is that
-        // a register stalls dispatch for the duration of one session
-        // construction (sub-millisecond for the paper's models); moving
-        // construction onto the worker pool is a ROADMAP item.
-        Request::Register { device, seed, method, train, test } => {
-            crate::data::validate(&train, &shared.backbone.spec)
-                .with_context(|| format!("registering {device}: train set"))?;
-            crate::data::validate(&test, &shared.backbone.spec)
-                .with_context(|| format!("registering {device}: test set"))?;
-            let session = Session::builder()
-                .backbone(Arc::clone(&shared.backbone))
-                .method_boxed(method.plugin())
-                .seed(seed)
-                .limit(shared.limit)
-                .eval_batch(shared.eval_batch)
-                .track_pruning(false)
-                .build()
-                .with_context(|| format!("registering {device}"))?;
-            {
-                let mut devices =
-                    shared.devices.lock().expect("serve registry");
-                if devices.contains_key(&device) {
-                    bail!("device {device} already registered");
+        // Register is *routed* here but *executed* on the worker pool:
+        // dataset validation, session construction, and store lookups
+        // are heavy, and heavy work never runs on the dispatcher (a
+        // slow register must not stall dispatch for every connection).
+        // The dispatcher only does map surgery: create a provisional
+        // entry and queue the register unit at the head lane, so it is
+        // guaranteed to run before any op pipelined behind it.
+        Request::Register { device, seed, method, train, test, angle } => {
+            // Canonicalize the method description up front: snapshots
+            // store canonical specs (read back from the live plugin), so
+            // resume identity checks must compare canonical forms — a
+            // register with an unset θ must match a stored device whose
+            // snapshot spells out the method's default θ.
+            let method = method.canonical();
+            let mut reg = shared.registry.lock().expect("serve registry");
+            if let Some(st) = reg.map.get_mut(&device) {
+                if st.seed != seed || st.method != method {
+                    bail!("device {device} is already registered with a \
+                           different method or seed");
                 }
-                devices.insert(device.clone(), DeviceState {
-                    session: Some(session),
-                    train,
-                    test,
-                    lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
-                    queued: false,
-                    pending: 0,
+                if st.registered {
+                    // Known device (live or evicted): a resume handshake.
+                    // Its state is kept, the supplied datasets are
+                    // ignored, and rehydration stays lazy until real
+                    // work arrives.
+                    drop(reg);
+                    respond(shared, &reply, id,
+                            Response::Registered { device, resumed: true });
+                    return Ok(());
+                }
+                // Same identity while the original register is still
+                // building on the pool (reconnects can race a slow
+                // register): queue the handshake behind it in the head
+                // lane — acked as a resume once the build lands, or
+                // answered with the register failure if it does not.
+                if st.pending >= shared.window {
+                    bail!(
+                        "device {device}: inflight window full ({} of {} \
+                         requests pending)",
+                        st.pending, shared.window
+                    );
+                }
+                st.pending += 1;
+                st.lanes[0].push_back(Item {
+                    id,
+                    reply,
+                    work: Work::Register { seed, method, train, test, angle },
                 });
+                *shared.outstanding.lock().expect("serve outstanding") += 1;
+                if !st.queued {
+                    st.queued = true;
+                    shared
+                        .ready
+                        .lock()
+                        .expect("serve ready queue")
+                        .push_back(device);
+                    shared.ready_cv.notify_one();
+                }
+                return Ok(());
             }
-            respond(shared, &reply, id, Response::Registered { device });
+            let mut st = DeviceState::new(seed, method.clone());
+            st.pending = 1;
+            st.queued = true;
+            st.lanes[0].push_back(Item {
+                id,
+                reply,
+                work: Work::Register { seed, method, train, test, angle },
+            });
+            reg.map.insert(device.clone(), st);
+            *shared.outstanding.lock().expect("serve outstanding") += 1;
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device);
+            shared.ready_cv.notify_one();
             Ok(())
         }
         Request::Train { device, epochs } => enqueue(shared, &device, priority,
@@ -366,21 +538,20 @@ fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
             Item { id, reply, work: Work::Predict { image } }),
         Request::Evaluate { device } => enqueue(shared, &device, priority,
             Item { id, reply, work: Work::Evaluate }),
-        Request::Drift { device, train, test } => {
-            crate::data::validate(&train, &shared.backbone.spec)
-                .with_context(|| format!("drifting {device}: train set"))?;
-            crate::data::validate(&test, &shared.backbone.spec)
-                .with_context(|| format!("drifting {device}: test set"))?;
+        Request::Drift { device, train, test, angle } => {
+            // Validation runs with the op on the worker pool, like
+            // Register's.
             enqueue(shared, &device, priority,
-                    Item { id, reply, work: Work::Drift { train, test } })
+                    Item { id, reply, work: Work::Drift { train, test, angle } })
         }
     }
 }
 
 fn enqueue(shared: &Shared, device: &str, priority: Priority, item: Item)
            -> Result<()> {
-    let mut devices = shared.devices.lock().expect("serve registry");
-    let st = devices
+    let mut reg = shared.registry.lock().expect("serve registry");
+    let st = reg
+        .map
         .get_mut(device)
         .ok_or_else(|| anyhow!("unknown device {device} (register first)"))?;
     if st.pending >= shared.window {
@@ -420,6 +591,9 @@ fn run_unit(session: &mut Session, work: &mut Work, train: &Dataset,
             test: &Dataset, eval_batch: usize, limit: usize)
             -> Result<UnitOut> {
     match work {
+        Work::Register { .. } => {
+            unreachable!("register units run via run_register")
+        }
         Work::Train { remaining, done, steps } => {
             if *remaining == 0 {
                 // A zero-epoch request reached its queue slot: close it
@@ -458,10 +632,16 @@ fn run_unit(session: &mut Session, work: &mut Work, train: &Dataset,
             let accuracy = session.evaluate_batch(test, eval_batch)?;
             Ok(UnitOut::Evaluation { accuracy, n: capped(test.n, limit) })
         }
-        Work::Drift { train: tr, test: te } => Ok(UnitOut::Drifted {
-            train: Arc::clone(tr),
-            test: Arc::clone(te),
-        }),
+        Work::Drift { train: tr, test: te, .. } => {
+            crate::data::validate(tr, &session.spec)
+                .context("drift train set")?;
+            crate::data::validate(te, &session.spec)
+                .context("drift test set")?;
+            Ok(UnitOut::Drifted {
+                train: Arc::clone(tr),
+                test: Arc::clone(te),
+            })
+        }
     }
 }
 
@@ -471,6 +651,40 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         .copied()
         .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
         .unwrap_or("non-string panic payload")
+}
+
+/// Assemble the durable snapshot of one device around its live session.
+fn device_snapshot(session: &Session, device: &str, train: &Arc<Dataset>,
+                   test: &Arc<Dataset>, epochs_done: u64,
+                   angle: Option<u32>) -> Result<DeviceSnapshot> {
+    Ok(DeviceSnapshot {
+        device: device.to_string(),
+        session: session.snapshot()?,
+        train: Arc::clone(train),
+        test: Arc::clone(test),
+        epochs_done,
+        angle,
+    })
+}
+
+/// What a worker found when it claimed a ready device.
+enum Claim {
+    /// Session + highest-priority item checked out — execute it.
+    /// (Boxed: a `Session` inlines the engine workspace, which would
+    /// dwarf the other variants.)
+    Run {
+        session: Box<Session>,
+        item: Item,
+        lane: usize,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+    /// The device's first unit: build/resume its session.
+    Register(Item),
+    /// Registered but evicted: rehydrate from the store first.
+    Rehydrate,
+    /// An evictor is mid-flush on this device: step aside and retry.
+    Defer,
 }
 
 fn worker(shared: &Shared) {
@@ -488,111 +702,554 @@ fn worker(shared: &Shared) {
                 q = shared.ready_cv.wait(q).expect("serve ready queue");
             }
         };
-        // Check out the session plus the highest-priority pending item; a
-        // device is in the ready queue at most once, so nobody else holds
-        // this session.
-        let (mut session, item, lane, train, test) = {
-            let mut devices = shared.devices.lock().expect("serve registry");
-            let st = devices.get_mut(&device).expect("ready device registered");
-            let lane = (0..Priority::COUNT)
-                .find(|&l| !st.lanes[l].is_empty())
-                .expect("ready device has work");
-            let item = st.lanes[lane].pop_front().expect("non-empty lane");
-            (
-                st.session.take().expect("ready device owns its session"),
-                item,
-                lane,
-                Arc::clone(&st.train),
-                Arc::clone(&st.test),
-            )
-        };
-        let Item { id, reply, mut work } = item;
-        // A panicking op (method plugins are an open extension point) must
-        // not kill the worker: the `outstanding` count would never drain
-        // and `join()` would hang.  Convert the panic into an error
-        // response; engine/score buffers are plain integers, so the
-        // checked-back-in session is memory-safe (its method state may be
-        // mid-step — the caller sees the Error and can re-register).
-        let unit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || run_unit(&mut session, &mut work, &train, &test,
-                        shared.eval_batch, shared.limit),
-        ))
-        .unwrap_or_else(|payload| {
-            Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
-        });
-        // Check the session back in and emit the response (if the request
-        // completed) *before* re-queuing the device, so a device's
-        // responses leave in execution order.
-        let mut responded = false;
-        {
-            let mut devices = shared.devices.lock().expect("serve registry");
-            let st = devices.get_mut(&device).expect("device still registered");
-            st.session = Some(session);
-            let response = match unit {
-                Ok(UnitOut::Continue) => {
-                    // Back to the front of its lane: the request resumes
-                    // at the device's next turn, after any
-                    // higher-priority work cuts in.
-                    st.lanes[lane].push_front(Item {
-                        id,
-                        reply: reply.clone(),
-                        work,
-                    });
-                    None
+        // Claim the device's next unit.  The device is in the ready
+        // queue at most once, so nobody else touches its session while
+        // we hold this turn.
+        let claim = {
+            let mut reg = shared.registry.lock().expect("serve registry");
+            reg.tick += 1;
+            let tick = reg.tick;
+            let st = reg.map.get_mut(&device).expect("ready device registered");
+            if st.evicting {
+                Claim::Defer
+            } else {
+                let lane = (0..Priority::COUNT)
+                    .find(|&l| !st.lanes[l].is_empty())
+                    .expect("ready device has work");
+                let head_is_register = matches!(
+                    st.lanes[lane].front().expect("non-empty lane").work,
+                    Work::Register { .. }
+                );
+                if head_is_register {
+                    Claim::Register(
+                        st.lanes[lane].pop_front().expect("non-empty lane"),
+                    )
+                } else if st.resident.is_none() {
+                    Claim::Rehydrate
+                } else {
+                    st.last_used = tick;
+                    let item =
+                        st.lanes[lane].pop_front().expect("non-empty lane");
+                    let res = st.resident.as_mut().expect("resident device");
+                    Claim::Run {
+                        session: Box::new(
+                            res.session
+                                .take()
+                                .expect("ready device owns its session"),
+                        ),
+                        item,
+                        lane,
+                        train: Arc::clone(&res.train),
+                        test: Arc::clone(&res.test),
+                    }
                 }
-                Ok(UnitOut::TrainDone { epochs, steps, train_accuracy }) => {
-                    Some(Response::TrainDone {
-                        device: device.clone(),
-                        epochs,
-                        steps,
-                        train_accuracy,
-                    })
-                }
-                Ok(UnitOut::Prediction(class)) => Some(Response::Prediction {
-                    device: device.clone(),
-                    class,
-                }),
-                Ok(UnitOut::Evaluation { accuracy, n }) => {
-                    Some(Response::Evaluation {
-                        device: device.clone(),
-                        accuracy,
-                        n,
-                    })
-                }
-                Ok(UnitOut::Drifted { train, test }) => {
-                    st.train = train;
-                    st.test = test;
-                    Some(Response::Drifted { device: device.clone() })
-                }
-                // A failed Train drops its remaining epochs with it: one
-                // Error closes out the whole request — it neither trains
-                // on for nothing nor emits a TrainDone after its Error.
-                Err(e) => Some(Response::Error {
-                    device: device.clone(),
-                    message: format!("{e:#}"),
-                }),
-            };
-            if let Some(resp) = response {
-                st.pending -= 1;
-                respond(shared, &reply, id, resp);
-                responded = true;
             }
+        };
+        match claim {
+            Claim::Defer => {
+                // Re-queue and retry once the evictor clears the flag.
+                // The short sleep keeps the retry loop from burning a
+                // core while the flush (a bounded disk write) finishes.
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device);
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Claim::Rehydrate => {
+                match rehydrate_device(shared, &device) {
+                    Ok(()) => {
+                        // Now resident; re-queue so the pending item runs
+                        // (possibly on another worker).
+                        shared
+                            .ready
+                            .lock()
+                            .expect("serve ready queue")
+                            .push_back(device.clone());
+                        shared.ready_cv.notify_one();
+                        enforce_resident_cap(shared);
+                    }
+                    Err(e) => fail_head_item(shared, &device, e),
+                }
+            }
+            Claim::Register(item) => {
+                run_register(shared, &device, item);
+                enforce_resident_cap(shared);
+            }
+            Claim::Run { session, item, lane, train, test } => {
+                run_op(shared, &device, *session, item, lane, &train, &test);
+                enforce_resident_cap(shared);
+            }
+        }
+    }
+}
+
+/// Execute one claimed non-register unit, persist on completion of a
+/// state-mutating request, check the session back in, and respond.
+fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
+          lane: usize, train: &Arc<Dataset>, test: &Arc<Dataset>) {
+    let Item { id, reply, mut work } = item;
+    // A panicking op (method plugins are an open extension point) must
+    // not kill the worker: the `outstanding` count would never drain
+    // and `join()` would hang.  Convert the panic into an error
+    // response; engine/score buffers are plain integers, so the
+    // checked-back-in session is memory-safe.  Its method state may be
+    // mid-step, and memory is authoritative: the device stays dirty and
+    // the partial state persists at the next flush (a durable reset /
+    // deregister op is a ROADMAP item — today the operator clears the
+    // device's store directory to start it over).
+    let unit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || run_unit(&mut session, &mut work, train, test,
+                    shared.eval_batch, shared.limit),
+    ))
+    .unwrap_or_else(|payload| {
+        Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
+    });
+    // Did this unit (or its failed attempt) touch durable state?
+    let mutated = match (&work, &unit) {
+        (Work::Predict { .. } | Work::Evaluate, _) => false,
+        (_, Ok(UnitOut::TrainDone { epochs: 0, .. })) => false,
+        _ => true,
+    };
+    let drift_angle = match &work {
+        Work::Drift { angle, .. } => *angle,
+        _ => None,
+    };
+    // Persist-before-respond: a completed state-mutating request writes
+    // the device's snapshot first, so any state a client has been told
+    // about survives a crash (the restart-resume contract).  A failed
+    // write keeps the device dirty; eviction and join() retry it.
+    let mut persisted = false;
+    if let Some(store) = &shared.store {
+        let flush = match &unit {
+            Ok(UnitOut::TrainDone { epochs, .. }) if *epochs > 0 => {
+                Some((train, test, *epochs as u64, false))
+            }
+            Ok(UnitOut::Drifted { train: tr, test: te }) => {
+                Some((tr, te, 0, true))
+            }
+            _ => None,
+        };
+        if let Some((tr, te, new_epochs, is_drift)) = flush {
+            let (base_epochs, cur_angle) = {
+                let reg = shared.registry.lock().expect("serve registry");
+                let st = reg.map.get(device).expect("device still registered");
+                (st.epochs_done, st.angle)
+            };
+            let angle = if is_drift { drift_angle } else { cur_angle };
+            let put = device_snapshot(&session, device, tr, te,
+                                      base_epochs + new_epochs, angle)
+                .and_then(|snap| store.put(&snap));
+            match put {
+                Ok(()) => persisted = true,
+                Err(e) => eprintln!(
+                    "[serve] persisting {device}: {e:#} — state kept in \
+                     memory (flushed again at eviction or join)"
+                ),
+            }
+        }
+    }
+    // Check the session back in and emit the response (if the request
+    // completed) *before* re-queuing the device, so a device's
+    // responses leave in execution order.
+    let mut responded = false;
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("device still registered");
+        st.resident
+            .as_mut()
+            .expect("resident while op in flight")
+            .session = Some(session);
+        let response = match unit {
+            Ok(UnitOut::Continue) => {
+                // Back to the front of its lane: the request resumes
+                // at the device's next turn, after any
+                // higher-priority work cuts in.
+                st.lanes[lane].push_front(Item {
+                    id,
+                    reply: reply.clone(),
+                    work,
+                });
+                None
+            }
+            Ok(UnitOut::TrainDone { epochs, steps, train_accuracy }) => {
+                st.epochs_done += epochs as u64;
+                Some(Response::TrainDone {
+                    device: device.to_string(),
+                    epochs,
+                    steps,
+                    train_accuracy,
+                })
+            }
+            Ok(UnitOut::Prediction(class)) => Some(Response::Prediction {
+                device: device.to_string(),
+                class,
+            }),
+            Ok(UnitOut::Evaluation { accuracy, n }) => {
+                Some(Response::Evaluation {
+                    device: device.to_string(),
+                    accuracy,
+                    n,
+                })
+            }
+            Ok(UnitOut::Drifted { train, test }) => {
+                let res =
+                    st.resident.as_mut().expect("resident while op in flight");
+                res.train = train;
+                res.test = test;
+                st.angle = drift_angle;
+                Some(Response::Drifted { device: device.to_string() })
+            }
+            // A failed Train drops its remaining epochs with it: one
+            // Error closes out the whole request — it neither trains
+            // on for nothing nor emits a TrainDone after its Error.
+            Err(e) => Some(Response::Error {
+                device: device.to_string(),
+                kind: ErrorKind::Request,
+                message: format!("{e:#}"),
+            }),
+        };
+        st.dirty = (st.dirty || mutated) && !persisted;
+        if let Some(resp) = response {
+            st.pending -= 1;
+            respond(shared, &reply, id, resp);
+            responded = true;
+        }
+        if st.has_work() {
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device.to_string());
+            shared.ready_cv.notify_one();
+        } else {
+            st.queued = false;
+        }
+    }
+    if responded {
+        note_done(shared, 1);
+    }
+}
+
+/// Classified register failure: what the client is told and how.
+struct RegisterFail {
+    kind: ErrorKind,
+    err: anyhow::Error,
+}
+
+fn store_fail(err: anyhow::Error) -> RegisterFail {
+    RegisterFail { kind: ErrorKind::Store, err }
+}
+
+fn request_fail(err: anyhow::Error) -> RegisterFail {
+    RegisterFail { kind: ErrorKind::Request, err }
+}
+
+/// Execute a register unit on the worker pool: resume the device from
+/// the store when it is known there, otherwise validate + build a fresh
+/// session and persist its initial snapshot *before* acknowledging.
+fn run_register(shared: &Shared, device: &str, item: Item) {
+    let Item { id, reply, work } = item;
+    let Work::Register { seed, method, train, test, angle } = work else {
+        unreachable!("run_register on a non-register item");
+    };
+    // A queued resume handshake: a register that raced the device's
+    // original registration.  The original register unit always precedes
+    // it in the head lane, so by the time this runs the device is
+    // registered (identity was already matched at dispatch) — ack the
+    // resume without building anything.  (Had the original failed, this
+    // item would have been drained with the entry.)
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("registering device present");
+        if st.registered {
+            st.pending -= 1;
+            respond(shared, &reply, id, Response::Registered {
+                device: device.to_string(),
+                resumed: true,
+            });
             if st.has_work() {
                 shared
                     .ready
                     .lock()
                     .expect("serve ready queue")
-                    .push_back(device.clone());
+                    .push_back(device.to_string());
                 shared.ready_cv.notify_one();
             } else {
                 st.queued = false;
             }
+            drop(reg);
+            note_done(shared, 1);
+            return;
         }
-        if responded {
-            let mut out = shared.outstanding.lock().expect("serve outstanding");
-            *out -= 1;
-            if *out == 0 {
-                shared.idle_cv.notify_all();
+    }
+    type Built = (Session, Arc<Dataset>, Arc<Dataset>, u64, Option<u32>, bool);
+    let heavy: std::result::Result<Built, RegisterFail> = (|| {
+        if let Some(store) = &shared.store {
+            let stored = store
+                .get(device)
+                .with_context(|| format!("device {device}: reading stored \
+                                          state"))
+                .map_err(store_fail)?;
+            if let Some(snap) = stored {
+                if snap.session.seed != seed || snap.session.method != method {
+                    return Err(request_fail(anyhow!(
+                        "device {device} exists in the state store with a \
+                         different method or seed"
+                    )));
+                }
+                let session = Session::rehydrate(&shared.backbone,
+                                                 &snap.session)
+                    .with_context(|| format!("device {device}: rehydrating \
+                                              stored state"))
+                    .map_err(store_fail)?;
+                return Ok((session, snap.train, snap.test, snap.epochs_done,
+                           snap.angle, true));
+            }
+        }
+        crate::data::validate(&train, &shared.backbone.spec)
+            .with_context(|| format!("registering {device}: train set"))
+            .map_err(request_fail)?;
+        crate::data::validate(&test, &shared.backbone.spec)
+            .with_context(|| format!("registering {device}: test set"))
+            .map_err(request_fail)?;
+        let session = Session::builder()
+            .backbone(Arc::clone(&shared.backbone))
+            .method_boxed(method.plugin())
+            .seed(seed)
+            .limit(shared.limit)
+            .eval_batch(shared.eval_batch)
+            .track_pruning(false)
+            .build()
+            .with_context(|| format!("registering {device}"))
+            .map_err(request_fail)?;
+        // Durable registration: the initial snapshot lands before the
+        // ack, so a crash right after it can still resume the device.
+        if let Some(store) = &shared.store {
+            device_snapshot(&session, device, &train, &test, 0, angle)
+                .and_then(|snap| store.put(&snap))
+                .with_context(|| format!("device {device}: persisting \
+                                          initial state"))
+                .map_err(store_fail)?;
+        }
+        Ok((session, train, test, 0, angle, false))
+    })();
+    match heavy {
+        Ok((session, train, test, epochs_done, angle, resumed)) => {
+            if resumed {
+                shared.rehydrations.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut reg = shared.registry.lock().expect("serve registry");
+            reg.resident += 1;
+            reg.tick += 1;
+            let tick = reg.tick;
+            let st =
+                reg.map.get_mut(device).expect("registering device present");
+            st.resident = Some(Resident {
+                session: Some(session),
+                train,
+                test,
+            });
+            st.registered = true;
+            st.epochs_done = epochs_done;
+            st.angle = angle;
+            st.dirty = false;
+            st.last_used = tick;
+            st.pending -= 1;
+            respond(shared, &reply, id, Response::Registered {
+                device: device.to_string(),
+                resumed,
+            });
+            if st.has_work() {
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device.to_string());
+                shared.ready_cv.notify_one();
+            } else {
+                st.queued = false;
+            }
+            drop(reg);
+            note_done(shared, 1);
+        }
+        Err(RegisterFail { kind, err }) => {
+            // The provisional entry disappears, and every request already
+            // pipelined behind the failed register is answered too.
+            let stray = {
+                let mut reg = shared.registry.lock().expect("serve registry");
+                let mut st = reg
+                    .map
+                    .remove(device)
+                    .expect("registering device present");
+                let stray: Vec<Item> = st
+                    .lanes
+                    .iter_mut()
+                    .flat_map(|l| l.drain(..))
+                    .collect();
+                respond(shared, &reply, id, Response::Error {
+                    device: device.to_string(),
+                    kind,
+                    message: format!("{err:#}"),
+                });
+                for s in &stray {
+                    respond(shared, &s.reply, s.id, Response::Error {
+                        device: device.to_string(),
+                        kind: ErrorKind::Request,
+                        message: format!(
+                            "device {device}: register failed, request \
+                             dropped"
+                        ),
+                    });
+                }
+                stray
+            };
+            note_done(shared, 1 + stray.len());
+        }
+    }
+}
+
+/// Rebuild an evicted device's session from the store (on the worker
+/// pool — the caller holds the device's scheduling turn).
+fn rehydrate_device(shared: &Shared, device: &str) -> Result<()> {
+    let store = shared.store.as_ref().ok_or_else(|| {
+        anyhow!("device {device} is not resident and no state store is \
+                 configured")
+    })?;
+    let (seed, method) = {
+        let reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get(device).expect("ready device registered");
+        (st.seed, st.method.clone())
+    };
+    let snap = store
+        .get(device)?
+        .ok_or_else(|| anyhow!("device {device}: stored state is missing"))?;
+    if snap.session.seed != seed || snap.session.method != method {
+        bail!("device {device}: stored state does not match the registered \
+               identity");
+    }
+    let session = Session::rehydrate(&shared.backbone, &snap.session)
+        .with_context(|| format!("device {device}: rehydrating"))?;
+    let mut reg = shared.registry.lock().expect("serve registry");
+    reg.resident += 1;
+    reg.tick += 1;
+    let tick = reg.tick;
+    let st = reg.map.get_mut(device).expect("device still registered");
+    st.resident = Some(Resident {
+        session: Some(session),
+        train: snap.train,
+        test: snap.test,
+    });
+    st.epochs_done = snap.epochs_done;
+    st.angle = snap.angle;
+    st.dirty = false;
+    st.last_used = tick;
+    shared.rehydrations.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Answer (and drop) the head pending item of a device whose session
+/// could not be rehydrated — each queued item retries rehydration on its
+/// own turn, so a transient store failure fails requests one at a time
+/// instead of wedging the device.
+fn fail_head_item(shared: &Shared, device: &str, e: anyhow::Error) {
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("ready device registered");
+        let lane = (0..Priority::COUNT)
+            .find(|&l| !st.lanes[l].is_empty())
+            .expect("ready device has work");
+        let item = st.lanes[lane].pop_front().expect("non-empty lane");
+        st.pending -= 1;
+        respond(shared, &item.reply, item.id, Response::Error {
+            device: device.to_string(),
+            kind: ErrorKind::Store,
+            message: format!("{e:#}"),
+        });
+        if st.has_work() {
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device.to_string());
+            shared.ready_cv.notify_one();
+        } else {
+            st.queued = false;
+        }
+    }
+    note_done(shared, 1);
+}
+
+/// Evict least-recently-used idle devices until the resident count is
+/// back under the cap.  Runs on worker threads at op-queue idle points;
+/// devices with pending work are never touched, so eviction cannot
+/// interleave with a device's own ops.  The flush happens outside the
+/// registry lock; a worker that claims the device meanwhile sees the
+/// `evicting` flag and defers.
+fn enforce_resident_cap(shared: &Shared) {
+    let Some(store) = &shared.store else {
+        return; // nowhere to evict into
+    };
+    loop {
+        let victim = {
+            let mut reg = shared.registry.lock().expect("serve registry");
+            if reg.resident <= shared.resident_cap {
+                return;
+            }
+            let pick = reg
+                .map
+                .iter()
+                .filter(|(_, st)| {
+                    st.pending == 0
+                        && !st.evicting
+                        && st.resident
+                            .as_ref()
+                            .is_some_and(|r| r.session.is_some())
+                })
+                .min_by_key(|(_, st)| st.last_used)
+                .map(|(d, _)| d.clone());
+            let Some(device) = pick else {
+                return; // everyone is busy; re-checked at the next idle point
+            };
+            let st = reg.map.get_mut(&device).expect("picked device");
+            st.evicting = true;
+            let res = st.resident.take().expect("picked resident");
+            let meta = (st.epochs_done, st.angle, st.dirty);
+            reg.resident -= 1;
+            (device, res, meta)
+        };
+        let (device, res, (epochs_done, angle, dirty)) = victim;
+        // Flush outside the lock — and only when the store is stale
+        // (write-through at op completion usually already covered it).
+        let result = if dirty {
+            let session = res.session.as_ref().expect("evicted session");
+            device_snapshot(session, &device, &res.train, &res.test,
+                            epochs_done, angle)
+                .and_then(|snap| store.put(&snap))
+        } else {
+            Ok(())
+        };
+        let mut reg = shared.registry.lock().expect("serve registry");
+        match result {
+            Ok(()) => {
+                let st = reg.map.get_mut(&device).expect("evicting device");
+                st.evicting = false;
+                st.dirty = false;
+                shared.evictions.fetch_add(1, Ordering::Relaxed);
+                // resident stays None: the device is now store-only.
+            }
+            Err(e) => {
+                // Never lose state: keep the device resident and stop
+                // evicting for now.
+                let st = reg.map.get_mut(&device).expect("evicting device");
+                st.evicting = false;
+                st.resident = Some(res);
+                reg.resident += 1;
+                eprintln!(
+                    "[serve] evicting {device}: {e:#} — keeping it resident"
+                );
+                return;
             }
         }
     }
@@ -610,6 +1267,8 @@ pub struct ServeBuilder {
     eval_batch: usize,
     window: usize,
     record: bool,
+    store: Option<Arc<dyn StateStore>>,
+    resident_cap: usize,
 }
 
 impl ServeBuilder {
@@ -651,6 +1310,34 @@ impl ServeBuilder {
         self
     }
 
+    /// Attach a durable [`StateStore`]: device snapshots are written
+    /// through on every completed state-mutating request, known devices
+    /// found in the store at startup are resumable, and a `Register`
+    /// for a stored device resumes it.
+    pub fn store(mut self, store: Arc<dyn StateStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Convenience: attach a [`DiskStore`] rooted at `dir` (created if
+    /// missing) — what `priot serve --state-dir DIR` uses.
+    pub fn state_dir(self, dir: impl Into<std::path::PathBuf>)
+                     -> Result<Self> {
+        Ok(self.store(Arc::new(DiskStore::open(dir)?)))
+    }
+
+    /// Bound **live** sessions: at most `cap` devices keep their session
+    /// (scores, masks, activation buffers) in memory; the least-recently-
+    /// used idle devices beyond it are evicted to the store and lazily
+    /// rehydrated on their next request — bit-identically.  0 (the
+    /// default) = unbounded.  Setting a cap without a store attaches a
+    /// [`MemStore`] automatically (eviction needs somewhere to put
+    /// state).
+    pub fn resident_cap(mut self, cap: usize) -> Self {
+        self.resident_cap = cap;
+        self
+    }
+
     /// Spawn the dispatcher + worker pool and return the live handle.
     pub fn build(self) -> FleetServer {
         let threads = if self.threads == 0 {
@@ -658,18 +1345,68 @@ impl ServeBuilder {
         } else {
             self.threads
         };
+        let store = self.store.or_else(|| {
+            (self.resident_cap > 0).then(|| {
+                Arc::new(MemStore::new()) as Arc<dyn StateStore>
+            })
+        });
+        let resident_cap = if self.resident_cap == 0 {
+            usize::MAX
+        } else {
+            self.resident_cap
+        };
+        // Restart-resume: every device the store already knows becomes a
+        // registered (evicted) entry, so a `Train` straight after a
+        // restart rehydrates lazily and a `Register` resumes.
+        let mut registry =
+            Registry { map: HashMap::new(), resident: 0, tick: 0 };
+        if let Some(store) = &store {
+            match store.devices() {
+                Ok(devices) => {
+                    for device in devices {
+                        match store.get(&device) {
+                            Ok(Some(snap))
+                                if snap.session.model == self.backbone.model =>
+                            {
+                                registry.map.insert(
+                                    device,
+                                    DeviceState::from_snapshot(&snap),
+                                );
+                            }
+                            Ok(Some(snap)) => eprintln!(
+                                "[serve] skipping stored device {device}: \
+                                 snapshot is for model {}, serving {}",
+                                snap.session.model, self.backbone.model
+                            ),
+                            Ok(None) => {}
+                            Err(e) => eprintln!(
+                                "[serve] skipping stored device {device}: \
+                                 {e:#}"
+                            ),
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[serve] scanning the state store: {e:#}");
+                }
+            }
+        }
         let shared = Arc::new(Shared {
             backbone: self.backbone,
             limit: self.limit,
             eval_batch: self.eval_batch,
             window: if self.window == 0 { usize::MAX } else { self.window },
-            devices: Mutex::new(HashMap::new()),
+            store,
+            resident_cap,
+            registry: Mutex::new(registry),
             ready: Mutex::new(VecDeque::new()),
             ready_cv: Condvar::new(),
             done: AtomicBool::new(false),
             outstanding: Mutex::new(0),
             idle_cv: Condvar::new(),
             requests: AtomicU64::new(0),
+            rehydrations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             record: Mutex::new(Vec::new()),
             record_enabled: self.record,
             clock: Mutex::new(Clock::default()),
@@ -699,7 +1436,8 @@ impl ServeBuilder {
 }
 
 /// The long-lived fleet service: one shared backbone, a registry of
-/// per-device sessions, a dispatcher thread feeding priority-laned
+/// per-device sessions (optionally LRU-bounded over a durable
+/// [`StateStore`]), a dispatcher thread feeding priority-laned
 /// per-device queues, and a worker pool draining them.  Clients talk to
 /// it exclusively through [`FleetClient`] — see the module docs.
 pub struct FleetServer {
@@ -720,6 +1458,8 @@ impl FleetServer {
             eval_batch: 8,
             window: 64,
             record: true,
+            store: None,
+            resident_cap: 0,
         }
     }
 
@@ -794,8 +1534,8 @@ impl FleetServer {
     }
 
     /// Graceful shutdown: stop accepting connections, finish every
-    /// accepted request, stop the pool, and return everything the run
-    /// produced.
+    /// accepted request, stop the pool, **flush all dirty device state
+    /// to the store**, and return everything the run produced.
     ///
     /// Blocks until every connection has closed — drop your
     /// [`FleetClient`]s first (see [`Self::local_client`]).
@@ -821,6 +1561,26 @@ impl FleetServer {
         for w in self.workers.drain(..) {
             w.join().map_err(|_| anyhow!("serve worker panicked"))?;
         }
+        // Flush whatever the write-through path could not persist (a
+        // device is only dirty here if an earlier store write failed),
+        // so a restarted server resumes exactly this state.
+        if let Some(store) = &self.shared.store {
+            let reg = self.shared.registry.lock().expect("serve registry");
+            for (device, st) in reg.map.iter() {
+                if !st.dirty {
+                    continue;
+                }
+                let Some(res) = &st.resident else { continue };
+                let Some(session) = &res.session else { continue };
+                let flushed = device_snapshot(session, device, &res.train,
+                                              &res.test, st.epochs_done,
+                                              st.angle)
+                    .and_then(|snap| store.put(&snap));
+                if let Err(e) = flushed {
+                    eprintln!("[serve] final flush of {device}: {e:#}");
+                }
+            }
+        }
         // Connection pumps exit once their peer is gone and their queued
         // responses are flushed (all Reply handles were dropped above).
         let conns: Vec<JoinHandle<()>> = {
@@ -843,6 +1603,8 @@ impl FleetServer {
         Ok(ServeReport {
             responses,
             requests: self.shared.requests.load(Ordering::Relaxed),
+            rehydrations: self.shared.rehydrations.load(Ordering::Relaxed),
+            evictions: self.shared.evictions.load(Ordering::Relaxed),
             wall_secs,
             threads: self.threads,
         })
@@ -858,7 +1620,10 @@ impl Drop for FleetServer {
     /// still attached must not hang the dropping thread.  Requests
     /// submitted after the drop are answered with an `Error` by the
     /// detached dispatcher; a request racing the drop itself may go
-    /// unanswered (an aborting server makes no delivery promises).
+    /// unanswered (an aborting server makes no delivery promises).  No
+    /// final store flush runs — but the write-through path has already
+    /// persisted every state a client was told about, so a store-backed
+    /// fleet still resumes to the last acknowledged state.
     /// No-op after `join()` (which consumed the handles already).
     fn drop(&mut self) {
         self.ingress.take();
@@ -883,6 +1648,11 @@ pub struct ServeReport {
     /// Responses in completion order (per device: execution order).
     pub responses: Vec<Response>,
     pub requests: u64,
+    /// Sessions rebuilt from the state store (lazy rehydrations of
+    /// evicted devices + resumed registers).
+    pub rehydrations: u64,
+    /// Idle devices flushed out of memory under `resident_cap` pressure.
+    pub evictions: u64,
     /// First request received → last response emitted.  Idle time before
     /// traffic arrives does not count against requests/sec.
     pub wall_secs: f64,
@@ -892,6 +1662,12 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn requests_per_sec(&self) -> f64 {
         self.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Rehydrations per second of serving wall time (the LRU churn rate
+    /// under eviction pressure — what the `serve` bench tracks).
+    pub fn rehydrations_per_sec(&self) -> f64 {
+        self.rehydrations as f64 / self.wall_secs.max(1e-9)
     }
 
     pub fn errors(&self) -> usize {
@@ -920,14 +1696,21 @@ impl ServeReport {
         let mut parts: Vec<String> =
             kinds.iter().map(|(k, v)| format!("{v} {k}")).collect();
         parts.sort();
-        format!(
+        let mut out = format!(
             "{} requests in {:.2}s on {} threads — {:.1} requests/s ({})",
             self.requests,
             self.wall_secs,
             self.threads,
             self.requests_per_sec(),
             parts.join(", ")
-        )
+        );
+        if self.rehydrations > 0 || self.evictions > 0 {
+            out.push_str(&format!(
+                "; {} rehydrations, {} evictions",
+                self.rehydrations, self.evictions
+            ));
+        }
+        out
     }
 }
 
@@ -1071,7 +1854,9 @@ fn parse_trace_line(line: &str) -> Result<TraceCmd> {
 /// request at a time (so per-device order is submission order and the
 /// result stream is deterministic — bit-identical across transports and
 /// to a standalone [`Session`] executing the same operations).
-/// `pair_for` resolves a symbolic drift angle to its datasets.
+/// `pair_for` resolves a symbolic drift angle to its datasets; the angle
+/// travels with `Register`/`Drift` as provenance, so durable snapshots
+/// record which rotation a device's data came from.
 pub fn replay_trace(
     client: &mut FleetClient,
     cmds: &[TraceCmd],
@@ -1084,7 +1869,8 @@ pub fn replay_trace(
             TraceCmd::Register { device, seed, method, angle } => {
                 let (train, test) = pair_for(angle)?;
                 device_test.insert(device.clone(), Arc::clone(&test));
-                client.register(&device, seed, method, train, test)?
+                client.register_at(&device, seed, method, train, test,
+                                   Some(angle))?
             }
             TraceCmd::Train { device, epochs } => {
                 client.train(&device, epochs)?
@@ -1103,7 +1889,7 @@ pub fn replay_trace(
             TraceCmd::Drift { device, angle } => {
                 let (train, test) = pair_for(angle)?;
                 device_test.insert(device.clone(), Arc::clone(&test));
-                client.drift(&device, train, test)?
+                client.drift_at(&device, train, test, Some(angle))?
             }
         };
         out.push(resp);

@@ -1,0 +1,214 @@
+//! The versioned binary codec for [`DeviceSnapshot`]s.
+//!
+//! One snapshot is one self-contained blob (the unit a [`StateStore`]
+//! persists).  Layout, all integers little-endian:
+//!
+//! ```text
+//! u32 magic   "PRST" (0x50525354)
+//! u8  version (= SNAPSHOT_VERSION)
+//! str device, str model            (u32 len + utf8 bytes each)
+//! u32 seed
+//! method spec                      (the proto wire encoding)
+//! u32 step                         (executed training steps)
+//! u64 eval_batch, u64 limit
+//! u64 epochs_done
+//! opt u32 angle                    (u8 presence flag + value)
+//! u8  state tag (0 = scores+masks, 1 = weights)
+//!   tag 0: u32 layers, layers × (u32 len + len·i32 scores),
+//!          layers × (u32 len + len·i32 masks)
+//!   tag 1: u32 layers, layers × (u32 len + len·i32 weights)
+//! dataset train, dataset test      (u32 n,c,h,w + pixels + labels)
+//! u64 FNV-1a of everything above
+//! ```
+//!
+//! Values are exact i32 — unlike the int8 checkpoint files
+//! ([`crate::serial::save_weights`]), a snapshot never narrows state, so
+//! rehydration is provably lossless.  Decoding follows the
+//! `serial`/`proto` checked discipline (every read names what it reads;
+//! truncation and trailing bytes are contextful errors at the failing
+//! offset), and the trailing FNV-1a checksum rejects corruption that
+//! would otherwise still parse.
+//!
+//! [`StateStore`]: super::StateStore
+
+use anyhow::{bail, Context, Result};
+
+use crate::datagen::fnv1a64;
+use crate::proto::codec::{
+    put_dataset, put_method, put_opt_u32, put_str, put_u32, put_u64, Reader,
+};
+
+use super::{DeviceSnapshot, PluginState, SessionSnapshot};
+
+/// "PRST" — the snapshot file magic (sibling of serial's PRWT/PRDS).
+pub const SNAPSHOT_MAGIC: u32 = 0x5052_5354;
+
+/// Snapshot layout revision.  Bump on any layout change; decoders reject
+/// other versions with a clean error.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+const STATE_SCORES: u8 = 0;
+const STATE_WEIGHTS: u8 = 1;
+
+fn put_vec_i32(buf: &mut Vec<u8>, v: &[i32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_layers(buf: &mut Vec<u8>, layers: &[Vec<i32>]) {
+    for l in layers {
+        put_vec_i32(buf, l);
+    }
+}
+
+/// Encode one snapshot (including the trailing checksum).
+pub fn encode_snapshot(snap: &DeviceSnapshot) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, SNAPSHOT_MAGIC);
+    buf.push(SNAPSHOT_VERSION);
+    put_str(&mut buf, &snap.device);
+    let s = &snap.session;
+    put_str(&mut buf, &s.model);
+    put_u32(&mut buf, s.seed);
+    put_method(&mut buf, &s.method);
+    put_u32(&mut buf, s.step);
+    put_u64(&mut buf, s.eval_batch as u64);
+    put_u64(&mut buf, s.limit as u64);
+    put_u64(&mut buf, snap.epochs_done);
+    put_opt_u32(&mut buf, snap.angle);
+    match &s.state {
+        PluginState::Scores { scores, masks } => {
+            debug_assert_eq!(scores.len(), masks.len());
+            buf.push(STATE_SCORES);
+            put_u32(&mut buf, scores.len() as u32);
+            put_layers(&mut buf, scores);
+            put_layers(&mut buf, masks);
+        }
+        PluginState::Weights(weights) => {
+            buf.push(STATE_WEIGHTS);
+            put_u32(&mut buf, weights.len() as u32);
+            put_layers(&mut buf, weights);
+        }
+    }
+    put_dataset(&mut buf, &snap.train);
+    put_dataset(&mut buf, &snap.test);
+    let hash = fnv1a64(&buf);
+    put_u64(&mut buf, hash);
+    buf
+}
+
+/// Per-layer count bound, mirroring `serial::load_weights`' "implausible
+/// tensor count" guard — a corrupt header must not size huge allocations.
+const MAX_LAYERS: usize = 1024;
+/// Per-layer value bound (i32 count): 256 MiB of i32s.
+const MAX_LAYER_LEN: usize = 64 << 20;
+
+fn read_vec_i32(r: &mut Reader<'_>, what: &str) -> Result<Vec<i32>> {
+    let len = r.u32(what)? as usize;
+    if len > MAX_LAYER_LEN {
+        bail!("{what}: implausible length {len}");
+    }
+    let raw = r.take(len * 4, what)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn read_layers(r: &mut Reader<'_>, n: usize, what: &str)
+               -> Result<Vec<Vec<i32>>> {
+    (0..n)
+        .map(|li| read_vec_i32(r, &format!("{what} layer {li}")))
+        .collect()
+}
+
+/// Decode one snapshot, verifying structure *and* the trailing checksum.
+pub fn decode_snapshot(bytes: &[u8]) -> Result<DeviceSnapshot> {
+    if bytes.len() < 8 {
+        bail!("snapshot truncated: {} bytes is too short to carry a \
+               checksum", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let mut r = Reader::new(body);
+    let magic = r.u32("snapshot magic")?;
+    if magic != SNAPSHOT_MAGIC {
+        bail!("bad snapshot magic {magic:#x} (want PRST)");
+    }
+    let version = r.u8("snapshot version")?;
+    if version != SNAPSHOT_VERSION {
+        bail!("unsupported snapshot version {version} \
+               (this build reads version {SNAPSHOT_VERSION})");
+    }
+    let device = r.str("snapshot device")?;
+    let model = r.str("snapshot model")?;
+    let seed = r.u32("snapshot seed")?;
+    let method = r.method()?;
+    let step = r.u32("snapshot step")?;
+    let eval_batch = r.u64("snapshot eval_batch")? as usize;
+    let limit = r.u64("snapshot limit")? as usize;
+    let epochs_done = r.u64("snapshot epochs_done")?;
+    let angle = r.opt_u32("snapshot angle")?;
+    let state = match r.u8("snapshot state tag")? {
+        STATE_SCORES => {
+            let n = r.u32("snapshot layer count")? as usize;
+            if n > MAX_LAYERS {
+                bail!("snapshot has an implausible layer count {n}");
+            }
+            let scores = read_layers(&mut r, n, "snapshot scores")?;
+            let masks = read_layers(&mut r, n, "snapshot masks")?;
+            PluginState::Scores { scores, masks }
+        }
+        STATE_WEIGHTS => {
+            let n = r.u32("snapshot layer count")? as usize;
+            if n > MAX_LAYERS {
+                bail!("snapshot has an implausible layer count {n}");
+            }
+            PluginState::Weights(read_layers(&mut r, n, "snapshot weights")?)
+        }
+        other => bail!("unknown snapshot state tag {other}"),
+    };
+    let train = r.dataset("snapshot train set")?;
+    let test = r.dataset("snapshot test set")?;
+    r.finish("the snapshot body")?;
+    let want = u64::from_le_bytes([
+        tail[0], tail[1], tail[2], tail[3], tail[4], tail[5], tail[6], tail[7],
+    ]);
+    let got = fnv1a64(body);
+    if got != want {
+        bail!("snapshot checksum mismatch (stored {want:#018x}, computed \
+               {got:#018x}) — the file is corrupt");
+    }
+    Ok(DeviceSnapshot {
+        device,
+        session: SessionSnapshot {
+            model,
+            seed,
+            method,
+            step,
+            eval_batch,
+            limit,
+            state,
+        },
+        train,
+        test,
+        epochs_done,
+        angle,
+    })
+}
+
+// Decode context helper shared by the stores: name the device so a bad
+// snapshot error says whose state failed.
+pub(super) fn decode_for(device: &str, bytes: &[u8]) -> Result<DeviceSnapshot> {
+    let snap = decode_snapshot(bytes)
+        .with_context(|| format!("decoding the snapshot of device {device}"))?;
+    if snap.device != device {
+        bail!(
+            "snapshot stored under device {device} names device {} — \
+             store layout corrupt",
+            snap.device
+        );
+    }
+    Ok(snap)
+}

@@ -1,0 +1,348 @@
+//! `priot::store` — durable per-device session state.
+//!
+//! PRIOT's training state is ideal for persistence: integer scores and
+//! masks plus static scale factors snapshot **bit-exactly**, so a device
+//! can be evicted from memory and rehydrated later with provably lossless
+//! trajectories.  This module is the persistence layer under the serving
+//! stack:
+//!
+//! * [`SessionSnapshot`] — the exact mutable state of one
+//!   [`Session`](crate::session::Session): the serializable method
+//!   description, the seed, the executed-step counter, and the plugin
+//!   state (i32 scores+masks for PRIOT/PRIOT-S, trained weights for
+//!   NITI).  Produced by [`Session::snapshot`], consumed by
+//!   [`Session::rehydrate`] — a rehydrated session produces
+//!   **byte-identical** predict/evaluate/train trajectories to one that
+//!   never left memory.
+//! * [`DeviceSnapshot`] — a session snapshot plus everything the fleet
+//!   server needs to resume the device: its datasets, lifetime epoch
+//!   progress, and data provenance (drift angle) when known.
+//! * [`StateStore`] — where snapshots live.  [`MemStore`] keeps encoded
+//!   blobs in memory (tests, cache-only eviction); [`DiskStore`] keeps a
+//!   directory per device with atomic write-rename updates, so a crashed
+//!   process never leaves a half-written snapshot behind.
+//! * [`codec`] — the versioned binary snapshot format ("PRST"),
+//!   `serial`-style checked decoding plus an FNV-1a integrity trailer.
+//!
+//! Both stores persist the **encoded bytes**, so every `put`/`get` pair
+//! round-trips the codec — the bit-identity guarantee is exercised on
+//! every eviction, not only on restarts.
+//!
+//! The serving integration lives in [`crate::session::serve`]:
+//! `ServeBuilder::state_dir(..)` / `store(..)` + `resident_cap(N)` turn
+//! the registry into an LRU of live sessions over a store, and a
+//! restarted `priot serve --state-dir ...` resumes every device where it
+//! left off.
+//!
+//! [`Session::snapshot`]: crate::session::Session::snapshot
+//! [`Session::rehydrate`]: crate::session::Session::rehydrate
+
+pub mod codec;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::proto::MethodSpec;
+use crate::serial::Dataset;
+
+/// The exact mutable state of one session — everything that
+/// distinguishes a mid-adaptation session from a freshly built one.
+/// Scores, masks, and weights are stored as exact i32 (never narrowed to
+/// int8 like the portable checkpoint files), so restore is lossless by
+/// construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    /// Backbone model name; rehydration refuses a mismatched backbone.
+    pub model: String,
+    /// The seed the session was built with (replays plugin `init`).
+    pub seed: u32,
+    /// Serializable method description (rebuilds the plugin object).
+    pub method: MethodSpec,
+    /// Training steps executed so far — the counter NITI's stochastic
+    /// rounding consumes, so it must survive eviction exactly.
+    pub step: u32,
+    /// Evaluation batch width (part of the session's behavior contract).
+    pub eval_batch: usize,
+    /// Per-epoch / per-evaluation sample cap (0 = all).
+    pub limit: usize,
+    /// The method's mutable state.
+    pub state: PluginState,
+}
+
+/// Method-specific mutable state, exact i32.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PluginState {
+    /// Score-state methods (PRIOT, PRIOT-S): per-layer scores and
+    /// existence masks.
+    Scores { scores: Vec<Vec<i32>>, masks: Vec<Vec<i32>> },
+    /// Weight-state methods (NITI): the executor's trained weights.
+    Weights(Vec<Vec<i32>>),
+}
+
+/// One device's complete durable state: the session snapshot plus the
+/// serve-level context needed to resume it (datasets, epoch progress,
+/// data provenance).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSnapshot {
+    pub device: String,
+    pub session: SessionSnapshot,
+    /// The device's local train set at snapshot time (post-drift).
+    pub train: Arc<Dataset>,
+    /// The device's local test set at snapshot time (post-drift).
+    pub test: Arc<Dataset>,
+    /// Completed training epochs over the device's lifetime.
+    pub epochs_done: u64,
+    /// Drift angle of the current datasets, when the client supplied it
+    /// (trace replays do) — provenance only, never interpreted.
+    pub angle: Option<u32>,
+}
+
+/// Where device snapshots live.  Implementations are shared across the
+/// serve worker pool (`Send + Sync`); each call is self-contained.
+pub trait StateStore: Send + Sync {
+    /// Persist `snap` under its device name, replacing any previous
+    /// snapshot atomically (a reader never observes a torn write).
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()>;
+
+    /// The current snapshot of `device`, or `None` if the store has
+    /// never seen it.  A present-but-undecodable snapshot is an `Err`
+    /// (corruption must be loud, not an implicit fresh start).
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>>;
+
+    /// Forget `device` entirely.  Removing an unknown device is a no-op.
+    fn remove(&self, device: &str) -> Result<()>;
+
+    /// Every device with a stored snapshot, sorted by name.
+    fn devices(&self) -> Result<Vec<String>>;
+}
+
+// ---------------------------------------------------------------------------
+// MemStore
+// ---------------------------------------------------------------------------
+
+/// In-memory [`StateStore`]: encoded snapshot blobs in a map.  State dies
+/// with the process — useful for tests and for LRU eviction without a
+/// disk (bounding resident sessions while keeping evicted state around).
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StateStore for MemStore {
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()> {
+        let bytes = codec::encode_snapshot(snap);
+        self.map
+            .lock()
+            .expect("mem store map")
+            .insert(snap.device.clone(), bytes);
+        Ok(())
+    }
+
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>> {
+        let bytes = match self.map.lock().expect("mem store map").get(device) {
+            Some(b) => b.clone(),
+            None => return Ok(None),
+        };
+        codec::decode_for(device, &bytes).map(Some)
+    }
+
+    fn remove(&self, device: &str) -> Result<()> {
+        self.map.lock().expect("mem store map").remove(device);
+        Ok(())
+    }
+
+    fn devices(&self) -> Result<Vec<String>> {
+        let mut out: Vec<String> =
+            self.map.lock().expect("mem store map").keys().cloned().collect();
+        out.sort();
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DiskStore
+// ---------------------------------------------------------------------------
+
+const SNAPSHOT_FILE: &str = "snapshot.bin";
+const SNAPSHOT_TMP: &str = "snapshot.bin.tmp";
+
+/// On-disk [`StateStore`]: one directory per device under a root, each
+/// holding a `snapshot.bin`.  Updates write a temp file and `rename` it
+/// into place, so a crash mid-write leaves either the old snapshot or
+/// the new one — never a torn file (the decode checksum would catch one
+/// anyway, but atomicity means no state is *lost*).
+///
+/// Device names are escaped into filesystem-safe directory names
+/// (alphanumerics, `_`, `-` kept; every other byte becomes `%XX`), so
+/// arbitrary wire names can never traverse outside the root.
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root).with_context(|| {
+            format!("creating state store root {}", root.display())
+        })?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn device_dir(&self, device: &str) -> Result<PathBuf> {
+        Ok(self.root.join(escape_device(device)?))
+    }
+}
+
+/// Escape a device name into a safe directory name (reversible).
+fn escape_device(device: &str) -> Result<String> {
+    if device.is_empty() {
+        bail!("empty device name");
+    }
+    let mut out = String::with_capacity(device.len());
+    for &b in device.as_bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_' | b'-' => {
+                out.push(b as char);
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Invert [`escape_device`]; `None` for names this store never wrote.
+fn unescape_device(name: &str) -> Option<String> {
+    let mut bytes = Vec::with_capacity(name.len());
+    let mut it = name.bytes();
+    while let Some(b) = it.next() {
+        if b == b'%' {
+            let hi = it.next()?;
+            let lo = it.next()?;
+            let hex = [hi, lo];
+            let s = std::str::from_utf8(&hex).ok()?;
+            bytes.push(u8::from_str_radix(s, 16).ok()?);
+        } else {
+            bytes.push(b);
+        }
+    }
+    String::from_utf8(bytes).ok()
+}
+
+impl StateStore for DiskStore {
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()> {
+        let dir = self.device_dir(&snap.device)?;
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating device state dir {}", dir.display())
+        })?;
+        let bytes = codec::encode_snapshot(snap);
+        let tmp = dir.join(SNAPSHOT_TMP);
+        let path = dir.join(SNAPSHOT_FILE);
+        (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            // The rename is only atomic-durable if the payload hit disk
+            // first.
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })()
+        .with_context(|| {
+            format!("writing snapshot of device {} to {}", snap.device,
+                    path.display())
+        })
+    }
+
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>> {
+        let path = self.device_dir(device)?.join(SNAPSHOT_FILE);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading snapshot {}", path.display())
+                });
+            }
+        };
+        codec::decode_for(device, &bytes)
+            .with_context(|| format!("snapshot file {}", path.display()))
+            .map(Some)
+    }
+
+    fn remove(&self, device: &str) -> Result<()> {
+        let dir = self.device_dir(device)?;
+        match std::fs::remove_dir_all(&dir) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| {
+                format!("removing device state dir {}", dir.display())
+            }),
+        }
+    }
+
+    fn devices(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.root).with_context(|| {
+            format!("listing state store root {}", self.root.display())
+        })?;
+        for entry in entries {
+            let entry = entry?;
+            if !entry.path().join(SNAPSHOT_FILE).exists() {
+                continue; // not a device dir (or an interrupted write)
+            }
+            if let Some(device) =
+                entry.file_name().to_str().and_then(unescape_device)
+            {
+                out.push(device);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_name_escaping_roundtrips() {
+        for name in ["dev-00", "a/b", "../../etc", "δevice", "d.1", "%", "a b"] {
+            let escaped = escape_device(name).unwrap();
+            assert!(
+                escaped.bytes().all(|b| b.is_ascii_alphanumeric()
+                    || b == b'_' || b == b'-' || b == b'%'),
+                "{name} escaped to unsafe {escaped}"
+            );
+            assert_eq!(unescape_device(&escaped).as_deref(), Some(name));
+        }
+        assert!(escape_device("").is_err(), "empty names are rejected");
+    }
+
+    #[test]
+    fn escaping_keeps_paths_inside_the_root() {
+        // Path separators and dots are always escaped, so a hostile
+        // device name cannot climb out of the store root.
+        for name in ["..", ".", "../x", "a/../../b", "/abs"] {
+            let escaped = escape_device(name).unwrap();
+            assert!(!escaped.contains('/') && !escaped.contains('.'),
+                    "{name} → {escaped}");
+        }
+    }
+}

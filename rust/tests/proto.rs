@@ -6,8 +6,9 @@
 //! * malformed frames — truncated at *every* byte offset, trailing
 //!   bytes, bad version, wrong frame type, unknown tags — are contextful
 //!   errors, never panics;
-//! * fixture-byte regressions pinning the v1 wire layout (mirrors the
-//!   `serial` fixture style);
+//! * fixture-byte regressions pinning the v2 wire layout (mirrors the
+//!   `serial` fixture style; v1 frames are rejected with a clean
+//!   version error);
 //! * transport behavior: mpsc pair and TCP loopback carry frames intact
 //!   (framing across back-to-back and large frames, clean close).
 
@@ -20,8 +21,8 @@ use priot::proto::codec::{
     PROTO_VERSION,
 };
 use priot::proto::{
-    ChannelTransport, MethodSpec, Priority, Request, Response, TcpTransport,
-    Transport,
+    ChannelTransport, ErrorKind, MethodSpec, Priority, Request, Response,
+    TcpTransport, Transport,
 };
 use priot::ptest;
 use priot::serial::Dataset;
@@ -77,6 +78,14 @@ fn rand_priority(rng: &mut XorShift64) -> Priority {
     }
 }
 
+fn rand_angle(rng: &mut XorShift64) -> Option<u32> {
+    if rng.below(2) == 0 {
+        None
+    } else {
+        Some(rng.below(360) as u32)
+    }
+}
+
 fn rand_request(rng: &mut XorShift64) -> Request {
     let device = rand_device(rng);
     match rng.below(5) {
@@ -86,6 +95,7 @@ fn rand_request(rng: &mut XorShift64) -> Request {
             method: rand_method(rng),
             train: rand_dataset(rng),
             test: rand_dataset(rng),
+            angle: rand_angle(rng),
         },
         1 => Request::Train { device, epochs: rng.below(100) },
         2 => Request::Predict {
@@ -97,6 +107,7 @@ fn rand_request(rng: &mut XorShift64) -> Request {
             device,
             train: rand_dataset(rng),
             test: rand_dataset(rng),
+            angle: rand_angle(rng),
         },
     }
 }
@@ -104,7 +115,7 @@ fn rand_request(rng: &mut XorShift64) -> Request {
 fn rand_response(rng: &mut XorShift64) -> Response {
     let device = rand_device(rng);
     match rng.below(6) {
-        0 => Response::Registered { device },
+        0 => Response::Registered { device, resumed: rng.below(2) == 1 },
         1 => Response::TrainDone {
             device,
             epochs: rng.below(50),
@@ -120,6 +131,11 @@ fn rand_response(rng: &mut XorShift64) -> Response {
         4 => Response::Drifted { device },
         _ => Response::Error {
             device,
+            kind: match rng.below(3) {
+                0 => ErrorKind::Request,
+                1 => ErrorKind::Store,
+                _ => ErrorKind::Shutdown,
+            },
             message: format!("synthetic error #{}", rng.below(100)),
         },
     }
@@ -203,6 +219,7 @@ fn register_frame() -> Vec<u8> {
         method: MethodSpec::priot_s(0.25, Selection::WeightBased).with_theta(-3),
         train: rand_dataset(&mut rng),
         test: rand_dataset(&mut rng),
+        angle: Some(30),
     };
     encode_request(42, Priority::Background, &req)
 }
@@ -255,7 +272,10 @@ fn bad_version_is_a_contextful_error() {
 #[test]
 fn wrong_frame_type_is_rejected() {
     let resp_frame =
-        encode_response(1, &Response::Registered { device: "d".into() });
+        encode_response(1, &Response::Registered {
+            device: "d".into(),
+            resumed: false,
+        });
     let err = decode_request(&resp_frame).unwrap_err();
     assert!(format!("{err:#}").contains("expected a request"), "{err:#}");
 
@@ -282,16 +302,20 @@ fn unknown_tags_and_priorities_are_rejected() {
 
     // Response frame: offset 10 is the variant tag.
     let mut bad =
-        encode_response(1, &Response::Registered { device: "d".into() });
+        encode_response(1, &Response::Registered {
+            device: "d".into(),
+            resumed: false,
+        });
     bad[10] = 88;
     let err = decode_response(&bad).unwrap_err();
     assert!(format!("{err:#}").contains("unknown response tag 88"), "{err:#}");
 }
 
 #[test]
-fn v1_wire_layout_is_pinned() {
+fn v2_wire_layout_is_pinned() {
     // Fixture bytes in the `serial` regression style: if these change,
     // the protocol version must be bumped, not silently drifted.
+    assert_eq!(PROTO_VERSION, 2, "bumping the version? re-pin the fixtures");
     let mut want = vec![PROTO_VERSION, 0u8]; // version, request frame
     want.extend(7u64.to_le_bytes()); // id
     want.push(2); // priority: background
@@ -301,7 +325,7 @@ fn v1_wire_layout_is_pinned() {
     want.extend(3u64.to_le_bytes()); // epochs
     let req = Request::Train { device: "dev-a".into(), epochs: 3 };
     assert_eq!(encode_request(7, Priority::Background, &req), want,
-               "v1 Train frame layout drifted");
+               "v2 Train frame layout drifted");
     let (id, prio, back) = decode_request(&want).unwrap();
     assert_eq!((id, prio), (7, Priority::Background));
     assert_eq!(back, req);
@@ -319,8 +343,66 @@ fn v1_wire_layout_is_pinned() {
         n: 24,
     };
     assert_eq!(encode_response(9, &resp), want,
-               "v1 Evaluation frame layout drifted");
+               "v2 Evaluation frame layout drifted");
     assert_eq!(decode_response(&want).unwrap(), (9, resp));
+
+    // The v2 additions, pinned: the Registered resumed flag and the
+    // Error kind byte.
+    let mut want = vec![PROTO_VERSION, 1u8];
+    want.extend(3u64.to_le_bytes()); // id
+    want.push(0); // tag: Registered
+    want.extend(5u32.to_le_bytes());
+    want.extend(b"dev-c");
+    want.push(1); // resumed: true
+    let resp = Response::Registered { device: "dev-c".into(), resumed: true };
+    assert_eq!(encode_response(3, &resp), want,
+               "v2 Registered frame layout drifted");
+    assert_eq!(decode_response(&want).unwrap(), (3, resp));
+
+    let mut want = vec![PROTO_VERSION, 1u8];
+    want.extend(4u64.to_le_bytes()); // id
+    want.push(5); // tag: Error
+    want.extend(5u32.to_le_bytes());
+    want.extend(b"dev-d");
+    want.push(1); // kind: Store
+    want.extend(4u32.to_le_bytes());
+    want.extend(b"oops");
+    let resp = Response::Error {
+        device: "dev-d".into(),
+        kind: ErrorKind::Store,
+        message: "oops".into(),
+    };
+    assert_eq!(encode_response(4, &resp), want,
+               "v2 Error frame layout drifted");
+    assert_eq!(decode_response(&want).unwrap(), (4, resp));
+}
+
+#[test]
+fn v1_frames_are_rejected() {
+    // The durable-state revision bumped the protocol to v2 (Registered
+    // resumed flag, Error kind, Register/Drift angle): a v1 peer must
+    // get a clean version error, never a misparse.
+    let mut frame = encode_request(
+        1, Priority::Batch, &Request::Evaluate { device: "d".into() });
+    frame[0] = 1; // v1
+    let err = decode_request(&frame).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version 1"), "{msg}");
+}
+
+#[test]
+fn unknown_error_kind_is_rejected() {
+    let mut frame = encode_response(1, &Response::Error {
+        device: "d".into(),
+        kind: ErrorKind::Request,
+        message: "m".into(),
+    });
+    // Header (10) + tag (1) + device len (4) + "d" (1) = offset 16 is
+    // the kind byte.
+    assert_eq!(frame[16], 0);
+    frame[16] = 9;
+    let err = decode_response(&frame).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown error kind 9"), "{err:#}");
 }
 
 #[test]
@@ -345,6 +427,30 @@ fn implausible_dataset_dims_are_rejected() {
 // ---------------------------------------------------------------------------
 // Transports
 // ---------------------------------------------------------------------------
+
+#[test]
+fn method_spec_canonicalization_normalizes_defaults() {
+    // Canonical = "what the live plugin says about itself".  An unset θ
+    // becomes the method's actual default, so resume identity checks
+    // (request spec vs snapshot spec) compare like with like.
+    assert_eq!(MethodSpec::priot().canonical().theta, Some(-64));
+    assert_eq!(MethodSpec::priot().with_theta(-64).canonical(),
+               MethodSpec::priot().canonical());
+    // NITI ignores the PRIOT-S knobs: they collapse to defaults.
+    let messy = MethodSpec {
+        method: Method::StaticNiti,
+        frac_scored: 0.9,
+        selection: Selection::Random,
+        theta: Some(5),
+    };
+    assert_eq!(messy.canonical(), MethodSpec::niti_static());
+    // PRIOT-S keeps its real knobs (and θ defaults to 0).
+    let s = MethodSpec::priot_s(0.2, Selection::Random).canonical();
+    assert_eq!((s.frac_scored, s.selection, s.theta),
+               (0.2, Selection::Random, Some(0)));
+    // Canonicalization is idempotent.
+    assert_eq!(s.canonical(), s);
+}
 
 #[test]
 fn request_default_priorities() {

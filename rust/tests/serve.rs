@@ -61,7 +61,10 @@ fn serve_roundtrip_matches_standalone_session() {
         .register("dev-a", 7, MethodSpec::priot(), Arc::clone(&train),
                   Arc::clone(&test))
         .unwrap();
-    assert_eq!(r0, Response::Registered { device: "dev-a".into() });
+    assert_eq!(r0, Response::Registered {
+        device: "dev-a".into(),
+        resumed: false,
+    });
     let r1 = client.train("dev-a", 2).unwrap();
     let probe = test.image(0).to_vec();
     let r2 = client.predict("dev-a", probe).unwrap();
@@ -180,21 +183,23 @@ fn serve_error_paths_are_responses_not_panics() {
     let r = client.train("ghost", 1).unwrap();
     assert!(matches!(&r, Response::Error { message, .. }
                      if message.contains("register first")), "{r:?}");
-    // 2: register with geometry-mismatched data → validated at dispatch
+    // 2: register with geometry-mismatched data → validated with the
+    // register unit on the worker pool
     let r = client
         .register("dev-g", 1, MethodSpec::priot(),
                   Arc::clone(&wrong_geometry), Arc::clone(&test))
         .unwrap();
     assert!(matches!(&r, Response::Error { message, .. }
                      if message.contains("geometry")), "{r:?}");
-    // 3 + 4: a good register, then a duplicate of it
+    // 3 + 4: a good register, then one for the same device with a
+    // *different* identity — a conflict, not a resume
     let r = client
         .register("dev-e", 1, MethodSpec::niti_static(), Arc::clone(&train),
                   Arc::clone(&test))
         .unwrap();
     assert!(!r.is_error(), "first register succeeds: {r:?}");
     let r = client
-        .register("dev-e", 1, MethodSpec::niti_static(), Arc::clone(&train),
+        .register("dev-e", 2, MethodSpec::priot(), Arc::clone(&train),
                   Arc::clone(&test))
         .unwrap();
     assert!(matches!(&r, Response::Error { message, .. }
@@ -203,7 +208,7 @@ fn serve_error_paths_are_responses_not_panics() {
     let r = client.predict("dev-e", vec![1, 2, 3]).unwrap();
     assert!(matches!(&r, Response::Error { message, .. }
                      if message.contains("pixels")), "{r:?}");
-    // 6: drift to mismatched data is rejected up front
+    // 6: drift to mismatched data is rejected (with the op, on the pool)
     let r = client
         .drift("dev-e", Arc::clone(&wrong_geometry), Arc::clone(&test))
         .unwrap();
@@ -213,6 +218,58 @@ fn serve_error_paths_are_responses_not_panics() {
     let report = server.join().unwrap();
     assert_eq!(report.requests, 6);
     assert_eq!(report.errors(), 5, "{:?}", report.responses);
+}
+
+#[test]
+fn register_of_a_live_device_resumes_instead_of_erroring() {
+    // Reconnect semantics: a Register for a device the server already
+    // has — same seed, same method — is a resume handshake, not a
+    // duplicate-registration error.  The device keeps its adapted state
+    // (the re-register's datasets are ignored), so a client replaying
+    // its trace after a connection drop is safe.
+    let bb = synthetic_backbone(40);
+    let train = synthetic_dataset(41, 24);
+    let test = synthetic_dataset(42, 16);
+    let other = synthetic_dataset(43, 24);
+
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-r", 5, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert_eq!(r, Response::Registered {
+        device: "dev-r".into(),
+        resumed: false,
+    });
+    client.train("dev-r", 2).unwrap();
+    // A second connection re-registers the same identity — resumed, and
+    // the device's state (2 epochs in) survives the handshake even
+    // though different datasets were offered.
+    let mut client2 = server.local_client();
+    let r = client2
+        .register("dev-r", 5, MethodSpec::priot(), Arc::clone(&other),
+                  Arc::clone(&other))
+        .unwrap();
+    assert_eq!(r, Response::Registered {
+        device: "dev-r".into(),
+        resumed: true,
+    });
+    let served = match client2.evaluate("dev-r").unwrap() {
+        Response::Evaluation { accuracy, .. } => accuracy,
+        other => panic!("expected Evaluation, got {other:?}"),
+    };
+    drop(client);
+    drop(client2);
+    server.join().unwrap();
+
+    let mut solo = solo_session(&bb, Box::new(Priot::new()), 5);
+    for _ in 0..2 {
+        solo.train_epoch(&train).unwrap();
+    }
+    let want = solo.evaluate_batch(&test, 8).unwrap();
+    assert_eq!(served, want,
+               "resume kept the trained state and the original test set");
 }
 
 #[test]
@@ -307,6 +364,115 @@ fn predict_overtakes_queued_training_epochs() {
         Response::TrainDone { epochs, .. } => assert_eq!(epochs, 30),
         other => panic!("expected TrainDone, got {other:?}"),
     }
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn register_racing_its_own_registration_still_resumes() {
+    // Registers now build on the worker pool, so a reconnecting client
+    // can re-send its register line while the original register is
+    // still in flight.  Whichever way the race resolves — handshake
+    // queued behind the build, or arriving after it — the second
+    // register must come back as a resume, never an error.
+    let bb = synthetic_backbone(55);
+    let train = synthetic_dataset(56, 24);
+    let test = synthetic_dataset(57, 8);
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(1).build();
+    let mut client = server.local_client();
+    let mk_register = |seed: u32| Request::Register {
+        device: "dev-race".into(),
+        seed,
+        method: MethodSpec::priot(),
+        train: Arc::clone(&train),
+        test: Arc::clone(&test),
+        angle: None,
+    };
+    let id1 = client.submit(mk_register(1)).unwrap();
+    let id2 = client.submit(mk_register(1)).unwrap();
+    let r1 = client.wait(id1).unwrap();
+    assert_eq!(r1, Response::Registered {
+        device: "dev-race".into(),
+        resumed: false,
+    });
+    let r2 = client.wait(id2).unwrap();
+    assert_eq!(r2, Response::Registered {
+        device: "dev-race".into(),
+        resumed: true,
+    });
+    // A mismatched identity is still a conflict, racing or not.
+    let r3 = client
+        .register("dev-race", 2, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(matches!(&r3, Response::Error { message, .. }
+                     if message.contains("different method or seed")),
+            "{r3:?}");
+    // The device works normally afterwards.
+    let r = client.train("dev-race", 1).unwrap();
+    assert!(matches!(r, Response::TrainDone { epochs: 1, .. }), "{r:?}");
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn slow_register_does_not_delay_another_devices_predict() {
+    // "Heavy work never on the dispatcher": Register (validation +
+    // session construction + initial snapshot persist) executes on the
+    // worker pool.  Under the old inline-on-dispatcher design, the
+    // register's response was always emitted before a predict submitted
+    // after it was even dispatched — so observing the predict answered
+    // *first* proves a slow register no longer stalls dispatch for
+    // other devices.
+    let bb = synthetic_backbone(50);
+    let train = synthetic_dataset(51, 24);
+    let test = synthetic_dataset(52, 8);
+    // A deliberately heavy register payload: validation, session build,
+    // and the write-through initial snapshot all scan these ~24 MB.
+    let big_n = 30_000usize;
+    let big = Arc::new(Dataset {
+        n: big_n,
+        c: 1,
+        h: 28,
+        w: 28,
+        images: vec![0u8; big_n * 28 * 28],
+        labels: vec![0u8; big_n],
+    });
+
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(2)
+        .resident_cap(8) // attaches a MemStore → registers persist
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-a", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(!r.is_error(), "{r:?}");
+    let register_id = client
+        .submit(Request::Register {
+            device: "dev-big".into(),
+            seed: 2,
+            method: MethodSpec::priot(),
+            train: Arc::clone(&big),
+            test: Arc::clone(&big),
+            angle: None,
+        })
+        .unwrap();
+    let predict_id = client
+        .submit(Request::Predict {
+            device: "dev-a".into(),
+            image: test.image(0).to_vec(),
+        })
+        .unwrap();
+    let (first_id, first) = client.next_response().unwrap().unwrap();
+    assert_eq!(
+        first_id, predict_id,
+        "predict on dev-a answered while dev-big's register is still \
+         building: got {first:?}"
+    );
+    let reg = client.wait(register_id).unwrap();
+    assert!(!reg.is_error(), "{reg:?}");
     drop(client);
     server.join().unwrap();
 }
