@@ -10,6 +10,19 @@
 //!
 //! The hot path is allocation-free: all tape and gradient buffers live in
 //! the [`Workspace`], sized once from the [`NetSpec`].
+//!
+//! ## Arithmetic lint wall
+//!
+//! This module is inside the `priot::audit` soundness perimeter: implicit
+//! arithmetic is denied (`clippy::arithmetic_side_effects`), and every
+//! block that intentionally does raw `+`/`*` carries a scoped, documented
+//! `#[allow]`.  The point is that *new* arithmetic cannot sneak into the
+//! integer hot path without either a review note or a static bound from
+//! `priot::audit` — the i32 MAC accumulation here is exactly the contract
+//! the auditor proves (`K·127·127` per row plus the rounding bias fits
+//! i32, see `audit::Verdict`).
+
+#![deny(clippy::arithmetic_side_effects)]
 
 use std::sync::Arc;
 
@@ -66,6 +79,9 @@ pub struct Workspace {
     dlogits: Vec<i32>,
 }
 
+// Lint wall: buffer-sizing products over spec dims; an overflow here would
+// fail the allocation loudly, never corrupt training arithmetic.
+#[allow(clippy::arithmetic_side_effects)]
 impl Workspace {
     pub fn new(spec: &NetSpec) -> Self {
         let mut layers = Vec::with_capacity(spec.layers.len());
@@ -134,6 +150,8 @@ struct BatchBufs {
     x_b: Vec<i32>,
 }
 
+// Lint wall: same buffer-sizing arithmetic as `Workspace` (batch-scaled).
+#[allow(clippy::arithmetic_side_effects)]
 impl BatchBufs {
     fn new(spec: &NetSpec, b: usize) -> Self {
         let mut scratch = Vec::with_capacity(spec.layers.len());
@@ -183,6 +201,45 @@ pub struct Engine {
     ws: Workspace,
     /// Batched-inference buffers (lazy; see [`BatchBufs`]).
     batch: Option<BatchBufs>,
+    /// Optional runtime accumulator probe (see [`AccProbe`]); off by
+    /// default — the observe loop never runs on the production path.
+    probe: Option<AccProbe>,
+}
+
+/// Per-layer min/max of the raw i32 forward accumulator, observed at the
+/// GEMM output before requantization — the runtime cross-check for the
+/// static bounds `priot::audit` derives (`tests/audit.rs` asserts every
+/// observed extreme lies inside its proven interval).
+///
+/// Deliberately arithmetic-free (min/max folds only): this type lives
+/// inside the lint wall with no `#[allow]` — the deny verifies it.
+#[derive(Clone, Debug)]
+pub struct AccProbe {
+    /// Per-layer smallest accumulator seen (`i32::MAX` until observed).
+    pub min: Vec<i32>,
+    /// Per-layer largest accumulator seen (`i32::MIN` until observed).
+    pub max: Vec<i32>,
+}
+
+impl AccProbe {
+    fn new(n_layers: usize) -> Self {
+        Self { min: vec![i32::MAX; n_layers], max: vec![i32::MIN; n_layers] }
+    }
+
+    /// True once layer `li` has observed at least one accumulator value.
+    pub fn observed(&self, li: usize) -> bool {
+        self.min[li] <= self.max[li]
+    }
+
+    fn observe(&mut self, li: usize, acc: &[i32]) {
+        let (mut lo, mut hi) = (self.min[li], self.max[li]);
+        for &v in acc {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        self.min[li] = lo;
+        self.max[li] = hi;
+    }
 }
 
 fn check_shapes(spec: &NetSpec, weights: &[Mat], scales: &Scales) -> Result<()> {
@@ -204,6 +261,11 @@ fn check_shapes(spec: &NetSpec, weights: &[Mat], scales: &Scales) -> Result<()> 
     Ok(())
 }
 
+// Lint wall: the audited integer hot path.  Every `+`/`*` below is i32 MAC
+// accumulation or index arithmetic whose bounds `priot::audit` proves from
+// the spec (per-row K·127·127 envelope + requant rounding bias ≤ i32::MAX);
+// the runtime cross-check is `AccProbe` + the Fig. 2 overflow counters.
+#[allow(clippy::arithmetic_side_effects)]
 impl Engine {
     pub fn new(spec: NetSpec, weights: Vec<Mat>, scales: Scales) -> Result<Self> {
         Self::shared(spec, Arc::new(weights), Arc::new(scales))
@@ -215,7 +277,18 @@ impl Engine {
                   -> Result<Self> {
         check_shapes(&spec, &weights, &scales)?;
         let ws = Workspace::new(&spec);
-        Ok(Self { spec, scales, weights, ws, batch: None })
+        Ok(Self { spec, scales, weights, ws, batch: None, probe: None })
+    }
+
+    /// Start recording per-layer accumulator extremes (resets any prior
+    /// probe).  Costs one min/max pass per GEMM output while enabled.
+    pub fn probe_enable(&mut self) {
+        self.probe = Some(AccProbe::new(self.spec.layers.len()));
+    }
+
+    /// Stop recording and return the observed extremes (if enabled).
+    pub fn probe_take(&mut self) -> Option<AccProbe> {
+        self.probe.take()
     }
 
     /// Build from the on-disk int8 tensors (artifacts).
@@ -281,6 +354,9 @@ impl Engine {
             let w_fwd: &Mat =
                 if prune.is_some() { &buf.weff } else { &self.weights[li] };
             gemm_nn(w_fwd, &buf.cols, &mut buf.acc);
+            if let Some(p) = self.probe.as_mut() {
+                p.observe(li, &buf.acc.data);
+            }
             let mut s = self.scales.layers[li].fwd;
             if dynamic {
                 s = dynamic_shift_for(max_abs(&buf.acc.data));
@@ -390,6 +466,9 @@ impl Engine {
             };
             let acc = &mut bw.acc[li];
             gemm_nn(w_fwd, cols, acc);
+            if let Some(p) = self.probe.as_mut() {
+                p.observe(li, &acc.data);
+            }
             let s = self.scales.layers[li].fwd;
             let relu_flag = match layer {
                 LayerSpec::Conv { relu, .. } => relu,
@@ -759,6 +838,9 @@ impl Engine {
 
 /// PRIOT-S sparse weight-gradient: per-edge dot products for scored edges
 /// only.  `dy` (F, N), `cols` (K, N), `mask`/`grad` (F, K).
+// Lint wall: same audited MAC contract as the dense GEMMs (δy·x over N
+// int8-range terms per edge — strictly tighter than the forward bound).
+#[allow(clippy::arithmetic_side_effects)]
 fn sparse_grad(dy: &Mat, cols: &Mat, mask: &[i32], grad: &mut Mat) {
     let (f, k, n) = (dy.rows, cols.rows, dy.cols);
     debug_assert_eq!(cols.cols, n);
@@ -791,5 +873,7 @@ pub fn argmax(xs: &[i32]) -> usize {
     best
 }
 
+// Lint wall: tests exercise arithmetic freely (oracle replicas etc.).
+#[allow(clippy::arithmetic_side_effects)]
 #[cfg(test)]
 mod tests;

@@ -97,6 +97,23 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Static soundness audit
+//!
+//! [`audit`] is the ahead-of-time counterpart of the Fig. 2 runtime
+//! overflow counters: an interval-analysis pass that propagates worst-case
+//! and weight-exact accumulator bounds through every conv/FC GEMM, requant
+//! shift, ReLU, and pooling stage of the quantized network — method-aware
+//! (prune masks tighten the bound, NITI weight drift widens it) — and
+//! proves per layer that i32 accumulation cannot overflow, or reports the
+//! exact missing headroom ([`audit::Verdict`]).  Surfaced as the
+//! `priot audit` CLI (table + JSON, nonzero exit on unsound configs — the
+//! CI gate), as a Register-time policy
+//! (`ServeBuilder::audit(AuditPolicy::Reject)` refuses statically unsound
+//! method specs, e.g. a corrupt scale table), and as an arithmetic lint
+//! wall over the `engine`/`tensor::gemm`/`quant` hot paths.  The runtime
+//! cross-check is [`engine::AccProbe`]: observed per-layer accumulator
+//! extremes, asserted within the static bounds by `rust/tests/audit.rs`.
+//!
 //! ## Data is generated in-process
 //!
 //! [`datagen`] is the native port of the Python procedural generators
@@ -127,6 +144,7 @@
 //! `examples/`, and the benches in `rust/benches/` (one per paper
 //! table/figure, plus `fleet` for session throughput).
 
+pub mod audit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

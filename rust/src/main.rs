@@ -7,7 +7,10 @@
 //! priot fleet   [--devices 8] [--angles 0,30,60]  multi-device simulation
 //! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
 //!               [--state-dir DIR] [--resident-cap N]   durable + LRU-bounded
+//!               [--audit off|warn|reject]         register-time soundness gate
 //! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
+//! priot audit   [--method M] [--json]             static overflow-soundness proof
+//! priot bench   [--suite kernel|serve|all]        perf snapshot + baseline diff
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
 //! priot fig2    [--epochs 12]                     Fig. 2 CSV
@@ -25,7 +28,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use priot::cli::Args;
 use priot::config::{Config, ExperimentConfig, Method, Selection};
@@ -97,6 +100,8 @@ fn run() -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "audit" => cmd_audit(&args),
+        "bench" => cmd_bench(&args),
         "table1" => {
             let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
             write_or_print(&args, "table1.md", &md)
@@ -337,6 +342,10 @@ fn trace_text(args: &Args) -> Result<String> {
 /// registers resume instead of erroring), and `--resident-cap N` bounds
 /// live sessions — idle devices beyond N are evicted to the store and
 /// rehydrated bit-identically on their next request.
+///
+/// Soundness: `--audit warn|reject` runs the static overflow audit
+/// (see `priot audit`) against every fresh registration's method config;
+/// `reject` refuses statically unsound configurations at the front door.
 fn cmd_serve(args: &Args) -> Result<()> {
     use priot::session::serve;
 
@@ -346,6 +355,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window: usize = args.option("window").unwrap_or("64").parse()?;
     let resident_cap: usize =
         args.option("resident-cap").unwrap_or("0").parse()?;
+    let audit_policy = match args.option("audit").unwrap_or("off") {
+        "off" => priot::session::AuditPolicy::Off,
+        "warn" => priot::session::AuditPolicy::Warn,
+        "reject" => priot::session::AuditPolicy::Reject,
+        other => bail!("unknown --audit policy '{other}' (want off|warn|reject)"),
+    };
     // One config resolves everything path-shaped (`--artifacts`, a
     // `--config` file, `--model`, `--dataset`, `--source`...), so the
     // backbone and the datasets can never come from different roots.
@@ -358,6 +373,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .eval_batch(eval_batch)
         .window(window)
         .resident_cap(resident_cap)
+        .audit(audit_policy)
         // A listener runs until interrupted and never join()s, so don't
         // accumulate a server-side copy of every response.
         .record(args.option("listen").is_none());
@@ -430,6 +446,142 @@ fn cmd_client(args: &Args) -> Result<()> {
              responses.len());
     if errors > 0 {
         anyhow::bail!("{errors} of {} requests errored", responses.len());
+    }
+    Ok(())
+}
+
+/// Static overflow-soundness audit (`priot audit`).
+///
+/// Propagates worst-case and weight-exact interval bounds through every
+/// layer of the frozen backbone for each Table I on-device method config
+/// (or a single `--method M [--frac F] [--selection S] [--theta T]`),
+/// printing a per-layer verdict table — `proven` / `headroom(b)` /
+/// `OVERFLOWABLE` — plus requant-saturation analysis.  Exits non-zero if
+/// any audited config is statically unsound, so CI can gate on it.
+///
+/// PRIOT/PRIOT-S configs are audited against the *exact* prune masks the
+/// method would materialise for `--seed` (tighter than the any-mask
+/// family); NITI configs are audited under the full weight-drift
+/// envelope since training mutates weights in place.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use priot::proto::MethodSpec;
+
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let seed: u32 = args.option("seed").unwrap_or("1").parse()?;
+    let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
+
+    let specs: Vec<(String, MethodSpec)> = match args.option("method") {
+        Some(m) => {
+            let method = Method::parse(m)?;
+            let frac: f64 = args.option("frac").unwrap_or("0.1").parse()?;
+            let selection =
+                Selection::parse(args.option("selection").unwrap_or("weight"))?;
+            let mut spec = match method {
+                Method::StaticNiti => MethodSpec::niti_static(),
+                Method::DynamicNiti => MethodSpec::niti_dynamic(),
+                Method::Priot => MethodSpec::priot(),
+                Method::PriotS => MethodSpec::priot_s(frac, selection),
+            };
+            if let Some(t) = args.option("theta") {
+                spec = spec.with_theta(t.parse()?);
+            }
+            vec![(m.to_string(), spec)]
+        }
+        // Default roster: every on-device Table I configuration.
+        None => vec![
+            ("static-niti".into(), MethodSpec::niti_static()),
+            ("dynamic-niti".into(), MethodSpec::niti_dynamic()),
+            ("priot".into(), MethodSpec::priot()),
+            ("priot-s-90-random".into(),
+             MethodSpec::priot_s(0.1, Selection::Random)),
+            ("priot-s-90-weight".into(),
+             MethodSpec::priot_s(0.1, Selection::WeightBased)),
+            ("priot-s-80-random".into(),
+             MethodSpec::priot_s(0.2, Selection::Random)),
+            ("priot-s-80-weight".into(),
+             MethodSpec::priot_s(0.2, Selection::WeightBased)),
+        ],
+    };
+
+    let mut tables = String::new();
+    let mut jsons = Vec::new();
+    let mut unsound = Vec::new();
+    for (label, spec) in &specs {
+        // Materialise the plugin so pruning methods are audited against
+        // the exact masks this seed would select.
+        let mut plugin = spec.plugin();
+        plugin
+            .init(&backbone.spec, &backbone.weights, seed)
+            .with_context(|| format!("initialising {label} for audit"))?;
+        let report = priot::audit::audit_backbone(&backbone, spec, plugin.masks())
+            .with_context(|| format!("auditing {label}"))?;
+        if !report.sound() {
+            unsound.push(format!("{label}: {}", report.summary()));
+        }
+        tables.push_str(&report.render_table());
+        tables.push('\n');
+        jsons.push(report.to_json());
+    }
+
+    if args.has_flag("json") {
+        let json = format!("[{}]\n", jsons.join(",\n"));
+        write_or_print(args, "audit.json", &json)?;
+    } else {
+        print!("{tables}");
+        println!(
+            "audit: {}/{} configs statically sound",
+            specs.len() - unsound.len(),
+            specs.len()
+        );
+    }
+    if !unsound.is_empty() {
+        bail!("statically unsound configs:\n  {}", unsound.join("\n  "));
+    }
+    Ok(())
+}
+
+/// Micro/macro benchmark runner with durable snapshots (`priot bench`).
+///
+/// `--suite kernel` times the GEMM/im2col hot paths at Table I shapes;
+/// `--suite serve` times register/train/evaluate through the fleet
+/// service; `--suite all` (default) runs both.  `--baseline DIR` diffs
+/// against checked-in `BENCH_<suite>.json` snapshots; `--update DIR`
+/// rewrites them from this run.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use priot::report::bench;
+
+    let suite = args.option("suite").unwrap_or("all");
+    let iters: u32 = args.option("iters").unwrap_or("200").parse()?;
+    let mut results = Vec::new();
+    match suite {
+        "kernel" => results.push(bench::run_kernel(iters)),
+        "serve" => results.push(bench::run_serve()?),
+        "all" => {
+            results.push(bench::run_kernel(iters));
+            results.push(bench::run_serve()?);
+        }
+        other => bail!("unknown bench suite '{other}' (want kernel|serve|all)"),
+    }
+    for r in &results {
+        print!("{}", r.render());
+        if let Some(dir) = args.option("baseline") {
+            let path = Path::new(dir).join(format!("BENCH_{}.json", r.suite));
+            match std::fs::read_to_string(&path) {
+                Ok(text) => {
+                    let base = bench::BenchResults::from_json(&text)
+                        .with_context(|| format!("parsing {}", path.display()))?;
+                    print!("{}", r.diff(&base));
+                }
+                Err(e) => eprintln!("(no baseline {}: {e})", path.display()),
+            }
+        }
+        if let Some(dir) = args.option("update") {
+            std::fs::create_dir_all(dir)?;
+            let path = Path::new(dir).join(format!("BENCH_{}.json", r.suite));
+            std::fs::write(&path, r.to_json())?;
+            eprintln!("wrote {}", path.display());
+        }
+        println!();
     }
     Ok(())
 }
@@ -513,8 +665,14 @@ fn print_help() {
          \x20 fleet        simulate N devices adapting concurrently (--angles 0,30,60)\n\
          \x20 serve        long-lived fleet service (--trace replay or --listen ADDR;\n\
          \x20              --state-dir DIR = durable restart-resume, --resident-cap N\n\
-         \x20              = LRU-bound live sessions over the store)\n\
+         \x20              = LRU-bound live sessions over the store,\n\
+         \x20              --audit warn|reject = register-time soundness gate)\n\
          \x20 client       replay a request trace against a remote server over TCP\n\
+         \x20 audit        static overflow-soundness proof of the quantised net\n\
+         \x20              (per-layer interval bounds; --method M or the full\n\
+         \x20              Table I roster; --json; exits non-zero if unsound)\n\
+         \x20 bench        kernel + serve perf snapshots (--suite kernel|serve|all,\n\
+         \x20              --baseline DIR diffs BENCH_*.json, --update DIR rewrites)\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
          \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\

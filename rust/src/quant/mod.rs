@@ -2,7 +2,23 @@
 //! (mirrors `python/compile/quantlib.py` bit-for-bit), NITI-style dynamic
 //! shift selection, the integer cross-entropy backward, and the calibration
 //! histogram used to pick static shifts.
+//!
+//! ## Arithmetic lint wall
+//!
+//! Like `engine` and `tensor::gemm`, this module denies implicit
+//! arithmetic (`clippy::arithmetic_side_effects`).  Every deliberate
+//! operation carries a scoped `#[allow]` with its range argument; the two
+//! `wrapping_add`s here are the *only* intentionally-wrapping ops in the
+//! repo's hot path (documented at their sites), and `priot::audit`
+//! statically proves the accumulator + rounding-bias sums they see cannot
+//! actually wrap for a sound model/scale table.
 
+#![deny(clippy::arithmetic_side_effects)]
+
+// Lint wall: the scale-table text codec does parsing/formatting arithmetic
+// only (line counters, error positions) — no hot-path math.  Validity of
+// the *values* it parses is `priot::audit`'s job (shift-range issues).
+#[allow(clippy::arithmetic_side_effects)]
 pub mod scales;
 
 pub use scales::{LayerScales, Scales};
@@ -20,6 +36,10 @@ pub const SOFTMAX_GAP_SHIFT: i32 = 3;
 ///
 /// `s == 0` is the identity.  Rust's `>>` on `i32` is arithmetic, matching
 /// numpy/jnp — the cross-language contract all three stacks share.
+// Lint wall: `s - 1` is guarded by the `s == 0` branch; the `wrapping_add`
+// is the audited bias add (`audit::Verdict` proves acc + 1<<(s-1) fits i32
+// for every sound layer — wrapping is the overflow the auditor rules out).
+#[allow(clippy::arithmetic_side_effects)]
 #[inline(always)]
 pub fn rshift_round(x: i32, s: u32) -> i32 {
     if s == 0 {
@@ -30,6 +50,8 @@ pub fn rshift_round(x: i32, s: u32) -> i32 {
 }
 
 /// Clamp into the symmetric int8 range `[-127, 127]`.
+// Lint wall: `-INT8_MAX` is a constant negation of 127.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline(always)]
 pub fn clamp8(x: i32) -> i32 {
     x.clamp(-INT8_MAX, INT8_MAX)
@@ -53,6 +75,9 @@ pub fn requant_slice(acc: &[i32], s: u32, out: &mut [i32]) {
 ///
 /// Equivalent to `max(0, bitlen(max_abs) - 7)`; kept as the loop form to
 /// mirror the oracle definition exactly.
+// Lint wall: `s += 1` is bounded by the loop condition (s < 32 since
+// max_abs >> 31 is 0 or -1 for any i32).
+#[allow(clippy::arithmetic_side_effects)]
 #[inline]
 pub fn dynamic_shift_for(max_abs: i32) -> u32 {
     debug_assert!(max_abs >= 0);
@@ -64,6 +89,9 @@ pub fn dynamic_shift_for(max_abs: i32) -> u32 {
 }
 
 /// Max |x| over a slice (0 for empty) — the dynamic-scale probe.
+// Lint wall: `abs()` panics only on i32::MIN, unreachable for audited
+// accumulators (|acc| ≤ K·127² < 2^31 is exactly the proven bound).
+#[allow(clippy::arithmetic_side_effects)]
 pub fn max_abs(xs: &[i32]) -> i32 {
     xs.iter().fold(0, |m, &x| m.max(x.abs()))
 }
@@ -76,6 +104,9 @@ pub fn max_abs(xs: &[i32]) -> i32 {
 /// p̂_i  = e_i * 127 / Σe          (trunc div; operands nonnegative)
 /// δ_i   = p̂_i - 127·onehot_i     ∈ [-127, 127]
 /// ```
+// Lint wall: int8-range logits widen through i64 (`m - l` ≤ 254, the
+// truncating division has total ≥ e_i ≥ 1), every range shown above.
+#[allow(clippy::arithmetic_side_effects)]
 pub fn int_softmax_grad(logits: &[i32], label: usize, out: &mut [i32]) {
     debug_assert_eq!(logits.len(), out.len());
     let m = logits.iter().copied().max().unwrap_or(0);
@@ -111,6 +142,10 @@ pub fn sr_hash_u32(step: u32, idx: u32) -> u32 {
 /// round-half-up rounds nearly all batch-1 updates to zero — see
 /// EXPERIMENTS.md pilot log).  Bit-identical to
 /// `quantlib.stochastic_requant`.
+// Lint wall: `(1u32 << s) - 1` with s ≥ 1 cannot underflow; the
+// `wrapping_add` is the second audited bias add (r < 2^s ≤ the
+// round-half-up bias bound the auditor already accounts for).
+#[allow(clippy::arithmetic_side_effects)]
 #[inline(always)]
 pub fn stochastic_requant(x: i32, s: u32, step: u32, idx: u32) -> i32 {
     if s == 0 {
@@ -129,6 +164,9 @@ pub struct ShiftHistogram {
     counts: Vec<u32>, // index = shift (shifts are tiny: < 32)
 }
 
+// Lint wall: u32 vote counters (`+= 1` saturates the test budget long
+// before 2^32) and a `len() - 1` over a never-empty vec.
+#[allow(clippy::arithmetic_side_effects)]
 impl ShiftHistogram {
     pub fn new() -> Self {
         Self { counts: vec![0; 32] }
@@ -154,6 +192,8 @@ impl ShiftHistogram {
     }
 }
 
+// Lint wall: tests compute reference values freely.
+#[allow(clippy::arithmetic_side_effects)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -154,4 +154,5 @@ mod tests {
     }
 }
 
+pub mod bench;
 pub mod experiments;

@@ -34,7 +34,7 @@ pub mod fleet;
 pub mod serve;
 
 pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
-pub use serve::{FleetServer, ServeBuilder, ServeReport};
+pub use serve::{AuditPolicy, FleetServer, ServeBuilder, ServeReport};
 
 pub use crate::proto::{FleetClient, Request, Response};
 

@@ -329,11 +329,28 @@ struct Clock {
     last_response: Option<Instant>,
 }
 
+/// Register-time static-soundness policy (see [`crate::audit`]): what to
+/// do when a fresh `Register`'s (backbone, scales, method) combination
+/// cannot be statically proven overflow-free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AuditPolicy {
+    /// No register-time audit (the default).
+    #[default]
+    Off,
+    /// Audit and log unsound registrations to stderr, but accept them.
+    Warn,
+    /// Refuse unsound registrations with a request error.
+    Reject,
+}
+
 struct Shared {
     backbone: Arc<Backbone>,
     limit: usize,
     eval_batch: usize,
     window: usize,
+    /// Register-time static-soundness policy (fresh registers only;
+    /// resumes were audited at original registration).
+    audit: AuditPolicy,
     /// Durable snapshot store; `None` = memory-only serving (no
     /// eviction, no resume).
     store: Option<Arc<dyn StateStore>>,
@@ -1024,6 +1041,28 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
             .build()
             .with_context(|| format!("registering {device}"))
             .map_err(request_fail)?;
+        // Static soundness gate (`crate::audit`): refuse or flag method
+        // specs whose accumulators cannot be proven overflow-free under
+        // this backbone + scale table — before any state is persisted.
+        // Resumed registers skip this: they were audited when originally
+        // registered and carry bit-identical state.
+        if shared.audit != AuditPolicy::Off {
+            let report = crate::audit::audit_backbone(&shared.backbone,
+                                                      &method,
+                                                      session.masks())
+                .with_context(|| format!("registering {device}: audit"))
+                .map_err(request_fail)?;
+            if !report.sound() {
+                if shared.audit == AuditPolicy::Reject {
+                    return Err(request_fail(anyhow!(
+                        "registering {device}: statically unsound: {}",
+                        report.summary()
+                    )));
+                }
+                eprintln!("[serve] audit warning for {device}: {}",
+                          report.summary());
+            }
+        }
         // Durable registration: the initial snapshot lands before the
         // ack, so a crash right after it can still resume the device.
         if let Some(store) = &shared.store {
@@ -1269,6 +1308,7 @@ pub struct ServeBuilder {
     record: bool,
     store: Option<Arc<dyn StateStore>>,
     resident_cap: usize,
+    audit: AuditPolicy,
 }
 
 impl ServeBuilder {
@@ -1338,6 +1378,17 @@ impl ServeBuilder {
         self
     }
 
+    /// Register-time static-soundness policy (default
+    /// [`AuditPolicy::Off`]): with [`AuditPolicy::Reject`] a fresh
+    /// `Register` whose method spec cannot be statically proven
+    /// overflow-free under this backbone's weights and scale table is
+    /// answered with a request error instead of creating a device —
+    /// what `priot serve --audit reject` sets.
+    pub fn audit(mut self, policy: AuditPolicy) -> Self {
+        self.audit = policy;
+        self
+    }
+
     /// Spawn the dispatcher + worker pool and return the live handle.
     pub fn build(self) -> FleetServer {
         let threads = if self.threads == 0 {
@@ -1396,6 +1447,7 @@ impl ServeBuilder {
             limit: self.limit,
             eval_batch: self.eval_batch,
             window: if self.window == 0 { usize::MAX } else { self.window },
+            audit: self.audit,
             store,
             resident_cap,
             registry: Mutex::new(registry),
@@ -1460,6 +1512,7 @@ impl FleetServer {
             record: true,
             store: None,
             resident_cap: 0,
+            audit: AuditPolicy::Off,
         }
     }
 

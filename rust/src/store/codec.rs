@@ -1,7 +1,17 @@
 //! The versioned binary codec for [`DeviceSnapshot`]s.
 //!
-//! One snapshot is one self-contained blob (the unit a [`StateStore`]
-//! persists).  Layout, all integers little-endian:
+//! Since version 2 a snapshot is stored in two parts, so the mutable
+//! training state (small, rewritten on every train/drift) no longer
+//! drags the device's datasets (large, immutable between drifts) through
+//! every write:
+//!
+//! * the **body** — everything per-device and mutable, plus the content
+//!   hashes of the two dataset blobs it references;
+//! * two **dataset blobs** — content-addressed by FNV-1a64 of their
+//!   encoded bytes, written once per distinct dataset and shared between
+//!   devices/snapshots that carry identical data.
+//!
+//! Body layout, all integers little-endian:
 //!
 //! ```text
 //! u32 magic   "PRST" (0x50525354)
@@ -17,8 +27,15 @@
 //!   tag 0: u32 layers, layers × (u32 len + len·i32 scores),
 //!          layers × (u32 len + len·i32 masks)
 //!   tag 1: u32 layers, layers × (u32 len + len·i32 weights)
-//! dataset train, dataset test      (u32 n,c,h,w + pixels + labels)
+//! u64 train blob hash, u64 test blob hash
 //! u64 FNV-1a of everything above
+//! ```
+//!
+//! Blob layout (the address is `fnv1a64(blob bytes)`):
+//!
+//! ```text
+//! u32 n, u32 c, u32 h, u32 w
+//! n·c·h·w image bytes, n label bytes
 //! ```
 //!
 //! Values are exact i32 — unlike the int8 checkpoint files
@@ -26,10 +43,13 @@
 //! rehydration is provably lossless.  Decoding follows the
 //! `serial`/`proto` checked discipline (every read names what it reads;
 //! truncation and trailing bytes are contextful errors at the failing
-//! offset), and the trailing FNV-1a checksum rejects corruption that
-//! would otherwise still parse.
+//! offset).  The body carries a trailing FNV-1a checksum; blobs are
+//! self-checking by construction — the store recomputes each blob's hash
+//! on read and rejects any byte flip against the address the body pinned.
 //!
 //! [`StateStore`]: super::StateStore
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -37,6 +57,7 @@ use crate::datagen::fnv1a64;
 use crate::proto::codec::{
     put_dataset, put_method, put_opt_u32, put_str, put_u32, put_u64, Reader,
 };
+use crate::serial::Dataset;
 
 use super::{DeviceSnapshot, PluginState, SessionSnapshot};
 
@@ -44,8 +65,9 @@ use super::{DeviceSnapshot, PluginState, SessionSnapshot};
 pub const SNAPSHOT_MAGIC: u32 = 0x5052_5354;
 
 /// Snapshot layout revision.  Bump on any layout change; decoders reject
-/// other versions with a clean error.
-pub const SNAPSHOT_VERSION: u8 = 1;
+/// other versions with a clean error.  Version 2 split the dataset
+/// payloads out of the body into content-addressed blobs.
+pub const SNAPSHOT_VERSION: u8 = 2;
 
 const STATE_SCORES: u8 = 0;
 const STATE_WEIGHTS: u8 = 1;
@@ -63,8 +85,84 @@ fn put_layers(buf: &mut Vec<u8>, layers: &[Vec<i32>]) {
     }
 }
 
-/// Encode one snapshot (including the trailing checksum).
-pub fn encode_snapshot(snap: &DeviceSnapshot) -> Vec<u8> {
+/// Incremental FNV-1a64 (same constants as [`fnv1a64`]) so a dataset can
+/// be content-hashed without first encoding it into a scratch buffer.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+}
+
+/// The content address of `ds`: FNV-1a64 over its encoded blob bytes,
+/// computed without allocating the blob.  By construction equal to
+/// `fnv1a64(&encode_dataset_blob(ds))`.
+pub fn dataset_content_hash(ds: &Dataset) -> u64 {
+    let mut h = Fnv::new();
+    h.update(&(ds.n as u32).to_le_bytes());
+    h.update(&(ds.c as u32).to_le_bytes());
+    h.update(&(ds.h as u32).to_le_bytes());
+    h.update(&(ds.w as u32).to_le_bytes());
+    h.update(&ds.images);
+    h.update(&ds.labels);
+    h.0
+}
+
+/// Encode one dataset blob (dims header + image bytes + label bytes).
+pub fn encode_dataset_blob(ds: &Dataset) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(16 + ds.images.len() + ds.labels.len());
+    put_dataset(&mut buf, ds);
+    buf
+}
+
+/// Decode one dataset blob, verifying its bytes still hash to the
+/// address the referencing body pinned.
+pub fn decode_dataset_blob(
+    bytes: &[u8],
+    want: u64,
+    what: &str,
+) -> Result<Arc<Dataset>> {
+    let got = fnv1a64(bytes);
+    if got != want {
+        bail!(
+            "{what}: blob content hash mismatch (want {want:#018x}, \
+             computed {got:#018x}) — the blob is corrupt"
+        );
+    }
+    let mut r = Reader::new(bytes);
+    let ds = r.dataset(what)?;
+    r.finish(what)?;
+    Ok(ds)
+}
+
+/// The encoded form of one snapshot: the body plus the addresses of the
+/// two dataset blobs it references.  The caller (a [`StateStore`]) is
+/// responsible for making both blobs durable *before* the body — a body
+/// referencing a missing blob is corruption, the reverse is garbage.
+///
+/// [`StateStore`]: super::StateStore
+pub struct EncodedSnapshot {
+    pub body: Vec<u8>,
+    pub train_hash: u64,
+    pub test_hash: u64,
+}
+
+/// Encode one snapshot body (including the trailing checksum), returning
+/// it with the content addresses of the snapshot's datasets.  Dataset
+/// bytes are *not* encoded here — stores call [`encode_dataset_blob`]
+/// only for addresses they don't already hold.
+pub fn encode_snapshot(snap: &DeviceSnapshot) -> EncodedSnapshot {
+    let train_hash = dataset_content_hash(&snap.train);
+    let test_hash = dataset_content_hash(&snap.test);
     let mut buf = Vec::new();
     put_u32(&mut buf, SNAPSHOT_MAGIC);
     buf.push(SNAPSHOT_VERSION);
@@ -92,11 +190,11 @@ pub fn encode_snapshot(snap: &DeviceSnapshot) -> Vec<u8> {
             put_layers(&mut buf, weights);
         }
     }
-    put_dataset(&mut buf, &snap.train);
-    put_dataset(&mut buf, &snap.test);
+    put_u64(&mut buf, train_hash);
+    put_u64(&mut buf, test_hash);
     let hash = fnv1a64(&buf);
     put_u64(&mut buf, hash);
-    buf
+    EncodedSnapshot { body: buf, train_hash, test_hash }
 }
 
 /// Per-layer count bound, mirroring `serial::load_weights`' "implausible
@@ -124,8 +222,40 @@ fn read_layers(r: &mut Reader<'_>, n: usize, what: &str)
         .collect()
 }
 
-/// Decode one snapshot, verifying structure *and* the trailing checksum.
-pub fn decode_snapshot(bytes: &[u8]) -> Result<DeviceSnapshot> {
+/// A decoded snapshot body: everything but the dataset payloads, which
+/// the store resolves by content address and attaches via [`assemble`].
+///
+/// [`assemble`]: SnapshotBody::assemble
+pub struct SnapshotBody {
+    pub device: String,
+    pub session: SessionSnapshot,
+    pub epochs_done: u64,
+    pub angle: Option<u32>,
+    pub train_hash: u64,
+    pub test_hash: u64,
+}
+
+impl SnapshotBody {
+    /// Attach the resolved dataset blobs, completing the snapshot.
+    pub fn assemble(
+        self,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    ) -> DeviceSnapshot {
+        DeviceSnapshot {
+            device: self.device,
+            session: self.session,
+            train,
+            test,
+            epochs_done: self.epochs_done,
+            angle: self.angle,
+        }
+    }
+}
+
+/// Decode one snapshot body, verifying structure *and* the trailing
+/// checksum.
+pub fn decode_body(bytes: &[u8]) -> Result<SnapshotBody> {
     if bytes.len() < 8 {
         bail!("snapshot truncated: {} bytes is too short to carry a \
                checksum", bytes.len());
@@ -169,8 +299,8 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<DeviceSnapshot> {
         }
         other => bail!("unknown snapshot state tag {other}"),
     };
-    let train = r.dataset("snapshot train set")?;
-    let test = r.dataset("snapshot test set")?;
+    let train_hash = r.u64("snapshot train blob hash")?;
+    let test_hash = r.u64("snapshot test blob hash")?;
     r.finish("the snapshot body")?;
     let want = u64::from_le_bytes([
         tail[0], tail[1], tail[2], tail[3], tail[4], tail[5], tail[6], tail[7],
@@ -180,7 +310,7 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<DeviceSnapshot> {
         bail!("snapshot checksum mismatch (stored {want:#018x}, computed \
                {got:#018x}) — the file is corrupt");
     }
-    Ok(DeviceSnapshot {
+    Ok(SnapshotBody {
         device,
         session: SessionSnapshot {
             model,
@@ -191,24 +321,25 @@ pub fn decode_snapshot(bytes: &[u8]) -> Result<DeviceSnapshot> {
             limit,
             state,
         },
-        train,
-        test,
         epochs_done,
         angle,
+        train_hash,
+        test_hash,
     })
 }
 
 // Decode context helper shared by the stores: name the device so a bad
 // snapshot error says whose state failed.
-pub(super) fn decode_for(device: &str, bytes: &[u8]) -> Result<DeviceSnapshot> {
-    let snap = decode_snapshot(bytes)
+pub(super) fn decode_body_for(device: &str, bytes: &[u8])
+                              -> Result<SnapshotBody> {
+    let body = decode_body(bytes)
         .with_context(|| format!("decoding the snapshot of device {device}"))?;
-    if snap.device != device {
+    if body.device != device {
         bail!(
             "snapshot stored under device {device} names device {} — \
              store layout corrupt",
-            snap.device
+            body.device
         );
     }
-    Ok(snap)
+    Ok(body)
 }

@@ -18,7 +18,7 @@
 //!   server needs to resume the device: its datasets, lifetime epoch
 //!   progress, and data provenance (drift angle) when known.
 //! * [`StateStore`] — where snapshots live.  [`MemStore`] keeps encoded
-//!   blobs in memory (tests, cache-only eviction); [`DiskStore`] keeps a
+//!   bytes in memory (tests, cache-only eviction); [`DiskStore`] keeps a
 //!   directory per device with atomic write-rename updates, so a crashed
 //!   process never leaves a half-written snapshot behind.
 //! * [`codec`] — the versioned binary snapshot format ("PRST"),
@@ -27,6 +27,16 @@
 //! Both stores persist the **encoded bytes**, so every `put`/`get` pair
 //! round-trips the codec — the bit-identity guarantee is exercised on
 //! every eviction, not only on restarts.
+//!
+//! Since snapshot version 2 the datasets live in **content-addressed
+//! blobs** keyed by FNV-1a64 of their encoded bytes, separate from the
+//! per-device body.  Datasets are immutable between `Register`/`Drift`
+//! requests but dominate the snapshot size, so the steady-state
+//! train-eval-evict churn rewrites only the small body; a blob is
+//! encoded and written once per distinct dataset and shared by every
+//! device carrying identical data.  Stores never garbage-collect blobs
+//! (`remove` drops only the body) — content addressing makes leftover
+//! blobs harmless, and GC is an explicitly open item in the roadmap.
 //!
 //! The serving integration lives in [`crate::session::serve`]:
 //! `ServeBuilder::state_dir(..)` / `store(..)` + `resident_cap(N)` turn
@@ -41,6 +51,7 @@ pub mod codec;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -123,27 +134,51 @@ pub trait StateStore: Send + Sync {
 // MemStore
 // ---------------------------------------------------------------------------
 
-/// In-memory [`StateStore`]: encoded snapshot blobs in a map.  State dies
-/// with the process — useful for tests and for LRU eviction without a
-/// disk (bounding resident sessions while keeping evicted state around).
+/// In-memory [`StateStore`]: encoded snapshot bodies in a map plus a
+/// content-addressed blob table.  State dies with the process — useful
+/// for tests and for LRU eviction without a disk (bounding resident
+/// sessions while keeping evicted state around).
 #[derive(Default)]
 pub struct MemStore {
     map: Mutex<HashMap<String, Vec<u8>>>,
+    /// Dataset blobs by content hash.  Never garbage-collected; an
+    /// already-present hash skips re-encoding entirely.
+    blobs: Mutex<HashMap<u64, Vec<u8>>>,
 }
 
 impl MemStore {
     pub fn new() -> Self {
         Self::default()
     }
+
+    fn blob(&self, hash: u64, what: &str) -> Result<Vec<u8>> {
+        self.blobs
+            .lock()
+            .expect("mem store blobs")
+            .get(&hash)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!(
+                "{what}: dataset blob {hash:#018x} is missing from the store"
+            ))
+    }
 }
 
 impl StateStore for MemStore {
     fn put(&self, snap: &DeviceSnapshot) -> Result<()> {
-        let bytes = codec::encode_snapshot(snap);
+        let enc = codec::encode_snapshot(snap);
+        {
+            let mut blobs = self.blobs.lock().expect("mem store blobs");
+            blobs
+                .entry(enc.train_hash)
+                .or_insert_with(|| codec::encode_dataset_blob(&snap.train));
+            blobs
+                .entry(enc.test_hash)
+                .or_insert_with(|| codec::encode_dataset_blob(&snap.test));
+        }
         self.map
             .lock()
             .expect("mem store map")
-            .insert(snap.device.clone(), bytes);
+            .insert(snap.device.clone(), enc.body);
         Ok(())
     }
 
@@ -152,10 +187,23 @@ impl StateStore for MemStore {
             Some(b) => b.clone(),
             None => return Ok(None),
         };
-        codec::decode_for(device, &bytes).map(Some)
+        let body = codec::decode_body_for(device, &bytes)?;
+        let train = codec::decode_dataset_blob(
+            &self.blob(body.train_hash,
+                       &format!("device {device} train set"))?,
+            body.train_hash,
+            &format!("device {device} train set"),
+        )?;
+        let test = codec::decode_dataset_blob(
+            &self.blob(body.test_hash, &format!("device {device} test set"))?,
+            body.test_hash,
+            &format!("device {device} test set"),
+        )?;
+        Ok(Some(body.assemble(train, test)))
     }
 
     fn remove(&self, device: &str) -> Result<()> {
+        // Blobs stay: they are content-addressed and possibly shared.
         self.map.lock().expect("mem store map").remove(device);
         Ok(())
     }
@@ -174,12 +222,23 @@ impl StateStore for MemStore {
 
 const SNAPSHOT_FILE: &str = "snapshot.bin";
 const SNAPSHOT_TMP: &str = "snapshot.bin.tmp";
+/// Content-addressed dataset blobs live here, one flat dir per store
+/// root.  The leading dot can never collide with a device dir —
+/// [`escape_device`] maps `.` to `%2E`.
+const BLOBS_DIR: &str = ".blobs";
+
+/// Uniquifies concurrent same-process blob temp files (two workers
+/// persisting devices that share a dataset race on the same address).
+static BLOB_TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// On-disk [`StateStore`]: one directory per device under a root, each
-/// holding a `snapshot.bin`.  Updates write a temp file and `rename` it
-/// into place, so a crash mid-write leaves either the old snapshot or
-/// the new one — never a torn file (the decode checksum would catch one
-/// anyway, but atomicity means no state is *lost*).
+/// holding a `snapshot.bin` body, plus a shared `.blobs/` directory of
+/// content-addressed dataset blobs (`<fnv1a64 hex>.bin`).  Updates write
+/// a temp file and `rename` it into place, so a crash mid-write leaves
+/// either the old snapshot or the new one — never a torn file (the
+/// decode checksum would catch one anyway, but atomicity means no state
+/// is *lost*).  Blobs become durable before the body that references
+/// them, so a readable body always finds its datasets.
 ///
 /// Device names are escaped into filesystem-safe directory names
 /// (alphanumerics, `_`, `-` kept; every other byte becomes `%XX`), so
@@ -204,6 +263,53 @@ impl DiskStore {
 
     fn device_dir(&self, device: &str) -> Result<PathBuf> {
         Ok(self.root.join(escape_device(device)?))
+    }
+
+    fn blob_path(&self, hash: u64) -> PathBuf {
+        self.root.join(BLOBS_DIR).join(format!("{hash:016x}.bin"))
+    }
+
+    /// Make the blob at `hash` durable, encoding it only if it isn't
+    /// already on disk (the common case after the first put).  Atomic
+    /// via temp + rename; concurrent writers of the same address write
+    /// identical bytes, so whichever rename lands last is still correct.
+    fn write_blob(
+        &self,
+        hash: u64,
+        encode: impl FnOnce() -> Vec<u8>,
+    ) -> Result<()> {
+        let path = self.blob_path(hash);
+        if path.exists() {
+            return Ok(());
+        }
+        let dir = self.root.join(BLOBS_DIR);
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating blob dir {}", dir.display())
+        })?;
+        let seq = BLOB_TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!(
+            "{hash:016x}.{}.{seq}.tmp",
+            std::process::id()
+        ));
+        let bytes = encode();
+        (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })()
+        .with_context(|| {
+            format!("writing dataset blob {}", path.display())
+        })
+    }
+
+    fn read_blob(&self, hash: u64, what: &str) -> Result<Vec<u8>> {
+        let path = self.blob_path(hash);
+        std::fs::read(&path).with_context(|| {
+            format!("{what}: reading dataset blob {}", path.display())
+        })
     }
 }
 
@@ -248,13 +354,19 @@ impl StateStore for DiskStore {
         std::fs::create_dir_all(&dir).with_context(|| {
             format!("creating device state dir {}", dir.display())
         })?;
-        let bytes = codec::encode_snapshot(snap);
+        let enc = codec::encode_snapshot(snap);
+        // Blobs first: a body must never reference a blob that a crash
+        // could have left unwritten.
+        self.write_blob(enc.train_hash,
+                        || codec::encode_dataset_blob(&snap.train))?;
+        self.write_blob(enc.test_hash,
+                        || codec::encode_dataset_blob(&snap.test))?;
         let tmp = dir.join(SNAPSHOT_TMP);
         let path = dir.join(SNAPSHOT_FILE);
         (|| -> std::io::Result<()> {
             use std::io::Write;
             let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(&bytes)?;
+            f.write_all(&enc.body)?;
             // The rename is only atomic-durable if the payload hit disk
             // first.
             f.sync_all()?;
@@ -280,12 +392,26 @@ impl StateStore for DiskStore {
                 });
             }
         };
-        codec::decode_for(device, &bytes)
-            .with_context(|| format!("snapshot file {}", path.display()))
-            .map(Some)
+        let body = codec::decode_body_for(device, &bytes)
+            .with_context(|| format!("snapshot file {}", path.display()))?;
+        let train = codec::decode_dataset_blob(
+            &self.read_blob(body.train_hash,
+                            &format!("device {device} train set"))?,
+            body.train_hash,
+            &format!("device {device} train set"),
+        )?;
+        let test = codec::decode_dataset_blob(
+            &self.read_blob(body.test_hash,
+                            &format!("device {device} test set"))?,
+            body.test_hash,
+            &format!("device {device} test set"),
+        )?;
+        Ok(Some(body.assemble(train, test)))
     }
 
     fn remove(&self, device: &str) -> Result<()> {
+        // Blobs stay: content-addressed and possibly shared with other
+        // devices (see the module docs on garbage collection).
         let dir = self.device_dir(device)?;
         match std::fs::remove_dir_all(&dir) {
             Ok(()) => Ok(()),

@@ -13,10 +13,24 @@
 //! which vectorizes well and is cache-friendly for the small row counts the
 //! models here use; `gemm_tn`/`gemm_nt` choose loop orders that keep the
 //! inner loop contiguous in both operands.
+//!
+//! ## Arithmetic lint wall
+//!
+//! Implicit arithmetic is denied here (`clippy::arithmetic_side_effects`);
+//! the three kernels carry scoped `#[allow]`s because their i32 MAC
+//! accumulation *is* the audited contract — `priot::audit` statically
+//! proves (per layer, per method) that every partial sum stays inside i32,
+//! so plain `+=` is correct and a `wrapping_*`/`checked_*` would either
+//! hide a soundness bug or tax the hottest loop in the repo.
+
+#![deny(clippy::arithmetic_side_effects)]
 
 use super::Mat;
 
 /// `out = a · b` — (m,k)·(k,n) -> (m,n).
+// Lint wall: audited i32 MAC accumulation + slice index arithmetic whose
+// bounds are pinned by the shape asserts above each loop nest.
+#[allow(clippy::arithmetic_side_effects)]
 pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.rows, "gemm_nn inner dim");
     assert_eq!(out.rows, a.rows);
@@ -53,6 +67,8 @@ pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
 }
 
 /// `out = aᵀ · b` — (m,k)ᵀ·(m,n) -> (k,n).
+// Lint wall: audited MAC contract (see `gemm_nn`).
+#[allow(clippy::arithmetic_side_effects)]
 pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.rows, b.rows, "gemm_tn inner dim");
     assert_eq!(out.rows, a.cols);
@@ -89,6 +105,8 @@ pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
 }
 
 /// `out = a · bᵀ` — (m,k)·(n,k)ᵀ -> (m,n).
+// Lint wall: audited MAC contract (see `gemm_nn`).
+#[allow(clippy::arithmetic_side_effects)]
 pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.cols, "gemm_nt inner dim");
     assert_eq!(out.rows, a.rows);
@@ -107,6 +125,8 @@ pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
+// Lint wall: the naive i64 oracles compute freely.
+#[allow(clippy::arithmetic_side_effects)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,249 @@
+//! Audit-subsystem tests (artifact-free — synthetic backbone + generated
+//! data):
+//!
+//! * the soundness property: runtime per-layer accumulator extremes,
+//!   recorded by the engine's [`AccProbe`] across training *and*
+//!   evaluation, stay inside the static interval bounds — for all three
+//!   method families over several drift angles;
+//! * the acceptance criterion: every layer of the shipped tinycnn
+//!   fixture is `proven` for every Table I on-device method config;
+//! * golden rendering: the CLI table and JSON shapes the `priot audit`
+//!   subcommand emits;
+//! * the serve integration: `audit(Reject)` refuses a statically
+//!   unsound registration at the front door, `audit(Warn)` admits it,
+//!   and a sound registration passes under `Reject`.
+//!
+//! [`AccProbe`]: priot::engine::AccProbe
+
+use std::sync::Arc;
+
+use priot::audit::{self, Verdict};
+use priot::config::Selection;
+use priot::datagen::{self, Task};
+use priot::proto::{ErrorKind, MethodSpec, Response};
+use priot::ptest::gen::synthetic_backbone;
+use priot::quant::Scales;
+use priot::serial::Dataset;
+use priot::session::{AuditPolicy, Backbone, FleetServer, Session};
+
+fn dataset(seed: u64, n: usize, angle: u32) -> Arc<Dataset> {
+    Arc::new(datagen::generate(Task::Digits, n, seed, angle as f64))
+}
+
+fn table1_specs() -> Vec<(&'static str, MethodSpec)> {
+    vec![
+        ("static-niti", MethodSpec::niti_static()),
+        ("dynamic-niti", MethodSpec::niti_dynamic()),
+        ("priot", MethodSpec::priot()),
+        ("priot-s-90-random", MethodSpec::priot_s(0.1, Selection::Random)),
+        ("priot-s-90-weight",
+         MethodSpec::priot_s(0.1, Selection::WeightBased)),
+        ("priot-s-80-random", MethodSpec::priot_s(0.2, Selection::Random)),
+        ("priot-s-80-weight",
+         MethodSpec::priot_s(0.2, Selection::WeightBased)),
+    ]
+}
+
+#[test]
+fn runtime_accumulators_stay_within_static_bounds() {
+    // The property the whole module exists for: whatever the training
+    // dynamics do — weight drift (NITI), mask churn (PRIOT/PRIOT-S),
+    // rotated inputs — every forward accumulator the engine actually
+    // materialises lies inside the statically derived per-layer
+    // interval.  The probe records extremes across two training epochs
+    // plus a batched evaluation.
+    let bb = synthetic_backbone(42);
+    let specs = [
+        MethodSpec::niti_static(),
+        MethodSpec::priot(),
+        MethodSpec::priot_s(0.2, Selection::WeightBased),
+    ];
+    for spec in &specs {
+        for angle in [0u32, 30, 60] {
+            let train = dataset(100 + angle as u64, 48, angle);
+            let test = dataset(200 + angle as u64, 24, angle);
+            let mut session = Session::builder()
+                .backbone(Arc::clone(&bb))
+                .method_boxed(spec.plugin())
+                .seed(5)
+                .eval_batch(8)
+                .track_pruning(false)
+                .build()
+                .unwrap();
+            session
+                .engine_mut()
+                .expect("engine backend")
+                .probe_enable();
+            for _ in 0..2 {
+                session.train_epoch(&train).unwrap();
+            }
+            session.evaluate_batch(&test, 8).unwrap();
+            // The audit sees the *final* masks; the probe saw every
+            // intermediate mask state — containment must hold anyway
+            // (every edge interval covers both its kept and its pruned
+            // contribution).
+            let report =
+                audit::audit_backbone(&bb, spec, session.masks()).unwrap();
+            assert!(report.sound(), "{:?} @ {angle}°: {}", spec.method,
+                    report.summary());
+            let probe = session
+                .engine_mut()
+                .unwrap()
+                .probe_take()
+                .expect("probe was enabled");
+            for (li, layer) in report.layers.iter().enumerate() {
+                assert!(probe.observed(li),
+                        "{:?} @ {angle}°: layer {li} never ran", spec.method);
+                assert!(
+                    layer.acc.lo <= probe.min[li] as i64
+                        && (probe.max[li] as i64) <= layer.acc.hi,
+                    "{:?} @ {angle}°: layer {li} observed \
+                     [{}, {}] outside static [{}, {}]",
+                    spec.method, probe.min[li], probe.max[li],
+                    layer.acc.lo, layer.acc.hi
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tinycnn_is_proven_for_every_table1_config() {
+    // The acceptance criterion: `priot audit` over the shipped tinycnn
+    // fixture proves every layer outright (worst-case bound, mask- and
+    // weight-model-independent) for the full Table I roster.
+    let bb = synthetic_backbone(1);
+    for (label, spec) in table1_specs() {
+        let mut plugin = spec.plugin();
+        plugin.init(&bb.spec, &bb.weights, 1).unwrap();
+        let report =
+            audit::audit_backbone(&bb, &spec, plugin.masks()).unwrap();
+        assert!(report.sound(), "{label}: {}", report.summary());
+        for l in &report.layers {
+            assert!(
+                matches!(l.verdict, Verdict::Proven { .. }),
+                "{label}: layer {} ({}) is only {:?}", l.index, l.kind,
+                l.verdict
+            );
+        }
+        assert!(report.issues.is_empty(), "{label}: {:?}", report.issues);
+    }
+}
+
+#[test]
+fn audit_table_and_json_golden_shapes() {
+    // Pin the stable parts of the CLI surfaces (the `priot audit`
+    // outputs): the Markdown table header and verdict vocabulary, and
+    // the JSON schema keys — so downstream parsers don't silently
+    // break.
+    let bb = synthetic_backbone(1);
+    let spec = MethodSpec::priot();
+    let mut plugin = spec.plugin();
+    plugin.init(&bb.spec, &bb.weights, 1).unwrap();
+    let report = audit::audit_backbone(&bb, &spec, plugin.masks()).unwrap();
+
+    let table = report.render_table();
+    assert!(table.starts_with("## tinycnn / "), "{table}");
+    assert!(table.contains("SOUND"), "{table}");
+    assert!(table.contains("| layer | kind | FxK | shift |"), "{table}");
+    assert!(table.contains("proven (+"), "{table}");
+
+    let json = report.to_json();
+    for key in [
+        "\"model\"", "\"method\"", "\"sound\"", "\"issues\"", "\"layers\"",
+        "\"verdict\"", "\"acc_min\"", "\"acc_max\"", "\"worst_case\"",
+        "\"saturates\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert!(json.contains("\"sound\": true"), "{json}");
+}
+
+/// A tinycnn backbone whose layer-0 forward shift is invalid (40 > 31):
+/// structurally loadable, statically unsound.
+fn unsound_backbone() -> Arc<Backbone> {
+    let good = synthetic_backbone(7);
+    let mut scales = Scales::default_for(good.spec.layers.len());
+    scales.layers[0].fwd = 40;
+    Backbone::from_parts(
+        &good.model,
+        good.spec.clone(),
+        (*good.weights).clone(),
+        scales,
+    )
+}
+
+#[test]
+fn unsound_scales_fail_the_audit() {
+    let bb = unsound_backbone();
+    let report =
+        audit::audit_backbone(&bb, &MethodSpec::priot(), None).unwrap();
+    assert!(!report.sound());
+    assert!(
+        report.issues.iter().any(|i| i.contains("shift 40")),
+        "{:?}", report.issues
+    );
+}
+
+#[test]
+fn serve_audit_policy_gates_registration() {
+    let train = dataset(301, 24, 0);
+    let test = dataset(302, 16, 0);
+
+    // Reject: a statically unsound (backbone, method) combination is
+    // refused with a Request error before any state is created.
+    let server = FleetServer::builder(unsound_backbone())
+        .threads(1)
+        .audit(AuditPolicy::Reject)
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-bad", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(
+        matches!(&r, Response::Error { kind: ErrorKind::Request, message, .. }
+                 if message.contains("statically unsound")),
+        "{r:?}"
+    );
+    // The device was never registered, so training it is unknown-device.
+    let r = client.train("dev-bad", 1).unwrap();
+    assert!(r.is_error(), "{r:?}");
+    drop(client);
+    // The rejected register counts as a (handled) request error.
+    let report = server.join().unwrap();
+    assert!(report.errors() >= 1);
+
+    // Warn: the same combination is admitted (logged to stderr).
+    let server = FleetServer::builder(unsound_backbone())
+        .threads(1)
+        .audit(AuditPolicy::Warn)
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-warned", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert_eq!(r, Response::Registered {
+        device: "dev-warned".into(),
+        resumed: false,
+    });
+    drop(client);
+    server.join().unwrap();
+
+    // Reject over a sound backbone admits everything.
+    let server = FleetServer::builder(synthetic_backbone(7))
+        .threads(1)
+        .audit(AuditPolicy::Reject)
+        .build();
+    let mut client = server.local_client();
+    for (i, (_, spec)) in table1_specs().into_iter().enumerate() {
+        let r = client
+            .register(&format!("dev-{i}"), 1, spec, Arc::clone(&train),
+                      Arc::clone(&test))
+            .unwrap();
+        assert!(!r.is_error(), "{r:?}");
+    }
+    drop(client);
+    server.join().unwrap();
+}

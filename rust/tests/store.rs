@@ -5,10 +5,11 @@
 //!   PRIOT dense scores, PRIOT-S sparse scores + masks): continued
 //!   training, prediction, and evaluation trajectories are byte-equal
 //!   to a session that never left memory;
-//! * snapshot codec: encode→decode round-trip, truncation at every byte
-//!   offset, a flip of every byte (checksum), and trailing bytes are
-//!   contextful errors, never panics (the proto truncation-test
-//!   pattern);
+//! * snapshot codec (v2: body + content-addressed dataset blobs):
+//!   encode→decode round-trip, truncation at every byte offset, a flip
+//!   of every body *and* blob byte (checksum / content hash), and
+//!   trailing bytes are contextful errors, never panics (the proto
+//!   truncation-test pattern);
 //! * `MemStore`/`DiskStore` semantics: put/get/remove/devices, atomic
 //!   write (no temp file survives), hostile device names stay inside
 //!   the root, corrupt files are loud errors;
@@ -191,30 +192,68 @@ fn small_snapshot() -> DeviceSnapshot {
     }
 }
 
+/// Full v2 decode from encoded parts: body + both blobs, reassembled.
+fn decode_full(snap: &DeviceSnapshot) -> DeviceSnapshot {
+    let enc = codec::encode_snapshot(snap);
+    let body = codec::decode_body(&enc.body).unwrap();
+    assert_eq!(body.train_hash, enc.train_hash, "body pins the train blob");
+    assert_eq!(body.test_hash, enc.test_hash, "body pins the test blob");
+    let train = codec::decode_dataset_blob(
+        &codec::encode_dataset_blob(&snap.train),
+        enc.train_hash,
+        "train blob",
+    )
+    .unwrap();
+    let test = codec::decode_dataset_blob(
+        &codec::encode_dataset_blob(&snap.test),
+        enc.test_hash,
+        "test blob",
+    )
+    .unwrap();
+    body.assemble(train, test)
+}
+
 #[test]
 fn snapshot_codec_roundtrip_exact() {
     let snap = small_snapshot();
-    let bytes = codec::encode_snapshot(&snap);
-    let back = codec::decode_snapshot(&bytes).unwrap();
-    assert_eq!(back, snap, "snapshot must round-trip bit-exactly");
+    assert_eq!(decode_full(&snap), snap,
+               "snapshot must round-trip bit-exactly");
 
     // The weight-state flavor too.
     let mut snap = small_snapshot();
     snap.session.method = MethodSpec::niti_static();
     snap.session.state =
         PluginState::Weights(vec![vec![300, -300, 0], vec![i32::MAX]]);
-    let back = codec::decode_snapshot(&codec::encode_snapshot(&snap)).unwrap();
-    assert_eq!(back, snap, "weights must round-trip exactly (no int8 narrow)");
+    assert_eq!(decode_full(&snap), snap,
+               "weights must round-trip exactly (no int8 narrow)");
+}
+
+#[test]
+fn dataset_blob_hash_is_the_content_address() {
+    // The incremental hash the body pins must equal FNV-1a64 of the
+    // encoded blob bytes — that equation is what lets a reader verify a
+    // blob without any side channel.
+    let snap = small_snapshot();
+    for ds in [&snap.train, &snap.test] {
+        assert_eq!(
+            codec::dataset_content_hash(ds),
+            priot::datagen::fnv1a64(&codec::encode_dataset_blob(ds)),
+        );
+    }
+    // Different datasets, different addresses (ds(9) vs ds(11)).
+    assert_ne!(codec::dataset_content_hash(&snap.train),
+               codec::dataset_content_hash(&snap.test));
 }
 
 #[test]
 fn truncated_snapshots_error_at_every_offset() {
-    let bytes = codec::encode_snapshot(&small_snapshot());
-    assert!(codec::decode_snapshot(&bytes).is_ok());
-    for cut in 0..bytes.len() {
-        let err = match codec::decode_snapshot(&bytes[..cut]) {
+    let enc = codec::encode_snapshot(&small_snapshot());
+    assert!(codec::decode_body(&enc.body).is_ok());
+    for cut in 0..enc.body.len() {
+        let err = match codec::decode_body(&enc.body[..cut]) {
             Ok(decoded) => panic!(
-                "truncation at {cut} decoded successfully: {decoded:?}"
+                "truncation at {cut} decoded successfully: {:?}",
+                decoded.device
             ),
             Err(e) => e,
         };
@@ -232,22 +271,36 @@ fn truncated_snapshots_error_at_every_offset() {
 
 #[test]
 fn corrupt_snapshot_bytes_are_always_rejected() {
-    // Flip every single byte: either the structural parse fails with a
-    // contextful error, or the FNV-1a trailer catches a frame that
-    // still parses — silent state corruption is impossible.
-    let bytes = codec::encode_snapshot(&small_snapshot());
-    for i in 0..bytes.len() {
-        let mut bad = bytes.clone();
+    // Flip every single byte of the body: either the structural parse
+    // fails with a contextful error, or the FNV-1a trailer catches a
+    // frame that still parses — silent state corruption is impossible.
+    let snap = small_snapshot();
+    let enc = codec::encode_snapshot(&snap);
+    for i in 0..enc.body.len() {
+        let mut bad = enc.body.clone();
         bad[i] ^= 0x40;
         assert!(
-            codec::decode_snapshot(&bad).is_err(),
-            "flipping byte {i} was not detected"
+            codec::decode_body(&bad).is_err(),
+            "flipping body byte {i} was not detected"
         );
     }
     // Trailing bytes are rejected too.
-    let mut bad = bytes.clone();
+    let mut bad = enc.body.clone();
     bad.push(0xAB);
-    assert!(codec::decode_snapshot(&bad).is_err(), "trailing byte accepted");
+    assert!(codec::decode_body(&bad).is_err(), "trailing byte accepted");
+
+    // And every byte of a dataset blob is covered by its content
+    // address.
+    let blob = codec::encode_dataset_blob(&snap.train);
+    assert!(codec::decode_dataset_blob(&blob, enc.train_hash, "blob").is_ok());
+    for i in 0..blob.len() {
+        let mut bad = blob.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            codec::decode_dataset_blob(&bad, enc.train_hash, "blob").is_err(),
+            "flipping blob byte {i} was not detected"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -356,6 +409,60 @@ fn disk_store_corrupt_file_is_a_contextful_error() {
     let err = store.get("dev-x").unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("dev-x"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn blob_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    walk(&dir.join(".blobs"))
+        .into_iter()
+        .filter(|p| p.to_string_lossy().ends_with(".bin"))
+        .collect()
+}
+
+#[test]
+fn disk_store_blobs_are_shared_and_survive_remove() {
+    let dir = tmp_dir("blobs");
+    let store = DiskStore::open(&dir).unwrap();
+    // Two devices carrying identical datasets share both blobs: one
+    // train + one test file, not four.
+    let snap = small_snapshot();
+    let mut second = small_snapshot();
+    second.device = "dev-2".into();
+    store.put(&snap).unwrap();
+    store.put(&second).unwrap();
+    assert_eq!(blob_files(&dir).len(), 2, "{:?}", blob_files(&dir));
+
+    // Steady-state churn (train → persist with unchanged datasets)
+    // rewrites only the body — no new blobs appear.
+    let mut newer = small_snapshot();
+    newer.epochs_done = 7;
+    newer.session.step = 4321;
+    store.put(&newer).unwrap();
+    assert_eq!(blob_files(&dir).len(), 2);
+
+    // Removing one device keeps the shared blobs readable for the other
+    // (blobs are content-addressed and never garbage-collected).
+    store.remove("dev-x").unwrap();
+    assert_eq!(blob_files(&dir).len(), 2);
+    assert_eq!(store.get("dev-2").unwrap().unwrap(), second);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_store_corrupt_blob_is_a_loud_error() {
+    let dir = tmp_dir("corrupt_blob");
+    let store = DiskStore::open(&dir).unwrap();
+    store.put(&small_snapshot()).unwrap();
+    // Flip one byte in one blob: the get() resolving it must fail with
+    // a content-hash error naming the device, never hand back altered
+    // training data.
+    let blob = blob_files(&dir).into_iter().next().expect("blobs exist");
+    let mut bytes = std::fs::read(&blob).unwrap();
+    bytes[0] ^= 0x40;
+    std::fs::write(&blob, &bytes).unwrap();
+    let err = store.get("dev-x").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dev-x") && msg.contains("hash mismatch"), "{msg}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
