@@ -34,7 +34,7 @@ fn main() -> Result<()> {
     let spec = NetSpec::tinycnn();
     let params = MethodParams::new(Method::Priot);
     let mem = pico::memory_footprint(&spec, params);
-    let scales = priot::quant::Scales::load(
+    let scales = priot::quant::load_scales(
         std::path::Path::new(&artifacts).join("tinycnn.scales.txt").as_path(),
     )?;
     let cost = pico::step_cost(&spec, &scales, params);

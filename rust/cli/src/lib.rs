@@ -1,0 +1,185 @@
+//! # PRIOT — pruning-based integer-only transfer learning
+//!
+//! A three-layer reproduction of *PRIOT: Pruning-Based Integer-Only Transfer
+//! Learning for Embedded Systems* (IEEE ESL 2025):
+//!
+//! * **Layer 1/2** (build-time Python): Pallas integer-GEMM kernels composed
+//!   into JAX training-step graphs, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3** (this workspace): the on-device-learning stack — the pure
+//!   Rust integer training engine ("picoengine"), the Raspberry Pi Pico
+//!   cost/memory simulator, and the experiment harness that regenerates
+//!   every table and figure in the paper.
+//!
+//! ## Workspace architecture
+//!
+//! The Rust stack is a cargo workspace of three crates with one-way
+//! dependencies, plus the offline `xla-stub`:
+//!
+//! ```text
+//!   priot (this crate: CLI binary, facade, tests/benches/examples)
+//!     └── priot-host   std layer: datasets, sessions/fleets, wire
+//!     │                protocol, serving, durable stores, audit, reports
+//!     └── priot-core   #![no_std] + alloc: tensors, integer GEMMs,
+//!                      quantization, the engine, method plugins, PRNGs,
+//!                      specs — the code a Pico port would carry
+//! ```
+//!
+//! The layering contract: **method plugins depend only on the core**
+//! (numerics, no IO), **transports/stores/threads live in the host**.
+//! `priot-core` compiles freestanding (`cargo check -p priot-core
+//! --no-default-features` is a blocking CI gate; a `thumbv6m-none-eabi`
+//! build for the Pico's Cortex-M0+ is the recorded next step), and its
+//! message-only error type implements `core::error::Error`, so host code
+//! composes core results with `anyhow` via plain `?`.  This crate
+//! re-exports the host module tree one-to-one, so `priot::engine::…`,
+//! `priot::session::…` etc. keep working unchanged.
+//!
+//! ## The Session/Fleet API
+//!
+//! All training runs are constructed through [`session`]:
+//!
+//! ```no_run
+//! use priot::session::Session;
+//! use priot::methods::PriotS;
+//! use priot::config::Selection;
+//!
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .model("tinycnn")
+//!     .method(PriotS::new(0.1, Selection::WeightBased))
+//!     .seed(7)
+//!     .epochs(10)
+//!     .build()?;
+//! // session.train(&train, &test) / .predict(..) / .save(..) / .restore(..)
+//! # anyhow::Ok(())
+//! ```
+//!
+//! * [`session::Backbone`] — the deployed read-only model, loaded once and
+//!   shared across sessions via `Arc` (no per-session weight copies).
+//! * [`session::Session`] — one adapting device: a training method bound
+//!   to an execution backend.  Dataset-facing entry points validate
+//!   geometry up front and return clean errors; evaluation can run
+//!   batched ([`session::Session::evaluate_batch`]) — bit-identical to
+//!   per-sample, faster.
+//! * [`session::Fleet`] — many concurrent sessions over one backbone,
+//!   scheduled at **epoch granularity** across the worker pool: the
+//!   Table I seed sweep, the `priot fleet` multi-device simulation, and
+//!   the `fleet` throughput bench all build on it.
+//! * [`serve`] (= [`session::serve`]) — the long-lived fleet service: a
+//!   registry of per-device sessions behind the [`proto`] wire boundary.
+//!   Requests are scheduled per device by [`proto::Priority`]
+//!   (predict > evaluate > train, preemptible at epoch boundaries) under
+//!   a bounded per-device inflight window.  Driven by the `priot serve`
+//!   CLI (in-process trace replay or `--listen` TCP) and `priot client`
+//!   (trace replay against a remote server); benchmarked by the `serve`
+//!   bench (requests/sec over both transports + batched-eval speedup +
+//!   LRU churn under eviction pressure).
+//!
+//! ## Durable per-device state
+//!
+//! [`store`] is the persistence layer under the serving stack: PRIOT's
+//! integer state (scores, masks, static scales) snapshots **bit-exactly**
+//! ([`session::Session::snapshot`] / [`session::Session::rehydrate`] —
+//! a rehydrated session's trajectories are byte-identical), so a
+//! [`store::StateStore`] ([`store::MemStore`] in memory,
+//! [`store::DiskStore`] dir-per-device with atomic write-rename) makes
+//! fleets durable: `ServeBuilder::state_dir(..)` writes every device's
+//! snapshot through on each completed state-mutating request, a
+//! restarted `priot serve --state-dir ...` resumes every device where
+//! it left off (re-sent registers resume instead of erroring), and
+//! `resident_cap(N)` turns the registry into an LRU of live sessions
+//! over the store — idle devices evict, any request rehydrates them
+//! losslessly.  Dataset payloads are deduplicated into content-addressed
+//! blobs; orphaned blobs are mark-sweep collected at startup and
+//! shutdown ([`store::StateStore::gc_blobs`]).
+//!
+//! ## The wire protocol
+//!
+//! [`proto`] is the versioned host↔fleet protocol: plain-data
+//! [`proto::Request`]/[`proto::Response`] messages, a length-delimited
+//! binary codec with `serial`-style checked-length decoding, a
+//! [`proto::Transport`] trait ([`proto::ChannelTransport`] in-process,
+//! [`proto::TcpTransport`] over sockets — same bytes, bit-identical
+//! responses), and the typed [`proto::FleetClient`]
+//! (`register`/`train`/`predict`/`evaluate`/`drift`, sync + pipelined) —
+//! the only public way to talk to a
+//! [`session::FleetServer`]:
+//!
+//! ```no_run
+//! use priot::proto::{FleetClient, MethodSpec};
+//! use priot::session::{Backbone, FleetServer};
+//!
+//! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
+//! let mut server = FleetServer::builder(backbone).build();
+//! let addr = server.listen("127.0.0.1:0")?;
+//! let mut client = FleetClient::connect(addr)?;
+//! # let (train, test): (std::sync::Arc<priot::serial::Dataset>,
+//! #                     std::sync::Arc<priot::serial::Dataset>) = todo!();
+//! client.register("dev-00", 1, MethodSpec::priot(), train, test)?;
+//! client.train("dev-00", 2)?;
+//! client.evaluate("dev-00")?;
+//! drop(client);
+//! println!("{}", server.join()?.summary());
+//! # anyhow::Ok(())
+//! ```
+//!
+//! ## Static soundness audit
+//!
+//! [`audit`] is the ahead-of-time counterpart of the Fig. 2 runtime
+//! overflow counters: an interval-analysis pass that propagates worst-case
+//! and weight-exact accumulator bounds through every conv/FC GEMM, requant
+//! shift, ReLU, and pooling stage of the quantized network — method-aware
+//! (prune masks tighten the bound, NITI weight drift widens it) — and
+//! proves per layer that i32 accumulation cannot overflow, or reports the
+//! exact missing headroom ([`audit::Verdict`]).  Surfaced as the
+//! `priot audit` CLI (table + JSON, nonzero exit on unsound configs — the
+//! CI gate), as a Register-time policy
+//! (`ServeBuilder::audit(AuditPolicy::Reject)` refuses statically unsound
+//! method specs, e.g. a corrupt scale table), and as an arithmetic lint
+//! wall over the `engine`/`tensor::gemm`/`quant` hot paths.  The runtime
+//! cross-check is [`engine::AccProbe`]: observed per-layer accumulator
+//! extremes, asserted within the static bounds by `rust/cli/tests/audit.rs`.
+//!
+//! ## Data is generated in-process
+//!
+//! [`datagen`] is the native port of the Python procedural generators
+//! (RotDigits / RotPatterns): any `(task, n, seed, angle)` tuple is
+//! synthesized **byte-identically** to `python/compile/dataset.py`
+//! (pinned by checked-in golden hashes — `rust/cli/tests/datagen.rs`).
+//! [`data::DataSource`] resolves experiment configs and symbolic trace
+//! angles through it: artifact files when present, generation otherwise.
+//! That makes the whole Rust path hermetic — the full test suite, serve
+//! drift traces at arbitrary angles (`drift dev0 60`), and the benches
+//! all run from a bare checkout with no `make artifacts`.
+//!
+//! ## Methods are plugins
+//!
+//! Training methods implement [`methods::MethodPlugin`]
+//! (init/step/predict/checkpoint hooks).  Built-ins: [`methods::Niti`],
+//! [`methods::Priot`], [`methods::PriotS`].  Adding a method touches
+//! neither the engine nor the coordinator — plugins live in `priot-core`
+//! and depend only on the core.
+//!
+//! ## Backends
+//!
+//! Two interchangeable executors drive a plugin: the pure-Rust [`engine`]
+//! and (behind the `pjrt` cargo feature) PJRT execution of the AOT
+//! artifacts (`runtime`).  Integration tests assert they agree
+//! **bit-for-bit** — the entire stack is deterministic integer arithmetic.
+//!
+//! Entry points: the `priot` binary (`rust/cli/src/main.rs`), the examples
+//! in `examples/`, and the benches in `rust/cli/benches/` (one per paper
+//! table/figure, plus `fleet` for session throughput).
+
+pub mod cli;
+
+pub use priot_host::{
+    audit, config, coordinator, data, datagen, engine, methods, metrics,
+    pico, prng, proto, ptest, quant, report, serial, session, spec, store,
+    tensor,
+};
+#[cfg(feature = "pjrt")]
+pub use priot_host::runtime;
+
+pub use priot_host::serve;
+pub use priot_host::INT8_MAX;

@@ -1,0 +1,691 @@
+//! `priot` — the on-device-learning CLI.
+//!
+//! ```text
+//! priot train   --method priot --angle 30 --epochs 30 [--backend pjrt]
+//! priot eval    --model tinycnn --dataset digits --angle 30
+//! priot compare [--epochs 8] [--limit 384]        all methods, one seed
+//! priot fleet   [--devices 8] [--angles 0,30,60]  multi-device simulation
+//! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
+//!               [--state-dir DIR] [--resident-cap N]   durable + LRU-bounded
+//!               [--audit off|warn|reject]         register-time soundness gate
+//! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
+//! priot audit   [--method M] [--json]             static overflow-soundness proof
+//! priot bench   [--suite kernel|serve|all]        perf snapshot + baseline diff
+//! priot table1  [--full]                          Table I
+//! priot table2  [--iters 100]                     Table II
+//! priot fig2    [--epochs 12]                     Fig. 2 CSV
+//! priot fig3    [--full]                          Fig. 3 CSV
+//! priot ablation                                  design-choice sweeps
+//! priot pico-report [--model tinycnn]             memory/cycle breakdown
+//! priot selftest                                  engine ⇄ PJRT parity
+//! ```
+//!
+//! Common flags: `--artifacts DIR` (default `artifacts`), `--config FILE`,
+//! any `ExperimentConfig` key as `--key value`.  Every run is constructed
+//! through the [`priot::session`] builder API.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use priot::cli::Args;
+use priot::config::{Config, ExperimentConfig, Method, Selection};
+use priot::data;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::pico;
+use priot::quant::Scales;
+use priot::report::experiments::{self, Scale};
+use priot::report::sparkline;
+use priot::serial::Dataset;
+use priot::session::{Backbone, Fleet, Session};
+use priot::spec::NetSpec;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn scale_from(args: &Args) -> Result<Scale> {
+    let mut s = if args.has_flag("full") { Scale::full() } else { Scale::quick() };
+    if let Some(e) = args.option("epochs") {
+        s.epochs = e.parse()?;
+    }
+    if let Some(l) = args.option("limit") {
+        s.limit = l.parse()?;
+    }
+    if let Some(n) = args.option("seeds") {
+        s.seeds = n.parse()?;
+    }
+    if args.has_flag("with-vgg") {
+        s.include_vgg = true;
+    }
+    if args.has_flag("no-vgg") {
+        s.include_vgg = false;
+    }
+    Ok(s)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.option("artifacts").unwrap_or("artifacts"))
+}
+
+fn write_or_print(args: &Args, default_name: &str, content: &str) -> Result<()> {
+    match args.option("out") {
+        Some(path) => {
+            std::fs::write(path, content)?;
+            eprintln!("wrote {path}");
+        }
+        None => {
+            let dir = Path::new("results");
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(default_name);
+            std::fs::write(&path, content)?;
+            println!("{content}");
+            eprintln!("(also wrote {})", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "compare" => cmd_compare(&args),
+        "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "audit" => cmd_audit(&args),
+        "bench" => cmd_bench(&args),
+        "table1" => {
+            let md = experiments::table1(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "table1.md", &md)
+        }
+        "table2" => {
+            let iters = args.option("iters").unwrap_or("100").parse()?;
+            let model = args.option("model").unwrap_or("tinycnn");
+            let md = experiments::table2(&artifacts_dir(&args), model, iters)?;
+            write_or_print(&args, "table2.md", &md)
+        }
+        "fig2" => {
+            let epochs = args.option("epochs").unwrap_or("12").parse()?;
+            let limit = args.option("limit").unwrap_or("512").parse()?;
+            let csv = experiments::fig2(&artifacts_dir(&args), epochs, limit)?;
+            write_or_print(&args, "fig2.csv", &csv)
+        }
+        "fig3" => {
+            let (csv, _) = experiments::fig3(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "fig3.csv", &csv)
+        }
+        "ablation" => {
+            let csv = experiments::ablation(&artifacts_dir(&args), scale_from(&args)?)?;
+            write_or_print(&args, "ablation.csv", &csv)
+        }
+        "pico-report" => cmd_pico_report(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "selftest" => {
+            let report = experiments::selftest(&artifacts_dir(&args))?;
+            println!("{report}");
+            Ok(())
+        }
+        "" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (run `priot` for help)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let spec = NetSpec::by_name(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
+    data::validate(&pair.train, &spec)?;
+    let mut session = Session::from_experiment(&cfg)?;
+    session.options_mut().verbose = true;
+    if let Some(resume) = args.option("resume") {
+        session.restore(Path::new(resume))?;
+        eprintln!("resumed training state from {resume}");
+    }
+    let metrics = session.train(&pair.train, &pair.test)?;
+    if let Some(save) = args.option("checkpoint") {
+        session.save(Path::new(save))?;
+        eprintln!("saved training state to {save}");
+    }
+    println!("method:   {} ({} @ {}°)", cfg.method.name(), cfg.dataset, cfg.angle);
+    println!("backend:  {}", session.name());
+    println!("history:  {}", sparkline(&metrics.accuracy));
+    println!(
+        "accuracy: before {:.2}%  best {:.2}%  final {:.2}%",
+        metrics.accuracy[0] * 100.0,
+        metrics.best_accuracy() * 100.0,
+        metrics.final_accuracy() * 100.0
+    );
+    if !metrics.pruned_frac.is_empty() {
+        let last = metrics.pruned_frac.last().unwrap();
+        let fr: Vec<String> = last.iter().map(|f| format!("{:.1}%", f * 100.0)).collect();
+        println!("pruned:   [{}]", fr.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let mut session = Session::from_experiment(&cfg)?;
+    let acc = session.evaluate(&pair.test)?;
+    println!(
+        "{} on {}_test_a{}: top-1 {:.2}% (n={})",
+        cfg.model,
+        cfg.dataset,
+        cfg.angle,
+        acc * 100.0,
+        if cfg.limit == 0 { pair.test.n } else { pair.test.n.min(cfg.limit) }
+    );
+    Ok(())
+}
+
+/// The method roster used by `compare` and `fleet`.
+fn method_roster() -> Vec<(&'static str, Box<dyn MethodPlugin>)> {
+    vec![
+        ("Static-Scale NITI",
+         Box::new(Niti::static_scale()) as Box<dyn MethodPlugin>),
+        ("Dynamic-Scale NITI", Box::new(Niti::dynamic())),
+        ("PRIOT", Box::new(Priot::new())),
+        ("PRIOT-S (p=90%, weight)",
+         Box::new(PriotS::new(0.1, Selection::WeightBased))),
+        ("PRIOT-S (p=80%, weight)",
+         Box::new(PriotS::new(0.2, Selection::WeightBased))),
+    ]
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let artifacts = artifacts_dir(args);
+    let mut c = Config::default();
+    c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
+    let cfg = ExperimentConfig::from_config(&c)?;
+    let pair = data::load_pair(&cfg)?;
+    // One fleet, one shared backbone, one device per method.
+    let backbone = Backbone::load(&artifacts, &cfg.model)?;
+    let mut fleet = Fleet::builder(backbone)
+        .epochs(scale.epochs)
+        .limit(scale.limit)
+        .track_pruning(true);
+    for (label, plugin) in method_roster() {
+        fleet = fleet.device(label, cfg.seed, plugin, &pair.train, &pair.test);
+    }
+    let report = fleet.run()?;
+    println!("| Method | Best top-1 | Final | History |");
+    println!("|---|---|---|---|");
+    for d in &report.devices {
+        println!(
+            "| {} | {:.2}% | {:.2}% | {} |",
+            d.name,
+            d.metrics.best_accuracy() * 100.0,
+            d.metrics.final_accuracy() * 100.0,
+            sparkline(&d.metrics.accuracy)
+        );
+    }
+    eprintln!(
+        "({} sessions in {:.1}s on {} threads — {:.2} sessions/s)",
+        report.devices.len(),
+        report.wall_secs,
+        report.threads,
+        report.sessions_per_sec()
+    );
+    Ok(())
+}
+
+/// Multi-device simulation: N devices adapting concurrently to their own
+/// local distributions (`--angles 30,45,60,...` — any rotation; data is
+/// resolved per angle through the config's [`data::DataSource`], so a
+/// bare checkout generates it in-process), sharing one backbone.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let devices: usize = args.option("devices").unwrap_or("8").parse()?;
+    let epochs: usize = args.option("epochs").unwrap_or("4").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("384").parse()?;
+    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+    let angles: Vec<u32> = args
+        .option("angles")
+        .unwrap_or("30,45")
+        .split(',')
+        .map(|a| a.trim().parse().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    if angles.is_empty() {
+        bail!("--angles needs at least one angle");
+    }
+
+    // One config resolves all paths: backbone and data share a root.
+    let base = ExperimentConfig::from_config(&args.to_config()?)?;
+    let backbone =
+        Backbone::load_or_synthetic(&base.artifacts_dir, &base.model, 1)?;
+    println!(
+        "fleet: {} devices × {} epochs × {} images, model {} (backbone \
+         shared via Arc; drift angles {:?})",
+        devices, epochs, limit, base.model, angles
+    );
+    let mut fleet = Fleet::builder(Arc::clone(&backbone))
+        .epochs(epochs)
+        .limit(limit)
+        .threads(threads)
+        .source(data::source_for(&base))
+        .dataset(&base.dataset);
+    for i in 0..devices {
+        // Each device gets its own method mix, seed, and local drift.
+        let plugin: Box<dyn MethodPlugin> = match i % 3 {
+            0 => Box::new(Priot::new()),
+            1 => Box::new(PriotS::new(0.1, Selection::WeightBased)),
+            _ => Box::new(PriotS::new(0.2, Selection::Random)),
+        };
+        let angle = angles[i % angles.len()];
+        fleet = fleet.device_at(
+            format!("dev-{i:02} ({angle}°)"),
+            (i + 1) as u32,
+            plugin,
+            angle,
+        )?;
+    }
+    let report = fleet.run()?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+/// Angle-keyed dataset loader for trace replay: traces reference data
+/// symbolically (`angle=60`), the CLI resolves each angle through a
+/// [`data::DataSource`] once and caches the `Arc`s.  With the default
+/// `auto` source an angle with no artifact on disk is generated
+/// in-process — `drift dev0 60` works from a bare checkout.
+fn trace_pair_loader(
+    source: data::DataSource,
+    dataset: String,
+) -> impl FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)> {
+    let mut pairs: HashMap<u32, (Arc<Dataset>, Arc<Dataset>)> = HashMap::new();
+    move |angle: u32| {
+        if let Some(p) = pairs.get(&angle) {
+            return Ok(p.clone());
+        }
+        let pair = source.pair(&dataset, angle)?;
+        let entry = (Arc::new(pair.train), Arc::new(pair.test));
+        pairs.insert(angle, entry.clone());
+        Ok(entry)
+    }
+}
+
+fn trace_text(args: &Args) -> Result<String> {
+    Ok(match args.option("trace") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            eprintln!("(no --trace FILE given — running the built-in demo \
+                       trace)");
+            priot::serve::DEMO_TRACE.to_string()
+        }
+    })
+}
+
+/// The long-lived fleet service.  Two modes:
+///
+/// * `priot serve --listen ADDR` — accept `FleetClient` connections over
+///   TCP and serve until interrupted (`priot client` replays traces
+///   against it).
+/// * `priot serve [--trace FILE]` — replay a scripted request trace over
+///   an in-process client (the built-in demo trace by default).
+///
+/// Durability: `--state-dir DIR` persists every device's state (a
+/// restarted server resumes each device where it left off; re-sent
+/// registers resume instead of erroring), and `--resident-cap N` bounds
+/// live sessions — idle devices beyond N are evicted to the store and
+/// rehydrated bit-identically on their next request.
+///
+/// Soundness: `--audit warn|reject` runs the static overflow audit
+/// (see `priot audit`) against every fresh registration's method config;
+/// `reject` refuses statically unsound configurations at the front door.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use priot::session::serve;
+
+    let threads: usize = args.option("threads").unwrap_or("0").parse()?;
+    let limit: usize = args.option("limit").unwrap_or("256").parse()?;
+    let eval_batch: usize = args.option("eval-batch").unwrap_or("8").parse()?;
+    let window: usize = args.option("window").unwrap_or("64").parse()?;
+    let resident_cap: usize =
+        args.option("resident-cap").unwrap_or("0").parse()?;
+    let audit_policy = match args.option("audit").unwrap_or("off") {
+        "off" => priot::session::AuditPolicy::Off,
+        "warn" => priot::session::AuditPolicy::Warn,
+        "reject" => priot::session::AuditPolicy::Reject,
+        other => bail!("unknown --audit policy '{other}' (want off|warn|reject)"),
+    };
+    // One config resolves everything path-shaped (`--artifacts`, a
+    // `--config` file, `--model`, `--dataset`, `--source`...), so the
+    // backbone and the datasets can never come from different roots.
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+
+    let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
+    let mut builder = priot::session::FleetServer::builder(backbone)
+        .threads(threads)
+        .limit(limit)
+        .eval_batch(eval_batch)
+        .window(window)
+        .resident_cap(resident_cap)
+        .audit(audit_policy)
+        // A listener runs until interrupted and never join()s, so don't
+        // accumulate a server-side copy of every response.
+        .record(args.option("listen").is_none());
+    if let Some(dir) = args.option("state-dir") {
+        builder = builder.state_dir(dir)?;
+        eprintln!("(durable fleet: device state under {dir})");
+    }
+    let mut server = builder.build();
+
+    if let Some(addr) = args.option("listen") {
+        if args.option("trace").is_some() {
+            bail!("--listen and --trace are mutually exclusive: a \
+                   listener serves remote clients (replay the trace with \
+                   `priot client --addr ... --trace ...` instead)");
+        }
+        let bound = server.listen(addr)?;
+        eprintln!(
+            "serving {} fleet on {bound} — replay a trace with \
+             `priot client --addr {bound}` (ctrl-c to stop)",
+            cfg.model
+        );
+        loop {
+            std::thread::park();
+        }
+    }
+
+    let cmds = serve::parse_trace(&trace_text(args)?)?;
+    let mut pair_for =
+        trace_pair_loader(data::source_for(&cfg), cfg.dataset.clone());
+    let mut client = server.local_client();
+    let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
+    drop(client); // close the connection so join() can drain
+    let report = server.join()?;
+    for r in &responses {
+        println!("{r:?}");
+    }
+    println!("\n{}", report.summary());
+    if report.errors() > 0 {
+        anyhow::bail!("{} of {} requests errored", report.errors(),
+                      report.requests);
+    }
+    Ok(())
+}
+
+/// Replay a scripted request trace against a *remote* fleet server over
+/// TCP: `priot client --addr HOST:PORT [--trace FILE]`.  Datasets are
+/// resolved client-side through the config's [`data::DataSource`]
+/// (artifact files or in-process generation — any drift angle works
+/// without `make artifacts`) and travel over the wire with the
+/// `Register`/`Drift` requests.
+fn cmd_client(args: &Args) -> Result<()> {
+    use priot::proto::FleetClient;
+    use priot::session::serve;
+
+    let addr = args.option("addr").ok_or_else(|| {
+        anyhow::anyhow!("client needs --addr HOST:PORT (see `priot serve \
+                         --listen`)")
+    })?;
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let cmds = serve::parse_trace(&trace_text(args)?)?;
+    let mut pair_for =
+        trace_pair_loader(data::source_for(&cfg), cfg.dataset.clone());
+    let mut client = FleetClient::connect(addr)?;
+    let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
+    let errors = responses.iter().filter(|r| r.is_error()).count();
+    for r in &responses {
+        println!("{r:?}");
+    }
+    println!("\n{} responses from {addr}, {errors} errors",
+             responses.len());
+    if errors > 0 {
+        anyhow::bail!("{errors} of {} requests errored", responses.len());
+    }
+    Ok(())
+}
+
+/// Static overflow-soundness audit (`priot audit`).
+///
+/// Propagates worst-case and weight-exact interval bounds through every
+/// layer of the frozen backbone for each Table I on-device method config
+/// (or a single `--method M [--frac F] [--selection S] [--theta T]`),
+/// printing a per-layer verdict table — `proven` / `headroom(b)` /
+/// `OVERFLOWABLE` — plus requant-saturation analysis.  Exits non-zero if
+/// any audited config is statically unsound, so CI can gate on it.
+///
+/// PRIOT/PRIOT-S configs are audited against the *exact* prune masks the
+/// method would materialise for `--seed` (tighter than the any-mask
+/// family); NITI configs are audited under the full weight-drift
+/// envelope since training mutates weights in place.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use priot::proto::MethodSpec;
+
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let seed: u32 = args.option("seed").unwrap_or("1").parse()?;
+    let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
+
+    let specs: Vec<(String, MethodSpec)> = match args.option("method") {
+        Some(m) => {
+            let method = Method::parse(m)?;
+            let frac: f64 = args.option("frac").unwrap_or("0.1").parse()?;
+            let selection =
+                Selection::parse(args.option("selection").unwrap_or("weight"))?;
+            let mut spec = match method {
+                Method::StaticNiti => MethodSpec::niti_static(),
+                Method::DynamicNiti => MethodSpec::niti_dynamic(),
+                Method::Priot => MethodSpec::priot(),
+                Method::PriotS => MethodSpec::priot_s(frac, selection),
+            };
+            if let Some(t) = args.option("theta") {
+                spec = spec.with_theta(t.parse()?);
+            }
+            vec![(m.to_string(), spec)]
+        }
+        // Default roster: every on-device Table I configuration.
+        None => vec![
+            ("static-niti".into(), MethodSpec::niti_static()),
+            ("dynamic-niti".into(), MethodSpec::niti_dynamic()),
+            ("priot".into(), MethodSpec::priot()),
+            ("priot-s-90-random".into(),
+             MethodSpec::priot_s(0.1, Selection::Random)),
+            ("priot-s-90-weight".into(),
+             MethodSpec::priot_s(0.1, Selection::WeightBased)),
+            ("priot-s-80-random".into(),
+             MethodSpec::priot_s(0.2, Selection::Random)),
+            ("priot-s-80-weight".into(),
+             MethodSpec::priot_s(0.2, Selection::WeightBased)),
+        ],
+    };
+
+    let mut tables = String::new();
+    let mut jsons = Vec::new();
+    let mut unsound = Vec::new();
+    for (label, spec) in &specs {
+        // Materialise the plugin so pruning methods are audited against
+        // the exact masks this seed would select.
+        let mut plugin = spec.plugin();
+        plugin
+            .init(&backbone.spec, &backbone.weights, seed)
+            .with_context(|| format!("initialising {label} for audit"))?;
+        let report = priot::audit::audit_backbone(&backbone, spec, plugin.masks())
+            .with_context(|| format!("auditing {label}"))?;
+        if !report.sound() {
+            unsound.push(format!("{label}: {}", report.summary()));
+        }
+        tables.push_str(&report.render_table());
+        tables.push('\n');
+        jsons.push(report.to_json());
+    }
+
+    if args.has_flag("json") {
+        let json = format!("[{}]\n", jsons.join(",\n"));
+        write_or_print(args, "audit.json", &json)?;
+    } else {
+        print!("{tables}");
+        println!(
+            "audit: {}/{} configs statically sound",
+            specs.len() - unsound.len(),
+            specs.len()
+        );
+    }
+    if !unsound.is_empty() {
+        bail!("statically unsound configs:\n  {}", unsound.join("\n  "));
+    }
+    Ok(())
+}
+
+/// Micro/macro benchmark runner with durable snapshots (`priot bench`).
+///
+/// `--suite kernel` times the GEMM/im2col hot paths at Table I shapes;
+/// `--suite serve` times register/train/evaluate through the fleet
+/// service; `--suite all` (default) runs both.  `--baseline DIR` diffs
+/// against checked-in `BENCH_<suite>.json` snapshots; `--update DIR`
+/// rewrites them from this run.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use priot::report::bench;
+
+    let suite = args.option("suite").unwrap_or("all");
+    let iters: u32 = args.option("iters").unwrap_or("200").parse()?;
+    let mut results = Vec::new();
+    match suite {
+        "kernel" => results.push(bench::run_kernel(iters)),
+        "serve" => results.push(bench::run_serve()?),
+        "all" => {
+            results.push(bench::run_kernel(iters));
+            results.push(bench::run_serve()?);
+        }
+        other => bail!("unknown bench suite '{other}' (want kernel|serve|all)"),
+    }
+    for r in &results {
+        print!("{}", r.render());
+        if let Some(dir) = args.option("baseline") {
+            let path = Path::new(dir).join(format!("BENCH_{}.json", r.suite));
+            match std::fs::read_to_string(&path) {
+                Ok(text) => {
+                    let base = bench::BenchResults::from_json(&text)
+                        .with_context(|| format!("parsing {}", path.display()))?;
+                    print!("{}", r.diff(&base));
+                }
+                Err(e) => eprintln!("(no baseline {}: {e})", path.display()),
+            }
+        }
+        if let Some(dir) = args.option("update") {
+            std::fs::create_dir_all(dir)?;
+            let path = Path::new(dir).join(format!("BENCH_{}.json", r.suite));
+            std::fs::write(&path, r.to_json())?;
+            eprintln!("wrote {}", path.display());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// On-device recalibration: re-derive the static scale table from local
+/// data using the engine's dynamic-shift calibrator (paper §IV-A run on the
+/// device side — useful when the deployment distribution drifts so far that
+/// the shipped scales saturate).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let pair = data::load_pair(&cfg)?;
+    let n: usize = args.option("samples").unwrap_or("64").parse()?;
+    let mut session = Session::from_experiment(&cfg)?;
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n.min(pair.train.n) {
+        let mut img = vec![0i32; pair.train.image_len()];
+        pair.train.image_i32(i, &mut img);
+        images.push(img);
+        labels.push(pair.train.label(i));
+    }
+    let engine = session
+        .engine_mut()
+        .ok_or_else(|| anyhow::anyhow!("calibrate needs the engine backend"))?;
+    let scales = engine.calibrate(&images, &labels);
+    let text = scales.to_text();
+    match args.option("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_pico_report(args: &Args) -> Result<()> {
+    let model = args.option("model").unwrap_or("tinycnn");
+    let artifacts = artifacts_dir(args);
+    let spec = NetSpec::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let scales = priot::quant::load_scales(
+            &artifacts.join(format!("{model}.scales.txt")))
+        .unwrap_or_else(|_| Scales::default_for(spec.layers.len()));
+    println!("# RP2040 cost model: {model}");
+    println!("params: {}  fwd MACs: {}", spec.num_params(), spec.fwd_macs());
+    println!();
+    println!("| Method | Pico time [ms] | fwd | bwd | upd | mask | dyn | Memory [B] | Fits 264KB |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for (label, p) in [
+        ("static-niti", pico::MethodParams::new(Method::StaticNiti)),
+        ("dynamic-niti", pico::MethodParams::new(Method::DynamicNiti)),
+        ("priot", pico::MethodParams::new(Method::Priot)),
+        ("priot-s p=90%", pico::MethodParams::priot_s(0.1, Selection::Random)),
+        ("priot-s p=80%", pico::MethodParams::priot_s(0.2, Selection::Random)),
+    ] {
+        let c = pico::step_cost(&spec, &scales, p);
+        let m = pico::memory_footprint(&spec, p);
+        println!(
+            "| {} | {:.2} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {} | {} |",
+            label,
+            c.total_ms(),
+            c.fwd_cycles / pico::CLOCK_HZ * 1e3,
+            c.bwd_cycles / pico::CLOCK_HZ * 1e3,
+            c.update_cycles / pico::CLOCK_HZ * 1e3,
+            c.mask_cycles / pico::CLOCK_HZ * 1e3,
+            c.dynamic_cycles / pico::CLOCK_HZ * 1e3,
+            m.total(),
+            if pico::fits_pico(&m) { "yes" } else { "NO" }
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "priot — pruning-based integer-only transfer learning (PRIOT, IEEE ESL 2025)\n\n\
+         subcommands:\n\
+         \x20 train        run one on-device training session\n\
+         \x20 eval         evaluate the backbone on a dataset\n\
+         \x20 compare      all methods side-by-side (one seed, fleet-parallel)\n\
+         \x20 fleet        simulate N devices adapting concurrently (--angles 0,30,60)\n\
+         \x20 serve        long-lived fleet service (--trace replay or --listen ADDR;\n\
+         \x20              --state-dir DIR = durable restart-resume, --resident-cap N\n\
+         \x20              = LRU-bound live sessions over the store,\n\
+         \x20              --audit warn|reject = register-time soundness gate)\n\
+         \x20 client       replay a request trace against a remote server over TCP\n\
+         \x20 audit        static overflow-soundness proof of the quantised net\n\
+         \x20              (per-layer interval bounds; --method M or the full\n\
+         \x20              Table I roster; --json; exits non-zero if unsound)\n\
+         \x20 bench        kernel + serve perf snapshots (--suite kernel|serve|all,\n\
+         \x20              --baseline DIR diffs BENCH_*.json, --update DIR rewrites)\n\
+         \x20 table1       regenerate Table I  (accuracy per method)\n\
+         \x20 table2       regenerate Table II (time + memory on the Pico model)\n\
+         \x20 fig2         regenerate Fig. 2   (overflow collapse trace)\n\
+         \x20 fig3         regenerate Fig. 3   (accuracy history)\n\
+         \x20 ablation     threshold / rounding-mode sweeps\n\
+         \x20 pico-report  RP2040 cycle + SRAM breakdown\n\
+         \x20 calibrate    re-derive static scales from local data\n\
+         \x20 selftest     engine ⇄ PJRT bit-parity check\n\n\
+         common flags: --artifacts DIR  --config FILE  --full  --epochs N\n\
+         \x20             --limit N  --seeds N  --method M  --angle A  --out FILE\n\
+         \x20             --source auto|artifact|generated  (data resolution;\n\
+         \x20              'auto' falls back to in-process generation, so every\n\
+         \x20              angle works without `make artifacts`)"
+    );
+}

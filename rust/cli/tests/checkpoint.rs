@@ -1,0 +1,140 @@
+//! Checkpoint/resume over the pre-trained fixture backbone: the
+//! deployment story of saving trained pruning state and restoring it
+//! after a power cycle (a core embedded requirement), through
+//! `Session::save` / `Session::restore`.
+//!
+//! The synthetic-backbone round-trip suite (all three methods) lives in
+//! `rust/cli/tests/session.rs`; these tests add the pre-trained-deployable
+//! paths.  Hermetic since the datagen port: backbone from
+//! `tests/fixtures/backbone`, data generated in-process — nothing skips.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use priot::config::{Config, ExperimentConfig};
+use priot::data::{DataPair, DataSource};
+use priot::session::{Backbone, Session, SessionBuilder};
+
+fn fixtures() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/backbone");
+    assert!(
+        p.join("tinycnn.weights.bin").exists(),
+        "checked-in backbone fixture missing — corrupt checkout? \
+         see rust/cli/tests/fixtures/README.md"
+    );
+    p
+}
+
+fn backbone() -> Arc<Backbone> {
+    static BB: OnceLock<Arc<Backbone>> = OnceLock::new();
+    Arc::clone(BB.get_or_init(|| {
+        Backbone::load(&fixtures(), "tinycnn").expect("fixture backbone")
+    }))
+}
+
+fn pair() -> &'static DataPair {
+    static DATA: OnceLock<DataPair> = OnceLock::new();
+    DATA.get_or_init(|| {
+        DataSource::Generated { n_train: 64, n_test: 64 }
+            .pair("digits", 30)
+            .expect("generated digits @30")
+    })
+}
+
+fn cfg(method: &str) -> ExperimentConfig {
+    let mut c = Config::default();
+    c.set("artifacts", fixtures().to_str().unwrap());
+    c.set("source", "generated");
+    c.set("method", method);
+    c.set("seed", "11");
+    c.set("frac_scored", "0.1");
+    ExperimentConfig::from_config(&c).unwrap()
+}
+
+fn build(c: &ExperimentConfig) -> Session {
+    SessionBuilder::from_experiment(c)
+        .unwrap()
+        .backbone(backbone())
+        .build()
+        .unwrap()
+}
+
+fn train_steps(s: &mut Session, ds: &priot::serial::Dataset, n: usize) {
+    let mut img = vec![0i32; ds.image_len()];
+    for i in 0..n {
+        ds.image_i32(i % ds.n, &mut img);
+        s.train_step(&img, ds.label(i % ds.n));
+    }
+}
+
+#[test]
+fn priot_checkpoint_roundtrip_resumes_identically() {
+    let c = cfg("priot");
+    let p = pair();
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("scores.bin");
+
+    // run A: 10 steps, checkpoint, 10 more steps
+    let mut a = build(&c);
+    train_steps(&mut a, &p.train, 10);
+    a.save(&ckpt).unwrap();
+    train_steps(&mut a, &p.train, 10);
+
+    // run B: fresh session with a different seed (scores differ until the
+    // checkpoint overwrites them), restore, same 10 steps
+    let mut c2 = c.clone();
+    c2.seed = 99;
+    let mut b = build(&c2);
+    b.restore(&ckpt).unwrap();
+    train_steps(&mut b, &p.train, 10);
+    let (sa, sb) = (a.scores().unwrap(), b.scores().unwrap());
+    // B replayed samples 0..10 again, A continued 10..20 — so equality is
+    // only expected for the checkpoint itself; assert restore exactness:
+    let mut b2 = build(&c2);
+    b2.restore(&ckpt).unwrap();
+    let mut a2 = build(&c);
+    train_steps(&mut a2, &p.train, 10);
+    assert_eq!(b2.scores().unwrap(), a2.scores().unwrap(),
+               "restored state must equal the state that was saved");
+    // sanity: training continued to evolve in both
+    assert_ne!(sa, b2.scores().unwrap());
+    assert_ne!(sb, b2.scores().unwrap());
+}
+
+#[test]
+fn niti_checkpoint_saves_weights() {
+    let c = cfg("static-niti");
+    let p = pair();
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("weights.bin");
+    let mut a = build(&c);
+    train_steps(&mut a, &p.train, 5);
+    a.save(&ckpt).unwrap();
+    let mut b = build(&c);
+    b.restore(&ckpt).unwrap();
+    // restored weights must reproduce A's predictions exactly
+    let mut img = vec![0i32; p.test.image_len()];
+    for i in 0..32.min(p.test.n) {
+        p.test.image_i32(i, &mut img);
+        assert_eq!(a.predict(&img), b.predict(&img), "sample {i}");
+    }
+    assert_eq!(a.engine_mut().unwrap().weights,
+               b.engine_mut().unwrap().weights);
+}
+
+#[test]
+fn checkpoint_shape_mismatch_rejected() {
+    let c = cfg("priot");
+    let mut a = build(&c);
+    let tmp = std::env::temp_dir().join("priot_ckpt_test");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let bad = tmp.join("bad.bin");
+    // save a NITI-shaped checkpoint (4 tensors) and try to load as PRIOT (8)
+    let c2 = cfg("static-niti");
+    let b = build(&c2);
+    b.save(&bad).unwrap();
+    assert!(a.restore(&bad).is_err());
+}

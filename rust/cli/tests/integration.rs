@@ -1,0 +1,277 @@
+//! End-to-end integration: the paper's headline behaviours must reproduce
+//! on the engine backend, driven through the Session API.
+//!
+//! Fully hermetic since the datagen port: the backbone is the checked-in
+//! pre-trained fixture (`tests/fixtures/backbone`, see the README there)
+//! and the rotated datasets are generated in-process by `priot::datagen`
+//! — bit-identical to what `make artifacts` would build.  Nothing here
+//! skips; a missing fixture is a hard failure (the `PRIOT_CI=1` gate in
+//! CI exists so no formerly-skipping suite can silently lose coverage
+//! again).
+//!
+//! The asserted thresholds are properties of this exact backbone + data:
+//! the whole stack is deterministic integer arithmetic, so each run
+//! reproduces the same numbers (noted inline) until the fixture is
+//! regenerated.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use priot::config::{Config, ExperimentConfig};
+use priot::data::{self, DataPair, DataSource};
+use priot::session::{Backbone, Session, SessionBuilder};
+use priot::spec::NetSpec;
+
+/// The checked-in pre-trained backbone fixture.  Never skips: the fixture
+/// is part of the checkout.
+fn fixtures() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/backbone");
+    assert!(
+        p.join("tinycnn.weights.bin").exists(),
+        "checked-in backbone fixture missing — corrupt checkout? \
+         see rust/cli/tests/fixtures/README.md"
+    );
+    p
+}
+
+fn backbone() -> Arc<Backbone> {
+    static BB: OnceLock<Arc<Backbone>> = OnceLock::new();
+    Arc::clone(BB.get_or_init(|| {
+        Backbone::load(&fixtures(), "tinycnn").expect("fixture backbone")
+    }))
+}
+
+/// The 30°-drifted digits pair, generated once per process — the same
+/// bytes `make artifacts` would put in `digits_{train,test}_a30.bin`.
+fn pair() -> &'static DataPair {
+    static DATA: OnceLock<DataPair> = OnceLock::new();
+    DATA.get_or_init(|| {
+        DataSource::Generated { n_train: 1024, n_test: 1024 }
+            .pair("digits", 30)
+            .expect("generated digits @30")
+    })
+}
+
+fn cfg(method: &str, extra: &[(&str, &str)]) -> ExperimentConfig {
+    let mut c = Config::default();
+    c.set("artifacts", fixtures().to_str().unwrap());
+    c.set("source", "generated");
+    c.set("method", method);
+    c.set("angle", "30");
+    for (k, v) in extra {
+        c.set(k, v);
+    }
+    ExperimentConfig::from_config(&c).unwrap()
+}
+
+/// Session over the shared fixture backbone with quick epoch/limit
+/// overrides.
+fn session(c: &ExperimentConfig, epochs: usize, limit: usize) -> Session {
+    let mut c = c.clone();
+    c.epochs = epochs;
+    c.limit = limit;
+    SessionBuilder::from_experiment(&c)
+        .unwrap()
+        .backbone(backbone())
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn backbone_fixture_loads_and_validates() {
+    let dir = fixtures();
+    let spec = NetSpec::tinycnn();
+    let tensors =
+        priot::serial::load_weights(&dir.join("tinycnn.weights.bin")).unwrap();
+    assert_eq!(tensors.len(), spec.layers.len());
+    for (t, l) in tensors.iter().zip(spec.layers.iter()) {
+        let (r, cdim) = l.weight_shape();
+        assert_eq!(t.dims, vec![r, cdim]);
+    }
+    let scales = priot::quant::load_scales(&dir.join("tinycnn.scales.txt")).unwrap();
+    assert_eq!(scales.layers.len(), spec.layers.len());
+    let p = pair();
+    data::validate(&p.train, &spec).unwrap();
+    data::validate(&p.test, &spec).unwrap();
+}
+
+#[test]
+fn backbone_beats_chance_before_transfer() {
+    // Expected with the current fixture: 0.6309 @30° over 512 samples.
+    let c = cfg("static-niti", &[]);
+    let mut s = session(&c, 0, 512);
+    let acc = s.evaluate(&pair().test).unwrap();
+    assert!(acc > 0.35, "pre-trained backbone @30° should beat chance: {acc}");
+}
+
+#[test]
+fn priot_improves_over_backbone() {
+    // The paper's headline: PRIOT trains effectively with static scales.
+    // Expected with the current fixture: 0.619 → best 0.834 (+21.5 p.p.),
+    // 73 overflow events over 2560 steps.
+    let c = cfg("priot", &[("seed", "1")]);
+    let p = pair();
+    let mut s = session(&c, 5, 512);
+    let m = s.train(&p.train, &p.test).unwrap();
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(
+        gain >= 0.04,
+        "PRIOT should gain ≥4 p.p. in 5 quick epochs: before {:.3} best {:.3}",
+        m.accuracy[0],
+        m.best_accuracy()
+    );
+    // Weights frozen ⇒ overflow stays at the backbone's baseline rarity
+    // (the final-layer probe fires on a few % of drifted inputs with this
+    // calibration) — no static-NITI-style burst (cf. the collapse test,
+    // where updates drive it far higher).
+    let steps = m.total_steps();
+    let overflow: u64 = m.overflow.iter().sum();
+    assert!(
+        overflow * 20 < steps,
+        "PRIOT overflow must stay rare (<5% of {steps} steps): {overflow}"
+    );
+}
+
+#[test]
+fn static_niti_collapses() {
+    // The paper's motivation (Fig. 2/3): static-scale NITI training
+    // collapses — the run ends far below where it started, accompanied by
+    // output-overflow bursts.  Expected with the current fixture: best
+    // 0.721 → final 0.096, 380 overflow events.
+    let c = cfg("static-niti", &[]);
+    let p = pair();
+    let mut s = session(&c, 8, 512);
+    let m = s.train(&p.train, &p.test).unwrap();
+    assert!(
+        m.final_accuracy() < m.best_accuracy() - 0.15,
+        "static-NITI should collapse from its peak: best {:.3} final {:.3}",
+        m.best_accuracy(),
+        m.final_accuracy()
+    );
+    assert!(
+        m.final_accuracy() < m.accuracy[0],
+        "static-NITI should end below the backbone: start {:.3} final {:.3}",
+        m.accuracy[0],
+        m.final_accuracy()
+    );
+    assert!(m.overflow.iter().sum::<u64>() > 0,
+            "collapse should come with overflow events");
+}
+
+#[test]
+fn dynamic_niti_improves() {
+    // Expected with the current fixture: 0.631 → best 0.801 (+17 p.p.).
+    let c = cfg("dynamic-niti", &[]);
+    let p = pair();
+    let mut s = session(&c, 3, 512);
+    let m = s.train(&p.train, &p.test).unwrap();
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(gain >= 0.04, "dynamic-NITI reference should learn: gain {gain:.3}");
+}
+
+#[test]
+fn priot_s_weight_based_learns_with_sparse_scores() {
+    // Expected with the current fixture: 0.398 → best 0.744 (+34.6 p.p.).
+    let c = cfg("priot-s", &[("selection", "weight"),
+                             ("frac_scored", "0.2"), ("seed", "2")]);
+    let p = pair();
+    let mut s = session(&c, 5, 512);
+    let m = s.train(&p.train, &p.test).unwrap();
+    let gain = m.best_accuracy() - m.accuracy[0];
+    assert!(gain >= 0.02, "PRIOT-S should still learn: gain {gain:.3}");
+}
+
+#[test]
+fn priot_prunes_gradually_and_stably() {
+    // §IV-B analysis: ~10% of edges pruned by the end, few oscillations.
+    // Expected with the current fixture: avg pruned 0.090, flips
+    // 436, 407, 257, 196, 150 (decreasing).
+    let c = cfg("priot", &[("seed", "3")]);
+    let p = pair();
+    let mut s = session(&c, 5, 512);
+    let m = s.train(&p.train, &p.test).unwrap();
+    let last = m.pruned_frac.last().unwrap();
+    let avg: f64 = last.iter().sum::<f64>() / last.len() as f64;
+    assert!(
+        (0.005..0.35).contains(&avg),
+        "pruned fraction should be moderate, got {avg:.3}"
+    );
+    // flips settle: late-epoch flips should not exceed early flips by 3×
+    if m.mask_flips.len() >= 3 {
+        let first = m.mask_flips[0].max(1);
+        let last_f = *m.mask_flips.last().unwrap();
+        assert!(
+            last_f < first * 3,
+            "mask oscillation should not grow: first {first} last {last_f}"
+        );
+    }
+}
+
+#[test]
+fn track_pruning_off_skips_pruning_metrics() {
+    let c = cfg("priot", &[("track_pruning", "false")]);
+    let p = pair();
+    let mut s = session(&c, 2, 128);
+    let m = s.train(&p.train, &p.test).unwrap();
+    assert!(m.pruned_frac.is_empty(), "tracking disabled via config");
+    assert!(m.mask_flips.is_empty());
+}
+
+#[test]
+fn seed_sweep_aggregates() {
+    // Expected with the current fixture: bests 0.695/0.750/0.727.
+    let mut c = cfg("priot", &[]);
+    c.epochs = 2;
+    c.limit = 128;
+    let p = pair();
+    let opts = priot::coordinator::RunOptions::from_config(&c);
+    let sweep = priot::coordinator::sweep_seeds(
+        &c, &p.train, &p.test, &opts, &[1, 2, 3]).unwrap();
+    assert_eq!(sweep.runs.len(), 3);
+    assert_eq!(sweep.best.n, 3);
+    assert!(sweep.best.mean > 0.3);
+}
+
+#[test]
+fn vgg_engine_runs_a_step() {
+    // The CIFAR-10 stand-in at width 0.25: one training step over a
+    // synthetic backbone + generated patterns (no vgg fixture needed —
+    // this checks the machinery, not accuracy).
+    let bb = Backbone::synthetic("vgg11w0.25", 7).unwrap();
+    let train = DataSource::Generated { n_train: 4, n_test: 4 }
+        .split("patterns", priot::datagen::Split::Train, 30)
+        .unwrap();
+    data::validate(&train, &NetSpec::vgg11(0.25)).unwrap();
+    let mut s = Session::builder()
+        .backbone(bb)
+        .method(priot::methods::Priot::new())
+        .seed(1)
+        .build()
+        .unwrap();
+    let mut img = vec![0i32; train.image_len()];
+    train.image_i32(0, &mut img);
+    let out = s.train_step(&img, train.label(0));
+    assert_eq!(out.logits.len(), 10);
+}
+
+#[test]
+fn table2_orderings_hold_on_host_measurements() {
+    use priot::report::experiments;
+    // Hermetic: scales/weights from the fixture dir, data generated.
+    let md = experiments::table2(&fixtures(), "tinycnn", 30).unwrap();
+    // parse host ms column ordering: PRIOT-S < static < PRIOT
+    let get = |needle: &str| -> f64 {
+        let line = md.lines().find(|l| l.contains(needle)).unwrap();
+        let cell = line.split('|').nth(2).unwrap().trim();
+        cell.split_whitespace().next().unwrap().parse().unwrap()
+    };
+    let t_static = get("Static-Scale NITI");
+    let t_priot = get("PRIOT |");
+    let t_p90 = get("p=90%");
+    // The paper's Table II ordering is asserted on the Pico cycle model
+    // (pico::tests); host timings on a superscalar x86 only sanity-bound:
+    // PRIOT-S must not be dramatically slower than the dense variants.
+    assert!(t_p90 < t_priot * 1.5, "host: PRIOT-S {t_p90} ≲ PRIOT {t_priot}");
+    assert!(t_priot < t_static * 3.0, "host: PRIOT {t_priot} ≲ 3×static {t_static}");
+}

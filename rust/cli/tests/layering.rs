@@ -1,0 +1,76 @@
+//! Layering guard: `priot-core` must stay `no_std`-capable.
+//!
+//! The workspace's layering contract is that every numeric kernel —
+//! tensor ops, quantization, the integer engine, the method plugins,
+//! the PRNG, and the snapshot-state types — lives in `priot-core`,
+//! which builds with `#![no_std]` + `alloc` so the same code can target
+//! an FPU-less microcontroller (the paper's Raspberry Pi Pico).  CI
+//! enforces the *build* side with
+//! `cargo check -p priot-core --no-default-features`; this test
+//! enforces the *source* side, so a stray `std::` import fails fast in
+//! a plain `cargo test` run too, with a pointer at the offending line.
+
+use std::path::{Path, PathBuf};
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("listing {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn core_src() -> PathBuf {
+    // tests/ lives in the cli crate; core is its workspace sibling.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../core/src")
+}
+
+#[test]
+fn core_lib_declares_no_std() {
+    let lib = std::fs::read_to_string(core_src().join("lib.rs")).unwrap();
+    assert!(
+        lib.contains("#![cfg_attr(not(test), no_std)]")
+            || lib.contains("#![no_std]"),
+        "core/src/lib.rs must declare no_std"
+    );
+}
+
+#[test]
+fn core_sources_never_import_std() {
+    let mut files = Vec::new();
+    rust_sources(&core_src(), &mut files);
+    assert!(!files.is_empty(), "no sources under {:?}", core_src());
+
+    let mut offenders = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path).unwrap();
+        // Core's unit tests run under std (`cargo test` builds the crate
+        // with the test feature); only shipped code must stay std-free.
+        // Test modules sit at the end of each file behind #[cfg(test)].
+        let shipped = text.split("#[cfg(test)]").next().unwrap();
+        for (ln, raw) in shipped.lines().enumerate() {
+            let code = raw.split("//").next().unwrap_or("");
+            if code.contains("std::")
+                || code.contains("use std")
+                || code.contains("extern crate std")
+            {
+                offenders.push(format!(
+                    "{}:{}: {}",
+                    path.display(),
+                    ln + 1,
+                    raw.trim()
+                ));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "priot-core must stay no_std (use core::/alloc:: instead):\n{}",
+        offenders.join("\n")
+    );
+}

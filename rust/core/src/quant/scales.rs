@@ -1,0 +1,154 @@
+//! The static scale-shift table — parsed from `artifacts/<model>.scales.txt`
+//! (written by `python/compile/pretrain.py` after calibration).
+//!
+//! This module is pure parsing/formatting: reading the file off disk lives
+//! in the host layer (`priot_host::quant::load_scales`), keeping the core
+//! crate free of filesystem IO.
+
+use alloc::format;
+use alloc::string::String;
+use alloc::vec;
+use alloc::vec::Vec;
+
+use crate::bail;
+use crate::error::Result;
+
+/// Static shifts for one parameterized layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerScales {
+    /// conv/fc output accumulator → int8.
+    pub fwd: u32,
+    /// delta-x accumulator → int8.
+    pub bwd: u32,
+    /// delta-W accumulator → int8 gradient `g8`.
+    pub grad: u32,
+    /// `W ⊙ g8` accumulator → int8 score step.
+    pub score: u32,
+}
+
+impl Default for LayerScales {
+    fn default() -> Self {
+        Self { fwd: 7, bwd: 7, grad: 7, score: 7 }
+    }
+}
+
+/// Per-layer shifts plus the two global learning-rate shifts (see
+/// `intnet.Scales` for the rationale: without them every integer update
+/// saturates the int8 step).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Scales {
+    pub layers: Vec<LayerScales>,
+    pub lr_shift: u32,
+    pub score_lr_shift: u32,
+}
+
+/// Parse one whitespace-separated field, reporting the line and field name.
+fn parse_field<T: core::str::FromStr>(s: &str, what: &str, line: usize) -> Result<T> {
+    s.parse().map_err(|_| crate::err!("scales line {line}: bad {what} value {s:?}"))
+}
+
+impl Scales {
+    pub fn default_for(n_layers: usize) -> Self {
+        Self {
+            layers: vec![LayerScales::default(); n_layers],
+            lr_shift: 5,
+            score_lr_shift: 5,
+        }
+    }
+
+    /// Parse the text format: optional `lr_shift N` / `score_lr_shift N`
+    /// lines, then `layer fwd bwd grad score` rows; `#` comments.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut layers = Vec::new();
+        let (mut lr_shift, mut score_lr_shift) = (5u32, 5u32);
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts[0] {
+                "lr_shift" => {
+                    let v = parts.get(1).ok_or_else(|| {
+                        crate::err!("scales line {}: lr_shift needs a value", ln + 1)
+                    })?;
+                    lr_shift = parse_field(v, "lr_shift", ln + 1)?;
+                }
+                "score_lr_shift" => {
+                    let v = parts.get(1).ok_or_else(|| {
+                        crate::err!("scales line {}: score_lr_shift needs a value", ln + 1)
+                    })?;
+                    score_lr_shift = parse_field(v, "score_lr_shift", ln + 1)?;
+                }
+                _ => {
+                    if parts.len() != 5 {
+                        bail!("scales line {}: expected 5 fields, got {}",
+                              ln + 1, parts.len());
+                    }
+                    let idx: usize = parse_field(parts[0], "layer index", ln + 1)?;
+                    if idx != layers.len() {
+                        bail!("scales line {}: layer index {} out of order",
+                              ln + 1, idx);
+                    }
+                    layers.push(LayerScales {
+                        fwd: parse_field(parts[1], "fwd", ln + 1)?,
+                        bwd: parse_field(parts[2], "bwd", ln + 1)?,
+                        grad: parse_field(parts[3], "grad", ln + 1)?,
+                        score: parse_field(parts[4], "score", ln + 1)?,
+                    });
+                }
+            }
+        }
+        if layers.is_empty() {
+            bail!("scales file contained no layer rows");
+        }
+        Ok(Self { layers, lr_shift, score_lr_shift })
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = format!(
+            "lr_shift {}\nscore_lr_shift {}\n# layer fwd bwd grad score\n",
+            self.lr_shift, self.score_lr_shift
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push_str(&format!("{} {} {} {} {}\n", i, l.fwd, l.bwd, l.grad, l.score));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = Scales {
+            layers: vec![
+                LayerScales { fwd: 9, bwd: 7, grad: 11, score: 6 },
+                LayerScales { fwd: 8, bwd: 8, grad: 10, score: 6 },
+            ],
+            lr_shift: 4,
+            score_lr_shift: 6,
+        };
+        let t = s.to_text();
+        assert_eq!(Scales::from_text(&t).unwrap(), s);
+    }
+
+    #[test]
+    fn parses_python_output_shape() {
+        let text = "lr_shift 5\nscore_lr_shift 6\n# layer fwd bwd grad score\n\
+                    0 9 7 7 7\n1 8 8 4 6\n2 11 8 10 6\n3 8 2 9 6\n";
+        let s = Scales::from_text(text).unwrap();
+        assert_eq!(s.layers.len(), 4);
+        assert_eq!(s.layers[2].grad, 10);
+        assert_eq!(s.score_lr_shift, 6);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Scales::from_text("").is_err());
+        assert!(Scales::from_text("0 1 2").is_err());
+        assert!(Scales::from_text("1 1 2 3 4").is_err(), "out-of-order index");
+    }
+}

@@ -1,0 +1,145 @@
+//! Binary interchange with the Python build path (mirrors
+//! `python/compile/serialize.py` / `dataset.py`), plus checkpointing of
+//! scores/weights produced on-device.
+//!
+//! All integers little-endian.
+//!
+//! * Weights ("PRWT" = 0x50525754): u32 magic, u32 version, u32 n_tensors,
+//!   then per tensor u32 ndim, u32 dims[ndim], i8 data row-major.
+//! * Dataset ("PRDS" = 0x50524453): u32 magic, u32 version, u32 n, c, h, w,
+//!   then n·c·h·w u8 pixels, then n u8 labels.
+//!
+//! This module owns the in-memory *types* and the layout constants; the
+//! file readers/writers (`load_weights` / `save_weights` / `load_dataset`)
+//! live in `priot_host::serial` — the core crate is `no_std` and does no
+//! IO.  A device port streams the same layouts over whatever transport it
+//! has (flash, UART) and lands in these types.
+
+use alloc::vec::Vec;
+
+pub const WEIGHTS_MAGIC: u32 = 0x5052_5754;
+pub const DATASET_MAGIC: u32 = 0x5052_4453;
+
+/// An int8 tensor with explicit dims (as stored on disk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorI8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    /// Narrow i32 working values to the on-disk int8 representation,
+    /// **saturating** at the int8 range.  Checkpoint values are produced by
+    /// `clamp8` and already live in `[-127, 127]`, but a plain `as i8` cast
+    /// would silently wrap anything that slipped outside (e.g. state
+    /// injected by a foreign checkpoint) — saturate instead.
+    pub fn from_i32_saturating(dims: Vec<usize>, data: &[i32]) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self {
+            dims,
+            data: data
+                .iter()
+                .map(|&x| x.clamp(i8::MIN as i32, i8::MAX as i32) as i8)
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Widen to the i32 working representation.
+    pub fn to_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+}
+
+/// Overflow-checked product of header dims — a corrupt header must yield a
+/// clean error, never a wrapped size that allocates garbage.  Public so the
+/// host readers and the store codec share one guard.
+pub fn checked_size(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+/// An image-classification dataset as stored on disk (u8 pixels 0..255).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dataset {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub images: Vec<u8>, // n*c*h*w
+    pub labels: Vec<u8>, // n
+}
+
+impl Dataset {
+    pub fn image_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Raw u8 pixels of sample `i`.
+    pub fn image(&self, i: usize) -> &[u8] {
+        let len = self.image_len();
+        &self.images[i * len..(i + 1) * len]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// Device-side activation mapping: u8 0..255 pixels → int8 0..127
+    /// (`p >> 1`), widened into the caller's i32 buffer.
+    pub fn image_i32(&self, i: usize, out: &mut [i32]) {
+        u8_to_i32_pixels(self.image(i), out);
+    }
+}
+
+/// The device-side pixel mapping (u8 0..255 → int8 0..127 via `p >> 1`),
+/// shared by [`Dataset::image_i32`] and the serve front-end's raw-image
+/// `Predict` requests so the two paths cannot drift.
+pub fn u8_to_i32_pixels(src: &[u8], out: &mut [i32]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &p) in out.iter_mut().zip(src.iter()) {
+        *o = (p >> 1) as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_i32_saturating_clamps_out_of_range() {
+        let t = TensorI8::from_i32_saturating(
+            vec![2, 3], &[0, 127, -127, 300, -300, 128]);
+        assert_eq!(t.data, vec![0, 127, -127, 127, -128, 127],
+                   "out-of-range i32 values must saturate, not wrap");
+    }
+
+    #[test]
+    fn checked_size_guards_overflow() {
+        assert_eq!(checked_size(&[2, 3, 4]), Some(24));
+        assert_eq!(checked_size(&[]), Some(1));
+        assert_eq!(checked_size(&[usize::MAX, 2]), None);
+    }
+
+    #[test]
+    fn image_i32_halves_pixels() {
+        let d = Dataset {
+            n: 1,
+            c: 1,
+            h: 2,
+            w: 2,
+            images: vec![0, 1, 254, 255],
+            labels: vec![3],
+        };
+        let mut buf = [0i32; 4];
+        d.image_i32(0, &mut buf);
+        assert_eq!(buf, [0, 0, 127, 127]);
+        assert_eq!(d.label(0), 3);
+    }
+}

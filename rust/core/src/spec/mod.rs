@@ -1,0 +1,215 @@
+//! Model architecture specs — mirrors `python/compile/intnet.py`
+//! (`ConvSpec`/`FcSpec`/`NetSpec`) including the exact channel plans, so the
+//! engine, the memory accountant and the AOT artifacts all agree on shapes.
+
+use alloc::format;
+use alloc::string::String;
+use alloc::vec;
+use alloc::vec::Vec;
+
+/// One parameterized layer. Convolutions are 3×3 / pad 1 / stride 1 with an
+/// optional 2×2 max-pool; geometry is recorded at spec-build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    Conv {
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        relu: bool,
+        pool: bool,
+    },
+    Fc {
+        in_f: usize,
+        out_f: usize,
+        relu: bool,
+    },
+}
+
+impl LayerSpec {
+    /// Weight matrix shape `(rows, cols)`: conv `(F, C*9)`, fc `(out, in)`.
+    pub fn weight_shape(&self) -> (usize, usize) {
+        match *self {
+            LayerSpec::Conv { in_c, out_c, .. } => (out_c, in_c * 9),
+            LayerSpec::Fc { in_f, out_f, .. } => (out_f, in_f),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let (r, c) = self.weight_shape();
+        r * c
+    }
+
+    /// Flattened output length (post pool for conv layers).
+    pub fn out_len(&self) -> usize {
+        match *self {
+            LayerSpec::Conv { in_h, in_w, out_c, pool, .. } => {
+                if pool {
+                    out_c * (in_h / 2) * (in_w / 2)
+                } else {
+                    out_c * in_h * in_w
+                }
+            }
+            LayerSpec::Fc { out_f, .. } => out_f,
+        }
+    }
+
+    /// Flattened input length.
+    pub fn in_len(&self) -> usize {
+        match *self {
+            LayerSpec::Conv { in_c, in_h, in_w, .. } => in_c * in_h * in_w,
+            LayerSpec::Fc { in_f, .. } => in_f,
+        }
+    }
+
+    /// MACs for the forward GEMM of this layer.
+    pub fn fwd_macs(&self) -> usize {
+        match *self {
+            LayerSpec::Conv { in_c, in_h, in_w, out_c, .. } => {
+                out_c * in_c * 9 * in_h * in_w
+            }
+            LayerSpec::Fc { in_f, out_f, .. } => in_f * out_f,
+        }
+    }
+}
+
+/// A full model: an ordered list of layers plus the input geometry.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub input_chw: (usize, usize, usize),
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetSpec {
+    /// The paper's tiny CNN: conv(1→8)·pool → conv(8→16)·pool → fc 784→64
+    /// → fc 64→10, for 28×28×1 inputs.
+    pub fn tinycnn() -> Self {
+        NetSpec {
+            name: "tinycnn".into(),
+            input_chw: (1, 28, 28),
+            layers: vec![
+                LayerSpec::Conv { in_c: 1, in_h: 28, in_w: 28, out_c: 8, relu: true, pool: true },
+                LayerSpec::Conv { in_c: 8, in_h: 14, in_w: 14, out_c: 16, relu: true, pool: true },
+                LayerSpec::Fc { in_f: 16 * 7 * 7, out_f: 64, relu: true },
+                LayerSpec::Fc { in_f: 64, out_f: 10, relu: false },
+            ],
+        }
+    }
+
+    /// VGG11 (8 conv + 3 FC) for 32×32×3, width-scaled — channel plan
+    /// 64,128,256,256,512,512,512,512 with pools after convs 1,2,4,6,8,
+    /// then FC 512w→512w→10 (mirrors `intnet.vgg11_spec`).
+    pub fn vgg11(width: f64) -> Self {
+        let c = |n: usize| -> usize {
+            (crate::round_half_away(n as f64 * width) as usize).max(4)
+        };
+        let chans = [c(64), c(128), c(256), c(256), c(512), c(512), c(512), c(512)];
+        let pools = [true, true, false, true, false, true, false, true];
+        let mut layers = Vec::new();
+        let (mut in_c, mut h) = (3usize, 32usize);
+        for (i, &out_c) in chans.iter().enumerate() {
+            layers.push(LayerSpec::Conv {
+                in_c,
+                in_h: h,
+                in_w: h,
+                out_c,
+                relu: true,
+                pool: pools[i],
+            });
+            if pools[i] {
+                h /= 2;
+            }
+            in_c = out_c;
+        }
+        let feat = chans[7] * h * h;
+        layers.push(LayerSpec::Fc { in_f: feat, out_f: c(512), relu: true });
+        layers.push(LayerSpec::Fc { in_f: c(512), out_f: c(512), relu: true });
+        layers.push(LayerSpec::Fc { in_f: c(512), out_f: 10, relu: false });
+        // Match the python name formatting ("%g"): trim trailing zeros.
+        let mut ws = format!("{width}");
+        if ws.contains('.') {
+            while ws.ends_with('0') {
+                ws.pop();
+            }
+            if ws.ends_with('.') {
+                ws.pop();
+            }
+        }
+        NetSpec { name: format!("vgg11w{ws}"), input_chw: (3, 32, 32), layers }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "tinycnn" => Some(Self::tinycnn()),
+            _ if name.starts_with("vgg11w") => {
+                name["vgg11w".len()..].parse::<f64>().ok().map(Self::vgg11)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_chw.0 * self.input_chw.1 * self.input_chw.2
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.layers.last().map(|l| l.out_len()).unwrap_or(0)
+    }
+
+    /// Total forward MACs for one sample.
+    pub fn fwd_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.fwd_macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tinycnn_geometry() {
+        let s = NetSpec::tinycnn();
+        assert_eq!(s.layers.len(), 4);
+        assert_eq!(s.layers[0].weight_shape(), (8, 9));
+        assert_eq!(s.layers[1].weight_shape(), (16, 72));
+        assert_eq!(s.layers[2].weight_shape(), (64, 784));
+        assert_eq!(s.layers[3].weight_shape(), (10, 64));
+        assert_eq!(s.num_params(), 8 * 9 + 16 * 72 + 64 * 784 + 640);
+        assert_eq!(s.layers[1].out_len(), 16 * 7 * 7);
+        assert_eq!(s.num_classes(), 10);
+    }
+
+    #[test]
+    fn layer_chaining_is_consistent() {
+        for spec in [NetSpec::tinycnn(), NetSpec::vgg11(0.25), NetSpec::vgg11(1.0)] {
+            let mut cur = spec.input_len();
+            for l in &spec.layers {
+                assert_eq!(l.in_len(), cur, "{}: layer input mismatch", spec.name);
+                cur = l.out_len();
+            }
+            assert_eq!(cur, 10);
+        }
+    }
+
+    #[test]
+    fn vgg11_full_width_params() {
+        // 8 conv + 3 fc; full width lands in the ~9M range like real VGG11.
+        let s = NetSpec::vgg11(1.0);
+        assert_eq!(s.layers.len(), 11);
+        let p = s.num_params();
+        assert!((8_000_000..12_000_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(NetSpec::by_name("tinycnn").unwrap().name, "tinycnn");
+        let v = NetSpec::by_name("vgg11w0.25").unwrap();
+        assert_eq!(v.name, "vgg11w0.25");
+        assert!(NetSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,310 @@
+//! Integer tensor substrate: row-major matrices, the three GEMM variants the
+//! training loop needs, and the 3×3/pad-1 conv geometry helpers (im2col,
+//! col2im, 2×2 max-pool) — bit-identical to `python/compile/intnet.py`.
+//!
+//! Values are int8-range integers carried in `i32` (accumulators are genuine
+//! int32); the contract guarantees no accumulator overflows int32 for the
+//! model sizes in this repo (see DESIGN.md §5).
+
+pub mod gemm;
+
+pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
+
+use alloc::vec;
+use alloc::vec::Vec;
+
+/// Row-major integer matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec size mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut i32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reset all elements to zero (reusing the allocation — hot path).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0);
+    }
+}
+
+/// im2col for 3×3 / pad 1 / stride 1: `(C,H,W)` (flat, len C*H*W) into the
+/// `(C*9, H*W)` patch matrix with row index `c*9 + ky*3 + kx`.
+///
+/// `out` must be `C*9 x H*W`; rows are written fully (no zeroing needed).
+pub fn im2col(x: &[i32], c: usize, h: usize, w: usize, out: &mut Mat) {
+    debug_assert_eq!(x.len(), c * h * w);
+    debug_assert_eq!(out.rows, c * 9);
+    debug_assert_eq!(out.cols, h * w);
+    let hw = h * w;
+    for ci in 0..c {
+        let xc = &x[ci * hw..(ci + 1) * hw];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let row = ci * 9 + ky * 3 + kx;
+                let dst = &mut out.data[row * hw..(row + 1) * hw];
+                // Source pixel for output (y, x) is (y + ky - 1, x + kx - 1).
+                for y in 0..h {
+                    let sy = y as isize + ky as isize - 1;
+                    let drow = &mut dst[y * w..(y + 1) * w];
+                    if sy < 0 || sy >= h as isize {
+                        drow.iter_mut().for_each(|v| *v = 0);
+                        continue;
+                    }
+                    let srow = &xc[(sy as usize) * w..(sy as usize + 1) * w];
+                    match kx {
+                        0 => {
+                            drow[0] = 0;
+                            drow[1..].copy_from_slice(&srow[..w - 1]);
+                        }
+                        1 => drow.copy_from_slice(srow),
+                        _ => {
+                            drow[..w - 1].copy_from_slice(&srow[1..]);
+                            drow[w - 1] = 0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add the `(C*9, H*W)` patch matrix back to
+/// `(C,H,W)` (accumulating in i32; the contract keeps sums in range).
+pub fn col2im(cols: &Mat, c: usize, h: usize, w: usize, out: &mut [i32]) {
+    debug_assert_eq!(cols.rows, c * 9);
+    debug_assert_eq!(cols.cols, h * w);
+    debug_assert_eq!(out.len(), c * h * w);
+    out.iter_mut().for_each(|v| *v = 0);
+    let hw = h * w;
+    for ci in 0..c {
+        let oc = &mut out[ci * hw..(ci + 1) * hw];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let row = ci * 9 + ky * 3 + kx;
+                let src = &cols.data[row * hw..(row + 1) * hw];
+                for y in 0..h {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    let dst = &mut oc[(sy as usize) * w..(sy as usize + 1) * w];
+                    let srow = &src[y * w..(y + 1) * w];
+                    match kx {
+                        0 => {
+                            for x in 1..w {
+                                dst[x - 1] += srow[x];
+                            }
+                        }
+                        1 => {
+                            for x in 0..w {
+                                dst[x] += srow[x];
+                            }
+                        }
+                        _ => {
+                            for x in 0..w - 1 {
+                                dst[x + 1] += srow[x];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 max-pool on `(C,H,W)` -> `(C,H/2,W/2)` plus the argmax index in
+/// `0..4`, row-major `(dy,dx)`, first-max tie-break (matches
+/// `numpy.argmax` / `jnp.argmax`).
+pub fn maxpool2(x: &[i32], c: usize, h: usize, w: usize,
+                out: &mut [i32], idx: &mut [u8]) {
+    let (h2, w2) = (h / 2, w / 2);
+    debug_assert_eq!(x.len(), c * h * w);
+    debug_assert_eq!(out.len(), c * h2 * w2);
+    debug_assert_eq!(idx.len(), c * h2 * w2);
+    for ci in 0..c {
+        let xc = &x[ci * h * w..(ci + 1) * h * w];
+        for y in 0..h2 {
+            for xo in 0..w2 {
+                let o = ci * h2 * w2 + y * w2 + xo;
+                let mut best = i32::MIN;
+                let mut bi = 0u8;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let v = xc[(2 * y + dy) * w + 2 * xo + dx];
+                        if v > best {
+                            best = v;
+                            bi = (dy * 2 + dx) as u8;
+                        }
+                    }
+                }
+                out[o] = best;
+                idx[o] = bi;
+            }
+        }
+    }
+}
+
+/// Scatter `dy` `(C,H/2,W/2)` back to `(C,H,W)` at the recorded argmaxes.
+pub fn maxpool2_backward(dy: &[i32], idx: &[u8], c: usize, h: usize,
+                         w: usize, out: &mut [i32]) {
+    let (h2, w2) = (h / 2, w / 2);
+    debug_assert_eq!(dy.len(), c * h2 * w2);
+    debug_assert_eq!(out.len(), c * h * w);
+    out.iter_mut().for_each(|v| *v = 0);
+    for ci in 0..c {
+        for y in 0..h2 {
+            for xo in 0..w2 {
+                let o = ci * h2 * w2 + y * w2 + xo;
+                let (dy_, dx_) = ((idx[o] / 2) as usize, (idx[o] % 2) as usize);
+                out[ci * h * w + (2 * y + dy_) * w + 2 * xo + dx_] = dy[o];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::XorShift64;
+
+    fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.int_in(-127, 127)).collect()
+    }
+
+    /// Brute-force im2col directly from the definition.
+    fn im2col_ref(x: &[i32], c: usize, h: usize, w: usize) -> Mat {
+        let mut out = Mat::zeros(c * 9, h * w);
+        for ci in 0..c {
+            for ky in 0..3i32 {
+                for kx in 0..3i32 {
+                    for y in 0..h as i32 {
+                        for xo in 0..w as i32 {
+                            let (sy, sx) = (y + ky - 1, x_off(xo, kx));
+                            let v = if sy < 0 || sy >= h as i32 || sx < 0
+                                || sx >= w as i32
+                            {
+                                0
+                            } else {
+                                x[ci * h * w + sy as usize * w + sx as usize]
+                            };
+                            *out.at_mut(
+                                ci * 9 + (ky * 3 + kx) as usize,
+                                (y * w as i32 + xo) as usize,
+                            ) = v;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn x_off(x: i32, kx: i32) -> i32 {
+        x + kx - 1
+    }
+
+    #[test]
+    fn im2col_matches_bruteforce() {
+        let mut rng = XorShift64::new(5);
+        for &(c, h, w) in &[(1usize, 4usize, 4usize), (3, 6, 8), (2, 5, 7), (4, 2, 2)] {
+            let x = rand_vec(&mut rng, c * h * w);
+            let mut out = Mat::zeros(c * 9, h * w);
+            im2col(&x, c, h, w, &mut out);
+            assert_eq!(out, im2col_ref(&x, c, h, w), "c={c} h={h} w={w}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
+        // property of the adjoint pair used by conv backward.
+        let mut rng = XorShift64::new(6);
+        let (c, h, w) = (3usize, 6usize, 5usize);
+        for _ in 0..10 {
+            let x = rand_vec(&mut rng, c * h * w);
+            let ymat = Mat::from_vec(c * 9, h * w, rand_vec(&mut rng, c * 9 * h * w));
+            let mut xi = Mat::zeros(c * 9, h * w);
+            im2col(&x, c, h, w, &mut xi);
+            let mut back = vec![0i32; c * h * w];
+            col2im(&ymat, c, h, w, &mut back);
+            let lhs: i64 = xi
+                .data
+                .iter()
+                .zip(ymat.data.iter())
+                .map(|(&a, &b)| a as i64 * b as i64)
+                .sum();
+            let rhs: i64 = x
+                .iter()
+                .zip(back.iter())
+                .map(|(&a, &b)| a as i64 * b as i64)
+                .sum();
+            assert_eq!(lhs, rhs);
+        }
+    }
+
+    #[test]
+    fn maxpool_first_max_tiebreak() {
+        // All-equal window: index 0 (top-left) must win.
+        let x = vec![7i32; 4];
+        let mut out = vec![0i32; 1];
+        let mut idx = vec![9u8; 1];
+        maxpool2(&x, 1, 2, 2, &mut out, &mut idx);
+        assert_eq!(out[0], 7);
+        assert_eq!(idx[0], 0);
+    }
+
+    #[test]
+    fn maxpool_roundtrip_scatter() {
+        let mut rng = XorShift64::new(7);
+        let (c, h, w) = (2usize, 4usize, 6usize);
+        let x = rand_vec(&mut rng, c * h * w);
+        let mut pooled = vec![0i32; c * h * w / 4];
+        let mut idx = vec![0u8; c * h * w / 4];
+        maxpool2(&x, c, h, w, &mut pooled, &mut idx);
+        // every pooled value exists in its window
+        let mut back = vec![0i32; c * h * w];
+        maxpool2_backward(&pooled, &idx, c, h, w, &mut back);
+        // scattered positions hold the max; everything else zero
+        let nonzero = back.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero <= pooled.len());
+        for ci in 0..c {
+            for y in 0..h / 2 {
+                for xo in 0..w / 2 {
+                    let o = ci * (h / 2) * (w / 2) + y * (w / 2) + xo;
+                    let (dy_, dx_) = ((idx[o] / 2) as usize, (idx[o] % 2) as usize);
+                    let pos = ci * h * w + (2 * y + dy_) * w + 2 * xo + dx_;
+                    assert_eq!(x[pos], pooled[o], "argmax points at the max");
+                    assert_eq!(back[pos], pooled[o]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,817 @@
+//! `priot::audit` — static quantization-soundness analysis.
+//!
+//! PRIOT trains with **static** scale shifts, which makes silent i32
+//! accumulator overflow and requant saturation the failure mode the paper's
+//! Fig. 2 can only *observe* at runtime.  This module proves the absence of
+//! that failure mode ahead of time: an interval-analysis pass over the
+//! quantized network that propagates accumulator bounds from the int8 input
+//! range through every conv/FC GEMM (i8×i8→i32), requant shift, ReLU, and
+//! pooling stage, and emits a per-layer [`Verdict`]:
+//!
+//! * [`Verdict::Proven`] — the *worst-case envelope* `K·127·127` (any int8
+//!   weights, any int8 inputs) plus the rounding bias fits in i32: the layer
+//!   can never overflow no matter how training perturbs it.  Reported with
+//!   the number of spare doublings (`headroom_bits`).
+//! * [`Verdict::Headroom`] — the envelope does not fit, but the
+//!   **weight-exact** bound does.  Because the backbone is frozen, the
+//!   per-row reachable sum `Σ|w_ij|·|x|` is computable exactly; the verdict
+//!   carries how many doublings of that bound remain before overflow.
+//! * [`Verdict::Overflowable`] — even the weight-exact bound can exceed
+//!   i32; `margin_bits` says how many bits the layer is short.
+//!
+//! ## Soundness of the bounds
+//!
+//! Two bound families are tracked per layer:
+//!
+//! * the **final-accumulator interval** `[Σ eᵢ.lo, Σ eᵢ.hi]` over per-edge
+//!   contribution intervals `eᵢ` — exact for the completed dot product and
+//!   the input to the requant/saturation analysis;
+//! * the **any-prefix reach bounds** `[Σ min(eᵢ.lo,0), Σ max(eᵢ.hi,0)]`,
+//!   which bound every *partial* sum in every accumulation order (each
+//!   prefix only ever adds a subset of the negative / positive mass).  The
+//!   overflow proof uses these, so it holds for the scalar engine, the
+//!   batched engine, SIMD re-associations, and any future kernel order.
+//!
+//! The analysis is **method-aware** via [`WeightModel`]:
+//!
+//! * `Frozen` — the deployed backbone as-is (the paper's "before" row).
+//! * `Pruned` — PRIOT / PRIOT-S: a scored edge may be dropped at any step,
+//!   so its contribution interval is widened to include 0 (dropping an edge
+//!   can *increase* `|Σ|` when edges cancel — pruning is not monotone, and
+//!   the model covers every reachable mask pattern).  With the concrete
+//!   PRIOT-S existence masks, unscored edges keep their exact frozen
+//!   contribution, tightening the bound.
+//! * `WeightDrift` — NITI: weights are re-clamped to `[-127,127]` every
+//!   update, so each edge ranges over the full reachable weight envelope.
+//!
+//! Every requant shift additionally gets a **saturation analysis** (the
+//! post-shift interval vs the int8 clamp) and a validity check: a shift
+//! `> 31` would overflow the `1 << (s-1)` rounding bias inside
+//! [`crate::quant::rshift_round`] itself and is reported as a report-level
+//! issue — this is how a hostile or corrupt scale table is rejected at
+//! `Register` time (`ServeBuilder::audit(AuditPolicy::Reject)`).
+//!
+//! Entry points: [`audit_backbone`] (the serving/CLI path — maps a
+//! [`MethodSpec`] to its weight model), [`audit_net`] for explicit parts,
+//! and [`audit_spec`] for full control including the input interval.  The
+//! runtime cross-check lives in [`crate::engine::AccProbe`] — observed
+//! per-layer accumulator extremes, asserted against these bounds by
+//! `rust/cli/tests/audit.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::config::Method;
+use crate::proto::MethodSpec;
+use crate::quant::Scales;
+use crate::session::Backbone;
+use crate::spec::{LayerSpec, NetSpec};
+use crate::tensor::Mat;
+
+/// Inclusive integer interval, carried in i64 so no bound computation can
+/// itself overflow (|values| ≤ 2^31·K with K ≤ 2^20 in any real spec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn new(lo: i64, hi: i64) -> Self {
+        debug_assert!(lo <= hi, "interval [{lo}, {hi}] is empty");
+        Self { lo, hi }
+    }
+
+    /// Interval spanned by two endpoint products (order-free).
+    fn of(a: i64, b: i64) -> Self {
+        Self { lo: a.min(b), hi: a.max(b) }
+    }
+
+    /// Widen to include 0 (pruned edges, zero-padding pixels).
+    fn with_zero(self) -> Self {
+        Self { lo: self.lo.min(0), hi: self.hi.max(0) }
+    }
+
+    /// Largest absolute value in the interval.
+    fn abs_bound(self) -> i64 {
+        self.hi.max(-self.lo)
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+}
+
+/// The device pixel mapping (`u8 >> 1`, see `serial::u8_to_i32_pixels`)
+/// puts every first-layer activation in `[0, 127]`.
+pub const PIXEL_INPUT: Interval = Interval { lo: 0, hi: 127 };
+
+/// How the analysis models the weights a layer can hold at runtime.
+#[derive(Clone, Copy, Debug)]
+pub enum WeightModel<'a> {
+    /// The deployed backbone exactly as stored (no adaptation).
+    Frozen,
+    /// PRIOT / PRIOT-S: weights frozen, but any scored edge may be pruned
+    /// at any step.  `masks` are the PRIOT-S existence masks (non-zero =
+    /// scored/prunable); `None` treats every edge as prunable — sound for
+    /// plain PRIOT and for any PRIOT-S seed.
+    Pruned { masks: Option<&'a [Vec<i32>]> },
+    /// NITI: weights update every step (re-clamped to int8), so every edge
+    /// ranges over the full reachable weight envelope `[-127, 127]`.
+    WeightDrift,
+}
+
+/// The weight model matching a serializable method description.
+pub fn model_for_method(method: Method, masks: Option<&[Vec<i32>]>) -> WeightModel<'_> {
+    match method {
+        Method::StaticNiti | Method::DynamicNiti => WeightModel::WeightDrift,
+        Method::Priot | Method::PriotS => WeightModel::Pruned { masks },
+    }
+}
+
+impl WeightModel<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightModel::Frozen => "frozen",
+            WeightModel::Pruned { masks: Some(_) } => "pruned (exact masks)",
+            WeightModel::Pruned { masks: None } => "pruned (any mask)",
+            WeightModel::WeightDrift => "weight-drift",
+        }
+    }
+}
+
+/// Per-layer soundness verdict.  `Proven`/`Headroom` are sound layers;
+/// `Overflowable` fails the audit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// The any-weights envelope `K·127·127` plus rounding bias fits i32:
+    /// overflow is impossible for *any* int8 weights.  `headroom_bits` =
+    /// spare doublings before it would stop fitting.
+    Proven { headroom_bits: u32 },
+    /// The envelope does not fit, but the weight-exact reach bound does;
+    /// `bits` = spare doublings of the exact bound.
+    Headroom { bits: u32 },
+    /// Even the weight-exact bound can exceed i32; the layer is
+    /// `margin_bits` halvings away from provable.
+    Overflowable { margin_bits: u32 },
+}
+
+impl Verdict {
+    pub fn is_sound(&self) -> bool {
+        !matches!(self, Verdict::Overflowable { .. })
+    }
+
+    fn render(&self) -> String {
+        match *self {
+            Verdict::Proven { headroom_bits } => {
+                format!("proven (+{headroom_bits} bits)")
+            }
+            Verdict::Headroom { bits } => {
+                format!("headroom {bits} bits (weight-exact only)")
+            }
+            Verdict::Overflowable { margin_bits } => {
+                format!("OVERFLOWABLE (short {margin_bits} bits)")
+            }
+        }
+    }
+
+    fn json_tag(&self) -> (&'static str, u32) {
+        match *self {
+            Verdict::Proven { headroom_bits } => ("proven", headroom_bits),
+            Verdict::Headroom { bits } => ("headroom", bits),
+            Verdict::Overflowable { margin_bits } => ("overflowable", margin_bits),
+        }
+    }
+}
+
+/// Everything the analysis derived about one layer.
+#[derive(Clone, Debug)]
+pub struct LayerAudit {
+    pub index: usize,
+    /// "conv" or "fc".
+    pub kind: &'static str,
+    /// GEMM output rows (out channels / out features).
+    pub rows: usize,
+    /// Dot-product length (per-row MAC count).
+    pub k: usize,
+    /// The static forward requant shift applied to this accumulator.
+    pub shift: u32,
+    /// Per-element input interval fed to this layer's GEMM.
+    pub input: Interval,
+    /// Final-accumulator interval over all rows.
+    pub acc: Interval,
+    /// Any-prefix partial-sum bounds over all rows and accumulation orders.
+    pub reach: Interval,
+    /// The any-weights envelope `K·127·127`.
+    pub worst_case: i64,
+    pub verdict: Verdict,
+    /// Post-shift, pre-clamp output interval.
+    pub y: Interval,
+    /// Whether the requant clamp can actually engage (|y| > 127 reachable).
+    pub saturates: bool,
+    /// Post-clamp/ReLU interval — the next layer's input.
+    pub out: Interval,
+}
+
+/// The full audit of one (model, method) pair.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    pub model: String,
+    /// Human-readable method / weight-model label.
+    pub method: String,
+    pub layers: Vec<LayerAudit>,
+    /// Report-level problems (invalid shifts, …).  Any entry makes the
+    /// report unsound even if every layer verdict is.
+    pub issues: Vec<String>,
+}
+
+impl AuditReport {
+    /// Statically sound: no overflowable layer and no report-level issue.
+    pub fn sound(&self) -> bool {
+        self.issues.is_empty() && self.layers.iter().all(|l| l.verdict.is_sound())
+    }
+
+    /// One-line summary ("4/4 layers proven" / first failure).
+    pub fn summary(&self) -> String {
+        if let Some(issue) = self.issues.first() {
+            return issue.clone();
+        }
+        if let Some(l) = self.layers.iter().find(|l| !l.verdict.is_sound()) {
+            return format!("layer {} ({}) is {}", l.index, l.kind, l.verdict.render());
+        }
+        let proven = self
+            .layers
+            .iter()
+            .filter(|l| matches!(l.verdict, Verdict::Proven { .. }))
+            .count();
+        format!("{}/{} layers proven, rest bounded", proven, self.layers.len())
+    }
+
+    /// Render the per-layer markdown table (the `priot audit` output).
+    pub fn render_table(&self) -> String {
+        let mut out = format!(
+            "## {} / {}  —  {}\n\n\
+             | layer | kind | FxK | shift | final acc | any-prefix | \
+             worst-case | verdict | y range | sat |\n\
+             |---|---|---|---|---|---|---|---|---|---|\n",
+            self.model,
+            self.method,
+            if self.sound() { "SOUND" } else { "UNSOUND" }
+        );
+        for l in &self.layers {
+            out.push_str(&format!(
+                "| {} | {} | {}x{} | {} | [{}, {}] | [{}, {}] | {} | {} | \
+                 [{}, {}] | {} |\n",
+                l.index,
+                l.kind,
+                l.rows,
+                l.k,
+                l.shift,
+                l.acc.lo,
+                l.acc.hi,
+                l.reach.lo,
+                l.reach.hi,
+                l.worst_case,
+                l.verdict.render(),
+                l.y.lo,
+                l.y.hi,
+                if l.saturates { "yes" } else { "no" },
+            ));
+        }
+        for issue in &self.issues {
+            out.push_str(&format!("\nISSUE: {issue}\n"));
+        }
+        out
+    }
+
+    /// Machine-readable JSON (hand-rolled; the schema is pinned by the
+    /// golden test in `rust/cli/tests/audit.rs`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"model\": {},\n", json_str(&self.model)));
+        s.push_str(&format!("  \"method\": {},\n", json_str(&self.method)));
+        s.push_str(&format!("  \"sound\": {},\n", self.sound()));
+        s.push_str("  \"issues\": [");
+        for (i, issue) in self.issues.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&json_str(issue));
+        }
+        s.push_str("],\n  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            let (tag, bits) = l.verdict.json_tag();
+            s.push_str(&format!(
+                "    {{\"index\": {}, \"kind\": \"{}\", \"rows\": {}, \
+                 \"k\": {}, \"shift\": {}, \"acc_min\": {}, \"acc_max\": {}, \
+                 \"reach_min\": {}, \"reach_max\": {}, \"worst_case\": {}, \
+                 \"verdict\": \"{}\", \"bits\": {}, \"y_min\": {}, \
+                 \"y_max\": {}, \"saturates\": {}, \"out_min\": {}, \
+                 \"out_max\": {}}}{}\n",
+                l.index,
+                l.kind,
+                l.rows,
+                l.k,
+                l.shift,
+                l.acc.lo,
+                l.acc.hi,
+                l.reach.lo,
+                l.reach.hi,
+                l.worst_case,
+                tag,
+                bits,
+                l.y.lo,
+                l.y.hi,
+                l.saturates,
+                l.out.lo,
+                l.out.hi,
+                if i + 1 == self.layers.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+const I32_MAX: i64 = i32::MAX as i64;
+const W_MAX: i64 = 127;
+
+/// Audit a deployed [`Backbone`] under a serializable method description —
+/// the `priot audit` CLI / serve-`Register` entry point.  `masks` are the
+/// concrete PRIOT-S existence masks when available (a registered session's
+/// `Session::masks()`); `None` audits the method's whole reachable family.
+pub fn audit_backbone(
+    bb: &Backbone,
+    method: &MethodSpec,
+    masks: Option<&[Vec<i32>]>,
+) -> Result<AuditReport> {
+    audit_net(&bb.model, &bb.spec, &bb.weights, &bb.scales, method, masks)
+}
+
+/// [`audit_backbone`] over explicit parts.
+pub fn audit_net(
+    model: &str,
+    spec: &NetSpec,
+    weights: &[Mat],
+    scales: &Scales,
+    method: &MethodSpec,
+    masks: Option<&[Vec<i32>]>,
+) -> Result<AuditReport> {
+    let wm = model_for_method(method.method, masks);
+    let label = format!("{} [{}]", method.method.name(), wm.name());
+    let mut report = audit_spec(model, spec, weights, scales, wm, PIXEL_INPUT)?;
+    report.method = label;
+    Ok(report)
+}
+
+/// The core analysis: full control over weight model and input interval.
+pub fn audit_spec(
+    model: &str,
+    spec: &NetSpec,
+    weights: &[Mat],
+    scales: &Scales,
+    wm: WeightModel<'_>,
+    input: Interval,
+) -> Result<AuditReport> {
+    if weights.len() != spec.layers.len() {
+        bail!(
+            "audit: {} weight tensors for {} layers",
+            weights.len(),
+            spec.layers.len()
+        );
+    }
+    if scales.layers.len() != spec.layers.len() {
+        bail!(
+            "audit: {} scale rows for {} layers",
+            scales.layers.len(),
+            spec.layers.len()
+        );
+    }
+    if let WeightModel::Pruned { masks: Some(m) } = wm {
+        if m.len() != spec.layers.len() {
+            bail!("audit: {} mask layers for {} layers", m.len(), spec.layers.len());
+        }
+    }
+
+    let mut issues = Vec::new();
+    check_shifts(scales, &mut issues);
+
+    let mut layers = Vec::with_capacity(spec.layers.len());
+    let mut x = input;
+    for (li, (l, w)) in spec.layers.iter().zip(weights.iter()).enumerate() {
+        let (f, k) = l.weight_shape();
+        if w.rows != f || w.cols != k {
+            bail!(
+                "audit: layer {li} weight shape ({},{}) != spec ({f},{k})",
+                w.rows,
+                w.cols
+            );
+        }
+        let (kind, is_conv, relu) = match *l {
+            LayerSpec::Conv { relu, .. } => ("conv", true, relu),
+            LayerSpec::Fc { relu, .. } => ("fc", false, relu),
+        };
+        // im2col zero-pads the border patches, so conv GEMM inputs always
+        // include 0 whatever the activation interval is.
+        let xin = if is_conv { x.with_zero() } else { x };
+
+        let layer_masks: Option<&[i32]> = match wm {
+            WeightModel::Pruned { masks: Some(m) } => {
+                if m[li].len() != f * k {
+                    bail!(
+                        "audit: layer {li} mask has {} entries, want {}",
+                        m[li].len(),
+                        f * k
+                    );
+                }
+                Some(&m[li])
+            }
+            _ => None,
+        };
+
+        // Sentinel as a raw literal: the inverted "empty" interval is
+        // collapsed by the first row below (or the f == 0 reset).
+        let mut acc = Interval { lo: i64::MAX, hi: i64::MIN };
+        let mut reach = Interval { lo: 0, hi: 0 };
+        for fi in 0..f {
+            let (mut lo, mut hi, mut neg, mut pos) = (0i64, 0i64, 0i64, 0i64);
+            for ki in 0..k {
+                let prunable = match layer_masks {
+                    // Non-zero mask = scored = prunable; zero = always kept.
+                    Some(m) => m[fi * k + ki] != 0,
+                    None => true,
+                };
+                let e = edge_interval(wm, prunable, w.data[fi * k + ki] as i64, xin);
+                lo += e.lo;
+                hi += e.hi;
+                neg += e.lo.min(0);
+                pos += e.hi.max(0);
+            }
+            acc.lo = acc.lo.min(lo);
+            acc.hi = acc.hi.max(hi);
+            reach.lo = reach.lo.min(neg);
+            reach.hi = reach.hi.max(pos);
+        }
+        if f == 0 || k == 0 {
+            acc = Interval { lo: 0, hi: 0 };
+        }
+
+        let shift = scales.layers[li].fwd;
+        let bias = round_bias(shift);
+        let worst_case = k as i64 * W_MAX * W_MAX;
+        // The reach bounds cover the final sums too (the full sum is one
+        // of the prefixes), so one bound serves both overflow conditions:
+        // no partial sum wraps, and `acc + bias` inside requant does not.
+        let exact_bound = reach.abs_bound();
+        let verdict = if worst_case + bias <= I32_MAX {
+            Verdict::Proven { headroom_bits: doublings(worst_case, bias) }
+        } else if exact_bound + bias <= I32_MAX {
+            Verdict::Headroom { bits: doublings(exact_bound, bias) }
+        } else {
+            Verdict::Overflowable { margin_bits: deficit(exact_bound, bias) }
+        };
+
+        // Requant is monotone in the accumulator, so the y interval is the
+        // shifted endpoints (mathematical value: meaningful even for an
+        // overflowable layer, where the runtime would wrap instead).
+        let y = Interval::new(rshift_round_i64(acc.lo, shift), rshift_round_i64(acc.hi, shift));
+        let saturates = y.lo < -W_MAX || y.hi > W_MAX;
+        let mut out = Interval::new(y.lo.clamp(-W_MAX, W_MAX), y.hi.clamp(-W_MAX, W_MAX));
+        if relu {
+            out = Interval::new(out.lo.max(0), out.hi.max(0));
+        }
+        // Max-pool selects an existing value: the interval passes through.
+        layers.push(LayerAudit {
+            index: li,
+            kind,
+            rows: f,
+            k,
+            shift,
+            input: xin,
+            acc,
+            reach,
+            worst_case,
+            verdict,
+            y,
+            saturates,
+            out,
+        });
+        x = out;
+    }
+
+    Ok(AuditReport {
+        model: model.to_string(),
+        method: wm.name().to_string(),
+        layers,
+        issues,
+    })
+}
+
+/// Contribution interval of one edge under the weight model.
+fn edge_interval(wm: WeightModel<'_>, prunable: bool, w: i64, x: Interval) -> Interval {
+    match wm {
+        WeightModel::Frozen => Interval::of(w * x.lo, w * x.hi),
+        WeightModel::WeightDrift => {
+            let m = W_MAX * x.lo.abs().max(x.hi.abs());
+            Interval { lo: -m, hi: m }
+        }
+        WeightModel::Pruned { .. } => {
+            let base = Interval::of(w * x.lo, w * x.hi);
+            // A prunable edge may vanish at any step, so its contribution
+            // set also contains 0; an always-kept edge stays exact.
+            if prunable {
+                base.with_zero()
+            } else {
+                base
+            }
+        }
+    }
+}
+
+/// Rounding bias `rshift_round` adds before shifting (`1 << (s-1)`).
+fn round_bias(s: u32) -> i64 {
+    if s == 0 {
+        0
+    } else {
+        1i64 << (s.min(62) - 1)
+    }
+}
+
+/// `quant::rshift_round` replicated in i64 (round-half-up).
+fn rshift_round_i64(x: i64, s: u32) -> i64 {
+    if s == 0 {
+        x
+    } else {
+        (x + round_bias(s)) >> s.min(63)
+    }
+}
+
+/// Largest `h` with `(bound << h) + bias <= i32::MAX` (capped at 31).
+fn doublings(bound: i64, bias: i64) -> u32 {
+    let mut h = 0u32;
+    while h < 31 && (bound << (h + 1)) + bias <= I32_MAX {
+        h += 1;
+    }
+    h
+}
+
+/// Smallest `m >= 1` with `(bound >> m) + bias <= i32::MAX`.
+fn deficit(bound: i64, bias: i64) -> u32 {
+    let mut m = 0u32;
+    while m < 63 && (bound >> m) + bias > I32_MAX {
+        m += 1;
+    }
+    m
+}
+
+/// Shift-table validity: every static shift feeds `rshift_round`'s
+/// `1 << (s-1)` bias (i32), so any shift `> 31` is its own overflow —
+/// recorded as a report-level issue independent of the layer verdicts.
+fn check_shifts(scales: &Scales, issues: &mut Vec<String>) {
+    const MAX_SHIFT: u32 = 31;
+    for (li, l) in scales.layers.iter().enumerate() {
+        for (name, s) in
+            [("fwd", l.fwd), ("bwd", l.bwd), ("grad", l.grad), ("score", l.score)]
+        {
+            if s > MAX_SHIFT {
+                issues.push(format!(
+                    "layer {li}: {name} shift {s} exceeds {MAX_SHIFT} — the \
+                     rounding bias 1<<(s-1) overflows i32"
+                ));
+            }
+        }
+        // The combined update shifts are what the engine actually applies.
+        if l.grad.saturating_add(scales.lr_shift) > MAX_SHIFT && l.grad <= MAX_SHIFT {
+            issues.push(format!(
+                "layer {li}: grad+lr_shift = {} exceeds {MAX_SHIFT}",
+                l.grad + scales.lr_shift
+            ));
+        }
+        if l.score.saturating_add(scales.score_lr_shift) > MAX_SHIFT && l.score <= MAX_SHIFT
+        {
+            issues.push(format!(
+                "layer {li}: score+score_lr_shift = {} exceeds {MAX_SHIFT}",
+                l.score + scales.score_lr_shift
+            ));
+        }
+    }
+    for (name, s) in
+        [("lr_shift", scales.lr_shift), ("score_lr_shift", scales.score_lr_shift)]
+    {
+        if s > MAX_SHIFT {
+            issues.push(format!("{name} {s} exceeds {MAX_SHIFT}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fc_net(in_f: usize, out_f: usize, relu: bool) -> NetSpec {
+        NetSpec {
+            name: "toy".to_string(),
+            input_chw: (in_f, 1, 1),
+            layers: vec![LayerSpec::Fc { in_f, out_f, relu }],
+        }
+    }
+
+    fn scales_with_fwd(n: usize, fwd: u32) -> Scales {
+        let mut s = Scales::default_for(n);
+        for l in &mut s.layers {
+            l.fwd = fwd;
+        }
+        s
+    }
+
+    #[test]
+    fn golden_fc_hand_computed() {
+        // FC 3→2, w = [[1,-2,3],[0,5,-1]], x ∈ [0,127], shift 7.
+        let spec = fc_net(3, 2, false);
+        let w = vec![Mat::from_vec(2, 3, vec![1, -2, 3, 0, 5, -1])];
+        let scales = scales_with_fwd(1, 7);
+        let r = audit_spec("toy", &spec, &w, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        let l = &r.layers[0];
+        // row0: [0,127] + [-254,0] + [0,381] = [-254, 508]; row1: [-127, 635]
+        assert_eq!(l.acc, Interval { lo: -254, hi: 635 });
+        assert_eq!(l.reach, Interval { lo: -254, hi: 635 });
+        assert_eq!(l.worst_case, 3 * 127 * 127);
+        // 48387 << 15 + 64 ≤ i32::MAX < 48387 << 16.
+        assert_eq!(l.verdict, Verdict::Proven { headroom_bits: 15 });
+        // y = [rshift(-254,7), rshift(635,7)] = [-2, 5]; no saturation.
+        assert_eq!(l.y, Interval { lo: -2, hi: 5 });
+        assert!(!l.saturates);
+        assert_eq!(l.out, Interval { lo: -2, hi: 5 });
+        assert!(r.sound());
+    }
+
+    #[test]
+    fn relu_and_clamp_tighten_the_output() {
+        let spec = fc_net(2, 1, true);
+        // Huge positive row: y saturates high, relu keeps it nonnegative.
+        let w = vec![Mat::from_vec(1, 2, vec![127, 127])];
+        let scales = scales_with_fwd(1, 0);
+        let r = audit_spec("toy", &spec, &w, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        let l = &r.layers[0];
+        assert!(l.saturates, "unshifted 2·127·127 exceeds the clamp");
+        assert_eq!(l.out, Interval { lo: 0, hi: 127 });
+    }
+
+    #[test]
+    fn pruned_model_widens_cancelling_edges() {
+        // w = [127, -127]: frozen final sum cancels to [−16129, 16129],
+        // but pruning one edge reaches ±16129 too — and the *prefix* bound
+        // must already cover ±16129 even frozen.  With x ∈ [0,127]:
+        let spec = fc_net(2, 1, false);
+        let w = vec![Mat::from_vec(1, 2, vec![127, -127])];
+        let scales = scales_with_fwd(1, 7);
+        let frozen = audit_spec("toy", &spec, &w, &scales, WeightModel::Frozen,
+                                PIXEL_INPUT)
+            .unwrap();
+        let pruned = audit_spec("toy", &spec, &w, &scales,
+                                WeightModel::Pruned { masks: None },
+                                PIXEL_INPUT)
+            .unwrap();
+        assert_eq!(frozen.layers[0].acc, Interval { lo: -16129, hi: 16129 });
+        assert_eq!(frozen.layers[0].reach, Interval { lo: -16129, hi: 16129 });
+        // Pruning can only widen, never shrink, the covered set.
+        assert!(pruned.layers[0].acc.lo <= frozen.layers[0].acc.lo);
+        assert!(pruned.layers[0].acc.hi >= frozen.layers[0].acc.hi);
+    }
+
+    #[test]
+    fn masks_tighten_the_pruned_bound() {
+        // Edge 0 unscored (mask 0, always kept), edge 1 scored (prunable).
+        let spec = fc_net(2, 1, false);
+        let w = vec![Mat::from_vec(1, 2, vec![100, -100])];
+        let scales = scales_with_fwd(1, 7);
+        let masks = vec![vec![0, 1]];
+        let with_masks = audit_spec(
+            "toy", &spec, &w, &scales,
+            WeightModel::Pruned { masks: Some(&masks) }, PIXEL_INPUT,
+        )
+        .unwrap();
+        let without = audit_spec("toy", &spec, &w, &scales,
+                                 WeightModel::Pruned { masks: None },
+                                 PIXEL_INPUT)
+            .unwrap();
+        // Without masks both edges may drop: hi reaches 12700 (keep only
+        // edge 0).  With masks edge 0 always contributes [0, 12700] and
+        // edge 1 contributes [-12700, 0] (prunable): same hi, but the
+        // model knows edge 0 can never vanish, so lo is the same and the
+        // set is a subset.  Assert the containment direction.
+        assert!(without.layers[0].acc.lo <= with_masks.layers[0].acc.lo);
+        assert!(without.layers[0].acc.hi >= with_masks.layers[0].acc.hi);
+    }
+
+    #[test]
+    fn weight_drift_reaches_the_envelope() {
+        let spec = fc_net(3, 2, false);
+        let w = vec![Mat::from_vec(2, 3, vec![1, 0, -1, 2, 0, -2])];
+        let scales = scales_with_fwd(1, 7);
+        let r = audit_spec("toy", &spec, &w, &scales, WeightModel::WeightDrift,
+                           PIXEL_INPUT)
+            .unwrap();
+        let l = &r.layers[0];
+        assert_eq!(l.acc, Interval { lo: -3 * 16129, hi: 3 * 16129 });
+        assert_eq!(l.acc.hi, l.worst_case);
+    }
+
+    #[test]
+    fn headroom_and_overflowable_verdicts() {
+        // K large enough that the envelope exceeds i32: 200_000·127·127
+        // ≈ 3.2e9 > 2^31.
+        let k = 200_000usize;
+        let spec = fc_net(k, 1, false);
+        let scales = scales_with_fwd(1, 7);
+        // Small actual weights → weight-exact bound fits → Headroom.
+        let w_small = vec![Mat::from_vec(1, k, vec![1i32; k])];
+        let r = audit_spec("toy", &spec, &w_small, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        match r.layers[0].verdict {
+            Verdict::Headroom { bits } => assert!(bits >= 5, "got {bits}"),
+            v => panic!("want Headroom, got {v:?}"),
+        }
+        assert!(r.sound());
+        // Full-magnitude weights → even the exact bound overflows.
+        let w_big = vec![Mat::from_vec(1, k, vec![127i32; k])];
+        let r = audit_spec("toy", &spec, &w_big, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        match r.layers[0].verdict {
+            Verdict::Overflowable { margin_bits } => {
+                assert!(margin_bits >= 1)
+            }
+            v => panic!("want Overflowable, got {v:?}"),
+        }
+        assert!(!r.sound());
+    }
+
+    #[test]
+    fn invalid_shifts_are_report_issues() {
+        let spec = fc_net(3, 2, false);
+        let w = vec![Mat::from_vec(2, 3, vec![0; 6])];
+        let scales = scales_with_fwd(1, 40); // 1<<(40-1) overflows i32
+        let r = audit_spec("toy", &spec, &w, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        assert!(!r.sound());
+        assert!(r.issues.iter().any(|i| i.contains("fwd shift 40")),
+                "issues: {:?}", r.issues);
+        // The layer verdict itself stays independent of the shift problem.
+        assert!(r.layers[0].verdict.is_sound());
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let spec = fc_net(3, 2, true);
+        let w = vec![Mat::from_vec(2, 3, vec![1, -2, 3, 0, 5, -1])];
+        let scales = scales_with_fwd(1, 7);
+        let r = audit_spec("toy", &spec, &w, &scales, WeightModel::Frozen,
+                           PIXEL_INPUT)
+            .unwrap();
+        let json = r.to_json();
+        for key in ["\"model\": \"toy\"", "\"sound\": true",
+                    "\"verdict\": \"proven\"", "\"acc_min\": -254"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let table = r.render_table();
+        assert!(table.contains("proven"));
+        assert!(table.contains("SOUND"));
+    }
+
+    #[test]
+    fn rshift_round_i64_matches_i32_reference() {
+        for x in [-100_000i32, -129, -128, -5, -1, 0, 1, 5, 127, 100_000] {
+            for s in 0u32..12 {
+                assert_eq!(
+                    rshift_round_i64(x as i64, s),
+                    crate::quant::rshift_round(x, s) as i64,
+                    "x={x} s={s}"
+                );
+            }
+        }
+    }
+}

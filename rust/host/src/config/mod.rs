@@ -1,0 +1,328 @@
+//! Experiment configuration system.
+//!
+//! Offline image ⇒ no serde/toml crates; this module implements a small
+//! key–value config format (a TOML subset: `key = value` lines, `#`
+//! comments, bare `[section]` headers flattened into `section.key`) plus
+//! typed accessors and the [`ExperimentConfig`] the coordinator consumes.
+//! CLI flags override file values (see `cli`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed config: flat `section.key -> value` string map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+/// Strip a `#` comment, ignoring `#` characters inside double-quoted
+/// strings (a naive `split('#')` would truncate `note = "a # b"`).
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, ch) in raw.char_indices() {
+        match ch {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
+/// Remove one matching pair of surrounding double quotes, if present.
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unclosed section", ln + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let val = unquote(v.trim()).to_string();
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}: expected bool, got {v}"),
+        }
+    }
+}
+
+// The [`Method`] and [`Selection`] selector enums are plain data shared
+// with snapshots and the wire protocol, so they live in the `no_std` core
+// crate (`priot_core::methods`); re-exported here because the config file
+// is where most callers meet them.  Their `parse` errors are core errors —
+// anyhow picks them up at the `?` below.
+pub use priot_core::methods::{Method, Selection};
+
+/// Everything one on-device training run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub method: Method,
+    pub dataset: String, // dataset stem, e.g. "digits" / "patterns"
+    pub angle: u32,      // rotation of the on-device distribution
+    pub epochs: usize,
+    pub seed: u32,
+    /// PRIOT pruning threshold θ (paper: -64 for PRIOT, 0 for PRIOT-S).
+    pub theta: i32,
+    /// PRIOT-S: fraction of edges *with* scores (1 - p).
+    pub frac_scored: f64,
+    pub selection: Selection,
+    /// Execution backend: "engine" (pure Rust) or "pjrt" (AOT artifacts).
+    pub backend: String,
+    /// Cap on train/test samples (0 = all).
+    pub limit: usize,
+    /// Record per-layer pruned fractions + mask flips each epoch (a full
+    /// scores scan per epoch on the hot path; on by default).
+    pub track_pruning: bool,
+    /// Samples per forward in dataset evaluation (0/1 = per-sample;
+    /// batched evaluation is bit-identical, just faster).
+    pub eval_batch: usize,
+    /// Dataset source: `auto` (artifact file if present, generated
+    /// otherwise — the default), `artifact`, or `generated`.  See
+    /// [`crate::data::DataSource`].
+    pub source: String,
+    /// Sample counts for generated datasets (default: the full
+    /// `make artifacts` size, so generated data and artifact files are
+    /// byte-identical per angle).
+    pub gen_train: usize,
+    pub gen_test: usize,
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let method = Method::parse(cfg.get_or("method", "priot"))?;
+        let theta_default = match method {
+            Method::Priot => -64,
+            _ => 0,
+        };
+        Ok(Self {
+            artifacts_dir: PathBuf::from(cfg.get_or("artifacts", "artifacts")),
+            model: cfg.get_or("model", "tinycnn").to_string(),
+            method,
+            dataset: cfg.get_or("dataset", "digits").to_string(),
+            angle: cfg.get_usize("angle", 30)? as u32,
+            epochs: cfg.get_usize("epochs", 30)?,
+            seed: cfg.get_usize("seed", 1)? as u32,
+            theta: cfg.get_i32("theta", theta_default)?,
+            frac_scored: cfg.get_f64("frac_scored", 0.1)?,
+            selection: Selection::parse(cfg.get_or("selection", "weight"))?,
+            backend: cfg.get_or("backend", "engine").to_string(),
+            limit: cfg.get_usize("limit", 0)?,
+            track_pruning: cfg.get_bool("track_pruning", true)?,
+            eval_batch: cfg.get_usize("eval_batch", 1)?,
+            source: {
+                let s = cfg.get_or("source", "auto").to_string();
+                match s.as_str() {
+                    "auto" | "artifact" | "generated" => s,
+                    other => bail!(
+                        "config source={other} (want auto|artifact|generated)"
+                    ),
+                }
+            },
+            gen_train: cfg.get_usize("gen_train", crate::data::DEFAULT_GEN_N)?,
+            gen_test: cfg.get_usize("gen_test", crate::data::DEFAULT_GEN_N)?,
+        })
+    }
+
+    pub fn train_dataset_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join("data")
+            .join(format!("{}_train_a{}.bin", self.dataset, self.angle))
+    }
+
+    pub fn test_dataset_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join("data")
+            .join(format!("{}_test_a{}.bin", self.dataset, self.angle))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.artifacts_dir.join(format!("{}.weights.bin", self.model))
+    }
+
+    pub fn scales_path(&self) -> PathBuf {
+        self.artifacts_dir.join(format!("{}.scales.txt", self.model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_toml_subset() {
+        let text = r#"
+            # experiment preset
+            method = "priot"
+            epochs = 30
+            [run]
+            seed = 7
+        "#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.get("method"), Some("priot"));
+        assert_eq!(cfg.get_usize("epochs", 0).unwrap(), 30);
+        assert_eq!(cfg.get_usize("run.seed", 0).unwrap(), 7);
+        assert_eq!(cfg.get_usize("missing", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("no_equals_here").is_err());
+        let cfg = Config::parse("x = notanumber").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn quoted_values_keep_hashes() {
+        // regression: split('#') used to truncate quoted values
+        let cfg = Config::parse(
+            "note = \"rotated # 30 degrees\"\ntag = \"a#b\" # trailing comment",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("note"), Some("rotated # 30 degrees"));
+        assert_eq!(cfg.get("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn unquoting_removes_one_matching_pair_only() {
+        let cfg = Config::parse("a = \"\"\nb = \"x\"\nc = \"\"y\"\"").unwrap();
+        assert_eq!(cfg.get("a"), Some(""));
+        assert_eq!(cfg.get("b"), Some("x"));
+        assert_eq!(cfg.get("c"), Some("\"y\""), "inner quotes survive");
+    }
+
+    #[test]
+    fn unclosed_section_reports_line() {
+        let err = Config::parse("ok = 1\n[run\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(err.to_string().contains("unclosed section"), "{err}");
+    }
+
+    #[test]
+    fn track_pruning_configurable() {
+        let mut cfg = Config::default();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(e.track_pruning, "default on");
+        cfg.set("track_pruning", "false");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert!(!e.track_pruning);
+    }
+
+    #[test]
+    fn experiment_defaults_and_paths() {
+        let mut cfg = Config::default();
+        cfg.set("method", "priot-s");
+        cfg.set("angle", "45");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.method, Method::PriotS);
+        assert_eq!(e.theta, 0, "PRIOT-S default theta");
+        assert!(e
+            .train_dataset_path()
+            .to_string_lossy()
+            .ends_with("data/digits_train_a45.bin"));
+
+        let mut cfg2 = Config::default();
+        cfg2.set("method", "priot");
+        let e2 = ExperimentConfig::from_config(&cfg2).unwrap();
+        assert_eq!(e2.theta, -64, "PRIOT default theta");
+    }
+
+    #[test]
+    fn source_keys_parse_and_validate() {
+        let mut cfg = Config::default();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.source, "auto", "artifact-with-generated-fallback default");
+        assert_eq!(e.gen_train, crate::data::DEFAULT_GEN_N);
+        assert_eq!(e.gen_test, crate::data::DEFAULT_GEN_N);
+        cfg.set("source", "generated");
+        cfg.set("gen_train", "64");
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.source, "generated");
+        assert_eq!(e.gen_train, 64);
+        cfg.set("source", "magnetic-tape");
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::StaticNiti, Method::DynamicNiti, Method::Priot, Method::PriotS] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+}

@@ -1,0 +1,452 @@
+//! The on-device-learning coordinator: drives training epochs over a
+//! [`StepBackend`], evaluates at epoch boundaries, tracks the best model,
+//! records the Fig. 2/Fig. 3 probes, and fans seed sweeps out over threads
+//! (Table I's mean ± std over 10 runs).
+//!
+//! This is the L3 "request path": after `make artifacts` everything here is
+//! pure Rust — Python never runs again.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::engine::StepOut;
+use crate::methods::{plugin_for, StepBackend};
+use crate::metrics::{MeanStd, RunMetrics};
+use crate::serial::Dataset;
+use crate::session::{Backbone, Fleet};
+use crate::tensor::Mat;
+
+/// Options controlling a single run.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub epochs: usize,
+    /// Cap on train/test samples (0 = use all).
+    pub limit: usize,
+    /// Record per-layer pruned fractions + mask-flip counts per epoch
+    /// (costs a scores scan per epoch — configurable via the
+    /// `track_pruning` config key).
+    pub track_pruning: bool,
+    /// Print a line per epoch.
+    pub verbose: bool,
+    /// Samples per forward in epoch-boundary evaluation (0/1 = one sample
+    /// at a time).  Batched evaluation is bit-identical to per-sample —
+    /// the batch dimension is extra GEMM columns, never different
+    /// arithmetic.
+    pub eval_batch: usize,
+}
+
+impl RunOptions {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Self {
+            epochs: cfg.epochs,
+            limit: cfg.limit,
+            track_pruning: cfg.track_pruning,
+            verbose: false,
+            eval_batch: cfg.eval_batch,
+        }
+    }
+}
+
+/// Cap `n` samples at `limit` (0 = no cap).
+pub fn capped(n: usize, limit: usize) -> usize {
+    if limit == 0 {
+        n
+    } else {
+        n.min(limit)
+    }
+}
+
+/// Summary of one pass over (a cap of) the training set.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochReport {
+    pub steps: usize,
+    pub train_accuracy: f64,
+    pub overflow: u64,
+    pub secs: f64,
+}
+
+/// One training epoch over (a cap of) `train` — the single implementation
+/// of the inner step loop, shared by [`run_training`] and
+/// [`crate::session::Session::train_epoch`].
+pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
+                       limit: usize) -> EpochReport {
+    let n = capped(train.n, limit);
+    let mut img = vec![0i32; train.image_len()];
+    let mut overflow = 0u64;
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        train.image_i32(i, &mut img);
+        let label = train.label(i);
+        let StepOut { logits, overflow: ovf } = backend.train_step(&img, label);
+        overflow += ovf as u64;
+        if crate::engine::argmax(&logits) == label {
+            correct += 1;
+        }
+    }
+    EpochReport {
+        steps: n,
+        train_accuracy: correct as f64 / n.max(1) as f64,
+        overflow,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Evaluate top-1 accuracy of `backend` over (a cap of) `ds`, one sample
+/// at a time — the `batch = 1` case of [`evaluate_batched`] (kept as the
+/// named per-sample entry point).
+pub fn evaluate(backend: &mut dyn StepBackend, ds: &Dataset, limit: usize)
+                -> f64 {
+    evaluate_batched(backend, ds, limit, 1)
+}
+
+/// Predictions over (a cap of) `ds` in batched forwards of up to `batch`
+/// samples.  Bit-identical to a per-sample [`StepBackend::predict`] loop
+/// (asserted by `rust/cli/tests/serve.rs` for every method plugin); the final
+/// chunk covers the `n % batch` remainder.
+pub fn predict_batched(backend: &mut dyn StepBackend, ds: &Dataset,
+                       limit: usize, batch: usize) -> Vec<usize> {
+    let n = capped(ds.n, limit);
+    let len = ds.image_len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if batch <= 1 {
+        let mut img = vec![0i32; len];
+        return (0..n)
+            .map(|i| {
+                ds.image_i32(i, &mut img);
+                backend.predict(&img)
+            })
+            .collect();
+    }
+    let bsz = batch.min(n);
+    let mut imgs = Mat::zeros(bsz, len);
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        let bcur = bsz.min(n - i);
+        if bcur != imgs.rows {
+            imgs = Mat::zeros(bcur, len); // remainder chunk
+        }
+        for bi in 0..bcur {
+            ds.image_i32(i + bi, &mut imgs.data[bi * len..(bi + 1) * len]);
+        }
+        out.extend(backend.predict_batch(&imgs));
+        i += bcur;
+    }
+    out
+}
+
+/// Top-1 accuracy via [`predict_batched`] — the fleet/serve evaluation
+/// path (`batch <= 1` degenerates to the per-sample loop of [`evaluate`]).
+pub fn evaluate_batched(backend: &mut dyn StepBackend, ds: &Dataset,
+                        limit: usize, batch: usize) -> f64 {
+    let n = capped(ds.n, limit);
+    if n == 0 {
+        return 0.0;
+    }
+    let correct = predict_batched(backend, ds, limit, batch)
+        .into_iter()
+        .enumerate()
+        .filter(|&(i, p)| p == ds.label(i))
+        .count();
+    correct as f64 / n as f64
+}
+
+fn pruned_fractions(backend: &dyn StepBackend) -> Vec<f64> {
+    match (backend.scores(), backend.masks(), backend.theta()) {
+        (Some(scores), Some(masks), Some(theta)) => scores
+            .iter()
+            .zip(masks.iter())
+            .map(|(s, m)| {
+                let pruned = s
+                    .iter()
+                    .zip(m.iter())
+                    .filter(|&(&sv, &mv)| mv != 0 && sv < theta)
+                    .count();
+                pruned as f64 / s.len().max(1) as f64
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn mask_snapshot(backend: &dyn StepBackend) -> Vec<bool> {
+    match (backend.scores(), backend.masks(), backend.theta()) {
+        (Some(scores), Some(masks), Some(theta)) => scores
+            .iter()
+            .zip(masks.iter())
+            .flat_map(|(s, m)| {
+                s.iter()
+                    .zip(m.iter())
+                    .map(move |(&sv, &mv)| mv != 0 && sv < theta)
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// The epoch-granular training driver: everything [`run_training`] carries
+/// between epochs, factored out so schedulers ([`crate::session::Fleet`],
+/// `priot::serve`) can interleave the epochs of many sessions across a
+/// worker pool without duplicating the run protocol.  One `TrainProgress`
+/// belongs to one device; the metrics it accumulates are bit-identical to
+/// an uninterrupted [`run_training`] over the same backend.
+pub struct TrainProgress {
+    metrics: RunMetrics,
+    prev_mask: Vec<bool>,
+}
+
+impl TrainProgress {
+    /// Epoch-0 evaluation (the pre-training point of the paper's curves)
+    /// plus the initial mask snapshot.
+    pub fn start(backend: &mut dyn StepBackend, test: &Dataset,
+                 opts: &RunOptions) -> Self {
+        let mut metrics = RunMetrics::default();
+        metrics
+            .accuracy
+            .push(evaluate_batched(backend, test, opts.limit, opts.eval_batch));
+        let prev_mask = if opts.track_pruning {
+            mask_snapshot(backend)
+        } else {
+            Vec::new()
+        };
+        if opts.verbose {
+            eprintln!("[{}] epoch 0: test acc {:.4}", backend.name(),
+                      metrics.accuracy[0]);
+        }
+        Self { metrics, prev_mask }
+    }
+
+    /// One training epoch + the epoch-boundary evaluation and pruning
+    /// tracking.
+    pub fn step_epoch(&mut self, backend: &mut dyn StepBackend,
+                      train: &Dataset, test: &Dataset, opts: &RunOptions) {
+        let ep = train_one_epoch(backend, train, opts.limit);
+        let m = &mut self.metrics;
+        m.epoch_secs.push(ep.secs);
+        m.overflow.push(ep.overflow);
+        m.steps.push(ep.steps as u64);
+        m.train_accuracy.push(ep.train_accuracy);
+        m.accuracy
+            .push(evaluate_batched(backend, test, opts.limit, opts.eval_batch));
+        if opts.track_pruning {
+            let fr = pruned_fractions(backend);
+            if !fr.is_empty() {
+                m.pruned_frac.push(fr);
+            }
+            let cur = mask_snapshot(backend);
+            if !cur.is_empty() && cur.len() == self.prev_mask.len() {
+                let flips = cur
+                    .iter()
+                    .zip(self.prev_mask.iter())
+                    .filter(|&(a, b)| a != b)
+                    .count() as u64;
+                m.mask_flips.push(flips);
+                self.prev_mask = cur;
+            } else if !cur.is_empty() {
+                self.prev_mask = cur;
+            }
+        }
+        if opts.verbose {
+            eprintln!(
+                "[{}] epoch {}: test acc {:.4} train acc {:.4} overflow {}",
+                backend.name(),
+                self.epochs_done(),
+                m.accuracy.last().unwrap(),
+                m.train_accuracy.last().unwrap(),
+                ep.overflow
+            );
+        }
+    }
+
+    /// Epochs trained so far (excludes the epoch-0 evaluation).
+    pub fn epochs_done(&self) -> usize {
+        self.metrics.train_accuracy.len()
+    }
+
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    pub fn finish(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+/// Run one on-device training session: epoch loop over the train set with
+/// an evaluation at every epoch boundary (epoch 0 = the pre-trained
+/// backbone — the paper's curves and "best during training" include it).
+pub fn run_training(backend: &mut dyn StepBackend, train: &Dataset,
+                    test: &Dataset, opts: &RunOptions) -> RunMetrics {
+    let mut progress = TrainProgress::start(backend, test, opts);
+    for _ in 0..opts.epochs {
+        progress.step_epoch(backend, train, test, opts);
+    }
+    progress.finish()
+}
+
+/// Aggregate of a seed sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub best: MeanStd,
+    pub runs: Vec<RunMetrics>,
+}
+
+/// Run `seeds.len()` independent runs (one per seed) as a [`Fleet`] and
+/// aggregate the Table I statistic.  The backbone is loaded **once** and
+/// shared read-only across all seed sessions (pre-fleet, every seed
+/// re-read the weight file and held its own copy); each session owns only
+/// its method state, so runs stay fully isolated.
+pub fn sweep_seeds(cfg: &ExperimentConfig, train: &Dataset, test: &Dataset,
+                   opts: &RunOptions, seeds: &[u32]) -> Result<SweepResult> {
+    let backbone = Backbone::load(&cfg.artifacts_dir, &cfg.model)?;
+    let mut fleet = Fleet::builder(backbone).options(opts.clone());
+    for &seed in seeds {
+        fleet = fleet.device(format!("seed-{seed}"), seed, plugin_for(cfg)?,
+                             train, test);
+    }
+    let report = fleet.run()?;
+    let bests = report.best_accuracies();
+    let runs: Vec<RunMetrics> =
+        report.devices.into_iter().map(|d| d.metrics).collect();
+    Ok(SweepResult { best: MeanStd::of(&bests), runs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StepOut;
+
+    /// A fake backend: predicts (i mod 10) wrongly until "trained" for k
+    /// steps, then always matches a fixed oracle function.
+    struct FakeBackend {
+        steps: usize,
+        threshold: usize,
+    }
+
+    impl StepBackend for FakeBackend {
+        fn train_step(&mut self, _img: &[i32], label: usize) -> StepOut {
+            self.steps += 1;
+            let mut logits = vec![0i32; 10];
+            logits[label] = 10;
+            StepOut { logits, overflow: 1 }
+        }
+        fn predict(&mut self, img: &[i32]) -> usize {
+            if self.steps >= self.threshold {
+                (img[0] as usize) % 10 // the "true" labelling
+            } else {
+                9 - (img[0] as usize) % 10
+            }
+        }
+        fn scores(&self) -> Option<&[Vec<i32>]> {
+            None
+        }
+        fn masks(&self) -> Option<&[Vec<i32>]> {
+            None
+        }
+        fn theta(&self) -> Option<i32> {
+            None
+        }
+        fn name(&self) -> &str {
+            "fake"
+        }
+    }
+
+    fn fake_dataset(n: usize) -> Dataset {
+        // image[0] encodes the label (×2 so the >>1 mapping recovers it).
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let label = (i % 10) as u8;
+            let mut img = vec![0u8; 4];
+            img[0] = label * 2;
+            images.extend(img);
+            labels.push(label);
+        }
+        Dataset { n, c: 1, h: 2, w: 2, images, labels }
+    }
+
+    #[test]
+    fn run_training_records_epochs_and_improvement() {
+        let train = fake_dataset(20);
+        let test = fake_dataset(10);
+        let mut b = FakeBackend { steps: 0, threshold: 20 };
+        let opts = RunOptions {
+            epochs: 2, limit: 0, track_pruning: true, verbose: false,
+            eval_batch: 1,
+        };
+        let m = run_training(&mut b, &train, &test, &opts);
+        assert_eq!(m.accuracy.len(), 3, "epoch0 + 2 epochs");
+        assert!(m.accuracy[0] < 0.2, "untrained fake is wrong");
+        assert_eq!(m.accuracy[2], 1.0, "after 20 steps the fake is perfect");
+        assert_eq!(m.overflow, vec![20, 20]);
+        assert_eq!(m.best_accuracy(), 1.0);
+        assert_eq!(m.train_accuracy.len(), 2);
+        assert_eq!(m.train_accuracy[0], 1.0, "train logits always 'correct'");
+        assert_eq!(m.steps, vec![20, 20], "executed steps recorded per epoch");
+        assert_eq!(m.total_steps(), 40);
+    }
+
+    #[test]
+    fn limit_caps_samples() {
+        let train = fake_dataset(50);
+        let test = fake_dataset(50);
+        let mut b = FakeBackend { steps: 0, threshold: 5 };
+        let opts = RunOptions {
+            epochs: 1, limit: 5, track_pruning: false, verbose: false,
+            eval_batch: 1,
+        };
+        let m = run_training(&mut b, &train, &test, &opts);
+        assert_eq!(b.steps, 5);
+        assert_eq!(m.accuracy.len(), 2);
+        assert_eq!(m.total_steps(), 5);
+    }
+
+    #[test]
+    fn batched_evaluation_matches_per_sample() {
+        // The default StepBackend::predict_batch is the per-sample loop, so
+        // chunking itself (including the remainder chunk) must not change
+        // predictions or accuracy.
+        let test = fake_dataset(23);
+        for batch in [1usize, 2, 7, 23, 64] {
+            let mut a = FakeBackend { steps: 0, threshold: 0 };
+            let mut b = FakeBackend { steps: 0, threshold: 0 };
+            let per_sample = predict_batched(&mut a, &test, 0, 1);
+            let batched = predict_batched(&mut b, &test, 0, batch);
+            assert_eq!(per_sample, batched, "batch={batch}");
+            assert_eq!(
+                evaluate(&mut a, &test, 0),
+                evaluate_batched(&mut b, &test, 0, batch),
+                "batch={batch}"
+            );
+        }
+        let mut e = FakeBackend { steps: 0, threshold: 0 };
+        assert_eq!(evaluate_batched(&mut e, &fake_dataset(0), 0, 8), 0.0,
+                   "empty dataset evaluates to 0.0, no panic");
+    }
+
+    #[test]
+    fn train_progress_is_bit_identical_to_run_training() {
+        // Interleavable epoch stepping must reproduce the one-shot loop.
+        let train = fake_dataset(20);
+        let test = fake_dataset(10);
+        let opts = RunOptions {
+            epochs: 3, limit: 0, track_pruning: true, verbose: false,
+            eval_batch: 4,
+        };
+        let mut a = FakeBackend { steps: 0, threshold: 20 };
+        let whole = run_training(&mut a, &train, &test, &opts);
+        let mut b = FakeBackend { steps: 0, threshold: 20 };
+        let mut progress = TrainProgress::start(&mut b, &test, &opts);
+        for _ in 0..opts.epochs {
+            progress.step_epoch(&mut b, &train, &test, &opts);
+        }
+        assert_eq!(progress.epochs_done(), 3);
+        let stepped = progress.finish();
+        assert_eq!(whole.accuracy, stepped.accuracy);
+        assert_eq!(whole.overflow, stepped.overflow);
+        assert_eq!(whole.steps, stepped.steps);
+    }
+}

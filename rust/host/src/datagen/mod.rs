@@ -1,0 +1,748 @@
+//! In-process procedural dataset generation — the native port of
+//! `python/compile/dataset.py` (RotDigits / RotPatterns).
+//!
+//! The paper's experiment is *distribution drift by rotation*: pre-train
+//! upright, adapt on-device to the same classes under an arbitrary
+//! rotation.  This module synthesizes those datasets directly in Rust, so
+//! `priot fleet` / `priot serve` drift traces (`drift dev0 60`), the test
+//! suite, and the benches all run from a bare checkout — no `make
+//! artifacts`, no Python toolchain.
+//!
+//! ## Bit-for-bit parity with the Python generator
+//!
+//! Generated samples are **byte-identical** to `compile.dataset` for any
+//! `(task, n, seed, angle)` tuple.  Like `prng::XorShift32` (the score-init
+//! RNG mirrored in `intnet.py`), both sides are written against portable
+//! primitives:
+//!
+//! * [`PortableRng`] — SplitMix64 drawn as a counter (draw `k` mixes
+//!   `seed + (k+1)*GAMMA`), so numpy vectorizes draw blocks while this
+//!   port consumes the identical sequence one scalar at a time.
+//! * [`portable`] — polynomial `sin`/`cos`/`exp`/`tanh` kernels built
+//!   from IEEE-754 exactly-rounded ops only (`+ - * /`, `sqrt`, `floor`).
+//!   libm transcendentals are never called: numpy's SIMD kernels and
+//!   glibc can disagree in the last ulp, which a byte-level contract
+//!   cannot tolerate.
+//! * Gaussian-ish noise is Irwin–Hall (four uniforms, variance
+//!   normalized); shuffles are Fisher–Yates over `raw % bound`; the digit
+//!   stroke skeletons are frozen literals ([`strokes::DIGIT_STROKES`])
+//!   shared verbatim with the Python module.
+//!
+//! The contract is pinned by golden fixtures generated once from the
+//! Python side (`python -m compile.goldens` →
+//! `rust/cli/tests/fixtures/datagen/`) and asserted byte-for-byte by
+//! `rust/cli/tests/datagen.rs`.  Any change to the math here or in
+//! `dataset.py` must regenerate those fixtures.
+//!
+//! ## Entry points
+//!
+//! * [`generate`] — `(task, n, seed, angle)` → a [`Dataset`] of u8 pixels
+//!   (the device maps them to int8 activations via `p >> 1`, exactly like
+//!   artifact data — see [`crate::serial::u8_to_i32_pixels`]).
+//! * [`device_seed`] — the canonical seed for an on-device train/test set
+//!   at a given angle, shared with `aot.py` so generated data and
+//!   artifact files coincide at every angle.
+//! * [`Task`] — the two dataset families and their geometry.
+//! * [`fnv1a64`] / [`dataset_hash`] — the fixture-hash function used by
+//!   the golden-parity tests and the serve round-trip checks.
+//!
+//! The resolution layer that decides *when* to generate instead of
+//! loading artifacts lives in [`crate::data`] ([`crate::data::DataSource`]).
+
+mod strokes;
+
+pub use strokes::DIGIT_STROKES;
+
+use anyhow::{bail, Result};
+
+use crate::serial::Dataset;
+
+// ---------------------------------------------------------------------------
+// Portable math kernels (bit-identical to compile.dataset)
+// ---------------------------------------------------------------------------
+
+/// Polynomial transcendentals over exactly-rounded IEEE-754 ops.  Every
+/// constant and the evaluation order mirror `python/compile/dataset.py`
+/// verbatim — do not "simplify" an expression here without changing the
+/// Python side and regenerating the golden fixtures.
+pub mod portable {
+    pub const TWO_PI: f64 = 6.283185307179586;
+    pub const INV_TWO_PI: f64 = 0.15915494309189535;
+    pub const RAD_PER_DEG: f64 = 0.017453292519943295;
+    pub const LN2: f64 = 0.6931471805599453;
+    pub const LOG2E: f64 = 1.4426950408889634;
+    /// sqrt(3): normalizes the Irwin–Hall(4) sum to unit variance.
+    pub const NOISE_NORM: f64 = 1.7320508075688772;
+    /// 2^-53 — top-53-bit uniform scaling.
+    pub const U53: f64 = 1.0 / 9007199254740992.0;
+
+    const SIN_COEFFS: [f64; 9] = [
+        -8.22063524662433e-18,   // 1/19!
+        2.8114572543455206e-15,  // 1/17!
+        -7.647163731819816e-13,  // 1/15!
+        1.6059043836821613e-10,  // 1/13!
+        -2.505210838544172e-08,  // 1/11!
+        2.7557319223985893e-06,  // 1/9!
+        -0.0001984126984126984,  // 1/7!
+        0.008333333333333333,    // 1/5!
+        -0.16666666666666666,    // 1/3!
+    ];
+
+    const COS_COEFFS: [f64; 10] = [
+        4.110317623312165e-19,   // 1/20!
+        -1.5619206968586225e-16, // 1/18!
+        4.779477332387385e-14,   // 1/16!
+        -1.1470745597729725e-11, // 1/14!
+        2.08767569878681e-09,    // 1/12!
+        -2.755731922398589e-07,  // 1/10!
+        2.48015873015873e-05,    // 1/8!
+        -0.001388888888888889,   // 1/6!
+        0.041666666666666664,    // 1/4!
+        -0.5,                    // 1/2!
+    ];
+
+    const EXP_COEFFS: [f64; 13] = [
+        2.08767569878681e-09,   // 1/12!
+        2.505210838544172e-08,  // 1/11!
+        2.755731922398589e-07,  // 1/10!
+        2.7557319223985893e-06, // 1/9!
+        2.48015873015873e-05,   // 1/8!
+        0.0001984126984126984,  // 1/7!
+        0.001388888888888889,   // 1/6!
+        0.008333333333333333,   // 1/5!
+        0.041666666666666664,   // 1/4!
+        0.16666666666666666,    // 1/3!
+        0.5,                    // 1/2!
+        1.0,                    // 1/1!
+        1.0,                    // 1/0!
+    ];
+
+    /// Portable sine: range-reduce to `[-pi, pi]`, odd Taylor through y^19.
+    pub fn p_sin(x: f64) -> f64 {
+        let k = (x * INV_TWO_PI + 0.5).floor();
+        let y = x - k * TWO_PI;
+        let y2 = y * y;
+        let mut p = SIN_COEFFS[0];
+        for &c in &SIN_COEFFS[1..] {
+            p = p * y2 + c;
+        }
+        y + y * y2 * p
+    }
+
+    /// Portable cosine: range-reduce to `[-pi, pi]`, even Taylor through
+    /// y^20.
+    pub fn p_cos(x: f64) -> f64 {
+        let k = (x * INV_TWO_PI + 0.5).floor();
+        let y = x - k * TWO_PI;
+        let y2 = y * y;
+        let mut p = COS_COEFFS[0];
+        for &c in &COS_COEFFS[1..] {
+            p = p * y2 + c;
+        }
+        1.0 + y2 * p
+    }
+
+    /// `2^k` for exponents in the normal f64 range — an exact value, so
+    /// multiplying by it never rounds (only overflows/underflows).
+    fn exp2i(k: i64) -> f64 {
+        debug_assert!((-1022..=1023).contains(&k), "exp2i exponent {k}");
+        f64::from_bits(((1023 + k) as u64) << 52)
+    }
+
+    /// Portable exp: `2^k * poly(r)` with `r = x - k*ln2`, Taylor through
+    /// r^12.  The scaling is split into two exact power-of-two factors so
+    /// the full `np.ldexp` range is matched — overflow saturates to ∞ and
+    /// deep underflow to 0/subnormals exactly like the Python kernel,
+    /// not just over the renderer's bounded inputs.
+    pub fn p_exp(x: f64) -> f64 {
+        let k = (x * LOG2E + 0.5).floor();
+        let r = x - k * LN2;
+        let mut p = EXP_COEFFS[0];
+        for &c in &EXP_COEFFS[1..] {
+            p = p * r + c;
+        }
+        // Beyond ±2044 the result is definitively 0/∞ for any mantissa;
+        // inside, each half-exponent is a normal power of two, the first
+        // multiply stays exact, and the second rounds at most once —
+        // exactly what one correctly-rounded ldexp does.
+        let k = (k as i64).clamp(-2044, 2044);
+        let k1 = k / 2;
+        p * exp2i(k1) * exp2i(k - k1)
+    }
+
+    /// Portable tanh via [`p_exp`]: `(e^{2x} - 1) / (e^{2x} + 1)`.
+    pub fn p_tanh(x: f64) -> f64 {
+        let t = p_exp(x + x);
+        (t - 1.0) / (t + 1.0)
+    }
+}
+
+use portable::{p_cos, p_exp, p_sin, p_tanh, NOISE_NORM, RAD_PER_DEG, TWO_PI, U53};
+
+// ---------------------------------------------------------------------------
+// Portable PRNG (SplitMix64 as a counter generator)
+// ---------------------------------------------------------------------------
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// SplitMix64 drawn as a counter: draw `k` (0-based, across the whole
+/// stream) mixes `seed + (k+1)*GAMMA`.  The Python generator vectorizes
+/// blocks of draws; this port consumes the identical sequence one scalar
+/// at a time.
+#[derive(Clone, Debug)]
+pub struct PortableRng {
+    seed: u64,
+    count: u64,
+}
+
+impl PortableRng {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, count: 0 }
+    }
+
+    /// The next raw u64 draw.
+    #[inline]
+    pub fn raw(&mut self) -> u64 {
+        self.count += 1;
+        let mut z = self.seed.wrapping_add(self.count.wrapping_mul(GAMMA));
+        z ^= z >> 30;
+        z = z.wrapping_mul(MIX1);
+        z ^= z >> 27;
+        z = z.wrapping_mul(MIX2);
+        z ^ (z >> 31)
+    }
+
+    /// One uniform in `[0, 1)` — top 53 bits scaled by 2^-53.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.raw() >> 11) as f64 * U53
+    }
+
+    /// One uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// One Irwin–Hall(4) noise value: ~N(0, scale^2), 4 draws.
+    #[inline]
+    pub fn noise(&mut self, scale: f64) -> f64 {
+        let u0 = self.f64();
+        let u1 = self.f64();
+        let u2 = self.f64();
+        let u3 = self.f64();
+        (u0 + u1 + u2 + u3 - 2.0) * NOISE_NORM * scale
+    }
+
+    /// One draw in `[0, bound)` (modulo; the tiny bias is irrelevant and
+    /// identical across languages, which is what matters).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.raw() % bound
+    }
+
+    /// Fisher–Yates permutation of `0..n` (n-1 draws).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut arr: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            arr.swap(i, j);
+        }
+        arr
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+fn clip(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+fn sign(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Rasterize one jittered, rotated digit into `out` (`size * size` u8).
+fn render_digit(rng: &mut PortableRng, cls: usize, size: usize,
+                angle_deg: f64, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), size * size);
+    // Random affine jitter: scale, shear, translate + per-sample tilt (the
+    // tilt is part of the base distribution — it is what gives the
+    // backbone its partial rotation tolerance before transfer).
+    let scale = rng.uniform(0.82, 1.05);
+    let shear = rng.uniform(-0.12, 0.12);
+    let tilt = rng.uniform(-14.0, 14.0);
+    let shift_x = rng.uniform(-0.06, 0.06);
+    let shift_y = rng.uniform(-0.06, 0.06);
+    let thick = rng.uniform(0.045, 0.075);
+    let a = (angle_deg + tilt) * RAD_PER_DEG;
+    let co = p_cos(a);
+    let si = p_sin(a);
+    // rot(a) @ [[scale, shear], [0, scale]], written out.
+    let a00 = co * scale;
+    let a01 = co * shear - si * scale;
+    let a10 = si * scale;
+    let a11 = si * shear + co * scale;
+
+    let fsize = size as f64;
+    let mut img = vec![0.0f64; size * size];
+    for stroke in DIGIT_STROKES[cls] {
+        let npts = stroke.len();
+        let jit: Vec<f64> = (0..npts * 2).map(|_| rng.noise(0.012)).collect();
+        let mut tx = vec![0.0f64; npts];
+        let mut ty = vec![0.0f64; npts];
+        for (i, &(sx, sy)) in stroke.iter().enumerate() {
+            let ux = sx - 0.5 + jit[2 * i];
+            let uy = sy - 0.5 + jit[2 * i + 1];
+            tx[i] = ux * a00 + uy * a01 + 0.5 + shift_x;
+            ty[i] = ux * a10 + uy * a11 + 0.5 + shift_y;
+        }
+        // Distance field to the polyline: min over segments of the clamped
+        // point-segment distance.
+        for yy in 0..size {
+            for xx in 0..size {
+                let px = (xx as f64 + 0.5) / fsize;
+                let py = (yy as f64 + 0.5) / fsize;
+                let mut d2min = f64::INFINITY;
+                for s in 0..npts - 1 {
+                    let ax = tx[s];
+                    let ay = ty[s];
+                    let abx = tx[s + 1] - ax;
+                    let aby = ty[s + 1] - ay;
+                    let mut denom = abx * abx + aby * aby;
+                    if denom < 1e-9 {
+                        denom = 1e-9;
+                    }
+                    let t = clip(
+                        ((px - ax) * abx + (py - ay) * aby) / denom, 0.0, 1.0,
+                    );
+                    let dx = px - (ax + t * abx);
+                    let dy = py - (ay + t * aby);
+                    let d2 = dx * dx + dy * dy;
+                    if d2 < d2min {
+                        d2min = d2;
+                    }
+                }
+                let v = clip(1.35 - d2min.sqrt() / thick, 0.0, 1.0);
+                let cell = &mut img[yy * size + xx];
+                if v > *cell {
+                    *cell = v;
+                }
+            }
+        }
+    }
+    for cell in img.iter_mut() {
+        *cell += rng.noise(0.045); // sensor noise
+    }
+    for (o, &v) in out.iter_mut().zip(img.iter()) {
+        *o = (clip(v, 0.0, 1.0) * 255.0) as u8;
+    }
+}
+
+/// One 3-channel procedural pattern into `out` (`3 * size * size` u8,
+/// CHW order).
+fn render_pattern(rng: &mut PortableRng, cls: usize, size: usize,
+                  angle_deg: f64, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), 3 * size * size);
+    let a = (angle_deg + rng.uniform(-5.0, 5.0)) * RAD_PER_DEG;
+    let co = p_cos(a);
+    let si = p_sin(a);
+    let f = rng.uniform(2.5, 4.5); // frequency jitter
+    let ph = rng.uniform(0.0, TWO_PI); // phase jitter
+    let fsize = size as f64;
+    let half = fsize / 2.0;
+    // The per-sample extra draw of class 6 must happen at the same stream
+    // position as in Python (after f/ph, before the tint jitter).
+    let blob_k = if cls == 6 { rng.uniform(9.0, 14.0) } else { 0.0 };
+
+    let mut base = vec![0.0f64; size * size];
+    for yy in 0..size {
+        for xx in 0..size {
+            let u = (xx as f64 - half + 0.5) / fsize;
+            let v = (yy as f64 - half + 0.5) / fsize;
+            let ur = co * u - si * v;
+            let vr = si * u + co * v;
+            let r2 = ur * ur + vr * vr;
+            base[yy * size + xx] = match cls {
+                0 => {
+                    // horizontal stripes
+                    let w = TWO_PI * f;
+                    p_sin(w * vr + ph)
+                }
+                1 => {
+                    // vertical stripes
+                    let w = TWO_PI * f;
+                    p_sin(w * ur + ph)
+                }
+                2 => {
+                    // checkerboard
+                    let w = TWO_PI * f;
+                    sign(p_sin(w * ur + ph)) * sign(p_sin(w * vr + ph))
+                }
+                3 => {
+                    // concentric rings
+                    let w = TWO_PI * (1.8 * f);
+                    p_sin(w * r2.sqrt() + ph)
+                }
+                4 => {
+                    // diagonal stripes
+                    let w = TWO_PI * f;
+                    p_sin(w * (ur + vr) + ph)
+                }
+                5 => {
+                    // radial fan: sin(6*theta + ph) via angle addition
+                    if r2 > 0.0 {
+                        let r = r2.sqrt();
+                        let c1 = ur / r;
+                        let s1 = vr / r;
+                        let mut c6 = c1;
+                        let mut s6 = s1;
+                        for _ in 0..5 {
+                            let cn = c6 * c1 - s6 * s1;
+                            let sn = s6 * c1 + c6 * s1;
+                            c6 = cn;
+                            s6 = sn;
+                        }
+                        s6 * p_cos(ph) + c6 * p_sin(ph)
+                    } else {
+                        0.0
+                    }
+                }
+                6 => 2.0 * p_exp(-r2 * blob_k) - 1.0, // centered blob
+                7 => p_tanh(3.0 * (ur + vr)),         // corner gradient
+                8 => {
+                    // square outline
+                    let m = ur.abs().max(vr.abs());
+                    clip(1.0 - 14.0 * (m - 0.28).abs(), -1.0, 1.0)
+                }
+                _ => {
+                    // cross
+                    let m = ur.abs().min(vr.abs());
+                    clip(1.0 - 12.0 * m, -1.0, 1.0)
+                }
+            };
+        }
+    }
+    // Class-tinted colorization with per-sample jitter.
+    let tint_base = [
+        (cls * 53 % 97) as f64 / 97.0,
+        (cls * 31 % 89) as f64 / 89.0,
+        (cls * 71 % 83) as f64 / 83.0,
+    ];
+    let mut tint = [0.0f64; 3];
+    for ch in 0..3 {
+        let mut tc = tint_base[ch] + rng.uniform(-0.15, 0.15);
+        if tc < 0.05 {
+            tc = 0.05;
+        }
+        if tc > 1.0 {
+            tc = 1.0;
+        }
+        tint[ch] = tc;
+    }
+    for ch in 0..3 {
+        for (o, &b) in out[ch * size * size..(ch + 1) * size * size]
+            .iter_mut()
+            .zip(base.iter())
+        {
+            let v = (b * 0.5 + 0.5) * tint[ch] + rng.noise(0.05);
+            *o = (clip(v, 0.0, 1.0) * 255.0) as u8;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataset assembly
+// ---------------------------------------------------------------------------
+
+/// The two procedural dataset families (the rotated-MNIST / rotated-CIFAR
+/// stand-ins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// 28x28x1 stroke digits ("digits" stems, the tinycnn input).
+    Digits,
+    /// 32x32x3 procedural textures ("patterns" stems, the VGG input).
+    Patterns,
+}
+
+impl Task {
+    /// Parse a dataset stem prefix (`digits` / `patterns`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "digits" => Task::Digits,
+            "patterns" => Task::Patterns,
+            other => bail!("unknown dataset {other} (want digits|patterns)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Digits => "digits",
+            Task::Patterns => "patterns",
+        }
+    }
+
+    /// Image geometry `(c, h, w)`.
+    pub fn chw(&self) -> (usize, usize, usize) {
+        match self {
+            Task::Digits => (1, 28, 28),
+            Task::Patterns => (3, 32, 32),
+        }
+    }
+}
+
+/// Train/test split selector for [`device_seed`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "train" => Split::Train,
+            "test" => Split::Test,
+            other => bail!("unknown split {other} (want train|test)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Test => "test",
+        }
+    }
+}
+
+/// Canonical seed for an on-device (train/test, angle) set — shared with
+/// `compile.dataset.device_seed` so generated data and artifact files
+/// coincide for every angle.
+pub fn device_seed(task: Task, split: Split, angle: u32) -> u64 {
+    let task_id: u64 = match task {
+        Task::Digits => 0,
+        Task::Patterns => 1,
+    };
+    let split_id: u64 = match split {
+        Split::Train => 0,
+        Split::Test => 1,
+    };
+    3000 + task_id * 6000 + split_id * 1000 + angle as u64
+}
+
+/// Generate `n` samples of `task` rotated by `angle_deg` — deterministic
+/// in `seed` and byte-identical to the Python generator for the same
+/// tuple.  Labels cycle the 10 classes, shuffled.
+pub fn generate(task: Task, n: usize, seed: u64, angle_deg: f64) -> Dataset {
+    let (c, h, w) = task.chw();
+    let mut rng = PortableRng::new(seed);
+    let perm = rng.permutation(n);
+    let labels: Vec<u8> = perm.iter().map(|&p| (p % 10) as u8).collect();
+    let len = c * h * w;
+    let mut images = vec![0u8; n * len];
+    for (i, &label) in labels.iter().enumerate() {
+        let out = &mut images[i * len..(i + 1) * len];
+        match task {
+            Task::Digits => {
+                render_digit(&mut rng, label as usize, h, angle_deg, out)
+            }
+            Task::Patterns => {
+                render_pattern(&mut rng, label as usize, h, angle_deg, out)
+            }
+        }
+    }
+    Dataset { n, c, h, w, images, labels }
+}
+
+/// Generate the train/test pair for a device distribution at `angle`
+/// using the canonical [`device_seed`] convention.
+pub fn generate_pair(task: Task, n_train: usize, n_test: usize, angle: u32)
+                     -> (Dataset, Dataset) {
+    let train = generate(task, n_train,
+                         device_seed(task, Split::Train, angle),
+                         angle as f64);
+    let test = generate(task, n_test,
+                        device_seed(task, Split::Test, angle),
+                        angle as f64);
+    (train, test)
+}
+
+// ---------------------------------------------------------------------------
+// Fixture hashing
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit — the fixture-hash function (`compile.goldens` writes the
+/// same hashes from Python).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Hash of a dataset's payload (image bytes, then label bytes).
+pub fn dataset_hash(ds: &Dataset) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in ds.images.iter().chain(ds.labels.iter()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_reference_vectors() {
+        // SplitMix64 with seed 0: canonical first outputs (Steele et al.;
+        // also asserted against compile.dataset in the pytest suite).
+        let mut r = PortableRng::new(0);
+        assert_eq!(r.raw(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.raw(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(r.raw(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn uniforms_in_range_and_deterministic() {
+        let mut a = PortableRng::new(7);
+        let mut b = PortableRng::new(7);
+        for _ in 0..1000 {
+            let x = a.f64();
+            assert!((0.0..1.0).contains(&x));
+            assert_eq!(x.to_bits(), b.f64().to_bits());
+        }
+        let mut c = PortableRng::new(8);
+        assert_ne!(a.f64().to_bits(), c.f64().to_bits());
+    }
+
+    #[test]
+    fn noise_is_centered() {
+        let mut r = PortableRng::new(3);
+        let n = 20_000;
+        let vals: Vec<f64> = (0..n).map(|_| r.noise(0.045)).collect();
+        let mean: f64 = vals.iter().sum::<f64>() / n as f64;
+        let var: f64 =
+            vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / n as f64;
+        assert!(mean.abs() < 0.002, "mean {mean}");
+        let sigma = var.sqrt();
+        assert!((0.035..0.055).contains(&sigma), "sigma {sigma} not ~0.045");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = PortableRng::new(11);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(p, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn portable_kernels_are_accurate() {
+        // Parity comes from identical bits, but the kernels must also be
+        // *accurate* enough that the rendered geometry is right.
+        let mut x = -40.0;
+        while x < 40.0 {
+            assert!((p_sin(x) - x.sin()).abs() < 1e-8, "sin({x})");
+            assert!((p_cos(x) - x.cos()).abs() < 1e-8, "cos({x})");
+            x += 0.0137;
+        }
+        let mut x = -9.0;
+        while x < 9.0 {
+            let rel = (p_exp(x) / x.exp() - 1.0).abs();
+            assert!(rel < 1e-12, "exp({x}) rel {rel}");
+            assert!((p_tanh(x / 3.0) - (x / 3.0).tanh()).abs() < 1e-12);
+            x += 0.0171;
+        }
+        // Out-of-range arguments saturate like np.ldexp — the kernel is
+        // public, so the contract must hold beyond the renderer's inputs.
+        assert_eq!(p_exp(-800.0), 0.0);
+        assert_eq!(p_exp(800.0), f64::INFINITY);
+        assert_eq!(p_exp(-5000.0), 0.0);
+        assert_eq!(p_exp(5000.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn generate_shapes_and_labels() {
+        for (task, c, h, w) in
+            [(Task::Digits, 1, 28, 28), (Task::Patterns, 3, 32, 32)]
+        {
+            let ds = generate(task, 20, 42, 30.0);
+            assert_eq!((ds.n, ds.c, ds.h, ds.w), (20, c, h, w));
+            assert_eq!(ds.images.len(), 20 * c * h * w);
+            assert_eq!(ds.labels.len(), 20);
+            // labels cycle 0..10: each class appears exactly twice
+            let mut counts = [0usize; 10];
+            for &l in &ds.labels {
+                counts[l as usize] += 1;
+            }
+            assert_eq!(counts, [2; 10], "{task:?}");
+            // pixels must not be blank or saturated
+            let mean: f64 = ds.images.iter().map(|&p| p as f64).sum::<f64>()
+                / ds.images.len() as f64;
+            assert!((5.0..250.0).contains(&mean), "{task:?} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_seed_sensitive() {
+        let a = generate(Task::Digits, 8, 5, 45.0);
+        let b = generate(Task::Digits, 8, 5, 45.0);
+        assert_eq!(a, b);
+        let c = generate(Task::Digits, 8, 6, 45.0);
+        assert_ne!(a, c, "different seed, different bytes");
+        let d = generate(Task::Digits, 8, 5, 46.0);
+        assert_ne!(a, d, "different angle, different bytes");
+    }
+
+    #[test]
+    fn device_seed_convention() {
+        // Pinned: aot.py writes artifact files with these exact seeds, so
+        // generated data and artifacts coincide per (task, split, angle).
+        assert_eq!(device_seed(Task::Digits, Split::Train, 30), 3030);
+        assert_eq!(device_seed(Task::Digits, Split::Test, 30), 4030);
+        assert_eq!(device_seed(Task::Digits, Split::Train, 45), 3045);
+        assert_eq!(device_seed(Task::Patterns, Split::Train, 30), 9030);
+        assert_eq!(device_seed(Task::Patterns, Split::Test, 60), 10060);
+    }
+
+    #[test]
+    fn fnv_reference_vector() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        let ds = generate(Task::Digits, 2, 1, 0.0);
+        let mut payload = ds.images.clone();
+        payload.extend_from_slice(&ds.labels);
+        assert_eq!(dataset_hash(&ds), fnv1a64(&payload));
+    }
+
+    #[test]
+    fn generate_pair_uses_canonical_seeds() {
+        let (train, test) = generate_pair(Task::Digits, 4, 4, 60);
+        assert_eq!(train,
+                   generate(Task::Digits, 4,
+                            device_seed(Task::Digits, Split::Train, 60),
+                            60.0));
+        assert_eq!(test,
+                   generate(Task::Digits, 4,
+                            device_seed(Task::Digits, Split::Test, 60),
+                            60.0));
+        assert_ne!(train, test);
+    }
+}

@@ -1,0 +1,55 @@
+//! # priot-host — the std-side layer of the PRIOT stack
+//!
+//! Everything that needs an operating system lives here, layered over the
+//! freestanding [`priot_core`] crate (tensors, quantized engine, method
+//! plugins — `no_std` + `alloc`, the code a Pico port would carry):
+//!
+//! * **Data**: procedural dataset generation ([`datagen`]), dataset/config
+//!   resolution ([`data`], [`config`]), binary file IO ([`serial`]).
+//! * **Execution**: sessions and fleets over the core engine
+//!   ([`session`]), the PJRT backend behind the `pjrt` feature
+//!   ([`runtime`]), the experiment coordinator ([`coordinator`]).
+//! * **Serving**: the wire protocol ([`proto`]), the long-lived fleet
+//!   service ([`serve`] = [`session::serve`]), durable per-device state
+//!   ([`store`]).
+//! * **Analysis**: the static overflow-soundness auditor ([`audit`]), the
+//!   Pico cost model ([`pico`]), metrics/report generation ([`metrics`],
+//!   [`report`]), property-test scaffolding ([`ptest`]).
+//!
+//! ## Layering contract
+//!
+//! Dependencies point one way: plugins and numerics live in `priot-core`;
+//! transports, stores, threads, files, and clocks live here.  The core
+//! modules are re-exported below under their original names
+//! ([`tensor`], [`quant`], [`engine`], [`methods`], [`spec`], [`prng`],
+//! [`serial`]) so host code and downstream crates use one consistent
+//! path set; the [`methods`], [`quant`] and [`serial`] re-exports are
+//! thin shims that add the host-only pieces (the `StepBackend` executor
+//! trait, file loading) on top of the core items.
+//!
+//! Core errors ([`priot_core::error::Error`]) implement
+//! `core::error::Error`, so they compose with [`anyhow`] at this seam via
+//! plain `?` — no adapter layer.
+
+pub use priot_core::{engine, prng, spec, tensor};
+pub use priot_core::INT8_MAX;
+
+pub mod audit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod datagen;
+pub mod methods;
+pub mod metrics;
+pub mod pico;
+pub mod proto;
+pub mod ptest;
+pub mod quant;
+pub mod report;
+#[cfg(feature = "pjrt")]
+pub mod runtime;
+pub mod serial;
+pub mod session;
+pub mod store;
+
+pub use session::serve;

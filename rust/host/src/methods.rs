@@ -1,0 +1,124 @@
+//! Host-side view of the training-method layer.
+//!
+//! The plugins themselves ([`MethodPlugin`], [`Niti`], [`Priot`],
+//! [`PriotS`]) and the method descriptions ([`Method`], [`Selection`],
+//! [`MethodSpec`]) are `no_std` and live in [`priot_core::methods`] —
+//! re-exported here wholesale.  This shim adds the two pieces that need an
+//! OS: the [`StepBackend`] executor trait (checkpoints to filesystem
+//! paths) and the config→plugin bridge [`plugin_for`].
+
+pub use priot_core::methods::*;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::engine::StepOut;
+
+/// One training backend: consumes (image, label) pairs, produces logits and
+/// the overflow probe; owns all mutable training state (weights or scores).
+pub trait StepBackend {
+    /// One on-device training step (batch 1).
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut;
+    /// Inference for evaluation.
+    fn predict(&mut self, img: &[i32]) -> usize;
+    /// Batched inference (one sample per row of `imgs`).  The default is
+    /// the per-sample loop so every backend stays correct; the engine
+    /// executor overrides it with the batched forward (bit-identical —
+    /// asserted by `rust/cli/tests/serve.rs`).
+    fn predict_batch(&mut self, imgs: &crate::tensor::Mat) -> Vec<usize> {
+        let mut out = Vec::with_capacity(imgs.rows);
+        for bi in 0..imgs.rows {
+            out.push(self.predict(&imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]));
+        }
+        out
+    }
+    /// Current scores, if the method has them (analysis/checkpointing).
+    fn scores(&self) -> Option<&[Vec<i32>]>;
+    /// PRIOT-S existence masks, if any.
+    fn masks(&self) -> Option<&[Vec<i32>]>;
+    /// Pruning threshold θ, if the method prunes.
+    fn theta(&self) -> Option<i32>;
+    /// Backend label for logs.
+    fn name(&self) -> &str;
+    /// Persist the trained state (scores or updated weights).
+    fn save_state(&self, path: &std::path::Path) -> Result<()> {
+        bail!("{}: checkpointing not supported", path.display())
+    }
+    /// Restore state produced by [`Self::save_state`].
+    fn load_state(&mut self, path: &std::path::Path) -> Result<()> {
+        bail!("{}: checkpointing not supported", path.display())
+    }
+}
+
+/// Build the plugin named by an [`ExperimentConfig`] (the config/CLI
+/// bridge; programmatic callers construct plugins directly).
+pub fn plugin_for(cfg: &ExperimentConfig) -> Result<Box<dyn MethodPlugin>> {
+    Ok(match cfg.method {
+        Method::StaticNiti => Box::new(Niti::static_scale()),
+        Method::DynamicNiti => Box::new(Niti::dynamic()),
+        Method::Priot => Box::new(Priot::new().with_theta(cfg.theta)),
+        Method::PriotS => Box::new(
+            PriotS::new(cfg.frac_scored, cfg.selection).with_theta(cfg.theta),
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::prng::XorShift64;
+    use crate::quant::Scales;
+    use crate::spec::NetSpec;
+    use crate::tensor::Mat;
+    use priot_core::engine::Engine;
+
+    fn test_engine(seed: u64) -> (NetSpec, Engine) {
+        let spec = NetSpec::tinycnn();
+        let mut rng = XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+            })
+            .collect();
+        let e = Engine::new(spec.clone(), weights,
+                            Scales::default_for(spec.layers.len())).unwrap();
+        (spec, e)
+    }
+
+    fn cfg_for(method: &str, selection: &str) -> ExperimentConfig {
+        let mut c = Config::default();
+        c.set("method", method);
+        c.set("selection", selection);
+        c.set("frac_scored", "0.1");
+        ExperimentConfig::from_config(&c).unwrap()
+    }
+
+    #[test]
+    fn priot_s_plugin_mask_fraction_and_theta() {
+        let (spec, e) = test_engine(31);
+        let cfg = cfg_for("priot-s", "random");
+        let mut p = plugin_for(&cfg).unwrap();
+        p.init(&spec, &e.weights, cfg.seed).unwrap();
+        assert_eq!(p.theta(), Some(0));
+        let masks = p.masks().unwrap();
+        let total: usize = masks.iter().map(|m| m.len()).sum();
+        let ones: i64 = masks.iter().flat_map(|m| m.iter()).map(|&v| v as i64).sum();
+        let frac = ones as f64 / total as f64;
+        assert!((0.07..0.13).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn plugin_for_covers_every_method() {
+        for (m, want) in [("static-niti", "static-niti"),
+                          ("dynamic-niti", "dynamic-niti"),
+                          ("priot", "priot"),
+                          ("priot-s", "priot-s")] {
+            let cfg = cfg_for(m, "random");
+            assert_eq!(plugin_for(&cfg).unwrap().name(), want);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! `priot::proto` — the versioned wire protocol between fleet clients and
+//! a [`FleetServer`](crate::session::FleetServer).
+//!
+//! PR 2's serve front-end took requests over a bare in-process mpsc
+//! channel; real fleets of Pico-class devices talk over sockets and
+//! serial links, so the protocol now has a first-class boundary:
+//!
+//! * [`Request`] / [`Response`] — plain-data message types.  A `Register`
+//!   carries a [`MethodSpec`] (the serializable description of a training
+//!   method) and its datasets by value; everything else is scalars.
+//! * [`codec`] — the length-delimited binary codec: every frame starts
+//!   with a protocol version byte and decodes with the same
+//!   checked-length / exact-payload discipline as [`crate::serial`]
+//!   (truncated, trailing-byte, and bad-version frames are contextful
+//!   errors, never panics or garbage).
+//! * [`Transport`] — one framed, bidirectional connection.  Two
+//!   implementations: [`ChannelTransport`] (in-process, over mpsc — the
+//!   successor of the old raw-channel front door) and [`TcpTransport`]
+//!   (length-prefixed frames over a socket).  Both carry the *same*
+//!   encoded bytes, so responses are bit-identical across transports.
+//! * [`FleetClient`] — the typed client: `register` / `train` /
+//!   `predict` / `evaluate` / `drift` synchronous calls, plus
+//!   `submit`/`wait`/`poll` for pipelined use.  This is the only public
+//!   way to talk to a `FleetServer`.
+//!
+//! Every request carries a [`Priority`].  The server schedules a
+//! device's pending work highest-priority-first (predict > evaluate >
+//! train), so an interactive prediction is answered between training
+//! epochs instead of waiting behind them; see
+//! [`crate::session::serve`] for the scheduling rules.
+//!
+//! Protocol v2 (the durable-state revision) makes reconnecting clients
+//! first-class: a `Register` for a device the server already knows is a
+//! **resume** (acknowledged with `Registered { resumed: true }`),
+//! errors carry an [`ErrorKind`] so store faults are distinguishable
+//! from bad requests, and `Register`/`Drift` can carry drift-angle
+//! provenance that ends up in the device's durable snapshot
+//! ([`crate::store`]).
+
+pub mod codec;
+pub mod transport;
+
+mod client;
+
+pub use client::FleetClient;
+pub use transport::{ChannelTransport, TcpTransport, Transport};
+
+use std::sync::Arc;
+
+use crate::serial::Dataset;
+
+// The serializable method description is plain data plus plugin
+// materialization, so it lives in the `no_std` core crate
+// (`priot_core::methods`); re-exported here because the wire protocol is
+// its natural home for callers, and its codec (`codec::put_method` /
+// `Reader::method`) stays host-side with the rest of the framing.
+pub use priot_core::methods::MethodSpec;
+
+/// Scheduling class of a request.  Lower lane = served first: a device's
+/// pending work drains interactive → batch → background, FIFO within a
+/// lane.  Every request kind has a natural default
+/// ([`Request::priority`]); clients may override it (e.g. a trace replay
+/// pins everything to [`Priority::Background`] to preserve strict
+/// submission order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive: single-image predictions.
+    Interactive = 0,
+    /// Bounded batch work: dataset evaluations.
+    Batch = 1,
+    /// Long-running work: training, drift (data swaps ride with the
+    /// training stream so train → drift → train order is preserved).
+    Background = 2,
+}
+
+impl Priority {
+    /// Number of scheduling lanes.
+    pub const COUNT: usize = 3;
+
+    /// Lane index (0 = served first).
+    pub fn lane(self) -> usize {
+        self as usize
+    }
+
+    pub(crate) fn to_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Priority::Interactive),
+            1 => Some(Priority::Batch),
+            2 => Some(Priority::Background),
+            _ => None,
+        }
+    }
+}
+
+/// Failure class of a [`Response::Error`], so clients can distinguish a
+/// bad request from an infrastructure fault without parsing messages.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request itself failed: unknown device, invalid data, a method
+    /// error mid-op, a malformed frame, a full inflight window.
+    #[default]
+    Request,
+    /// The durable state layer failed: a snapshot was missing, corrupt,
+    /// or could not be read/written (see [`crate::store`]).
+    Store,
+    /// The server is shut down; nothing will execute this request.
+    Shutdown,
+}
+
+impl ErrorKind {
+    pub(crate) fn to_u8(self) -> u8 {
+        match self {
+            ErrorKind::Request => 0,
+            ErrorKind::Store => 1,
+            ErrorKind::Shutdown => 2,
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(ErrorKind::Request),
+            1 => Some(ErrorKind::Store),
+            2 => Some(ErrorKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One message into the fleet service.  Datasets travel as `Arc` so
+/// *building* and cloning requests is cheap on the client side; on the
+/// wire they are serialized by value — every transport, including the
+/// in-process channel, carries the same encoded bytes by design (that
+/// uniformity is what makes responses bit-identical across transports).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Add a device: the server builds a session over its shared backbone
+    /// after validating the device's data against the backbone spec.
+    ///
+    /// A `Register` for a device the server already knows — resident,
+    /// evicted to its state store, or recovered from a previous process —
+    /// is a **resume handshake**: the server keeps the device's state,
+    /// ignores the supplied datasets, and acknowledges with
+    /// [`Response::Registered`]`{ resumed: true }` (identity — seed and
+    /// method — must match, otherwise the register errors).  That makes
+    /// reconnecting clients first-class: replaying a trace's register
+    /// line after a connection drop or a server restart is safe.
+    Register {
+        device: String,
+        seed: u32,
+        method: MethodSpec,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+        /// Data provenance, when the client knows it (e.g. the trace's
+        /// symbolic rotation angle).  Recorded in the device's durable
+        /// snapshot; never interpreted by the server.
+        angle: Option<u32>,
+    },
+    /// Adapt for `epochs` epochs on the device's local train set.
+    Train { device: String, epochs: usize },
+    /// Classify one raw u8 image (the on-device `p >> 1` pixel mapping is
+    /// applied server-side).
+    Predict { device: String, image: Vec<u8> },
+    /// Top-1 accuracy over the device's local test set (batched forward).
+    Evaluate { device: String },
+    /// The device's local distribution drifted: swap its datasets.  Rides
+    /// the background lane, so it takes effect after the device's
+    /// previously queued training, preserving submission order.
+    Drift {
+        device: String,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+        /// Provenance of the drifted data, when known (see
+        /// [`Request::Register::angle`]).
+        angle: Option<u32>,
+    },
+}
+
+impl Request {
+    /// The device a request addresses.
+    pub fn device(&self) -> &str {
+        match self {
+            Request::Register { device, .. }
+            | Request::Train { device, .. }
+            | Request::Predict { device, .. }
+            | Request::Evaluate { device }
+            | Request::Drift { device, .. } => device,
+        }
+    }
+
+    /// The default scheduling class: predict > evaluate > train/drift.
+    pub fn priority(&self) -> Priority {
+        match self {
+            Request::Predict { .. } => Priority::Interactive,
+            Request::Evaluate { .. } => Priority::Batch,
+            Request::Register { .. }
+            | Request::Train { .. }
+            | Request::Drift { .. } => Priority::Background,
+        }
+    }
+}
+
+/// One message out of the fleet service.  Accuracies are carried as exact
+/// f64 bits, so a response decoded off a socket compares bit-identical to
+/// one produced in-process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// One completed [`Request::Register`].  `resumed` is the resume
+    /// acknowledgment: `true` means the device already existed (live in
+    /// the registry or rehydratable from the state store) and kept its
+    /// adapted state — the supplied datasets were ignored.
+    Registered { device: String, resumed: bool },
+    /// One completed [`Request::Train`]: epochs and **executed** steps.
+    TrainDone {
+        device: String,
+        epochs: usize,
+        steps: u64,
+        train_accuracy: f64,
+    },
+    Prediction { device: String, class: usize },
+    Evaluation { device: String, accuracy: f64, n: usize },
+    Drifted { device: String },
+    Error { device: String, kind: ErrorKind, message: String },
+}
+
+impl Response {
+    pub fn device(&self) -> &str {
+        match self {
+            Response::Registered { device, .. }
+            | Response::TrainDone { device, .. }
+            | Response::Prediction { device, .. }
+            | Response::Evaluation { device, .. }
+            | Response::Drifted { device }
+            | Response::Error { device, .. } => device,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error { .. })
+    }
+}

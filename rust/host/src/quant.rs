@@ -1,0 +1,32 @@
+//! Host-side view of the quantization layer: everything from
+//! [`priot_core::quant`], plus loading a scale table off disk.
+
+pub use priot_core::quant::*;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load and parse an `artifacts/<model>.scales.txt` scale table
+/// (the file-reading counterpart of [`Scales::from_text`], which is
+/// `no_std` and lives in the core crate).
+pub fn load_scales(path: &Path) -> Result<Scales> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading scales file {}", path.display()))?;
+    Ok(Scales::from_text(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_scales_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("priot_quant_shim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.scales.txt");
+        let s = Scales::default_for(3);
+        std::fs::write(&path, s.to_text()).unwrap();
+        assert_eq!(load_scales(&path).unwrap(), s);
+        assert!(load_scales(&dir.join("missing.txt")).is_err());
+    }
+}

@@ -1,0 +1,677 @@
+//! Bencher-style perf snapshots: run the kernel / serve measurement
+//! suites in-process, serialize the results as `BENCH_*.json`, and diff a
+//! run against a checked-in baseline — the repo's recorded perf
+//! trajectory (`priot bench`), so optimization PRs land with before/after
+//! numbers instead of anecdotes.
+//!
+//! The kernel suite mirrors the shapes of `benches/kernel.rs` (tinycnn
+//! conv/fc GEMMs, the vgg-ish mid layer, im2col); the serve suite times a
+//! small in-process fleet round (register → train → evaluate over the
+//! local transport).  Numbers are wall-clock and machine-dependent:
+//! snapshots record provenance plus the measuring machine
+//! ([`machine_context`] — OS, arch, cpu count, cpu model), so a diff
+//! against a baseline from different hardware is never mistaken for a
+//! regression.  A baseline whose `micros` are 0 is an unmeasured
+//! placeholder seed that diffs report as "no baseline"; running
+//! `priot bench --update .` on any machine with a toolchain replaces it
+//! with measured numbers stamped with that machine's context.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::prng::XorShift64;
+use crate::proto::MethodSpec;
+use crate::session::FleetServer;
+use crate::tensor::{gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+
+/// Snapshot schema version (bump on field changes).
+pub const SCHEMA: u32 = 1;
+
+/// Provenance string for snapshots produced by a real measurement run.
+pub const PROVENANCE_MEASURED: &str = "measured";
+/// Provenance of a checked-in placeholder with no real numbers yet.
+pub const PROVENANCE_SEED: &str = "unmeasured-seed";
+
+/// One measured entry: label + µs per iteration (+ Gmac/s where the work
+/// has a MAC count; 0.0 otherwise).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    pub label: String,
+    pub micros: f64,
+    pub gmacs: f64,
+}
+
+/// One suite's results (what a `BENCH_<suite>.json` file holds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchResults {
+    pub schema: u32,
+    pub suite: String,
+    pub provenance: String,
+    /// The measuring machine ([`machine_context`]); empty for snapshots
+    /// written before the field existed and for unmeasured seeds.
+    pub machine: String,
+    pub entries: Vec<BenchEntry>,
+}
+
+/// Best-effort description of the machine a measurement ran on — OS,
+/// architecture, logical cpu count, and cpu model where readable.
+/// Recorded in every measured snapshot so cross-machine diffs are
+/// recognizable as such.
+pub fn machine_context() -> String {
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(0);
+    let model = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|m| m.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown-cpu".to_string());
+    format!(
+        "{}-{}, {cpus} cpus, {model}",
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    )
+}
+
+fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+}
+
+/// Time `f` over `iters` iterations (plus warmup) and return (µs, Gmac/s).
+fn time_it(work_macs: u64, iters: u32, mut f: impl FnMut()) -> (f64, f64) {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let per_iter = total / iters as f64;
+    let micros = per_iter * 1e6;
+    let gmacs = if work_macs > 0 && per_iter > 0.0 {
+        work_macs as f64 / per_iter / 1e9
+    } else {
+        0.0
+    };
+    (micros, gmacs)
+}
+
+/// The kernel suite: GEMM variants over the tinycnn / vgg-ish shapes
+/// tracked by `benches/kernel.rs`, plus im2col.
+pub fn run_kernel(iters: u32) -> BenchResults {
+    let mut rng = XorShift64::new(77);
+    let mut entries = Vec::new();
+
+    // (label, m, k, n) — gemm_nn shapes.
+    let nn_shapes: &[(&str, usize, usize, usize)] = &[
+        ("gemm_nn conv1 8x9x784", 8, 9, 784),
+        ("gemm_nn conv2 16x72x196", 16, 72, 196),
+        ("gemm_nn fc1 gemv 64x784x1", 64, 784, 1),
+        ("gemm_nn vgg-mid 64x288x64", 64, 288, 64),
+    ];
+    for &(label, m, k, n) in nn_shapes {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut out = Mat::zeros(m, n);
+        let macs = (m * k * n) as u64;
+        let (micros, gmacs) = time_it(macs, iters, || gemm_nn(&a, &b, &mut out));
+        entries.push(BenchEntry { label: label.to_string(), micros, gmacs });
+    }
+
+    // Backward kernels at the conv2 shape.
+    {
+        let (m, k, n) = (16usize, 72usize, 196usize);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, m, n);
+        let mut out = Mat::zeros(k, n);
+        let macs = (m * k * n) as u64;
+        let (micros, gmacs) = time_it(macs, iters, || gemm_tn(&a, &b, &mut out));
+        entries.push(BenchEntry {
+            label: "gemm_tn conv2 16x72x196".to_string(),
+            micros,
+            gmacs,
+        });
+        let a2 = rand_mat(&mut rng, m, n);
+        let b2 = rand_mat(&mut rng, k, n);
+        let mut out2 = Mat::zeros(m, k);
+        let (micros, gmacs) = time_it(macs, iters, || gemm_nt(&a2, &b2, &mut out2));
+        entries.push(BenchEntry {
+            label: "gemm_nt conv2 16x72x196".to_string(),
+            micros,
+            gmacs,
+        });
+    }
+
+    // im2col at the conv2 input geometry (8 channels, 14x14).
+    {
+        let (c, h, w) = (8usize, 14usize, 14usize);
+        let x: Vec<i32> = (0..c * h * w).map(|_| rng.int_in(-127, 127)).collect();
+        let mut cols = Mat::zeros(c * 9, h * w);
+        let (micros, _) = time_it(0, iters, || im2col(&x, c, h, w, &mut cols));
+        entries.push(BenchEntry {
+            label: "im2col 8x14x14".to_string(),
+            micros,
+            gmacs: 0.0,
+        });
+    }
+
+    BenchResults {
+        schema: SCHEMA,
+        suite: "kernel".to_string(),
+        provenance: PROVENANCE_MEASURED.to_string(),
+        machine: machine_context(),
+        entries,
+    }
+}
+
+/// The serve suite: one small in-process fleet round — register 3 devices
+/// (one per method family), train each for an epoch, evaluate — over the
+/// local channel transport.
+pub fn run_serve() -> Result<BenchResults> {
+    use std::sync::Arc;
+    let backbone = crate::ptest::gen::synthetic_backbone(1);
+    let train = Arc::new(crate::ptest::gen::synthetic_dataset(11, 64));
+    let test = Arc::new(crate::ptest::gen::synthetic_dataset(12, 32));
+    let specs = [
+        ("bench-niti", MethodSpec::niti_static()),
+        ("bench-priot", MethodSpec::priot()),
+        ("bench-priot-s", MethodSpec::priot_s(0.1, crate::config::Selection::Random)),
+    ];
+    let t0 = Instant::now();
+    let server = FleetServer::builder(backbone).limit(64).record(false).build();
+    let mut client = server.local_client();
+    for (dev, spec) in &specs {
+        client.register(dev, 7, spec.clone(), Arc::clone(&train), Arc::clone(&test))?;
+    }
+    let reg_us = t0.elapsed().as_secs_f64() * 1e6;
+    let t1 = Instant::now();
+    for (dev, _) in &specs {
+        client.train(dev, 1)?;
+    }
+    let train_us = t1.elapsed().as_secs_f64() * 1e6;
+    let t2 = Instant::now();
+    for (dev, _) in &specs {
+        client.evaluate(dev)?;
+    }
+    let eval_us = t2.elapsed().as_secs_f64() * 1e6;
+    drop(client);
+    server.join()?;
+    Ok(BenchResults {
+        schema: SCHEMA,
+        suite: "serve".to_string(),
+        provenance: PROVENANCE_MEASURED.to_string(),
+        machine: machine_context(),
+        entries: vec![
+            BenchEntry {
+                label: "serve register 3 devices".to_string(),
+                micros: reg_us,
+                gmacs: 0.0,
+            },
+            BenchEntry {
+                label: "serve train 3x1 epoch (64 samples)".to_string(),
+                micros: train_us,
+                gmacs: 0.0,
+            },
+            BenchEntry {
+                label: "serve evaluate 3 devices (32 samples)".to_string(),
+                micros: eval_us,
+                gmacs: 0.0,
+            },
+        ],
+    })
+}
+
+impl BenchResults {
+    /// Serialize to the `BENCH_*.json` snapshot format.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"schema\": {},\n", self.schema));
+        s.push_str(&format!("  \"suite\": {},\n", json_str(&self.suite)));
+        s.push_str(&format!("  \"provenance\": {},\n", json_str(&self.provenance)));
+        s.push_str(&format!("  \"machine\": {},\n", json_str(&self.machine)));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": {}, \"micros\": {:.3}, \"gmacs\": {:.3}}}{}\n",
+                json_str(&e.label),
+                e.micros,
+                e.gmacs,
+                if i + 1 == self.entries.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a snapshot previously written by [`Self::to_json`] (tolerant
+    /// of field order; strict about types).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().context("snapshot root is not an object")?;
+        let schema = get(obj, "schema")?.as_f64().context("schema")? as u32;
+        if schema != SCHEMA {
+            bail!("snapshot schema {schema} != supported {SCHEMA}");
+        }
+        let suite = get(obj, "suite")?.as_str().context("suite")?.to_string();
+        let provenance =
+            get(obj, "provenance")?.as_str().context("provenance")?.to_string();
+        // Optional: snapshots written before the field existed parse as
+        // machine-less (same schema — readers treat empty as unknown).
+        let machine = obj
+            .iter()
+            .find(|(k, _)| k == "machine")
+            .and_then(|(_, v)| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        let mut entries = Vec::new();
+        for e in get(obj, "entries")?.as_arr().context("entries")? {
+            let eo = e.as_obj().context("entry is not an object")?;
+            entries.push(BenchEntry {
+                label: get(eo, "label")?.as_str().context("label")?.to_string(),
+                micros: get(eo, "micros")?.as_f64().context("micros")?,
+                gmacs: get(eo, "gmacs")?.as_f64().context("gmacs")?,
+            });
+        }
+        Ok(BenchResults { schema, suite, provenance, machine, entries })
+    }
+
+    /// Human-readable results table.
+    pub fn render(&self) -> String {
+        let mut s = format!("## bench suite: {} ({})\n", self.suite, self.provenance);
+        if !self.machine.is_empty() {
+            s.push_str(&format!("   machine: {}\n", self.machine));
+        }
+        s.push('\n');
+        for e in &self.entries {
+            if e.gmacs > 0.0 {
+                s.push_str(&format!(
+                    "  {:<28} {:>12.2} us/iter  {:>8.3} Gmac/s\n",
+                    e.label, e.micros, e.gmacs
+                ));
+            } else {
+                s.push_str(&format!("  {:<28} {:>12.2} us/iter\n", e.label, e.micros));
+            }
+        }
+        s
+    }
+
+    /// Diff this run against a baseline snapshot (matched by label).
+    pub fn diff(&self, base: &BenchResults) -> String {
+        let mut s = format!("## bench diff vs baseline ({})\n", base.provenance);
+        if !base.machine.is_empty() && base.machine != self.machine {
+            s.push_str(&format!(
+                "   baseline is from a different machine ({}) — deltas are \
+                 not regressions\n",
+                base.machine
+            ));
+        }
+        s.push('\n');
+        for e in &self.entries {
+            match base.entries.iter().find(|b| b.label == e.label) {
+                None => s.push_str(&format!("  {:<28} (no baseline entry)\n", e.label)),
+                Some(b) if b.micros <= 0.0 => s.push_str(&format!(
+                    "  {:<28} {:>12.2} us  (no baseline — unmeasured seed)\n",
+                    e.label, e.micros
+                )),
+                Some(b) => {
+                    let pct = (e.micros - b.micros) / b.micros * 100.0;
+                    s.push_str(&format!(
+                        "  {:<28} {:>12.2} us  vs {:>12.2} us  ({:+.1}%)\n",
+                        e.label, e.micros, b.micros, pct
+                    ));
+                }
+            }
+        }
+        for b in &base.entries {
+            if !self.entries.iter().any(|e| e.label == b.label) {
+                s.push_str(&format!("  {:<28} (baseline entry not re-run)\n", b.label));
+            }
+        }
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Minimal JSON value for the snapshot codec — supports exactly what the
+/// snapshot format uses (objects, arrays, strings, numbers, bools, null).
+#[derive(Clone, Debug)]
+enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .with_context(|| format!("snapshot is missing key {key:?}"))
+}
+
+impl Json {
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing bytes after JSON value at offset {}", p.i);
+        }
+        Ok(v)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.number(),
+            None => bail!("unexpected end of JSON"),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            out.push((key, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            let v = self.value()?;
+            out.push(v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            if self.i + 5 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                    .ok()
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .context("bad \\u escape")?;
+                            out.push(
+                                char::from_u32(hex).context("bad \\u code point")?,
+                            );
+                            self.i += 4;
+                        }
+                        _ => bail!("bad escape at offset {}", self.i),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 code point.
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .context("snapshot is not valid UTF-8")?;
+                    let c = rest.chars().next().expect("non-empty by peek");
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .context("non-UTF-8 number")?;
+        let n: f64 = s.parse().with_context(|| format!("bad number {s:?}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchResults {
+        BenchResults {
+            schema: SCHEMA,
+            suite: "kernel".to_string(),
+            provenance: PROVENANCE_MEASURED.to_string(),
+            machine: "test-os-arch, 4 cpus, Test CPU".to_string(),
+            entries: vec![
+                BenchEntry {
+                    label: "gemm_nn conv1 8x9x784".to_string(),
+                    micros: 12.5,
+                    gmacs: 4.5,
+                },
+                BenchEntry { label: "im2col 8x14x14".to_string(), micros: 3.25, gmacs: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let r = sample();
+        let parsed = BenchResults::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn diff_handles_seed_and_missing_entries() {
+        let cur = sample();
+        let mut base = sample();
+        base.provenance = PROVENANCE_SEED.to_string();
+        base.entries[0].micros = 0.0; // unmeasured placeholder
+        base.entries[1].label = "something else".to_string();
+        let d = cur.diff(&base);
+        assert!(d.contains("unmeasured seed"), "{d}");
+        assert!(d.contains("no baseline entry"), "{d}");
+        assert!(d.contains("not re-run"), "{d}");
+    }
+
+    #[test]
+    fn diff_reports_percentages() {
+        let cur = sample();
+        let mut base = sample();
+        base.entries[0].micros = 25.0; // cur 12.5 → -50%
+        let d = cur.diff(&base);
+        assert!(d.contains("-50.0%"), "{d}");
+    }
+
+    #[test]
+    fn machine_field_is_optional_when_parsing() {
+        // Snapshots written before the machine field existed (including
+        // the checked-in unmeasured seeds) still parse; the machine
+        // reads back empty.
+        let mut r = sample();
+        let without = r
+            .to_json()
+            .lines()
+            .filter(|l| !l.trim_start().starts_with("\"machine\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let parsed = BenchResults::from_json(&without).unwrap();
+        assert_eq!(parsed.machine, "");
+        r.machine = String::new();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn cross_machine_diffs_are_flagged() {
+        let cur = sample();
+        let mut base = sample();
+        base.machine = "other-os-arch, 128 cpus, Other CPU".to_string();
+        let d = cur.diff(&base);
+        assert!(d.contains("different machine"), "{d}");
+        assert!(!cur.diff(&sample()).contains("different machine"));
+    }
+
+    #[test]
+    fn measurement_runs_record_the_machine() {
+        let r = run_kernel(1);
+        assert_eq!(r.machine, machine_context());
+        assert!(!r.machine.is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "{\"schema\": 1} trailing"] {
+            assert!(BenchResults::from_json(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn kernel_suite_runs_with_tiny_iters() {
+        let r = run_kernel(2);
+        assert_eq!(r.suite, "kernel");
+        assert_eq!(r.entries.len(), 7);
+        assert!(r.entries.iter().all(|e| e.micros >= 0.0));
+    }
+}

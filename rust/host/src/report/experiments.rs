@@ -1,0 +1,409 @@
+//! Experiment harness: the paper's tables and figures as library functions,
+//! shared by the `priot` CLI and the `cargo bench` targets.
+//!
+//! Every function takes explicit size knobs so the benches can run a
+//! CI-scale pass (`quick`) or the paper-scale protocol (`--full`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Config, ExperimentConfig, Method, Selection};
+use crate::coordinator::{sweep_seeds, RunOptions};
+use crate::data;
+use crate::metrics::{MeanStd, RunMetrics, Stopwatch};
+use crate::pico;
+use crate::report::{fig2_csv, fig3_csv, table2_markdown, Table2Row};
+use crate::session::{Session, SessionBuilder};
+
+/// Table I row carrying (best, final) statistics per column.
+pub struct Table1RowBF {
+    pub method: String,
+    pub cells: Vec<Option<(MeanStd, MeanStd)>>,
+}
+
+/// Table I markdown with the paper's "best during training" statistic plus
+/// our additional final-accuracy column (the static-NITI transient makes
+/// "best" alone misleading in this reproduction — EXPERIMENTS.md
+/// SSDeviations).
+pub fn table1_markdown_bf(columns: &[String], rows: &[Table1RowBF]) -> String {
+    let mut out = String::from("| Method |");
+    for c in columns {
+        out.push_str(&format!(" {c} best | {c} final |"));
+    }
+    out.push_str("\n|---|");
+    for _ in columns {
+        out.push_str("---|---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&format!("| {} |", row.method));
+        for cell in &row.cells {
+            match cell {
+                Some((b, f)) => {
+                    out.push_str(&format!(" {} | {} |", b.fmt_pct(), f.fmt_pct()))
+                }
+                None => out.push_str(" — | — |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+use crate::spec::NetSpec;
+
+/// Global experiment scale.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub epochs: usize,
+    pub limit: usize, // sample cap per split (0 = all)
+    pub seeds: usize, // repetitions for randomized methods
+    pub include_vgg: bool,
+}
+
+impl Scale {
+    /// Paper protocol: 30 epochs × 1024 images × 10 seeds.
+    pub fn full() -> Self {
+        Self { epochs: 30, limit: 0, seeds: 10, include_vgg: true }
+    }
+
+    /// CI scale for a single-core box.
+    pub fn quick() -> Self {
+        Self { epochs: 8, limit: 384, seeds: 3, include_vgg: false }
+    }
+}
+
+fn base_cfg(artifacts: &Path, model: &str, dataset: &str, angle: u32,
+            method: Method) -> ExperimentConfig {
+    let mut c = Config::default();
+    c.set("artifacts", artifacts.to_str().unwrap_or("artifacts"));
+    c.set("model", model);
+    c.set("dataset", dataset);
+    c.set("angle", &angle.to_string());
+    c.set("method", method.name());
+    ExperimentConfig::from_config(&c).expect("base config")
+}
+
+/// One (column) of Table I: dataset/model/angle; computes every method row.
+pub struct Table1Column {
+    pub label: String,
+    pub model: String,
+    pub dataset: String,
+    pub angle: u32,
+}
+
+/// The method rows of Table I in paper order.
+/// (method, frac_scored, selection, randomized?)
+pub const TABLE1_ROWS: &[(&str, f64, &str)] = &[
+    ("before", 0.0, "-"),
+    ("dynamic-niti", 0.0, "-"),
+    ("static-niti", 0.0, "-"),
+    ("priot", 1.0, "-"),
+    ("priot-s-90-random", 0.1, "random"),
+    ("priot-s-90-weight", 0.1, "weight"),
+    ("priot-s-80-random", 0.2, "random"),
+    ("priot-s-80-weight", 0.2, "weight"),
+];
+
+/// Compute one Table I cell.
+pub fn table1_cell(artifacts: &Path, col: &Table1Column, row: &str,
+                   frac: f64, selection: &str, scale: Scale)
+                   -> Result<(MeanStd, MeanStd)> {
+    let method = match row {
+        "before" | "dynamic-niti" => {
+            if row == "before" {
+                // evaluate the backbone without training
+                let mut cfg = base_cfg(artifacts, &col.model, &col.dataset,
+                                       col.angle, Method::StaticNiti);
+                cfg.limit = scale.limit;
+                let pair = data::load_pair(&cfg)?;
+                let mut session = Session::from_experiment(&cfg)?;
+                let acc = session.evaluate(&pair.test)?;
+                let ms = MeanStd { mean: acc, std: 0.0, n: 1 };
+                return Ok((ms, ms));
+            }
+            Method::DynamicNiti
+        }
+        "static-niti" => Method::StaticNiti,
+        "priot" => Method::Priot,
+        _ => Method::PriotS,
+    };
+    let mut cfg = base_cfg(artifacts, &col.model, &col.dataset, col.angle, method);
+    cfg.epochs = scale.epochs;
+    cfg.limit = scale.limit;
+    if method == Method::PriotS {
+        cfg.frac_scored = frac;
+        cfg.theta = 0;
+        cfg.selection = Selection::parse(selection)?;
+    }
+    let pair = data::load_pair(&cfg)?;
+    let opts = RunOptions::from_config(&cfg);
+    // NITI variants have no random state → a single run suffices (the
+    // paper likewise reports NITI without ±std).
+    let n_seeds = match method {
+        Method::Priot | Method::PriotS => scale.seeds,
+        _ => 1,
+    };
+    let seeds: Vec<u32> = (1..=n_seeds as u32).collect();
+    let sweep = sweep_seeds(&cfg, &pair.train, &pair.test, &opts, &seeds)?;
+    let finals: Vec<f64> = sweep.runs.iter().map(|r| r.final_accuracy()).collect();
+    Ok((sweep.best, MeanStd::of(&finals)))
+}
+
+/// Regenerate Table I.  Returns (markdown, raw rows).
+pub fn table1(artifacts: &Path, scale: Scale) -> Result<String> {
+    let mut columns = vec![
+        Table1Column {
+            label: "Digits 30°".into(),
+            model: "tinycnn".into(),
+            dataset: "digits".into(),
+            angle: 30,
+        },
+        Table1Column {
+            label: "Digits 45°".into(),
+            model: "tinycnn".into(),
+            dataset: "digits".into(),
+            angle: 45,
+        },
+    ];
+    if scale.include_vgg {
+        columns.push(Table1Column {
+            label: "Patterns 30° (VGG11)".into(),
+            model: "vgg11w0.25".into(),
+            dataset: "patterns".into(),
+            angle: 30,
+        });
+    }
+    let mut rows = Vec::new();
+    for &(row, frac, selection) in TABLE1_ROWS {
+        let mut cells = Vec::new();
+        for col in &columns {
+            let cell = table1_cell(artifacts, col, row, frac, selection, scale);
+            match cell {
+                Ok(ms) => cells.push(Some(ms)),
+                Err(e) => {
+                    eprintln!("[table1] {row} × {}: {e}", col.label);
+                    cells.push(None);
+                }
+            }
+        }
+        rows.push(Table1RowBF { method: row.to_string(), cells });
+        eprintln!("[table1] row {row} done");
+    }
+    let labels: Vec<String> = columns.iter().map(|c| c.label.clone()).collect();
+    Ok(table1_markdown_bf(&labels, &rows))
+}
+
+/// Regenerate Table II: host wall-clock per image + the Pico cost/memory
+/// model, for the four on-device methods.
+pub fn table2(artifacts: &Path, model: &str, iters: usize) -> Result<String> {
+    let spec = NetSpec::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let scales =
+        crate::quant::load_scales(&artifacts.join(format!("{model}.scales.txt")))?;
+    let mut rows = Vec::new();
+    let variants: Vec<(String, pico::MethodParams, ExperimentConfig)> = vec![
+        (
+            "Static-Scale NITI".into(),
+            pico::MethodParams::new(Method::StaticNiti),
+            base_cfg(artifacts, model, "digits", 30, Method::StaticNiti),
+        ),
+        (
+            "PRIOT".into(),
+            pico::MethodParams::new(Method::Priot),
+            base_cfg(artifacts, model, "digits", 30, Method::Priot),
+        ),
+        (
+            "PRIOT-S (p=90%)".into(),
+            pico::MethodParams::priot_s(0.1, Selection::Random),
+            {
+                let mut c =
+                    base_cfg(artifacts, model, "digits", 30, Method::PriotS);
+                c.frac_scored = 0.1;
+                c
+            },
+        ),
+        (
+            "PRIOT-S (p=80%)".into(),
+            pico::MethodParams::priot_s(0.2, Selection::Random),
+            {
+                let mut c =
+                    base_cfg(artifacts, model, "digits", 30, Method::PriotS);
+                c.frac_scored = 0.2;
+                c
+            },
+        ),
+    ];
+    for (label, params, mut cfg) in variants {
+        // Micro-benchmark: a handful of samples suffices — keep the
+        // generated-data fallback cheap when no artifacts exist.
+        cfg.gen_train = cfg.gen_train.min(128);
+        cfg.gen_test = cfg.gen_test.min(128);
+        let pair = data::load_pair(&cfg)?;
+        let mut session = Session::from_experiment(&cfg)?;
+        let mut img = vec![0i32; pair.train.image_len()];
+        let mut sw = Stopwatch::default();
+        // warmup
+        for i in 0..8.min(pair.train.n) {
+            pair.train.image_i32(i, &mut img);
+            session.train_step(&img, pair.train.label(i));
+        }
+        for i in 0..iters.min(pair.train.n) {
+            pair.train.image_i32(i, &mut img);
+            let label_i = pair.train.label(i);
+            sw.start();
+            session.train_step(&img, label_i);
+            sw.lap();
+        }
+        rows.push(Table2Row {
+            method: label,
+            host_ms: sw.stats_ms(),
+            pico: pico::step_cost(&spec, &scales, params),
+            memory: pico::memory_footprint(&spec, params),
+        });
+    }
+    Ok(table2_markdown(&rows))
+}
+
+/// Fig. 2: per-step overflow counts of static-scale NITI across the run —
+/// shows the explosion during the collapse epoch.
+pub fn fig2(artifacts: &Path, epochs: usize, limit: usize) -> Result<String> {
+    let mut cfg = base_cfg(artifacts, "tinycnn", "digits", 30, Method::StaticNiti);
+    cfg.epochs = epochs;
+    cfg.limit = limit;
+    let pair = data::load_pair(&cfg)?;
+    let mut session = Session::from_experiment(&cfg)?;
+    let n = if limit == 0 { pair.train.n } else { pair.train.n.min(limit) };
+    let mut img = vec![0i32; pair.train.image_len()];
+    let mut series = Vec::new();
+    let mut step = 0u64;
+    for _ in 0..epochs {
+        for i in 0..n {
+            pair.train.image_i32(i, &mut img);
+            let out = session.train_step(&img, pair.train.label(i));
+            series.push((step, out.overflow));
+            step += 1;
+        }
+    }
+    Ok(fig2_csv(&series))
+}
+
+/// Fig. 3: accuracy history per method (digits 30°).
+pub fn fig3(artifacts: &Path, scale: Scale) -> Result<(String, Vec<RunMetrics>)> {
+    let methods: Vec<(String, Method, f64, Selection)> = vec![
+        ("static-niti".into(), Method::StaticNiti, 0.0, Selection::Random),
+        ("dynamic-niti".into(), Method::DynamicNiti, 0.0, Selection::Random),
+        ("priot".into(), Method::Priot, 1.0, Selection::Random),
+        ("priot-s-90-weight".into(), Method::PriotS, 0.1, Selection::WeightBased),
+        ("priot-s-80-weight".into(), Method::PriotS, 0.2, Selection::WeightBased),
+    ];
+    let mut names = Vec::new();
+    let mut runs = Vec::new();
+    for (name, method, frac, selection) in methods {
+        let mut cfg = base_cfg(artifacts, "tinycnn", "digits", 30, method);
+        cfg.epochs = scale.epochs;
+        cfg.limit = scale.limit;
+        cfg.frac_scored = frac;
+        cfg.selection = selection;
+        if method == Method::PriotS {
+            cfg.theta = 0;
+        }
+        let pair = data::load_pair(&cfg)?;
+        let mut session = Session::from_experiment(&cfg)?;
+        let m = session.train(&pair.train, &pair.test)?;
+        eprintln!("[fig3] {name}: best {:.4} {}", m.best_accuracy(),
+                  crate::report::sparkline(&m.accuracy));
+        names.push(name);
+        runs.push(m);
+    }
+    let refs: Vec<&RunMetrics> = runs.iter().collect();
+    Ok((fig3_csv(&names, &refs), runs))
+}
+
+/// Ablation: PRIOT threshold sweep + score-lr sweep + stochastic-rounding
+/// scores (the design choices DESIGN.md calls out).
+pub fn ablation(artifacts: &Path, scale: Scale) -> Result<String> {
+    let mut out = String::from("variant,best_acc,final_acc,pruned_frac\n");
+    for (label, theta, sr) in [
+        ("theta=-96", -96, false),
+        ("theta=-64 (paper)", -64, false),
+        ("theta=-32", -32, false),
+        ("theta=0", 0, false),
+        ("theta=-64 +sr-scores", -64, true),
+    ] {
+        let mut cfg = base_cfg(artifacts, "tinycnn", "digits", 30, Method::Priot);
+        cfg.epochs = scale.epochs;
+        cfg.limit = scale.limit;
+        cfg.theta = theta;
+        let pair = data::load_pair(&cfg)?;
+        let mut session = SessionBuilder::from_experiment(&cfg)?
+            .method(crate::methods::Priot::new()
+                        .with_theta(theta)
+                        .stochastic_rounding(sr))
+            .build()?;
+        let m = session.train(&pair.train, &pair.test)?;
+        let pruned = m
+            .pruned_frac
+            .last()
+            .map(|fr| fr.iter().sum::<f64>() / fr.len() as f64)
+            .unwrap_or(0.0);
+        out.push_str(&format!(
+            "{label},{:.4},{:.4},{:.4}\n",
+            m.best_accuracy(),
+            m.final_accuracy(),
+            pruned
+        ));
+        eprintln!("[ablation] {label}: best {:.4}", m.best_accuracy());
+    }
+    // Score-init sigma ablation is a Python-side knob (init is bit-shared);
+    // the equivalent here: seed variance across PRIOT seeds.
+    Ok(out)
+}
+
+/// Quick self-test: engine vs PJRT bit parity on a few steps (also exposed
+/// as an integration test).  Requires the `pjrt` cargo feature.
+#[cfg(feature = "pjrt")]
+pub fn selftest(artifacts: &Path) -> Result<String> {
+    use crate::session::Backend;
+    let mut report = String::new();
+    for method in [Method::StaticNiti, Method::Priot, Method::PriotS] {
+        let mut cfg = base_cfg(artifacts, "tinycnn", "digits", 30, method);
+        cfg.frac_scored = 0.1;
+        let pair = data::load_pair(&cfg)?;
+        let mut eng = Session::from_experiment(&cfg)?;
+        let mut pj = SessionBuilder::from_experiment(&cfg)?
+            .backend(Backend::Pjrt)
+            .build()?;
+        if report.is_empty() {
+            report.push_str(&format!("PJRT backend: {}\n", pj.name()));
+        }
+        let mut img = vec![0i32; pair.train.image_len()];
+        for i in 0..6.min(pair.train.n) {
+            pair.train.image_i32(i, &mut img);
+            let label = pair.train.label(i);
+            let a = eng.train_step(&img, label);
+            let b = pj.train_step(&img, label);
+            if a.logits != b.logits || a.overflow != b.overflow {
+                bail!(
+                    "{}: engine/PJRT diverged at step {i}:\n  engine {:?}\n  pjrt   {:?}",
+                    method.name(), a.logits, b.logits
+                );
+            }
+        }
+        // compare trained state
+        match (eng.scores(), pj.scores()) {
+            (Some(a), Some(b)) if a != b => bail!("{}: scores diverged", method.name()),
+            _ => {}
+        }
+        report.push_str(&format!("{}: engine == pjrt over 6 steps ✓\n",
+                                 method.name()));
+    }
+    Ok(report)
+}
+
+/// Without the `pjrt` feature there is no second implementation to compare
+/// against.
+#[cfg(not(feature = "pjrt"))]
+pub fn selftest(_artifacts: &Path) -> Result<String> {
+    bail!("selftest needs the PJRT backend — rebuild with `--features pjrt`")
+}

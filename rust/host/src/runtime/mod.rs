@@ -1,0 +1,290 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`),
+//! compiles them once on the CPU PJRT client, and exposes them as a
+//! [`StepBackend`] — the jax/Pallas execution path of the three-layer
+//! architecture.  Adapted from `/opt/xla-example/load_hlo`.
+//!
+//! Compiled only with the `pjrt` cargo feature (the default build targets
+//! the pure-Rust engine; the in-tree `xla-stub` crate satisfies the
+//! dependency when the real XLA bindings are absent).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.  All interface tensors are i32 (the crate has no i8
+//! literal constructor); graphs convert to int8 semantics internally.
+//!
+//! The backend is method-agnostic: the [`MethodPlugin`] supplies a
+//! [`PjrtPlan`] naming its artifact layout and absorbs the step outputs
+//! through its `scores_mut` hook — `rust/cli/tests/parity.rs` asserts
+//! bit-for-bit agreement with the engine executor.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::StepOut;
+use crate::methods::{MethodPlugin, PjrtPlan, StepBackend};
+use crate::session::Backbone;
+use crate::spec::NetSpec;
+
+/// A compiled HLO artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with i32 tensor inputs; returns the flattened i32 outputs
+    /// (the AOT graphs are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<i32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        let parts = lit.to_tuple().context("untupling output")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("{e}")))
+            .collect()
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e}"))?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` from the artifacts directory.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+/// Build an i32 literal of the given logical dims.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal size mismatch: {} vs dims {:?}", data.len(), dims);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("{e}"))
+}
+
+/// The AOT-artifact training backend (drop-in replacement for the engine
+/// executor; `rust/cli/tests/parity.rs` asserts they agree bit-for-bit).
+pub struct PjrtBackend {
+    spec: NetSpec,
+    plugin: Box<dyn MethodPlugin>,
+    plan: PjrtPlan,
+    weights: Vec<Vec<i32>>,
+    step: u32,
+    eval_exe: Executable,
+    step_exe: Executable,
+    label: String,
+}
+
+impl PjrtBackend {
+    /// Build from a shared backbone and an *initialized* plugin (the
+    /// session builder runs `plugin.init` first, so score/mask streams are
+    /// bit-identical to the engine executor's).
+    pub fn new(rt: &Runtime, backbone: &Backbone,
+               plugin: Box<dyn MethodPlugin>) -> Result<Self> {
+        let plan = plugin.pjrt_plan().ok_or_else(|| {
+            anyhow!("method '{}' has no AOT artifact; use Backend::Engine",
+                    plugin.name())
+        })?;
+        let spec = backbone.spec.clone();
+        // PJRT owns its weights: NITI updates them per step, and the XLA
+        // graphs take them as inputs either way.
+        let weights: Vec<Vec<i32>> =
+            backbone.weights.iter().map(|m| m.data.clone()).collect();
+        let model = &backbone.model;
+        let eval_exe = rt.load(&format!("{model}_fwd_eval"))?;
+        let step_exe = match plan {
+            PjrtPlan::NitiStep => rt.load(&format!("{model}_niti_step"))?,
+            PjrtPlan::ScoreStep => rt.load(&format!("{model}_priot_step"))?,
+        };
+        let label = format!("pjrt/{}", plugin.name());
+        Ok(Self { spec, plugin, plan, weights, step: 0, eval_exe, step_exe, label })
+    }
+
+    fn img_literal(&self, img: &[i32]) -> Result<xla::Literal> {
+        let (c, h, w) = self.spec.input_chw;
+        literal_i32(img, &[c, h, w])
+    }
+
+    fn weight_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.spec
+            .layers
+            .iter()
+            .zip(self.weights.iter())
+            .map(|(l, w)| {
+                let (r, c) = l.weight_shape();
+                literal_i32(w, &[r, c])
+            })
+            .collect()
+    }
+
+    fn score_mask_literals(&self) -> Result<Vec<xla::Literal>> {
+        let (Some(scores), Some(masks)) =
+            (self.plugin.scores(), self.plugin.masks())
+        else {
+            // Score-free methods: fwd_eval still takes score/mask inputs —
+            // all-keep dummies.
+            let mut lits = Vec::new();
+            for l in &self.spec.layers {
+                let (r, c) = l.weight_shape();
+                lits.push(literal_i32(&vec![0i32; r * c], &[r, c])?);
+            }
+            for l in &self.spec.layers {
+                let (r, c) = l.weight_shape();
+                lits.push(literal_i32(&vec![1i32; r * c], &[r, c])?);
+            }
+            return Ok(lits);
+        };
+        let mut lits = Vec::new();
+        for (l, s) in self.spec.layers.iter().zip(scores.iter()) {
+            let (r, c) = l.weight_shape();
+            lits.push(literal_i32(s, &[r, c])?);
+        }
+        for (l, m) in self.spec.layers.iter().zip(masks.iter()) {
+            let (r, c) = l.weight_shape();
+            lits.push(literal_i32(m, &[r, c])?);
+        }
+        Ok(lits)
+    }
+
+    fn theta_literal(&self) -> Result<xla::Literal> {
+        // Score-free methods: no pruning — every dummy score (0) ≥ -128.
+        literal_i32(&[self.plugin.theta().unwrap_or(-128)], &[1])
+    }
+
+    pub fn try_train_step(&mut self, img: &[i32], label: usize)
+                          -> Result<StepOut> {
+        let n = self.spec.layers.len();
+        let mut onehot = vec![0i32; self.spec.num_classes()];
+        onehot[label] = 1;
+        let outs = match self.plan {
+            PjrtPlan::ScoreStep => {
+                let mut inputs = vec![
+                    self.img_literal(img)?,
+                    literal_i32(&onehot, &[onehot.len()])?,
+                    self.theta_literal()?,
+                ];
+                inputs.extend(self.weight_literals()?);
+                inputs.extend(self.score_mask_literals()?);
+                let outs = self.step_exe.run(&inputs)?;
+                // outputs: scores…, logits, overflow
+                let scores = self
+                    .plugin
+                    .scores_mut()
+                    .ok_or_else(|| anyhow!("{}: ScoreStep plan without scores",
+                                           self.label))?;
+                for (li, s) in scores.iter_mut().enumerate() {
+                    s.copy_from_slice(&outs[li]);
+                }
+                outs
+            }
+            PjrtPlan::NitiStep => {
+                let mut inputs = vec![
+                    self.img_literal(img)?,
+                    literal_i32(&onehot, &[onehot.len()])?,
+                    literal_i32(&[self.step as i32], &[1])?,
+                ];
+                inputs.extend(self.weight_literals()?);
+                let outs = self.step_exe.run(&inputs)?;
+                for (li, w) in self.weights.iter_mut().enumerate() {
+                    w.copy_from_slice(&outs[li]);
+                }
+                outs
+            }
+        };
+        self.step += 1;
+        let logits = outs[n].clone();
+        let overflow = outs[n + 1][0] as u32;
+        Ok(StepOut { logits, overflow })
+    }
+
+    pub fn try_predict(&mut self, img: &[i32]) -> Result<usize> {
+        let mut inputs = vec![self.img_literal(img)?, self.theta_literal()?];
+        inputs.extend(self.weight_literals()?);
+        inputs.extend(self.score_mask_literals()?);
+        let outs = self.eval_exe.run(&inputs)?;
+        Ok(crate::engine::argmax(&outs[0]))
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        self.try_train_step(img, label)
+            .expect("PJRT train step failed")
+    }
+
+    fn predict(&mut self, img: &[i32]) -> usize {
+        self.try_predict(img).expect("PJRT predict failed")
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.scores()
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.masks()
+    }
+
+    fn theta(&self) -> Option<i32> {
+        self.plugin.theta()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn save_state(&self, path: &Path) -> Result<()> {
+        let tensors = match self.plugin.checkpoint_state() {
+            Some(t) => t,
+            None => crate::methods::weight_checkpoint_tensors(
+                &self.spec,
+                self.weights.iter().map(|w| w.as_slice()),
+            ),
+        };
+        crate::serial::save_weights(path, &tensors)
+    }
+
+    fn load_state(&mut self, path: &Path) -> Result<()> {
+        let tensors = crate::serial::load_weights(path)?;
+        if self.plugin.restore_state(&tensors)? {
+            return Ok(());
+        }
+        crate::methods::restore_weight_tensors(&self.spec, &tensors,
+                                               self.weights.iter_mut())
+    }
+}

@@ -1,0 +1,261 @@
+//! Host-side view of the binary interchange formats: the in-memory types
+//! and layout constants come from [`priot_core::serial`]; this shim adds
+//! the file readers/writers (the core crate is `no_std` and does no IO).
+
+pub use priot_core::serial::*;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+/// Error unless `r` is exactly at end-of-file (the formats are
+/// fixed-layout: trailing bytes mean a corrupt or mismatched file).
+fn expect_eof(r: &mut impl Read, path: &Path, what: &str) -> Result<()> {
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("{}: trailing bytes after {what}", path.display());
+    }
+    Ok(())
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a "PRWT" weights file (list of int8 tensors).
+pub fn load_weights(path: &Path) -> Result<Vec<TensorI8>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights file {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let magic = read_u32(&mut r)?;
+    if magic != WEIGHTS_MAGIC {
+        bail!("{}: bad magic {magic:#x} (want PRWT)", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{}: unsupported weights version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    if n > 1024 {
+        bail!("{}: implausible tensor count {n}", path.display());
+    }
+    let mut out = Vec::with_capacity(n);
+    for ti in 0..n {
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("{}: tensor {ti} has {ndim} dims", path.display());
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let size = checked_size(&dims)
+            .filter(|&s| s <= 256 << 20)
+            .with_context(|| {
+                format!("{}: tensor {ti} has implausible dims {dims:?}",
+                        path.display())
+            })?;
+        let mut raw = vec![0u8; size];
+        r.read_exact(&mut raw).with_context(|| {
+            format!("{}: tensor {ti} truncated (want {size} bytes)",
+                    path.display())
+        })?;
+        let data: Vec<i8> = raw.into_iter().map(|b| b as i8).collect();
+        out.push(TensorI8 { dims, data });
+    }
+    expect_eof(&mut r, path, &format!("{n} tensors"))?;
+    Ok(out)
+}
+
+/// Save a "PRWT" weights file (used for on-device checkpoints: the trained
+/// scores / updated weights).
+pub fn save_weights(path: &Path, tensors: &[TensorI8]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating weights file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    write_u32(&mut w, WEIGHTS_MAGIC)?;
+    write_u32(&mut w, 1)?;
+    write_u32(&mut w, tensors.len() as u32)?;
+    for t in tensors {
+        write_u32(&mut w, t.dims.len() as u32)?;
+        for &d in &t.dims {
+            write_u32(&mut w, d as u32)?;
+        }
+        let raw: Vec<u8> = t.data.iter().map(|&v| v as u8).collect();
+        w.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+/// Load a "PRDS" dataset file.
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening dataset {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let magic = read_u32(&mut r)?;
+    if magic != DATASET_MAGIC {
+        bail!("{}: bad magic {magic:#x} (want PRDS)", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{}: unsupported dataset version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    let c = read_u32(&mut r)? as usize;
+    let h = read_u32(&mut r)? as usize;
+    let w = read_u32(&mut r)? as usize;
+    // NB `c * h * w` must be checked too — the header is untrusted, and an
+    // unchecked product can wrap before the old `n.checked_mul(...)` ever
+    // saw it.
+    let total = checked_size(&[n, c, h, w])
+        .filter(|&t| t <= 1 << 31)
+        .with_context(|| {
+            format!("{}: implausible dims n={n} c={c} h={h} w={w}",
+                    path.display())
+        })?;
+    let mut images = vec![0u8; total];
+    r.read_exact(&mut images).with_context(|| {
+        format!("{}: image payload truncated (want {total} bytes)",
+                path.display())
+    })?;
+    let mut labels = vec![0u8; n];
+    r.read_exact(&mut labels).with_context(|| {
+        format!("{}: label payload truncated (want {n} bytes)", path.display())
+    })?;
+    expect_eof(&mut r, path, "the label payload")?;
+    Ok(Dataset { n, c, h, w, images, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let tensors = vec![
+            TensorI8 { dims: vec![2, 3], data: vec![1, -2, 3, -4, 5, -128] },
+            TensorI8 { dims: vec![4], data: vec![0, 127, -127, 7] },
+        ];
+        save_weights(&path, &tensors).unwrap();
+        let back = load_weights(&path).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 32]).unwrap();
+        assert!(load_weights(&path).is_err());
+        assert!(load_dataset(&path).is_err());
+    }
+
+    /// Write raw bytes to a temp fixture and return its path.
+    fn fixture(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("priot_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    fn le(words: &[u32]) -> Vec<u8> {
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    /// A well-formed 2-sample 1×2×2 dataset header + payload.
+    fn dataset_bytes() -> Vec<u8> {
+        let mut b = le(&[DATASET_MAGIC, 1, 2, 1, 2, 2]);
+        b.extend([10u8, 20, 30, 40, 50, 60, 70, 80]); // 2 × 4 pixels
+        b.extend([1u8, 2]); // labels
+        b
+    }
+
+    #[test]
+    fn dataset_roundtrip_and_exact_length() {
+        let path = fixture("ds_ok.bin", &dataset_bytes());
+        let ds = load_dataset(&path).unwrap();
+        assert_eq!((ds.n, ds.c, ds.h, ds.w), (2, 1, 2, 2));
+        assert_eq!(ds.labels, vec![1, 2]);
+    }
+
+    #[test]
+    fn dataset_truncated_payload_is_clean_error() {
+        let mut bytes = dataset_bytes();
+        bytes.truncate(bytes.len() - 5); // cut into the image payload
+        let path = fixture("ds_trunc.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+
+        let mut bytes = dataset_bytes();
+        bytes.truncate(bytes.len() - 1); // labels short by one
+        let path = fixture("ds_trunc_labels.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("label"), "{err:#}");
+    }
+
+    #[test]
+    fn dataset_trailing_bytes_rejected() {
+        let mut bytes = dataset_bytes();
+        bytes.push(0xAA);
+        let path = fixture("ds_trailing.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn dataset_overflowing_dims_are_clean_error() {
+        // n·c·h·w wraps usize if multiplied unchecked — must be a clean
+        // error, not a garbage tensor or an abort.
+        let bytes = le(&[DATASET_MAGIC, 1, u32::MAX, u32::MAX, u32::MAX,
+                         u32::MAX]);
+        let path = fixture("ds_overflow.bin", &bytes);
+        let err = load_dataset(&path).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err:#}");
+        // ...and merely-huge (non-wrapping) dims hit the same guard.
+        let bytes = le(&[DATASET_MAGIC, 1, 1 << 20, 16, 64, 64]);
+        let path = fixture("ds_huge.bin", &bytes);
+        assert!(load_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn weights_truncated_tensor_is_clean_error() {
+        // magic, v1, 1 tensor, ndim=2, dims 2×3, then only 4 of 6 bytes.
+        let mut bytes = le(&[WEIGHTS_MAGIC, 1, 1, 2, 2, 3]);
+        bytes.extend([1u8, 2, 3, 4]);
+        let path = fixture("w_trunc.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+        assert!(err.to_string().contains("tensor 0"), "{err:#}");
+    }
+
+    #[test]
+    fn weights_overflowing_dims_are_clean_error() {
+        let bytes = le(&[WEIGHTS_MAGIC, 1, 1, 4, u32::MAX, u32::MAX, u32::MAX,
+                         u32::MAX]);
+        let path = fixture("w_overflow.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err:#}");
+    }
+
+    #[test]
+    fn weights_trailing_bytes_rejected() {
+        let mut bytes = le(&[WEIGHTS_MAGIC, 1, 1, 1, 2]);
+        bytes.extend([7u8, 9, 0xFF]); // one byte too many
+        let path = fixture("w_trailing.bin", &bytes);
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err:#}");
+    }
+}

@@ -1,0 +1,433 @@
+//! Fleet: many concurrent [`Session`]s over one shared [`Backbone`].
+//!
+//! The paper's pitch is per-device adaptation at fleet scale; this module
+//! is the host-side simulation of that deployment.  Every device session
+//! shares the read-only backbone weights/scales through `Arc` (no
+//! per-session copy — asserted by `rust/cli/tests/session.rs`), owns its
+//! method state, and runs on a pool of worker threads.
+//!
+//! Scheduling is **epoch-granular**: the work queue holds one epoch of one
+//! device at a time, and a device re-queues at the back after each epoch,
+//! so a device with many epochs never monopolizes a worker while the rest
+//! of the fleet waits.  Per-device results are bit-identical to running
+//! each session alone — device state never crosses the queue boundary.
+//! Epoch-boundary evaluation goes through the batched forward path
+//! (`eval_batch`, default 8 samples per forward).
+//!
+//! The Table I seed sweep ([`crate::coordinator::sweep_seeds`]) and the
+//! `priot fleet` multi-device simulation are both built on this type; the
+//! `fleet` bench measures its sessions/sec and steps/sec.  For the
+//! request-driven (long-lived) front-end see [`super::serve`].
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{RunOptions, TrainProgress};
+use crate::data::DataSource;
+use crate::methods::MethodPlugin;
+use crate::metrics::RunMetrics;
+use crate::serial::Dataset;
+
+use super::{Backbone, Session};
+
+/// A device's local dataset: borrowed from the caller
+/// ([`FleetBuilder::device`], zero-copy) or shared/owned
+/// ([`FleetBuilder::device_shared`] / [`FleetBuilder::device_at`], where
+/// the builder resolves data itself).
+enum DeviceData<'a> {
+    Borrowed(&'a Dataset),
+    Shared(Arc<Dataset>),
+}
+
+impl DeviceData<'_> {
+    fn get(&self) -> &Dataset {
+        match self {
+            DeviceData::Borrowed(d) => d,
+            DeviceData::Shared(a) => a,
+        }
+    }
+}
+
+/// One planned device: a name, a seed, a method plugin, and the local
+/// train/test data it adapts on.
+struct Device<'a> {
+    name: String,
+    seed: u32,
+    plugin: Box<dyn MethodPlugin>,
+    train: DeviceData<'a>,
+    test: DeviceData<'a>,
+}
+
+/// Builder for a [`Fleet`]; add devices with [`FleetBuilder::device`]
+/// (caller-provided data), [`FleetBuilder::device_shared`]
+/// (`Arc`-shared data) or [`FleetBuilder::device_at`] (data resolved per
+/// angle through the builder's [`DataSource`]).
+pub struct FleetBuilder<'a> {
+    backbone: Arc<Backbone>,
+    opts: RunOptions,
+    threads: usize,
+    devices: Vec<Device<'a>>,
+    source: DataSource,
+    dataset: String,
+    /// [`Self::device_at`] resolution cache, keyed by (dataset, angle)
+    /// and cleared when the source changes — devices sharing a
+    /// distribution share one dataset copy.
+    pairs: HashMap<(String, u32), (Arc<Dataset>, Arc<Dataset>)>,
+}
+
+/// A set of concurrent adaptation sessions sharing one backbone.
+pub struct Fleet<'a> {
+    backbone: Arc<Backbone>,
+    opts: RunOptions,
+    threads: usize,
+    devices: Vec<Device<'a>>,
+}
+
+/// Result of one device's run.
+pub struct DeviceReport {
+    pub name: String,
+    pub seed: u32,
+    pub metrics: RunMetrics,
+    /// Training steps actually **executed** (threaded back from the epoch
+    /// loop via [`RunMetrics::total_steps`]) — not the planned
+    /// `epochs × capped(n)`, which overstates throughput for empty
+    /// datasets or early-exit runs.
+    pub steps: u64,
+}
+
+/// Aggregate result of a fleet run.
+pub struct FleetReport {
+    pub devices: Vec<DeviceReport>,
+    pub wall_secs: f64,
+    pub threads: usize,
+}
+
+impl FleetReport {
+    pub fn total_steps(&self) -> u64 {
+        self.devices.iter().map(|d| d.steps).sum()
+    }
+
+    /// Completed sessions per wall-clock second.
+    pub fn sessions_per_sec(&self) -> f64 {
+        self.devices.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Aggregate executed training steps per wall-clock second.
+    pub fn steps_per_sec(&self) -> f64 {
+        self.total_steps() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn best_accuracies(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.metrics.best_accuracy()).collect()
+    }
+
+    /// Markdown summary: one row per device plus the throughput line.
+    pub fn summary(&self) -> String {
+        let mut out = String::from("| device | seed | best | final | steps |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for d in &self.devices {
+            out.push_str(&format!(
+                "| {} | {} | {:.2}% | {:.2}% | {} |\n",
+                d.name,
+                d.seed,
+                d.metrics.best_accuracy() * 100.0,
+                d.metrics.final_accuracy() * 100.0,
+                d.steps
+            ));
+        }
+        out.push_str(&format!(
+            "\n{} sessions on {} threads in {:.2}s — {:.2} sessions/s, \
+             {:.0} steps/s\n",
+            self.devices.len(),
+            self.threads,
+            self.wall_secs,
+            self.sessions_per_sec(),
+            self.steps_per_sec()
+        ));
+        out
+    }
+}
+
+/// A device checked out of the queue mid-run: its session, data, progress,
+/// and the epochs still owed.
+struct Job<'a> {
+    idx: usize,
+    name: String,
+    seed: u32,
+    session: Session,
+    train: DeviceData<'a>,
+    test: DeviceData<'a>,
+    progress: TrainProgress,
+    remaining: usize,
+}
+
+/// One unit of queued work: start a device (build + epoch-0 evaluation) or
+/// run the next epoch of an already-started one.
+enum Task<'a> {
+    Start(usize, Device<'a>),
+    Epoch(Job<'a>),
+}
+
+impl<'a> Fleet<'a> {
+    /// Defaults match [`super::SessionBuilder`] except evaluation, which is
+    /// batched (8 samples per forward — bit-identical, faster): 1 epoch,
+    /// no sample cap, pruning tracking on, auto thread count.
+    pub fn builder(backbone: Arc<Backbone>) -> FleetBuilder<'a> {
+        FleetBuilder {
+            backbone,
+            opts: RunOptions {
+                epochs: 1,
+                limit: 0,
+                track_pruning: true,
+                verbose: false,
+                eval_batch: 8,
+            },
+            threads: 0,
+            devices: Vec::new(),
+            source: DataSource::generated(),
+            dataset: "digits".to_string(),
+            pairs: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Run every device to completion across the worker pool, one epoch at
+    /// a time (round-robin over ready devices).  Device reports come back
+    /// in the order the devices were added.
+    pub fn run(self) -> Result<FleetReport> {
+        let n_devices = self.devices.len();
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(n_devices.max(1))
+        } else {
+            self.threads.min(n_devices.max(1))
+        };
+        let t0 = Instant::now();
+        let queue: Mutex<VecDeque<Task>> = Mutex::new(
+            self.devices
+                .into_iter()
+                .enumerate()
+                .map(|(idx, dev)| Task::Start(idx, dev))
+                .collect(),
+        );
+        let results: Mutex<Vec<(usize, Result<DeviceReport>)>> =
+            Mutex::new(Vec::with_capacity(n_devices));
+        let backbone = &self.backbone;
+        let opts = &self.opts;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let task =
+                        queue.lock().expect("fleet queue poisoned").pop_front();
+                    let Some(task) = task else { break };
+                    let next = match task {
+                        Task::Start(idx, dev) => {
+                            match start_device(backbone, opts, idx, dev) {
+                                Ok(job) => job,
+                                Err(e) => {
+                                    results
+                                        .lock()
+                                        .expect("fleet results poisoned")
+                                        .push((idx, Err(e)));
+                                    continue;
+                                }
+                            }
+                        }
+                        Task::Epoch(mut job) => {
+                            job.progress.step_epoch(job.session.driver(),
+                                                    job.train.get(),
+                                                    job.test.get(), opts);
+                            job.remaining -= 1;
+                            job
+                        }
+                    };
+                    if next.remaining == 0 {
+                        let report = DeviceReport {
+                            name: next.name,
+                            seed: next.seed,
+                            steps: next.progress.metrics().total_steps(),
+                            metrics: next.progress.finish(),
+                        };
+                        results
+                            .lock()
+                            .expect("fleet results poisoned")
+                            .push((next.idx, Ok(report)));
+                    } else {
+                        queue
+                            .lock()
+                            .expect("fleet queue poisoned")
+                            .push_back(Task::Epoch(next));
+                    }
+                });
+            }
+        });
+        let mut collected = results.into_inner().expect("fleet results poisoned");
+        collected.sort_by_key(|(idx, _)| *idx);
+        let mut devices = Vec::with_capacity(n_devices);
+        for (_, res) in collected {
+            devices.push(res?);
+        }
+        Ok(FleetReport { devices, wall_secs: t0.elapsed().as_secs_f64(), threads })
+    }
+}
+
+/// Build a device's session (validating its data against the backbone) and
+/// run the epoch-0 evaluation.
+fn start_device<'a>(backbone: &Arc<Backbone>, opts: &RunOptions, idx: usize,
+                    dev: Device<'a>) -> Result<Job<'a>> {
+    crate::data::validate(dev.train.get(), &backbone.spec)
+        .with_context(|| format!("fleet device {}: train set", dev.name))?;
+    crate::data::validate(dev.test.get(), &backbone.spec)
+        .with_context(|| format!("fleet device {}: test set", dev.name))?;
+    let mut session = Session::builder()
+        .backbone(Arc::clone(backbone))
+        .method_boxed(dev.plugin)
+        .seed(dev.seed)
+        .epochs(opts.epochs)
+        .limit(opts.limit)
+        .eval_batch(opts.eval_batch)
+        .track_pruning(opts.track_pruning)
+        .verbose(opts.verbose)
+        .build()?;
+    let progress = TrainProgress::start(session.driver(), dev.test.get(), opts);
+    Ok(Job {
+        idx,
+        name: dev.name,
+        seed: dev.seed,
+        session,
+        train: dev.train,
+        test: dev.test,
+        progress,
+        remaining: opts.epochs,
+    })
+}
+
+impl<'a> FleetBuilder<'a> {
+    /// Run options applied to every device.
+    pub fn options(mut self, opts: RunOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.opts.epochs = epochs;
+        self
+    }
+
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.opts.limit = limit;
+        self
+    }
+
+    pub fn track_pruning(mut self, on: bool) -> Self {
+        self.opts.track_pruning = on;
+        self
+    }
+
+    /// Samples per forward in epoch-boundary evaluation (bit-identical to
+    /// per-sample; default 8).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.opts.eval_batch = batch;
+        self
+    }
+
+    /// Worker thread count (0 = available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Dataset source consulted by [`Self::device_at`] (default: purely
+    /// generated data — artifact-free; pass [`DataSource::auto`] to
+    /// prefer artifact files).  Changing the source drops pairs already
+    /// resolved through the old one.
+    pub fn source(mut self, source: DataSource) -> Self {
+        if source != self.source {
+            self.pairs.clear();
+        }
+        self.source = source;
+        self
+    }
+
+    /// Dataset family resolved by [`Self::device_at`] (default `digits`).
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Add one device to the fleet (caller-provided data, zero-copy).
+    pub fn device(mut self, name: impl Into<String>, seed: u32,
+                  plugin: Box<dyn MethodPlugin>, train: &'a Dataset,
+                  test: &'a Dataset) -> Self {
+        self.devices.push(Device {
+            name: name.into(),
+            seed,
+            plugin,
+            train: DeviceData::Borrowed(train),
+            test: DeviceData::Borrowed(test),
+        });
+        self
+    }
+
+    /// Add one device over `Arc`-shared datasets (the wire/serve shape).
+    pub fn device_shared(mut self, name: impl Into<String>, seed: u32,
+                         plugin: Box<dyn MethodPlugin>, train: Arc<Dataset>,
+                         test: Arc<Dataset>) -> Self {
+        self.devices.push(Device {
+            name: name.into(),
+            seed,
+            plugin,
+            train: DeviceData::Shared(train),
+            test: DeviceData::Shared(test),
+        });
+        self
+    }
+
+    /// Add one device adapting to its local distribution at `angle`,
+    /// resolving the train/test pair through the builder's
+    /// [`DataSource`] (see [`Self::source`] / [`Self::dataset`]).  Pairs
+    /// are cached per angle, so devices sharing a distribution share one
+    /// dataset copy.
+    pub fn device_at(mut self, name: impl Into<String>, seed: u32,
+                     plugin: Box<dyn MethodPlugin>, angle: u32)
+                     -> Result<Self> {
+        let key = (self.dataset.clone(), angle);
+        if !self.pairs.contains_key(&key) {
+            let pair = self
+                .source
+                .pair(&self.dataset, angle)
+                .with_context(|| format!(
+                    "resolving {} data at {angle}°", self.dataset))?;
+            self.pairs.insert(
+                key.clone(), (Arc::new(pair.train), Arc::new(pair.test)));
+        }
+        let (train, test) = self.pairs[&key].clone();
+        Ok(self.device_shared(name, seed, plugin, train, test))
+    }
+
+    pub fn build(self) -> Fleet<'a> {
+        Fleet {
+            backbone: self.backbone,
+            opts: self.opts,
+            threads: self.threads,
+            devices: self.devices,
+        }
+    }
+
+    /// Build and run in one call.
+    pub fn run(self) -> Result<FleetReport> {
+        self.build().run()
+    }
+}

@@ -1,0 +1,752 @@
+//! The public Session/Fleet API: the one construction path for on-device
+//! training runs.
+//!
+//! * [`Backbone`] — the deployed read-only model (spec + int8 weights +
+//!   static scales), loaded once and shared across sessions via `Arc`.
+//! * [`SessionBuilder`] / [`Session`] — a fluent builder yielding one
+//!   adapting device: a [`crate::methods::MethodPlugin`] bound to an
+//!   execution backend ([`Backend::Engine`] or [`Backend::Pjrt`]), with
+//!   `train_epoch` / `predict` / `evaluate` / `save` / `restore`.
+//! * [`Fleet`] — many concurrent sessions over one shared backbone
+//!   (see [`fleet`]); work is scheduled at epoch granularity across the
+//!   worker pool.
+//! * [`FleetServer`] — the long-lived, request-driven front-end: clients
+//!   connect through the [`crate::proto`] wire boundary (in-process
+//!   [`FleetServer::local_client`] or TCP via [`FleetServer::listen`])
+//!   and speak typed [`Request`]/[`Response`] frames (see [`serve`]).
+//!
+//! ```no_run
+//! use priot::session::Session;
+//! use priot::methods::PriotS;
+//! use priot::config::Selection;
+//!
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .model("tinycnn")
+//!     .method(PriotS::new(0.1, Selection::WeightBased))
+//!     .seed(7)
+//!     .epochs(10)
+//!     .build()?;
+//! # anyhow::Ok(())
+//! ```
+
+pub mod fleet;
+pub mod serve;
+
+pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
+pub use serve::{AuditPolicy, FleetServer, ServeBuilder, ServeReport};
+
+pub use crate::proto::{FleetClient, Request, Response};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    evaluate_batched, predict_batched, run_training, train_one_epoch,
+    RunOptions,
+};
+
+pub use crate::coordinator::EpochReport;
+use crate::engine::{Engine, StepOut};
+use crate::methods::{plugin_for, MethodPlugin, Priot, StepBackend};
+use crate::metrics::RunMetrics;
+use crate::quant::Scales;
+use crate::serial::{load_weights, save_weights, Dataset};
+use crate::spec::NetSpec;
+use crate::store::{PluginState, SessionSnapshot};
+use crate::tensor::Mat;
+
+/// Execution backend for a session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// The pure-Rust integer engine (the device implementation).
+    #[default]
+    Engine,
+    /// PJRT execution of the AOT HLO artifacts (requires the `pjrt`
+    /// feature and `make artifacts`).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "engine" => Backend::Engine,
+            "pjrt" => Backend::Pjrt,
+            other => bail!("unknown backend {other} (want engine|pjrt)"),
+        })
+    }
+}
+
+/// The deployed read-only model: spec + int8 weights + static scale table.
+///
+/// Weights and scales live behind `Arc` so every [`Session`] built from
+/// one `Backbone` shares a single copy — a [`Fleet`] of N devices holds
+/// the backbone once, not N times.
+pub struct Backbone {
+    pub model: String,
+    pub spec: NetSpec,
+    pub weights: Arc<Vec<Mat>>,
+    pub scales: Arc<Scales>,
+}
+
+impl Backbone {
+    /// Load `<model>.weights.bin` + `<model>.scales.txt` from an artifacts
+    /// directory (produced by `make artifacts`).
+    pub fn load(artifacts: &Path, model: &str) -> Result<Arc<Self>> {
+        let spec = NetSpec::by_name(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let tensors =
+            load_weights(&artifacts.join(format!("{model}.weights.bin")))?;
+        let weights: Vec<Mat> = tensors
+            .iter()
+            .zip(spec.layers.iter())
+            .map(|(t, l)| {
+                let (r, c) = l.weight_shape();
+                Mat::from_vec(r, c, t.to_i32())
+            })
+            .collect();
+        let scales = crate::quant::load_scales(
+            &artifacts.join(format!("{model}.scales.txt")))?;
+        Ok(Self::from_parts(model, spec, weights, scales))
+    }
+
+    /// Deterministic random-weight backbone (default scales) for any
+    /// model spec — the artifact-free stand-in shared by the test
+    /// suites, the `serve`/`fleet` benches and the CLI fallback
+    /// ([`Self::load_or_synthetic`]).  Untrained: useful wherever the
+    /// *machinery* (scheduling, wire protocol, throughput) is under test
+    /// rather than accuracy.
+    pub fn synthetic(model: &str, seed: u64) -> Result<Arc<Self>> {
+        let spec = NetSpec::by_name(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let mut rng = crate::prng::XorShift64::new(seed);
+        let weights: Vec<Mat> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                let data: Vec<i32> =
+                    (0..r * c).map(|_| rng.int_in(-127, 127)).collect();
+                Mat::from_vec(r, c, data)
+            })
+            .collect();
+        let scales = Scales::default_for(spec.layers.len());
+        Ok(Self::from_parts(model, spec, weights, scales))
+    }
+
+    /// [`Self::load`] when the artifacts exist, otherwise a
+    /// [`Self::synthetic`] fallback (with a note on stderr) — what lets
+    /// `priot serve` / `priot fleet` and the benches run from a bare
+    /// checkout.
+    pub fn load_or_synthetic(artifacts: &Path, model: &str, seed: u64)
+                             -> Result<Arc<Self>> {
+        if artifacts.join(format!("{model}.weights.bin")).exists() {
+            return Self::load(artifacts, model);
+        }
+        eprintln!(
+            "[backbone] no {model} artifacts under {} — using a synthetic \
+             random-weight backbone (deterministic, seed {seed}); run \
+             `make artifacts` for the pre-trained one",
+            artifacts.display()
+        );
+        Self::synthetic(model, seed)
+    }
+
+    /// Assemble a backbone from in-memory parts (tests, synthetic
+    /// deployments).
+    pub fn from_parts(model: &str, spec: NetSpec, weights: Vec<Mat>,
+                      scales: Scales) -> Arc<Self> {
+        Arc::new(Self {
+            model: model.to_string(),
+            spec,
+            weights: Arc::new(weights),
+            scales: Arc::new(scales),
+        })
+    }
+}
+
+/// The engine-side executor: engine + plugin + step counter.  Implements
+/// [`StepBackend`] so the coordinator can drive it interchangeably with
+/// the PJRT executor.
+pub struct EngineExecutor {
+    pub engine: Engine,
+    plugin: Box<dyn MethodPlugin>,
+    step: u32,
+    label: String,
+}
+
+impl EngineExecutor {
+    pub fn new(engine: Engine, plugin: Box<dyn MethodPlugin>) -> Self {
+        let label = format!("engine/{}", plugin.name());
+        Self { engine, plugin, step: 0, label }
+    }
+
+    pub fn plugin(&self) -> &dyn MethodPlugin {
+        self.plugin.as_ref()
+    }
+
+    /// Training steps executed so far (the counter NITI's stochastic
+    /// rounding consumes).
+    pub fn steps(&self) -> u32 {
+        self.step
+    }
+}
+
+impl StepBackend for EngineExecutor {
+    fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        let out = self.plugin.train_step(&mut self.engine, img, label, self.step);
+        self.step += 1;
+        out
+    }
+
+    fn predict(&mut self, img: &[i32]) -> usize {
+        self.plugin.predict(&mut self.engine, img)
+    }
+
+    fn predict_batch(&mut self, imgs: &Mat) -> Vec<usize> {
+        self.plugin.predict_batch(&mut self.engine, imgs)
+    }
+
+    fn scores(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.scores()
+    }
+
+    fn masks(&self) -> Option<&[Vec<i32>]> {
+        self.plugin.masks()
+    }
+
+    fn theta(&self) -> Option<i32> {
+        self.plugin.theta()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn save_state(&self, path: &Path) -> Result<()> {
+        let tensors = match self.plugin.checkpoint_state() {
+            Some(t) => t,
+            // Methods without plugin state (NITI) checkpoint the trained
+            // engine weights instead.
+            None => crate::methods::weight_checkpoint_tensors(
+                &self.engine.spec,
+                self.engine.weights.iter().map(|m| m.data.as_slice()),
+            ),
+        };
+        save_weights(path, &tensors)
+    }
+
+    fn load_state(&mut self, path: &Path) -> Result<()> {
+        let tensors = load_weights(path)?;
+        if self.plugin.restore_state(&tensors)? {
+            return Ok(());
+        }
+        // Weight-state method: restore engine weights (copy-on-write, so a
+        // fleet sibling's shared view is never touched).
+        let weights = Arc::make_mut(&mut self.engine.weights);
+        crate::methods::restore_weight_tensors(
+            &self.engine.spec,
+            &tensors,
+            weights.iter_mut().map(|m| &mut m.data),
+        )
+    }
+}
+
+enum Exec {
+    Engine(EngineExecutor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::PjrtBackend),
+}
+
+/// One adapting device: an execution backend bound to a method plugin,
+/// plus the run options the epoch loop consumes.
+pub struct Session {
+    exec: Exec,
+    opts: RunOptions,
+    /// The backbone's architecture, kept so the data-facing entry points
+    /// can reject geometry-mismatched datasets with a clean error instead
+    /// of panicking deep inside the engine.
+    spec: NetSpec,
+    /// The seed this session was built with, retained so
+    /// [`Session::snapshot`] can record it (rehydration replays plugin
+    /// `init` with it before restoring exact state).
+    seed: u32,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Build directly from an [`ExperimentConfig`] (the config/CLI bridge).
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
+        SessionBuilder::from_experiment(cfg)?.build()
+    }
+
+    fn driver(&mut self) -> &mut dyn StepBackend {
+        match &mut self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p,
+        }
+    }
+
+    fn driver_ref(&self) -> &dyn StepBackend {
+        match &self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p,
+        }
+    }
+
+    /// Backend/method label, e.g. `engine/priot-s`.
+    pub fn name(&self) -> &str {
+        self.driver_ref().name()
+    }
+
+    pub fn options(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    pub fn options_mut(&mut self) -> &mut RunOptions {
+        &mut self.opts
+    }
+
+    /// Direct engine access (calibration, analysis); `None` on the PJRT
+    /// backend.
+    pub fn engine_mut(&mut self) -> Option<&mut Engine> {
+        match &mut self.exec {
+            Exec::Engine(e) => Some(&mut e.engine),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => None,
+        }
+    }
+
+    /// One training step (batch 1).  Most callers want [`Self::train`] or
+    /// [`Self::train_epoch`]; this is the micro-benchmark/parity hook.
+    pub fn train_step(&mut self, img: &[i32], label: usize) -> StepOut {
+        self.driver().train_step(img, label)
+    }
+
+    /// Reject datasets whose geometry or labels don't fit the backbone —
+    /// the Session/Fleet/serve contract is a clean `Err`, never a panic
+    /// deep inside the engine.
+    fn check_data(&self, ds: &Dataset) -> Result<()> {
+        crate::data::validate(ds, &self.spec)
+    }
+
+    /// One pass over (a cap of) the training set; returns step statistics.
+    /// Shares [`train_one_epoch`] with the coordinator's full run loop.
+    pub fn train_epoch(&mut self, train: &Dataset) -> Result<EpochReport> {
+        self.check_data(train)?;
+        let limit = self.opts.limit;
+        Ok(train_one_epoch(self.driver(), train, limit))
+    }
+
+    /// The full epoch loop with per-epoch evaluation (the paper's run
+    /// protocol) — drives [`run_training`] over this session's backend.
+    /// The returned metrics include the *executed* step count per epoch
+    /// ([`RunMetrics::total_steps`]), which fleet/serve throughput
+    /// reporting divides by.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset)
+                 -> Result<RunMetrics> {
+        self.check_data(train)?;
+        self.check_data(test)?;
+        let opts = self.opts.clone();
+        Ok(run_training(self.driver(), train, test, &opts))
+    }
+
+    /// Inference for one image.
+    pub fn predict(&mut self, img: &[i32]) -> usize {
+        self.driver().predict(img)
+    }
+
+    /// Predictions over (a cap of) a dataset, in batched forwards of the
+    /// session's `eval_batch` option (bit-identical to per-sample
+    /// prediction).  Labels are not read, so an inference-only dataset
+    /// with sentinel labels is accepted (only image geometry/payload is
+    /// validated).
+    pub fn predict_batch(&mut self, ds: &Dataset, limit: usize)
+                         -> Result<Vec<usize>> {
+        crate::data::validate_images(ds, &self.spec)?;
+        let batch = self.opts.eval_batch;
+        Ok(predict_batched(self.driver(), ds, limit, batch))
+    }
+
+    /// Top-1 accuracy over (a cap of) a dataset, respecting the session's
+    /// `limit` and `eval_batch` options.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let batch = self.opts.eval_batch;
+        self.evaluate_batch(ds, batch)
+    }
+
+    /// Top-1 accuracy with an explicit evaluation batch size: samples are
+    /// run through the engine `batch` at a time (extra GEMM columns — see
+    /// [`crate::engine::Engine::forward_batch`]), bit-identical to
+    /// per-sample evaluation for every method plugin.
+    pub fn evaluate_batch(&mut self, ds: &Dataset, batch: usize)
+                          -> Result<f64> {
+        self.check_data(ds)?;
+        let limit = self.opts.limit;
+        Ok(evaluate_batched(self.driver(), ds, limit, batch))
+    }
+
+    /// Checkpoint the trained state (scores+masks, or NITI weights).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.driver_ref().save_state(path)
+    }
+
+    /// Restore a checkpoint produced by [`Self::save`] (same method and
+    /// model).
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        self.driver().load_state(path)
+    }
+
+    pub fn scores(&self) -> Option<&[Vec<i32>]> {
+        self.driver_ref().scores()
+    }
+
+    pub fn masks(&self) -> Option<&[Vec<i32>]> {
+        self.driver_ref().masks()
+    }
+
+    pub fn theta(&self) -> Option<i32> {
+        self.driver_ref().theta()
+    }
+
+    /// Training steps executed so far (the counter NITI's stochastic
+    /// rounding consumes; 0 on the PJRT backend, which tracks its own).
+    pub fn steps(&self) -> u32 {
+        match &self.exec {
+            Exec::Engine(e) => e.step,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => 0,
+        }
+    }
+
+    /// Capture the session's exact mutable state as a
+    /// [`SessionSnapshot`] — the lossless counterpart of [`Self::save`]
+    /// (which narrows to portable int8 checkpoints).  A session
+    /// rehydrated from the snapshot produces **byte-identical**
+    /// predict/evaluate/train trajectories to this one: the snapshot
+    /// carries the serializable method description, the seed, the
+    /// executed-step counter, and the exact i32 plugin state (scores +
+    /// masks, or trained weights for weight-state methods).
+    ///
+    /// Errors when the method cannot be described as a
+    /// [`crate::proto::MethodSpec`] (e.g. ablation-only knobs) or the
+    /// session runs on the PJRT backend.
+    pub fn snapshot(&self) -> Result<SessionSnapshot> {
+        let e = match &self.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => {
+                bail!("snapshot requires the engine backend")
+            }
+        };
+        let method = e.plugin.method_spec().ok_or_else(|| {
+            anyhow!(
+                "method {} has no serializable MethodSpec — snapshot \
+                 unsupported",
+                e.plugin.name()
+            )
+        })?;
+        let state = match (e.plugin.scores(), e.plugin.masks()) {
+            (Some(scores), Some(masks)) => PluginState::Scores {
+                scores: scores.to_vec(),
+                masks: masks.to_vec(),
+            },
+            // Weight-state method (NITI): the trained state lives in the
+            // executor's weights.
+            _ => PluginState::Weights(
+                e.engine.weights.iter().map(|w| w.data.clone()).collect(),
+            ),
+        };
+        Ok(SessionSnapshot {
+            model: self.spec.name.clone(),
+            seed: self.seed,
+            method,
+            step: e.step,
+            eval_batch: self.opts.eval_batch,
+            limit: self.opts.limit,
+            state,
+        })
+    }
+
+    /// Rebuild a session from a [`SessionSnapshot`] over a shared
+    /// backbone — the exact inverse of [`Self::snapshot`].  The plugin is
+    /// rebuilt from the snapshot's method spec, initialized with the
+    /// recorded seed, then every mutable value (scores, masks, weights,
+    /// step counter) is overwritten with the snapshot's exact i32 state,
+    /// so the rehydrated session's trajectories are byte-identical to the
+    /// original's.
+    ///
+    /// Presentation-only options (`epochs`, `verbose`, `track_pruning`)
+    /// are not part of a snapshot; adjust them via
+    /// [`Self::options_mut`] after rehydrating if needed.
+    pub fn rehydrate(backbone: &Arc<Backbone>, snap: &SessionSnapshot)
+                     -> Result<Session> {
+        if snap.model != backbone.model {
+            bail!(
+                "snapshot is for model {}, backbone is {}",
+                snap.model, backbone.model
+            );
+        }
+        let mut session = Session::builder()
+            .backbone(Arc::clone(backbone))
+            .method_boxed(snap.method.plugin())
+            .seed(snap.seed)
+            .eval_batch(snap.eval_batch)
+            .limit(snap.limit)
+            .track_pruning(false)
+            .build()?;
+        let e = match &mut session.exec {
+            Exec::Engine(e) => e,
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => unreachable!("rehydrate builds engine sessions"),
+        };
+        e.step = snap.step;
+        match &snap.state {
+            PluginState::Scores { scores, masks } => {
+                let dst = e.plugin.scores_mut().ok_or_else(|| {
+                    anyhow!(
+                        "snapshot carries score state but method {} keeps \
+                         none",
+                        snap.method.method.name()
+                    )
+                })?;
+                copy_layers("scores", dst, scores)?;
+                let dst = e.plugin.masks_mut().ok_or_else(|| {
+                    anyhow!(
+                        "snapshot carries masks but method {} keeps none",
+                        snap.method.method.name()
+                    )
+                })?;
+                copy_layers("masks", dst, masks)?;
+            }
+            PluginState::Weights(saved) => {
+                if e.plugin.scores().is_some() {
+                    bail!(
+                        "snapshot carries weight state but method {} keeps \
+                         scores",
+                        snap.method.method.name()
+                    );
+                }
+                // Copy-on-write: a fleet sibling's shared view is never
+                // touched.
+                let weights = Arc::make_mut(&mut e.engine.weights);
+                if saved.len() != weights.len() {
+                    bail!(
+                        "snapshot has {} weight tensors, backbone has {}",
+                        saved.len(), weights.len()
+                    );
+                }
+                for (li, (w, s)) in
+                    weights.iter_mut().zip(saved.iter()).enumerate()
+                {
+                    if s.len() != w.data.len() {
+                        bail!(
+                            "snapshot weights layer {li}: {} values, \
+                             want {}",
+                            s.len(), w.data.len()
+                        );
+                    }
+                    w.data.copy_from_slice(s);
+                }
+            }
+        }
+        Ok(session)
+    }
+}
+
+/// Overwrite per-layer state with snapshot layers, validating counts and
+/// lengths so a mismatched snapshot is a contextful error, not a panic.
+fn copy_layers(what: &str, dst: &mut [Vec<i32>], src: &[Vec<i32>])
+               -> Result<()> {
+    if dst.len() != src.len() {
+        bail!(
+            "snapshot {what}: {} layers, session has {}",
+            src.len(), dst.len()
+        );
+    }
+    for (li, (d, s)) in dst.iter_mut().zip(src.iter()).enumerate() {
+        if d.len() != s.len() {
+            bail!(
+                "snapshot {what} layer {li}: {} values, want {}",
+                s.len(), d.len()
+            );
+        }
+        d.copy_from_slice(s);
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt(artifacts: &Path, backbone: &Backbone,
+              plugin: Box<dyn MethodPlugin>) -> Result<Exec> {
+    let rt = crate::runtime::Runtime::new(artifacts)?;
+    Ok(Exec::Pjrt(crate::runtime::PjrtBackend::new(&rt, backbone, plugin)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(_artifacts: &Path, _backbone: &Backbone,
+              _plugin: Box<dyn MethodPlugin>) -> Result<Exec> {
+    bail!("backend 'pjrt' requires building with `--features pjrt` \
+           (AOT artifacts + XLA runtime)")
+}
+
+/// Fluent builder for [`Session`] — see the module docs for an example.
+pub struct SessionBuilder {
+    artifacts: PathBuf,
+    model: String,
+    backend: Backend,
+    method: Option<Box<dyn MethodPlugin>>,
+    backbone: Option<Arc<Backbone>>,
+    seed: u32,
+    epochs: usize,
+    limit: usize,
+    track_pruning: bool,
+    verbose: bool,
+    eval_batch: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            model: "tinycnn".to_string(),
+            backend: Backend::Engine,
+            method: None,
+            backbone: None,
+            seed: 1,
+            epochs: 30,
+            limit: 0,
+            track_pruning: true,
+            verbose: false,
+            eval_batch: 1,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Artifacts directory (default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Model name (default `tinycnn`).  Ignored when a [`Self::backbone`]
+    /// is supplied.
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.to_string();
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Training method (default: [`Priot`] with the paper's θ).
+    pub fn method(self, plugin: impl MethodPlugin + 'static) -> Self {
+        self.method_boxed(Box::new(plugin))
+    }
+
+    pub fn method_boxed(mut self, plugin: Box<dyn MethodPlugin>) -> Self {
+        self.method = Some(plugin);
+        self
+    }
+
+    /// Share an already-loaded backbone instead of reading artifacts from
+    /// disk (the [`Fleet`] path; also enables artifact-free tests).
+    pub fn backbone(mut self, backbone: Arc<Backbone>) -> Self {
+        self.model = backbone.model.clone();
+        self.backbone = Some(backbone);
+        self
+    }
+
+    /// Seed for the method's score/mask streams (default 1).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Cap on train/test samples per epoch (0 = all).
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Record per-layer pruned fractions + mask flips each epoch (costs a
+    /// full scores scan; default on).
+    pub fn track_pruning(mut self, on: bool) -> Self {
+        self.track_pruning = on;
+        self
+    }
+
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    /// Samples per forward in dataset evaluation (default 1 = per-sample;
+    /// batched evaluation is bit-identical, just faster — the fleet and
+    /// serve front-ends default to a batched width).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.eval_batch = batch;
+        self
+    }
+
+    /// Pre-populate the builder from an [`ExperimentConfig`].
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
+        Ok(Session::builder()
+            .artifacts(cfg.artifacts_dir.clone())
+            .model(&cfg.model)
+            .backend(Backend::parse(&cfg.backend)?)
+            .method_boxed(plugin_for(cfg)?)
+            .seed(cfg.seed)
+            .epochs(cfg.epochs)
+            .limit(cfg.limit)
+            .eval_batch(cfg.eval_batch)
+            .track_pruning(cfg.track_pruning))
+    }
+
+    pub fn build(self) -> Result<Session> {
+        let backbone = match self.backbone {
+            Some(b) => b,
+            None => Backbone::load(&self.artifacts, &self.model)?,
+        };
+        let mut plugin = self
+            .method
+            .unwrap_or_else(|| Box::new(Priot::new()) as Box<dyn MethodPlugin>);
+        plugin.init(&backbone.spec, &backbone.weights, self.seed)?;
+        let opts = RunOptions {
+            epochs: self.epochs,
+            limit: self.limit,
+            track_pruning: self.track_pruning,
+            verbose: self.verbose,
+            eval_batch: self.eval_batch,
+        };
+        let spec = backbone.spec.clone();
+        let exec = match self.backend {
+            Backend::Engine => {
+                let engine = Engine::shared(
+                    backbone.spec.clone(),
+                    Arc::clone(&backbone.weights),
+                    Arc::clone(&backbone.scales),
+                )?;
+                Exec::Engine(EngineExecutor::new(engine, plugin))
+            }
+            Backend::Pjrt => build_pjrt(&self.artifacts, &backbone, plugin)?,
+        };
+        Ok(Session { exec, opts, spec, seed: self.seed })
+    }
+}

@@ -1,0 +1,92 @@
+//! LRU eviction of idle resident sessions under
+//! [`super::ServeBuilder::resident_cap`] pressure.  The invariants at
+//! this seam:
+//!
+//! * Eviction runs on worker threads at **op-queue idle points** and
+//!   only ever picks devices with no pending requests, so it cannot
+//!   interleave with a device's own ops.
+//! * The store flush happens **outside the registry lock**; the
+//!   `evicting` flag marks the gap, and a worker that claims the device
+//!   meanwhile defers and retries (see [`super::workers`]).
+//! * **State is never lost:** a failed flush puts the device back
+//!   resident and stops evicting; only a device whose store copy is
+//!   up to date (clean, or freshly flushed) goes store-only.
+
+use std::sync::atomic::Ordering;
+
+use super::registry::Shared;
+use super::workers::device_snapshot;
+
+/// Evict least-recently-used idle devices until the resident count is
+/// back under the cap.  Runs on worker threads at op-queue idle points;
+/// devices with pending work are never touched, so eviction cannot
+/// interleave with a device's own ops.  The flush happens outside the
+/// registry lock; a worker that claims the device meanwhile sees the
+/// `evicting` flag and defers.
+pub(super) fn enforce_resident_cap(shared: &Shared) {
+    let Some(store) = &shared.store else {
+        return; // nowhere to evict into
+    };
+    loop {
+        let victim = {
+            let mut reg = shared.registry.lock().expect("serve registry");
+            if reg.resident <= shared.resident_cap {
+                return;
+            }
+            let pick = reg
+                .map
+                .iter()
+                .filter(|(_, st)| {
+                    st.pending == 0
+                        && !st.evicting
+                        && st.resident
+                            .as_ref()
+                            .is_some_and(|r| r.session.is_some())
+                })
+                .min_by_key(|(_, st)| st.last_used)
+                .map(|(d, _)| d.clone());
+            let Some(device) = pick else {
+                return; // everyone is busy; re-checked at the next idle point
+            };
+            let st = reg.map.get_mut(&device).expect("picked device");
+            st.evicting = true;
+            let res = st.resident.take().expect("picked resident");
+            let meta = (st.epochs_done, st.angle, st.dirty);
+            reg.resident -= 1;
+            (device, res, meta)
+        };
+        let (device, res, (epochs_done, angle, dirty)) = victim;
+        // Flush outside the lock — and only when the store is stale
+        // (write-through at op completion usually already covered it).
+        let result = if dirty {
+            let session = res.session.as_ref().expect("evicted session");
+            device_snapshot(session, &device, &res.train, &res.test,
+                            epochs_done, angle)
+                .and_then(|snap| store.put(&snap))
+        } else {
+            Ok(())
+        };
+        let mut reg = shared.registry.lock().expect("serve registry");
+        match result {
+            Ok(()) => {
+                let st = reg.map.get_mut(&device).expect("evicting device");
+                st.evicting = false;
+                st.dirty = false;
+                shared.evictions.fetch_add(1, Ordering::Relaxed);
+                // resident stays None: the device is now store-only.
+            }
+            Err(e) => {
+                // Never lose state: keep the device resident and stop
+                // evicting for now.
+                let st = reg.map.get_mut(&device).expect("evicting device");
+                st.evicting = false;
+                st.resident = Some(res);
+                reg.resident += 1;
+                eprintln!(
+                    "[serve] evicting {device}: {e:#} — keeping it resident"
+                );
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Ingress: per-connection frame pumps and the dispatcher thread.
+//!
+//! Every connection flavor — in-process channel or TCP socket — gets the
+//! same pair of pump threads (a reader decoding request frames, a writer
+//! encoding responses) feeding the single dispatcher.  The invariants
+//! enforced at this seam:
+//!
+//! * **The dispatcher stays light.**  It only does registry map surgery
+//!   and lane pushes; heavy work (dataset validation, session builds,
+//!   store IO) always runs on the worker pool, so one slow register
+//!   cannot stall dispatch for every other connection.
+//! * **The inflight window is enforced at accept time**: a device with
+//!   `window` accepted-but-unanswered requests gets an immediate error
+//!   response instead of an unbounded backlog
+//!   ([`super::ServeBuilder::window`]).
+//! * **Register runs first.**  A register unit is queued at the *head*
+//!   (interactive) lane of a fresh provisional entry, so it is
+//!   guaranteed to execute before any op pipelined behind it.
+//! * **A malformed frame never desyncs a connection**: framing is
+//!   length-delimited, so the bad payload is answered with an error
+//!   (carrying the id salvaged from the frame header) and the stream
+//!   keeps serving.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::proto::{codec, ErrorKind, Priority, Request, Response};
+
+use super::registry::{note_request, respond, DeviceState, Item, Shared, Work};
+
+/// Reply route of one connection: the worker that completes a request
+/// sends `(request id, response)` here; the connection's writer pump
+/// encodes and ships it.
+#[derive(Clone)]
+pub(super) struct Reply(pub(super) Sender<(u64, Response)>);
+
+/// One accepted request: decoded frame + its reply route.
+pub(super) struct Inbound {
+    pub(super) id: u64,
+    pub(super) priority: Priority,
+    pub(super) req: Request,
+    pub(super) reply: Reply,
+}
+
+/// Decode loop shared by every connection flavor: frames in, [`Inbound`]s
+/// out.  A malformed frame is answered — and reported — like any other
+/// failed request: an `Error` response carrying the frame's own request
+/// id (salvaged from the fixed header, so a synchronous client waiting
+/// on that id sees the error instead of hanging), counted and recorded
+/// via [`respond`].  The connection keeps serving — framing is
+/// length-delimited, so one bad payload does not desync the stream.
+fn read_loop(shared: &Shared,
+             mut recv: impl FnMut() -> Result<Option<Vec<u8>>>,
+             ingress: &Sender<Inbound>, reply: &Reply) {
+    loop {
+        let frame = match recv() {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break, // peer closed / connection error
+        };
+        match codec::decode_request(&frame) {
+            Ok((id, priority, req)) => {
+                let inb = Inbound { id, priority, req, reply: reply.clone() };
+                if ingress.send(inb).is_err() {
+                    break; // server shutting down
+                }
+            }
+            Err(e) => {
+                note_request(shared);
+                respond(shared, reply, codec::frame_request_id(&frame),
+                        Response::Error {
+                            device: String::new(),
+                            kind: ErrorKind::Request,
+                            message: format!("bad request frame: {e:#}"),
+                        });
+            }
+        }
+    }
+}
+
+/// Wire up one connection, whatever carries its frames: a writer pump
+/// encoding responses into `send_frame` and a reader pump feeding
+/// decoded requests to the dispatcher.
+pub(super) fn spawn_connection(
+    shared: &Arc<Shared>,
+    ingress: Sender<Inbound>,
+    mut send_frame: impl FnMut(Vec<u8>) -> bool + Send + 'static,
+    recv_frame: impl FnMut() -> Result<Option<Vec<u8>>> + Send + 'static,
+) {
+    let (otx, orx) = channel::<(u64, Response)>();
+    let writer = std::thread::spawn(move || {
+        for (id, resp) in orx {
+            if !send_frame(codec::encode_response(id, &resp)) {
+                break;
+            }
+        }
+    });
+    let reply = Reply(otx);
+    let reader = {
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            read_loop(&shared, recv_frame, &ingress, &reply);
+        })
+    };
+    track_conn(shared, reader, writer);
+}
+
+/// Track a connection's pump threads, reaping the handles of pumps that
+/// already finished (long-lived servers see many connections come and
+/// go; their handles must not accumulate until `join()`).
+fn track_conn(shared: &Shared, reader: JoinHandle<()>, writer: JoinHandle<()>) {
+    let mut conns = shared.conns.lock().expect("serve connections");
+    conns.retain(|h| !h.is_finished());
+    conns.push(reader);
+    conns.push(writer);
+}
+
+pub(super) fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
+    for inb in rx {
+        note_request(shared);
+        let device = inb.req.device().to_string();
+        let (id, reply) = (inb.id, inb.reply.clone());
+        // After an abort (`Drop` without `join`: worker pool stopped,
+        // dispatcher detached) the server must still *answer* — with an
+        // error — or a synchronous client that submits after the drop
+        // would wait forever on a request nothing will ever run.
+        if shared.done.load(Ordering::SeqCst) {
+            respond(shared, &reply, id, Response::Error {
+                device,
+                kind: ErrorKind::Shutdown,
+                message: "fleet server is shut down".into(),
+            });
+            continue;
+        }
+        if let Err(e) = handle_request(shared, inb) {
+            respond(shared, &reply, id, Response::Error {
+                device,
+                kind: ErrorKind::Request,
+                message: format!("{e:#}"),
+            });
+        }
+    }
+}
+
+fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
+    let Inbound { id, priority, req, reply } = inb;
+    match req {
+        // Register is *routed* here but *executed* on the worker pool:
+        // dataset validation, session construction, and store lookups
+        // are heavy, and heavy work never runs on the dispatcher (a
+        // slow register must not stall dispatch for every connection).
+        // The dispatcher only does map surgery: create a provisional
+        // entry and queue the register unit at the head lane, so it is
+        // guaranteed to run before any op pipelined behind it.
+        Request::Register { device, seed, method, train, test, angle } => {
+            // Canonicalize the method description up front: snapshots
+            // store canonical specs (read back from the live plugin), so
+            // resume identity checks must compare canonical forms — a
+            // register with an unset θ must match a stored device whose
+            // snapshot spells out the method's default θ.
+            let method = method.canonical();
+            let mut reg = shared.registry.lock().expect("serve registry");
+            if let Some(st) = reg.map.get_mut(&device) {
+                if st.seed != seed || st.method != method {
+                    bail!("device {device} is already registered with a \
+                           different method or seed");
+                }
+                if st.registered {
+                    // Known device (live or evicted): a resume handshake.
+                    // Its state is kept, the supplied datasets are
+                    // ignored, and rehydration stays lazy until real
+                    // work arrives.
+                    drop(reg);
+                    respond(shared, &reply, id,
+                            Response::Registered { device, resumed: true });
+                    return Ok(());
+                }
+                // Same identity while the original register is still
+                // building on the pool (reconnects can race a slow
+                // register): queue the handshake behind it in the head
+                // lane — acked as a resume once the build lands, or
+                // answered with the register failure if it does not.
+                if st.pending >= shared.window {
+                    bail!(
+                        "device {device}: inflight window full ({} of {} \
+                         requests pending)",
+                        st.pending, shared.window
+                    );
+                }
+                st.pending += 1;
+                st.lanes[0].push_back(Item {
+                    id,
+                    reply,
+                    work: Work::Register { seed, method, train, test, angle },
+                });
+                *shared.outstanding.lock().expect("serve outstanding") += 1;
+                if !st.queued {
+                    st.queued = true;
+                    shared
+                        .ready
+                        .lock()
+                        .expect("serve ready queue")
+                        .push_back(device);
+                    shared.ready_cv.notify_one();
+                }
+                return Ok(());
+            }
+            let mut st = DeviceState::new(seed, method.clone());
+            st.pending = 1;
+            st.queued = true;
+            st.lanes[0].push_back(Item {
+                id,
+                reply,
+                work: Work::Register { seed, method, train, test, angle },
+            });
+            reg.map.insert(device.clone(), st);
+            *shared.outstanding.lock().expect("serve outstanding") += 1;
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device);
+            shared.ready_cv.notify_one();
+            Ok(())
+        }
+        Request::Train { device, epochs } => enqueue(shared, &device, priority,
+            Item {
+                id,
+                reply,
+                work: Work::Train { remaining: epochs, done: 0, steps: 0 },
+            }),
+        Request::Predict { device, image } => enqueue(shared, &device, priority,
+            Item { id, reply, work: Work::Predict { image } }),
+        Request::Evaluate { device } => enqueue(shared, &device, priority,
+            Item { id, reply, work: Work::Evaluate }),
+        Request::Drift { device, train, test, angle } => {
+            // Validation runs with the op on the worker pool, like
+            // Register's.
+            enqueue(shared, &device, priority,
+                    Item { id, reply, work: Work::Drift { train, test, angle } })
+        }
+    }
+}
+
+fn enqueue(shared: &Shared, device: &str, priority: Priority, item: Item)
+           -> Result<()> {
+    let mut reg = shared.registry.lock().expect("serve registry");
+    let st = reg
+        .map
+        .get_mut(device)
+        .ok_or_else(|| anyhow!("unknown device {device} (register first)"))?;
+    if st.pending >= shared.window {
+        bail!(
+            "device {device}: inflight window full ({} of {} requests \
+             pending — drain responses before submitting more)",
+            st.pending,
+            shared.window
+        );
+    }
+    st.pending += 1;
+    st.lanes[priority.lane()].push_back(item);
+    *shared.outstanding.lock().expect("serve outstanding") += 1;
+    if !st.queued {
+        st.queued = true;
+        shared
+            .ready
+            .lock()
+            .expect("serve ready queue")
+            .push_back(device.to_string());
+        shared.ready_cv.notify_one();
+    }
+    Ok(())
+}

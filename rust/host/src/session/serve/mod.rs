@@ -1,0 +1,658 @@
+//! `priot::serve` — a long-lived fleet service behind the
+//! [`crate::proto`] wire boundary.
+//!
+//! [`Fleet`](super::Fleet) runs a *closed* roster of devices to
+//! completion; this module is the open-ended counterpart: a service that
+//! owns one shared `Arc<`[`Backbone`]`>` plus a registry of per-device
+//! [`Session`](super::Session)s and consumes a **stream** of
+//! [`Request`](crate::proto::Request) frames from any number of
+//! connected [`FleetClient`]s — register a device, train it some epochs,
+//! classify an image, evaluate, or swap its local data when the
+//! distribution drifts.
+//!
+//! Clients connect through a [`Transport`]: in-process over
+//! [`FleetServer::local_client`] (mpsc frames) or over TCP via
+//! [`FleetServer::listen`] + [`FleetClient::connect`].  Both paths run
+//! the same codec and dispatch machinery, so responses are bit-identical
+//! whichever transport carries them.
+//!
+//! The implementation is split by concern, with the concurrency
+//! invariants documented at each seam: `registry` (the shared
+//! scheduler state and its lock order), `ingress` (connection pumps
+//! and the dispatcher), `workers` (the pool that executes ops and
+//! persists state), `evict` (the resident-session LRU), and `trace`
+//! (scripted request traces).  This file keeps the public surface:
+//! [`ServeBuilder`], [`FleetServer`], [`ServeReport`], [`AuditPolicy`].
+//!
+//! ## Scheduling
+//!
+//! Work is *priority-laned* and *epoch-granular*:
+//!
+//! * Every queued unit is one operation of one device (one training
+//!   epoch, one prediction, one evaluation).  A device with pending work
+//!   re-queues at the back after each unit, so a device mid-adaptation
+//!   never monopolizes a worker while other devices wait.
+//! * Within a device, pending requests drain by
+//!   [`Priority`](crate::proto::Priority) (predict > evaluate > train,
+//!   FIFO within a class): an interactive prediction submitted behind a
+//!   long `Train` is answered between training epochs instead of after
+//!   all of them.  A multi-epoch `Train` materializes one epoch at a
+//!   time, so it can be preempted at every epoch boundary.  `Drift`
+//!   rides the training lane, preserving train → drift → train
+//!   submission order.
+//! * The dispatcher enforces a bounded per-device **inflight window**
+//!   ([`ServeBuilder::window`]): a device with too many unanswered
+//!   requests gets an immediate `Error` response instead of an unbounded
+//!   backlog.
+//! * **Heavy work never runs on the dispatcher thread.**  `Register` —
+//!   dataset validation, session construction, store lookups — executes
+//!   on the worker pool like everything else (the dispatcher only
+//!   creates the registry entry and queues the register unit at the
+//!   head of the device's lanes, so it is guaranteed to run before any
+//!   op pipelined behind it).  One slow register therefore cannot stall
+//!   dispatch for other connections.
+//!
+//! Operations of one device never run concurrently, so per-device
+//! results are bit-identical to a standalone session executing the same
+//! operations in the same order.  A synchronous client (one request in
+//! flight) therefore sees exactly standalone behavior; pipelined clients
+//! opt into priority reordering (pin everything to
+//! [`Priority::Background`](crate::proto::Priority::Background) to keep
+//! strict submission order).
+//!
+//! Evaluation goes through the batched forward path
+//! ([`Session::evaluate_batch`](super::Session::evaluate_batch)) —
+//! bit-identical to per-sample, faster.
+//!
+//! ## Durable state and the LRU of resident sessions
+//!
+//! With a [`StateStore`] attached ([`ServeBuilder::store`] /
+//! [`ServeBuilder::state_dir`]), every device's state is **durable**:
+//!
+//! * Each completed state-mutating request (`Train`, `Drift`, the
+//!   initial `Register`) writes the device's
+//!   [`DeviceSnapshot`](crate::store::DeviceSnapshot) — exact-i32
+//!   scores/masks/weights, step counter, datasets, epoch progress,
+//!   drift-angle provenance — *before* its response is emitted, so any
+//!   state a client has been told about survives a crash.
+//! * [`ServeBuilder::resident_cap`]`(N)` bounds **live** sessions: the
+//!   registry becomes an LRU over the store.  When more than `N`
+//!   devices are resident, the least-recently-used *idle* device (no
+//!   pending requests — eviction happens at op-queue idle points, never
+//!   mid-request) is flushed and dropped from memory.  Any later
+//!   request to an evicted device lazily rehydrates it on the worker
+//!   pool — bit-identically, so an evicted-and-rehydrated device's
+//!   responses are byte-equal to an always-resident one's.
+//! * A `Register` for a device the server already knows — live,
+//!   evicted, or recovered from a previous process (`priot serve
+//!   --state-dir` rescans the store at startup, reading only snapshot
+//!   *headers* — no dataset blob is materialized until a device
+//!   actually rehydrates) — is a **resume**: state is kept, the
+//!   supplied datasets are ignored, and the response says
+//!   `resumed: true`, making reconnecting clients first-class.
+//! * [`FleetServer::join`] flushes all dirty state; a restarted server
+//!   over the same store resumes every device where it left off.
+//!   Startup and shutdown also sweep unreferenced dataset blobs
+//!   ([`StateStore::gc_blobs`]) — both are quiesced points, so the
+//!   sweep can never race a writer.
+//!
+//! ```no_run
+//! use priot::proto::{FleetClient, MethodSpec};
+//! use priot::session::{Backbone, FleetServer};
+//!
+//! let backbone = Backbone::load("artifacts".as_ref(), "tinycnn")?;
+//! # let (train, test): (std::sync::Arc<priot::serial::Dataset>,
+//! #                     std::sync::Arc<priot::serial::Dataset>) = todo!();
+//! let mut server = FleetServer::builder(backbone)
+//!     .threads(4)
+//!     .state_dir("fleet-state")?   // durable; restart-resumable
+//!     .resident_cap(64)            // LRU-bound live sessions
+//!     .build();
+//! let addr = server.listen("127.0.0.1:0")?;   // or server.local_client()
+//! let mut client = FleetClient::connect(addr)?;
+//! client.register("dev-00", 1, MethodSpec::priot(), train, test)?;
+//! client.train("dev-00", 2)?;
+//! client.evaluate("dev-00")?;
+//! drop(client);                    // close the connection...
+//! let report = server.join()?;     // ...then drain + flush + shut down
+//! println!("{}", report.summary());
+//! # anyhow::Ok(())
+//! ```
+//!
+//! The `priot serve` CLI subcommand drives a server from a scripted
+//! request trace ([`parse_trace`]; [`DEMO_TRACE`] is a worked sample) or
+//! listens on TCP (`--listen`, with `--state-dir`/`--resident-cap` for
+//! durability); `priot client` replays a trace against a remote server.
+
+mod evict;
+mod ingress;
+mod registry;
+mod trace;
+mod workers;
+
+pub use trace::{parse_trace, replay_trace, TraceCmd, DEMO_TRACE};
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::proto::{
+    ChannelTransport, FleetClient, Response, TcpTransport, Transport,
+};
+use crate::store::{DiskStore, MemStore, StateStore};
+
+use super::Backbone;
+
+use ingress::{dispatch, spawn_connection, Inbound};
+use registry::{Clock, DeviceState, Registry, Shared};
+use workers::{device_snapshot, worker};
+
+/// Register-time static-soundness policy (see [`crate::audit`]): what to
+/// do when a fresh `Register`'s (backbone, scales, method) combination
+/// cannot be statically proven overflow-free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AuditPolicy {
+    /// No register-time audit (the default).
+    #[default]
+    Off,
+    /// Audit and log unsound registrations to stderr, but accept them.
+    Warn,
+    /// Refuse unsound registrations with a request error.
+    Reject,
+}
+
+// ---------------------------------------------------------------------------
+// The server handle
+// ---------------------------------------------------------------------------
+
+/// Builder for [`FleetServer`].
+pub struct ServeBuilder {
+    backbone: Arc<Backbone>,
+    threads: usize,
+    limit: usize,
+    eval_batch: usize,
+    window: usize,
+    record: bool,
+    store: Option<Arc<dyn StateStore>>,
+    resident_cap: usize,
+    audit: AuditPolicy,
+}
+
+impl ServeBuilder {
+    /// Worker thread count (0 = available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Per-epoch / per-evaluation sample cap handed to every session
+    /// (0 = all).
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Samples per forward in evaluation (bit-identical to per-sample;
+    /// default 8).
+    pub fn eval_batch(mut self, batch: usize) -> Self {
+        self.eval_batch = batch;
+        self
+    }
+
+    /// Per-device inflight window: the maximum accepted-but-unanswered
+    /// requests one device may have queued.  Submissions beyond it are
+    /// answered with an immediate `Error` instead of growing the backlog
+    /// (0 = unbounded; default 64).
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Keep every response for the final [`ServeReport`] (default on).
+    /// Turn it off for a long-lived listener that never `join()`s —
+    /// responses still reach their clients, but the server no longer
+    /// accumulates a copy of each one for the whole process lifetime.
+    pub fn record(mut self, on: bool) -> Self {
+        self.record = on;
+        self
+    }
+
+    /// Attach a durable [`StateStore`]: device snapshots are written
+    /// through on every completed state-mutating request, known devices
+    /// found in the store at startup are resumable, and a `Register`
+    /// for a stored device resumes it.
+    pub fn store(mut self, store: Arc<dyn StateStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Convenience: attach a [`DiskStore`] rooted at `dir` (created if
+    /// missing) — what `priot serve --state-dir DIR` uses.
+    pub fn state_dir(self, dir: impl Into<std::path::PathBuf>)
+                     -> Result<Self> {
+        Ok(self.store(Arc::new(DiskStore::open(dir)?)))
+    }
+
+    /// Bound **live** sessions: at most `cap` devices keep their session
+    /// (scores, masks, activation buffers) in memory; the least-recently-
+    /// used idle devices beyond it are evicted to the store and lazily
+    /// rehydrated on their next request — bit-identically.  0 (the
+    /// default) = unbounded.  Setting a cap without a store attaches a
+    /// [`MemStore`] automatically (eviction needs somewhere to put
+    /// state).
+    pub fn resident_cap(mut self, cap: usize) -> Self {
+        self.resident_cap = cap;
+        self
+    }
+
+    /// Register-time static-soundness policy (default
+    /// [`AuditPolicy::Off`]): with [`AuditPolicy::Reject`] a fresh
+    /// `Register` whose method spec cannot be statically proven
+    /// overflow-free under this backbone's weights and scale table is
+    /// answered with a request error instead of creating a device —
+    /// what `priot serve --audit reject` sets.
+    pub fn audit(mut self, policy: AuditPolicy) -> Self {
+        self.audit = policy;
+        self
+    }
+
+    /// Spawn the dispatcher + worker pool and return the live handle.
+    pub fn build(self) -> FleetServer {
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        let store = self.store.or_else(|| {
+            (self.resident_cap > 0).then(|| {
+                Arc::new(MemStore::new()) as Arc<dyn StateStore>
+            })
+        });
+        let resident_cap = if self.resident_cap == 0 {
+            usize::MAX
+        } else {
+            self.resident_cap
+        };
+        // Restart-resume: every device the store already knows becomes a
+        // registered (evicted) entry, so a `Train` straight after a
+        // restart rehydrates lazily and a `Register` resumes.  The scan
+        // reads snapshot *headers* only — recovering a thousand-device
+        // fleet materializes zero dataset blobs.
+        let mut registry =
+            Registry { map: HashMap::new(), resident: 0, tick: 0 };
+        if let Some(store) = &store {
+            match store.devices() {
+                Ok(devices) => {
+                    for device in devices {
+                        match store.get_body(&device) {
+                            Ok(Some(body))
+                                if body.session.model == self.backbone.model =>
+                            {
+                                registry.map.insert(
+                                    device,
+                                    DeviceState::from_body(&body),
+                                );
+                            }
+                            Ok(Some(body)) => eprintln!(
+                                "[serve] skipping stored device {device}: \
+                                 snapshot is for model {}, serving {}",
+                                body.session.model, self.backbone.model
+                            ),
+                            Ok(None) => {}
+                            Err(e) => eprintln!(
+                                "[serve] skipping stored device {device}: \
+                                 {e:#}"
+                            ),
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[serve] scanning the state store: {e:#}");
+                }
+            }
+            // No workers exist yet, so nothing can race the sweep of
+            // blobs orphaned by removes or by a crash between a blob
+            // write and its body write.  Non-fatal: serving works fine
+            // with dead blobs on disk.
+            if let Err(e) = store.gc_blobs() {
+                eprintln!("[serve] startup blob GC: {e:#}");
+            }
+        }
+        let shared = Arc::new(Shared {
+            backbone: self.backbone,
+            limit: self.limit,
+            eval_batch: self.eval_batch,
+            window: if self.window == 0 { usize::MAX } else { self.window },
+            audit: self.audit,
+            store,
+            resident_cap,
+            registry: Mutex::new(registry),
+            ready: Mutex::new(VecDeque::new()),
+            ready_cv: Condvar::new(),
+            done: AtomicBool::new(false),
+            outstanding: Mutex::new(0),
+            idle_cv: Condvar::new(),
+            requests: AtomicU64::new(0),
+            rehydrations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            record: Mutex::new(Vec::new()),
+            record_enabled: self.record,
+            clock: Mutex::new(Clock::default()),
+            accepting: AtomicBool::new(true),
+            conns: Mutex::new(Vec::new()),
+        });
+        let (itx, irx) = channel::<Inbound>();
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || dispatch(&shared, irx))
+        };
+        let workers = (0..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker(&shared))
+            })
+            .collect();
+        FleetServer {
+            shared,
+            ingress: Some(itx),
+            dispatcher: Some(dispatcher),
+            workers,
+            acceptor: None,
+            threads,
+        }
+    }
+}
+
+/// The long-lived fleet service: one shared backbone, a registry of
+/// per-device sessions (optionally LRU-bounded over a durable
+/// [`StateStore`]), a dispatcher thread feeding priority-laned
+/// per-device queues, and a worker pool draining them.  Clients talk to
+/// it exclusively through [`FleetClient`] — see the module docs.
+pub struct FleetServer {
+    shared: Arc<Shared>,
+    ingress: Option<Sender<Inbound>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    acceptor: Option<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl FleetServer {
+    pub fn builder(backbone: Arc<Backbone>) -> ServeBuilder {
+        ServeBuilder {
+            backbone,
+            threads: 0,
+            limit: 0,
+            eval_batch: 8,
+            window: 64,
+            record: true,
+            store: None,
+            resident_cap: 0,
+            audit: AuditPolicy::Off,
+        }
+    }
+
+    /// Connect an in-process client over a [`ChannelTransport`] — the
+    /// successor of the old raw `mpsc::Sender<Request>` front door, now
+    /// running the same codec and dispatch path as TCP connections.
+    ///
+    /// **Lifetime contract:** the dispatcher only shuts down once every
+    /// connection has closed.  [`Self::join`] waits for that — so drop
+    /// all clients (ending their connections) before calling `join`, or
+    /// it will block until they are gone.
+    pub fn local_client(&self) -> FleetClient {
+        let (client_end, server_end) = ChannelTransport::pair();
+        let (stx, srx) = server_end.into_parts();
+        let ingress = self.ingress.as_ref().expect("server joined").clone();
+        spawn_connection(
+            &self.shared,
+            ingress,
+            move |frame| stx.send(frame).is_ok(),
+            move || Ok(srx.recv().ok()),
+        );
+        FleetClient::over(client_end)
+    }
+
+    /// Accept TCP clients on `addr` (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral loopback port).  Returns the bound address; connect
+    /// with [`FleetClient::connect`].
+    pub fn listen(&mut self, addr: &str) -> Result<SocketAddr> {
+        if self.acceptor.is_some() {
+            bail!("server is already listening");
+        }
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fleet listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        // Non-blocking accept so the acceptor can observe shutdown.
+        listener
+            .set_nonblocking(true)
+            .context("configuring the fleet listener")?;
+        let shared = Arc::clone(&self.shared);
+        let ingress = self.ingress.as_ref().expect("server joined").clone();
+        self.acceptor = Some(std::thread::spawn(move || {
+            while shared.accepting.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // Accepted sockets must not inherit the
+                        // listener's non-blocking mode.
+                        let _ = stream.set_nonblocking(false);
+                        let wstream = match stream.try_clone() {
+                            Ok(s) => s,
+                            // Connection unusable before it started.
+                            Err(_) => continue,
+                        };
+                        let mut wt = TcpTransport::from_stream(wstream);
+                        let mut rt = TcpTransport::from_stream(stream);
+                        spawn_connection(
+                            &shared,
+                            ingress.clone(),
+                            move |frame| wt.send(frame).is_ok(),
+                            move || rt.recv(),
+                        );
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+        Ok(local)
+    }
+
+    /// Graceful shutdown: stop accepting connections, finish every
+    /// accepted request, stop the pool, **flush all dirty device state
+    /// to the store**, and return everything the run produced.
+    ///
+    /// Blocks until every connection has closed — drop your
+    /// [`FleetClient`]s first (see [`Self::local_client`]).
+    pub fn join(mut self) -> Result<ServeReport> {
+        self.ingress.take(); // our own ingress handle
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            a.join().map_err(|_| anyhow!("serve acceptor panicked"))?;
+        }
+        // The dispatcher exits once every connection reader has dropped
+        // its ingress handle (i.e. every client disconnected).
+        if let Some(d) = self.dispatcher.take() {
+            d.join().map_err(|_| anyhow!("serve dispatcher panicked"))?;
+        }
+        {
+            let mut out =
+                self.shared.outstanding.lock().expect("serve outstanding");
+            while *out > 0 {
+                out = self.shared.idle_cv.wait(out).expect("serve outstanding");
+            }
+        }
+        self.shared.signal_done();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow!("serve worker panicked"))?;
+        }
+        // Flush whatever the write-through path could not persist (a
+        // device is only dirty here if an earlier store write failed),
+        // so a restarted server resumes exactly this state.
+        if let Some(store) = &self.shared.store {
+            {
+                let reg = self.shared.registry.lock().expect("serve registry");
+                for (device, st) in reg.map.iter() {
+                    if !st.dirty {
+                        continue;
+                    }
+                    let Some(res) = &st.resident else { continue };
+                    let Some(session) = &res.session else { continue };
+                    let flushed = device_snapshot(session, device, &res.train,
+                                                  &res.test, st.epochs_done,
+                                                  st.angle)
+                        .and_then(|snap| store.put(&snap));
+                    if let Err(e) = flushed {
+                        eprintln!("[serve] final flush of {device}: {e:#}");
+                    }
+                }
+            }
+            // Workers are joined and dirty state is flushed: a quiesced
+            // point, so the blob sweep cannot race a writer.  Non-fatal,
+            // like the flush itself.
+            if let Err(e) = store.gc_blobs() {
+                eprintln!("[serve] shutdown blob GC: {e:#}");
+            }
+        }
+        // Connection pumps exit once their peer is gone and their queued
+        // responses are flushed (all Reply handles were dropped above).
+        let conns: Vec<JoinHandle<()>> = {
+            let mut c = self.shared.conns.lock().expect("serve connections");
+            c.drain(..).collect()
+        };
+        for c in conns {
+            c.join().map_err(|_| anyhow!("serve connection pump panicked"))?;
+        }
+        let responses =
+            std::mem::take(&mut *self.shared.record.lock().expect("record"));
+        let clock = self.shared.clock.lock().expect("serve clock");
+        let wall_secs = match (clock.first_request, clock.last_response) {
+            (Some(t0), Some(t1)) => {
+                t1.saturating_duration_since(t0).as_secs_f64()
+            }
+            _ => 0.0,
+        };
+        drop(clock);
+        Ok(ServeReport {
+            responses,
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            rehydrations: self.shared.rehydrations.load(Ordering::Relaxed),
+            evictions: self.shared.evictions.load(Ordering::Relaxed),
+            wall_secs,
+            threads: self.threads,
+        })
+    }
+}
+
+impl Drop for FleetServer {
+    /// Abort path (no [`Self::join`]): stop accepting, let the pool
+    /// drain what is already queued, and reap what can be reaped without
+    /// blocking on live clients.  The dispatcher and per-connection
+    /// pumps exit on their own once every client disconnects, so they
+    /// are *detached*, not joined — dropping a server with a client
+    /// still attached must not hang the dropping thread.  Requests
+    /// submitted after the drop are answered with an `Error` by the
+    /// detached dispatcher; a request racing the drop itself may go
+    /// unanswered (an aborting server makes no delivery promises).  No
+    /// final store flush runs — but the write-through path has already
+    /// persisted every state a client was told about, so a store-backed
+    /// fleet still resumes to the last acknowledged state.
+    /// No-op after `join()` (which consumed the handles already).
+    fn drop(&mut self) {
+        self.ingress.take();
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Detach the dispatcher: it exits once every connection reader
+        // has dropped its ingress handle (i.e. every client is gone).
+        self.dispatcher.take();
+        self.shared.signal_done();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Connection pumps are likewise detached; their handles are
+        // freed with `Shared` when the last thread holding it exits.
+    }
+}
+
+/// Everything one server run produced.
+pub struct ServeReport {
+    /// Responses in completion order (per device: execution order).
+    pub responses: Vec<Response>,
+    pub requests: u64,
+    /// Sessions rebuilt from the state store (lazy rehydrations of
+    /// evicted devices + resumed registers).
+    pub rehydrations: u64,
+    /// Idle devices flushed out of memory under `resident_cap` pressure.
+    pub evictions: u64,
+    /// First request received → last response emitted.  Idle time before
+    /// traffic arrives does not count against requests/sec.
+    pub wall_secs: f64,
+    pub threads: usize,
+}
+
+impl ServeReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Rehydrations per second of serving wall time (the LRU churn rate
+    /// under eviction pressure — what the `serve` bench tracks).
+    pub fn rehydrations_per_sec(&self) -> f64 {
+        self.rehydrations as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.responses.iter().filter(|r| r.is_error()).count()
+    }
+
+    /// This device's responses, in its execution order.
+    pub fn for_device<'a>(&'a self, device: &str) -> Vec<&'a Response> {
+        self.responses.iter().filter(|r| r.device() == device).collect()
+    }
+
+    /// One-paragraph run summary.
+    pub fn summary(&self) -> String {
+        let mut kinds: HashMap<&'static str, usize> = HashMap::new();
+        for r in &self.responses {
+            let k = match r {
+                Response::Registered { .. } => "registered",
+                Response::TrainDone { .. } => "train-done",
+                Response::Prediction { .. } => "predictions",
+                Response::Evaluation { .. } => "evaluations",
+                Response::Drifted { .. } => "drifts",
+                Response::Error { .. } => "errors",
+            };
+            *kinds.entry(k).or_insert(0) += 1;
+        }
+        let mut parts: Vec<String> =
+            kinds.iter().map(|(k, v)| format!("{v} {k}")).collect();
+        parts.sort();
+        let mut out = format!(
+            "{} requests in {:.2}s on {} threads — {:.1} requests/s ({})",
+            self.requests,
+            self.wall_secs,
+            self.threads,
+            self.requests_per_sec(),
+            parts.join(", ")
+        );
+        if self.rehydrations > 0 || self.evictions > 0 {
+            out.push_str(&format!(
+                "; {} rehydrations, {} evictions",
+                self.rehydrations, self.evictions
+            ));
+        }
+        out
+    }
+}

@@ -1,0 +1,235 @@
+//! Shared scheduler state: the per-device registry, its priority lanes,
+//! and the counters every other serve module reports through.
+//!
+//! Everything sits behind one [`Shared`] per server, used by the
+//! dispatcher ([`super::ingress`]), the worker pool
+//! ([`super::workers`]), the evictor ([`super::evict`]), and the
+//! connection pumps.  The invariants the whole module tree leans on:
+//!
+//! * **Lock order:** `registry` before `ready`/`outstanding`/`record`/
+//!   `clock`; none of those four is ever held while taking another of
+//!   them or `registry`.
+//! * **One turn per device:** a device appears in the ready queue at
+//!   most once ([`DeviceState::queued`]), so two workers can never run
+//!   ops of the same device concurrently — the property that keeps a
+//!   served device's results bit-identical to a standalone session
+//!   executing the same ops in the same order.
+//! * **Lanes drain by priority:** pending items sit in
+//!   [`Priority::COUNT`] FIFO lanes; schedulers always pop the
+//!   lowest-numbered non-empty lane (predict > evaluate > train).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::proto::{MethodSpec, Priority, Response};
+use crate::serial::Dataset;
+use crate::session::{Backbone, Session};
+use crate::store::{codec::SnapshotBody, StateStore};
+
+use super::ingress::Reply;
+use super::AuditPolicy;
+
+/// The pending work of one accepted request.  A multi-epoch `Train` is a
+/// single item that yields one epoch per turn at the device — the unit
+/// the priority lanes preempt at.
+pub(super) enum Work {
+    /// Build (or resume) the device's session — always the device's
+    /// first unit, executed on the worker pool (never the dispatcher).
+    Register {
+        seed: u32,
+        method: MethodSpec,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+        angle: Option<u32>,
+    },
+    Train { remaining: usize, done: usize, steps: u64 },
+    Predict { image: Vec<u8> },
+    Evaluate,
+    Drift { train: Arc<Dataset>, test: Arc<Dataset>, angle: Option<u32> },
+}
+
+/// One queued request: its id, reply route, and pending work.
+pub(super) struct Item {
+    pub(super) id: u64,
+    pub(super) reply: Reply,
+    pub(super) work: Work,
+}
+
+/// A device's in-memory presence: its live session (taken by the worker
+/// executing its current op) and its current datasets.  `None` on the
+/// [`DeviceState`] = the device is evicted (state lives in the store).
+pub(super) struct Resident {
+    /// `None` while a worker has the session checked out.
+    pub(super) session: Option<Session>,
+    pub(super) train: Arc<Dataset>,
+    pub(super) test: Arc<Dataset>,
+}
+
+pub(super) struct DeviceState {
+    /// Live state, or `None` for an evicted / not-yet-rehydrated device.
+    pub(super) resident: Option<Resident>,
+    /// Registration identity — a later `Register` must match to resume.
+    pub(super) seed: u32,
+    pub(super) method: MethodSpec,
+    /// False until the register unit completes (the entry is provisional
+    /// and its lanes start with the register item, which runs first).
+    pub(super) registered: bool,
+    /// True while an evictor is flushing this device to the store; a
+    /// worker that pops the device meanwhile steps aside and retries.
+    pub(super) evicting: bool,
+    /// Pending items by [`Priority`] lane; FIFO within a lane.  A device
+    /// appears in the ready queue iff `queued` — never twice, so its ops
+    /// can never run concurrently.
+    pub(super) lanes: [VecDeque<Item>; Priority::COUNT],
+    pub(super) queued: bool,
+    /// Accepted, unanswered requests (the inflight-window count).
+    pub(super) pending: usize,
+    /// Completed training epochs over the device's lifetime.
+    pub(super) epochs_done: u64,
+    /// Data provenance of the current datasets, when the client said.
+    pub(super) angle: Option<u32>,
+    /// In-memory state is newer than the store (a failed write-through
+    /// leaves this set; eviction and `join()` retry the flush).
+    pub(super) dirty: bool,
+    /// LRU clock value of the device's last checkout.
+    pub(super) last_used: u64,
+}
+
+impl DeviceState {
+    pub(super) fn new(seed: u32, method: MethodSpec) -> Self {
+        Self {
+            resident: None,
+            seed,
+            method,
+            registered: false,
+            evicting: false,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            queued: false,
+            pending: 0,
+            epochs_done: 0,
+            angle: None,
+            dirty: false,
+            last_used: 0,
+        }
+    }
+
+    /// A registered-but-evicted entry recovered from the store at
+    /// startup: requests rehydrate it lazily; a `Register` resumes it.
+    /// Takes the snapshot *body* — the startup scan never materializes
+    /// dataset blobs ([`StateStore::get_body`]).
+    pub(super) fn from_body(body: &SnapshotBody) -> Self {
+        let mut st = Self::new(body.session.seed, body.session.method.clone());
+        st.registered = true;
+        st.epochs_done = body.epochs_done;
+        st.angle = body.angle;
+        st
+    }
+
+    pub(super) fn has_work(&self) -> bool {
+        self.lanes.iter().any(|l| !l.is_empty())
+    }
+}
+
+/// The device registry plus its LRU bookkeeping, under one lock.
+pub(super) struct Registry {
+    pub(super) map: HashMap<String, DeviceState>,
+    /// Devices with `resident.is_some()` (the LRU size).
+    pub(super) resident: usize,
+    /// Monotonic LRU clock.
+    pub(super) tick: u64,
+}
+
+/// Serving clock: requests/sec covers first request → last response, not
+/// idle time before traffic arrives.
+#[derive(Default)]
+pub(super) struct Clock {
+    pub(super) first_request: Option<Instant>,
+    pub(super) last_response: Option<Instant>,
+}
+
+pub(super) struct Shared {
+    pub(super) backbone: Arc<Backbone>,
+    pub(super) limit: usize,
+    pub(super) eval_batch: usize,
+    pub(super) window: usize,
+    /// Register-time static-soundness policy (fresh registers only;
+    /// resumes were audited at original registration).
+    pub(super) audit: AuditPolicy,
+    /// Durable snapshot store; `None` = memory-only serving (no
+    /// eviction, no resume).
+    pub(super) store: Option<Arc<dyn StateStore>>,
+    /// Maximum resident sessions (`usize::MAX` = unbounded).
+    pub(super) resident_cap: usize,
+    /// Devices + LRU state.  Lock order: `registry` before
+    /// `ready`/`outstanding`/`record`/`clock`; none of those four is
+    /// ever held while taking another of them or `registry`.
+    pub(super) registry: Mutex<Registry>,
+    /// Devices with pending work, round-robin.
+    pub(super) ready: Mutex<VecDeque<String>>,
+    pub(super) ready_cv: Condvar,
+    pub(super) done: AtomicBool,
+    /// Accepted op-requests not yet answered (drives graceful shutdown).
+    pub(super) outstanding: Mutex<usize>,
+    pub(super) idle_cv: Condvar,
+    pub(super) requests: AtomicU64,
+    /// Sessions rebuilt from the store (lazy rehydrations + resumed
+    /// registers).
+    pub(super) rehydrations: AtomicU64,
+    /// Idle devices flushed out of memory under `resident_cap` pressure.
+    pub(super) evictions: AtomicU64,
+    /// Every response the run produced, completion order (the
+    /// [`super::ServeReport`] source — per-connection streams are routed
+    /// separately via [`Reply`]).
+    pub(super) record: Mutex<Vec<Response>>,
+    /// Recording off = a long-lived server (`priot serve --listen`) that
+    /// never `join()`s does not grow `record` without bound.
+    pub(super) record_enabled: bool,
+    pub(super) clock: Mutex<Clock>,
+    pub(super) accepting: AtomicBool,
+    pub(super) conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    /// Tell the worker pool to exit.  The store must synchronize through
+    /// the `ready` mutex: a worker that saw `done == false` keeps the
+    /// mutex until it is parked inside `ready_cv.wait`, so passing
+    /// through the lock before notifying guarantees the wakeup is not
+    /// lost between its check and its wait.
+    pub(super) fn signal_done(&self) {
+        self.done.store(true, Ordering::SeqCst);
+        drop(self.ready.lock().expect("serve ready queue"));
+        self.ready_cv.notify_all();
+    }
+}
+
+/// Record a response (when recording is on) and route it to its
+/// connection.
+pub(super) fn respond(shared: &Shared, reply: &Reply, id: u64, resp: Response) {
+    shared.clock.lock().expect("serve clock").last_response =
+        Some(Instant::now());
+    if shared.record_enabled {
+        shared.record.lock().expect("serve record").push(resp.clone());
+    }
+    let _ = reply.0.send((id, resp));
+}
+
+/// Count one received request and start the serving clock on the first.
+pub(super) fn note_request(shared: &Shared) {
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    let mut clock = shared.clock.lock().expect("serve clock");
+    if clock.first_request.is_none() {
+        clock.first_request = Some(Instant::now());
+    }
+}
+
+/// Close out one answered op-request (graceful shutdown accounting).
+pub(super) fn note_done(shared: &Shared, n: usize) {
+    let mut out = shared.outstanding.lock().expect("serve outstanding");
+    *out -= n;
+    if *out == 0 {
+        shared.idle_cv.notify_all();
+    }
+}

@@ -1,0 +1,260 @@
+//! Scripted request traces — the `priot serve` / `priot client`
+//! front-ends.  A trace is a deterministic, human-writable script of
+//! fleet requests; replaying one synchronously produces a result stream
+//! that is bit-identical across transports and to a standalone session
+//! executing the same operations.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Method;
+use crate::proto::{FleetClient, MethodSpec, Response};
+use crate::serial::Dataset;
+
+/// One line of a scripted request trace.  Datasets stay symbolic (an
+/// `angle` into the artifact data) — the CLI resolves them to files.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceCmd {
+    Register { device: String, seed: u32, method: MethodSpec, angle: u32 },
+    Train { device: String, epochs: usize },
+    /// Classify sample `sample` of the device's current test set.
+    Predict { device: String, sample: usize },
+    Evaluate { device: String },
+    Drift { device: String, angle: u32 },
+}
+
+/// A worked sample trace (also what `priot serve` runs when no `--trace`
+/// file is given): two devices with different methods and local drifts —
+/// including an arbitrary-angle drift (60°), which the CLI resolves by
+/// generating the dataset in-process when no artifact exists
+/// ([`crate::data::DataSource`]).
+pub const DEMO_TRACE: &str = "\
+# priot serve demo trace: <verb> <device> [key=value]...
+register dev-a seed=1 method=priot angle=30
+register dev-b seed=2 method=priot-s frac=0.1 selection=weight angle=45
+train dev-a epochs=2
+train dev-b epochs=2
+predict dev-a sample=0
+predict dev-b sample=3
+evaluate dev-a
+evaluate dev-b
+drift dev-a 45           # drift takes its angle positionally too
+train dev-a epochs=1
+evaluate dev-a
+drift dev-b 60           # any angle: no 60-degree artifact is ever built
+train dev-b epochs=1
+evaluate dev-b
+";
+
+/// Parse a request trace: one command per line, `# comments` and blank
+/// lines ignored.  Grammar per line: `<verb> <device> [key=value]...`
+/// with verbs `register | train | predict | evaluate | drift`; `drift`
+/// also accepts its angle positionally (`drift dev0 60`).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceCmd>> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(parse_trace_line(line)
+            .with_context(|| format!("trace line {}: {line}", ln + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_trace_line(line: &str) -> Result<TraceCmd> {
+    let mut it = line.split_whitespace();
+    let verb = it.next().expect("non-empty line");
+    let device = it
+        .next()
+        .ok_or_else(|| anyhow!("missing device name"))?
+        .to_string();
+    let mut kv: HashMap<&str, &str> = HashMap::new();
+    let mut positional: Vec<&str> = Vec::new();
+    for tok in it {
+        match tok.split_once('=') {
+            Some((k, v)) => {
+                kv.insert(k, v);
+            }
+            None => positional.push(tok),
+        }
+    }
+    if verb != "drift" && !positional.is_empty() {
+        bail!("unexpected value {} (expected key=value)", positional[0]);
+    }
+    let get_usize = |kv: &HashMap<&str, &str>, k: &str, d: usize| -> Result<usize> {
+        match kv.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().with_context(|| format!("{k}={v}")),
+        }
+    };
+    Ok(match verb {
+        "register" => {
+            let method = Method::parse(kv.get("method").copied().unwrap_or("priot"))?;
+            let selection = crate::config::Selection::parse(
+                kv.get("selection").copied().unwrap_or("weight"))?;
+            let frac_scored = match kv.get("frac") {
+                None => 0.1,
+                Some(v) => v.parse().with_context(|| format!("frac={v}"))?,
+            };
+            let theta = match kv.get("theta") {
+                None => None,
+                Some(v) => {
+                    Some(v.parse().with_context(|| format!("theta={v}"))?)
+                }
+            };
+            TraceCmd::Register {
+                device,
+                seed: get_usize(&kv, "seed", 1)? as u32,
+                method: MethodSpec { method, frac_scored, selection, theta },
+                angle: get_usize(&kv, "angle", 30)? as u32,
+            }
+        }
+        "train" => TraceCmd::Train {
+            device,
+            epochs: get_usize(&kv, "epochs", 1)?,
+        },
+        "predict" => TraceCmd::Predict {
+            device,
+            sample: get_usize(&kv, "sample", 0)?,
+        },
+        "evaluate" => TraceCmd::Evaluate { device },
+        "drift" => {
+            // Arbitrary drift angles, positionally or as angle=N — no
+            // hardcoded 30°/45° pair.
+            let angle = match (positional.as_slice(), kv.get("angle")) {
+                ([], None) => 45,
+                ([], Some(v)) => {
+                    v.parse().with_context(|| format!("angle={v}"))?
+                }
+                ([one], None) => one
+                    .parse()
+                    .with_context(|| format!("drift angle {one}"))?,
+                ([_], Some(_)) => {
+                    bail!("drift angle given both positionally and as angle=")
+                }
+                (more, _) => bail!("too many values: {}", more.join(" ")),
+            };
+            TraceCmd::Drift { device, angle }
+        }
+        other => bail!("unknown trace verb {other} \
+                        (want register|train|predict|evaluate|drift)"),
+    })
+}
+
+/// Replay a parsed trace over a connected client, one synchronous
+/// request at a time (so per-device order is submission order and the
+/// result stream is deterministic — bit-identical across transports and
+/// to a standalone [`Session`](crate::session::Session) executing the
+/// same operations).  `pair_for` resolves a symbolic drift angle to its
+/// datasets; the angle travels with `Register`/`Drift` as provenance, so
+/// durable snapshots record which rotation a device's data came from.
+pub fn replay_trace(
+    client: &mut FleetClient,
+    cmds: &[TraceCmd],
+    pair_for: &mut dyn FnMut(u32) -> Result<(Arc<Dataset>, Arc<Dataset>)>,
+) -> Result<Vec<Response>> {
+    let mut device_test: HashMap<String, Arc<Dataset>> = HashMap::new();
+    let mut out = Vec::with_capacity(cmds.len());
+    for cmd in cmds {
+        let resp = match cmd.clone() {
+            TraceCmd::Register { device, seed, method, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                client.register_at(&device, seed, method, train, test,
+                                   Some(angle))?
+            }
+            TraceCmd::Train { device, epochs } => {
+                client.train(&device, epochs)?
+            }
+            TraceCmd::Predict { device, sample } => {
+                let test = device_test.get(&device).ok_or_else(|| anyhow!(
+                    "trace predicts on unregistered device {device}"))?;
+                if test.n == 0 {
+                    bail!("trace predicts on device {device}, whose test \
+                           set is empty");
+                }
+                let image = test.image(sample % test.n).to_vec();
+                client.predict(&device, image)?
+            }
+            TraceCmd::Evaluate { device } => client.evaluate(&device)?,
+            TraceCmd::Drift { device, angle } => {
+                let (train, test) = pair_for(angle)?;
+                device_test.insert(device.clone(), Arc::clone(&test));
+                client.drift_at(&device, train, test, Some(angle))?
+            }
+        };
+        out.push(resp);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Selection;
+
+    #[test]
+    fn parse_trace_demo_roundtrip() {
+        let cmds = parse_trace(DEMO_TRACE).unwrap();
+        assert_eq!(cmds.len(), 14);
+        assert_eq!(cmds[0], TraceCmd::Register {
+            device: "dev-a".into(),
+            seed: 1,
+            method: MethodSpec {
+                method: Method::Priot,
+                frac_scored: 0.1,
+                selection: Selection::WeightBased,
+                theta: None,
+            },
+            angle: 30,
+        });
+        assert_eq!(cmds[2], TraceCmd::Train { device: "dev-a".into(), epochs: 2 });
+        assert_eq!(cmds[8], TraceCmd::Drift { device: "dev-a".into(), angle: 45 });
+    }
+
+    #[test]
+    fn parse_trace_rejects_garbage() {
+        assert!(parse_trace("launch dev-a").is_err(), "unknown verb");
+        assert!(parse_trace("train").is_err(), "missing device");
+        assert!(parse_trace("train dev-a epochs").is_err(), "bare key");
+        assert!(parse_trace("train dev-a epochs=three").is_err(), "bad value");
+        assert!(parse_trace("register d method=sgd").is_err(), "bad method");
+        let err = parse_trace("ok-line dev\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn parse_trace_drift_takes_arbitrary_angles() {
+        // Positional, keyed, and defaulted forms; no hardcoded 30/45 pair.
+        let cmds =
+            parse_trace("drift d0 60\ndrift d1 angle=135\ndrift d2").unwrap();
+        assert_eq!(cmds[0], TraceCmd::Drift { device: "d0".into(), angle: 60 });
+        assert_eq!(cmds[1], TraceCmd::Drift { device: "d1".into(), angle: 135 });
+        assert_eq!(cmds[2], TraceCmd::Drift { device: "d2".into(), angle: 45 });
+
+        assert!(parse_trace("drift d0 60 angle=45").is_err(),
+                "positional + keyed angle is ambiguous");
+        assert!(parse_trace("drift d0 60 70").is_err(), "two positionals");
+        assert!(parse_trace("drift d0 sixty").is_err(), "non-numeric angle");
+        // Positional values stay drift-only.
+        assert!(parse_trace("train d0 3").is_err(),
+                "train takes epochs=N, not a positional");
+    }
+
+    #[test]
+    fn method_spec_builds_plugins() {
+        let m = MethodSpec {
+            method: Method::PriotS,
+            frac_scored: 0.2,
+            selection: Selection::Random,
+            theta: Some(-5),
+        };
+        assert_eq!(m.plugin().name(), "priot-s");
+        let m = MethodSpec::niti_static();
+        assert_eq!(m.plugin().name(), "static-niti");
+    }
+}

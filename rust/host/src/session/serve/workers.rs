@@ -1,0 +1,664 @@
+//! The worker pool: claim a ready device, execute one unit, persist,
+//! respond, re-queue.  The invariants at this seam:
+//!
+//! * **Epoch-granular preemption:** a multi-epoch `Train` executes one
+//!   epoch per claim; an unfinished request goes back to the *front* of
+//!   its lane, so higher-priority work cuts in at every epoch boundary.
+//! * **Session check-out/check-in:** a worker takes the device's
+//!   session out of the registry for the duration of one unit; the
+//!   one-turn-per-device rule (see [`super::registry`]) guarantees no
+//!   other worker touches it meanwhile.
+//! * **Persist-before-respond:** a completed state-mutating request
+//!   writes the device's snapshot to the store *before* its response is
+//!   emitted, so any state a client has been told about survives a
+//!   crash.  A failed write keeps the device dirty; eviction and
+//!   `join()` retry the flush.
+//! * **Lazy rehydration:** a claim on an evicted device rebuilds its
+//!   session from the store bit-identically before the pending item
+//!   runs; an evictor mid-flush makes the claim step aside and retry
+//!   (the `Defer` protocol — see [`super::evict`]).
+//! * **Panic containment:** a panicking op (method plugins are an open
+//!   extension point) becomes an error response, never a dead worker.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::capped;
+use crate::proto::{ErrorKind, Priority, Response};
+use crate::serial::{u8_to_i32_pixels, Dataset};
+use crate::session::Session;
+use crate::store::DeviceSnapshot;
+
+use super::evict::enforce_resident_cap;
+use super::registry::{note_done, respond, Item, Resident, Shared, Work};
+use super::AuditPolicy;
+
+/// What one executed unit produced.
+enum UnitOut {
+    /// A training epoch ran; the request has more epochs to go.
+    Continue,
+    TrainDone { epochs: usize, steps: u64, train_accuracy: f64 },
+    Prediction(usize),
+    Evaluation { accuracy: f64, n: usize },
+    Drifted { train: Arc<Dataset>, test: Arc<Dataset> },
+}
+
+fn run_unit(session: &mut Session, work: &mut Work, train: &Dataset,
+            test: &Dataset, eval_batch: usize, limit: usize)
+            -> Result<UnitOut> {
+    match work {
+        Work::Register { .. } => {
+            unreachable!("register units run via run_register")
+        }
+        Work::Train { remaining, done, steps } => {
+            if *remaining == 0 {
+                // A zero-epoch request reached its queue slot: close it
+                // out in order, with nothing executed.
+                return Ok(UnitOut::TrainDone {
+                    epochs: 0,
+                    steps: 0,
+                    train_accuracy: 0.0,
+                });
+            }
+            let ep = session.train_epoch(train)?;
+            *remaining -= 1;
+            *done += 1;
+            *steps += ep.steps as u64;
+            if *remaining == 0 {
+                Ok(UnitOut::TrainDone {
+                    epochs: *done,
+                    steps: *steps,
+                    train_accuracy: ep.train_accuracy,
+                })
+            } else {
+                Ok(UnitOut::Continue)
+            }
+        }
+        Work::Predict { image } => {
+            let want = session.spec.input_len();
+            if image.len() != want {
+                bail!("predict: image has {} pixels, model {} wants {want}",
+                      image.len(), session.spec.name);
+            }
+            let mut img = vec![0i32; want];
+            u8_to_i32_pixels(image, &mut img);
+            Ok(UnitOut::Prediction(session.predict(&img)))
+        }
+        Work::Evaluate => {
+            let accuracy = session.evaluate_batch(test, eval_batch)?;
+            Ok(UnitOut::Evaluation { accuracy, n: capped(test.n, limit) })
+        }
+        Work::Drift { train: tr, test: te, .. } => {
+            crate::data::validate(tr, &session.spec)
+                .context("drift train set")?;
+            crate::data::validate(te, &session.spec)
+                .context("drift test set")?;
+            Ok(UnitOut::Drifted {
+                train: Arc::clone(tr),
+                test: Arc::clone(te),
+            })
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// Assemble the durable snapshot of one device around its live session.
+pub(super) fn device_snapshot(session: &Session, device: &str,
+                              train: &Arc<Dataset>, test: &Arc<Dataset>,
+                              epochs_done: u64, angle: Option<u32>)
+                              -> Result<DeviceSnapshot> {
+    Ok(DeviceSnapshot {
+        device: device.to_string(),
+        session: session.snapshot()?,
+        train: Arc::clone(train),
+        test: Arc::clone(test),
+        epochs_done,
+        angle,
+    })
+}
+
+/// What a worker found when it claimed a ready device.
+enum Claim {
+    /// Session + highest-priority item checked out — execute it.
+    /// (Boxed: a `Session` inlines the engine workspace, which would
+    /// dwarf the other variants.)
+    Run {
+        session: Box<Session>,
+        item: Item,
+        lane: usize,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+    },
+    /// The device's first unit: build/resume its session.
+    Register(Item),
+    /// Registered but evicted: rehydrate from the store first.
+    Rehydrate,
+    /// An evictor is mid-flush on this device: step aside and retry.
+    Defer,
+}
+
+pub(super) fn worker(shared: &Shared) {
+    loop {
+        // Wait for a ready device (or shutdown).
+        let device = {
+            let mut q = shared.ready.lock().expect("serve ready queue");
+            loop {
+                if let Some(d) = q.pop_front() {
+                    break d;
+                }
+                if shared.done.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.ready_cv.wait(q).expect("serve ready queue");
+            }
+        };
+        // Claim the device's next unit.  The device is in the ready
+        // queue at most once, so nobody else touches its session while
+        // we hold this turn.
+        let claim = {
+            let mut reg = shared.registry.lock().expect("serve registry");
+            reg.tick += 1;
+            let tick = reg.tick;
+            let st = reg.map.get_mut(&device).expect("ready device registered");
+            if st.evicting {
+                Claim::Defer
+            } else {
+                let lane = (0..Priority::COUNT)
+                    .find(|&l| !st.lanes[l].is_empty())
+                    .expect("ready device has work");
+                let head_is_register = matches!(
+                    st.lanes[lane].front().expect("non-empty lane").work,
+                    Work::Register { .. }
+                );
+                if head_is_register {
+                    Claim::Register(
+                        st.lanes[lane].pop_front().expect("non-empty lane"),
+                    )
+                } else if st.resident.is_none() {
+                    Claim::Rehydrate
+                } else {
+                    st.last_used = tick;
+                    let item =
+                        st.lanes[lane].pop_front().expect("non-empty lane");
+                    let res = st.resident.as_mut().expect("resident device");
+                    Claim::Run {
+                        session: Box::new(
+                            res.session
+                                .take()
+                                .expect("ready device owns its session"),
+                        ),
+                        item,
+                        lane,
+                        train: Arc::clone(&res.train),
+                        test: Arc::clone(&res.test),
+                    }
+                }
+            }
+        };
+        match claim {
+            Claim::Defer => {
+                // Re-queue and retry once the evictor clears the flag.
+                // The short sleep keeps the retry loop from burning a
+                // core while the flush (a bounded disk write) finishes.
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device);
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Claim::Rehydrate => {
+                match rehydrate_device(shared, &device) {
+                    Ok(()) => {
+                        // Now resident; re-queue so the pending item runs
+                        // (possibly on another worker).
+                        shared
+                            .ready
+                            .lock()
+                            .expect("serve ready queue")
+                            .push_back(device.clone());
+                        shared.ready_cv.notify_one();
+                        enforce_resident_cap(shared);
+                    }
+                    Err(e) => fail_head_item(shared, &device, e),
+                }
+            }
+            Claim::Register(item) => {
+                run_register(shared, &device, item);
+                enforce_resident_cap(shared);
+            }
+            Claim::Run { session, item, lane, train, test } => {
+                run_op(shared, &device, *session, item, lane, &train, &test);
+                enforce_resident_cap(shared);
+            }
+        }
+    }
+}
+
+/// Execute one claimed non-register unit, persist on completion of a
+/// state-mutating request, check the session back in, and respond.
+fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
+          lane: usize, train: &Arc<Dataset>, test: &Arc<Dataset>) {
+    let Item { id, reply, mut work } = item;
+    // A panicking op (method plugins are an open extension point) must
+    // not kill the worker: the `outstanding` count would never drain
+    // and `join()` would hang.  Convert the panic into an error
+    // response; engine/score buffers are plain integers, so the
+    // checked-back-in session is memory-safe.  Its method state may be
+    // mid-step, and memory is authoritative: the device stays dirty and
+    // the partial state persists at the next flush (a durable reset /
+    // deregister op is a ROADMAP item — today the operator clears the
+    // device's store directory to start it over).
+    let unit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || run_unit(&mut session, &mut work, train, test,
+                    shared.eval_batch, shared.limit),
+    ))
+    .unwrap_or_else(|payload| {
+        Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
+    });
+    // Did this unit (or its failed attempt) touch durable state?
+    let mutated = match (&work, &unit) {
+        (Work::Predict { .. } | Work::Evaluate, _) => false,
+        (_, Ok(UnitOut::TrainDone { epochs: 0, .. })) => false,
+        _ => true,
+    };
+    let drift_angle = match &work {
+        Work::Drift { angle, .. } => *angle,
+        _ => None,
+    };
+    // Persist-before-respond: a completed state-mutating request writes
+    // the device's snapshot first, so any state a client has been told
+    // about survives a crash (the restart-resume contract).  A failed
+    // write keeps the device dirty; eviction and join() retry it.
+    let mut persisted = false;
+    if let Some(store) = &shared.store {
+        let flush = match &unit {
+            Ok(UnitOut::TrainDone { epochs, .. }) if *epochs > 0 => {
+                Some((train, test, *epochs as u64, false))
+            }
+            Ok(UnitOut::Drifted { train: tr, test: te }) => {
+                Some((tr, te, 0, true))
+            }
+            _ => None,
+        };
+        if let Some((tr, te, new_epochs, is_drift)) = flush {
+            let (base_epochs, cur_angle) = {
+                let reg = shared.registry.lock().expect("serve registry");
+                let st = reg.map.get(device).expect("device still registered");
+                (st.epochs_done, st.angle)
+            };
+            let angle = if is_drift { drift_angle } else { cur_angle };
+            let put = device_snapshot(&session, device, tr, te,
+                                      base_epochs + new_epochs, angle)
+                .and_then(|snap| store.put(&snap));
+            match put {
+                Ok(()) => persisted = true,
+                Err(e) => eprintln!(
+                    "[serve] persisting {device}: {e:#} — state kept in \
+                     memory (flushed again at eviction or join)"
+                ),
+            }
+        }
+    }
+    // Check the session back in and emit the response (if the request
+    // completed) *before* re-queuing the device, so a device's
+    // responses leave in execution order.
+    let mut responded = false;
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("device still registered");
+        st.resident
+            .as_mut()
+            .expect("resident while op in flight")
+            .session = Some(session);
+        let response = match unit {
+            Ok(UnitOut::Continue) => {
+                // Back to the front of its lane: the request resumes
+                // at the device's next turn, after any
+                // higher-priority work cuts in.
+                st.lanes[lane].push_front(Item {
+                    id,
+                    reply: reply.clone(),
+                    work,
+                });
+                None
+            }
+            Ok(UnitOut::TrainDone { epochs, steps, train_accuracy }) => {
+                st.epochs_done += epochs as u64;
+                Some(Response::TrainDone {
+                    device: device.to_string(),
+                    epochs,
+                    steps,
+                    train_accuracy,
+                })
+            }
+            Ok(UnitOut::Prediction(class)) => Some(Response::Prediction {
+                device: device.to_string(),
+                class,
+            }),
+            Ok(UnitOut::Evaluation { accuracy, n }) => {
+                Some(Response::Evaluation {
+                    device: device.to_string(),
+                    accuracy,
+                    n,
+                })
+            }
+            Ok(UnitOut::Drifted { train, test }) => {
+                let res =
+                    st.resident.as_mut().expect("resident while op in flight");
+                res.train = train;
+                res.test = test;
+                st.angle = drift_angle;
+                Some(Response::Drifted { device: device.to_string() })
+            }
+            // A failed Train drops its remaining epochs with it: one
+            // Error closes out the whole request — it neither trains
+            // on for nothing nor emits a TrainDone after its Error.
+            Err(e) => Some(Response::Error {
+                device: device.to_string(),
+                kind: ErrorKind::Request,
+                message: format!("{e:#}"),
+            }),
+        };
+        st.dirty = (st.dirty || mutated) && !persisted;
+        if let Some(resp) = response {
+            st.pending -= 1;
+            respond(shared, &reply, id, resp);
+            responded = true;
+        }
+        if st.has_work() {
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device.to_string());
+            shared.ready_cv.notify_one();
+        } else {
+            st.queued = false;
+        }
+    }
+    if responded {
+        note_done(shared, 1);
+    }
+}
+
+/// Classified register failure: what the client is told and how.
+struct RegisterFail {
+    kind: ErrorKind,
+    err: anyhow::Error,
+}
+
+fn store_fail(err: anyhow::Error) -> RegisterFail {
+    RegisterFail { kind: ErrorKind::Store, err }
+}
+
+fn request_fail(err: anyhow::Error) -> RegisterFail {
+    RegisterFail { kind: ErrorKind::Request, err }
+}
+
+/// Execute a register unit on the worker pool: resume the device from
+/// the store when it is known there, otherwise validate + build a fresh
+/// session and persist its initial snapshot *before* acknowledging.
+fn run_register(shared: &Shared, device: &str, item: Item) {
+    let Item { id, reply, work } = item;
+    let Work::Register { seed, method, train, test, angle } = work else {
+        unreachable!("run_register on a non-register item");
+    };
+    // A queued resume handshake: a register that raced the device's
+    // original registration.  The original register unit always precedes
+    // it in the head lane, so by the time this runs the device is
+    // registered (identity was already matched at dispatch) — ack the
+    // resume without building anything.  (Had the original failed, this
+    // item would have been drained with the entry.)
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("registering device present");
+        if st.registered {
+            st.pending -= 1;
+            respond(shared, &reply, id, Response::Registered {
+                device: device.to_string(),
+                resumed: true,
+            });
+            if st.has_work() {
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device.to_string());
+                shared.ready_cv.notify_one();
+            } else {
+                st.queued = false;
+            }
+            drop(reg);
+            note_done(shared, 1);
+            return;
+        }
+    }
+    type Built = (Session, Arc<Dataset>, Arc<Dataset>, u64, Option<u32>, bool);
+    let heavy: std::result::Result<Built, RegisterFail> = (|| {
+        if let Some(store) = &shared.store {
+            let stored = store
+                .get(device)
+                .with_context(|| format!("device {device}: reading stored \
+                                          state"))
+                .map_err(store_fail)?;
+            if let Some(snap) = stored {
+                if snap.session.seed != seed || snap.session.method != method {
+                    return Err(request_fail(anyhow!(
+                        "device {device} exists in the state store with a \
+                         different method or seed"
+                    )));
+                }
+                let session = Session::rehydrate(&shared.backbone,
+                                                 &snap.session)
+                    .with_context(|| format!("device {device}: rehydrating \
+                                              stored state"))
+                    .map_err(store_fail)?;
+                return Ok((session, snap.train, snap.test, snap.epochs_done,
+                           snap.angle, true));
+            }
+        }
+        crate::data::validate(&train, &shared.backbone.spec)
+            .with_context(|| format!("registering {device}: train set"))
+            .map_err(request_fail)?;
+        crate::data::validate(&test, &shared.backbone.spec)
+            .with_context(|| format!("registering {device}: test set"))
+            .map_err(request_fail)?;
+        let session = Session::builder()
+            .backbone(Arc::clone(&shared.backbone))
+            .method_boxed(method.plugin())
+            .seed(seed)
+            .limit(shared.limit)
+            .eval_batch(shared.eval_batch)
+            .track_pruning(false)
+            .build()
+            .with_context(|| format!("registering {device}"))
+            .map_err(request_fail)?;
+        // Static soundness gate (`crate::audit`): refuse or flag method
+        // specs whose accumulators cannot be proven overflow-free under
+        // this backbone + scale table — before any state is persisted.
+        // Resumed registers skip this: they were audited when originally
+        // registered and carry bit-identical state.
+        if shared.audit != AuditPolicy::Off {
+            let report = crate::audit::audit_backbone(&shared.backbone,
+                                                      &method,
+                                                      session.masks())
+                .with_context(|| format!("registering {device}: audit"))
+                .map_err(request_fail)?;
+            if !report.sound() {
+                if shared.audit == AuditPolicy::Reject {
+                    return Err(request_fail(anyhow!(
+                        "registering {device}: statically unsound: {}",
+                        report.summary()
+                    )));
+                }
+                eprintln!("[serve] audit warning for {device}: {}",
+                          report.summary());
+            }
+        }
+        // Durable registration: the initial snapshot lands before the
+        // ack, so a crash right after it can still resume the device.
+        if let Some(store) = &shared.store {
+            device_snapshot(&session, device, &train, &test, 0, angle)
+                .and_then(|snap| store.put(&snap))
+                .with_context(|| format!("device {device}: persisting \
+                                          initial state"))
+                .map_err(store_fail)?;
+        }
+        Ok((session, train, test, 0, angle, false))
+    })();
+    match heavy {
+        Ok((session, train, test, epochs_done, angle, resumed)) => {
+            if resumed {
+                shared.rehydrations.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut reg = shared.registry.lock().expect("serve registry");
+            reg.resident += 1;
+            reg.tick += 1;
+            let tick = reg.tick;
+            let st =
+                reg.map.get_mut(device).expect("registering device present");
+            st.resident = Some(Resident {
+                session: Some(session),
+                train,
+                test,
+            });
+            st.registered = true;
+            st.epochs_done = epochs_done;
+            st.angle = angle;
+            st.dirty = false;
+            st.last_used = tick;
+            st.pending -= 1;
+            respond(shared, &reply, id, Response::Registered {
+                device: device.to_string(),
+                resumed,
+            });
+            if st.has_work() {
+                shared
+                    .ready
+                    .lock()
+                    .expect("serve ready queue")
+                    .push_back(device.to_string());
+                shared.ready_cv.notify_one();
+            } else {
+                st.queued = false;
+            }
+            drop(reg);
+            note_done(shared, 1);
+        }
+        Err(RegisterFail { kind, err }) => {
+            // The provisional entry disappears, and every request already
+            // pipelined behind the failed register is answered too.
+            let stray = {
+                let mut reg = shared.registry.lock().expect("serve registry");
+                let mut st = reg
+                    .map
+                    .remove(device)
+                    .expect("registering device present");
+                let stray: Vec<Item> = st
+                    .lanes
+                    .iter_mut()
+                    .flat_map(|l| l.drain(..))
+                    .collect();
+                respond(shared, &reply, id, Response::Error {
+                    device: device.to_string(),
+                    kind,
+                    message: format!("{err:#}"),
+                });
+                for s in &stray {
+                    respond(shared, &s.reply, s.id, Response::Error {
+                        device: device.to_string(),
+                        kind: ErrorKind::Request,
+                        message: format!(
+                            "device {device}: register failed, request \
+                             dropped"
+                        ),
+                    });
+                }
+                stray
+            };
+            note_done(shared, 1 + stray.len());
+        }
+    }
+}
+
+/// Rebuild an evicted device's session from the store (on the worker
+/// pool — the caller holds the device's scheduling turn).
+fn rehydrate_device(shared: &Shared, device: &str) -> Result<()> {
+    let store = shared.store.as_ref().ok_or_else(|| {
+        anyhow!("device {device} is not resident and no state store is \
+                 configured")
+    })?;
+    let (seed, method) = {
+        let reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get(device).expect("ready device registered");
+        (st.seed, st.method.clone())
+    };
+    let snap = store
+        .get(device)?
+        .ok_or_else(|| anyhow!("device {device}: stored state is missing"))?;
+    if snap.session.seed != seed || snap.session.method != method {
+        bail!("device {device}: stored state does not match the registered \
+               identity");
+    }
+    let session = Session::rehydrate(&shared.backbone, &snap.session)
+        .with_context(|| format!("device {device}: rehydrating"))?;
+    let mut reg = shared.registry.lock().expect("serve registry");
+    reg.resident += 1;
+    reg.tick += 1;
+    let tick = reg.tick;
+    let st = reg.map.get_mut(device).expect("device still registered");
+    st.resident = Some(Resident {
+        session: Some(session),
+        train: snap.train,
+        test: snap.test,
+    });
+    st.epochs_done = snap.epochs_done;
+    st.angle = snap.angle;
+    st.dirty = false;
+    st.last_used = tick;
+    shared.rehydrations.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Answer (and drop) the head pending item of a device whose session
+/// could not be rehydrated — each queued item retries rehydration on its
+/// own turn, so a transient store failure fails requests one at a time
+/// instead of wedging the device.
+fn fail_head_item(shared: &Shared, device: &str, e: anyhow::Error) {
+    {
+        let mut reg = shared.registry.lock().expect("serve registry");
+        let st = reg.map.get_mut(device).expect("ready device registered");
+        let lane = (0..Priority::COUNT)
+            .find(|&l| !st.lanes[l].is_empty())
+            .expect("ready device has work");
+        let item = st.lanes[lane].pop_front().expect("non-empty lane");
+        st.pending -= 1;
+        respond(shared, &item.reply, item.id, Response::Error {
+            device: device.to_string(),
+            kind: ErrorKind::Store,
+            message: format!("{e:#}"),
+        });
+        if st.has_work() {
+            shared
+                .ready
+                .lock()
+                .expect("serve ready queue")
+                .push_back(device.to_string());
+            shared.ready_cv.notify_one();
+        } else {
+            st.queued = false;
+        }
+    }
+    note_done(shared, 1);
+}

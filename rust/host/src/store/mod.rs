@@ -1,0 +1,609 @@
+//! `priot::store` — durable per-device session state.
+//!
+//! PRIOT's training state is ideal for persistence: integer scores and
+//! masks plus static scale factors snapshot **bit-exactly**, so a device
+//! can be evicted from memory and rehydrated later with provably lossless
+//! trajectories.  This module is the persistence layer under the serving
+//! stack:
+//!
+//! * [`SessionSnapshot`] — the exact mutable state of one
+//!   [`Session`](crate::session::Session): the serializable method
+//!   description, the seed, the executed-step counter, and the plugin
+//!   state (i32 scores+masks for PRIOT/PRIOT-S, trained weights for
+//!   NITI).  Produced by [`Session::snapshot`], consumed by
+//!   [`Session::rehydrate`] — a rehydrated session produces
+//!   **byte-identical** predict/evaluate/train trajectories to one that
+//!   never left memory.
+//! * [`DeviceSnapshot`] — a session snapshot plus everything the fleet
+//!   server needs to resume the device: its datasets, lifetime epoch
+//!   progress, and data provenance (drift angle) when known.
+//! * [`StateStore`] — where snapshots live.  [`MemStore`] keeps encoded
+//!   bytes in memory (tests, cache-only eviction); [`DiskStore`] keeps a
+//!   directory per device with atomic write-rename updates, so a crashed
+//!   process never leaves a half-written snapshot behind.
+//! * [`codec`] — the versioned binary snapshot format ("PRST"),
+//!   `serial`-style checked decoding plus an FNV-1a integrity trailer.
+//!
+//! Both stores persist the **encoded bytes**, so every `put`/`get` pair
+//! round-trips the codec — the bit-identity guarantee is exercised on
+//! every eviction, not only on restarts.
+//!
+//! Since snapshot version 2 the datasets live in **content-addressed
+//! blobs** keyed by FNV-1a64 of their encoded bytes, separate from the
+//! per-device body.  Datasets are immutable between `Register`/`Drift`
+//! requests but dominate the snapshot size, so the steady-state
+//! train-eval-evict churn rewrites only the small body; a blob is
+//! encoded and written once per distinct dataset and shared by every
+//! device carrying identical data.  `remove` drops only the body —
+//! content addressing makes leftover blobs harmless — and unreferenced
+//! blobs are reclaimed explicitly by [`StateStore::gc_blobs`], a
+//! mark-sweep over the body headers that the fleet server runs at
+//! startup and shutdown.  Startup scans read only those headers
+//! ([`StateStore::get_body`]): recovering a thousand-device fleet never
+//! materializes a single dataset blob.
+//!
+//! The serving integration lives in [`crate::session::serve`]:
+//! `ServeBuilder::state_dir(..)` / `store(..)` + `resident_cap(N)` turn
+//! the registry into an LRU of live sessions over a store, and a
+//! restarted `priot serve --state-dir ...` resumes every device where it
+//! left off.
+//!
+//! [`Session::snapshot`]: crate::session::Session::snapshot
+//! [`Session::rehydrate`]: crate::session::Session::rehydrate
+
+pub mod codec;
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::proto::MethodSpec;
+use crate::serial::Dataset;
+
+/// The exact mutable state of one session — everything that
+/// distinguishes a mid-adaptation session from a freshly built one.
+/// Scores, masks, and weights are stored as exact i32 (never narrowed to
+/// int8 like the portable checkpoint files), so restore is lossless by
+/// construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    /// Backbone model name; rehydration refuses a mismatched backbone.
+    pub model: String,
+    /// The seed the session was built with (replays plugin `init`).
+    pub seed: u32,
+    /// Serializable method description (rebuilds the plugin object).
+    pub method: MethodSpec,
+    /// Training steps executed so far — the counter NITI's stochastic
+    /// rounding consumes, so it must survive eviction exactly.
+    pub step: u32,
+    /// Evaluation batch width (part of the session's behavior contract).
+    pub eval_batch: usize,
+    /// Per-epoch / per-evaluation sample cap (0 = all).
+    pub limit: usize,
+    /// The method's mutable state.
+    pub state: PluginState,
+}
+
+/// Method-specific mutable state, exact i32.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PluginState {
+    /// Score-state methods (PRIOT, PRIOT-S): per-layer scores and
+    /// existence masks.
+    Scores { scores: Vec<Vec<i32>>, masks: Vec<Vec<i32>> },
+    /// Weight-state methods (NITI): the executor's trained weights.
+    Weights(Vec<Vec<i32>>),
+}
+
+/// One device's complete durable state: the session snapshot plus the
+/// serve-level context needed to resume it (datasets, epoch progress,
+/// data provenance).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSnapshot {
+    pub device: String,
+    pub session: SessionSnapshot,
+    /// The device's local train set at snapshot time (post-drift).
+    pub train: Arc<Dataset>,
+    /// The device's local test set at snapshot time (post-drift).
+    pub test: Arc<Dataset>,
+    /// Completed training epochs over the device's lifetime.
+    pub epochs_done: u64,
+    /// Drift angle of the current datasets, when the client supplied it
+    /// (trace replays do) — provenance only, never interpreted.
+    pub angle: Option<u32>,
+}
+
+/// Where device snapshots live.  Implementations are shared across the
+/// serve worker pool (`Send + Sync`); each call is self-contained.
+pub trait StateStore: Send + Sync {
+    /// Persist `snap` under its device name, replacing any previous
+    /// snapshot atomically (a reader never observes a torn write).
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()>;
+
+    /// The current snapshot of `device`, or `None` if the store has
+    /// never seen it.  A present-but-undecodable snapshot is an `Err`
+    /// (corruption must be loud, not an implicit fresh start).
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>>;
+
+    /// Forget `device` entirely.  Removing an unknown device is a no-op.
+    fn remove(&self, device: &str) -> Result<()>;
+
+    /// Every device with a stored snapshot, sorted by name.
+    fn devices(&self) -> Result<Vec<String>>;
+
+    /// The decoded snapshot *body* of `device` — session state, epoch
+    /// progress, provenance, and the content hashes of its dataset
+    /// blobs — **without** materializing the datasets.  `None` if the
+    /// store has never seen the device; a present-but-undecodable body
+    /// is an `Err`, exactly like [`get`](Self::get).
+    ///
+    /// The default implementation materializes the full snapshot via
+    /// `get` and re-derives the body from it — correct for any store,
+    /// but it touches the blobs.  [`MemStore`] and [`DiskStore`]
+    /// override it to read the body alone, so scanning a large fleet at
+    /// startup costs one small read per device and zero blob IO.
+    fn get_body(&self, device: &str) -> Result<Option<codec::SnapshotBody>> {
+        match self.get(device)? {
+            None => Ok(None),
+            Some(snap) => {
+                let enc = codec::encode_snapshot(&snap);
+                Ok(Some(codec::decode_body(&enc.body)?))
+            }
+        }
+    }
+
+    /// Collect dataset blobs that no stored body references, returning
+    /// the number of entries removed.  Mark-sweep: the mark phase reads
+    /// every device's body *header* ([`get_body`](Self::get_body)) and
+    /// aborts — collecting nothing — if any body is undecodable,
+    /// because a corrupt-but-recoverable body may still reference live
+    /// blobs.  Callers must quiesce writers first: a `put` racing the
+    /// sweep could lose a just-written, not-yet-referenced blob.  The
+    /// fleet server runs it at startup (before workers exist) and at
+    /// `join()` (after the pool drains).
+    ///
+    /// The default implementation collects nothing — a store without a
+    /// separate blob table has nothing to sweep.
+    fn gc_blobs(&self) -> Result<usize> {
+        Ok(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemStore
+// ---------------------------------------------------------------------------
+
+/// In-memory [`StateStore`]: encoded snapshot bodies in a map plus a
+/// content-addressed blob table.  State dies with the process — useful
+/// for tests and for LRU eviction without a disk (bounding resident
+/// sessions while keeping evicted state around).
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    /// Dataset blobs by content hash; an already-present hash skips
+    /// re-encoding entirely.  Swept only by explicit
+    /// [`gc_blobs`](StateStore::gc_blobs) calls.
+    blobs: Mutex<HashMap<u64, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn blob(&self, hash: u64, what: &str) -> Result<Vec<u8>> {
+        self.blobs
+            .lock()
+            .expect("mem store blobs")
+            .get(&hash)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!(
+                "{what}: dataset blob {hash:#018x} is missing from the store"
+            ))
+    }
+}
+
+impl StateStore for MemStore {
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()> {
+        let enc = codec::encode_snapshot(snap);
+        {
+            let mut blobs = self.blobs.lock().expect("mem store blobs");
+            blobs
+                .entry(enc.train_hash)
+                .or_insert_with(|| codec::encode_dataset_blob(&snap.train));
+            blobs
+                .entry(enc.test_hash)
+                .or_insert_with(|| codec::encode_dataset_blob(&snap.test));
+        }
+        self.map
+            .lock()
+            .expect("mem store map")
+            .insert(snap.device.clone(), enc.body);
+        Ok(())
+    }
+
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>> {
+        let Some(body) = self.get_body(device)? else {
+            return Ok(None);
+        };
+        let train = codec::decode_dataset_blob(
+            &self.blob(body.train_hash,
+                       &format!("device {device} train set"))?,
+            body.train_hash,
+            &format!("device {device} train set"),
+        )?;
+        let test = codec::decode_dataset_blob(
+            &self.blob(body.test_hash, &format!("device {device} test set"))?,
+            body.test_hash,
+            &format!("device {device} test set"),
+        )?;
+        Ok(Some(body.assemble(train, test)))
+    }
+
+    fn remove(&self, device: &str) -> Result<()> {
+        // Blobs stay: they are content-addressed and possibly shared.
+        self.map.lock().expect("mem store map").remove(device);
+        Ok(())
+    }
+
+    fn devices(&self) -> Result<Vec<String>> {
+        let mut out: Vec<String> =
+            self.map.lock().expect("mem store map").keys().cloned().collect();
+        out.sort();
+        Ok(out)
+    }
+
+    fn get_body(&self, device: &str) -> Result<Option<codec::SnapshotBody>> {
+        match self.map.lock().expect("mem store map").get(device) {
+            Some(bytes) => Ok(Some(codec::decode_body_for(device, bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn gc_blobs(&self) -> Result<usize> {
+        // Mark — every hash any body references.  The map lock is
+        // released before the blob lock is taken; `put` never holds
+        // both either, so lock order cannot deadlock.
+        let live = {
+            let map = self.map.lock().expect("mem store map");
+            let mut live = HashSet::new();
+            for (device, bytes) in map.iter() {
+                let body =
+                    codec::decode_body_for(device, bytes).with_context(|| {
+                        format!("blob GC aborted: body of device {device}")
+                    })?;
+                live.insert(body.train_hash);
+                live.insert(body.test_hash);
+            }
+            live
+        };
+        // Sweep.
+        let mut blobs = self.blobs.lock().expect("mem store blobs");
+        let before = blobs.len();
+        blobs.retain(|hash, _| live.contains(hash));
+        Ok(before - blobs.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DiskStore
+// ---------------------------------------------------------------------------
+
+const SNAPSHOT_FILE: &str = "snapshot.bin";
+const SNAPSHOT_TMP: &str = "snapshot.bin.tmp";
+/// Content-addressed dataset blobs live here, one flat dir per store
+/// root.  The leading dot can never collide with a device dir —
+/// [`escape_device`] maps `.` to `%2E`.
+const BLOBS_DIR: &str = ".blobs";
+
+/// Uniquifies concurrent same-process blob temp files (two workers
+/// persisting devices that share a dataset race on the same address).
+static BLOB_TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// On-disk [`StateStore`]: one directory per device under a root, each
+/// holding a `snapshot.bin` body, plus a shared `.blobs/` directory of
+/// content-addressed dataset blobs (`<fnv1a64 hex>.bin`).  Updates write
+/// a temp file and `rename` it into place, so a crash mid-write leaves
+/// either the old snapshot or the new one — never a torn file (the
+/// decode checksum would catch one anyway, but atomicity means no state
+/// is *lost*).  Blobs become durable before the body that references
+/// them, so a readable body always finds its datasets.
+///
+/// Device names are escaped into filesystem-safe directory names
+/// (alphanumerics, `_`, `-` kept; every other byte becomes `%XX`), so
+/// arbitrary wire names can never traverse outside the root.
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root).with_context(|| {
+            format!("creating state store root {}", root.display())
+        })?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn device_dir(&self, device: &str) -> Result<PathBuf> {
+        Ok(self.root.join(escape_device(device)?))
+    }
+
+    fn blob_path(&self, hash: u64) -> PathBuf {
+        self.root.join(BLOBS_DIR).join(format!("{hash:016x}.bin"))
+    }
+
+    /// Make the blob at `hash` durable, encoding it only if it isn't
+    /// already on disk (the common case after the first put).  Atomic
+    /// via temp + rename; concurrent writers of the same address write
+    /// identical bytes, so whichever rename lands last is still correct.
+    fn write_blob(
+        &self,
+        hash: u64,
+        encode: impl FnOnce() -> Vec<u8>,
+    ) -> Result<()> {
+        let path = self.blob_path(hash);
+        if path.exists() {
+            return Ok(());
+        }
+        let dir = self.root.join(BLOBS_DIR);
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating blob dir {}", dir.display())
+        })?;
+        let seq = BLOB_TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!(
+            "{hash:016x}.{}.{seq}.tmp",
+            std::process::id()
+        ));
+        let bytes = encode();
+        (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })()
+        .with_context(|| {
+            format!("writing dataset blob {}", path.display())
+        })
+    }
+
+    fn read_blob(&self, hash: u64, what: &str) -> Result<Vec<u8>> {
+        let path = self.blob_path(hash);
+        std::fs::read(&path).with_context(|| {
+            format!("{what}: reading dataset blob {}", path.display())
+        })
+    }
+}
+
+/// Escape a device name into a safe directory name (reversible).
+fn escape_device(device: &str) -> Result<String> {
+    if device.is_empty() {
+        bail!("empty device name");
+    }
+    let mut out = String::with_capacity(device.len());
+    for &b in device.as_bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_' | b'-' => {
+                out.push(b as char);
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Invert [`escape_device`]; `None` for names this store never wrote.
+fn unescape_device(name: &str) -> Option<String> {
+    let mut bytes = Vec::with_capacity(name.len());
+    let mut it = name.bytes();
+    while let Some(b) = it.next() {
+        if b == b'%' {
+            let hi = it.next()?;
+            let lo = it.next()?;
+            let hex = [hi, lo];
+            let s = std::str::from_utf8(&hex).ok()?;
+            bytes.push(u8::from_str_radix(s, 16).ok()?);
+        } else {
+            bytes.push(b);
+        }
+    }
+    String::from_utf8(bytes).ok()
+}
+
+impl StateStore for DiskStore {
+    fn put(&self, snap: &DeviceSnapshot) -> Result<()> {
+        let dir = self.device_dir(&snap.device)?;
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating device state dir {}", dir.display())
+        })?;
+        let enc = codec::encode_snapshot(snap);
+        // Blobs first: a body must never reference a blob that a crash
+        // could have left unwritten.
+        self.write_blob(enc.train_hash,
+                        || codec::encode_dataset_blob(&snap.train))?;
+        self.write_blob(enc.test_hash,
+                        || codec::encode_dataset_blob(&snap.test))?;
+        let tmp = dir.join(SNAPSHOT_TMP);
+        let path = dir.join(SNAPSHOT_FILE);
+        (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&enc.body)?;
+            // The rename is only atomic-durable if the payload hit disk
+            // first.
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })()
+        .with_context(|| {
+            format!("writing snapshot of device {} to {}", snap.device,
+                    path.display())
+        })
+    }
+
+    fn get(&self, device: &str) -> Result<Option<DeviceSnapshot>> {
+        let Some(body) = self.get_body(device)? else {
+            return Ok(None);
+        };
+        let train = codec::decode_dataset_blob(
+            &self.read_blob(body.train_hash,
+                            &format!("device {device} train set"))?,
+            body.train_hash,
+            &format!("device {device} train set"),
+        )?;
+        let test = codec::decode_dataset_blob(
+            &self.read_blob(body.test_hash,
+                            &format!("device {device} test set"))?,
+            body.test_hash,
+            &format!("device {device} test set"),
+        )?;
+        Ok(Some(body.assemble(train, test)))
+    }
+
+    fn remove(&self, device: &str) -> Result<()> {
+        // Blobs stay: content-addressed and possibly shared with other
+        // devices (see the module docs on garbage collection).
+        let dir = self.device_dir(device)?;
+        match std::fs::remove_dir_all(&dir) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| {
+                format!("removing device state dir {}", dir.display())
+            }),
+        }
+    }
+
+    fn devices(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.root).with_context(|| {
+            format!("listing state store root {}", self.root.display())
+        })?;
+        for entry in entries {
+            let entry = entry?;
+            if !entry.path().join(SNAPSHOT_FILE).exists() {
+                continue; // not a device dir (or an interrupted write)
+            }
+            if let Some(device) =
+                entry.file_name().to_str().and_then(unescape_device)
+            {
+                out.push(device);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn get_body(&self, device: &str) -> Result<Option<codec::SnapshotBody>> {
+        let path = self.device_dir(device)?.join(SNAPSHOT_FILE);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading snapshot {}", path.display())
+                });
+            }
+        };
+        Ok(Some(codec::decode_body_for(device, &bytes).with_context(
+            || format!("snapshot file {}", path.display()),
+        )?))
+    }
+
+    fn gc_blobs(&self) -> Result<usize> {
+        // Mark — the hashes every readable body references.  Reading
+        // only headers keeps a thousand-device sweep cheap; an
+        // undecodable body aborts the whole GC, since its blobs may
+        // still be live even if the body is not currently readable.
+        let mut live = HashSet::new();
+        for device in self.devices()? {
+            let Some(body) = self.get_body(&device).with_context(|| {
+                format!("blob GC aborted: body of device {device}")
+            })?
+            else {
+                continue; // raced a remove; nothing to mark
+            };
+            live.insert(body.train_hash);
+            live.insert(body.test_hash);
+        }
+        // Sweep — unreferenced `<fnv1a64 hex>.bin` entries plus temp
+        // files a crashed writer left behind (GC runs quiesced, so a
+        // surviving `.tmp` can only be a leftover, never in flight).
+        let dir = self.root.join(BLOBS_DIR);
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(0); // no blob dir, nothing ever written
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("listing blob dir {}", dir.display())
+                });
+            }
+        };
+        let mut collected = 0;
+        for entry in entries {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let dead = match name.strip_suffix(".bin") {
+                Some(stem) if stem.len() == 16 => {
+                    match u64::from_str_radix(stem, 16) {
+                        Ok(hash) => !live.contains(&hash),
+                        Err(_) => false, // not one of ours; leave it be
+                    }
+                }
+                Some(_) => false,
+                None => name.ends_with(".tmp"),
+            };
+            if dead {
+                std::fs::remove_file(&path).with_context(|| {
+                    format!("sweeping dead blob {}", path.display())
+                })?;
+                collected += 1;
+            }
+        }
+        Ok(collected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_name_escaping_roundtrips() {
+        for name in ["dev-00", "a/b", "../../etc", "δevice", "d.1", "%", "a b"] {
+            let escaped = escape_device(name).unwrap();
+            assert!(
+                escaped.bytes().all(|b| b.is_ascii_alphanumeric()
+                    || b == b'_' || b == b'-' || b == b'%'),
+                "{name} escaped to unsafe {escaped}"
+            );
+            assert_eq!(unescape_device(&escaped).as_deref(), Some(name));
+        }
+        assert!(escape_device("").is_err(), "empty names are rejected");
+    }
+
+    #[test]
+    fn escaping_keeps_paths_inside_the_root() {
+        // Path separators and dots are always escaped, so a hostile
+        // device name cannot climb out of the store root.
+        for name in ["..", ".", "../x", "a/../../b", "/abs"] {
+            let escaped = escape_device(name).unwrap();
+            assert!(!escaped.contains('/') && !escaped.contains('.'),
+                    "{name} → {escaped}");
+        }
+    }
+}
