@@ -8,8 +8,10 @@
 //! priot serve   [--trace FILE | --listen ADDR]    long-lived fleet service
 //!               [--state-dir DIR] [--resident-cap N]   durable + LRU-bounded
 //!               [--audit off|warn|reject]         register-time soundness gate
+//!               [--device rp2040]                 register-time memory-fit gate
 //! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
 //! priot audit   [--method M] [--json]             static overflow-soundness proof
+//! priot audit   --memory [--device rp2040]        static RAM/flash fit proof
 //! priot bench   [--suite kernel|serve|all]        perf snapshot + baseline diff
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
@@ -346,6 +348,8 @@ fn trace_text(args: &Args) -> Result<String> {
 /// Soundness: `--audit warn|reject` runs the static overflow audit
 /// (see `priot audit`) against every fresh registration's method config;
 /// `reject` refuses statically unsound configurations at the front door.
+/// `--device rp2040` adds the static memory-fit gate (`priot audit
+/// --memory`) under the same policy, defaulting it to `reject`.
 fn cmd_serve(args: &Args) -> Result<()> {
     use priot::session::serve;
 
@@ -355,11 +359,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window: usize = args.option("window").unwrap_or("64").parse()?;
     let resident_cap: usize =
         args.option("resident-cap").unwrap_or("0").parse()?;
-    let audit_policy = match args.option("audit").unwrap_or("off") {
+    // `--device` implies a gate: default the policy to reject when one
+    // is named and no explicit `--audit` choice overrides it.
+    let default_policy =
+        if args.option("device").is_some() { "reject" } else { "off" };
+    let audit_policy = match args.option("audit").unwrap_or(default_policy) {
         "off" => priot::session::AuditPolicy::Off,
         "warn" => priot::session::AuditPolicy::Warn,
         "reject" => priot::session::AuditPolicy::Reject,
         other => bail!("unknown --audit policy '{other}' (want off|warn|reject)"),
+    };
+    let device_profile = match args.option("device") {
+        Some(name) => Some(
+            priot::audit::mem::DeviceProfile::by_name(name).ok_or_else(
+                || anyhow::anyhow!("unknown --device profile '{name}' \
+                                    (want rp2040)"),
+            )?,
+        ),
+        None => None,
     };
     // One config resolves everything path-shaped (`--artifacts`, a
     // `--config` file, `--model`, `--dataset`, `--source`...), so the
@@ -377,6 +394,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // A listener runs until interrupted and never join()s, so don't
         // accumulate a server-side copy of every response.
         .record(args.option("listen").is_none());
+    if let Some(profile) = device_profile {
+        builder = builder.device_profile(profile);
+    }
     if let Some(dir) = args.option("state-dir") {
         builder = builder.state_dir(dir)?;
         eprintln!("(durable fleet: device state under {dir})");
@@ -464,44 +484,14 @@ fn cmd_client(args: &Args) -> Result<()> {
 /// family); NITI configs are audited under the full weight-drift
 /// envelope since training mutates weights in place.
 fn cmd_audit(args: &Args) -> Result<()> {
-    use priot::proto::MethodSpec;
-
+    if args.has_flag("memory") {
+        return cmd_audit_memory(args);
+    }
     let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
     let seed: u32 = args.option("seed").unwrap_or("1").parse()?;
     let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
 
-    let specs: Vec<(String, MethodSpec)> = match args.option("method") {
-        Some(m) => {
-            let method = Method::parse(m)?;
-            let frac: f64 = args.option("frac").unwrap_or("0.1").parse()?;
-            let selection =
-                Selection::parse(args.option("selection").unwrap_or("weight"))?;
-            let mut spec = match method {
-                Method::StaticNiti => MethodSpec::niti_static(),
-                Method::DynamicNiti => MethodSpec::niti_dynamic(),
-                Method::Priot => MethodSpec::priot(),
-                Method::PriotS => MethodSpec::priot_s(frac, selection),
-            };
-            if let Some(t) = args.option("theta") {
-                spec = spec.with_theta(t.parse()?);
-            }
-            vec![(m.to_string(), spec)]
-        }
-        // Default roster: every on-device Table I configuration.
-        None => vec![
-            ("static-niti".into(), MethodSpec::niti_static()),
-            ("dynamic-niti".into(), MethodSpec::niti_dynamic()),
-            ("priot".into(), MethodSpec::priot()),
-            ("priot-s-90-random".into(),
-             MethodSpec::priot_s(0.1, Selection::Random)),
-            ("priot-s-90-weight".into(),
-             MethodSpec::priot_s(0.1, Selection::WeightBased)),
-            ("priot-s-80-random".into(),
-             MethodSpec::priot_s(0.2, Selection::Random)),
-            ("priot-s-80-weight".into(),
-             MethodSpec::priot_s(0.2, Selection::WeightBased)),
-        ],
-    };
+    let specs = audit_method_roster(args)?;
 
     let mut tables = String::new();
     let mut jsons = Vec::new();
@@ -536,6 +526,116 @@ fn cmd_audit(args: &Args) -> Result<()> {
     }
     if !unsound.is_empty() {
         bail!("statically unsound configs:\n  {}", unsound.join("\n  "));
+    }
+    Ok(())
+}
+
+/// Method configs an audit covers: a single `--method M [--frac F]
+/// [--selection S] [--theta T]`, or the full on-device Table I roster.
+fn audit_method_roster(args: &Args)
+                       -> Result<Vec<(String, priot::proto::MethodSpec)>> {
+    use priot::proto::MethodSpec;
+
+    Ok(match args.option("method") {
+        Some(m) => {
+            let method = Method::parse(m)?;
+            let frac: f64 = args.option("frac").unwrap_or("0.1").parse()?;
+            let selection =
+                Selection::parse(args.option("selection").unwrap_or("weight"))?;
+            let mut spec = match method {
+                Method::StaticNiti => MethodSpec::niti_static(),
+                Method::DynamicNiti => MethodSpec::niti_dynamic(),
+                Method::Priot => MethodSpec::priot(),
+                Method::PriotS => MethodSpec::priot_s(frac, selection),
+            };
+            if let Some(t) = args.option("theta") {
+                spec = spec.with_theta(t.parse()?);
+            }
+            vec![(m.to_string(), spec)]
+        }
+        // Default roster: every on-device Table I configuration.
+        None => vec![
+            ("static-niti".into(), MethodSpec::niti_static()),
+            ("dynamic-niti".into(), MethodSpec::niti_dynamic()),
+            ("priot".into(), MethodSpec::priot()),
+            ("priot-s-90-random".into(),
+             MethodSpec::priot_s(0.1, Selection::Random)),
+            ("priot-s-90-weight".into(),
+             MethodSpec::priot_s(0.1, Selection::WeightBased)),
+            ("priot-s-80-random".into(),
+             MethodSpec::priot_s(0.2, Selection::Random)),
+            ("priot-s-80-weight".into(),
+             MethodSpec::priot_s(0.2, Selection::WeightBased)),
+        ],
+    })
+}
+
+/// Static memory-footprint audit (`priot audit --memory`).
+///
+/// Computes the worst-case per-phase byte budgets (load / train step /
+/// batched eval) of every audited method config over the model's
+/// liveness-planned buffer geometry (`priot::audit::mem`) and checks
+/// them against a device profile — `--device rp2040` (the default) or a
+/// custom `--ram N [--flash N]` budget.  `--eval-batch` defaults to 1,
+/// the device protocol's evaluation batch.  Exits non-zero if any
+/// audited config exceeds the device, so CI proves every shipped config
+/// fits the Pico's 264 KB before it runs.
+fn cmd_audit_memory(args: &Args) -> Result<()> {
+    use priot::audit::mem::{audit_mem_backbone, DeviceProfile};
+
+    let cfg = ExperimentConfig::from_config(&args.to_config()?)?;
+    let seed: u32 = args.option("seed").unwrap_or("1").parse()?;
+    let eval_batch: usize = args.option("eval-batch").unwrap_or("1").parse()?;
+    let device = match (args.option("device"), args.option("ram")) {
+        (Some(name), _) => DeviceProfile::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --device profile '{name}' (want rp2040)")
+        })?,
+        (None, Some(ram)) => DeviceProfile::custom(
+            "custom",
+            ram.parse()?,
+            args.option("flash").unwrap_or("2097152").parse()?,
+        ),
+        (None, None) => DeviceProfile::rp2040(),
+    };
+    let backbone = Backbone::load_or_synthetic(&cfg.artifacts_dir, &cfg.model, 1)?;
+
+    let specs = audit_method_roster(args)?;
+    let mut tables = String::new();
+    let mut jsons = Vec::new();
+    let mut misfits = Vec::new();
+    for (label, spec) in &specs {
+        // Materialise the plugin so PRIOT-S is priced on the exact
+        // scored-edge count this seed would select, not the nominal one.
+        let mut plugin = spec.plugin();
+        plugin
+            .init(&backbone.spec, &backbone.weights, seed)
+            .with_context(|| format!("initialising {label} for memory audit"))?;
+        let report = audit_mem_backbone(&backbone, spec, plugin.masks(),
+                                        eval_batch, &device)
+            .with_context(|| format!("memory-auditing {label}"))?
+            .with_label(label);
+        if !report.fits() {
+            misfits.push(format!("{label}: {}", report.summary()));
+        }
+        tables.push_str(&report.render_table());
+        tables.push('\n');
+        jsons.push(report.to_json());
+    }
+
+    if args.has_flag("json") {
+        let json = format!("[{}]\n", jsons.join(",\n"));
+        write_or_print(args, "audit-mem.json", &json)?;
+    } else {
+        print!("{tables}");
+        println!(
+            "memory audit: {}/{} configs fit {}",
+            specs.len() - misfits.len(),
+            specs.len(),
+            device.summary()
+        );
+    }
+    if !misfits.is_empty() {
+        bail!("configs exceeding the device:\n  {}", misfits.join("\n  "));
     }
     Ok(())
 }
@@ -667,11 +767,15 @@ fn print_help() {
          \x20 serve        long-lived fleet service (--trace replay or --listen ADDR;\n\
          \x20              --state-dir DIR = durable restart-resume, --resident-cap N\n\
          \x20              = LRU-bound live sessions over the store,\n\
-         \x20              --audit warn|reject = register-time soundness gate)\n\
+         \x20              --audit warn|reject = register-time soundness gate,\n\
+         \x20              --device rp2040 = register-time memory-fit gate)\n\
          \x20 client       replay a request trace against a remote server over TCP\n\
          \x20 audit        static overflow-soundness proof of the quantised net\n\
          \x20              (per-layer interval bounds; --method M or the full\n\
          \x20              Table I roster; --json; exits non-zero if unsound)\n\
+         \x20              --memory = worst-case RAM/flash plan per phase vs a\n\
+         \x20              device budget (--device rp2040 | --ram N [--flash N],\n\
+         \x20              --eval-batch B; exits non-zero on any misfit)\n\
          \x20 bench        kernel + serve perf snapshots (--suite kernel|serve|all,\n\
          \x20              --baseline DIR diffs BENCH_*.json, --update DIR rewrites)\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\

@@ -74,3 +74,82 @@ fn core_sources_never_import_std() {
         offenders.join("\n")
     );
 }
+
+/// True if `token` occurs in `code` as a whole word (not as a substring
+/// of a longer identifier — `f32` must not match `crc_f32x` etc.).
+fn has_word(code: &str, token: &str) -> bool {
+    let bytes = code.as_bytes();
+    let is_ident =
+        |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(token) {
+        let start = from + pos;
+        let end = start + token.len();
+        let pre_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// Determinism lint: `priot-core`'s shipped code is the bit-exactness
+/// contract with the Python oracle and any device port, so it must not
+/// touch float arithmetic, wall clocks, or iteration-order-unstable
+/// containers.  The few legitimate config-time float sites (score
+/// fractions, channel-width scaling) are documented in place with a
+/// `layering-allow: <reason>` comment on the line or the line above.
+#[test]
+fn core_sources_are_deterministic() {
+    const FORBIDDEN: &[(&str, &str)] = &[
+        ("f32", "float arithmetic is non-portable across FPUs"),
+        ("f64", "float arithmetic is non-portable across FPUs"),
+        ("std::time", "wall clocks are host-only"),
+        ("Instant", "wall clocks are host-only"),
+        ("SystemTime", "wall clocks are host-only"),
+        ("HashMap", "iteration order is unstable (use BTreeMap/Vec)"),
+        ("HashSet", "iteration order is unstable (use BTreeSet/Vec)"),
+    ];
+    let mut files = Vec::new();
+    rust_sources(&core_src(), &mut files);
+    assert!(!files.is_empty(), "no sources under {:?}", core_src());
+
+    let mut offenders = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path).unwrap();
+        // Unit tests may float (statistics assertions etc.) — only
+        // shipped code is linted, same split as the no_std check.
+        let shipped = text.split("#[cfg(test)]").next().unwrap();
+        let mut prev_allowed = false;
+        for (ln, raw) in shipped.lines().enumerate() {
+            // An allow marker covers its own line (trailing comment)
+            // and the next line (comment-above style).
+            let allowed = raw.contains("layering-allow:") || prev_allowed;
+            prev_allowed = raw.contains("layering-allow:");
+            if allowed {
+                continue;
+            }
+            let code = raw.split("//").next().unwrap_or("");
+            for (token, why) in FORBIDDEN {
+                if has_word(code, token) {
+                    offenders.push(format!(
+                        "{}:{}: `{}` — {} : {}",
+                        path.display(),
+                        ln + 1,
+                        token,
+                        why,
+                        raw.trim()
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "priot-core shipped code must be integer-deterministic; annotate \
+         intentional config-time sites with `// layering-allow: <reason>`:\n{}",
+        offenders.join("\n")
+    );
+}

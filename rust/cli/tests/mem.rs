@@ -1,0 +1,266 @@
+//! Memory-audit tests (artifact-free — synthetic backbone + generated
+//! data):
+//!
+//! * the pinning property: the engine's *actual* live allocations
+//!   ([`Engine::mem_probe`]) equal the static plan's host rendering —
+//!   after real training and batched evaluation, for all three method
+//!   families over several drift angles — so the device rendering is
+//!   priced over geometry the engine provably uses;
+//! * the acceptance criterion: every Table I tinycnn config fits the
+//!   RP2040 at the device protocol's batch-1 eval, with the pinned
+//!   per-phase byte totals, and PRIOT-S lands strictly below PRIOT;
+//! * misfits are caught: a VGG-class model exceeds SRAM *and* flash,
+//!   host-sized batched eval exceeds SRAM;
+//! * the serve integration: a configured device profile refuses
+//!   too-big registrations under `Reject`, admits under `Warn`, and
+//!   the rp2040 profile admits the whole roster;
+//! * the CLI binary: `priot audit --memory` exits zero on the shipped
+//!   roster and non-zero on an oversized model.
+//!
+//! [`Engine::mem_probe`]: priot::engine::Engine::mem_probe
+
+use std::sync::Arc;
+
+use priot::audit::mem::{audit_mem_backbone, audit_mem_spec, DeviceProfile};
+use priot::config::Selection;
+use priot::datagen::{self, Task};
+use priot::engine::plan::BufferPlan;
+use priot::proto::{ErrorKind, MethodSpec, Response};
+use priot::ptest::gen::synthetic_backbone;
+use priot::serial::Dataset;
+use priot::session::{AuditPolicy, FleetServer, Session};
+use priot::spec::NetSpec;
+
+fn dataset(seed: u64, n: usize, angle: u32) -> Arc<Dataset> {
+    Arc::new(datagen::generate(Task::Digits, n, seed, angle as f64))
+}
+
+fn table1_specs() -> Vec<(&'static str, MethodSpec)> {
+    vec![
+        ("static-niti", MethodSpec::niti_static()),
+        ("dynamic-niti", MethodSpec::niti_dynamic()),
+        ("priot", MethodSpec::priot()),
+        ("priot-s-90-random", MethodSpec::priot_s(0.1, Selection::Random)),
+        ("priot-s-90-weight",
+         MethodSpec::priot_s(0.1, Selection::WeightBased)),
+        ("priot-s-80-random", MethodSpec::priot_s(0.2, Selection::Random)),
+        ("priot-s-80-weight",
+         MethodSpec::priot_s(0.2, Selection::WeightBased)),
+    ]
+}
+
+#[test]
+fn engine_allocations_equal_the_static_plan() {
+    // The property that makes the device numbers trustworthy: the plan
+    // is not a parallel model of the engine, it *is* the engine's
+    // allocation geometry.  After two training epochs and a batched
+    // evaluation — for each method family, over several drift angles —
+    // the measured live buffer bytes equal the plan's host rendering
+    // exactly, and the static bound is (therefore) never below an
+    // observed peak.
+    let bb = synthetic_backbone(42);
+    let plan = BufferPlan::of(&bb.spec);
+    let specs = [
+        MethodSpec::niti_static(),
+        MethodSpec::priot(),
+        MethodSpec::priot_s(0.2, Selection::WeightBased),
+    ];
+    for spec in &specs {
+        for angle in [0u32, 30, 60] {
+            let train = dataset(100 + angle as u64, 48, angle);
+            let test = dataset(200 + angle as u64, 24, angle);
+            let mut session = Session::builder()
+                .backbone(Arc::clone(&bb))
+                .method_boxed(spec.plugin())
+                .seed(5)
+                .eval_batch(8)
+                .track_pruning(false)
+                .build()
+                .unwrap();
+            for _ in 0..2 {
+                session.train_epoch(&train).unwrap();
+            }
+            session.evaluate_batch(&test, 8).unwrap();
+            let probe = session.engine_mut().expect("engine backend")
+                .mem_probe();
+            assert_eq!(probe.weights_bytes, plan.host_weights_bytes(),
+                       "{:?} @ {angle}°: weights", spec.method);
+            assert_eq!(probe.workspace_bytes, plan.host_workspace_bytes(),
+                       "{:?} @ {angle}°: workspace", spec.method);
+            assert_eq!(probe.batch_b, Some(8),
+                       "{:?} @ {angle}°: batched eval ran", spec.method);
+            assert_eq!(probe.batch_bytes, plan.host_batch_bytes(8),
+                       "{:?} @ {angle}°: batch buffers", spec.method);
+            // The ≥ form of the property, spelled out: no observed peak
+            // exceeds its static bound.
+            assert!(plan.host_workspace_bytes() >= probe.workspace_bytes);
+            assert!(plan.host_batch_bytes(8) >= probe.batch_bytes);
+        }
+    }
+}
+
+#[test]
+fn every_table1_config_fits_the_rp2040() {
+    // The acceptance criterion, with the totals pinned: at the device
+    // protocol's batch-1 evaluation, every Table I tinycnn config fits
+    // 264 KB with its known worst-phase (train-step) byte count, and
+    // PRIOT-S is strictly cheaper than PRIOT at both sparsities — the
+    // paper's Table II memory story, proven statically.
+    let bb = synthetic_backbone(1);
+    let rp2040 = DeviceProfile::rp2040();
+    let mut train_peaks = std::collections::BTreeMap::new();
+    for (label, spec) in table1_specs() {
+        let mut plugin = spec.plugin();
+        plugin.init(&bb.spec, &bb.weights, 1).unwrap();
+        let report =
+            audit_mem_backbone(&bb, &spec, plugin.masks(), 1, &rp2040)
+                .unwrap();
+        assert!(report.fits(), "{label}: {}", report.summary());
+        assert!(report.flash_verdict.fits(), "{label}: flash");
+        let train = report
+            .phases
+            .iter()
+            .find(|p| p.phase == "train-step")
+            .expect("train phase present");
+        train_peaks.insert(label, train.bytes);
+    }
+    assert_eq!(train_peaks["static-niti"], 160_250);
+    assert_eq!(train_peaks["dynamic-niti"], 160_250);
+    assert_eq!(train_peaks["priot"], 212_290);
+    assert_eq!(train_peaks["priot-s-90-weight"], 175_862);
+    assert_eq!(train_peaks["priot-s-80-weight"], 191_471);
+    for label in [
+        "priot-s-90-random", "priot-s-90-weight",
+        "priot-s-80-random", "priot-s-80-weight",
+    ] {
+        assert!(
+            train_peaks[label] < train_peaks["priot"],
+            "{label} ({}) not below priot ({})",
+            train_peaks[label], train_peaks["priot"]
+        );
+    }
+}
+
+#[test]
+fn oversized_configs_are_refused() {
+    // Host-side batched evaluation is a server luxury: at the host's
+    // default batch of 8 the transient eval buffers alone blow the
+    // RP2040 budget (hence the batch-1 device protocol and gate).
+    let bb = synthetic_backbone(1);
+    let rp2040 = DeviceProfile::rp2040();
+    let b8 = audit_mem_backbone(&bb, &MethodSpec::priot(), None, 8, &rp2040)
+        .unwrap();
+    assert!(!b8.fits(), "{}", b8.summary());
+    assert!(b8.summary().contains("eval-batch(8)"), "{}", b8.summary());
+
+    // A VGG-class model fails the load phase and the flash image — no
+    // weights needed, the spec alone is enough to prove it.
+    let vgg = audit_mem_spec("vgg11w1", &NetSpec::vgg11(1.0),
+                             &MethodSpec::priot(), None, 1, &rp2040)
+        .unwrap();
+    assert!(!vgg.fits());
+    assert!(!vgg.flash_verdict.fits(), "9.7 MB of weights vs 2 MB flash");
+    assert!(vgg.summary().contains("exceeds"), "{}", vgg.summary());
+}
+
+#[test]
+fn serve_device_profile_gates_registration() {
+    let train = dataset(401, 24, 0);
+    let test = dataset(402, 16, 0);
+
+    // Reject + a deliberately tiny profile: tinycnn/priot needs ~207 KB
+    // of SRAM for a train step, so a 64 KB target must refuse it at the
+    // front door, before any state exists.
+    let tiny = DeviceProfile::custom("tiny64k", 64 * 1024, 2 * 1024 * 1024);
+    let server = FleetServer::builder(synthetic_backbone(7))
+        .threads(1)
+        .audit(AuditPolicy::Reject)
+        .device_profile(tiny.clone())
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-big", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert!(
+        matches!(&r, Response::Error { kind: ErrorKind::Request, message, .. }
+                 if message.contains("exceeds")),
+        "{r:?}"
+    );
+    let r = client.train("dev-big", 1).unwrap();
+    assert!(r.is_error(), "rejected device must stay unknown: {r:?}");
+    drop(client);
+    assert!(server.join().unwrap().errors() >= 1);
+
+    // Warn: the same oversized combination is admitted (logged).
+    let server = FleetServer::builder(synthetic_backbone(7))
+        .threads(1)
+        .audit(AuditPolicy::Warn)
+        .device_profile(tiny)
+        .build();
+    let mut client = server.local_client();
+    let r = client
+        .register("dev-warned", 1, MethodSpec::priot(), Arc::clone(&train),
+                  Arc::clone(&test))
+        .unwrap();
+    assert_eq!(r, Response::Registered {
+        device: "dev-warned".into(),
+        resumed: false,
+    });
+    drop(client);
+    server.join().unwrap();
+
+    // Reject + the real rp2040 profile admits the whole Table I roster.
+    let server = FleetServer::builder(synthetic_backbone(7))
+        .threads(1)
+        .audit(AuditPolicy::Reject)
+        .device_profile(DeviceProfile::rp2040())
+        .build();
+    let mut client = server.local_client();
+    for (i, (_, spec)) in table1_specs().into_iter().enumerate() {
+        let r = client
+            .register(&format!("dev-{i}"), 1, spec, Arc::clone(&train),
+                      Arc::clone(&test))
+            .unwrap();
+        assert!(!r.is_error(), "{r:?}");
+    }
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn audit_memory_cli_passes_roster_and_rejects_oversized() {
+    // The blocking CI step, exercised end-to-end through the binary:
+    // the default roster fits the default rp2040 profile (exit 0), an
+    // oversized model makes the same command exit non-zero.
+    let bin = env!("CARGO_BIN_EXE_priot");
+    let ok = std::process::Command::new(bin)
+        .args(["audit", "--memory", "--device", "rp2040"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&ok.stdout);
+    assert!(
+        ok.status.success(),
+        "audit --memory failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    assert!(stdout.contains("memory audit: 7/7 configs fit"), "{stdout}");
+    assert!(stdout.contains("| phase | peak SRAM [B] | peak at | verdict |"),
+            "{stdout}");
+
+    let bad = std::process::Command::new(bin)
+        .args(["audit", "--memory", "--model", "vgg11w0.25", "--method",
+               "priot"])
+        .output()
+        .unwrap();
+    assert!(
+        !bad.status.success(),
+        "oversized model must exit non-zero:\n{}",
+        String::from_utf8_lossy(&bad.stdout)
+    );
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("exceed"),
+        "{}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+}

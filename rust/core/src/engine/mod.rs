@@ -24,6 +24,8 @@
 
 #![deny(clippy::arithmetic_side_effects)]
 
+pub mod plan;
+
 use alloc::sync::Arc;
 use alloc::vec;
 use alloc::vec::Vec;

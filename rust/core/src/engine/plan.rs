@@ -1,0 +1,326 @@
+//! The engine's buffer geometry as *data* — the static half of the
+//! memory-footprint audit.
+//!
+//! [`BufferPlan::of`] reads a [`NetSpec`] and reproduces, symbolically,
+//! every allocation decision [`super::Workspace::new`] and the batched
+//! `BatchBufs::new` make: per-layer GEMM/tape/scratch shapes, the
+//! backward delta ping-pong length, and the batch-path arena sizes.  Two
+//! renderings hang off the one geometry:
+//!
+//! * **Host bytes** ([`BufferPlan::host_workspace_bytes`] /
+//!   [`BufferPlan::host_batch_bytes`] / [`BufferPlan::host_weights_bytes`])
+//!   — the engine's actual allocations on this host, where every working
+//!   value is an `i32` and no buffer is reused across layers.  These are
+//!   *exact*, not bounds: [`Engine::mem_probe`] measures the live `Vec`
+//!   lengths and the test suite asserts byte equality, so the plan can
+//!   never drift from the engine it describes.
+//! * **Device bytes** — rendered by `priot_host::audit::mem`, which takes
+//!   the same [`LayerPlan`] geometry and re-prices it at device widths
+//!   (int8 activations/weights, i32 accumulators) with liveness-based
+//!   buffer reuse.  The host-side equality proof is what grounds the
+//!   device-side bound: both renderings read the identical shapes.
+//!
+//! The plan lives in `engine` (not `spec`) on purpose: the shapes below
+//! are properties of *this engine's* buffer strategy (im2col patches,
+//! tape-per-layer, delta ping-pong), not of the network alone, and the
+//! private `Workspace`/`BatchBufs` fields are visible here so the probe
+//! can count real allocations instead of trusting a copy of the math.
+
+// Scoped re-allow of the module lint wall (`super` carries
+// `#![deny(clippy::arithmetic_side_effects)]`): everything below is
+// buffer-sizing arithmetic over spec dimensions — the same justification
+// as `Workspace::new` — where an overflow would panic in a size
+// computation, never corrupt training arithmetic.
+#![allow(clippy::arithmetic_side_effects)]
+
+use alloc::vec::Vec;
+
+use super::Engine;
+use crate::spec::{LayerSpec, NetSpec};
+
+/// Bytes per `i32` working element (every host-side activation, weight,
+/// score, accumulator, and delta buffer).
+pub const HOST_ELEM_BYTES: usize = core::mem::size_of::<i32>();
+
+/// One layer's buffer geometry: the dimensions every engine allocation
+/// for this layer is a product of.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub index: usize,
+    /// Convolution (im2col + GEMM) vs fully-connected.
+    pub conv: bool,
+    pub relu: bool,
+    pub pooled: bool,
+    /// Weight rows (output channels / output features).
+    pub f: usize,
+    /// Weight cols (im2col patch length `in_c·9`, or `in_f`).
+    pub k: usize,
+    /// Forward GEMM columns per sample (`H·W` for conv, 1 for fc).
+    pub n: usize,
+    pub in_len: usize,
+    pub out_len: usize,
+    /// Pre-pool activation length `f·n` (= `out_len` when unpooled).
+    pub pre_pool: usize,
+}
+
+impl LayerPlan {
+    /// Weight tensor element count (`f·k`).
+    pub fn params(&self) -> usize {
+        self.f * self.k
+    }
+}
+
+/// The engine's complete buffer plan for one [`NetSpec`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BufferPlan {
+    pub layers: Vec<LayerPlan>,
+    pub input_len: usize,
+    pub classes: usize,
+    /// Backward delta ping-pong length: `max(input_len, all pre_pool,
+    /// all in_len)` — exactly `Workspace::new`'s `max_len`.
+    pub max_delta: usize,
+    /// Batch-path per-sample ping-pong unit: `max(input_len, all
+    /// out_len)` — exactly `BatchBufs::new`'s `max_len`.
+    pub batch_unit: usize,
+    /// Largest pre-pool activation `max(f·n)` (batch gather / pool-index
+    /// scratch).
+    pub max_pre: usize,
+}
+
+impl BufferPlan {
+    /// Derive the plan from the spec — the same traversal as
+    /// `Workspace::new` / `BatchBufs::new`, recorded instead of
+    /// allocated.
+    pub fn of(spec: &NetSpec) -> Self {
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        let mut max_delta = spec.input_len();
+        let mut batch_unit = spec.input_len();
+        let mut max_pre = 0usize;
+        for (index, l) in spec.layers.iter().enumerate() {
+            let (f, k) = l.weight_shape();
+            let (conv, relu, n, pre_pool, pooled) = match *l {
+                LayerSpec::Conv { in_h, in_w, out_c, relu, pool, .. } => {
+                    (true, relu, in_h * in_w, out_c * in_h * in_w, pool)
+                }
+                LayerSpec::Fc { out_f, relu, .. } => {
+                    (false, relu, 1, out_f, false)
+                }
+            };
+            layers.push(LayerPlan {
+                index,
+                conv,
+                relu,
+                pooled,
+                f,
+                k,
+                n,
+                in_len: l.in_len(),
+                out_len: l.out_len(),
+                pre_pool,
+            });
+            max_delta = max_delta.max(pre_pool).max(l.in_len());
+            batch_unit = batch_unit.max(l.out_len());
+            max_pre = max_pre.max(f * n);
+        }
+        BufferPlan {
+            layers,
+            input_len: spec.input_len(),
+            classes: spec.num_classes(),
+            max_delta,
+            batch_unit,
+            max_pre,
+        }
+    }
+
+    /// Exact bytes of the shared backbone weight tensors on this host
+    /// (`i32` elements; one copy, `Arc`-shared across sessions until a
+    /// NITI update forks it).
+    pub fn host_weights_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum::<usize>()
+            * HOST_ELEM_BYTES
+    }
+
+    /// Exact bytes `Workspace::new` allocates for this spec: per layer
+    /// `cols + acc + relu_out + out + weff + grad + dx32 + dcols` (i32)
+    /// plus the `u8` pool indices, plus the delta ping-pong pair and
+    /// `dlogits`.  No reuse — the host engine trades memory for the
+    /// tape-per-layer layout.
+    pub fn host_workspace_bytes(&self) -> usize {
+        let mut elems = 0usize;
+        let mut idx_bytes = 0usize;
+        for l in &self.layers {
+            elems += l.k * l.n // cols
+                + l.f * l.n // acc
+                + l.pre_pool // relu_out
+                + l.out_len // out
+                + l.params() // weff
+                + l.params() // grad
+                + l.in_len // dx32
+                + l.k * l.n; // dcols
+            if l.pooled {
+                idx_bytes += l.pre_pool / 4; // pool_idx (u8)
+            }
+        }
+        elems += 2 * self.max_delta + self.classes; // dy_a/dy_b + dlogits
+        elems * HOST_ELEM_BYTES + idx_bytes
+    }
+
+    /// Exact bytes `BatchBufs::new(spec, b)` allocates: per layer
+    /// `scratch + cols·b + acc·b + relu·b` (i32), plus the gather /
+    /// pool-index scratch and the sample-major ping-pong pair.  Zero for
+    /// `b == 0` (the engine never builds batch buffers it doesn't use).
+    pub fn host_batch_bytes(&self, b: usize) -> usize {
+        if b == 0 {
+            return 0;
+        }
+        let mut elems = 0usize;
+        for l in &self.layers {
+            elems += l.k * l.n // scratch
+                + l.k * l.n * b // cols
+                + l.f * l.n * b // acc
+                + l.f * l.n * b; // relu
+        }
+        elems += self.max_pre; // gather
+        elems += 2 * b * self.batch_unit; // x_a/x_b
+        elems * HOST_ELEM_BYTES + self.max_pre / 4 // + pool_idx (u8)
+    }
+}
+
+/// Measured allocation footprint of a live [`Engine`] — the runtime pin
+/// for [`BufferPlan`]'s host rendering.  Byte counts come from the
+/// actual `Vec` lengths, so `plan == probe` is an equality the test
+/// suite can assert, not an inequality taken on faith.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemProbe {
+    /// Backbone weight tensors (i32) — shared via `Arc`, counted once.
+    pub weights_bytes: usize,
+    /// The per-session `Workspace` (tape + gradients + deltas).
+    pub workspace_bytes: usize,
+    /// Batched-inference buffers, 0 until `forward_batch` has run.
+    pub batch_bytes: usize,
+    /// The batch size the batch buffers are currently sized for.
+    pub batch_b: Option<usize>,
+}
+
+impl Engine {
+    /// Count the engine's real allocations, by measuring live buffer
+    /// lengths (never by re-deriving them from the spec).  The
+    /// memory-audit property test asserts this equals
+    /// [`BufferPlan`]'s host rendering exactly, across methods, drift
+    /// angles, and the batched-eval path.
+    pub fn mem_probe(&self) -> MemProbe {
+        let weights_bytes = self
+            .weights
+            .iter()
+            .map(|w| w.data.len())
+            .sum::<usize>()
+            * HOST_ELEM_BYTES;
+        let mut ws_elems = 0usize;
+        let mut ws_idx = 0usize;
+        for b in &self.ws.layers {
+            ws_elems += b.cols.data.len()
+                + b.acc.data.len()
+                + b.relu_out.len()
+                + b.out.len()
+                + b.weff.data.len()
+                + b.grad.data.len()
+                + b.dx32.len()
+                + b.dcols.data.len();
+            ws_idx += b.pool_idx.len();
+        }
+        ws_elems +=
+            self.ws.dy_a.len() + self.ws.dy_b.len() + self.ws.dlogits.len();
+        let (batch_bytes, batch_b) = match &self.batch {
+            None => (0, None),
+            Some(bw) => {
+                let mut elems = 0usize;
+                for li in 0..bw.cols.len() {
+                    elems += bw.scratch[li].data.len()
+                        + bw.cols[li].data.len()
+                        + bw.acc[li].data.len()
+                        + bw.relu[li].len();
+                }
+                elems += bw.gather.len() + bw.x_a.len() + bw.x_b.len();
+                (elems * HOST_ELEM_BYTES + bw.pool_idx.len(), Some(bw.b))
+            }
+        };
+        MemProbe {
+            weights_bytes,
+            workspace_bytes: ws_elems * HOST_ELEM_BYTES + ws_idx,
+            batch_bytes,
+            batch_b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Scales;
+    use crate::tensor::Mat;
+
+    fn engine_for(spec: NetSpec) -> Engine {
+        let weights = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weight_shape();
+                Mat::zeros(r, c)
+            })
+            .collect();
+        let scales = Scales::default_for(spec.layers.len());
+        Engine::new(spec, weights, scales).unwrap()
+    }
+
+    #[test]
+    fn tinycnn_plan_geometry() {
+        let plan = BufferPlan::of(&NetSpec::tinycnn());
+        let dims: Vec<(usize, usize, usize, usize, usize, usize)> = plan
+            .layers
+            .iter()
+            .map(|l| (l.f, l.k, l.n, l.pre_pool, l.in_len, l.out_len))
+            .collect();
+        assert_eq!(dims, vec![
+            (8, 9, 784, 6272, 784, 1568),
+            (16, 72, 196, 3136, 1568, 784),
+            (64, 784, 1, 64, 784, 64),
+            (10, 64, 1, 10, 64, 10),
+        ]);
+        assert_eq!(plan.input_len, 784);
+        assert_eq!(plan.classes, 10);
+        assert_eq!(plan.max_delta, 6272);
+        assert_eq!(plan.batch_unit, 1568);
+        assert_eq!(plan.max_pre, 6272);
+        // Hand-computed exact totals (pinned so a silent engine buffer
+        // change must update the plan *and* this test together).
+        assert_eq!(plan.host_weights_bytes(), 52_040 * 4);
+        assert_eq!(plan.host_workspace_bytes(), 743_376);
+        assert_eq!(plan.host_batch_bytes(0), 0);
+        assert_eq!(plan.host_batch_bytes(8), 1_526_432);
+    }
+
+    #[test]
+    fn probe_equals_plan_for_fresh_and_batched_engine() {
+        for name in ["tinycnn", "vgg11w0.25"] {
+            let spec = NetSpec::by_name(name).unwrap();
+            let plan = BufferPlan::of(&spec);
+            let mut engine = engine_for(spec.clone());
+            let probe = engine.mem_probe();
+            assert_eq!(probe.weights_bytes, plan.host_weights_bytes(),
+                       "{name} weights");
+            assert_eq!(probe.workspace_bytes, plan.host_workspace_bytes(),
+                       "{name} workspace");
+            assert_eq!(probe.batch_bytes, 0, "{name}: no batch ran yet");
+            // Drive the batched path and re-measure.
+            for b in [1usize, 4] {
+                let imgs = Mat::zeros(b, spec.input_len());
+                let mut logits = Mat::zeros(b, spec.num_classes());
+                engine.forward_batch(&imgs, None, &mut logits);
+                let probe = engine.mem_probe();
+                assert_eq!(probe.batch_b, Some(b), "{name} b={b}");
+                assert_eq!(probe.batch_bytes, plan.host_batch_bytes(b),
+                           "{name} b={b}");
+            }
+        }
+    }
+}

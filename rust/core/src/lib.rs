@@ -46,8 +46,9 @@ pub const INT8_MAX: i32 = 127;
 /// std float methods are unavailable.  Exact for `|x| < 2^52` — every
 /// caller rounds small non-negative counts (channel widths, score
 /// fractions × edge counts).
+// layering-allow: the one config-time float helper (exact for |x| < 2^52)
 pub(crate) fn round_half_away(x: f64) -> f64 {
-    let t = x as i64 as f64; // truncate toward zero
+    let t = x as i64 as f64; // truncate toward zero (layering-allow: ditto)
     let r = x - t;
     if r >= 0.5 {
         t + 1.0

@@ -94,7 +94,7 @@ impl Selection {
 pub struct MethodSpec {
     pub method: Method,
     /// PRIOT-S scored fraction (ignored by other methods).
-    pub frac_scored: f64,
+    pub frac_scored: f64, // layering-allow: config-time fraction, never hot-path
     /// PRIOT-S edge-selection strategy (ignored by other methods).
     pub selection: Selection,
     /// Pruning threshold override (PRIOT / PRIOT-S).
@@ -123,6 +123,7 @@ impl MethodSpec {
         Self::new(Method::Priot)
     }
 
+    // layering-allow: config-time fraction parameter
     pub fn priot_s(frac_scored: f64, selection: Selection) -> Self {
         Self { frac_scored, selection, ..Self::new(Method::PriotS) }
     }
@@ -142,6 +143,65 @@ impl MethodSpec {
     /// rehydrate identity checks compare like with like.
     pub fn canonical(&self) -> MethodSpec {
         self.plugin().method_spec().unwrap_or_else(|| self.clone())
+    }
+
+    /// Number of *scored* (trainable) edges this method materializes on
+    /// `spec`: all of them for PRIOT, the selected subset for PRIOT-S,
+    /// none for NITI (which trains weights, not scores).  With the
+    /// concrete existence `masks` the count is exact; without them it is
+    /// the nominal selection size — exact for
+    /// [`Selection::WeightBased`] (`round(frac·n)` per layer, the same
+    /// rounding [`select_mask_weight`] applies), the binomial mean for
+    /// [`Selection::Random`] (whose per-edge Bernoulli draw makes the
+    /// realized count seed-dependent).
+    pub fn scored_params(&self, spec: &NetSpec,
+                         masks: Option<&[Vec<i32>]>) -> usize {
+        match self.method {
+            Method::StaticNiti | Method::DynamicNiti => 0,
+            Method::Priot => spec.num_params(),
+            Method::PriotS => match masks {
+                Some(ms) => ms
+                    .iter()
+                    .map(|m| m.iter().filter(|&&v| v != 0).count())
+                    .sum(),
+                None => spec
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        crate::round_half_away(
+                            // layering-allow: config-time count rounding
+                            self.frac_scored * l.num_params() as f64,
+                        ) as usize
+                    })
+                    .sum(),
+            },
+        }
+    }
+
+    /// Worst-case *device-side* persistent state of this method, in
+    /// bytes — the accounting hook `priot_host::audit::mem` prices a
+    /// registration with.  Backbone weights and the scale table are
+    /// counted separately (they exist for every method); this is only
+    /// what the method adds on top:
+    ///
+    /// * NITI (static or dynamic): **0** — weights are updated in place,
+    ///   no score or mask arrays exist.
+    /// * PRIOT: one int8 score per parameter (`num_params` bytes).  The
+    ///   all-ones existence mask is implicit (every edge is scored) and
+    ///   costs nothing to store.
+    /// * PRIOT-S: 3 bytes per scored edge — an int8 score plus a u16
+    ///   flat index identifying the edge (the sparse layout the RP2040
+    ///   cost model in `priot_host::pico` assumes; every tinycnn layer
+    ///   has < 2¹⁶ parameters).
+    pub fn state_bytes(&self, spec: &NetSpec,
+                       masks: Option<&[Vec<i32>]>) -> usize {
+        match self.method {
+            Method::StaticNiti | Method::DynamicNiti => 0,
+            Method::Priot => spec.num_params(),
+            Method::PriotS => {
+                3usize.saturating_mul(self.scored_params(spec, masks))
+            }
+        }
     }
 
     /// Materialize the described method as a live plugin.
@@ -559,7 +619,7 @@ impl MethodPlugin for Priot {
 /// for scored edges only (the Table II speed win).
 pub struct PriotS {
     theta: i32,
-    frac_scored: f64,
+    frac_scored: f64, // layering-allow: config-time fraction, read at init only
     selection: Selection,
     st: ScoreState,
 }
@@ -567,6 +627,7 @@ pub struct PriotS {
 impl PriotS {
     /// `frac_scored` is the fraction of edges *with* scores (1 − p); θ
     /// defaults to the paper's PRIOT-S value of 0.
+    // layering-allow: config-time fraction parameter
     pub fn new(frac_scored: f64, selection: Selection) -> Self {
         Self { theta: 0, frac_scored, selection, st: ScoreState::default() }
     }
@@ -688,12 +749,14 @@ fn widen(v: Vec<i8>) -> Vec<i32> {
 /// PRIOT-S weight-based selection: score the largest-|W| edges per layer.
 /// Deterministic, stable ordering by (-|w|, flat index) — bit-compatible
 /// with `intnet.select_mask_weight`.
+// layering-allow: init-time selection (exact rounding, bit-compatible)
 pub fn select_mask_weight(weights: &[crate::tensor::Mat], frac_scored: f64)
                           -> Vec<Vec<i32>> {
     weights
         .iter()
         .map(|w| {
             let n = w.data.len();
+            // layering-allow: init-time count rounding (exact, < 2^52)
             let k = crate::round_half_away(frac_scored * n as f64) as usize;
             let mut order: Vec<usize> = (0..n).collect();
             order.sort_by_key(|&i| (-(w.data[i].abs() as i64), i));

@@ -97,6 +97,7 @@ pub fn init_scores(rng: &mut XorShift32, n: usize) -> Vec<i8> {
 
 /// PRIOT-S random selection mask: `1` for ~`frac_scored` of edges
 /// (bit-compatible with `intnet.select_mask_random`).
+// layering-allow: init-time threshold derivation (bit-compatible contract)
 pub fn select_mask_random(rng: &mut XorShift32, n: usize, frac_scored: f64) -> Vec<u8> {
     let thresh = (frac_scored * 4294967296.0) as u64;
     (0..n)

@@ -100,8 +100,10 @@ impl NetSpec {
     /// VGG11 (8 conv + 3 FC) for 32×32×3, width-scaled — channel plan
     /// 64,128,256,256,512,512,512,512 with pools after convs 1,2,4,6,8,
     /// then FC 512w→512w→10 (mirrors `intnet.vgg11_spec`).
+    // layering-allow: config-time width scaling (spec construction only)
     pub fn vgg11(width: f64) -> Self {
         let c = |n: usize| -> usize {
+            // layering-allow: config-time channel-width rounding
             (crate::round_half_away(n as f64 * width) as usize).max(4)
         };
         let chans = [c(64), c(128), c(256), c(256), c(512), c(512), c(512), c(512)];
@@ -143,6 +145,7 @@ impl NetSpec {
         match name {
             "tinycnn" => Some(Self::tinycnn()),
             _ if name.starts_with("vgg11w") => {
+                // layering-allow: config-time model-name width parse
                 name["vgg11w".len()..].parse::<f64>().ok().map(Self::vgg11)
             }
             _ => None,

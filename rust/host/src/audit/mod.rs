@@ -58,6 +58,8 @@
 //! per-layer accumulator extremes, asserted against these bounds by
 //! `rust/cli/tests/audit.rs`.
 
+pub mod mem;
+
 use anyhow::{bail, Result};
 
 use crate::config::Method;
@@ -332,7 +334,7 @@ impl AuditReport {
     }
 }
 
-fn json_str(s: &str) -> String {
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

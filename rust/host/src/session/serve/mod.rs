@@ -182,6 +182,7 @@ pub struct ServeBuilder {
     store: Option<Arc<dyn StateStore>>,
     resident_cap: usize,
     audit: AuditPolicy,
+    device_profile: Option<crate::audit::mem::DeviceProfile>,
 }
 
 impl ServeBuilder {
@@ -262,6 +263,21 @@ impl ServeBuilder {
         self
     }
 
+    /// Register-time memory-fit target (default none): with a profile
+    /// set and the audit policy not [`AuditPolicy::Off`], a fresh
+    /// `Register` whose (backbone, method) statically exceeds the
+    /// device's SRAM or flash budget — per `priot::audit::mem`, at the
+    /// device protocol's batch-1 evaluation — is refused (Reject) or
+    /// logged (Warn) exactly like an unsound one — what
+    /// `priot serve --device rp2040` sets.
+    pub fn device_profile(
+        mut self,
+        profile: crate::audit::mem::DeviceProfile,
+    ) -> Self {
+        self.device_profile = Some(profile);
+        self
+    }
+
     /// Spawn the dispatcher + worker pool and return the live handle.
     pub fn build(self) -> FleetServer {
         let threads = if self.threads == 0 {
@@ -330,6 +346,7 @@ impl ServeBuilder {
             eval_batch: self.eval_batch,
             window: if self.window == 0 { usize::MAX } else { self.window },
             audit: self.audit,
+            device_profile: self.device_profile,
             store,
             resident_cap,
             registry: Mutex::new(registry),
@@ -395,6 +412,7 @@ impl FleetServer {
             store: None,
             resident_cap: 0,
             audit: AuditPolicy::Off,
+            device_profile: None,
         }
     }
 

@@ -158,6 +158,11 @@ pub(super) struct Shared {
     /// Register-time static-soundness policy (fresh registers only;
     /// resumes were audited at original registration).
     pub(super) audit: AuditPolicy,
+    /// Register-time memory-fit target: with `Some(profile)` and
+    /// `audit != Off`, fresh registers whose static memory plan
+    /// (`crate::audit::mem`, batch-1 eval) exceeds the profile are
+    /// refused/flagged under the same policy as unsound ones.
+    pub(super) device_profile: Option<crate::audit::mem::DeviceProfile>,
     /// Durable snapshot store; `None` = memory-only serving (no
     /// eviction, no resume).
     pub(super) store: Option<Arc<dyn StateStore>>,

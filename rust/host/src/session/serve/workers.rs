@@ -505,6 +505,33 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
                 eprintln!("[serve] audit warning for {device}: {}",
                           report.summary());
             }
+            // Memory-fit gate (`crate::audit::mem`): with a device
+            // profile configured, also require the (backbone, method)
+            // plan to fit the target's SRAM/flash — priced at the
+            // device protocol's batch-1 evaluation, with the session's
+            // concrete masks for exact PRIOT-S state counts.
+            if let Some(profile) = &shared.device_profile {
+                let mem = crate::audit::mem::audit_mem_backbone(
+                    &shared.backbone,
+                    &method,
+                    session.masks(),
+                    1,
+                    profile,
+                )
+                .with_context(|| format!("registering {device}: memory \
+                                          audit"))
+                .map_err(request_fail)?;
+                if !mem.fits() {
+                    if shared.audit == AuditPolicy::Reject {
+                        return Err(request_fail(anyhow!(
+                            "registering {device}: {}",
+                            mem.summary()
+                        )));
+                    }
+                    eprintln!("[serve] memory audit warning for {device}: {}",
+                              mem.summary());
+                }
+            }
         }
         // Durable registration: the initial snapshot lands before the
         // ack, so a crash right after it can still resume the device.
