@@ -1,6 +1,7 @@
-//! Bench: hot-path micro-benchmarks — the three GEMM variants, im2col, the
-//! full engine step per method, and the PJRT step for comparison.  This is
-//! the §Perf measurement harness (EXPERIMENTS.md records its history).
+//! Bench: hot-path micro-benchmarks — the three GEMM kernels in both
+//! variants (seed scalar vs tiled+packed), im2col, the full engine step
+//! per method, and the PJRT step for comparison.  This is the §Perf
+//! measurement harness (EXPERIMENTS.md records its history).
 //! `cargo bench --bench kernel`.
 
 use std::hint::black_box;
@@ -10,7 +11,7 @@ use priot::config::{Config, ExperimentConfig};
 use priot::data;
 use priot::prng::XorShift64;
 use priot::session::Session;
-use priot::tensor::{gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+use priot::tensor::{im2col, Kernels, Mat};
 
 fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
     Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
@@ -34,7 +35,8 @@ fn main() {
     let mut rng = XorShift64::new(42);
     println!("\n## kernel micro-benchmarks (engine hot path)\n");
 
-    // The tiny CNN's actual GEMM shapes:
+    // The tiny CNN's actual GEMM shapes, scalar vs tiled (the fc1 GEMV
+    // shape takes the shared n==1 fast path in both kinds):
     for &(label, m, k, n) in &[
         ("gemm_nn conv1 (8×9 · 9×784)", 8usize, 9usize, 784usize),
         ("gemm_nn conv2 (16×72 · 72×196)", 16, 72, 196),
@@ -44,23 +46,30 @@ fn main() {
         let a = rand_mat(&mut rng, m, k);
         let b = rand_mat(&mut rng, k, n);
         let mut out = Mat::zeros(m, n);
-        time_it(label, (m * k * n) as f64, 2000, || {
-            gemm_nn(black_box(&a), black_box(&b), &mut out)
-        });
+        for (variant, mut kr) in
+            [("scalar", Kernels::scalar()), ("tiled", Kernels::tiled())]
+        {
+            time_it(&format!("{label} {variant}"), (m * k * n) as f64, 2000,
+                    || kr.gemm_nn(black_box(&a), black_box(&b), &mut out));
+        }
     }
     {
         let (m, k, n) = (16usize, 72usize, 196usize);
         let a = rand_mat(&mut rng, m, k);
         let dy = rand_mat(&mut rng, m, n);
         let mut out = Mat::zeros(k, n);
-        time_it("gemm_tn δx conv2 (72×196)", (m * k * n) as f64, 2000, || {
-            gemm_tn(black_box(&a), black_box(&dy), &mut out)
-        });
         let cols = rand_mat(&mut rng, k, n);
         let mut g = Mat::zeros(m, k);
-        time_it("gemm_nt δW conv2 (16×72)", (m * k * n) as f64, 2000, || {
-            gemm_nt(black_box(&dy), black_box(&cols), &mut g)
-        });
+        for (variant, mut kr) in
+            [("scalar", Kernels::scalar()), ("tiled", Kernels::tiled())]
+        {
+            time_it(&format!("gemm_tn δx conv2 (72×196) {variant}"),
+                    (m * k * n) as f64, 2000,
+                    || kr.gemm_tn(black_box(&a), black_box(&dy), &mut out));
+            time_it(&format!("gemm_nt δW conv2 (16×72) {variant}"),
+                    (m * k * n) as f64, 2000,
+                    || kr.gemm_nt(black_box(&dy), black_box(&cols), &mut g));
+        }
     }
     {
         let (c, h, w) = (8usize, 14usize, 14usize);

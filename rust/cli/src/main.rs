@@ -13,6 +13,7 @@
 //! priot audit   [--method M] [--json]             static overflow-soundness proof
 //! priot audit   --memory [--device rp2040]        static RAM/flash fit proof
 //! priot bench   [--suite kernel|serve|all]        perf snapshot + baseline diff
+//!               [--filter SUB] [--iters N]        entry slice, iterations/entry
 //! priot table1  [--full]                          Table I
 //! priot table2  [--iters 100]                     Table II
 //! priot fig2    [--epochs 12]                     Fig. 2 CSV
@@ -642,25 +643,37 @@ fn cmd_audit_memory(args: &Args) -> Result<()> {
 
 /// Micro/macro benchmark runner with durable snapshots (`priot bench`).
 ///
-/// `--suite kernel` times the GEMM/im2col hot paths at Table I shapes;
-/// `--suite serve` times register/train/evaluate through the fleet
-/// service; `--suite all` (default) runs both.  `--baseline DIR` diffs
+/// `--suite kernel` times the scalar and tiled GEMM/im2col hot paths at
+/// Table I shapes; `--suite serve` times register/train/evaluate through
+/// the fleet service; `--suite all` (default) runs both.  `--filter SUB`
+/// keeps only entries whose label contains SUB (e.g. `tiled`, `gemm_tn`);
+/// `--iters N` sets iterations per kernel entry.  `--baseline DIR` diffs
 /// against checked-in `BENCH_<suite>.json` snapshots; `--update DIR`
-/// rewrites them from this run.
+/// rewrites them from this run (full suites only — a filtered run would
+/// silently drop the other entries from the snapshot).
 fn cmd_bench(args: &Args) -> Result<()> {
     use priot::report::bench;
 
     let suite = args.option("suite").unwrap_or("all");
     let iters: u32 = args.option("iters").unwrap_or("200").parse()?;
+    let filter = args.option("filter").unwrap_or("");
+    if !filter.is_empty() && args.option("update").is_some() {
+        bail!("--update writes full-suite snapshots; drop --filter");
+    }
     let mut results = Vec::new();
     match suite {
-        "kernel" => results.push(bench::run_kernel(iters)),
+        "kernel" => results.push(bench::run_kernel(iters, filter)),
         "serve" => results.push(bench::run_serve()?),
         "all" => {
-            results.push(bench::run_kernel(iters));
+            results.push(bench::run_kernel(iters, filter));
             results.push(bench::run_serve()?);
         }
         other => bail!("unknown bench suite '{other}' (want kernel|serve|all)"),
+    }
+    if !filter.is_empty() {
+        for r in &mut results {
+            r.entries.retain(|e| e.label.contains(filter));
+        }
     }
     for r in &results {
         print!("{}", r.render());
@@ -777,6 +790,7 @@ fn print_help() {
          \x20              device budget (--device rp2040 | --ram N [--flash N],\n\
          \x20              --eval-batch B; exits non-zero on any misfit)\n\
          \x20 bench        kernel + serve perf snapshots (--suite kernel|serve|all,\n\
+         \x20              --filter SUB keeps matching entries, --iters N per entry,\n\
          \x20              --baseline DIR diffs BENCH_*.json, --update DIR rewrites)\n\
          \x20 table1       regenerate Table I  (accuracy per method)\n\
          \x20 table2       regenerate Table II (time + memory on the Pico model)\n\

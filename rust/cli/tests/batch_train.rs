@@ -1,0 +1,112 @@
+//! Session-level identity tests for the two batch exploits riding on the
+//! tiled kernels: chunked batched-forward *training* (`train_batch`) and
+//! multi-threaded batched *evaluation* (`eval_threads`).  Both are
+//! required to be bit-identical to the sequential paths — asserted here
+//! over the public `Session` API with a synthetic backbone and generated
+//! data, method by method (the engine-layer identity is asserted in
+//! `priot-core`'s `engine::tests`; this covers the coordinator/session
+//! wiring on top: chunk remainders, θ-crossing fallback, the NITI
+//! per-sample default, and prediction sharding).
+
+use std::sync::Arc;
+
+use priot::config::Selection;
+use priot::datagen::{self, Task};
+use priot::proto::MethodSpec;
+use priot::ptest::gen::synthetic_backbone;
+use priot::serial::Dataset;
+use priot::session::{Backbone, Session};
+
+fn dataset(seed: u64, n: usize, angle: u32) -> Dataset {
+    datagen::generate(Task::Digits, n, seed, angle as f64)
+}
+
+fn session_for(spec: &MethodSpec, bb: &Arc<Backbone>, train_batch: usize,
+               eval_threads: usize) -> Session {
+    Session::builder()
+        .backbone(Arc::clone(bb))
+        .method_boxed(spec.plugin())
+        .seed(9)
+        .train_batch(train_batch)
+        .eval_threads(eval_threads)
+        .track_pruning(false)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn chunked_training_is_bit_identical_per_method() {
+    // 21 samples against chunks of 5 and 8 forces remainder chunks; two
+    // epochs let any divergence compound into the second epoch's reports.
+    // PRIOT/PRIOT-S take the batched-forward chunk path (with θ-crossing
+    // fallback); static NITI has no chunked path and must come out
+    // identical through the per-sample default.
+    let bb = synthetic_backbone(33);
+    let train = dataset(501, 21, 30);
+    let test = dataset(502, 16, 30);
+    for spec in [
+        MethodSpec::priot(),
+        MethodSpec::priot_s(0.2, Selection::WeightBased),
+        MethodSpec::niti_static(),
+    ] {
+        let mut seq = session_for(&spec, &bb, 1, 1);
+        let mut seq_reports = Vec::new();
+        for _ in 0..2 {
+            seq_reports.push(seq.train_epoch(&train).unwrap());
+        }
+        for chunk in [5usize, 8] {
+            let mut ch = session_for(&spec, &bb, chunk, 1);
+            for (ep, want) in seq_reports.iter().enumerate() {
+                let got = ch.train_epoch(&train).unwrap();
+                assert_eq!(got.steps, want.steps,
+                           "{:?} chunk={chunk} epoch={ep}: steps",
+                           spec.method);
+                assert_eq!(got.train_accuracy, want.train_accuracy,
+                           "{:?} chunk={chunk} epoch={ep}: train acc",
+                           spec.method);
+                assert_eq!(got.overflow, want.overflow,
+                           "{:?} chunk={chunk} epoch={ep}: overflow",
+                           spec.method);
+            }
+            assert_eq!(seq.scores().map(<[Vec<i32>]>::to_vec),
+                       ch.scores().map(<[Vec<i32>]>::to_vec),
+                       "{:?} chunk={chunk}: final scores", spec.method);
+            assert_eq!(seq.masks().map(<[Vec<i32>]>::to_vec),
+                       ch.masks().map(<[Vec<i32>]>::to_vec),
+                       "{:?} chunk={chunk}: masks", spec.method);
+            assert_eq!(seq.predict_batch(&test, 0).unwrap(),
+                       ch.predict_batch(&test, 0).unwrap(),
+                       "{:?} chunk={chunk}: post-training predictions",
+                       spec.method);
+        }
+    }
+}
+
+#[test]
+fn parallel_evaluation_matches_serial() {
+    // eval_batch 7 over 33 samples produces 7/7/7/7/5 batches; 4 worker
+    // threads shard each across private engines.  Inference-only, so the
+    // predictions — pruned (PRIOT, PRIOT-S) and unpruned (NITI) alike —
+    // and the accuracy must be identical to the serial path.
+    let bb = synthetic_backbone(34);
+    let train = dataset(601, 24, 30);
+    let test = dataset(602, 33, 30);
+    for spec in [
+        MethodSpec::priot(),
+        MethodSpec::priot_s(0.1, Selection::Random),
+        MethodSpec::niti_static(),
+    ] {
+        let mut serial = session_for(&spec, &bb, 1, 1);
+        let mut par = session_for(&spec, &bb, 1, 4);
+        serial.options_mut().eval_batch = 7;
+        par.options_mut().eval_batch = 7;
+        serial.train_epoch(&train).unwrap();
+        par.train_epoch(&train).unwrap();
+        assert_eq!(serial.predict_batch(&test, 0).unwrap(),
+                   par.predict_batch(&test, 0).unwrap(),
+                   "{:?}: predictions", spec.method);
+        assert_eq!(serial.evaluate(&test).unwrap(),
+                   par.evaluate(&test).unwrap(),
+                   "{:?}: accuracy", spec.method);
+    }
+}

@@ -95,6 +95,32 @@ fn has_word(code: &str, token: &str) -> bool {
     false
 }
 
+/// The overflow lint wall: the numeric hot paths (GEMM kernels — scalar
+/// and tiled —, quantization, the engine) carry
+/// `#![deny(clippy::arithmetic_side_effects)]` so every wrap/overflow
+/// site is either proven impossible or explicitly scoped with a
+/// documented `#[allow]`.  A refactor that drops the inner attribute
+/// silently loses the wall — pin its presence per file.
+#[test]
+fn arithmetic_lint_wall_covers_the_numeric_modules() {
+    const WALL: &str = "#![deny(clippy::arithmetic_side_effects)]";
+    for rel in [
+        "tensor/gemm.rs",
+        "tensor/kernels.rs",
+        "quant/mod.rs",
+        "engine/mod.rs",
+    ] {
+        let path = core_src().join(rel);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        assert!(
+            text.contains(WALL),
+            "{} must keep the `{WALL}` lint wall",
+            path.display()
+        );
+    }
+}
+
 /// Determinism lint: `priot-core`'s shipped code is the bit-exactness
 /// contract with the Python oracle and any device port, so it must not
 /// touch float arithmetic, wall clocks, or iteration-order-unstable

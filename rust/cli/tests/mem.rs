@@ -91,10 +91,13 @@ fn engine_allocations_equal_the_static_plan() {
                        "{:?} @ {angle}°: batched eval ran", spec.method);
             assert_eq!(probe.batch_bytes, plan.host_batch_bytes(8),
                        "{:?} @ {angle}°: batch buffers", spec.method);
+            assert_eq!(probe.scratch_bytes, plan.host_scratch_bytes(8),
+                       "{:?} @ {angle}°: GEMM packing scratch", spec.method);
             // The ≥ form of the property, spelled out: no observed peak
             // exceeds its static bound.
             assert!(plan.host_workspace_bytes() >= probe.workspace_bytes);
             assert!(plan.host_batch_bytes(8) >= probe.batch_bytes);
+            assert!(plan.host_scratch_bytes(8) >= probe.scratch_bytes);
         }
     }
 }

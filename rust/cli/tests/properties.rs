@@ -8,7 +8,7 @@ use priot::quant::{
     clamp8, dynamic_shift_for, requant, rshift_round, sr_hash_u32,
     stochastic_requant,
 };
-use priot::tensor::{col2im, gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+use priot::tensor::{col2im, im2col, Kernels, Mat};
 
 #[test]
 fn prop_rshift_round_halves_then_rounds() {
@@ -110,15 +110,17 @@ fn prop_sr_hash_avalanche() {
 
 #[test]
 fn prop_gemm_transpose_identities() {
-    // (AᵀB)ᵀ == BᵀA — exercises gemm_tn against itself via transposes.
+    // (AᵀB)ᵀ == BᵀA — exercises gemm_tn against itself via transposes,
+    // through the tiled dispatch (packed panels + microkernel).
     check("gemm-transpose", 107, 60, |rng| {
+        let mut kr = Kernels::tiled();
         let (m, k, n) = (gen::dim(rng, 6), gen::dim(rng, 6), gen::dim(rng, 6));
         let a = gen::mat_i8(rng, m, k);
         let b = gen::mat_i8(rng, m, n);
         let mut ab = Mat::zeros(k, n);
-        gemm_tn(&a, &b, &mut ab); // AᵀB (k,n)
+        kr.gemm_tn(&a, &b, &mut ab); // AᵀB (k,n)
         let mut ba = Mat::zeros(n, k);
-        gemm_tn(&b, &a, &mut ba); // BᵀA (n,k)
+        kr.gemm_tn(&b, &a, &mut ba); // BᵀA (n,k)
         for i in 0..k {
             for j in 0..n {
                 if ab.at(i, j) != ba.at(j, i) {
@@ -135,17 +137,18 @@ fn prop_gemm_nt_row_scaling() {
     // scaling a row of A scales the corresponding row of A·Bᵀ.
     check("gemm-row-scale", 108, 60, |rng| {
         let (m, k, n) = (gen::dim(rng, 5), gen::dim(rng, 6), gen::dim(rng, 5));
+        let mut kr = Kernels::tiled();
         let a = gen::mat_i8(rng, m, k);
         let b = gen::mat_i8(rng, n, k);
         let mut out = Mat::zeros(m, n);
-        gemm_nt(&a, &b, &mut out);
+        kr.gemm_nt(&a, &b, &mut out);
         let mut a2 = a.clone();
         let row = rng.below(m);
         for v in &mut a2.data[row * k..(row + 1) * k] {
             *v *= 2;
         }
         let mut out2 = Mat::zeros(m, n);
-        gemm_nt(&a2, &b, &mut out2);
+        kr.gemm_nt(&a2, &b, &mut out2);
         for j in 0..n {
             if out2.at(row, j) != 2 * out.at(row, j) {
                 return Err("row scaling broken".into());
@@ -193,7 +196,7 @@ fn prop_conv_via_gemm_equals_direct_convolution() {
         let mut cols = Mat::zeros(c * 9, h * w);
         im2col(&x, c, h, w, &mut cols);
         let mut out = Mat::zeros(f, h * w);
-        gemm_nn(&wts, &cols, &mut out);
+        Kernels::tiled().gemm_nn(&wts, &cols, &mut out);
         // direct conv
         for fi in 0..f {
             for y in 0..h as i32 {
@@ -218,6 +221,43 @@ fn prop_conv_via_gemm_equals_direct_convolution() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_kernels_bit_identical_to_scalar() {
+    // The tiled+packed kernels reorder *loops*, never the per-element
+    // summation order, so they must be bit-identical to the seed scalar
+    // kernels on every shape — including the tile-boundary adversaries
+    // (dims straddling the 4×8 microkernel) that the generator's free
+    // dims hit.  Scratch is reused across cases (the steady-state mode).
+    check("tiled-eq-scalar", 115, 80, |rng| {
+        let mut scalar = Kernels::scalar();
+        let mut tiled = Kernels::tiled();
+        let (m, k, n) =
+            (gen::dim(rng, 17), gen::dim(rng, 17), gen::dim(rng, 17));
+        let a = gen::mat_i8(rng, m, k);
+        let b = gen::mat_i8(rng, k, n);
+        let mut want = Mat::zeros(m, n);
+        let mut got = Mat::zeros(m, n);
+        scalar.gemm_nn(&a, &b, &mut want);
+        tiled.gemm_nn(&a, &b, &mut got);
+        if want.data != got.data {
+            return Err(format!("gemm_nn diverged at {m}x{k}x{n}"));
+        }
+        let at = gen::mat_i8(rng, k, m);
+        scalar.gemm_tn(&at, &b, &mut want);
+        tiled.gemm_tn(&at, &b, &mut got);
+        if want.data != got.data {
+            return Err(format!("gemm_tn diverged at {m}x{k}x{n}"));
+        }
+        let bt = gen::mat_i8(rng, n, k);
+        scalar.gemm_nt(&a, &bt, &mut want);
+        tiled.gemm_nt(&a, &bt, &mut got);
+        if want.data != got.data {
+            return Err(format!("gemm_nt diverged at {m}x{k}x{n}"));
         }
         Ok(())
     });

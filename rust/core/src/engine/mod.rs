@@ -39,7 +39,7 @@ use crate::quant::{
 use crate::serial::TensorI8;
 use crate::spec::{LayerSpec, NetSpec};
 use crate::tensor::{
-    col2im, gemm_nn, gemm_nt, gemm_tn, im2col, maxpool2, maxpool2_backward, Mat,
+    col2im, im2col, maxpool2, maxpool2_backward, Kernels, Mat,
 };
 use crate::INT8_MAX;
 
@@ -127,13 +127,19 @@ pub struct PruneState<'a> {
     pub theta: i32,
 }
 
-/// Buffers for the batched inference path, allocated on first use and
+/// Buffers for the batched forward path, allocated on first use and
 /// rebuilt when the batch size changes.  Batch-B forward is the batch-1
 /// forward with B samples laid side by side along the GEMM column axis:
 /// per-column arithmetic is untouched, so results are bit-identical to B
 /// calls of [`Engine::forward`] while the weight matrix streams through
 /// the cache once per layer instead of once per sample (and the FC layers
 /// hit the `gemm_nn` n>1 kernel instead of the GEMV path).
+///
+/// Besides inference, these buffers double as the *batched tape* for
+/// chunked training ([`Engine::step_priot_chunk`]): `cols`, `relu`, and
+/// the per-layer `pool_idx` hold every sample's forward record, and
+/// [`Engine::load_tape`] gathers one sample's slice back into the
+/// per-sample [`Workspace`] so the batch-1 backward runs unchanged.
 struct BatchBufs {
     b: usize,
     /// Per-layer scratch for one sample's im2col patches (K, N).
@@ -147,8 +153,13 @@ struct BatchBufs {
     relu: Vec<Vec<i32>>,
     /// One sample's pre-pool activation gathered channel-major (max F·N).
     gather: Vec<i32>,
-    /// Pool argmax scratch (inference records no tape).
-    pool_idx: Vec<u8>,
+    /// Per-layer 2×2 argmax tape: sample `bi`'s indices occupy
+    /// `[bi·out_len, (bi+1)·out_len)` (pooled conv layers only; empty
+    /// otherwise).  Kept per layer — not scratch — so chunked training can
+    /// replay any sample's backward from the batched forward.
+    pool_idx: Vec<Vec<u8>>,
+    /// Per-sample final-layer overflow counts (the Fig. 2 probe, batched).
+    ovf: Vec<u32>,
     /// Ping-pong sample-major activation buffers (B · max layer len).
     x_a: Vec<i32>,
     x_b: Vec<i32>,
@@ -162,18 +173,20 @@ impl BatchBufs {
         let mut cols = Vec::with_capacity(spec.layers.len());
         let mut acc = Vec::with_capacity(spec.layers.len());
         let mut relu = Vec::with_capacity(spec.layers.len());
+        let mut pool_idx = Vec::with_capacity(spec.layers.len());
         let mut max_pre = 0usize;
         let mut max_len = spec.input_len();
         for l in &spec.layers {
             let (f, k) = l.weight_shape();
-            let n = match *l {
-                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
-                LayerSpec::Fc { .. } => 1,
+            let (n, pooled) = match *l {
+                LayerSpec::Conv { in_h, in_w, pool, .. } => (in_h * in_w, pool),
+                LayerSpec::Fc { .. } => (1, false),
             };
             scratch.push(Mat::zeros(k, n));
             cols.push(Mat::zeros(k, n * b));
             acc.push(Mat::zeros(f, n * b));
             relu.push(vec![0; f * n * b]);
+            pool_idx.push(vec![0u8; if pooled { f * n * b / 4 } else { 0 }]);
             max_pre = max_pre.max(f * n);
             max_len = max_len.max(l.out_len());
         }
@@ -183,8 +196,9 @@ impl BatchBufs {
             cols,
             acc,
             relu,
+            pool_idx,
+            ovf: vec![0; b],
             gather: vec![0; max_pre],
-            pool_idx: vec![0; max_pre / 4],
             x_a: vec![0; b * max_len],
             x_b: vec![0; b * max_len],
         }
@@ -203,7 +217,12 @@ pub struct Engine {
     pub scales: Arc<Scales>,
     pub weights: Arc<Vec<Mat>>,
     ws: Workspace,
-    /// Batched-inference buffers (lazy; see [`BatchBufs`]).
+    /// GEMM dispatch + its packing scratch (see [`Kernels`]): tiled by
+    /// default, reserved up front from [`plan::BufferPlan::scratch_elems`]
+    /// so steady-state kernels never allocate — and so the static memory
+    /// audit's `plan == probe` equality covers the scratch too.
+    kernels: Kernels,
+    /// Batched-forward buffers (lazy; see [`BatchBufs`]).
     batch: Option<BatchBufs>,
     /// Optional runtime accumulator probe (see [`AccProbe`]); off by
     /// default — the observe loop never runs on the production path.
@@ -281,7 +300,15 @@ impl Engine {
                   -> Result<Self> {
         check_shapes(&spec, &weights, &scales)?;
         let ws = Workspace::new(&spec);
-        Ok(Self { spec, scales, weights, ws, batch: None, probe: None })
+        let mut kernels = Kernels::tiled();
+        let (ae, be) = plan::BufferPlan::of(&spec).scratch_elems(0);
+        kernels.reserve(ae, be);
+        Ok(Self { spec, scales, weights, ws, kernels, batch: None, probe: None })
+    }
+
+    /// The GEMM dispatch object (and its scratch) this engine runs on.
+    pub fn kernels(&self) -> &Kernels {
+        &self.kernels
     }
 
     /// Start recording per-layer accumulator extremes (resets any prior
@@ -357,7 +384,7 @@ impl Engine {
             }
             let w_fwd: &Mat =
                 if prune.is_some() { &buf.weff } else { &self.weights[li] };
-            gemm_nn(w_fwd, &buf.cols, &mut buf.acc);
+            self.kernels.gemm_nn(w_fwd, &buf.cols, &mut buf.acc);
             if let Some(p) = self.probe.as_mut() {
                 p.observe(li, &buf.acc.data);
             }
@@ -400,29 +427,47 @@ impl Engine {
         argmax(self.logits())
     }
 
-    /// Batched inference forward: `imgs` holds one sample per **row**
-    /// (B, input_len); logits land one sample per row in `logits`
-    /// (B, classes).  Bit-identical per sample to [`Self::forward`] with
-    /// static scales — the batch dimension only adds GEMM columns (see
-    /// [`BatchBufs`]).  Returns the Fig. 2 overflow count summed over the
-    /// batch.  Records no tape: inference only.
+    /// Batched forward: `imgs` holds one sample per **row** (B, input_len);
+    /// logits land one sample per row in `logits` (B, classes).
+    /// Bit-identical per sample to [`Self::forward`] with static scales —
+    /// the batch dimension only adds GEMM columns (see [`BatchBufs`]).
+    /// Returns the Fig. 2 overflow count summed over the batch.
     pub fn forward_batch(&mut self, imgs: &Mat, prune: Option<&PruneState>,
                          logits: &mut Mat) -> u32 {
         let b = imgs.rows;
-        assert_eq!(imgs.cols, self.spec.input_len(),
-                   "forward_batch: sample length != model input");
         assert_eq!(logits.rows, b, "forward_batch: logits rows != batch");
         assert_eq!(logits.cols, self.spec.num_classes(),
                    "forward_batch: logits cols != classes");
         if b == 0 {
             return 0;
         }
+        self.forward_batch_core(imgs, prune);
+        let bw = self.batch.as_ref().expect("batch bufs live after core");
+        logits
+            .data
+            .copy_from_slice(&bw.x_a[..b * self.spec.num_classes()]);
+        bw.ovf.iter().sum()
+    }
+
+    /// Shared body of [`Self::forward_batch`] / [`Self::step_priot_chunk`]:
+    /// run the batched forward, leaving the final activations sample-major
+    /// in `bw.x_a`, per-sample overflow counts in `bw.ovf`, and the full
+    /// batched tape (`cols`/`relu`/`pool_idx`) in the batch buffers.
+    fn forward_batch_core(&mut self, imgs: &Mat, prune: Option<&PruneState>) {
+        let b = imgs.rows;
+        debug_assert!(b > 0);
+        assert_eq!(imgs.cols, self.spec.input_len(),
+                   "forward_batch: sample length != model input");
         if self.batch.as_ref().map(|bw| bw.b) != Some(b) {
             self.batch = Some(BatchBufs::new(&self.spec, b));
+            // Keep the kernel scratch at the planned worst case for this
+            // batch size (grow-only; `plan == probe` pins the geometry).
+            let (ae, be) = plan::BufferPlan::of(&self.spec).scratch_elems(b);
+            self.kernels.reserve(ae, be);
         }
         let mut bw = self.batch.take().expect("batch bufs just ensured");
         let n_layers = self.spec.layers.len();
-        let mut overflow = 0u32;
+        bw.ovf.iter_mut().for_each(|v| *v = 0);
         bw.x_a[..imgs.data.len()].copy_from_slice(&imgs.data);
         let mut in_len = self.spec.input_len();
         for li in 0..n_layers {
@@ -469,7 +514,7 @@ impl Engine {
                 &self.weights[li]
             };
             let acc = &mut bw.acc[li];
-            gemm_nn(w_fwd, cols, acc);
+            self.kernels.gemm_nn(w_fwd, cols, acc);
             if let Some(p) = self.probe.as_mut() {
                 p.observe(li, &acc.data);
             }
@@ -479,13 +524,29 @@ impl Engine {
                 LayerSpec::Fc { relu, .. } => relu,
             };
             let relu_buf = &mut bw.relu[li];
-            for (o, &a) in relu_buf[..f * bn].iter_mut().zip(acc.data.iter()) {
-                let y = rshift_round(a, s);
-                if last && y.abs() > INT8_MAX {
-                    overflow += 1;
+            if last {
+                // Overflow is attributed per sample: flat index
+                // `fi·bn + bi·n + j` belongs to sample `(idx % bn) / n`.
+                for (idx, (o, &a)) in relu_buf[..f * bn]
+                    .iter_mut()
+                    .zip(acc.data.iter())
+                    .enumerate()
+                {
+                    let y = rshift_round(a, s);
+                    if y.abs() > INT8_MAX {
+                        bw.ovf[(idx % bn) / n] += 1;
+                    }
+                    let y = clamp8(y);
+                    *o = if relu_flag { y.max(0) } else { y };
                 }
-                let y = clamp8(y);
-                *o = if relu_flag { y.max(0) } else { y };
+            } else {
+                for (o, &a) in
+                    relu_buf[..f * bn].iter_mut().zip(acc.data.iter())
+                {
+                    let y = rshift_round(a, s);
+                    let y = clamp8(y);
+                    *o = if relu_flag { y.max(0) } else { y };
+                }
             }
             // Scatter back to the sample-major layout (pooling per sample).
             let out_len = layer.out_len();
@@ -500,7 +561,8 @@ impl Engine {
                         }
                         let dst = &mut bw.x_b[bi * out_len..(bi + 1) * out_len];
                         if pool {
-                            let idx = &mut bw.pool_idx[..out_len];
+                            let idx = &mut bw.pool_idx[li]
+                                [bi * out_len..(bi + 1) * out_len];
                             maxpool2(g, out_c, in_h, in_w, dst, idx);
                         } else {
                             dst.copy_from_slice(g);
@@ -519,11 +581,7 @@ impl Engine {
             core::mem::swap(&mut bw.x_a, &mut bw.x_b);
             in_len = out_len;
         }
-        logits
-            .data
-            .copy_from_slice(&bw.x_a[..b * self.spec.num_classes()]);
         self.batch = Some(bw);
-        overflow
     }
 
     /// Batched inference: one prediction per row of `imgs` — bit-identical
@@ -533,9 +591,7 @@ impl Engine {
         let classes = self.spec.num_classes();
         let mut logits = Mat::zeros(imgs.rows, classes);
         self.forward_batch(imgs, prune, &mut logits);
-        (0..imgs.rows)
-            .map(|bi| argmax(&logits.data[bi * classes..(bi + 1) * classes]))
-            .collect()
+        (0..imgs.rows).map(|bi| argmax(logits.row(bi))).collect()
     }
 
     /// Backward pass from `dlogits` (already in `ws.dlogits`); fills each
@@ -587,14 +643,17 @@ impl Engine {
                     }
                     let dy_mat = Mat::from_vec(out_c, hw, dy.to_vec());
                     match sparse_masks {
-                        None => gemm_nt(&dy_mat, &buf.cols, &mut buf.grad),
+                        None => {
+                            self.kernels.gemm_nt(&dy_mat, &buf.cols,
+                                                 &mut buf.grad)
+                        }
                         Some(masks) => {
                             sparse_grad(&dy_mat, &buf.cols, &masks[li],
                                         &mut buf.grad)
                         }
                     }
                     if li > 0 {
-                        gemm_tn(w, &dy_mat, &mut buf.dcols);
+                        self.kernels.gemm_tn(w, &dy_mat, &mut buf.dcols);
                         col2im(&buf.dcols, in_c, in_h, in_w, &mut buf.dx32);
                         let s = if dynamic {
                             dynamic_shift_for(max_abs(&buf.dx32))
@@ -626,8 +685,7 @@ impl Engine {
                         None => {
                             for i in 0..out_f {
                                 let di = dy[i];
-                                let row =
-                                    &mut buf.grad.data[i * in_f..(i + 1) * in_f];
+                                let row = buf.grad.row_mut(i);
                                 if di == 0 {
                                     row.iter_mut().for_each(|v| *v = 0);
                                 } else {
@@ -643,8 +701,7 @@ impl Engine {
                             let m = &masks[li];
                             for i in 0..out_f {
                                 let di = dy[i];
-                                let row =
-                                    &mut buf.grad.data[i * in_f..(i + 1) * in_f];
+                                let row = buf.grad.row_mut(i);
                                 let mrow = &m[i * in_f..(i + 1) * in_f];
                                 // NB: scored entries must be written even
                                 // when di == 0 — the grad buffer is reused
@@ -667,7 +724,7 @@ impl Engine {
                             if di == 0 {
                                 continue;
                             }
-                            let wrow = &w.data[i * in_f..(i + 1) * in_f];
+                            let wrow = w.row(i);
                             for (o, &wv) in buf.dx32.iter_mut().zip(wrow.iter()) {
                                 *o += di * wv;
                             }
@@ -741,6 +798,19 @@ impl Engine {
         } else {
             self.backward(false);
         }
+        self.update_scores(scores, masks, theta, step, sr);
+        StepOut { logits, overflow }
+    }
+
+    /// Apply one sample's PRIOT score update from the gradients sitting in
+    /// the workspace (the tail of [`Self::step_priot`], factored out so
+    /// the chunked path shares it).  Returns `true` if any scored edge
+    /// crossed θ — i.e. the mask pattern `m·(s < θ)` the forward pass
+    /// reads actually changed, which is what invalidates a batched
+    /// forward of later samples.
+    fn update_scores(&self, scores: &mut [Vec<i32>], masks: &[Vec<i32>],
+                     theta: i32, step: u32, sr: bool) -> bool {
+        let mut flipped = false;
         for li in 0..self.spec.layers.len() {
             let g = &self.ws.layers[li].grad;
             let sc = self.scales.layers[li];
@@ -767,10 +837,109 @@ impl Engine {
                 } else {
                     requant(ds, shift)
                 };
-                sl[i] = clamp8(sl[i] - upd);
+                let old = sl[i];
+                let new = clamp8(old - upd);
+                if (old < theta) != (new < theta) {
+                    flipped = true;
+                }
+                sl[i] = new;
             }
         }
-        StepOut { logits, overflow }
+        flipped
+    }
+
+    /// Gather sample `bi`'s forward tape out of the batched buffers into
+    /// the per-sample [`Workspace`], so the batch-1 backward runs on it
+    /// unchanged.  The batched forward is bit-identical per sample, so
+    /// the gathered tape is exactly what [`Self::forward`] would have
+    /// recorded.  (Associated fn, not a method: the caller holds the
+    /// [`BatchBufs`] outside `self` while iterating samples.)
+    fn load_tape(spec: &NetSpec, ws: &mut Workspace, bw: &BatchBufs,
+                 bi: usize) {
+        let b = bw.b;
+        for (li, l) in spec.layers.iter().enumerate() {
+            let (f, k) = l.weight_shape();
+            let n = match *l {
+                LayerSpec::Conv { in_h, in_w, .. } => in_h * in_w,
+                LayerSpec::Fc { .. } => 1,
+            };
+            let bn = n * b;
+            let buf = &mut ws.layers[li];
+            for ki in 0..k {
+                buf.cols.row_mut(ki).copy_from_slice(
+                    &bw.cols[li].data[ki * bn + bi * n..ki * bn + (bi + 1) * n],
+                );
+            }
+            for fi in 0..f {
+                buf.relu_out[fi * n..(fi + 1) * n].copy_from_slice(
+                    &bw.relu[li][fi * bn + bi * n..fi * bn + (bi + 1) * n],
+                );
+            }
+            if !buf.pool_idx.is_empty() {
+                let ol = l.out_len();
+                buf.pool_idx
+                    .copy_from_slice(&bw.pool_idx[li][bi * ol..(bi + 1) * ol]);
+            }
+        }
+    }
+
+    /// Chunked PRIOT / PRIOT-S training: one batched forward over the
+    /// whole chunk (`imgs`: one sample per row), then per-sample backward
+    /// + score updates replaying each sample's tape from the batch
+    /// buffers.  Per the paper's device protocol the *updates* stay
+    /// strictly sequential batch-1 steps — only the forward passes are
+    /// batched, which is sound because the forward reads scores solely
+    /// through the mask pattern `m·(s < θ)`:
+    ///
+    /// * while updates never cross θ, sample `i+1`'s batched forward
+    ///   (computed from the pre-chunk scores) equals what a fresh forward
+    ///   after sample `i`'s update would produce — bit-identical to
+    ///   [`Self::step_priot`] called in a loop;
+    /// * the first update that *does* flip an edge invalidates the
+    ///   remaining samples' batched forward, so the method stops and
+    ///   returns how many samples it consumed (≥ 1); the caller falls
+    ///   back to per-sample steps for the rest of the chunk.
+    ///
+    /// `step0` is the step counter for the first sample; sample `bi` uses
+    /// `step0 + bi` (the SR hash consumes the same counters as the
+    /// sequential loop).  One [`StepOut`] per consumed sample is appended
+    /// to `outs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_priot_chunk(&mut self, imgs: &Mat, labels: &[usize],
+                            scores: &mut [Vec<i32>], masks: &[Vec<i32>],
+                            theta: i32, step0: u32, sr: bool, sparse: bool,
+                            outs: &mut Vec<StepOut>) -> usize {
+        let b = imgs.rows;
+        assert_eq!(labels.len(), b, "step_priot_chunk: labels != batch rows");
+        if b == 0 {
+            return 0;
+        }
+        {
+            let prune = PruneState { scores, masks, theta };
+            self.forward_batch_core(imgs, Some(&prune));
+        }
+        let bw = self.batch.take().expect("batch bufs live after core");
+        let classes = self.spec.num_classes();
+        let mut consumed = b;
+        for bi in 0..b {
+            Self::load_tape(&self.spec, &mut self.ws, &bw, bi);
+            let logits = bw.x_a[bi * classes..(bi + 1) * classes].to_vec();
+            int_softmax_grad(&logits, labels[bi], &mut self.ws.dlogits);
+            if sparse {
+                self.backward_sparse(masks);
+            } else {
+                self.backward(false);
+            }
+            let flipped =
+                self.update_scores(scores, masks, theta, step0 + bi as u32, sr);
+            outs.push(StepOut { logits, overflow: bw.ovf[bi] });
+            if flipped && bi + 1 < b {
+                consumed = bi + 1;
+                break;
+            }
+        }
+        self.batch = Some(bw);
+        consumed
     }
 
     /// Calibration sweep (paper §IV-A): run dynamic fwd/bwd over the given
@@ -851,12 +1020,12 @@ fn sparse_grad(dy: &Mat, cols: &Mat, mask: &[i32], grad: &mut Mat) {
     debug_assert_eq!(grad.rows * grad.cols, f * k);
     debug_assert_eq!(mask.len(), f * k);
     for fi in 0..f {
-        let dyr = &dy.data[fi * n..(fi + 1) * n];
+        let dyr = dy.row(fi);
         for ki in 0..k {
             if mask[fi * k + ki] == 0 {
                 continue;
             }
-            let colr = &cols.data[ki * n..(ki + 1) * n];
+            let colr = cols.row(ki);
             let mut acc = 0i32;
             for (&a, &b) in dyr.iter().zip(colr.iter()) {
                 acc += a * b;

@@ -37,6 +37,7 @@ use alloc::vec::Vec;
 
 use super::Engine;
 use crate::spec::{LayerSpec, NetSpec};
+use crate::tensor::kernels::{packed_a_len, packed_b_len};
 
 /// Bytes per `i32` working element (every host-side activation, weight,
 /// score, accumulator, and delta buffer).
@@ -166,23 +167,73 @@ impl BufferPlan {
     }
 
     /// Exact bytes `BatchBufs::new(spec, b)` allocates: per layer
-    /// `scratch + cols·b + acc·b + relu·b` (i32), plus the gather /
-    /// pool-index scratch and the sample-major ping-pong pair.  Zero for
-    /// `b == 0` (the engine never builds batch buffers it doesn't use).
+    /// `scratch + cols·b + acc·b + relu·b` (i32) plus the per-layer `u8`
+    /// pool-index tape, plus the gather scratch, the per-sample overflow
+    /// counters, and the sample-major ping-pong pair.  Zero for `b == 0`
+    /// (the engine never builds batch buffers it doesn't use).
     pub fn host_batch_bytes(&self, b: usize) -> usize {
         if b == 0 {
             return 0;
         }
         let mut elems = 0usize;
+        let mut idx_bytes = 0usize;
         for l in &self.layers {
             elems += l.k * l.n // scratch
                 + l.k * l.n * b // cols
                 + l.f * l.n * b // acc
                 + l.f * l.n * b; // relu
+            if l.pooled {
+                idx_bytes += l.pre_pool / 4 * b; // pool_idx tape (u8)
+            }
         }
         elems += self.max_pre; // gather
+        elems += b; // ovf (u32)
         elems += 2 * b * self.batch_unit; // x_a/x_b
-        elems * HOST_ELEM_BYTES + self.max_pre / 4 // + pool_idx (u8)
+        elems * HOST_ELEM_BYTES + idx_bytes
+    }
+
+    /// Exact worst-case packed-panel element counts `(apack, bpack)` of
+    /// the tiled GEMM scratch ([`crate::tensor::GemmScratch`]) for this
+    /// spec at batch size `b` — the maxima over every GEMM the engine
+    /// dispatches *tiled*.  This mirrors the `Kernels` dispatch rules
+    /// exactly: `nn`/`tn` fall back to the scalar GEMV (no scratch) when
+    /// the right operand has one column, `nt` always packs.
+    ///
+    /// `b == 0` prices the batch-1 training shapes alone (what
+    /// `Engine::shared` reserves up front); `b > 0` additionally folds in
+    /// the batched forward shapes (what the engine reserves when it builds
+    /// `BatchBufs`).  Monotone in `b`, matching the grow-only scratch.
+    pub fn scratch_elems(&self, b: usize) -> (usize, usize) {
+        let (mut a_max, mut b_max) = (0usize, 0usize);
+        let mut take = |a: usize, bb: usize| {
+            a_max = a_max.max(a);
+            b_max = b_max.max(bb);
+        };
+        for l in &self.layers {
+            if l.conv {
+                if l.n > 1 {
+                    // training forward: nn (f,k)·(k,n)
+                    take(packed_a_len(l.f, l.k), packed_b_len(l.n, l.k));
+                }
+                // backward δW: nt (f,n)·(k,n)ᵀ — packs even at n == 1
+                take(packed_a_len(l.f, l.n), packed_b_len(l.k, l.n));
+                if l.index > 0 && l.n > 1 {
+                    // backward δx: tn (f,k)ᵀ·(f,n)
+                    take(packed_a_len(l.k, l.f), packed_b_len(l.n, l.f));
+                }
+            }
+            if b > 0 && l.n * b > 1 {
+                // batched forward: nn (f,k)·(k,n·b)
+                take(packed_a_len(l.f, l.k), packed_b_len(l.n * b, l.k));
+            }
+        }
+        (a_max, b_max)
+    }
+
+    /// Byte rendering of [`Self::scratch_elems`] (i32 panels).
+    pub fn host_scratch_bytes(&self, b: usize) -> usize {
+        let (a, bb) = self.scratch_elems(b);
+        (a + bb) * HOST_ELEM_BYTES
     }
 }
 
@@ -196,7 +247,9 @@ pub struct MemProbe {
     pub weights_bytes: usize,
     /// The per-session `Workspace` (tape + gradients + deltas).
     pub workspace_bytes: usize,
-    /// Batched-inference buffers, 0 until `forward_batch` has run.
+    /// The tiled-GEMM packing scratch (live `GemmScratch` elements).
+    pub scratch_bytes: usize,
+    /// Batched-forward buffers, 0 until a batched forward has run.
     pub batch_bytes: usize,
     /// The batch size the batch buffers are currently sized for.
     pub batch_b: Option<usize>,
@@ -234,19 +287,25 @@ impl Engine {
             None => (0, None),
             Some(bw) => {
                 let mut elems = 0usize;
+                let mut idx_bytes = 0usize;
                 for li in 0..bw.cols.len() {
                     elems += bw.scratch[li].data.len()
                         + bw.cols[li].data.len()
                         + bw.acc[li].data.len()
                         + bw.relu[li].len();
+                    idx_bytes += bw.pool_idx[li].len();
                 }
-                elems += bw.gather.len() + bw.x_a.len() + bw.x_b.len();
-                (elems * HOST_ELEM_BYTES + bw.pool_idx.len(), Some(bw.b))
+                elems += bw.gather.len()
+                    + bw.ovf.len()
+                    + bw.x_a.len()
+                    + bw.x_b.len();
+                (elems * HOST_ELEM_BYTES + idx_bytes, Some(bw.b))
             }
         };
         MemProbe {
             weights_bytes,
             workspace_bytes: ws_elems * HOST_ELEM_BYTES + ws_idx,
+            scratch_bytes: self.kernels.scratch_elems() * HOST_ELEM_BYTES,
             batch_bytes,
             batch_b,
         }
@@ -296,7 +355,15 @@ mod tests {
         assert_eq!(plan.host_weights_bytes(), 52_040 * 4);
         assert_eq!(plan.host_workspace_bytes(), 743_376);
         assert_eq!(plan.host_batch_bytes(0), 0);
-        assert_eq!(plan.host_batch_bytes(8), 1_526_432);
+        assert_eq!(plan.host_batch_bytes(8), 1_543_712);
+        // Tiled-GEMM scratch: batch-1 training maxima come from conv
+        // backward (`nt` apack 8·784, fwd `nn` bpack 200·72); the batched
+        // forward grows both sides (fc1 apack 64·784, conv2 bpack
+        // (196·b→NR)·72).
+        assert_eq!(plan.host_scratch_bytes(0), 82_688);
+        assert_eq!(plan.host_scratch_bytes(1), 82_688);
+        assert_eq!(plan.host_scratch_bytes(4), 426_496);
+        assert_eq!(plan.host_scratch_bytes(8), 652_288);
     }
 
     #[test]
@@ -310,6 +377,8 @@ mod tests {
                        "{name} weights");
             assert_eq!(probe.workspace_bytes, plan.host_workspace_bytes(),
                        "{name} workspace");
+            assert_eq!(probe.scratch_bytes, plan.host_scratch_bytes(0),
+                       "{name} scratch (training reserve)");
             assert_eq!(probe.batch_bytes, 0, "{name}: no batch ran yet");
             // Drive the batched path and re-measure.
             for b in [1usize, 4] {
@@ -320,6 +389,8 @@ mod tests {
                 assert_eq!(probe.batch_b, Some(b), "{name} b={b}");
                 assert_eq!(probe.batch_bytes, plan.host_batch_bytes(b),
                            "{name} b={b}");
+                assert_eq!(probe.scratch_bytes, plan.host_scratch_bytes(b),
+                           "{name} b={b} scratch");
             }
         }
     }

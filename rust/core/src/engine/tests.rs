@@ -353,8 +353,7 @@ fn forward_batch_bit_identical_to_single_sample() {
             let mut want_logits = Vec::new();
             let mut want_overflow = 0u32;
             for bi in 0..b {
-                let img = &imgs.data[bi * spec.input_len()..(bi + 1) * spec.input_len()];
-                let (ovf, _) = e.forward(img, prune, false);
+                let (ovf, _) = e.forward(imgs.row(bi), prune, false);
                 want_overflow += ovf;
                 want_logits.extend_from_slice(e.logits());
             }
@@ -388,15 +387,93 @@ fn forward_batch_survives_batch_size_changes() {
             (0..b * spec.input_len()).map(|_| rng.int_in(0, 127)).collect(),
         );
         let preds = e.predict_batch(&imgs, None);
-        let want: Vec<usize> = (0..b)
-            .map(|bi| {
-                e.predict(&imgs.data[bi * spec.input_len()
-                                     ..(bi + 1) * spec.input_len()], None)
-            })
-            .collect();
+        let want: Vec<usize> =
+            (0..b).map(|bi| e.predict(imgs.row(bi), None)).collect();
         assert_eq!(preds, want, "b={b}");
     };
     for b in [4usize, 7, 2, 7, 1] {
         one(b);
     }
+}
+
+/// Drive `total` PRIOT steps twice — sequentially via `step_priot`, and
+/// chunked via `step_priot_chunk` with the caller-side per-sample fallback
+/// after a θ-crossing (exactly what the host executor does) — and assert
+/// bit-identical logits, overflow probes, and final scores.
+fn assert_chunked_matches_sequential(sparse: bool, sr: bool, theta: i32,
+                                     seed: u64) {
+    let mut es = tiny_engine(seed);
+    let mut ec = tiny_engine(seed);
+    let spec = es.spec.clone();
+    let masks: Vec<Vec<i32>> = if sparse {
+        let mut rng32 = XorShift32::new(seed as u32 ^ 0x9e37);
+        spec.layers.iter()
+            .map(|l| select_mask_random(&mut rng32, l.num_params(), 0.15)
+                .into_iter().map(|v| v as i32).collect())
+            .collect()
+    } else {
+        ones_masks(&spec)
+    };
+    let mut s_seq = rand_scores(&spec, seed as u32);
+    let mut s_chk = s_seq.clone();
+    let mut rng = XorShift64::new(seed ^ 0xabcd);
+    let total = 11usize;
+    let imgs: Vec<Vec<i32>> =
+        (0..total).map(|_| rand_img(&mut rng, spec.input_len())).collect();
+    let labels: Vec<usize> = (0..total).map(|_| rng.below(10)).collect();
+
+    let mut want = Vec::new();
+    for i in 0..total {
+        want.push(es.step_priot(&imgs[i], labels[i], &mut s_seq, &masks,
+                                theta, i as u32, sr, sparse));
+    }
+
+    let mut got: Vec<StepOut> = Vec::new();
+    let chunk = 4usize;
+    let mut i = 0usize;
+    while i < total {
+        let b = chunk.min(total - i);
+        let mut m = Mat::zeros(b, spec.input_len());
+        for bi in 0..b {
+            m.row_mut(bi).copy_from_slice(&imgs[i + bi]);
+        }
+        let consumed = ec.step_priot_chunk(&m, &labels[i..i + b], &mut s_chk,
+                                           &masks, theta, i as u32, sr,
+                                           sparse, &mut got);
+        assert!((1..=b).contains(&consumed), "consumed {consumed} of {b}");
+        i += consumed;
+        for _ in consumed..b {
+            got.push(ec.step_priot(&imgs[i], labels[i], &mut s_chk, &masks,
+                                   theta, i as u32, sr, sparse));
+            i += 1;
+        }
+    }
+    assert_eq!(got.len(), total);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.logits, w.logits, "sample {i}: logits diverged");
+        assert_eq!(g.overflow, w.overflow, "sample {i}: overflow diverged");
+    }
+    assert_eq!(s_chk, s_seq, "final scores diverged");
+}
+
+#[test]
+fn priot_chunked_training_bit_identical_to_sequential() {
+    // θ=-64 (the paper default): crossings are rare, chunks mostly run to
+    // completion — the batched-forward path does the work.
+    assert_chunked_matches_sequential(false, false, -64, 60);
+    assert_chunked_matches_sequential(false, true, -64, 61);
+}
+
+#[test]
+fn priot_chunked_training_survives_theta_crossings() {
+    // θ=0 over random int8 scores: updates cross θ constantly, so chunks
+    // stop early and the per-sample fallback finishes them — still exact.
+    assert_chunked_matches_sequential(false, false, 0, 62);
+    assert_chunked_matches_sequential(false, true, 0, 63);
+}
+
+#[test]
+fn priot_s_chunked_training_bit_identical_to_sequential() {
+    assert_chunked_matches_sequential(true, false, 0, 64);
+    assert_chunked_matches_sequential(true, true, 0, 65);
 }

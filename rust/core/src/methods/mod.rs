@@ -270,12 +270,25 @@ pub trait MethodPlugin: Send {
                      imgs: &crate::tensor::Mat) -> Vec<usize> {
         let mut out = Vec::with_capacity(imgs.rows);
         for bi in 0..imgs.rows {
-            out.push(
-                self.predict(engine,
-                             &imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]),
-            );
+            out.push(self.predict(engine, imgs.row(bi)));
         }
         out
+    }
+
+    /// Chunked training: batch the *forward* passes over one sample per
+    /// row of `imgs` while keeping every update a sequential batch-1 step
+    /// (the paper's device protocol).  Returns `Some(consumed)` — how
+    /// many samples (≥ 1) were trained, appending one [`StepOut`] per
+    /// consumed sample to `outs` — or `None` when the method has no
+    /// chunked path and the caller should loop [`Self::train_step`]
+    /// instead.  Implementations must be bit-identical to the sequential
+    /// loop; a method that cannot guarantee that (e.g. NITI, whose weight
+    /// updates change the very next forward) must leave this as `None`.
+    fn train_chunk(&mut self, engine: &mut Engine, imgs: &crate::tensor::Mat,
+                   labels: &[usize], step0: u32, outs: &mut Vec<StepOut>)
+                   -> Option<usize> {
+        let _ = (engine, imgs, labels, step0, outs);
+        None
     }
 
     /// Current scores, if the method has them.
@@ -551,6 +564,14 @@ impl MethodPlugin for Priot {
                           self.theta, step, self.sr, false)
     }
 
+    fn train_chunk(&mut self, engine: &mut Engine, imgs: &crate::tensor::Mat,
+                   labels: &[usize], step0: u32, outs: &mut Vec<StepOut>)
+                   -> Option<usize> {
+        Some(engine.step_priot_chunk(imgs, labels, &mut self.st.scores,
+                                     &self.st.masks, self.theta, step0,
+                                     self.sr, false, outs))
+    }
+
     fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {
         let prune = PruneState {
             scores: &self.st.scores,
@@ -680,6 +701,14 @@ impl MethodPlugin for PriotS {
                   step: u32) -> StepOut {
         engine.step_priot(img, label, &mut self.st.scores, &self.st.masks,
                           self.theta, step, false, true)
+    }
+
+    fn train_chunk(&mut self, engine: &mut Engine, imgs: &crate::tensor::Mat,
+                   labels: &[usize], step0: u32, outs: &mut Vec<StepOut>)
+                   -> Option<usize> {
+        Some(engine.step_priot_chunk(imgs, labels, &mut self.st.scores,
+                                     &self.st.masks, self.theta, step0,
+                                     false, true, outs))
     }
 
     fn predict(&mut self, engine: &mut Engine, img: &[i32]) -> usize {

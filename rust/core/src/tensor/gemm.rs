@@ -1,18 +1,32 @@
-//! The three integer GEMM variants the training loop needs.
+//! The scalar reference implementations of the three integer GEMM
+//! variants the training loop needs.
 //!
-//! * `gemm_nn`:  C = A · B        (forward / conv via im2col)
-//! * `gemm_tn`:  C = Aᵀ · B       (delta-x backward: Wᵀ · δy)
-//! * `gemm_nt`:  C = A · Bᵀ       (weight gradient: δy · xᵀ)
+//! * `nn`:  C = A · B        (forward / conv via im2col)
+//! * `tn`:  C = Aᵀ · B       (delta-x backward: Wᵀ · δy)
+//! * `nt`:  C = A · Bᵀ       (weight gradient: δy · xᵀ)
 //!
-//! All accumulate in i32 over int8-range operands (the DESIGN.md §5
-//! contract keeps every accumulator in range).  These are the hot path of
-//! the whole device engine; the kernel bench (`cargo bench --bench kernel`)
-//! tracks them and EXPERIMENTS.md §Perf logs the optimization history.
+//! **Entry point:** callers go through [`super::kernels::Kernels`] — the
+//! dispatch object selected once per engine (scalar vs tiled) that owns
+//! the tiled variant's packing scratch.  The loops in this module are the
+//! `KernelKind::Scalar` implementation *and* the bit-exactness oracle the
+//! tiled microkernels are tested against; the old free functions
+//! ([`gemm_nn`]/[`gemm_tn`]/[`gemm_nt`]) remain as thin deprecated
+//! wrappers so pre-`Kernels` call sites keep compiling.
 //!
-//! `gemm_nn` is written as an ikj loop (row of B streamed per A element)
-//! which vectorizes well and is cache-friendly for the small row counts the
-//! models here use; `gemm_tn`/`gemm_nt` choose loop orders that keep the
-//! inner loop contiguous in both operands.
+//! All variants accumulate in i32 over int8-range operands (the
+//! DESIGN.md §5 contract keeps every accumulator in range).  These are
+//! the hot path of the whole device engine; `priot bench --suite kernel`
+//! tracks both variants per shape and `BENCH_kernel.json` records the
+//! trajectory.
+//!
+//! `scalar_nn` is written as an ikj loop (row of B streamed per A
+//! element) which vectorizes well and is cache-friendly for the small row
+//! counts the models here use; `scalar_tn`/`scalar_nt` choose loop orders
+//! that keep the inner loop contiguous in both operands.  All three keep
+//! an `n == 1` GEMV fast path that the tiled dispatch reuses.  The tiling
+//! design itself (MR×NR register blocks over packed full-depth panels,
+//! identical per-output summation order) is documented in
+//! [`super::kernels`].
 //!
 //! ## Arithmetic lint wall
 //!
@@ -27,11 +41,11 @@
 
 use super::Mat;
 
-/// `out = a · b` — (m,k)·(k,n) -> (m,n).
+/// `out = a · b` — (m,k)·(k,n) -> (m,n).  Scalar reference kernel.
 // Lint wall: audited i32 MAC accumulation + slice index arithmetic whose
 // bounds are pinned by the shape asserts above each loop nest.
 #[allow(clippy::arithmetic_side_effects)]
-pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
+pub(crate) fn scalar_nn(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.rows, "gemm_nn inner dim");
     assert_eq!(out.rows, a.rows);
     assert_eq!(out.cols, b.cols);
@@ -66,10 +80,10 @@ pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
-/// `out = aᵀ · b` — (m,k)ᵀ·(m,n) -> (k,n).
-// Lint wall: audited MAC contract (see `gemm_nn`).
+/// `out = aᵀ · b` — (m,k)ᵀ·(m,n) -> (k,n).  Scalar reference kernel.
+// Lint wall: audited MAC contract (see `scalar_nn`).
 #[allow(clippy::arithmetic_side_effects)]
-pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
+pub(crate) fn scalar_tn(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.rows, b.rows, "gemm_tn inner dim");
     assert_eq!(out.rows, a.cols);
     assert_eq!(out.cols, b.cols);
@@ -104,10 +118,10 @@ pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
-/// `out = a · bᵀ` — (m,k)·(n,k)ᵀ -> (m,n).
-// Lint wall: audited MAC contract (see `gemm_nn`).
+/// `out = a · bᵀ` — (m,k)·(n,k)ᵀ -> (m,n).  Scalar reference kernel.
+// Lint wall: audited MAC contract (see `scalar_nn`).
 #[allow(clippy::arithmetic_side_effects)]
-pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
+pub(crate) fn scalar_nt(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.cols, "gemm_nt inner dim");
     assert_eq!(out.rows, a.rows);
     assert_eq!(out.cols, b.rows);
@@ -123,6 +137,30 @@ pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
             out.data[i * b.rows + j] = acc;
         }
     }
+}
+
+/// `out = a · b` — (m,k)·(k,n) -> (m,n).
+#[deprecated(note = "construct a `tensor::kernels::Kernels` (scalar or \
+                     tiled) and call its `gemm_nn` — the dispatch object \
+                     owns the tiled variant's packing scratch")]
+pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
+    scalar_nn(a, b, out);
+}
+
+/// `out = aᵀ · b` — (m,k)ᵀ·(m,n) -> (k,n).
+#[deprecated(note = "construct a `tensor::kernels::Kernels` (scalar or \
+                     tiled) and call its `gemm_tn` — the dispatch object \
+                     owns the tiled variant's packing scratch")]
+pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
+    scalar_tn(a, b, out);
+}
+
+/// `out = a · bᵀ` — (m,k)·(n,k)ᵀ -> (m,n).
+#[deprecated(note = "construct a `tensor::kernels::Kernels` (scalar or \
+                     tiled) and call its `gemm_nt` — the dispatch object \
+                     owns the tiled variant's packing scratch")]
+pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
+    scalar_nt(a, b, out);
 }
 
 // Lint wall: the naive i64 oracles compute freely.
@@ -157,7 +195,7 @@ mod tests {
             let a = rand_mat(&mut rng, m, k);
             let b = rand_mat(&mut rng, k, n);
             let mut out = Mat::zeros(m, n);
-            gemm_nn(&a, &b, &mut out);
+            scalar_nn(&a, &b, &mut out);
             assert_eq!(out, naive_nn(&a, &b), "m={m} k={k} n={n}");
         }
     }
@@ -177,7 +215,7 @@ mod tests {
             }
             let want = naive_nn(&at, &b);
             let mut out = Mat::zeros(k, n);
-            gemm_tn(&a, &b, &mut out);
+            scalar_tn(&a, &b, &mut out);
             assert_eq!(out, want);
         }
     }
@@ -196,7 +234,7 @@ mod tests {
             }
             let want = naive_nn(&a, &bt);
             let mut out = Mat::zeros(m, n);
-            gemm_nt(&a, &b, &mut out);
+            scalar_nt(&a, &b, &mut out);
             assert_eq!(out, want);
         }
     }
@@ -218,12 +256,41 @@ mod tests {
             );
             let (mut o1, mut o2, mut os) =
                 (Mat::zeros(m, n), Mat::zeros(m, n), Mat::zeros(m, n));
-            gemm_nn(&a1, &b, &mut o1);
-            gemm_nn(&a2, &b, &mut o2);
-            gemm_nn(&sum, &b, &mut os);
+            scalar_nn(&a1, &b, &mut o1);
+            scalar_nn(&a2, &b, &mut o2);
+            scalar_nn(&sum, &b, &mut os);
             for i in 0..m * n {
                 assert_eq!(os.data[i], o1.data[i] + o2.data[i]);
             }
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_free_functions_still_dispatch_to_scalar() {
+        // The compat wrappers must stay behaviorally identical to the
+        // scalar kernels for external callers that haven't migrated.
+        let mut rng = XorShift64::new(25);
+        let a = rand_mat(&mut rng, 6, 9);
+        let b = rand_mat(&mut rng, 9, 7);
+        let mut via_wrapper = Mat::zeros(6, 7);
+        let mut via_scalar = Mat::zeros(6, 7);
+        gemm_nn(&a, &b, &mut via_wrapper);
+        scalar_nn(&a, &b, &mut via_scalar);
+        assert_eq!(via_wrapper, via_scalar);
+
+        let bt = rand_mat(&mut rng, 6, 7);
+        let mut w_tn = Mat::zeros(9, 7);
+        let mut s_tn = Mat::zeros(9, 7);
+        gemm_tn(&a, &bt, &mut w_tn);
+        scalar_tn(&a, &bt, &mut s_tn);
+        assert_eq!(w_tn, s_tn);
+
+        let bn = rand_mat(&mut rng, 7, 9);
+        let mut w_nt = Mat::zeros(6, 7);
+        let mut s_nt = Mat::zeros(6, 7);
+        gemm_nt(&a, &bn, &mut w_nt);
+        scalar_nt(&a, &bn, &mut s_nt);
+        assert_eq!(w_nt, s_nt);
     }
 }

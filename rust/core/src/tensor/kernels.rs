@@ -1,0 +1,543 @@
+//! `tensor::kernels` — the dispatchable GEMM kernel set behind the engine.
+//!
+//! The seed shipped three free functions (`gemm_nn`/`gemm_tn`/`gemm_nt`,
+//! still available as deprecated wrappers in [`super::gemm`]).  This module
+//! replaces them with a [`Kernels`] object selected **once** per engine:
+//!
+//! * [`Kernels::scalar`] — the seed's reference loops, unchanged.  The
+//!   mandatory fallback: `no_std`, allocation-free, and the bit-exactness
+//!   oracle every other variant is tested against.
+//! * [`Kernels::tiled`] — cache-tiled, register-blocked microkernels: A is
+//!   packed into `MR`-row panels, B into `NR`-column panels (both
+//!   contiguous, zero-padded at the tails), and an unrolled `MR`×`NR`
+//!   i8×i8→i32 microkernel runs over full-depth panels.  The packing
+//!   buffers live in a [`GemmScratch`] owned by the `Kernels` value, so an
+//!   engine that calls [`Kernels::reserve`] up front performs **zero**
+//!   kernel-side allocations in steady state (the `LayerBufs`/`BatchBufs`
+//!   discipline, extended to the kernels; `engine::plan::BufferPlan` prices
+//!   these buffers via [`packed_a_len`]/[`packed_b_len`]).
+//!
+//! Both variants keep the seed's GEMV fast paths for `n == 1` (every FC
+//! layer at batch 1), where packing would only add traffic.
+//!
+//! ## Bit-identity
+//!
+//! The tiled kernels are **bit-identical** to the scalar ones — asserted by
+//! the differential tests below and by `rust/cli/tests/properties.rs` —
+//! for two stacked reasons:
+//!
+//! 1. They accumulate each output element over the depth index in the same
+//!    ascending order as the scalar loops (tiling reorders *which outputs*
+//!    are touched when, never the per-output summation order), and padded
+//!    lanes contribute exact zeros.  i32 addition (wrapping or not) along
+//!    the same sequence of operands is deterministic, so equality holds
+//!    unconditionally.
+//! 2. Independently, `priot::audit` statically proves every engine-shaped
+//!    accumulator stays inside i32, so even a *reordered* summation would
+//!    agree there.  We keep (1) anyway: the kernels are correct for any
+//!    caller, not just audited engine shapes.
+//!
+//! ## Arithmetic lint wall
+//!
+//! Like `tensor::gemm`, implicit arithmetic is denied
+//! (`clippy::arithmetic_side_effects`); the packers and the microkernel
+//! carry scoped `#[allow]`s because their index arithmetic is pinned by
+//! the shape asserts at each entry point and their i32 MAC accumulation is
+//! the audited contract (see the module docs of [`super::gemm`]).
+
+#![deny(clippy::arithmetic_side_effects)]
+
+use alloc::vec::Vec;
+
+use super::gemm::{scalar_nn, scalar_nt, scalar_tn};
+use super::Mat;
+
+/// Microkernel register-block height: rows of A per packed panel.
+pub const MR: usize = 4;
+/// Microkernel register-block width: columns of B per packed panel.
+pub const NR: usize = 8;
+
+/// Which kernel implementation a [`Kernels`] value dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The seed's reference loops (`super::gemm`): allocation-free, the
+    /// bit-exactness oracle.
+    Scalar,
+    /// Packed-panel tiled microkernels reusing a [`GemmScratch`].
+    Tiled,
+}
+
+/// Packing buffers for the tiled kernels: one panel buffer per operand,
+/// grow-only, reused across every GEMM an engine issues.
+#[derive(Clone, Debug, Default)]
+pub struct GemmScratch {
+    apack: Vec<i32>,
+    bpack: Vec<i32>,
+}
+
+impl GemmScratch {
+    /// Grow (never shrink) both buffers to at least the given element
+    /// counts — call once with the worst-case [`packed_a_len`]/
+    /// [`packed_b_len`] over the shapes to come, and steady-state packing
+    /// never reallocates.
+    pub fn ensure(&mut self, a_elems: usize, b_elems: usize) {
+        if self.apack.len() < a_elems {
+            self.apack.resize(a_elems, 0);
+        }
+        if self.bpack.len() < b_elems {
+            self.bpack.resize(b_elems, 0);
+        }
+    }
+
+    /// Total live elements (both buffers) — what `Engine::mem_probe`
+    /// reports and `BufferPlan::host_scratch_bytes` must reproduce.
+    // Lint wall: capacity bookkeeping, not data arithmetic.
+    #[allow(clippy::arithmetic_side_effects)]
+    pub fn elems(&self) -> usize {
+        self.apack.len() + self.bpack.len()
+    }
+}
+
+/// Packed length of the A-side panel buffer for an `m`×`depth` operand:
+/// `m` rounded up to whole `MR`-row panels, each panel `depth` deep.
+// Lint wall: buffer sizing over usize dims (also used by engine::plan).
+#[allow(clippy::arithmetic_side_effects)]
+pub fn packed_a_len(m: usize, depth: usize) -> usize {
+    m.div_ceil(MR) * MR * depth
+}
+
+/// Packed length of the B-side panel buffer for a `depth`×`n` operand:
+/// `n` rounded up to whole `NR`-column panels, each panel `depth` deep.
+// Lint wall: buffer sizing over usize dims (also used by engine::plan).
+#[allow(clippy::arithmetic_side_effects)]
+pub fn packed_b_len(n: usize, depth: usize) -> usize {
+    n.div_ceil(NR) * NR * depth
+}
+
+/// The kernel dispatch object: selected once (per engine / per bench
+/// variant), carries its own [`GemmScratch`].
+#[derive(Clone, Debug)]
+pub struct Kernels {
+    kind: KernelKind,
+    scratch: GemmScratch,
+}
+
+impl Kernels {
+    /// The seed's scalar reference kernels (no scratch ever allocated).
+    pub fn scalar() -> Self {
+        Self { kind: KernelKind::Scalar, scratch: GemmScratch::default() }
+    }
+
+    /// The tiled microkernels (scratch grows on first use per shape, or up
+    /// front via [`Self::reserve`]).
+    pub fn tiled() -> Self {
+        Self { kind: KernelKind::Tiled, scratch: GemmScratch::default() }
+    }
+
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// Variant name for bench labels / logs: `"scalar"` or `"tiled"`.
+    pub fn variant(&self) -> &'static str {
+        match self.kind {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Tiled => "tiled",
+        }
+    }
+
+    /// Live scratch elements (see [`GemmScratch::elems`]).
+    pub fn scratch_elems(&self) -> usize {
+        self.scratch.elems()
+    }
+
+    /// Pre-size the scratch for the worst packed operand lengths to come
+    /// (no-op for [`KernelKind::Scalar`], which never packs).
+    pub fn reserve(&mut self, a_elems: usize, b_elems: usize) {
+        if self.kind == KernelKind::Tiled {
+            self.scratch.ensure(a_elems, b_elems);
+        }
+    }
+
+    /// `out = a · b` — (m,k)·(k,n) → (m,n).
+    pub fn gemm_nn(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(a.cols, b.rows, "gemm_nn inner dim");
+        assert_eq!(out.rows, a.rows);
+        assert_eq!(out.cols, b.cols);
+        if self.kind == KernelKind::Scalar || b.cols == 1 {
+            // n == 1 is the GEMV fast path in the scalar kernel — packing
+            // a single column would only add traffic.
+            scalar_nn(a, b, out);
+            return;
+        }
+        let depth = a.cols;
+        pack_a_rows(a, a.rows, depth, &mut self.scratch.apack);
+        pack_b_rows(b, b.cols, depth, &mut self.scratch.bpack);
+        microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.rows,
+                          b.cols, depth, out);
+    }
+
+    /// `out = aᵀ · b` — (m,k)ᵀ·(m,n) → (k,n).
+    pub fn gemm_tn(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(a.rows, b.rows, "gemm_tn inner dim");
+        assert_eq!(out.rows, a.cols);
+        assert_eq!(out.cols, b.cols);
+        if self.kind == KernelKind::Scalar || b.cols == 1 {
+            scalar_tn(a, b, out);
+            return;
+        }
+        let depth = a.rows;
+        pack_a_cols(a, a.cols, depth, &mut self.scratch.apack);
+        pack_b_rows(b, b.cols, depth, &mut self.scratch.bpack);
+        microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.cols,
+                          b.cols, depth, out);
+    }
+
+    /// `out = a · bᵀ` — (m,k)·(n,k)ᵀ → (m,n).
+    pub fn gemm_nt(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(a.cols, b.cols, "gemm_nt inner dim");
+        assert_eq!(out.rows, a.rows);
+        assert_eq!(out.cols, b.rows);
+        if self.kind == KernelKind::Scalar {
+            scalar_nt(a, b, out);
+            return;
+        }
+        let depth = a.cols;
+        pack_a_rows(a, a.rows, depth, &mut self.scratch.apack);
+        pack_b_cols(b, b.rows, depth, &mut self.scratch.bpack);
+        microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.rows,
+                          b.rows, depth, out);
+    }
+}
+
+/// Pack the logical left operand (rows of `a` are rows of the product)
+/// into `MR`-row panels, column-major within each panel:
+/// `apack[panel*MR*depth + p*MR + r] = A[i0+r, p]` (0 past the tail).
+// Lint wall: panel-index arithmetic pinned by the entry-point asserts;
+// padding writes exact zeros so tail lanes never contribute.
+#[allow(clippy::arithmetic_side_effects)]
+fn pack_a_rows(a: &Mat, m: usize, depth: usize, apack: &mut Vec<i32>) {
+    let need = packed_a_len(m, depth);
+    if apack.len() < need {
+        apack.resize(need, 0);
+    }
+    let mut i0 = 0usize;
+    let mut base = 0usize;
+    while i0 < m {
+        for r in 0..MR {
+            let gi = i0 + r;
+            if gi < m {
+                let arow = a.row(gi);
+                for p in 0..depth {
+                    apack[base + p * MR + r] = arow[p];
+                }
+            } else {
+                for p in 0..depth {
+                    apack[base + p * MR + r] = 0;
+                }
+            }
+        }
+        i0 += MR;
+        base += MR * depth;
+    }
+}
+
+/// Pack the logical left operand when it is the *transpose* of `a`
+/// (`gemm_tn`: product rows are columns of `a`):
+/// `apack[panel*MR*depth + p*MR + r] = A[p, i0+r]`.
+// Lint wall: see `pack_a_rows`.
+#[allow(clippy::arithmetic_side_effects)]
+fn pack_a_cols(a: &Mat, m: usize, depth: usize, apack: &mut Vec<i32>) {
+    let need = packed_a_len(m, depth);
+    if apack.len() < need {
+        apack.resize(need, 0);
+    }
+    let mut i0 = 0usize;
+    let mut base = 0usize;
+    while i0 < m {
+        for r in 0..MR {
+            let gi = i0 + r;
+            for p in 0..depth {
+                apack[base + p * MR + r] =
+                    if gi < m { a.data[p * a.cols + gi] } else { 0 };
+            }
+        }
+        i0 += MR;
+        base += MR * depth;
+    }
+}
+
+/// Pack the logical right operand (columns of `b` are columns of the
+/// product) into `NR`-column panels, row-major within each panel:
+/// `bpack[panel*NR*depth + p*NR + c] = B[p, j0+c]` (0 past the tail).
+// Lint wall: see `pack_a_rows`.
+#[allow(clippy::arithmetic_side_effects)]
+fn pack_b_rows(b: &Mat, n: usize, depth: usize, bpack: &mut Vec<i32>) {
+    let need = packed_b_len(n, depth);
+    if bpack.len() < need {
+        bpack.resize(need, 0);
+    }
+    let mut j0 = 0usize;
+    let mut base = 0usize;
+    while j0 < n {
+        for p in 0..depth {
+            let brow = b.row(p);
+            let dst = base + p * NR;
+            for c in 0..NR {
+                let gj = j0 + c;
+                bpack[dst + c] = if gj < n { brow[gj] } else { 0 };
+            }
+        }
+        j0 += NR;
+        base += NR * depth;
+    }
+}
+
+/// Pack the logical right operand when it is the *transpose* of `b`
+/// (`gemm_nt`: product columns are rows of `b`):
+/// `bpack[panel*NR*depth + p*NR + c] = B[j0+c, p]`.
+// Lint wall: see `pack_a_rows`.
+#[allow(clippy::arithmetic_side_effects)]
+fn pack_b_cols(b: &Mat, n: usize, depth: usize, bpack: &mut Vec<i32>) {
+    let need = packed_b_len(n, depth);
+    if bpack.len() < need {
+        bpack.resize(need, 0);
+    }
+    let mut j0 = 0usize;
+    let mut base = 0usize;
+    while j0 < n {
+        for c in 0..NR {
+            let gj = j0 + c;
+            if gj < n {
+                let brow = b.row(gj);
+                for p in 0..depth {
+                    bpack[base + p * NR + c] = brow[p];
+                }
+            } else {
+                for p in 0..depth {
+                    bpack[base + p * NR + c] = 0;
+                }
+            }
+        }
+        j0 += NR;
+        base += NR * depth;
+    }
+}
+
+/// Run the `MR`×`NR` microkernel over every packed panel pair and store
+/// the valid sub-tile of each accumulator block.  Per output element the
+/// depth index ascends exactly as in the scalar kernels (bit-identity —
+/// see the module docs); the scalar kernels' `av == 0` skip is kept, both
+/// because pruned/ReLU zeros are common in this workload and because
+/// skipping a `+ 0` term is arithmetic-neutral.
+// Lint wall: audited i32 MAC accumulation + panel-index arithmetic whose
+// bounds are pinned by the packed lengths (`packed_a_len`/`packed_b_len`).
+#[allow(clippy::arithmetic_side_effects)]
+fn microkernel_drive(apack: &[i32], bpack: &[i32], m: usize, n: usize,
+                     depth: usize, out: &mut Mat) {
+    debug_assert_eq!(out.rows, m);
+    debug_assert_eq!(out.cols, n);
+    let mtiles = m.div_ceil(MR);
+    let ntiles = n.div_ceil(NR);
+    for ti in 0..mtiles {
+        let ap = &apack[ti * MR * depth..(ti + 1) * MR * depth];
+        let i0 = ti * MR;
+        let rtake = MR.min(m - i0);
+        for tj in 0..ntiles {
+            let bp = &bpack[tj * NR * depth..(tj + 1) * NR * depth];
+            let mut acc = [[0i32; NR]; MR];
+            for p in 0..depth {
+                let ar = &ap[p * MR..(p + 1) * MR];
+                let br = &bp[p * NR..(p + 1) * NR];
+                for r in 0..MR {
+                    let av = ar[r];
+                    if av == 0 {
+                        continue;
+                    }
+                    let accr = &mut acc[r];
+                    for c in 0..NR {
+                        accr[c] += av * br[c];
+                    }
+                }
+            }
+            let j0 = tj * NR;
+            let ctake = NR.min(n - j0);
+            for r in 0..rtake {
+                let o0 = (i0 + r) * n + j0;
+                out.data[o0..o0 + ctake].copy_from_slice(&acc[r][..ctake]);
+            }
+        }
+    }
+}
+
+// Lint wall: test oracles and shape bookkeeping compute freely.
+#[allow(clippy::arithmetic_side_effects)]
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::XorShift64;
+
+    fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.int_in(-127, 127)).collect())
+    }
+
+    /// Naive i64 oracle for `a · b`.
+    fn naive_nn(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0i64;
+                for p in 0..a.cols {
+                    acc += a.at(i, p) as i64 * b.at(p, j) as i64;
+                }
+                *out.at_mut(i, j) = acc as i32;
+            }
+        }
+        out
+    }
+
+    fn transpose(a: &Mat) -> Mat {
+        let mut t = Mat::zeros(a.cols, a.rows);
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                *t.at_mut(j, i) = a.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// Adversarial shape set: 1 (pad-free GEMV edge), primes, and exact /
+    /// ±1 multiples of both tile sizes (MR=4, NR=8).
+    const DIMS: &[usize] = &[1, 3, 4, 5, 7, 8, 9, 16, 17];
+
+    #[test]
+    fn tiled_matches_oracle_and_scalar_on_adversarial_shapes() {
+        // Differential fuzz: every (m, k, n) in DIMS³, all three variants,
+        // tiled vs the naive i64 oracle *and* bit-vs the seed scalar
+        // kernels (fresh scratch each op — growth path covered too).
+        let mut rng = XorShift64::new(91);
+        for &m in DIMS {
+            for &k in DIMS {
+                for &n in DIMS {
+                    let mut tiled = Kernels::tiled();
+                    let mut scalar = Kernels::scalar();
+
+                    let a = rand_mat(&mut rng, m, k);
+                    let b = rand_mat(&mut rng, k, n);
+                    let want = naive_nn(&a, &b);
+                    let mut got_t = Mat::zeros(m, n);
+                    let mut got_s = Mat::zeros(m, n);
+                    tiled.gemm_nn(&a, &b, &mut got_t);
+                    scalar.gemm_nn(&a, &b, &mut got_s);
+                    assert_eq!(got_t, want, "nn m={m} k={k} n={n}");
+                    assert_eq!(got_t, got_s, "nn vs scalar m={m} k={k} n={n}");
+
+                    // tn: out = aᵀ·b with a (m,k) interpreted over inner m.
+                    let bt = rand_mat(&mut rng, m, n);
+                    let want = naive_nn(&transpose(&a), &bt);
+                    let mut got_t = Mat::zeros(k, n);
+                    let mut got_s = Mat::zeros(k, n);
+                    tiled.gemm_tn(&a, &bt, &mut got_t);
+                    scalar.gemm_tn(&a, &bt, &mut got_s);
+                    assert_eq!(got_t, want, "tn m={m} k={k} n={n}");
+                    assert_eq!(got_t, got_s, "tn vs scalar m={m} k={k} n={n}");
+
+                    // nt: out = a·bᵀ with b (n,k).
+                    let bn = rand_mat(&mut rng, n, k);
+                    let want = naive_nn(&a, &transpose(&bn));
+                    let mut got_t = Mat::zeros(m, n);
+                    let mut got_s = Mat::zeros(m, n);
+                    tiled.gemm_nt(&a, &bn, &mut got_t);
+                    scalar.gemm_nt(&a, &bn, &mut got_s);
+                    assert_eq!(got_t, want, "nt m={m} k={k} n={n}");
+                    assert_eq!(got_t, got_s, "nt vs scalar m={m} k={k} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_bit_identical_to_scalar_on_random_shapes() {
+        // The satellite property: random int8 matrices, random shapes,
+        // one long-lived tiled Kernels (scratch reused across shapes).
+        let mut rng = XorShift64::new(92);
+        let mut tiled = Kernels::tiled();
+        let mut scalar = Kernels::scalar();
+        for _ in 0..60 {
+            let m = rng.int_in(1, 40) as usize;
+            let k = rng.int_in(1, 40) as usize;
+            let n = rng.int_in(1, 40) as usize;
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let mut got_t = Mat::zeros(m, n);
+            let mut got_s = Mat::zeros(m, n);
+            tiled.gemm_nn(&a, &b, &mut got_t);
+            scalar.gemm_nn(&a, &b, &mut got_s);
+            assert_eq!(got_t, got_s, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shrinking_and_growing_shapes() {
+        // Stale tail data from a larger earlier op must never leak into a
+        // smaller later one (packers rewrite every needed element).
+        let mut rng = XorShift64::new(93);
+        let mut tiled = Kernels::tiled();
+        for &(m, k, n) in &[(33usize, 17usize, 9usize), (3, 4, 5), (16, 8, 24),
+                            (2, 2, 2), (33, 17, 9)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let mut got = Mat::zeros(m, n);
+            tiled.gemm_nn(&a, &b, &mut got);
+            assert_eq!(got, naive_nn(&a, &b), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn reserve_makes_steady_state_allocation_free() {
+        let mut tiled = Kernels::tiled();
+        let (m, k, n) = (16usize, 72usize, 196usize);
+        tiled.reserve(packed_a_len(m, k), packed_b_len(n, k));
+        let reserved = tiled.scratch_elems();
+        assert_eq!(reserved, packed_a_len(m, k) + packed_b_len(n, k));
+        let mut rng = XorShift64::new(94);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut out = Mat::zeros(m, n);
+        for _ in 0..3 {
+            tiled.gemm_nn(&a, &b, &mut out);
+            assert_eq!(tiled.scratch_elems(), reserved,
+                       "steady-state GEMM must not grow the scratch");
+        }
+        // The scalar variant never allocates scratch at all.
+        let mut scalar = Kernels::scalar();
+        scalar.reserve(1024, 1024);
+        scalar.gemm_nn(&a, &b, &mut out);
+        assert_eq!(scalar.scratch_elems(), 0);
+    }
+
+    #[test]
+    fn gemv_fast_path_is_shared() {
+        // n == 1 dispatches to the scalar GEMV in both variants.
+        let mut rng = XorShift64::new(95);
+        let a = rand_mat(&mut rng, 64, 784);
+        let b = rand_mat(&mut rng, 784, 1);
+        let mut got_t = Mat::zeros(64, 1);
+        let mut got_s = Mat::zeros(64, 1);
+        let mut tiled = Kernels::tiled();
+        tiled.gemm_nn(&a, &b, &mut got_t);
+        Kernels::scalar().gemm_nn(&a, &b, &mut got_s);
+        assert_eq!(got_t, got_s);
+        assert_eq!(tiled.scratch_elems(), 0, "GEMV must not touch scratch");
+    }
+
+    #[test]
+    fn packed_lengths_round_up_to_whole_panels() {
+        assert_eq!(packed_a_len(1, 10), MR * 10);
+        assert_eq!(packed_a_len(4, 10), MR * 10);
+        assert_eq!(packed_a_len(5, 10), 2 * MR * 10);
+        assert_eq!(packed_b_len(1, 10), NR * 10);
+        assert_eq!(packed_b_len(8, 10), NR * 10);
+        assert_eq!(packed_b_len(9, 10), 2 * NR * 10);
+    }
+}

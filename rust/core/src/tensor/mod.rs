@@ -1,14 +1,22 @@
-//! Integer tensor substrate: row-major matrices, the three GEMM variants the
-//! training loop needs, and the 3×3/pad-1 conv geometry helpers (im2col,
-//! col2im, 2×2 max-pool) — bit-identical to `python/compile/intnet.py`.
+//! Integer tensor substrate: row-major matrices, the GEMM kernel set the
+//! training loop needs ([`kernels::Kernels`] — scalar reference loops plus
+//! tiled, scratch-reusing microkernels), and the 3×3/pad-1 conv geometry
+//! helpers (im2col, col2im, 2×2 max-pool) — bit-identical to
+//! `python/compile/intnet.py`.
 //!
 //! Values are int8-range integers carried in `i32` (accumulators are genuine
 //! int32); the contract guarantees no accumulator overflows int32 for the
 //! model sizes in this repo (see DESIGN.md §5).
 
 pub mod gemm;
+pub mod kernels;
 
+// The free-function kernels predate the `Kernels` dispatch API; they stay
+// re-exported (deprecated) so external `use priot::tensor::gemm_nn` paths
+// keep compiling while their call sites migrate.
+#[allow(deprecated)]
 pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
+pub use kernels::{GemmScratch, KernelKind, Kernels};
 
 use alloc::vec;
 use alloc::vec::Vec;
@@ -52,6 +60,25 @@ impl Mat {
     /// Reset all elements to zero (reusing the allocation — hot path).
     pub fn clear(&mut self) {
         self.data.iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Row `r` as a slice — the one audited place for the
+    /// `data[r*cols..(r+1)*cols]` bounds arithmetic (batched datasets,
+    /// packing, per-sample gathers all go through here).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row `r` as a slice (see [`Self::row`]).
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Iterate all rows in order as slices.
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[i32]> {
+        self.data.chunks_exact(self.cols.max(1))
     }
 }
 

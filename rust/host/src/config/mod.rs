@@ -151,6 +151,13 @@ pub struct ExperimentConfig {
     /// Samples per forward in dataset evaluation (0/1 = per-sample;
     /// batched evaluation is bit-identical, just faster).
     pub eval_batch: usize,
+    /// Samples per training chunk (0/1 = the paper's strictly sequential
+    /// loop).  Chunked training batches the forward passes while keeping
+    /// every update a sequential batch-1 step — bit-identical.
+    pub train_batch: usize,
+    /// Worker threads for batched evaluation (0/1 = serial; inference
+    /// only, bit-identical).
+    pub eval_threads: usize,
     /// Dataset source: `auto` (artifact file if present, generated
     /// otherwise — the default), `artifact`, or `generated`.  See
     /// [`crate::data::DataSource`].
@@ -184,6 +191,8 @@ impl ExperimentConfig {
             limit: cfg.get_usize("limit", 0)?,
             track_pruning: cfg.get_bool("track_pruning", true)?,
             eval_batch: cfg.get_usize("eval_batch", 1)?,
+            train_batch: cfg.get_usize("train_batch", 1)?,
+            eval_threads: cfg.get_usize("eval_threads", 1)?,
             source: {
                 let s = cfg.get_or("source", "auto").to_string();
                 match s.as_str() {

@@ -33,6 +33,11 @@ pub struct RunOptions {
     /// the batch dimension is extra GEMM columns, never different
     /// arithmetic.
     pub eval_batch: usize,
+    /// Samples per *training* chunk (0/1 = the paper's strictly sequential
+    /// loop).  Chunked training batches the forward passes while every
+    /// update stays a sequential batch-1 step — bit-identical (see
+    /// [`crate::methods::StepBackend::train_chunk`]).
+    pub train_batch: usize,
 }
 
 impl RunOptions {
@@ -43,6 +48,7 @@ impl RunOptions {
             track_pruning: cfg.track_pruning,
             verbose: false,
             eval_batch: cfg.eval_batch,
+            train_batch: cfg.train_batch,
         }
     }
 }
@@ -68,20 +74,56 @@ pub struct EpochReport {
 /// One training epoch over (a cap of) `train` — the single implementation
 /// of the inner step loop, shared by [`run_training`] and
 /// [`crate::session::Session::train_epoch`].
+///
+/// `chunk <= 1` is the paper's strictly sequential loop.  `chunk > 1`
+/// feeds samples to [`StepBackend::train_chunk`] `chunk` rows at a time,
+/// which batches the forward passes through the tiled kernels while
+/// keeping every update a sequential batch-1 step — bit-identical to the
+/// sequential loop (asserted per method by `rust/cli/tests/batch_train.rs`
+/// and at the engine layer by `engine::tests`).
 pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
-                       limit: usize) -> EpochReport {
+                       limit: usize, chunk: usize) -> EpochReport {
     let n = capped(train.n, limit);
-    let mut img = vec![0i32; train.image_len()];
+    let len = train.image_len();
     let mut overflow = 0u64;
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
-    for i in 0..n {
-        train.image_i32(i, &mut img);
-        let label = train.label(i);
-        let StepOut { logits, overflow: ovf } = backend.train_step(&img, label);
-        overflow += ovf as u64;
-        if crate::engine::argmax(&logits) == label {
-            correct += 1;
+    if chunk <= 1 || n == 0 {
+        let mut img = vec![0i32; len];
+        for i in 0..n {
+            train.image_i32(i, &mut img);
+            let label = train.label(i);
+            let StepOut { logits, overflow: ovf } =
+                backend.train_step(&img, label);
+            overflow += ovf as u64;
+            if crate::engine::argmax(&logits) == label {
+                correct += 1;
+            }
+        }
+    } else {
+        let bsz = chunk.min(n);
+        let mut imgs = Mat::zeros(bsz, len);
+        let mut labels = vec![0usize; bsz];
+        let mut i = 0usize;
+        while i < n {
+            let bcur = bsz.min(n - i);
+            if bcur != imgs.rows {
+                imgs = Mat::zeros(bcur, len); // remainder chunk
+                labels.truncate(bcur);
+            }
+            for bi in 0..bcur {
+                train.image_i32(i + bi,
+                                &mut imgs.data[bi * len..(bi + 1) * len]);
+                labels[bi] = train.label(i + bi);
+            }
+            let outs = backend.train_chunk(&imgs, &labels);
+            for (out, &label) in outs.iter().zip(labels.iter()) {
+                overflow += out.overflow as u64;
+                if crate::engine::argmax(&out.logits) == label {
+                    correct += 1;
+                }
+            }
+            i += bcur;
         }
     }
     EpochReport {
@@ -223,7 +265,7 @@ impl TrainProgress {
     /// tracking.
     pub fn step_epoch(&mut self, backend: &mut dyn StepBackend,
                       train: &Dataset, test: &Dataset, opts: &RunOptions) {
-        let ep = train_one_epoch(backend, train, opts.limit);
+        let ep = train_one_epoch(backend, train, opts.limit, opts.train_batch);
         let m = &mut self.metrics;
         m.epoch_secs.push(ep.secs);
         m.overflow.push(ep.overflow);
@@ -375,7 +417,7 @@ mod tests {
         let mut b = FakeBackend { steps: 0, threshold: 20 };
         let opts = RunOptions {
             epochs: 2, limit: 0, track_pruning: true, verbose: false,
-            eval_batch: 1,
+            eval_batch: 1, train_batch: 1,
         };
         let m = run_training(&mut b, &train, &test, &opts);
         assert_eq!(m.accuracy.len(), 3, "epoch0 + 2 epochs");
@@ -396,7 +438,7 @@ mod tests {
         let mut b = FakeBackend { steps: 0, threshold: 5 };
         let opts = RunOptions {
             epochs: 1, limit: 5, track_pruning: false, verbose: false,
-            eval_batch: 1,
+            eval_batch: 1, train_batch: 1,
         };
         let m = run_training(&mut b, &train, &test, &opts);
         assert_eq!(b.steps, 5);
@@ -428,13 +470,33 @@ mod tests {
     }
 
     #[test]
+    fn chunked_training_matches_per_sample_for_default_backends() {
+        // FakeBackend uses the default StepBackend::train_chunk (the
+        // per-sample loop), so every chunk width — including ones that
+        // leave a remainder or exceed the dataset — must reproduce the
+        // sequential epoch exactly.
+        let train = fake_dataset(23);
+        let mut a = FakeBackend { steps: 0, threshold: 0 };
+        let seq = train_one_epoch(&mut a, &train, 0, 1);
+        for chunk in [2usize, 5, 23, 64] {
+            let mut b = FakeBackend { steps: 0, threshold: 0 };
+            let chunked = train_one_epoch(&mut b, &train, 0, chunk);
+            assert_eq!(a.steps, b.steps, "chunk={chunk}");
+            assert_eq!(seq.steps, chunked.steps, "chunk={chunk}");
+            assert_eq!(seq.train_accuracy, chunked.train_accuracy,
+                       "chunk={chunk}");
+            assert_eq!(seq.overflow, chunked.overflow, "chunk={chunk}");
+        }
+    }
+
+    #[test]
     fn train_progress_is_bit_identical_to_run_training() {
         // Interleavable epoch stepping must reproduce the one-shot loop.
         let train = fake_dataset(20);
         let test = fake_dataset(10);
         let opts = RunOptions {
             epochs: 3, limit: 0, track_pruning: true, verbose: false,
-            eval_batch: 4,
+            eval_batch: 4, train_batch: 3,
         };
         let mut a = FakeBackend { steps: 0, threshold: 20 };
         let whole = run_training(&mut a, &train, &test, &opts);

@@ -28,9 +28,24 @@ pub trait StepBackend {
     fn predict_batch(&mut self, imgs: &crate::tensor::Mat) -> Vec<usize> {
         let mut out = Vec::with_capacity(imgs.rows);
         for bi in 0..imgs.rows {
-            out.push(self.predict(&imgs.data[bi * imgs.cols..(bi + 1) * imgs.cols]));
+            out.push(self.predict(imgs.row(bi)));
         }
         out
+    }
+    /// Chunked training over one sample per row of `imgs` (bit-identical
+    /// to the per-sample loop — the contract of
+    /// [`MethodPlugin::train_chunk`]).  The default *is* that loop, so
+    /// every backend stays correct; the engine executor overrides it to
+    /// batch the forward passes and fall back per sample after a
+    /// θ-crossing.
+    fn train_chunk(&mut self, imgs: &crate::tensor::Mat, labels: &[usize])
+                   -> Vec<StepOut> {
+        assert_eq!(imgs.rows, labels.len(), "train_chunk: labels != rows");
+        let mut outs = Vec::with_capacity(imgs.rows);
+        for bi in 0..imgs.rows {
+            outs.push(self.train_step(imgs.row(bi), labels[bi]));
+        }
+        outs
     }
     /// Current scores, if the method has them (analysis/checkpointing).
     fn scores(&self) -> Option<&[Vec<i32>]>;

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::prng::XorShift64;
 use crate::proto::MethodSpec;
 use crate::session::FleetServer;
-use crate::tensor::{gemm_nn, gemm_nt, gemm_tn, im2col, Mat};
+use crate::tensor::{im2col, Kernels, Mat};
 
 /// Snapshot schema version (bump on field changes).
 pub const SCHEMA: u32 = 1;
@@ -102,63 +102,108 @@ fn time_it(work_macs: u64, iters: u32, mut f: impl FnMut()) -> (f64, f64) {
     (micros, gmacs)
 }
 
-/// The kernel suite: GEMM variants over the tinycnn / vgg-ish shapes
-/// tracked by `benches/kernel.rs`, plus im2col.
-pub fn run_kernel(iters: u32) -> BenchResults {
+fn kernels_for(variant: &str) -> Kernels {
+    if variant == "tiled" {
+        Kernels::tiled()
+    } else {
+        Kernels::scalar()
+    }
+}
+
+/// The kernel suite: the scalar and tiled GEMM variants over the tinycnn /
+/// vgg-ish shapes tracked by `benches/kernel.rs`, plus im2col.  `filter`
+/// keeps only entries whose label contains it (empty = run everything) —
+/// the `priot bench --filter` hook; each variant carries its name in the
+/// label, so `--filter tiled` or `--filter gemm_tn` select slices.
+pub fn run_kernel(iters: u32, filter: &str) -> BenchResults {
     let mut rng = XorShift64::new(77);
     let mut entries = Vec::new();
+    let wanted = |label: &str| filter.is_empty() || label.contains(filter);
 
-    // (label, m, k, n) — gemm_nn shapes.
+    // (label stem, m, k, n) — gemm_nn shapes, both kernel variants.
     let nn_shapes: &[(&str, usize, usize, usize)] = &[
-        ("gemm_nn conv1 8x9x784", 8, 9, 784),
-        ("gemm_nn conv2 16x72x196", 16, 72, 196),
-        ("gemm_nn fc1 gemv 64x784x1", 64, 784, 1),
-        ("gemm_nn vgg-mid 64x288x64", 64, 288, 64),
+        ("conv1 8x9x784", 8, 9, 784),
+        ("conv2 16x72x196", 16, 72, 196),
+        ("vgg-mid 64x288x64", 64, 288, 64),
     ];
-    for &(label, m, k, n) in nn_shapes {
+    for &(stem, m, k, n) in nn_shapes {
         let a = rand_mat(&mut rng, m, k);
         let b = rand_mat(&mut rng, k, n);
         let mut out = Mat::zeros(m, n);
         let macs = (m * k * n) as u64;
-        let (micros, gmacs) = time_it(macs, iters, || gemm_nn(&a, &b, &mut out));
-        entries.push(BenchEntry { label: label.to_string(), micros, gmacs });
+        for variant in ["scalar", "tiled"] {
+            let label = format!("gemm_nn {variant} {stem}");
+            if !wanted(&label) {
+                continue;
+            }
+            let mut kr = kernels_for(variant);
+            let (micros, gmacs) =
+                time_it(macs, iters, || kr.gemm_nn(&a, &b, &mut out));
+            entries.push(BenchEntry { label, micros, gmacs });
+        }
+    }
+
+    // The n == 1 GEMV fast path is shared by both kernel kinds (tiled
+    // dispatch falls back to the scalar row·vector loop for single-column
+    // rhs), so it gets one entry, not a scalar/tiled pair.
+    {
+        let (m, k, n) = (64usize, 784usize, 1usize);
+        let label = "gemm_nn gemv fc1 64x784x1".to_string();
+        if wanted(&label) {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let mut out = Mat::zeros(m, n);
+            let mut kr = Kernels::tiled();
+            let macs = (m * k * n) as u64;
+            let (micros, gmacs) =
+                time_it(macs, iters, || kr.gemm_nn(&a, &b, &mut out));
+            entries.push(BenchEntry { label, micros, gmacs });
+        }
     }
 
     // Backward kernels at the conv2 shape.
     {
         let (m, k, n) = (16usize, 72usize, 196usize);
+        let macs = (m * k * n) as u64;
         let a = rand_mat(&mut rng, m, k);
         let b = rand_mat(&mut rng, m, n);
         let mut out = Mat::zeros(k, n);
-        let macs = (m * k * n) as u64;
-        let (micros, gmacs) = time_it(macs, iters, || gemm_tn(&a, &b, &mut out));
-        entries.push(BenchEntry {
-            label: "gemm_tn conv2 16x72x196".to_string(),
-            micros,
-            gmacs,
-        });
+        for variant in ["scalar", "tiled"] {
+            let label = format!("gemm_tn {variant} conv2 16x72x196");
+            if !wanted(&label) {
+                continue;
+            }
+            let mut kr = kernels_for(variant);
+            let (micros, gmacs) =
+                time_it(macs, iters, || kr.gemm_tn(&a, &b, &mut out));
+            entries.push(BenchEntry { label, micros, gmacs });
+        }
         let a2 = rand_mat(&mut rng, m, n);
         let b2 = rand_mat(&mut rng, k, n);
         let mut out2 = Mat::zeros(m, k);
-        let (micros, gmacs) = time_it(macs, iters, || gemm_nt(&a2, &b2, &mut out2));
-        entries.push(BenchEntry {
-            label: "gemm_nt conv2 16x72x196".to_string(),
-            micros,
-            gmacs,
-        });
+        for variant in ["scalar", "tiled"] {
+            let label = format!("gemm_nt {variant} conv2 16x72x196");
+            if !wanted(&label) {
+                continue;
+            }
+            let mut kr = kernels_for(variant);
+            let (micros, gmacs) =
+                time_it(macs, iters, || kr.gemm_nt(&a2, &b2, &mut out2));
+            entries.push(BenchEntry { label, micros, gmacs });
+        }
     }
 
     // im2col at the conv2 input geometry (8 channels, 14x14).
     {
-        let (c, h, w) = (8usize, 14usize, 14usize);
-        let x: Vec<i32> = (0..c * h * w).map(|_| rng.int_in(-127, 127)).collect();
-        let mut cols = Mat::zeros(c * 9, h * w);
-        let (micros, _) = time_it(0, iters, || im2col(&x, c, h, w, &mut cols));
-        entries.push(BenchEntry {
-            label: "im2col 8x14x14".to_string(),
-            micros,
-            gmacs: 0.0,
-        });
+        let label = "im2col 8x14x14".to_string();
+        if wanted(&label) {
+            let (c, h, w) = (8usize, 14usize, 14usize);
+            let x: Vec<i32> =
+                (0..c * h * w).map(|_| rng.int_in(-127, 127)).collect();
+            let mut cols = Mat::zeros(c * 9, h * w);
+            let (micros, _) = time_it(0, iters, || im2col(&x, c, h, w, &mut cols));
+            entries.push(BenchEntry { label, micros, gmacs: 0.0 });
+        }
     }
 
     BenchResults {
@@ -655,7 +700,7 @@ mod tests {
 
     #[test]
     fn measurement_runs_record_the_machine() {
-        let r = run_kernel(1);
+        let r = run_kernel(1, "im2col");
         assert_eq!(r.machine, machine_context());
         assert!(!r.machine.is_empty());
     }
@@ -669,9 +714,31 @@ mod tests {
 
     #[test]
     fn kernel_suite_runs_with_tiny_iters() {
-        let r = run_kernel(2);
+        let r = run_kernel(2, "");
         assert_eq!(r.suite, "kernel");
-        assert_eq!(r.entries.len(), 7);
+        assert_eq!(r.entries.len(), 12);
         assert!(r.entries.iter().all(|e| e.micros >= 0.0));
+        // Every tiled entry has a scalar twin at the same shape; the GEMV
+        // fast path (shared by both kinds) and im2col stand alone.
+        for e in &r.entries {
+            if let Some(stem) = e.label.strip_prefix("gemm_nn tiled ") {
+                let twin = format!("gemm_nn scalar {stem}");
+                assert!(r.entries.iter().any(|o| o.label == twin), "{twin}");
+            }
+        }
+        assert_eq!(
+            r.entries.iter()
+                .filter(|e| e.label.contains("gemv"))
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn kernel_suite_filter_narrows_entries() {
+        let r = run_kernel(1, "gemm_tn");
+        assert_eq!(r.entries.len(), 2, "{:?}", r.entries);
+        assert!(r.entries.iter().all(|e| e.label.contains("gemm_tn")));
+        assert!(run_kernel(1, "no-such-kernel").entries.is_empty());
     }
 }

@@ -184,6 +184,7 @@ impl<'a> Fleet<'a> {
                 track_pruning: true,
                 verbose: false,
                 eval_batch: 8,
+                train_batch: 1,
             },
             threads: 0,
             devices: Vec::new(),

@@ -50,7 +50,7 @@ use crate::coordinator::{
 };
 
 pub use crate::coordinator::EpochReport;
-use crate::engine::{Engine, StepOut};
+use crate::engine::{Engine, PruneState, StepOut};
 use crate::methods::{plugin_for, MethodPlugin, Priot, StepBackend};
 use crate::metrics::RunMetrics;
 use crate::quant::Scales;
@@ -176,12 +176,16 @@ pub struct EngineExecutor {
     plugin: Box<dyn MethodPlugin>,
     step: u32,
     label: String,
+    /// Worker threads for batched evaluation (1 = serial).  Parallel
+    /// evaluation shards each batch across private engines over the
+    /// shared backbone — inference only, bit-identical.
+    eval_threads: usize,
 }
 
 impl EngineExecutor {
     pub fn new(engine: Engine, plugin: Box<dyn MethodPlugin>) -> Self {
         let label = format!("engine/{}", plugin.name());
-        Self { engine, plugin, step: 0, label }
+        Self { engine, plugin, step: 0, label, eval_threads: 1 }
     }
 
     pub fn plugin(&self) -> &dyn MethodPlugin {
@@ -192,6 +196,64 @@ impl EngineExecutor {
     /// rounding consumes).
     pub fn steps(&self) -> u32 {
         self.step
+    }
+
+    /// Worker threads for [`StepBackend::predict_batch`] (clamped to ≥ 1).
+    pub fn set_eval_threads(&mut self, threads: usize) {
+        self.eval_threads = threads.max(1);
+    }
+
+    /// Shard `imgs` across `eval_threads` scoped worker threads, each with
+    /// a private [`Engine::shared`] clone (cheap: `Arc` handles on the
+    /// weights/scales, fresh workspace) over this executor's *read-only*
+    /// pruning state.  Bit-identical to the serial path: inference mutates
+    /// no plugin state, so every row is independent.
+    ///
+    /// Returns `None` when the plugin's pruning view is not expressible as
+    /// a [`PruneState`] (scores/masks/θ partially present) — the caller
+    /// then takes the serial plugin path, which stays the source of truth.
+    fn predict_batch_parallel(&mut self, imgs: &Mat) -> Option<Vec<usize>> {
+        let prune_parts = match (
+            self.plugin.scores(), self.plugin.masks(), self.plugin.theta(),
+        ) {
+            (Some(s), Some(m), Some(t)) => Some((s, m, t)),
+            (None, None, None) => None,
+            _ => return None,
+        };
+        let threads = self.eval_threads.min(imgs.rows);
+        let rows_per = imgs.rows.div_ceil(threads);
+        let spec = &self.engine.spec;
+        let weights = &self.engine.weights;
+        let scales = &self.engine.scales;
+        let mut preds = vec![0usize; imgs.rows];
+        std::thread::scope(|scope| {
+            let mut rest: &mut [usize] = &mut preds;
+            let mut lo = 0usize;
+            while lo < imgs.rows {
+                let hi = (lo + rows_per).min(imgs.rows);
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                let shard = Mat::from_vec(
+                    hi - lo,
+                    imgs.cols,
+                    imgs.data[lo * imgs.cols..hi * imgs.cols].to_vec(),
+                );
+                scope.spawn(move || {
+                    let mut e = Engine::shared(
+                        spec.clone(), Arc::clone(weights), Arc::clone(scales),
+                    )
+                    .expect("backbone shapes validated at session build");
+                    let prune = prune_parts.map(|(scores, masks, theta)| {
+                        PruneState { scores, masks, theta }
+                    });
+                    chunk.copy_from_slice(
+                        &e.predict_batch(&shard, prune.as_ref()),
+                    );
+                });
+                lo = hi;
+            }
+        });
+        Some(preds)
     }
 }
 
@@ -207,7 +269,38 @@ impl StepBackend for EngineExecutor {
     }
 
     fn predict_batch(&mut self, imgs: &Mat) -> Vec<usize> {
+        if self.eval_threads > 1 && imgs.rows > 1 {
+            if let Some(preds) = self.predict_batch_parallel(imgs) {
+                return preds;
+            }
+        }
         self.plugin.predict_batch(&mut self.engine, imgs)
+    }
+
+    fn train_chunk(&mut self, imgs: &Mat, labels: &[usize]) -> Vec<StepOut> {
+        assert_eq!(imgs.rows, labels.len(), "train_chunk: labels != rows");
+        let mut outs = Vec::with_capacity(imgs.rows);
+        match self.plugin.train_chunk(
+            &mut self.engine, imgs, labels, self.step, &mut outs,
+        ) {
+            Some(consumed) => {
+                self.step += consumed as u32;
+                // θ-crossing (or short chunk): the batched tape is stale
+                // past `consumed` — finish this chunk per sample, exactly
+                // as the sequential loop would.
+                for bi in consumed..imgs.rows {
+                    outs.push(self.train_step(imgs.row(bi), labels[bi]));
+                }
+            }
+            // Method without a chunked path (NITI): the per-sample loop
+            // *is* the protocol.
+            None => {
+                for bi in 0..imgs.rows {
+                    outs.push(self.train_step(imgs.row(bi), labels[bi]));
+                }
+            }
+        }
+        outs
     }
 
     fn scores(&self) -> Option<&[Vec<i32>]> {
@@ -340,10 +433,13 @@ impl Session {
 
     /// One pass over (a cap of) the training set; returns step statistics.
     /// Shares [`train_one_epoch`] with the coordinator's full run loop.
+    /// Honors the session's `train_batch` option (chunked batched-forward
+    /// training, bit-identical to the sequential loop).
     pub fn train_epoch(&mut self, train: &Dataset) -> Result<EpochReport> {
         self.check_data(train)?;
         let limit = self.opts.limit;
-        Ok(train_one_epoch(self.driver(), train, limit))
+        let chunk = self.opts.train_batch;
+        Ok(train_one_epoch(self.driver(), train, limit, chunk))
     }
 
     /// The full epoch loop with per-epoch evaluation (the paper's run
@@ -611,6 +707,8 @@ pub struct SessionBuilder {
     track_pruning: bool,
     verbose: bool,
     eval_batch: usize,
+    train_batch: usize,
+    eval_threads: usize,
 }
 
 impl Default for SessionBuilder {
@@ -627,6 +725,8 @@ impl Default for SessionBuilder {
             track_pruning: true,
             verbose: false,
             eval_batch: 1,
+            train_batch: 1,
+            eval_threads: 1,
         }
     }
 }
@@ -705,6 +805,26 @@ impl SessionBuilder {
         self
     }
 
+    /// Samples per *training* chunk (default 1 = the paper's strictly
+    /// sequential loop).  Chunked training batches the forward passes
+    /// through the tiled kernels while every score/weight update stays a
+    /// sequential batch-1 step — bit-identical for the PRIOT methods
+    /// (θ-crossings fall back to per-sample replay for the chunk
+    /// remainder); methods without a chunked path (NITI) run per sample
+    /// regardless.
+    pub fn train_batch(mut self, batch: usize) -> Self {
+        self.train_batch = batch;
+        self
+    }
+
+    /// Worker threads for batched evaluation (default 1 = serial).  Each
+    /// thread runs a private engine over the shared backbone, so parallel
+    /// evaluation is inference-only and bit-identical to the serial path.
+    pub fn eval_threads(mut self, threads: usize) -> Self {
+        self.eval_threads = threads.max(1);
+        self
+    }
+
     /// Pre-populate the builder from an [`ExperimentConfig`].
     pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
         Ok(Session::builder()
@@ -716,6 +836,8 @@ impl SessionBuilder {
             .epochs(cfg.epochs)
             .limit(cfg.limit)
             .eval_batch(cfg.eval_batch)
+            .train_batch(cfg.train_batch)
+            .eval_threads(cfg.eval_threads)
             .track_pruning(cfg.track_pruning))
     }
 
@@ -734,6 +856,7 @@ impl SessionBuilder {
             track_pruning: self.track_pruning,
             verbose: self.verbose,
             eval_batch: self.eval_batch,
+            train_batch: self.train_batch,
         };
         let spec = backbone.spec.clone();
         let exec = match self.backend {
@@ -743,7 +866,9 @@ impl SessionBuilder {
                     Arc::clone(&backbone.weights),
                     Arc::clone(&backbone.scales),
                 )?;
-                Exec::Engine(EngineExecutor::new(engine, plugin))
+                let mut e = EngineExecutor::new(engine, plugin);
+                e.set_eval_threads(self.eval_threads);
+                Exec::Engine(e)
             }
             Backend::Pjrt => build_pjrt(&self.artifacts, &backbone, plugin)?,
         };
