@@ -175,8 +175,8 @@ pub mod cli;
 
 pub use priot_host::{
     audit, config, coordinator, data, datagen, engine, methods, metrics,
-    pico, prng, proto, ptest, quant, report, serial, session, spec, store,
-    tensor,
+    obs, pico, prng, proto, ptest, quant, report, serial, session, spec,
+    store, tensor,
 };
 #[cfg(feature = "pjrt")]
 pub use priot_host::runtime;

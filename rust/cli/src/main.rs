@@ -9,6 +9,8 @@
 //!               [--state-dir DIR] [--resident-cap N]   durable + LRU-bounded
 //!               [--audit off|warn|reject]         register-time soundness gate
 //!               [--device rp2040]                 register-time memory-fit gate
+//!               [--stats-interval N]              periodic telemetry dumps
+//!               [--stats-json PATH]               final stats snapshot (trace mode)
 //! priot client  --addr HOST:PORT [--trace FILE]   trace replay over TCP
 //! priot audit   [--method M] [--json]             static overflow-soundness proof
 //! priot audit   --memory [--device rp2040]        static RAM/flash fit proof
@@ -351,6 +353,12 @@ fn trace_text(args: &Args) -> Result<String> {
 /// `reject` refuses statically unsound configurations at the front door.
 /// `--device rp2040` adds the static memory-fit gate (`priot audit
 /// --memory`) under the same policy, defaulting it to `reject`.
+///
+/// Observability: `--stats-interval N` dumps the server's telemetry
+/// snapshot (`priot::obs`) to stderr every N seconds while it runs;
+/// `--stats-json PATH` writes the final snapshot as versioned JSON after
+/// a trace replay (any connected client can also read the same snapshot
+/// live via the protocol's `GetStats` request).
 fn cmd_serve(args: &Args) -> Result<()> {
     use priot::session::serve;
 
@@ -404,11 +412,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut server = builder.build();
 
+    let stats_interval: u64 =
+        args.option("stats-interval").unwrap_or("0").parse()?;
+    if stats_interval > 0 {
+        // Periodic telemetry dumps to stderr while the server runs.
+        // Detached: reads never block request traffic, and the thread
+        // dies with the process.
+        let handle = server.stats_handle();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(
+                stats_interval,
+            ));
+            eprintln!("{}", handle.snapshot().render());
+        });
+    }
+
     if let Some(addr) = args.option("listen") {
         if args.option("trace").is_some() {
             bail!("--listen and --trace are mutually exclusive: a \
                    listener serves remote clients (replay the trace with \
                    `priot client --addr ... --trace ...` instead)");
+        }
+        if args.option("stats-json").is_some() {
+            bail!("--stats-json writes the final snapshot after a trace \
+                   replay; a listener never joins (poll a listener with \
+                   the protocol's GetStats request or --stats-interval \
+                   instead)");
         }
         let bound = server.listen(addr)?;
         eprintln!(
@@ -428,6 +457,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let responses = serve::replay_trace(&mut client, &cmds, &mut pair_for)?;
     drop(client); // close the connection so join() can drain
     let report = server.join()?;
+    if let Some(path) = args.option("stats-json") {
+        std::fs::write(path, report.stats.to_json())
+            .with_context(|| format!("writing stats snapshot to {path}"))?;
+        eprintln!("(stats snapshot written to {path})");
+    }
     for r in &responses {
         println!("{r:?}");
     }
@@ -781,7 +815,9 @@ fn print_help() {
          \x20              --state-dir DIR = durable restart-resume, --resident-cap N\n\
          \x20              = LRU-bound live sessions over the store,\n\
          \x20              --audit warn|reject = register-time soundness gate,\n\
-         \x20              --device rp2040 = register-time memory-fit gate)\n\
+         \x20              --device rp2040 = register-time memory-fit gate,\n\
+         \x20              --stats-interval N = periodic telemetry dumps,\n\
+         \x20              --stats-json PATH = final stats snapshot)\n\
          \x20 client       replay a request trace against a remote server over TCP\n\
          \x20 audit        static overflow-soundness proof of the quantised net\n\
          \x20              (per-layer interval bounds; --method M or the full\n\

@@ -121,6 +121,46 @@ fn arithmetic_lint_wall_covers_the_numeric_modules() {
     }
 }
 
+/// The obs telemetry module carries the same discipline as the core
+/// numeric modules: an arithmetic lint wall, and no floats or wall
+/// clocks on the record path (recording must never perturb the
+/// deterministic integer engine).  Wall-clock capture is quarantined in
+/// `obs/clock.rs` — the one documented float seam (`elapsed_secs` for
+/// reports) — so `obs/mod.rs` itself must stay integer-only.
+#[test]
+fn obs_record_path_is_integer_only() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../host/src/obs/mod.rs");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    assert!(
+        text.contains("#![deny(clippy::arithmetic_side_effects)]"),
+        "{} must keep the arithmetic lint wall",
+        path.display()
+    );
+    let shipped = text.split("#[cfg(test)]").next().unwrap();
+    let mut offenders = Vec::new();
+    for (ln, raw) in shipped.lines().enumerate() {
+        let code = raw.split("//").next().unwrap_or("");
+        for token in ["f32", "f64", "Instant", "SystemTime"] {
+            if has_word(code, token) {
+                offenders.push(format!(
+                    "{}:{}: `{token}`: {}",
+                    path.display(),
+                    ln + 1,
+                    raw.trim()
+                ));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "obs/mod.rs must stay float- and clock-free on the record path \
+         (obs/clock.rs is the one documented wall-clock seam):\n{}",
+        offenders.join("\n")
+    );
+}
+
 /// Determinism lint: `priot-core`'s shipped code is the bit-exactness
 /// contract with the Python oracle and any device port, so it must not
 /// touch float arithmetic, wall clocks, or iteration-order-unstable

@@ -1,0 +1,241 @@
+//! priot::obs properties over the public API — no artifacts needed:
+//!
+//! * power-of-two bucket boundaries: index/upper-bound round-trip
+//!   exhaustively, and every u64 lands strictly inside its bucket's
+//!   bounds;
+//! * histogram-snapshot merge is associative and commutative and never
+//!   loses observations (the property multi-shard aggregation relies on);
+//! * integer quantiles are monotone in the requested rank, bounded by the
+//!   observed max, and consistent under merge;
+//! * sharded counters fold increments from many threads without loss;
+//! * `StatsSnapshot` round-trips losslessly through its versioned JSON
+//!   schema, including sparse buckets and device rows.
+
+use std::sync::Arc;
+
+use priot::obs::{
+    bucket_index, bucket_upper_bound, Counter, DeviceStats, HistSnapshot,
+    Histogram, Op, ServeObs, StatsSnapshot, HIST_BUCKETS,
+};
+use priot::prng::XorShift64;
+use priot::ptest;
+
+/// A u64 with wide dynamic range: uniform bits shifted down by a random
+/// amount, so small values (the realistic latency range) are as common
+/// as huge ones.
+fn rand_value(rng: &mut XorShift64) -> u64 {
+    rng.next_u64() >> rng.below(64)
+}
+
+fn rand_hist(rng: &mut XorShift64, n: usize) -> HistSnapshot {
+    let h = Histogram::new();
+    for _ in 0..n {
+        h.record(rand_value(rng));
+    }
+    h.snapshot()
+}
+
+/// A plausible integer-microseconds span, capped well under 2^53: the
+/// snapshot JSON schema is interoperable JSON (readers may go through
+/// f64), so the round-trip property holds for values — and sums — inside
+/// the exact-integer range of a double.
+fn rand_us(rng: &mut XorShift64) -> u64 {
+    rng.next_u64() >> (20 + rng.below(44))
+}
+
+#[test]
+fn bucket_bounds_round_trip_exhaustively() {
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    for i in 0..HIST_BUCKETS {
+        assert_eq!(bucket_index(bucket_upper_bound(i)), i,
+                   "upper bound of bucket {i} must land in bucket {i}");
+        if i > 0 {
+            let lower = bucket_upper_bound(i - 1).saturating_add(1);
+            assert_eq!(bucket_index(lower), i,
+                       "lower edge of bucket {i} must land in bucket {i}");
+        }
+    }
+}
+
+#[test]
+fn every_value_lands_inside_its_bucket() {
+    ptest::check("obs-bucket-bracket", 61, 500, |rng| {
+        let v = rand_value(rng);
+        let i = bucket_index(v);
+        if i >= HIST_BUCKETS {
+            return Err(format!("bucket index {i} out of range for {v}"));
+        }
+        if v > bucket_upper_bound(i) {
+            return Err(format!("{v} exceeds bucket {i}'s upper bound"));
+        }
+        if i > 0 && v <= bucket_upper_bound(i - 1) {
+            return Err(format!(
+                "{v} is not above bucket {}'s upper bound, yet indexed {i}",
+                i - 1
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hist_merge_is_associative_and_commutative() {
+    ptest::check("obs-merge-assoc", 62, 60, |rng| {
+        let a = rand_hist(rng, rng.below(40));
+        let b = rand_hist(rng, rng.below(40));
+        let c = rand_hist(rng, rng.below(40));
+        let mut ab_then_c = a.clone();
+        ab_then_c.merge(&b);
+        ab_then_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_then_bc = a.clone();
+        a_then_bc.merge(&bc);
+        if ab_then_c != a_then_bc {
+            return Err(format!(
+                "merge not associative:\n{ab_then_c:?}\nvs\n{a_then_bc:?}"
+            ));
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        if ab != ba {
+            return Err(format!("merge not commutative:\n{ab:?}\nvs\n{ba:?}"));
+        }
+        if ab.count != a.count + b.count
+            || ab.sum != a.sum.saturating_add(b.sum)
+        {
+            return Err("merge lost observations".into());
+        }
+        if ab.max != a.max.max(b.max) {
+            return Err("merge lost the max".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantiles_are_monotone_and_bounded() {
+    ptest::check("obs-quantile-monotone", 63, 80, |rng| {
+        let s = rand_hist(rng, 1 + rng.below(60));
+        let mut prev = 0u64;
+        for num in 0..=100u64 {
+            let q = s.quantile(num, 100);
+            if q < prev {
+                return Err(format!(
+                    "quantile not monotone: q({num}/100) = {q} < {prev}"
+                ));
+            }
+            if q > s.max {
+                return Err(format!("q({num}/100) = {q} exceeds max {}", s.max));
+            }
+            prev = q;
+        }
+        if s.quantile(1, 1) != s.max {
+            return Err("p100 must be the observed max".into());
+        }
+        if s.p50() > s.p90() || s.p90() > s.p99() {
+            return Err("p50/p90/p99 out of order".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_counter_folds_across_threads() {
+    let c = Arc::new(Counter::default());
+    let threads = 8;
+    let per_thread = 10_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for _ in 0..per_thread {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(c.get(), threads * per_thread, "increments must never race");
+}
+
+#[test]
+fn snapshot_json_round_trips_randomized() {
+    ptest::check("obs-json-roundtrip", 64, 30, |rng| {
+        let obs = ServeObs::default();
+        let ops = [Op::Register, Op::Train, Op::Predict, Op::Evaluate,
+                   Op::Drift, Op::GetStats];
+        for _ in 0..rng.below(30) {
+            obs.note_request(ops[rng.below(ops.len())]);
+        }
+        for _ in 0..rng.below(20) {
+            obs.note_response(rng.below(4) == 0);
+        }
+        obs.queue_high_water.record(rng.below(64) as u64);
+        for _ in 0..rng.below(40) {
+            obs.record_exec(ops[rng.below(5)], rand_us(rng));
+            obs.record_queue_wait(rng.below(3), rand_us(rng));
+            obs.decode.record(rand_us(rng));
+            obs.encode.record(rand_us(rng));
+            obs.persist.record(rand_us(rng));
+        }
+        obs.merge_engine(rng.below(2) == 0, rng.next_u64() >> 32,
+                         rng.next_u64() >> 16, rng.below(100) as u64,
+                         rng.below(10) as u64, rng.next_u64() >> 40);
+        let mut snap = obs.snapshot();
+        for d in 0..rng.below(4) {
+            snap.devices.push(DeviceStats {
+                device: format!("dev-{d:02}"),
+                ops_done: rng.below(50) as u64,
+                queue_wait_us: rand_us(rng),
+                execute_us: rand_us(rng),
+            });
+        }
+        let back = StatsSnapshot::from_json(&snap.to_json())
+            .map_err(|e| format!("parse back: {e:#}"))?;
+        if back != snap {
+            return Err(format!(
+                "JSON round-trip lossy:\n{back:?}\nvs\n{snap:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_merge_distributes_over_recording() {
+    // Recording a stream into one ServeObs must equal recording a split
+    // of the stream into two and merging the snapshots.
+    ptest::check("obs-merge-distributes", 65, 40, |rng| {
+        let whole = ServeObs::default();
+        let left = ServeObs::default();
+        let right = ServeObs::default();
+        for _ in 0..rng.below(60) {
+            let v = rand_value(rng);
+            let lane = rng.below(3);
+            whole.record_queue_wait(lane, v);
+            if rng.below(2) == 0 {
+                left.record_queue_wait(lane, v);
+            } else {
+                right.record_queue_wait(lane, v);
+            }
+        }
+        let mut merged = left.snapshot();
+        merged.merge(&right.snapshot());
+        let want = whole.snapshot();
+        for (name, h) in &want.stages {
+            if merged.stage(name) != Some(h) {
+                return Err(format!(
+                    "stage {name} diverged after merge:\n{:?}\nvs\n{h:?}",
+                    merged.stage(name)
+                ));
+            }
+        }
+        Ok(())
+    });
+}

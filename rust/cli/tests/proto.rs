@@ -6,7 +6,7 @@
 //! * malformed frames — truncated at *every* byte offset, trailing
 //!   bytes, bad version, wrong frame type, unknown tags — are contextful
 //!   errors, never panics;
-//! * fixture-byte regressions pinning the v2 wire layout (mirrors the
+//! * fixture-byte regressions pinning the v3 wire layout (mirrors the
 //!   `serial` fixture style; v1 frames are rejected with a clean
 //!   version error);
 //! * transport behavior: mpsc pair and TCP loopback carry frames intact
@@ -88,7 +88,7 @@ fn rand_angle(rng: &mut XorShift64) -> Option<u32> {
 
 fn rand_request(rng: &mut XorShift64) -> Request {
     let device = rand_device(rng);
-    match rng.below(5) {
+    match rng.below(6) {
         0 => Request::Register {
             device,
             seed: rng.next_u64() as u32,
@@ -103,18 +103,19 @@ fn rand_request(rng: &mut XorShift64) -> Request {
             image: (0..rng.below(64)).map(|_| rng.int_in(0, 255) as u8).collect(),
         },
         3 => Request::Evaluate { device },
-        _ => Request::Drift {
+        4 => Request::Drift {
             device,
             train: rand_dataset(rng),
             test: rand_dataset(rng),
             angle: rand_angle(rng),
         },
+        _ => Request::GetStats,
     }
 }
 
 fn rand_response(rng: &mut XorShift64) -> Response {
     let device = rand_device(rng);
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Response::Registered { device, resumed: rng.below(2) == 1 },
         1 => Response::TrainDone {
             device,
@@ -129,7 +130,7 @@ fn rand_response(rng: &mut XorShift64) -> Response {
             n: rng.below(10_000),
         },
         4 => Response::Drifted { device },
-        _ => Response::Error {
+        5 => Response::Error {
             device,
             kind: match rng.below(3) {
                 0 => ErrorKind::Request,
@@ -137,6 +138,10 @@ fn rand_response(rng: &mut XorShift64) -> Response {
                 _ => ErrorKind::Shutdown,
             },
             message: format!("synthetic error #{}", rng.below(100)),
+        },
+        _ => Response::Stats {
+            json: format!("{{\"schema\":{},\"n\":{}}}", rng.below(9),
+                          rng.below(1000)),
         },
     }
 }
@@ -312,10 +317,10 @@ fn unknown_tags_and_priorities_are_rejected() {
 }
 
 #[test]
-fn v2_wire_layout_is_pinned() {
+fn v3_wire_layout_is_pinned() {
     // Fixture bytes in the `serial` regression style: if these change,
     // the protocol version must be bumped, not silently drifted.
-    assert_eq!(PROTO_VERSION, 2, "bumping the version? re-pin the fixtures");
+    assert_eq!(PROTO_VERSION, 3, "bumping the version? re-pin the fixtures");
     let mut want = vec![PROTO_VERSION, 0u8]; // version, request frame
     want.extend(7u64.to_le_bytes()); // id
     want.push(2); // priority: background
@@ -325,7 +330,7 @@ fn v2_wire_layout_is_pinned() {
     want.extend(3u64.to_le_bytes()); // epochs
     let req = Request::Train { device: "dev-a".into(), epochs: 3 };
     assert_eq!(encode_request(7, Priority::Background, &req), want,
-               "v2 Train frame layout drifted");
+               "v3 Train frame layout drifted");
     let (id, prio, back) = decode_request(&want).unwrap();
     assert_eq!((id, prio), (7, Priority::Background));
     assert_eq!(back, req);
@@ -343,7 +348,7 @@ fn v2_wire_layout_is_pinned() {
         n: 24,
     };
     assert_eq!(encode_response(9, &resp), want,
-               "v2 Evaluation frame layout drifted");
+               "v3 Evaluation frame layout drifted");
     assert_eq!(decode_response(&want).unwrap(), (9, resp));
 
     // The v2 additions, pinned: the Registered resumed flag and the
@@ -356,7 +361,7 @@ fn v2_wire_layout_is_pinned() {
     want.push(1); // resumed: true
     let resp = Response::Registered { device: "dev-c".into(), resumed: true };
     assert_eq!(encode_response(3, &resp), want,
-               "v2 Registered frame layout drifted");
+               "v3 Registered frame layout drifted");
     assert_eq!(decode_response(&want).unwrap(), (3, resp));
 
     let mut want = vec![PROTO_VERSION, 1u8];
@@ -373,8 +378,30 @@ fn v2_wire_layout_is_pinned() {
         message: "oops".into(),
     };
     assert_eq!(encode_response(4, &resp), want,
-               "v2 Error frame layout drifted");
+               "v3 Error frame layout drifted");
     assert_eq!(decode_response(&want).unwrap(), (4, resp));
+
+    // The v3 additions, pinned: GetStats is a bare tag (no device, no
+    // payload) and Stats carries one length-prefixed JSON string.
+    let mut want = vec![PROTO_VERSION, 0u8]; // version, request frame
+    want.extend(11u64.to_le_bytes()); // id
+    want.push(0); // priority: interactive (GetStats default)
+    want.push(5); // tag: GetStats
+    assert_eq!(encode_request(11, Priority::Interactive, &Request::GetStats),
+               want, "v3 GetStats frame layout drifted");
+    let (id, prio, back) = decode_request(&want).unwrap();
+    assert_eq!((id, prio), (11, Priority::Interactive));
+    assert_eq!(back, Request::GetStats);
+
+    let mut want = vec![PROTO_VERSION, 1u8]; // version, response frame
+    want.extend(12u64.to_le_bytes()); // id
+    want.push(6); // tag: Stats
+    want.extend(13u32.to_le_bytes()); // json length
+    want.extend(b"{\"schema\":1}\n");
+    let resp = Response::Stats { json: "{\"schema\":1}\n".into() };
+    assert_eq!(encode_response(12, &resp), want,
+               "v3 Stats frame layout drifted");
+    assert_eq!(decode_response(&want).unwrap(), (12, resp));
 }
 
 #[test]

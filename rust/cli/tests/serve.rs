@@ -13,6 +13,8 @@
 //! * the per-device inflight window rejects backlog floods with a clean
 //!   error response;
 //! * requests/sec excludes server idle time before the first request;
+//! * a `GetStats` after a deterministic trace reports identical counters
+//!   over channel and TCP (request mix, stage counts, engine MACs);
 //! * error paths (unknown device, duplicate register, geometry mismatch)
 //!   come back as `Response::Error`, never a panic;
 //! * batched evaluation is bit-identical to per-sample evaluation for
@@ -23,6 +25,7 @@ use std::time::Duration;
 
 use priot::config::Selection;
 use priot::methods::{MethodPlugin, Niti, Priot, PriotS};
+use priot::obs::{OpCounts, StatsSnapshot};
 use priot::proto::codec::{decode_response, encode_request};
 use priot::proto::{
     FleetClient, MethodSpec, Priority, Request, Response, TcpTransport,
@@ -636,6 +639,104 @@ fn tcp_and_channel_trace_replay_bit_identical() {
         }
         other => panic!("expected two Evaluations, got {other:?}"),
     }
+}
+
+#[test]
+fn get_stats_is_identical_over_channel_and_tcp() {
+    // The observability acceptance criterion: one deterministic trace
+    // replayed synchronously over the in-process channel and over TCP
+    // loopback, then a `GetStats` on the same connection.  Counters —
+    // request mix, lifecycle stage counts, per-device unit counts, and
+    // the engine perf counters — must be identical across transports;
+    // the recorded *timings* are wall-clock and stay unasserted.
+    let cmds = parse_trace(TRANSPORT_TRACE).unwrap();
+    let bb = synthetic_backbone(24);
+
+    let mut snaps = Vec::new();
+    for tcp in [false, true] {
+        let mut server =
+            FleetServer::builder(Arc::clone(&bb)).threads(2).build();
+        let mut client = if tcp {
+            let addr = server.listen("127.0.0.1:0").unwrap();
+            FleetClient::connect(addr).unwrap()
+        } else {
+            server.local_client()
+        };
+        let responses =
+            replay_trace(&mut client, &cmds, &mut trace_pair).unwrap();
+        assert!(responses.iter().all(|r| !r.is_error()), "{responses:?}");
+        let json = match client.get_stats().unwrap() {
+            Response::Stats { json } => json,
+            other => panic!("expected Stats, got {other:?}"),
+        };
+        snaps.push(StatsSnapshot::from_json(&json).unwrap());
+        drop(client);
+        server.join().unwrap();
+    }
+    let tcp_snap = snaps.pop().unwrap();
+    let chan = snaps.pop().unwrap();
+
+    // The 15 trace commands plus the GetStats itself.
+    let want_mix = OpCounts {
+        register: 3,
+        train: 4,
+        predict: 3,
+        evaluate: 4,
+        drift: 1,
+        get_stats: 1,
+    };
+    for snap in [&chan, &tcp_snap] {
+        assert_eq!(snap.requests, want_mix);
+        assert_eq!(snap.responses, 15,
+                   "the snapshot precedes its own Stats response");
+        assert_eq!(snap.errors, 0);
+        // Synchronous replay keeps ~one request outstanding, but a
+        // response is sent *before* its request is retired from the
+        // outstanding count, so the observed peak may briefly overlap
+        // with the client's next submission — pin only the floor.
+        assert!(snap.queue_high_water >= 1, "{}", snap.queue_high_water);
+        // Executed-unit counts are deterministic: trains run one worker
+        // unit per epoch (2+2+2+1 across the trace).
+        for (name, want_n) in [
+            ("exec/register", 3u64),
+            ("exec/train_epoch", 7),
+            ("exec/predict", 3),
+            ("exec/evaluate", 4),
+            ("exec/drift", 1),
+        ] {
+            let h = snap.stage(name)
+                .unwrap_or_else(|| panic!("missing stage {name}"));
+            assert_eq!(h.count, want_n, "{name}");
+        }
+        // All 16 request frames decode; the 15 trace responses were
+        // encoded before the GetStats was even sent.
+        assert_eq!(snap.stage("decode").unwrap().count, 16);
+        assert_eq!(snap.stage("encode").unwrap().count, 15);
+        for name in ["queue_wait/interactive", "queue_wait/batch",
+                     "queue_wait/background", "persist"] {
+            assert!(snap.stage(name).is_some(), "missing stage {name}");
+        }
+        // Every executed unit waited in exactly one lane queue.
+        let lane_total: u64 = ["interactive", "batch", "background"]
+            .iter()
+            .map(|l| snap.stage(&format!("queue_wait/{l}")).unwrap().count)
+            .sum();
+        assert_eq!(lane_total, 18, "18 units → 18 queue-wait observations");
+        // Per-device rows, sorted by name, one unit per completed op.
+        let ops: Vec<(&str, u64)> = snap.devices
+            .iter()
+            .map(|d| (d.device.as_str(), d.ops_done))
+            .collect();
+        assert_eq!(ops, [("dev-n", 5), ("dev-p", 5), ("dev-s", 8)]);
+    }
+
+    // Counted MACs are deterministic integers: bit-identical work must
+    // produce bit-identical engine counters on both transports.
+    assert_eq!(chan.engine, tcp_snap.engine,
+               "engine perf counters must not depend on the transport");
+    #[cfg(feature = "obs")]
+    assert!(chan.engine.macs() > 0,
+            "counted MACs must cover the replayed training work");
 }
 
 #[test]

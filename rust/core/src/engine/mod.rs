@@ -41,6 +41,8 @@ use crate::spec::{LayerSpec, NetSpec};
 use crate::tensor::{
     col2im, im2col, maxpool2, maxpool2_backward, Kernels, Mat,
 };
+#[cfg(feature = "obs")]
+use crate::tensor::{KernelCounters, KernelKind};
 use crate::INT8_MAX;
 
 /// Result of one forward or training step.
@@ -227,6 +229,27 @@ pub struct Engine {
     /// Optional runtime accumulator probe (see [`AccProbe`]); off by
     /// default — the observe loop never runs on the production path.
     probe: Option<AccProbe>,
+    /// Chunked-training θ-crossing fallbacks: number of times
+    /// [`Self::step_priot_chunk`] stopped early because a score update
+    /// flipped an edge across θ (the remaining samples fall back to
+    /// per-sample steps).  Deterministic `u64`, `obs` feature only.
+    #[cfg(feature = "obs")]
+    theta_fallbacks: u64,
+}
+
+/// Engine-level perf counters (the `obs` feature): the kernel counters
+/// accumulated since the last take plus the θ-crossing fallback count.
+/// Deterministic integers only — two identical runs produce identical
+/// counters; wall-clock stays host-side.
+#[cfg(feature = "obs")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Which kernel variant the engine dispatches to.
+    pub kind: KernelKind,
+    /// GEMM call/MAC/GEMV/scratch counters (see [`KernelCounters`]).
+    pub kernels: KernelCounters,
+    /// `step_priot_chunk` early stops due to a θ crossing.
+    pub theta_fallbacks: u64,
 }
 
 /// Per-layer min/max of the raw i32 forward accumulator, observed at the
@@ -303,12 +326,35 @@ impl Engine {
         let mut kernels = Kernels::tiled();
         let (ae, be) = plan::BufferPlan::of(&spec).scratch_elems(0);
         kernels.reserve(ae, be);
-        Ok(Self { spec, scales, weights, ws, kernels, batch: None, probe: None })
+        Ok(Self {
+            spec,
+            scales,
+            weights,
+            ws,
+            kernels,
+            batch: None,
+            probe: None,
+            #[cfg(feature = "obs")]
+            theta_fallbacks: 0,
+        })
     }
 
     /// The GEMM dispatch object (and its scratch) this engine runs on.
     pub fn kernels(&self) -> &Kernels {
         &self.kernels
+    }
+
+    /// Read-and-reset the perf counters accumulated since the last take
+    /// (kernel calls/MACs/GEMV hits/scratch high-water + θ fallbacks).
+    #[cfg(feature = "obs")]
+    pub fn take_counters(&mut self) -> EngineCounters {
+        let out = EngineCounters {
+            kind: self.kernels.kind(),
+            kernels: self.kernels.take_counters(),
+            theta_fallbacks: self.theta_fallbacks,
+        };
+        self.theta_fallbacks = 0;
+        out
     }
 
     /// Start recording per-layer accumulator extremes (resets any prior
@@ -934,6 +980,10 @@ impl Engine {
                 self.update_scores(scores, masks, theta, step0 + bi as u32, sr);
             outs.push(StepOut { logits, overflow: bw.ovf[bi] });
             if flipped && bi + 1 < b {
+                #[cfg(feature = "obs")]
+                {
+                    self.theta_fallbacks = self.theta_fallbacks.saturating_add(1);
+                }
                 consumed = bi + 1;
                 break;
             }

@@ -67,6 +67,82 @@ pub enum KernelKind {
     Tiled,
 }
 
+/// Deterministic per-kernel perf counters (the `obs` feature): GEMM call
+/// counts per dispatch entry point, GEMV fast-path hits, total i8×i8→i32
+/// MACs implied by the shapes, and the scratch high-water mark in bytes.
+///
+/// All plain `u64` — no atomics, no clocks, no floats — so counting is
+/// exactly as deterministic as the kernels themselves and the `no_std`
+/// build is unaffected.  Saturating arithmetic throughout: a counter can
+/// pin at `u64::MAX`, never wrap or panic.
+#[cfg(feature = "obs")]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelCounters {
+    /// `gemm_nn` dispatches.
+    pub nn_calls: u64,
+    /// `gemm_tn` dispatches.
+    pub tn_calls: u64,
+    /// `gemm_nt` dispatches.
+    pub nt_calls: u64,
+    /// Calls that took the shared `n == 1` GEMV fast path.
+    pub gemv_hits: u64,
+    /// Total multiply-accumulates implied by the dispatched shapes
+    /// (`m·k·n` per call — the quantity bench `gmacs` are derived from).
+    pub macs: u64,
+    /// High-water mark of live packing-scratch bytes.
+    pub scratch_high_water_bytes: u64,
+}
+
+#[cfg(feature = "obs")]
+impl KernelCounters {
+    /// Fold another counter block into this one (fleet-level merges).
+    pub fn merge(&mut self, other: &KernelCounters) {
+        self.nn_calls = self.nn_calls.saturating_add(other.nn_calls);
+        self.tn_calls = self.tn_calls.saturating_add(other.tn_calls);
+        self.nt_calls = self.nt_calls.saturating_add(other.nt_calls);
+        self.gemv_hits = self.gemv_hits.saturating_add(other.gemv_hits);
+        self.macs = self.macs.saturating_add(other.macs);
+        self.scratch_high_water_bytes = self
+            .scratch_high_water_bytes
+            .max(other.scratch_high_water_bytes);
+    }
+
+    /// Total GEMM dispatches across all three entry points.
+    pub fn calls(&self) -> u64 {
+        self.nn_calls
+            .saturating_add(self.tn_calls)
+            .saturating_add(self.nt_calls)
+    }
+
+    fn bump(&mut self, macs: u64, gemv: bool) {
+        self.macs = self.macs.saturating_add(macs);
+        if gemv {
+            self.gemv_hits = self.gemv_hits.saturating_add(1);
+        }
+    }
+
+    fn note_nn(&mut self, macs: u64, gemv: bool) {
+        self.nn_calls = self.nn_calls.saturating_add(1);
+        self.bump(macs, gemv);
+    }
+
+    fn note_tn(&mut self, macs: u64, gemv: bool) {
+        self.tn_calls = self.tn_calls.saturating_add(1);
+        self.bump(macs, gemv);
+    }
+
+    fn note_nt(&mut self, macs: u64, gemv: bool) {
+        self.nt_calls = self.nt_calls.saturating_add(1);
+        self.bump(macs, gemv);
+    }
+}
+
+/// MACs implied by an `m`×`k` · `k`×`n` product.
+#[cfg(feature = "obs")]
+fn mac_count(m: usize, k: usize, n: usize) -> u64 {
+    (m as u64).saturating_mul(k as u64).saturating_mul(n as u64)
+}
+
 /// Packing buffers for the tiled kernels: one panel buffer per operand,
 /// grow-only, reused across every GEMM an engine issues.
 #[derive(Clone, Debug, Default)]
@@ -120,18 +196,46 @@ pub fn packed_b_len(n: usize, depth: usize) -> usize {
 pub struct Kernels {
     kind: KernelKind,
     scratch: GemmScratch,
+    #[cfg(feature = "obs")]
+    counters: KernelCounters,
 }
 
 impl Kernels {
     /// The seed's scalar reference kernels (no scratch ever allocated).
     pub fn scalar() -> Self {
-        Self { kind: KernelKind::Scalar, scratch: GemmScratch::default() }
+        Self {
+            kind: KernelKind::Scalar,
+            scratch: GemmScratch::default(),
+            #[cfg(feature = "obs")]
+            counters: KernelCounters::default(),
+        }
     }
 
     /// The tiled microkernels (scratch grows on first use per shape, or up
     /// front via [`Self::reserve`]).
     pub fn tiled() -> Self {
-        Self { kind: KernelKind::Tiled, scratch: GemmScratch::default() }
+        Self {
+            kind: KernelKind::Tiled,
+            scratch: GemmScratch::default(),
+            #[cfg(feature = "obs")]
+            counters: KernelCounters::default(),
+        }
+    }
+
+    /// Read-and-reset the perf counters accumulated since the last take.
+    #[cfg(feature = "obs")]
+    pub fn take_counters(&mut self) -> KernelCounters {
+        core::mem::take(&mut self.counters)
+    }
+
+    /// Fold the current scratch footprint into the high-water mark.
+    #[cfg(feature = "obs")]
+    fn note_scratch(&mut self) {
+        let bytes = (self.scratch.elems() as u64)
+            .saturating_mul(core::mem::size_of::<i32>() as u64);
+        if bytes > self.counters.scratch_high_water_bytes {
+            self.counters.scratch_high_water_bytes = bytes;
+        }
     }
 
     pub fn kind(&self) -> KernelKind {
@@ -164,6 +268,9 @@ impl Kernels {
         assert_eq!(a.cols, b.rows, "gemm_nn inner dim");
         assert_eq!(out.rows, a.rows);
         assert_eq!(out.cols, b.cols);
+        #[cfg(feature = "obs")]
+        self.counters
+            .note_nn(mac_count(a.rows, a.cols, b.cols), b.cols == 1);
         if self.kind == KernelKind::Scalar || b.cols == 1 {
             // n == 1 is the GEMV fast path in the scalar kernel — packing
             // a single column would only add traffic.
@@ -175,6 +282,8 @@ impl Kernels {
         pack_b_rows(b, b.cols, depth, &mut self.scratch.bpack);
         microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.rows,
                           b.cols, depth, out);
+        #[cfg(feature = "obs")]
+        self.note_scratch();
     }
 
     /// `out = aᵀ · b` — (m,k)ᵀ·(m,n) → (k,n).
@@ -182,6 +291,9 @@ impl Kernels {
         assert_eq!(a.rows, b.rows, "gemm_tn inner dim");
         assert_eq!(out.rows, a.cols);
         assert_eq!(out.cols, b.cols);
+        #[cfg(feature = "obs")]
+        self.counters
+            .note_tn(mac_count(a.cols, a.rows, b.cols), b.cols == 1);
         if self.kind == KernelKind::Scalar || b.cols == 1 {
             scalar_tn(a, b, out);
             return;
@@ -191,6 +303,8 @@ impl Kernels {
         pack_b_rows(b, b.cols, depth, &mut self.scratch.bpack);
         microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.cols,
                           b.cols, depth, out);
+        #[cfg(feature = "obs")]
+        self.note_scratch();
     }
 
     /// `out = a · bᵀ` — (m,k)·(n,k)ᵀ → (m,n).
@@ -198,6 +312,9 @@ impl Kernels {
         assert_eq!(a.cols, b.cols, "gemm_nt inner dim");
         assert_eq!(out.rows, a.rows);
         assert_eq!(out.cols, b.rows);
+        #[cfg(feature = "obs")]
+        self.counters
+            .note_nt(mac_count(a.rows, a.cols, b.rows), false);
         if self.kind == KernelKind::Scalar {
             scalar_nt(a, b, out);
             return;
@@ -207,6 +324,8 @@ impl Kernels {
         pack_b_cols(b, b.rows, depth, &mut self.scratch.bpack);
         microkernel_drive(&self.scratch.apack, &self.scratch.bpack, a.rows,
                           b.rows, depth, out);
+        #[cfg(feature = "obs")]
+        self.note_scratch();
     }
 }
 
@@ -529,6 +648,41 @@ mod tests {
         Kernels::scalar().gemm_nn(&a, &b, &mut got_s);
         assert_eq!(got_t, got_s);
         assert_eq!(tiled.scratch_elems(), 0, "GEMV must not touch scratch");
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn counters_track_calls_macs_and_scratch() {
+        let mut rng = XorShift64::new(96);
+        let mut tiled = Kernels::tiled();
+        let (m, k, n) = (5usize, 7usize, 9usize);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut out = Mat::zeros(m, n);
+        tiled.gemm_nn(&a, &b, &mut out);
+        let gemv = rand_mat(&mut rng, k, 1);
+        let mut outv = Mat::zeros(m, 1);
+        tiled.gemm_nn(&a, &gemv, &mut outv);
+        let c = tiled.take_counters();
+        assert_eq!(c.nn_calls, 2);
+        assert_eq!(c.calls(), 2);
+        assert_eq!(c.gemv_hits, 1, "the n == 1 call is a GEMV hit");
+        assert_eq!(c.macs, (m * k * n + m * k) as u64);
+        assert_eq!(
+            c.scratch_high_water_bytes,
+            ((packed_a_len(m, k) + packed_b_len(n, k)) * 4) as u64,
+            "high-water = packed panels of the tiled call (GEMV packs none)"
+        );
+        // take_counters resets.
+        assert_eq!(tiled.take_counters(), KernelCounters::default());
+
+        // merge accumulates counts and maxes the high-water mark.
+        let mut acc = KernelCounters::default();
+        acc.merge(&c);
+        acc.merge(&c);
+        assert_eq!(acc.nn_calls, 4);
+        assert_eq!(acc.macs, c.macs * 2);
+        assert_eq!(acc.scratch_high_water_bytes, c.scratch_high_water_bytes);
     }
 
     #[test]

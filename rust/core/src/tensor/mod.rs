@@ -17,6 +17,8 @@ pub mod kernels;
 #[allow(deprecated)]
 pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
 pub use kernels::{GemmScratch, KernelKind, Kernels};
+#[cfg(feature = "obs")]
+pub use kernels::KernelCounters;
 
 use alloc::vec;
 use alloc::vec::Vec;

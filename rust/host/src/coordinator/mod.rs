@@ -87,7 +87,7 @@ pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
     let len = train.image_len();
     let mut overflow = 0u64;
     let mut correct = 0usize;
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::Timer::start();
     if chunk <= 1 || n == 0 {
         let mut img = vec![0i32; len];
         for i in 0..n {
@@ -130,7 +130,7 @@ pub fn train_one_epoch(backend: &mut dyn StepBackend, train: &Dataset,
         steps: n,
         train_accuracy: correct as f64 / n.max(1) as f64,
         overflow,
-        secs: t0.elapsed().as_secs_f64(),
+        secs: t0.elapsed_secs(),
     }
 }
 

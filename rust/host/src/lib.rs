@@ -41,6 +41,7 @@ pub mod data;
 pub mod datagen;
 pub mod methods;
 pub mod metrics;
+pub mod obs;
 pub mod pico;
 pub mod proto;
 pub mod ptest;

@@ -1,6 +1,10 @@
-//! Run metrics: accuracy/overflow/pruning traces, aggregation over seeds,
-//! and simple timing helpers.  `report` turns these into the paper's
-//! tables/figures.
+//! Run metrics: accuracy/overflow/pruning traces and aggregation over
+//! seeds.  `report` turns these into the paper's tables/figures.
+//!
+//! Timing helpers now live in [`crate::obs::clock`] (integer-microsecond
+//! spans with one documented float seam); the float-lap [`Stopwatch`]
+//! here is deprecated and kept only so external callers get a
+//! deprecation warning instead of a break.
 
 use std::time::Instant;
 
@@ -77,12 +81,17 @@ impl MeanStd {
 }
 
 /// Simple stopwatch with mean/std over laps (Table II timing).
+#[deprecated(
+    note = "use crate::obs::Stopwatch — same start/lap/stats_ms surface, \
+            integer-microsecond laps underneath"
+)]
 #[derive(Debug, Default)]
 pub struct Stopwatch {
     laps: Vec<f64>,
     started: Option<Instant>,
 }
 
+#[allow(deprecated)]
 impl Stopwatch {
     pub fn start(&mut self) {
         self.started = Some(Instant::now());

@@ -1,0 +1,111 @@
+//! Wall-clock capture for host-side telemetry: the one deliberately
+//! non-integer corner of `priot::obs`.
+//!
+//! Everything that reads a clock lives here — [`Timer`] for one span,
+//! [`Stopwatch`] for repeated laps — so the record path in
+//! [`super`] stays float-free and the rest of the tree has a single
+//! timing source (the coordinator's epoch timing and the serve
+//! lifecycle spans both go through [`Timer`]; the old
+//! `metrics::Stopwatch` is deprecated in favor of [`Stopwatch`]).
+//! Spans are captured as integer microseconds; float conversion happens
+//! only at reporting seams (`elapsed_secs`, `stats_ms`).
+
+use std::time::Instant;
+
+use crate::metrics::MeanStd;
+
+/// One running span: start it, read it (in integer microseconds for the
+/// obs histograms, or float seconds for report-layer rates).
+#[derive(Clone, Copy, Debug)]
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    /// Wrap an externally captured start instant (e.g. a queue item's
+    /// enqueue time) so its span reads like any other [`Timer`].
+    pub fn since(start: Instant) -> Self {
+        Self(start)
+    }
+
+    /// Elapsed integer microseconds (saturating — a span cannot panic).
+    pub fn elapsed_us(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+
+    /// Elapsed seconds, for report-layer rate math only — never feed
+    /// this back into a recording path.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Repeated-lap stopwatch over integer-microsecond spans (the
+/// `metrics::Stopwatch` replacement: same start/lap/stats_ms surface,
+/// integer laps underneath).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps_us: Vec<u64>,
+    started: Option<Timer>,
+}
+
+impl Stopwatch {
+    pub fn start(&mut self) {
+        self.started = Some(Timer::start());
+    }
+
+    /// Close the running span (if any) and return its length in
+    /// microseconds.
+    pub fn lap(&mut self) -> u64 {
+        match self.started.take() {
+            Some(t) => {
+                let us = t.elapsed_us();
+                self.laps_us.push(us);
+                us
+            }
+            None => 0,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.laps_us.len()
+    }
+
+    pub fn laps_us(&self) -> &[u64] {
+        &self.laps_us
+    }
+
+    /// Mean/std over laps in milliseconds (the Table II rendering).
+    pub fn stats_ms(&self) -> MeanStd {
+        let ms: Vec<f64> =
+            self.laps_us.iter().map(|&us| us as f64 / 1e3).collect();
+        MeanStd::of(&ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::default();
+        assert_eq!(sw.lap(), 0, "lap without start is a no-op");
+        sw.start();
+        sw.lap();
+        sw.start();
+        sw.lap();
+        assert_eq!(sw.count(), 2);
+        assert_eq!(sw.stats_ms().n, 2);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_us();
+        let b = t.elapsed_us();
+        assert!(b >= a);
+    }
+}

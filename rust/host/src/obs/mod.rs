@@ -1,0 +1,838 @@
+//! priot::obs — fleet-wide telemetry primitives.
+//!
+//! The measurement layer under the serving stack: sharded atomic
+//! [`Counter`]s, high-water [`Gauge`]s, and fixed power-of-two-bucket
+//! integer latency [`Histogram`]s, composed into the request-lifecycle
+//! span model ([`ServeObs`]) that every serve module records through and
+//! exported as versioned, mergeable [`StatsSnapshot`]s (embedded in
+//! `ServeReport`, answered over the wire via the proto `GetStats`
+//! request, and dumped by `priot serve --stats-interval/--stats-json`).
+//!
+//! Design rules, enforced by `rust/cli/tests/layering.rs`:
+//!
+//! * **No floats on the record path.**  Everything in this file is
+//!   integer arithmetic — histograms bucket by power of two, quantiles
+//!   are integer bucket upper bounds — so recording can never perturb
+//!   the deterministic integer engine and snapshots compare with `==`.
+//!   Wall-clock *capture* (the one inherently host-side, non-integer
+//!   act) lives apart in [`clock`].
+//! * **Lock-free increments.**  [`Counter::add`], [`Gauge::record`] and
+//!   [`Histogram::record`] are relaxed atomics; the only lock in the
+//!   module is the engine-counter merge, taken once per executed unit.
+//! * **Saturating arithmetic everywhere** — a counter wrap must not
+//!   panic a serving fleet; the file carries the same
+//!   `arithmetic_side_effects` lint wall as the core numeric modules.
+
+#![deny(clippy::arithmetic_side_effects)]
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub mod clock;
+
+pub use clock::{Stopwatch, Timer};
+
+/// Version tag written into every [`StatsSnapshot`] JSON document.
+pub const SNAPSHOT_SCHEMA: u32 = 1;
+
+/// Number of power-of-two histogram buckets: bucket 0 holds the value 0,
+/// bucket `i >= 1` holds `[2^(i-1), 2^i - 1]`, bucket 63 tops out at
+/// `u64::MAX`.
+pub const HIST_BUCKETS: usize = 64;
+
+const COUNTER_SHARDS: usize = 8;
+const COUNTER_SHARD_MASK: usize = COUNTER_SHARDS - 1;
+
+/// Scheduling lanes mirrored from `proto::Priority` (obs stays below the
+/// proto layer, so the width is pinned here and asserted at the serve
+/// seam).
+pub const LANES: usize = 3;
+pub const LANE_NAMES: [&str; LANES] = ["interactive", "batch", "background"];
+
+/// The bucket a value lands in: 0 → 0, otherwise one bucket per bit
+/// width (64 - leading zeros), capped at the top bucket.
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS.saturating_sub(v.leading_zeros()) as usize)
+        .min(HIST_BUCKETS.saturating_sub(1))
+}
+
+/// Largest value that lands in bucket `i` (the value quantiles report).
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= HIST_BUCKETS.saturating_sub(1) {
+        u64::MAX
+    } else {
+        // 2^i - 1; i < 63 here, so the shift cannot overflow.
+        1u64.wrapping_shl(i as u32).wrapping_sub(1)
+    }
+}
+
+static NEXT_THREAD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Round-robin shard assignment at first use per thread: spreads
+    /// concurrent increments across cache lines without hashing.
+    static SHARD: usize =
+        NEXT_THREAD.fetch_add(1, Ordering::Relaxed) & COUNTER_SHARD_MASK;
+}
+
+/// Sharded monotonic counter: each thread increments its own shard
+/// (lock-free, no contended cache line); [`Counter::get`] folds all
+/// shards.
+#[derive(Debug, Default)]
+pub struct Counter {
+    shards: [AtomicU64; COUNTER_SHARDS],
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        let i = SHARD.with(|s| *s);
+        if let Some(s) = self.shards.get(i) {
+            s.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards
+            .iter()
+            .fold(0u64, |acc, s| acc.saturating_add(s.load(Ordering::Relaxed)))
+    }
+}
+
+/// High-water gauge: [`Gauge::record`] keeps the maximum value ever
+/// seen (lock-free `fetch_max`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn record(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed power-of-two-bucket integer latency histogram.  Recording is
+/// three relaxed atomic RMWs (count/sum/max) plus one bucket increment —
+/// no floats, no locks, no allocation.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array seed only
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: [ZERO; HIST_BUCKETS],
+        }
+    }
+
+    /// Record one integer observation (microseconds on the serve paths).
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        if let Some(b) = self.buckets.get(bucket_index(v)) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((i, n));
+            }
+        }
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time copy of one [`Histogram`]: plain data, mergeable, with
+/// integer quantiles (each quantile reports the upper bound of the
+/// bucket its rank falls in, capped at the observed max).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    /// Sparse non-empty buckets, ascending: `(bucket index, count)`.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistSnapshot {
+    /// Fold `other` into `self`.  Associative and commutative up to
+    /// saturation, so multi-shard snapshots can merge in any order.
+    pub fn merge(&mut self, other: &Self) {
+        let mut dense = [0u64; HIST_BUCKETS];
+        for &(i, n) in self.buckets.iter().chain(other.buckets.iter()) {
+            if let Some(slot) = dense.get_mut(i) {
+                *slot = slot.saturating_add(n);
+            }
+        }
+        self.buckets = dense
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(i, &n)| (i, n))
+            .collect();
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Integer quantile estimate: the bucket upper bound at which the
+    /// cumulative count first reaches `num/den` of all observations,
+    /// capped at the observed max.  Monotone in `num/den`.
+    pub fn quantile(&self, num: u64, den: u64) -> u64 {
+        if self.count == 0 || den == 0 {
+            return 0;
+        }
+        let scaled = self.count.saturating_mul(num);
+        // ceil(scaled / den), at least rank 1.
+        let rank = scaled
+            .saturating_add(den.saturating_sub(1))
+            .checked_div(den)
+            .unwrap_or(0)
+            .max(1);
+        let mut cum = 0u64;
+        for &(i, n) in &self.buckets {
+            cum = cum.saturating_add(n);
+            if cum >= rank {
+                return bucket_upper_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(50, 100)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.quantile(90, 100)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(99, 100)
+    }
+
+    /// Integer mean (floor), 0 when empty.
+    pub fn mean(&self) -> u64 {
+        self.sum.checked_div(self.count).unwrap_or(0)
+    }
+}
+
+/// Request kinds observed at the serve boundary (mirrors
+/// `proto::Request` without depending on it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Register,
+    Train,
+    Predict,
+    Evaluate,
+    Drift,
+    GetStats,
+}
+
+const OPS: usize = 6;
+/// Ops with a worker execute stage (`GetStats` is answered inline by the
+/// dispatcher and has none).
+const EXEC_OPS: usize = 5;
+const EXEC_NAMES: [&str; EXEC_OPS] =
+    ["register", "train_epoch", "predict", "evaluate", "drift"];
+
+fn op_slot(op: Op) -> usize {
+    match op {
+        Op::Register => 0,
+        Op::Train => 1,
+        Op::Predict => 2,
+        Op::Evaluate => 3,
+        Op::Drift => 4,
+        Op::GetStats => 5,
+    }
+}
+
+/// Per-op request counts (plain data; the snapshot form of the sharded
+/// request counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub register: u64,
+    pub train: u64,
+    pub predict: u64,
+    pub evaluate: u64,
+    pub drift: u64,
+    pub get_stats: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.register
+            .saturating_add(self.train)
+            .saturating_add(self.predict)
+            .saturating_add(self.evaluate)
+            .saturating_add(self.drift)
+            .saturating_add(self.get_stats)
+    }
+
+    fn merge(&mut self, o: &Self) {
+        self.register = self.register.saturating_add(o.register);
+        self.train = self.train.saturating_add(o.train);
+        self.predict = self.predict.saturating_add(o.predict);
+        self.evaluate = self.evaluate.saturating_add(o.evaluate);
+        self.drift = self.drift.saturating_add(o.drift);
+        self.get_stats = self.get_stats.saturating_add(o.get_stats);
+    }
+}
+
+/// Deterministic integer perf counters drained from `priot-core` engines
+/// after every executed unit (all zeros when the `obs` cargo feature is
+/// compiled out).  MACs are *counted* multiply-accumulates, so
+/// throughput derived from them is exact, not estimated.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub scalar_calls: u64,
+    pub scalar_macs: u64,
+    pub tiled_calls: u64,
+    pub tiled_macs: u64,
+    pub gemv_hits: u64,
+    pub theta_fallbacks: u64,
+    pub scratch_high_water_bytes: u64,
+}
+
+impl EngineStats {
+    pub fn macs(&self) -> u64 {
+        self.scalar_macs.saturating_add(self.tiled_macs)
+    }
+
+    pub fn merge(&mut self, o: &Self) {
+        self.scalar_calls = self.scalar_calls.saturating_add(o.scalar_calls);
+        self.scalar_macs = self.scalar_macs.saturating_add(o.scalar_macs);
+        self.tiled_calls = self.tiled_calls.saturating_add(o.tiled_calls);
+        self.tiled_macs = self.tiled_macs.saturating_add(o.tiled_macs);
+        self.gemv_hits = self.gemv_hits.saturating_add(o.gemv_hits);
+        self.theta_fallbacks =
+            self.theta_fallbacks.saturating_add(o.theta_fallbacks);
+        self.scratch_high_water_bytes = self
+            .scratch_high_water_bytes
+            .max(o.scratch_high_water_bytes);
+    }
+}
+
+/// Per-device accumulated telemetry (kept under the serve registry lock
+/// alongside the device's other bookkeeping — no extra locking).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    pub device: String,
+    /// Completed worker units (epochs count individually).
+    pub ops_done: u64,
+    pub queue_wait_us: u64,
+    pub execute_us: u64,
+}
+
+/// The serve stack's live telemetry: every lifecycle stage of every
+/// request records here — ingress decode → lane-queue wait → worker
+/// execute (split per op) → snapshot persist → response encode — plus
+/// request/response/error counters, the queue high-water gauge, and the
+/// merged engine perf counters.
+#[derive(Debug, Default)]
+pub struct ServeObs {
+    requests: [Counter; OPS],
+    pub responses: Counter,
+    pub errors: Counter,
+    pub queue_high_water: Gauge,
+    pub decode: Histogram,
+    queue_wait: [Histogram; LANES],
+    exec: [Histogram; EXEC_OPS],
+    pub persist: Histogram,
+    pub encode: Histogram,
+    engine: Mutex<EngineStats>,
+}
+
+impl ServeObs {
+    pub fn note_request(&self, op: Op) {
+        if let Some(c) = self.requests.get(op_slot(op)) {
+            c.inc();
+        }
+    }
+
+    pub fn note_response(&self, is_error: bool) {
+        self.responses.inc();
+        if is_error {
+            self.errors.inc();
+        }
+    }
+
+    pub fn record_queue_wait(&self, lane: usize, us: u64) {
+        if let Some(h) = self.queue_wait.get(lane) {
+            h.record(us);
+        }
+    }
+
+    /// Record one worker execute span (a no-op for `GetStats`, which
+    /// never reaches a worker).
+    pub fn record_exec(&self, op: Op, us: u64) {
+        if let Some(h) = self.exec.get(op_slot(op)) {
+            h.record(us);
+        }
+    }
+
+    /// Fold one drained engine-counter reading in (called by workers
+    /// after every executed unit, before the response is emitted — so a
+    /// synchronous client's follow-up `GetStats` always sees the MACs of
+    /// every response it has received).
+    pub fn merge_engine(&self, tiled: bool, calls: u64, macs: u64,
+                        gemv_hits: u64, theta_fallbacks: u64,
+                        scratch_high_water_bytes: u64) {
+        let mut e = self.engine.lock().expect("obs engine stats");
+        if tiled {
+            e.tiled_calls = e.tiled_calls.saturating_add(calls);
+            e.tiled_macs = e.tiled_macs.saturating_add(macs);
+        } else {
+            e.scalar_calls = e.scalar_calls.saturating_add(calls);
+            e.scalar_macs = e.scalar_macs.saturating_add(macs);
+        }
+        e.gemv_hits = e.gemv_hits.saturating_add(gemv_hits);
+        e.theta_fallbacks =
+            e.theta_fallbacks.saturating_add(theta_fallbacks);
+        e.scratch_high_water_bytes =
+            e.scratch_high_water_bytes.max(scratch_high_water_bytes);
+    }
+
+    pub fn op_counts(&self) -> OpCounts {
+        let get = |i: usize| self.requests.get(i).map_or(0, Counter::get);
+        OpCounts {
+            register: get(0),
+            train: get(1),
+            predict: get(2),
+            evaluate: get(3),
+            drift: get(4),
+            get_stats: get(5),
+        }
+    }
+
+    /// Snapshot every stage.  All lifecycle stage keys are always
+    /// present (with zero counts when unused), so schema validation can
+    /// assert coverage instead of guessing.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut stages =
+            vec![("decode".to_string(), self.decode.snapshot())];
+        for (name, h) in LANE_NAMES.iter().zip(self.queue_wait.iter()) {
+            stages.push((format!("queue_wait/{name}"), h.snapshot()));
+        }
+        for (name, h) in EXEC_NAMES.iter().zip(self.exec.iter()) {
+            stages.push((format!("exec/{name}"), h.snapshot()));
+        }
+        stages.push(("persist".to_string(), self.persist.snapshot()));
+        stages.push(("encode".to_string(), self.encode.snapshot()));
+        StatsSnapshot {
+            schema: SNAPSHOT_SCHEMA,
+            requests: self.op_counts(),
+            responses: self.responses.get(),
+            errors: self.errors.get(),
+            queue_high_water: self.queue_high_water.get(),
+            stages,
+            engine: *self.engine.lock().expect("obs engine stats"),
+            devices: Vec::new(),
+        }
+    }
+}
+
+/// One coherent, versioned reading of a server's telemetry: plain data,
+/// mergeable, serialized to/from the stable JSON schema
+/// (`SNAPSHOT_SCHEMA`) that `--stats-json`, `GetStats`, and
+/// `priot bench --suite serve` all share.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub schema: u32,
+    pub requests: OpCounts,
+    pub responses: u64,
+    pub errors: u64,
+    /// Most accepted-but-unanswered requests ever outstanding at once.
+    pub queue_high_water: u64,
+    /// Lifecycle stage histograms, in pipeline order: `decode`,
+    /// `queue_wait/<lane>`, `exec/<op>`, `persist`, `encode`.
+    pub stages: Vec<(String, HistSnapshot)>,
+    pub engine: EngineStats,
+    pub devices: Vec<DeviceStats>,
+}
+
+impl StatsSnapshot {
+    pub fn stage(&self, name: &str) -> Option<&HistSnapshot> {
+        self.stages.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Fold `other` in: counters add, stage histograms merge by name
+    /// (union of keys), device rows merge by device id.
+    pub fn merge(&mut self, other: &Self) {
+        self.requests.merge(&other.requests);
+        self.responses = self.responses.saturating_add(other.responses);
+        self.errors = self.errors.saturating_add(other.errors);
+        self.queue_high_water =
+            self.queue_high_water.max(other.queue_high_water);
+        for (name, h) in &other.stages {
+            if let Some(mine) =
+                self.stages.iter_mut().find(|(n, _)| n == name)
+            {
+                mine.1.merge(h);
+            } else {
+                self.stages.push((name.clone(), h.clone()));
+            }
+        }
+        self.engine.merge(&other.engine);
+        for d in &other.devices {
+            if let Some(mine) =
+                self.devices.iter_mut().find(|m| m.device == d.device)
+            {
+                mine.ops_done = mine.ops_done.saturating_add(d.ops_done);
+                mine.queue_wait_us =
+                    mine.queue_wait_us.saturating_add(d.queue_wait_us);
+                mine.execute_us =
+                    mine.execute_us.saturating_add(d.execute_us);
+            } else {
+                self.devices.push(d.clone());
+            }
+        }
+    }
+
+    /// Serialize to the versioned snapshot JSON schema (all values are
+    /// integers; histogram buckets are sparse `[index, count]` pairs).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{{\n  \"schema\": {},\n", self.schema));
+        let r = &self.requests;
+        s.push_str(&format!(
+            "  \"requests\": {{\"register\": {}, \"train\": {}, \
+             \"predict\": {}, \"evaluate\": {}, \"drift\": {}, \
+             \"get_stats\": {}}},\n",
+            r.register, r.train, r.predict, r.evaluate, r.drift, r.get_stats
+        ));
+        s.push_str(&format!("  \"responses\": {},\n", self.responses));
+        s.push_str(&format!("  \"errors\": {},\n", self.errors));
+        s.push_str(&format!("  \"queue_high_water\": {},\n",
+                            self.queue_high_water));
+        s.push_str("  \"stages\": {\n");
+        for (i, (name, h)) in self.stages.iter().enumerate() {
+            let buckets: Vec<String> = h
+                .buckets
+                .iter()
+                .map(|&(b, n)| format!("[{b}, {n}]"))
+                .collect();
+            s.push_str(&format!(
+                "    \"{name}\": {{\"count\": {}, \"sum\": {}, \
+                 \"max\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \
+                 \"buckets\": [{}]}}{}\n",
+                h.count,
+                h.sum,
+                h.max,
+                h.p50(),
+                h.p90(),
+                h.p99(),
+                buckets.join(", "),
+                if i.saturating_add(1) < self.stages.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n");
+        let e = &self.engine;
+        s.push_str(&format!(
+            "  \"engine\": {{\"scalar_calls\": {}, \"scalar_macs\": {}, \
+             \"tiled_calls\": {}, \"tiled_macs\": {}, \"gemv_hits\": {}, \
+             \"theta_fallbacks\": {}, \"scratch_high_water_bytes\": {}}},\n",
+            e.scalar_calls, e.scalar_macs, e.tiled_calls, e.tiled_macs,
+            e.gemv_hits, e.theta_fallbacks, e.scratch_high_water_bytes
+        ));
+        s.push_str("  \"devices\": [\n");
+        for (i, d) in self.devices.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"device\": {}, \"ops_done\": {}, \
+                 \"queue_wait_us\": {}, \"execute_us\": {}}}{}\n",
+                crate::report::bench::json_str(&d.device),
+                d.ops_done,
+                d.queue_wait_us,
+                d.execute_us,
+                if i.saturating_add(1) < self.devices.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a snapshot back from its JSON form (the bench serve suite
+    /// and the cross-transport tests read `GetStats` bodies this way).
+    /// Quantiles are recomputed from the buckets, never trusted from the
+    /// document.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        use anyhow::Context;
+
+        use crate::report::bench::{get, Json};
+
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().context("snapshot root is not an object")?;
+        let u = |v: &Json, what: &str| -> anyhow::Result<u64> {
+            Ok(v.as_f64()
+                .with_context(|| format!("snapshot: {what} is not a number"))?
+                as u64)
+        };
+        let schema = u(get(obj, "schema")?, "schema")? as u32;
+        if schema != SNAPSHOT_SCHEMA {
+            anyhow::bail!(
+                "snapshot schema {schema} unsupported (want {SNAPSHOT_SCHEMA})"
+            );
+        }
+        let rq = get(obj, "requests")?
+            .as_obj()
+            .context("requests is not an object")?;
+        let requests = OpCounts {
+            register: u(get(rq, "register")?, "register")?,
+            train: u(get(rq, "train")?, "train")?,
+            predict: u(get(rq, "predict")?, "predict")?,
+            evaluate: u(get(rq, "evaluate")?, "evaluate")?,
+            drift: u(get(rq, "drift")?, "drift")?,
+            get_stats: u(get(rq, "get_stats")?, "get_stats")?,
+        };
+        let mut stages = Vec::new();
+        for (name, sv) in get(obj, "stages")?
+            .as_obj()
+            .context("stages is not an object")?
+        {
+            let so = sv
+                .as_obj()
+                .with_context(|| format!("stage {name} is not an object"))?;
+            let mut buckets = Vec::new();
+            for pair in get(so, "buckets")?
+                .as_arr()
+                .with_context(|| format!("stage {name}: bad buckets"))?
+            {
+                let pair = pair
+                    .as_arr()
+                    .with_context(|| format!("stage {name}: bad bucket"))?;
+                if pair.len() != 2 {
+                    anyhow::bail!("stage {name}: malformed bucket pair");
+                }
+                buckets.push((
+                    u(&pair[0], "bucket index")? as usize,
+                    u(&pair[1], "bucket count")?,
+                ));
+            }
+            stages.push((name.clone(), HistSnapshot {
+                count: u(get(so, "count")?, "count")?,
+                sum: u(get(so, "sum")?, "sum")?,
+                max: u(get(so, "max")?, "max")?,
+                buckets,
+            }));
+        }
+        let eo = get(obj, "engine")?
+            .as_obj()
+            .context("engine is not an object")?;
+        let engine = EngineStats {
+            scalar_calls: u(get(eo, "scalar_calls")?, "scalar_calls")?,
+            scalar_macs: u(get(eo, "scalar_macs")?, "scalar_macs")?,
+            tiled_calls: u(get(eo, "tiled_calls")?, "tiled_calls")?,
+            tiled_macs: u(get(eo, "tiled_macs")?, "tiled_macs")?,
+            gemv_hits: u(get(eo, "gemv_hits")?, "gemv_hits")?,
+            theta_fallbacks: u(get(eo, "theta_fallbacks")?,
+                               "theta_fallbacks")?,
+            scratch_high_water_bytes: u(
+                get(eo, "scratch_high_water_bytes")?,
+                "scratch_high_water_bytes",
+            )?,
+        };
+        let mut devices = Vec::new();
+        for dv in get(obj, "devices")?
+            .as_arr()
+            .context("devices is not an array")?
+        {
+            let d = dv.as_obj().context("device entry is not an object")?;
+            devices.push(DeviceStats {
+                device: get(d, "device")?
+                    .as_str()
+                    .context("device name")?
+                    .to_string(),
+                ops_done: u(get(d, "ops_done")?, "ops_done")?,
+                queue_wait_us: u(get(d, "queue_wait_us")?, "queue_wait_us")?,
+                execute_us: u(get(d, "execute_us")?, "execute_us")?,
+            });
+        }
+        Ok(Self {
+            schema,
+            requests,
+            responses: u(get(obj, "responses")?, "responses")?,
+            errors: u(get(obj, "errors")?, "errors")?,
+            queue_high_water: u(get(obj, "queue_high_water")?,
+                                "queue_high_water")?,
+            stages,
+            engine,
+            devices,
+        })
+    }
+
+    /// Multi-line human rendering (the `--stats-interval` dump format):
+    /// integer microseconds throughout.
+    pub fn render(&self) -> String {
+        let r = &self.requests;
+        let mut s = format!(
+            "[stats] requests {} (register {}, train {}, predict {}, \
+             evaluate {}, drift {}, get_stats {}) responses {} errors {} \
+             queue-high-water {}\n",
+            r.total(), r.register, r.train, r.predict, r.evaluate, r.drift,
+            r.get_stats, self.responses, self.errors, self.queue_high_water
+        );
+        for (name, h) in &self.stages {
+            if h.count == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "[stats]   {name}: n={} mean={}us p50={}us p90={}us \
+                 p99={}us max={}us\n",
+                h.count, h.mean(), h.p50(), h.p90(), h.p99(), h.max
+            ));
+        }
+        let e = &self.engine;
+        s.push_str(&format!(
+            "[stats]   engine: {} macs (scalar {} calls / {} macs, tiled \
+             {} calls / {} macs), gemv hits {}, theta fallbacks {}, \
+             scratch high-water {} bytes\n",
+            e.macs(), e.scalar_calls, e.scalar_macs, e.tiled_calls,
+            e.tiled_macs, e.gemv_hits, e.theta_fallbacks,
+            e.scratch_high_water_bytes
+        ));
+        for d in &self.devices {
+            s.push_str(&format!(
+                "[stats]   device {}: ops {} queue-wait {}us execute {}us\n",
+                d.device, d.ops_done, d.queue_wait_us, d.execute_us
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_round_trip() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        for i in 0..HIST_BUCKETS {
+            assert_eq!(bucket_index(bucket_upper_bound(i)), i,
+                       "upper bound of bucket {i} must land in bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 5, 9, 100] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 116);
+        assert_eq!(s.max, 100);
+        assert!(s.p50() <= s.p90());
+        assert!(s.p90() <= s.p99());
+        assert!(s.p99() <= s.max);
+        assert_eq!(s.quantile(1, 1), 100, "p100 is the observed max");
+    }
+
+    #[test]
+    fn counter_shards_fold() {
+        let c = Counter::default();
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        let g = Gauge::default();
+        g.record(7);
+        g.record(2);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn serve_obs_snapshot_has_every_stage() {
+        let obs = ServeObs::default();
+        let snap = obs.snapshot();
+        for want in [
+            "decode", "queue_wait/interactive", "queue_wait/batch",
+            "queue_wait/background", "exec/register", "exec/train_epoch",
+            "exec/predict", "exec/evaluate", "exec/drift", "persist",
+            "encode",
+        ] {
+            assert!(snap.stage(want).is_some(), "missing stage {want}");
+        }
+        assert_eq!(snap.schema, SNAPSHOT_SCHEMA);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let obs = ServeObs::default();
+        obs.note_request(Op::Train);
+        obs.note_request(Op::Train);
+        obs.note_request(Op::Predict);
+        obs.note_response(false);
+        obs.queue_high_water.record(2);
+        obs.record_exec(Op::Train, 1234);
+        obs.record_queue_wait(1, 88);
+        obs.merge_engine(true, 10, 5000, 2, 1, 4096);
+        let mut snap = obs.snapshot();
+        snap.devices.push(DeviceStats {
+            device: "dev-a".into(),
+            ops_done: 3,
+            queue_wait_us: 88,
+            execute_us: 1234,
+        });
+        let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap, "JSON round-trip must be lossless");
+    }
+
+    #[test]
+    fn snapshot_merge_accumulates() {
+        let a_obs = ServeObs::default();
+        a_obs.note_request(Op::Train);
+        a_obs.record_exec(Op::Train, 10);
+        let b_obs = ServeObs::default();
+        b_obs.note_request(Op::Train);
+        b_obs.note_request(Op::Evaluate);
+        b_obs.record_exec(Op::Train, 1000);
+        let mut a = a_obs.snapshot();
+        let b = b_obs.snapshot();
+        a.merge(&b);
+        assert_eq!(a.requests.train, 2);
+        assert_eq!(a.requests.evaluate, 1);
+        let t = a.stage("exec/train_epoch").unwrap();
+        assert_eq!(t.count, 2);
+        assert_eq!(t.sum, 1010);
+        assert_eq!(t.max, 1000);
+    }
+}

@@ -195,4 +195,12 @@ impl FleetClient {
             angle,
         })
     }
+
+    /// Fetch the server's current stats snapshot (synchronous).  Answered
+    /// inline by the dispatcher — it never queues behind device work —
+    /// as a [`Response::Stats`] whose JSON body parses with
+    /// [`crate::obs::StatsSnapshot::from_json`].
+    pub fn get_stats(&mut self) -> Result<Response> {
+        self.call(Request::GetStats)
+    }
 }

@@ -35,7 +35,10 @@ use super::{ErrorKind, MethodSpec, Priority, Request, Response};
 /// v2 (the durable-state revision): `Registered` carries a `resumed`
 /// flag, `Error` carries an [`ErrorKind`] byte, and `Register`/`Drift`
 /// carry an optional drift-angle provenance field.
-pub const PROTO_VERSION: u8 = 2;
+///
+/// v3 (the observability revision): the `GetStats` admin request (a bare
+/// tag — no fields) and the `Stats` response carrying the snapshot JSON.
+pub const PROTO_VERSION: u8 = 3;
 
 /// The protocol-wide frame budget, enforced by **every** transport on
 /// send and receive (so a too-large request fails identically in-process
@@ -52,6 +55,7 @@ const REQ_TRAIN: u8 = 1;
 const REQ_PREDICT: u8 = 2;
 const REQ_EVALUATE: u8 = 3;
 const REQ_DRIFT: u8 = 4;
+const REQ_GETSTATS: u8 = 5;
 
 const RESP_REGISTERED: u8 = 0;
 const RESP_TRAIN_DONE: u8 = 1;
@@ -59,6 +63,7 @@ const RESP_PREDICTION: u8 = 2;
 const RESP_EVALUATION: u8 = 3;
 const RESP_DRIFTED: u8 = 4;
 const RESP_ERROR: u8 = 5;
+const RESP_STATS: u8 = 6;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -165,6 +170,7 @@ pub fn encode_request(id: u64, priority: Priority, req: &Request) -> Vec<u8> {
             put_dataset(&mut buf, test);
             put_opt_u32(&mut buf, *angle);
         }
+        Request::GetStats => buf.push(REQ_GETSTATS),
     }
     buf
 }
@@ -202,6 +208,10 @@ pub fn encode_response(id: u64, resp: &Response) -> Vec<u8> {
         Response::Drifted { device } => {
             buf.push(RESP_DRIFTED);
             put_str(&mut buf, device);
+        }
+        Response::Stats { json } => {
+            buf.push(RESP_STATS);
+            put_str(&mut buf, json);
         }
         Response::Error { device, kind, message } => {
             buf.push(RESP_ERROR);
@@ -401,6 +411,7 @@ pub fn decode_request(frame: &[u8]) -> Result<(u64, Priority, Request)> {
             image: r.bytes("predict image")?,
         },
         REQ_EVALUATE => Request::Evaluate { device: r.str("evaluate device")? },
+        REQ_GETSTATS => Request::GetStats,
         REQ_DRIFT => {
             let device = r.str("drift device")?;
             let train = r.dataset("drift train set")?;
@@ -444,6 +455,7 @@ pub fn decode_response(frame: &[u8]) -> Result<(u64, Response)> {
             n: r.u64("evaluation n")? as usize,
         },
         RESP_DRIFTED => Response::Drifted { device: r.str("drifted device")? },
+        RESP_STATS => Response::Stats { json: r.str("stats json")? },
         RESP_ERROR => Response::Error {
             device: r.str("error device")?,
             kind: {

@@ -36,6 +36,12 @@
 //! from bad requests, and `Register`/`Drift` can carry drift-angle
 //! provenance that ends up in the device's durable snapshot
 //! ([`crate::store`]).
+//!
+//! Protocol v3 (the observability revision) adds the [`Request::GetStats`]
+//! admin request: any transport can ask the server for its current
+//! [`crate::obs::StatsSnapshot`], answered inline by the dispatcher as a
+//! [`Response::Stats`] carrying the snapshot's versioned JSON form — so
+//! counter reads never queue behind device work.
 
 pub mod codec;
 pub mod transport;
@@ -177,10 +183,16 @@ pub enum Request {
         /// [`Request::Register::angle`]).
         angle: Option<u32>,
     },
+    /// Admin: fetch the server's current [`crate::obs::StatsSnapshot`].
+    /// Addresses no device and never queues — the dispatcher answers it
+    /// inline with a [`Response::Stats`], so the read is cheap and cannot
+    /// perturb device scheduling.
+    GetStats,
 }
 
 impl Request {
-    /// The device a request addresses.
+    /// The device a request addresses (empty for admin requests, which
+    /// address the server itself).
     pub fn device(&self) -> &str {
         match self {
             Request::Register { device, .. }
@@ -188,13 +200,16 @@ impl Request {
             | Request::Predict { device, .. }
             | Request::Evaluate { device }
             | Request::Drift { device, .. } => device,
+            Request::GetStats => "",
         }
     }
 
     /// The default scheduling class: predict > evaluate > train/drift.
     pub fn priority(&self) -> Priority {
         match self {
-            Request::Predict { .. } => Priority::Interactive,
+            Request::Predict { .. } | Request::GetStats => {
+                Priority::Interactive
+            }
             Request::Evaluate { .. } => Priority::Batch,
             Request::Register { .. }
             | Request::Train { .. }
@@ -223,6 +238,10 @@ pub enum Response {
     Prediction { device: String, class: usize },
     Evaluation { device: String, accuracy: f64, n: usize },
     Drifted { device: String },
+    /// One answered [`Request::GetStats`]: the server's current
+    /// [`crate::obs::StatsSnapshot`] in its versioned JSON form (parse
+    /// with [`crate::obs::StatsSnapshot::from_json`]).
+    Stats { json: String },
     Error { device: String, kind: ErrorKind, message: String },
 }
 
@@ -235,6 +254,7 @@ impl Response {
             | Response::Evaluation { device, .. }
             | Response::Drifted { device }
             | Response::Error { device, .. } => device,
+            Response::Stats { .. } => "",
         }
     }
 

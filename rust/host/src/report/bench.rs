@@ -215,9 +215,33 @@ pub fn run_kernel(iters: u32, filter: &str) -> BenchResults {
     }
 }
 
+/// The server's counted MACs right now, read through the same
+/// `GetStats` wire surface any client uses.  Zero when the `obs`
+/// feature is compiled out — phase `gmacs` then report 0.0, exactly the
+/// pre-counter behavior.
+fn served_macs(client: &mut crate::proto::FleetClient) -> Result<u64> {
+    match client.get_stats()? {
+        crate::proto::Response::Stats { json } => {
+            Ok(crate::obs::StatsSnapshot::from_json(&json)?.engine.macs())
+        }
+        other => bail!("expected a stats response, got {other:?}"),
+    }
+}
+
+/// Gmac/s from a phase's counted MACs and its wall time.
+fn phase_gmacs(macs: u64, micros: f64) -> f64 {
+    if micros <= 0.0 {
+        0.0
+    } else {
+        macs as f64 / (micros * 1e-6) / 1e9
+    }
+}
+
 /// The serve suite: one small in-process fleet round — register 3 devices
 /// (one per method family), train each for an epoch, evaluate — over the
-/// local channel transport.
+/// local channel transport.  Per-phase `gmacs` come from the engine's
+/// *counted* MACs (drained over `GetStats` after each phase), so the
+/// throughput numbers are exact, not estimated from nominal shapes.
 pub fn run_serve() -> Result<BenchResults> {
     use std::sync::Arc;
     let backbone = crate::ptest::gen::synthetic_backbone(1);
@@ -235,16 +259,21 @@ pub fn run_serve() -> Result<BenchResults> {
         client.register(dev, 7, spec.clone(), Arc::clone(&train), Arc::clone(&test))?;
     }
     let reg_us = t0.elapsed().as_secs_f64() * 1e6;
+    let reg_macs = served_macs(&mut client)?;
     let t1 = Instant::now();
     for (dev, _) in &specs {
         client.train(dev, 1)?;
     }
     let train_us = t1.elapsed().as_secs_f64() * 1e6;
+    let train_macs = served_macs(&mut client)?.saturating_sub(reg_macs);
     let t2 = Instant::now();
     for (dev, _) in &specs {
         client.evaluate(dev)?;
     }
     let eval_us = t2.elapsed().as_secs_f64() * 1e6;
+    let eval_macs = served_macs(&mut client)?
+        .saturating_sub(reg_macs)
+        .saturating_sub(train_macs);
     drop(client);
     server.join()?;
     Ok(BenchResults {
@@ -256,17 +285,17 @@ pub fn run_serve() -> Result<BenchResults> {
             BenchEntry {
                 label: "serve register 3 devices".to_string(),
                 micros: reg_us,
-                gmacs: 0.0,
+                gmacs: phase_gmacs(reg_macs, reg_us),
             },
             BenchEntry {
                 label: "serve train 3x1 epoch (64 samples)".to_string(),
                 micros: train_us,
-                gmacs: 0.0,
+                gmacs: phase_gmacs(train_macs, train_us),
             },
             BenchEntry {
                 label: "serve evaluate 3 devices (32 samples)".to_string(),
                 micros: eval_us,
-                gmacs: 0.0,
+                gmacs: phase_gmacs(eval_macs, eval_us),
             },
         ],
     })
@@ -382,7 +411,7 @@ impl BenchResults {
     }
 }
 
-fn json_str(s: &str) -> String {
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -401,9 +430,10 @@ fn json_str(s: &str) -> String {
 }
 
 /// Minimal JSON value for the snapshot codec — supports exactly what the
-/// snapshot format uses (objects, arrays, strings, numbers, bools, null).
+/// snapshot formats use (objects, arrays, strings, numbers, bools, null).
+/// Shared crate-internally with `obs::StatsSnapshot::from_json`.
 #[derive(Clone, Debug)]
-enum Json {
+pub(crate) enum Json {
     Num(f64),
     Str(String),
     Bool(bool),
@@ -412,7 +442,7 @@ enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
+pub(crate) fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
     obj.iter()
         .find(|(k, _)| k == key)
         .map(|(_, v)| v)
@@ -420,32 +450,32 @@ fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json> {
 }
 
 impl Json {
-    fn as_f64(&self) -> Option<f64> {
+    pub(crate) fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
-    fn as_str(&self) -> Option<&str> {
+    pub(crate) fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
-    fn as_arr(&self) -> Option<&[Json]> {
+    pub(crate) fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
-    fn as_obj(&self) -> Option<&[(String, Json)]> {
+    pub(crate) fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(o) => Some(o),
             _ => None,
         }
     }
 
-    fn parse(text: &str) -> Result<Json> {
+    pub(crate) fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
         let v = p.value()?;

@@ -11,7 +11,8 @@ use anyhow::{bail, Result};
 use crate::config::{Config, ExperimentConfig, Method, Selection};
 use crate::coordinator::{sweep_seeds, RunOptions};
 use crate::data;
-use crate::metrics::{MeanStd, RunMetrics, Stopwatch};
+use crate::metrics::{MeanStd, RunMetrics};
+use crate::obs::Stopwatch;
 use crate::pico;
 use crate::report::{fig2_csv, fig3_csv, table2_markdown, Table2Row};
 use crate::session::{Session, SessionBuilder};

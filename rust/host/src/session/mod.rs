@@ -34,7 +34,9 @@ pub mod fleet;
 pub mod serve;
 
 pub use fleet::{DeviceReport, Fleet, FleetBuilder, FleetReport};
-pub use serve::{AuditPolicy, FleetServer, ServeBuilder, ServeReport};
+pub use serve::{
+    AuditPolicy, FleetServer, ServeBuilder, ServeReport, StatsHandle,
+};
 
 pub use crate::proto::{FleetClient, Request, Response};
 
@@ -416,6 +418,16 @@ impl Session {
             #[cfg(feature = "pjrt")]
             Exec::Pjrt(_) => None,
         }
+    }
+
+    /// Read-and-reset the engine perf counters accumulated since the last
+    /// take (serve workers drain these into the fleet [`crate::obs`]
+    /// snapshot after every unit of work); `None` on the PJRT backend.
+    #[cfg(feature = "obs")]
+    pub fn take_perf_counters(
+        &mut self,
+    ) -> Option<priot_core::engine::EngineCounters> {
+        self.engine_mut().map(|e| e.take_counters())
     }
 
     /// One training step (batch 1).  Most callers want [`Self::train`] or

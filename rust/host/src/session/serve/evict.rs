@@ -60,9 +60,12 @@ pub(super) fn enforce_resident_cap(shared: &Shared) {
         // (write-through at op completion usually already covered it).
         let result = if dirty {
             let session = res.session.as_ref().expect("evicted session");
-            device_snapshot(session, &device, &res.train, &res.test,
-                            epochs_done, angle)
-                .and_then(|snap| store.put(&snap))
+            let t = crate::obs::Timer::start();
+            let put = device_snapshot(session, &device, &res.train, &res.test,
+                                      epochs_done, angle)
+                .and_then(|snap| store.put(&snap));
+            shared.obs.persist.record(t.elapsed_us());
+            put
         } else {
             Ok(())
         };

@@ -25,9 +25,11 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::obs::{Op, Timer};
 use crate::proto::{codec, ErrorKind, Priority, Request, Response};
 
 use super::registry::{note_request, respond, DeviceState, Item, Shared, Work};
@@ -61,7 +63,10 @@ fn read_loop(shared: &Shared,
             Ok(Some(f)) => f,
             Ok(None) | Err(_) => break, // peer closed / connection error
         };
-        match codec::decode_request(&frame) {
+        let t = Timer::start();
+        let decoded = codec::decode_request(&frame);
+        shared.obs.decode.record(t.elapsed_us());
+        match decoded {
             Ok((id, priority, req)) => {
                 let inb = Inbound { id, priority, req, reply: reply.clone() };
                 if ingress.send(inb).is_err() {
@@ -91,13 +96,19 @@ pub(super) fn spawn_connection(
     recv_frame: impl FnMut() -> Result<Option<Vec<u8>>> + Send + 'static,
 ) {
     let (otx, orx) = channel::<(u64, Response)>();
-    let writer = std::thread::spawn(move || {
-        for (id, resp) in orx {
-            if !send_frame(codec::encode_response(id, &resp)) {
-                break;
+    let writer = {
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            for (id, resp) in orx {
+                let t = Timer::start();
+                let frame = codec::encode_response(id, &resp);
+                shared.obs.encode.record(t.elapsed_us());
+                if !send_frame(frame) {
+                    break;
+                }
             }
-        }
-    });
+        })
+    };
     let reply = Reply(otx);
     let reader = {
         let shared = Arc::clone(shared);
@@ -121,6 +132,7 @@ fn track_conn(shared: &Shared, reader: JoinHandle<()>, writer: JoinHandle<()>) {
 pub(super) fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
     for inb in rx {
         note_request(shared);
+        shared.obs.note_request(op_kind(&inb.req));
         let device = inb.req.device().to_string();
         let (id, reply) = (inb.id, inb.reply.clone());
         // After an abort (`Drop` without `join`: worker pool stopped,
@@ -142,6 +154,18 @@ pub(super) fn dispatch(shared: &Shared, rx: Receiver<Inbound>) {
                 message: format!("{e:#}"),
             });
         }
+    }
+}
+
+/// The telemetry op class of a request (see [`crate::obs::Op`]).
+fn op_kind(req: &Request) -> Op {
+    match req {
+        Request::Register { .. } => Op::Register,
+        Request::Train { .. } => Op::Train,
+        Request::Predict { .. } => Op::Predict,
+        Request::Evaluate { .. } => Op::Evaluate,
+        Request::Drift { .. } => Op::Drift,
+        Request::GetStats => Op::GetStats,
     }
 }
 
@@ -195,8 +219,9 @@ fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
                     id,
                     reply,
                     work: Work::Register { seed, method, train, test, angle },
+                    enqueued: Instant::now(),
                 });
-                *shared.outstanding.lock().expect("serve outstanding") += 1;
+                bump_outstanding(shared);
                 if !st.queued {
                     st.queued = true;
                     shared
@@ -215,9 +240,10 @@ fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
                 id,
                 reply,
                 work: Work::Register { seed, method, train, test, angle },
+                enqueued: Instant::now(),
             });
             reg.map.insert(device.clone(), st);
-            *shared.outstanding.lock().expect("serve outstanding") += 1;
+            bump_outstanding(shared);
             shared
                 .ready
                 .lock()
@@ -231,18 +257,51 @@ fn handle_request(shared: &Shared, inb: Inbound) -> Result<()> {
                 id,
                 reply,
                 work: Work::Train { remaining: epochs, done: 0, steps: 0 },
+                enqueued: Instant::now(),
             }),
         Request::Predict { device, image } => enqueue(shared, &device, priority,
-            Item { id, reply, work: Work::Predict { image } }),
+            Item {
+                id,
+                reply,
+                work: Work::Predict { image },
+                enqueued: Instant::now(),
+            }),
         Request::Evaluate { device } => enqueue(shared, &device, priority,
-            Item { id, reply, work: Work::Evaluate }),
+            Item {
+                id,
+                reply,
+                work: Work::Evaluate,
+                enqueued: Instant::now(),
+            }),
         Request::Drift { device, train, test, angle } => {
             // Validation runs with the op on the worker pool, like
             // Register's.
-            enqueue(shared, &device, priority,
-                    Item { id, reply, work: Work::Drift { train, test, angle } })
+            enqueue(shared, &device, priority, Item {
+                id,
+                reply,
+                work: Work::Drift { train, test, angle },
+                enqueued: Instant::now(),
+            })
+        }
+        // An admin read, answered inline: no device entry, no lane, no
+        // outstanding count — so a counter read never queues behind (or
+        // perturbs) device work, and `join()`'s idle wait ignores it.
+        Request::GetStats => {
+            respond(shared, &reply, id, Response::Stats {
+                json: super::stats_snapshot(shared).to_json(),
+            });
+            Ok(())
         }
     }
+}
+
+/// Count one more accepted-but-unanswered request and feed the result to
+/// the queue high-water gauge (recorded *after* the increment, under the
+/// same lock, so the gauge never misses a momentary peak).
+fn bump_outstanding(shared: &Shared) {
+    let mut out = shared.outstanding.lock().expect("serve outstanding");
+    *out += 1;
+    shared.obs.queue_high_water.record(*out as u64);
 }
 
 fn enqueue(shared: &Shared, device: &str, priority: Priority, item: Item)
@@ -262,7 +321,7 @@ fn enqueue(shared: &Shared, device: &str, priority: Priority, item: Item)
     }
     st.pending += 1;
     st.lanes[priority.lane()].push_back(item);
-    *shared.outstanding.lock().expect("serve outstanding") += 1;
+    bump_outstanding(shared);
     if !st.queued {
         st.queued = true;
         shared

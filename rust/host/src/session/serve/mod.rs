@@ -142,6 +142,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::StatsSnapshot;
 use crate::proto::{
     ChannelTransport, FleetClient, Response, TcpTransport, Transport,
 };
@@ -165,6 +166,44 @@ pub enum AuditPolicy {
     Warn,
     /// Refuse unsound registrations with a request error.
     Reject,
+}
+
+/// One coherent reading of a live server's telemetry: the lock-free
+/// [`crate::obs::ServeObs`] counters/histograms plus the per-device
+/// totals kept under the registry lock.  Devices come out sorted by
+/// name, so two snapshots of identical state render identically.
+pub(super) fn stats_snapshot(shared: &Shared) -> StatsSnapshot {
+    let mut snap = shared.obs.snapshot();
+    {
+        let reg = shared.registry.lock().expect("serve registry");
+        snap.devices = reg
+            .map
+            .iter()
+            .map(|(device, st)| crate::obs::DeviceStats {
+                device: device.clone(),
+                ops_done: st.ops_done,
+                queue_wait_us: st.queue_wait_us,
+                execute_us: st.execute_us,
+            })
+            .collect();
+    }
+    snap.devices.sort_by(|a, b| a.device.cmp(&b.device));
+    snap
+}
+
+/// A cheap handle for reading a live server's telemetry from another
+/// thread (`priot serve --listen --stats-interval N` dumps through one
+/// while the server runs).  Obtained via [`FleetServer::stats_handle`];
+/// reads never block request traffic.
+#[derive(Clone)]
+pub struct StatsHandle(Arc<Shared>);
+
+impl StatsHandle {
+    /// The server's telemetry right now (see
+    /// [`crate::obs::StatsSnapshot`]).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        stats_snapshot(&self.0)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -363,6 +402,7 @@ impl ServeBuilder {
             clock: Mutex::new(Clock::default()),
             accepting: AtomicBool::new(true),
             conns: Mutex::new(Vec::new()),
+            obs: crate::obs::ServeObs::default(),
         });
         let (itx, irx) = channel::<Inbound>();
         let dispatcher = {
@@ -435,6 +475,18 @@ impl FleetServer {
             move || Ok(srx.recv().ok()),
         );
         FleetClient::over(client_end)
+    }
+
+    /// The server's telemetry right now — the same
+    /// [`StatsSnapshot`] a [`crate::proto::Request::GetStats`] returns.
+    pub fn stats(&self) -> StatsSnapshot {
+        stats_snapshot(&self.shared)
+    }
+
+    /// A clonable telemetry handle usable from other threads while the
+    /// server runs (see [`StatsHandle`]).
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle(Arc::clone(&self.shared))
     }
 
     /// Accept TCP clients on `addr` (e.g. `"127.0.0.1:0"` for an
@@ -561,6 +613,9 @@ impl FleetServer {
             _ => 0.0,
         };
         drop(clock);
+        // Telemetry reads last, after every worker/pump has joined, so
+        // the report's snapshot covers the complete run.
+        let stats = stats_snapshot(&self.shared);
         Ok(ServeReport {
             responses,
             requests: self.shared.requests.load(Ordering::Relaxed),
@@ -568,6 +623,8 @@ impl FleetServer {
             evictions: self.shared.evictions.load(Ordering::Relaxed),
             wall_secs,
             threads: self.threads,
+            queue_high_water: stats.queue_high_water,
+            stats,
         })
     }
 }
@@ -618,17 +675,38 @@ pub struct ServeReport {
     /// traffic arrives does not count against requests/sec.
     pub wall_secs: f64,
     pub threads: usize,
+    /// Most accepted-but-unanswered requests ever outstanding at once
+    /// (also in [`Self::stats`]; surfaced here because it pairs with
+    /// the throughput numbers).
+    pub queue_high_water: u64,
+    /// The run's full telemetry snapshot: per-op request counts,
+    /// lifecycle-stage latency histograms, engine perf counters, and
+    /// per-device totals (see [`crate::obs::StatsSnapshot`]).
+    pub stats: StatsSnapshot,
 }
 
 impl ServeReport {
+    /// Requests per second of serving wall time.  A run whose serving
+    /// clock never spanned anything (no request was ever answered, or
+    /// the span was below clock resolution) reports 0.0 — never an
+    /// inf/NaN division artifact.
     pub fn requests_per_sec(&self) -> f64 {
-        self.requests as f64 / self.wall_secs.max(1e-9)
+        if self.wall_secs < 1e-9 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_secs
+        }
     }
 
     /// Rehydrations per second of serving wall time (the LRU churn rate
-    /// under eviction pressure — what the `serve` bench tracks).
+    /// under eviction pressure — what the `serve` bench tracks).  Guarded
+    /// like [`Self::requests_per_sec`].
     pub fn rehydrations_per_sec(&self) -> f64 {
-        self.rehydrations as f64 / self.wall_secs.max(1e-9)
+        if self.wall_secs < 1e-9 {
+            0.0
+        } else {
+            self.rehydrations as f64 / self.wall_secs
+        }
     }
 
     pub fn errors(&self) -> usize {
@@ -650,6 +728,7 @@ impl ServeReport {
                 Response::Prediction { .. } => "predictions",
                 Response::Evaluation { .. } => "evaluations",
                 Response::Drifted { .. } => "drifts",
+                Response::Stats { .. } => "stats",
                 Response::Error { .. } => "errors",
             };
             *kinds.entry(k).or_insert(0) += 1;

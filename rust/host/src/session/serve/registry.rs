@@ -56,6 +56,10 @@ pub(super) struct Item {
     pub(super) id: u64,
     pub(super) reply: Reply,
     pub(super) work: Work,
+    /// When the item (re-)entered its lane — the queue-wait span start.
+    /// A multi-epoch `Train` resets it on every re-queue, so each epoch
+    /// measures its own lane wait.
+    pub(super) enqueued: Instant,
 }
 
 /// A device's in-memory presence: its live session (taken by the worker
@@ -96,6 +100,14 @@ pub(super) struct DeviceState {
     pub(super) dirty: bool,
     /// LRU clock value of the device's last checkout.
     pub(super) last_used: u64,
+    /// Telemetry: completed worker units (epochs count individually).
+    /// Accumulated under the registry lock the workers already hold.
+    pub(super) ops_done: u64,
+    /// Telemetry: total lane-wait microseconds across this device's
+    /// units.
+    pub(super) queue_wait_us: u64,
+    /// Telemetry: total execute microseconds across this device's units.
+    pub(super) execute_us: u64,
 }
 
 impl DeviceState {
@@ -113,6 +125,9 @@ impl DeviceState {
             angle: None,
             dirty: false,
             last_used: 0,
+            ops_done: 0,
+            queue_wait_us: 0,
+            execute_us: 0,
         }
     }
 
@@ -195,6 +210,10 @@ pub(super) struct Shared {
     pub(super) clock: Mutex<Clock>,
     pub(super) accepting: AtomicBool,
     pub(super) conns: Mutex<Vec<JoinHandle<()>>>,
+    /// Request-lifecycle telemetry (see [`crate::obs`]): every serve
+    /// module records through this — lock-free counters and histograms,
+    /// snapshot on demand.
+    pub(super) obs: crate::obs::ServeObs,
 }
 
 impl Shared {
@@ -213,6 +232,7 @@ impl Shared {
 /// Record a response (when recording is on) and route it to its
 /// connection.
 pub(super) fn respond(shared: &Shared, reply: &Reply, id: u64, resp: Response) {
+    shared.obs.note_response(resp.is_error());
     shared.clock.lock().expect("serve clock").last_response =
         Some(Instant::now());
     if shared.record_enabled {

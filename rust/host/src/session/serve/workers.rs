@@ -22,11 +22,12 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::capped;
+use crate::obs::{Op, Timer};
 use crate::proto::{ErrorKind, Priority, Response};
 use crate::serial::{u8_to_i32_pixels, Dataset};
 use crate::session::Session;
@@ -111,6 +112,30 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
         .unwrap_or("non-string panic payload")
 }
+
+/// Drain the session engine's deterministic perf counters into the
+/// server's telemetry — after every executed unit, *before* its response
+/// is emitted, so a synchronous client's follow-up `GetStats` always
+/// sees the MACs behind every response it has received.
+#[cfg(feature = "obs")]
+fn drain_engine_counters(shared: &Shared, session: &mut Session) {
+    use priot_core::tensor::KernelKind;
+    if let Some(c) = session.take_perf_counters() {
+        shared.obs.merge_engine(
+            c.kind == KernelKind::Tiled,
+            c.kernels.calls(),
+            c.kernels.macs,
+            c.kernels.gemv_hits,
+            c.theta_fallbacks,
+            c.kernels.scratch_high_water_bytes,
+        );
+    }
+}
+
+/// With `obs` compiled out the engine counts nothing: the drain is a
+/// no-op (host-side timings stay on regardless).
+#[cfg(not(feature = "obs"))]
+fn drain_engine_counters(_shared: &Shared, _session: &mut Session) {}
 
 /// Assemble the durable snapshot of one device around its live session.
 pub(super) fn device_snapshot(session: &Session, device: &str,
@@ -249,7 +274,17 @@ pub(super) fn worker(shared: &Shared) {
 /// state-mutating request, check the session back in, and respond.
 fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
           lane: usize, train: &Arc<Dataset>, test: &Arc<Dataset>) {
-    let Item { id, reply, mut work } = item;
+    let Item { id, reply, mut work, enqueued } = item;
+    // Lane-wait span: enqueue (or the last epoch's re-queue) → now.
+    let queue_wait_us = Timer::since(enqueued).elapsed_us();
+    shared.obs.record_queue_wait(lane, queue_wait_us);
+    let op = match &work {
+        Work::Register { .. } => Op::Register,
+        Work::Train { .. } => Op::Train,
+        Work::Predict { .. } => Op::Predict,
+        Work::Evaluate => Op::Evaluate,
+        Work::Drift { .. } => Op::Drift,
+    };
     // A panicking op (method plugins are an open extension point) must
     // not kill the worker: the `outstanding` count would never drain
     // and `join()` would hang.  Convert the panic into an error
@@ -259,6 +294,7 @@ fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
     // the partial state persists at the next flush (a durable reset /
     // deregister op is a ROADMAP item — today the operator clears the
     // device's store directory to start it over).
+    let exec = Timer::start();
     let unit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || run_unit(&mut session, &mut work, train, test,
                     shared.eval_batch, shared.limit),
@@ -266,6 +302,11 @@ fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
     .unwrap_or_else(|payload| {
         Err(anyhow!("op panicked: {}", panic_message(payload.as_ref())))
     });
+    // One executed unit — for a multi-epoch `Train`, one epoch
+    // (`exec/train_epoch` measures epochs, not whole requests).
+    let execute_us = exec.elapsed_us();
+    shared.obs.record_exec(op, execute_us);
+    drain_engine_counters(shared, &mut session);
     // Did this unit (or its failed attempt) touch durable state?
     let mutated = match (&work, &unit) {
         (Work::Predict { .. } | Work::Evaluate, _) => false,
@@ -298,9 +339,11 @@ fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
                 (st.epochs_done, st.angle)
             };
             let angle = if is_drift { drift_angle } else { cur_angle };
+            let t = Timer::start();
             let put = device_snapshot(&session, device, tr, te,
                                       base_epochs + new_epochs, angle)
                 .and_then(|snap| store.put(&snap));
+            shared.obs.persist.record(t.elapsed_us());
             match put {
                 Ok(()) => persisted = true,
                 Err(e) => eprintln!(
@@ -321,15 +364,21 @@ fn run_op(shared: &Shared, device: &str, mut session: Session, item: Item,
             .as_mut()
             .expect("resident while op in flight")
             .session = Some(session);
+        // Per-device telemetry rides the registry lock we already hold.
+        st.ops_done = st.ops_done.saturating_add(1);
+        st.queue_wait_us = st.queue_wait_us.saturating_add(queue_wait_us);
+        st.execute_us = st.execute_us.saturating_add(execute_us);
         let response = match unit {
             Ok(UnitOut::Continue) => {
                 // Back to the front of its lane: the request resumes
                 // at the device's next turn, after any
-                // higher-priority work cuts in.
+                // higher-priority work cuts in.  `enqueued` resets so
+                // the next epoch measures its own lane wait.
                 st.lanes[lane].push_front(Item {
                     id,
                     reply: reply.clone(),
                     work,
+                    enqueued: Instant::now(),
                 });
                 None
             }
@@ -410,10 +459,13 @@ fn request_fail(err: anyhow::Error) -> RegisterFail {
 /// the store when it is known there, otherwise validate + build a fresh
 /// session and persist its initial snapshot *before* acknowledging.
 fn run_register(shared: &Shared, device: &str, item: Item) {
-    let Item { id, reply, work } = item;
+    let Item { id, reply, work, enqueued } = item;
     let Work::Register { seed, method, train, test, angle } = work else {
         unreachable!("run_register on a non-register item");
     };
+    // Register units always ride the head (interactive) lane.
+    let queue_wait_us = Timer::since(enqueued).elapsed_us();
+    shared.obs.record_queue_wait(0, queue_wait_us);
     // A queued resume handshake: a register that raced the device's
     // original registration.  The original register unit always precedes
     // it in the head lane, so by the time this runs the device is
@@ -425,6 +477,8 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
         let st = reg.map.get_mut(device).expect("registering device present");
         if st.registered {
             st.pending -= 1;
+            st.ops_done = st.ops_done.saturating_add(1);
+            st.queue_wait_us = st.queue_wait_us.saturating_add(queue_wait_us);
             respond(shared, &reply, id, Response::Registered {
                 device: device.to_string(),
                 resumed: true,
@@ -445,6 +499,7 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
         }
     }
     type Built = (Session, Arc<Dataset>, Arc<Dataset>, u64, Option<u32>, bool);
+    let exec = Timer::start();
     let heavy: std::result::Result<Built, RegisterFail> = (|| {
         if let Some(store) = &shared.store {
             let stored = store
@@ -536,19 +591,27 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
         // Durable registration: the initial snapshot lands before the
         // ack, so a crash right after it can still resume the device.
         if let Some(store) = &shared.store {
-            device_snapshot(&session, device, &train, &test, 0, angle)
-                .and_then(|snap| store.put(&snap))
-                .with_context(|| format!("device {device}: persisting \
-                                          initial state"))
+            let t = Timer::start();
+            let put =
+                device_snapshot(&session, device, &train, &test, 0, angle)
+                    .and_then(|snap| store.put(&snap));
+            shared.obs.persist.record(t.elapsed_us());
+            put.with_context(|| format!("device {device}: persisting \
+                                         initial state"))
                 .map_err(store_fail)?;
         }
         Ok((session, train, test, 0, angle, false))
     })();
+    // The register execute span covers the whole build/resume (its
+    // initial persist is also broken out into the `persist` stage).
+    let execute_us = exec.elapsed_us();
+    shared.obs.record_exec(Op::Register, execute_us);
     match heavy {
-        Ok((session, train, test, epochs_done, angle, resumed)) => {
+        Ok((mut session, train, test, epochs_done, angle, resumed)) => {
             if resumed {
                 shared.rehydrations.fetch_add(1, Ordering::Relaxed);
             }
+            drain_engine_counters(shared, &mut session);
             let mut reg = shared.registry.lock().expect("serve registry");
             reg.resident += 1;
             reg.tick += 1;
@@ -566,6 +629,9 @@ fn run_register(shared: &Shared, device: &str, item: Item) {
             st.dirty = false;
             st.last_used = tick;
             st.pending -= 1;
+            st.ops_done = st.ops_done.saturating_add(1);
+            st.queue_wait_us = st.queue_wait_us.saturating_add(queue_wait_us);
+            st.execute_us = st.execute_us.saturating_add(execute_us);
             respond(shared, &reply, id, Response::Registered {
                 device: device.to_string(),
                 resumed,
